@@ -1,0 +1,43 @@
+//! Long-context retrieval under compression: a passkey planted early in a
+//! long document must survive winnowing of the sparse cache (LongBench
+//! analogue, native-model path so every policy is comparable).
+//!
+//!   cargo run --release --example long_context
+
+use swan::eval::tasks::{Task, TaskKind};
+use swan::eval::Harness;
+use swan::kvcache::PolicyKind;
+use swan::model::{SwanModel, WeightFile};
+use swan::sparse::StorageMode;
+use swan::swan::projection::ProjectionVariant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = swan::artifacts_dir();
+    let wf = WeightFile::load(&dir.join("weights_swan-nano-gqa.bin"))?;
+    let model = SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?;
+    let mut h = Harness::new(&model);
+
+    let task = Task { kind: TaskKind::Passkey { distance: 260 }, n_cases: 8, seed: 3 };
+    println!("passkey retrieval across ~260 chars of filler, 8 cases:\n");
+    println!("{:<40} {:>9} {:>14}", "policy", "accuracy", "cache ratio");
+    for policy in [
+        PolicyKind::Dense,
+        PolicyKind::Swan { k_active: 48, buffer: 64, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 32, buffer: 64, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 32, buffer: 64, mode: StorageMode::F8 },
+        PolicyKind::Swan { k_active: 16, buffer: 64, mode: StorageMode::F8 },
+        PolicyKind::Swan { k_active: 32, buffer: 0, mode: StorageMode::F16 },
+        PolicyKind::Streaming { sinks: 4, window: 64 },
+        PolicyKind::H2O { budget: 128, recent: 64 },
+        PolicyKind::Kivi { bits: 4, residual: 64 },
+    ] {
+        let r = h.run_task(&task, policy);
+        println!("{:<40} {:>9.3} {:>14.3}", r.policy, r.accuracy, r.compression_ratio);
+    }
+    println!(
+        "\nNote how token-eviction baselines (streaming/H2O at tight budgets) lose\n\
+         the passkey permanently, while SWAN keeps partial information for every\n\
+         token (the paper's central qualitative claim)."
+    );
+    Ok(())
+}

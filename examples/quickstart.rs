@@ -1,0 +1,43 @@
+//! Quickstart: load the trained swan-nano model, run a few SWAN-compressed
+//! generations next to the dense baseline, and print memory savings.
+//!
+//!   cargo run --release --example quickstart
+
+use swan::eval::tasks::{Task, TaskKind};
+use swan::eval::Harness;
+use swan::kvcache::PolicyKind;
+use swan::model::{SwanModel, WeightFile};
+use swan::sparse::StorageMode;
+use swan::swan::projection::ProjectionVariant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = swan::artifacts_dir();
+    let wf = WeightFile::load(&dir.join("weights_swan-nano-gqa.bin"))?;
+    let model = SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?;
+    println!("loaded {} ({} layers, {} q heads / {} kv heads, d_h={})",
+        model.cfg.name, model.cfg.n_layers, model.cfg.n_q_heads,
+        model.cfg.n_kv_heads, model.cfg.d_head);
+
+    let mut h = Harness::new(&model);
+    let tasks = [
+        Task { kind: TaskKind::Arith { steps: 4 }, n_cases: 10, seed: 1 },
+        Task { kind: TaskKind::Passkey { distance: 120 }, n_cases: 10, seed: 2 },
+        Task { kind: TaskKind::FactRecall { distance: 100 }, n_cases: 10, seed: 3 },
+        Task { kind: TaskKind::Code { clutter: 3 }, n_cases: 10, seed: 4 },
+    ];
+    let policies = [
+        PolicyKind::Dense,
+        PolicyKind::Swan { k_active: 48, buffer: 64, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 32, buffer: 64, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 16, buffer: 64, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 16, buffer: 0, mode: StorageMode::F16 },
+    ];
+    let mut rows = Vec::new();
+    for p in policies {
+        for t in &tasks {
+            rows.push(h.run_task(t, p));
+        }
+    }
+    print!("{}", swan::eval::harness::format_table("quickstart: accuracy under compression", &rows));
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): load the trained swan-nano
+//! model through the AOT/PJRT serving stack, serve a batch of concurrent
+//! requests with continuous batching, and report latency, throughput and
+//! KV-memory savings for SWAN vs the dense serving baseline.
+//!
+//!   cargo run --release --example serve_workload
+
+use swan::config::ServeConfig;
+use swan::coordinator::Engine;
+use swan::eval::corpus;
+use swan::sparse::StorageMode;
+use swan::util::Pcg64;
+
+fn workload(engine: &mut Engine, n: usize, max_new: usize) -> anyhow::Result<()> {
+    let mut rng = Pcg64::new(7);
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let prompt = format!(
+            "{}the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 200),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        engine.submit_text(&prompt, max_new);
+    }
+    let responses = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let decoded: usize = responses.iter().map(|r| r.stats.decode_steps).sum();
+    println!(
+        "  {} requests in {wall:.2}s  |  aggregate {:.1} decode tok/s",
+        responses.len(),
+        decoded as f64 / wall
+    );
+    let mut lat: Vec<f64> = responses
+        .iter()
+        .map(|r| (r.stats.prefill_time + r.stats.decode_time).as_secs_f64() * 1e3)
+        .collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "  request latency: p50 {:.1} ms, p95 {:.1} ms",
+        swan::util::stats::percentile(&lat, 50.0),
+        swan::util::stats::percentile(&lat, 95.0)
+    );
+    let saving: f64 =
+        responses.iter().map(|r| r.stats.memory_saving()).sum::<f64>() / responses.len() as f64;
+    println!("  mean KV-cache saving vs dense: {:.1}%", saving * 100.0);
+    let sample = &responses[0];
+    println!("  sample output: {:?}", &sample.text[..sample.text.len().min(60)]);
+    println!("{}", engine.metrics.snapshot());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = swan::artifacts_dir();
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    println!("== dense serving baseline ==");
+    let mut dense = Engine::new(&dir, ServeConfig { dense_baseline: true, ..Default::default() })?;
+    dense.warmup()?;
+    workload(&mut dense, 8, 32)?;
+
+    println!("\n== SWAN serving (k_active=32, 16-bit, bt=64) ==");
+    let mut sw = Engine::new(
+        &dir,
+        ServeConfig { k_active: 32, mode: StorageMode::F16, ..Default::default() },
+    )?;
+    sw.warmup()?;
+    workload(&mut sw, 8, 32)?;
+
+    println!("\n== SWAN serving (k_active=16, 8-bit — aggressive) ==");
+    let mut sw8 = Engine::new(
+        &dir,
+        ServeConfig { k_active: 16, mode: StorageMode::F8, ..Default::default() },
+    )?;
+    sw8.warmup()?;
+    workload(&mut sw8, 8, 32)?;
+    Ok(())
+}

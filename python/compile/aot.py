@@ -1,0 +1,294 @@
+"""AOT pipeline: train -> calibrate -> absorb -> lower to HLO text.
+
+Emits into ``artifacts/``:
+
+  * ``weights_<model>.bin``      — original + absorbed weights + projections
+  * ``golden_<model>.bin``       — reference activations for rust verification
+  * ``<model>__<graph>.hlo.txt`` — AOT graphs (prefill / swan decode / dense
+                                   decode / prune), weights as HLO parameters
+  * ``model.hlo.txt``            — tiny smoke graph for the runtime self-test
+  * ``manifest.json``            — graph/arg/shape index for the rust runtime
+  * ``train_log_<model>.txt``    — loss curves (recorded in EXPERIMENTS.md)
+
+HLO **text** is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate, common, corpus, model, train
+from .common import ModelConfig
+from .kernels.topk_prune import topk_prune
+from .kernels.swan_attention import swan_attention
+
+PREFILL_T = [64, 128, 256]
+DECODE_L = [128, 256, 512]
+DECODE_K = [16, 32, 48]
+PRUNE_N = [256]
+BUF = 64          # dense-buffer rows in the AOT serving graphs
+DENSE_L = 512     # dense-baseline cache bucket
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg_meta(name, spec):
+    return {"name": name, "shape": list(spec.shape), "dtype": str(np.dtype(spec.dtype))}
+
+
+def param_specs(params: dict, names: list) -> list:
+    return [_spec(params[n].shape, params[n].dtype) for n in names]
+
+
+def lower_model_graphs(cfg: ModelConfig, sp: dict, out_dir: str) -> dict:
+    """Lower all serving graphs for one model; returns manifest entries."""
+    names = common.swan_param_names(cfg)
+    pspecs = param_specs(sp, names)
+    nl, nkv, dh, vocab = cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.vocab
+    graphs = {}
+
+    def emit(graph_name, fn, runtime_args):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*pspecs, *[s for _, s in runtime_args])
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}__{graph_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        graphs[graph_name] = {
+            "file": fname,
+            "param_names": names,
+            "args": [_arg_meta(n, s) for n, s in runtime_args],
+        }
+        print(f"  lowered {fname} ({len(text)//1024} KiB, {time.time()-t0:.1f}s)",
+              flush=True)
+
+    # ---- prefill buckets ----
+    for t in PREFILL_T:
+        def prefill_fn(*flat, _t=t):
+            p = model.list_to_params(list(flat[: len(names)]), names)
+            tokens, tmask = flat[len(names):]
+            return model.swan_prefill(p, cfg, tokens, tmask)
+        emit(f"prefill_t{t}", prefill_fn,
+             [("tokens", _spec((t,), jnp.int32)), ("tmask", _spec((t,)))])
+
+    # ---- swan hybrid decode buckets ----
+    for ls in DECODE_L:
+        for k in DECODE_K:
+            def decode_fn(*flat):
+                p = model.list_to_params(list(flat[: len(names)]), names)
+                (token, pos, kvals, kidx, vvals, vidx, kbuf, vbuf,
+                 smask, bmask) = flat[len(names):]
+                return model.swan_decode_step(p, cfg, token, pos, kvals, kidx,
+                                              vvals, vidx, kbuf, vbuf, smask, bmask)
+            emit(f"decode_l{ls}_k{k}", decode_fn, [
+                ("token", _spec((), jnp.int32)),
+                ("pos", _spec((), jnp.int32)),
+                ("sp_kvals", _spec((nl, nkv, ls, k))),
+                ("sp_kidx", _spec((nl, nkv, ls, k), jnp.int32)),
+                ("sp_vvals", _spec((nl, nkv, ls, k))),
+                ("sp_vidx", _spec((nl, nkv, ls, k), jnp.int32)),
+                ("kbuf", _spec((nl, nkv, BUF, dh))),
+                ("vbuf", _spec((nl, nkv, BUF, dh))),
+                ("smask", _spec((ls,))),
+                ("bmask", _spec((BUF,))),
+            ])
+
+    # ---- dense baseline decode ----
+    def dense_fn(*flat):
+        p = model.list_to_params(list(flat[: len(names)]), names)
+        token, pos, kc, vc, cmask = flat[len(names):]
+        return model.dense_decode_step(p, cfg, token, pos, kc, vc, cmask)
+    emit(f"decode_dense_l{DENSE_L}", dense_fn, [
+        ("token", _spec((), jnp.int32)),
+        ("pos", _spec((), jnp.int32)),
+        ("kcache", _spec((nl, nkv, DENSE_L, dh))),
+        ("vcache", _spec((nl, nkv, DENSE_L, dh))),
+        ("cmask", _spec((DENSE_L,))),
+    ])
+    return graphs
+
+
+def lower_prune_graphs(dh: int, out_dir: str) -> dict:
+    graphs = {}
+    for n in PRUNE_N:
+        for k in DECODE_K:
+            lowered = jax.jit(lambda x, _k=k: topk_prune(x, _k)).lower(
+                _spec((n, dh)))
+            fname = f"prune_n{n}_k{k}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(to_hlo_text(lowered))
+            graphs[f"prune_n{n}_k{k}"] = {
+                "file": fname, "param_names": [],
+                "args": [_arg_meta("x", _spec((n, dh)))],
+            }
+    return graphs
+
+
+def write_smoke_graph(out_dir: str) -> None:
+    """Tiny single-head swan-attention graph for the runtime self-test."""
+    d, ls, k, b = 8, 4, 2, 3
+    lowered = jax.jit(swan_attention).lower(
+        _spec((d,)), _spec((ls, k)), _spec((ls, k), jnp.int32),
+        _spec((ls, k)), _spec((ls, k), jnp.int32),
+        _spec((b, d)), _spec((b, d)), _spec((ls,)), _spec((b,)))
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def make_goldens(cfg: ModelConfig, params: dict, sp: dict) -> dict:
+    """Reference activations for rust-side model verification."""
+    t = 48
+    text = corpus.generate_text(4 * t, seed=99)
+    tokens = common.encode_text(text)[:t]
+    tmask = np.ones(t, np.float32)
+
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    jsp = {k: jnp.asarray(v) for k, v in sp.items()}
+    dense_logits = np.asarray(model.dense_forward(jp, cfg, jnp.asarray(tokens)))
+    pf_logits, khat, vhat = model.swan_prefill(jsp, cfg, jnp.asarray(tokens),
+                                               jnp.asarray(tmask))
+
+    # one dense decode step after the prefill
+    nl, nkv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    lmax = 64
+    kc = np.zeros((nl, nkv, lmax, dh), np.float32)
+    vc = np.zeros((nl, nkv, lmax, dh), np.float32)
+    kc[:, :, :t] = np.asarray(khat)
+    vc[:, :, :t] = np.asarray(vhat)
+    cmask = np.zeros(lmax, np.float32)
+    cmask[:t] = 1.0
+    next_tok = int(np.argmax(np.asarray(pf_logits)))
+    dd_logits, dk, dv = model.dense_decode_step(
+        jsp, cfg, jnp.int32(next_tok), jnp.int32(t),
+        jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(cmask))
+
+    # one swan hybrid decode step: buffer = last 16 tokens, rest pruned k=32
+    buf_n, k_active, ls = 16, 32, 64
+    kbuf = np.zeros((nl, nkv, buf_n, dh), np.float32)
+    vbuf = np.zeros((nl, nkv, buf_n, dh), np.float32)
+    kbuf[:, :, : buf_n] = np.asarray(khat)[:, :, t - buf_n : t]
+    vbuf[:, :, : buf_n] = np.asarray(vhat)[:, :, t - buf_n : t]
+    n_sp = t - buf_n
+    kvals = np.zeros((nl, nkv, ls, k_active), np.float32)
+    kidx = np.zeros((nl, nkv, ls, k_active), np.int32)
+    vvals = np.zeros((nl, nkv, ls, k_active), np.float32)
+    vidx = np.zeros((nl, nkv, ls, k_active), np.int32)
+    for l in range(nl):
+        for hd in range(nkv):
+            kv, ki = topk_prune(jnp.asarray(khat)[l, hd, :n_sp], k_active)
+            vv, vi = topk_prune(jnp.asarray(vhat)[l, hd, :n_sp], k_active)
+            kvals[l, hd, :n_sp] = np.asarray(kv)
+            kidx[l, hd, :n_sp] = np.asarray(ki)
+            vvals[l, hd, :n_sp] = np.asarray(vv)
+            vidx[l, hd, :n_sp] = np.asarray(vi)
+    smask = np.zeros(ls, np.float32); smask[:n_sp] = 1.0
+    bmask = np.ones(buf_n, np.float32)
+    sw_logits, swk, swv = model.swan_decode_step(
+        jsp, cfg, jnp.int32(next_tok), jnp.int32(t),
+        jnp.asarray(kvals), jnp.asarray(kidx), jnp.asarray(vvals),
+        jnp.asarray(vidx), jnp.asarray(kbuf), jnp.asarray(vbuf),
+        jnp.asarray(smask), jnp.asarray(bmask))
+
+    return {
+        "prompt_tokens": tokens.astype(np.int32),
+        "dense_logits": dense_logits,
+        "prefill_logits": np.asarray(pf_logits),
+        "prefill_khat": np.asarray(khat),
+        "prefill_vhat": np.asarray(vhat),
+        "dense_decode_logits": np.asarray(dd_logits),
+        "dense_decode_khat": np.asarray(dk),
+        "dense_decode_vhat": np.asarray(dv),
+        "swan_decode_logits": np.asarray(sw_logits),
+        "swan_decode_token": np.asarray([next_tok], np.int32),
+        "swan_decode_cfg": np.asarray([buf_n, k_active, ls, t], np.int32),
+    }
+
+
+def build_model(cfg: ModelConfig, out_dir: str, steps: int, force: bool) -> dict:
+    wpath = os.path.join(out_dir, f"weights_{cfg.name}.bin")
+    if os.path.exists(wpath) and not force:
+        print(f"[aot] reusing {wpath}")
+        meta, tensors = common.read_tensors(wpath)
+        params = {n: tensors[n] for n in common.param_names(cfg)}
+        sp = {n: tensors[n] for n in common.swan_param_names(cfg)}
+        for l in range(cfg.n_layers):
+            sp[f"l{l}.p_vo"] = tensors[f"l{l}.p_vo"]
+    else:
+        print(f"[aot] training {cfg.name} ({steps} steps)")
+        params, log = train.train(cfg, steps=steps)
+        with open(os.path.join(out_dir, f"train_log_{cfg.name}.txt"), "w") as f:
+            for s, l in log:
+                f.write(f"{s}\t{l:.6f}\n")
+        print(f"[aot] calibrating {cfg.name}")
+        p_qk, p_vo = calibrate.compute_projections(params, cfg)
+        sp = calibrate.absorb_weights(params, cfg, p_qk, p_vo)
+        tensors = dict(params)
+        tensors.update(sp)
+        common.write_tensors(wpath, json.loads(cfg.to_json()), tensors)
+        print(f"[aot] wrote {wpath} ({os.path.getsize(wpath)//1024} KiB)")
+
+    gpath = os.path.join(out_dir, f"golden_{cfg.name}.bin")
+    if not os.path.exists(gpath) or force:
+        goldens = make_goldens(cfg, params, sp)
+        common.write_tensors(gpath, json.loads(cfg.to_json()), goldens)
+        print(f"[aot] wrote {gpath}")
+
+    print(f"[aot] lowering graphs for {cfg.name}")
+    graphs = lower_model_graphs(cfg, sp, out_dir)
+    return {
+        "config": json.loads(cfg.to_json()),
+        "weights": f"weights_{cfg.name}.bin",
+        "golden": f"golden_{cfg.name}.bin",
+        "buf": BUF,
+        "graphs": graphs,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: path to model.hlo.txt")
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("SWAN_TRAIN_STEPS", "400")))
+    ap.add_argument("--models", default="swan-nano-gqa,swan-nano-mha")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    out_dir = out_dir or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "buf": BUF, "decode_l": DECODE_L,
+                "decode_k": DECODE_K, "prefill_t": PREFILL_T, "models": {}}
+    for name in args.models.split(","):
+        cfg = common.CONFIGS[name.strip()]
+        manifest["models"][cfg.name] = build_model(cfg, out_dir, args.steps,
+                                                   args.force)
+    manifest["prune_graphs"] = lower_prune_graphs(64, out_dir)
+    write_smoke_graph(out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] manifest written; artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Offline calibration: joint-subspace SVD projections (§4.1) and weight
+absorption (§4.2).
+
+For each layer l and kv-head group j we build
+
+    S_QK = Concat(Q_grouped, K)          (post-RoPE activations)
+    S_VO = Concat(V, W_O_grouped^T)
+
+and take the right-singular basis V of each as the projection matrices
+P_QK / P_VO.  P_VO is absorbed into Ŵ_V = W_V P_VO and
+Ŵ_O = P_VO^T W_O (per head slice); P_QK must be applied at runtime
+because RoPE does not commute with a static rotation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, corpus, model
+from .common import ModelConfig
+
+CALIB_SEQS = 8
+CALIB_LEN = 256
+
+
+def collect_activations(params: Dict[str, np.ndarray], cfg: ModelConfig,
+                        token_batches: np.ndarray):
+    """Run the dense model and harvest post-RoPE Q/K and V per layer.
+
+    token_batches: [N, T] int32.  Returns lists over layers of
+    (Q [N*T, nq, dh], K [N*T, nkv, dh], V [N*T, nkv, dh]).
+    """
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+    dh, nq, nkv, g = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group
+
+    @jax.jit
+    def run(tokens):
+        t = tokens.shape[0]
+        h = p["embed"][tokens]
+        ang = model.rope_angles(cfg, jnp.arange(t))[:, None, :]
+        causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+        qs, ks, vs = [], [], []
+        for l in range(cfg.n_layers):
+            xn = model.rmsnorm(h, p[f"l{l}.attn_norm"])
+            q = (xn @ p[f"l{l}.wq"]).reshape(t, nq, dh)
+            k = (xn @ p[f"l{l}.wk"]).reshape(t, nkv, dh)
+            v = (xn @ p[f"l{l}.wv"]).reshape(t, nkv, dh)
+            q = model.apply_rope(q, ang)
+            k = model.apply_rope(k, ang)
+            qs.append(q); ks.append(k); vs.append(v)
+            kx = jnp.repeat(k, g, axis=1)
+            vx = jnp.repeat(v, g, axis=1)
+            s = jnp.einsum("thd,shd->hts", q, kx) / jnp.sqrt(jnp.float32(dh))
+            s = jnp.where(causal[None] > 0, s, model.NEG_INF)
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("hts,shd->thd", w, vx).reshape(t, nq * dh)
+            h = h + o @ p[f"l{l}.wo"]
+            h = h + model.mlp(model.rmsnorm(h, p[f"l{l}.mlp_norm"]),
+                              p[f"l{l}.w1"], p[f"l{l}.w2"])
+        return qs, ks, vs
+
+    acc_q = [[] for _ in range(cfg.n_layers)]
+    acc_k = [[] for _ in range(cfg.n_layers)]
+    acc_v = [[] for _ in range(cfg.n_layers)]
+    for row in token_batches:
+        qs, ks, vs = run(jnp.asarray(row))
+        for l in range(cfg.n_layers):
+            acc_q[l].append(np.asarray(qs[l]))
+            acc_k[l].append(np.asarray(ks[l]))
+            acc_v[l].append(np.asarray(vs[l]))
+    out = []
+    for l in range(cfg.n_layers):
+        out.append((np.concatenate(acc_q[l]), np.concatenate(acc_k[l]),
+                    np.concatenate(acc_v[l])))
+    return out
+
+
+def joint_svd_basis(mat: np.ndarray) -> np.ndarray:
+    """Right-singular basis V of `mat` [rows, d] -> [d, d] orthogonal."""
+    _, _, vh = np.linalg.svd(mat.astype(np.float64), full_matrices=True)
+    return vh.T.astype(np.float32)
+
+
+def compute_projections(params: Dict[str, np.ndarray], cfg: ModelConfig,
+                        seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (p_qk [L, n_kv, dh, dh], p_vo [L, n_kv, dh, dh])."""
+    rng = np.random.default_rng(seed + 13)
+    text = corpus.generate_text(CALIB_SEQS * CALIB_LEN * 4, seed=seed + 13)
+    ids = common.encode_text(text)
+    starts = rng.integers(0, len(ids) - CALIB_LEN - 1, size=CALIB_SEQS)
+    batches = np.stack([ids[s : s + CALIB_LEN] for s in starts])
+
+    acts = collect_activations(params, cfg, batches)
+    dh, nq, nkv, g, d = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group, cfg.d_model
+    p_qk = np.zeros((cfg.n_layers, nkv, dh, dh), np.float32)
+    p_vo = np.zeros((cfg.n_layers, nkv, dh, dh), np.float32)
+    for l, (q, k, v) in enumerate(acts):
+        # group queries: [N, nq, dh] -> [nkv, N*G, dh]
+        qg = q.transpose(1, 0, 2).reshape(nkv, -1, dh)
+        kg = k.transpose(1, 0, 2)                      # [nkv, N, dh]
+        vg = v.transpose(1, 0, 2)
+        wo = params[f"l{l}.wo"].reshape(nq, dh, d)     # per-head slices
+        for j in range(nkv):
+            s_qk = np.concatenate([qg[j], kg[j]], axis=0)
+            p_qk[l, j] = joint_svd_basis(s_qk)
+            # W_O rows for this group, transposed to d_h-dim row vectors
+            wo_grp = wo[j * g : (j + 1) * g]           # [G, dh, d]
+            wo_rows = wo_grp.transpose(0, 2, 1).reshape(-1, dh)  # [G*d, dh]
+            s_vo = np.concatenate([vg[j], wo_rows], axis=0)
+            p_vo[l, j] = joint_svd_basis(s_vo)
+    return p_qk, p_vo
+
+
+def absorb_weights(params: Dict[str, np.ndarray], cfg: ModelConfig,
+                   p_qk: np.ndarray, p_vo: np.ndarray) -> Dict[str, np.ndarray]:
+    """Produce the SWAN parameter set (absorbed Ŵ_V / Ŵ_O + projections).
+
+    Ŵ_V generates values directly in the rotated space; Ŵ_O undoes the
+    rotation — both exactly (Lemma A.2), so the only approximation in SWAN
+    is the subsequent pruning.
+    """
+    dh, nq, nkv, g, d = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group, cfg.d_model
+    sp: Dict[str, np.ndarray] = {"embed": params["embed"],
+                                 "final_norm": params["final_norm"],
+                                 "lm_head": params["lm_head"]}
+    for l in range(cfg.n_layers):
+        sp[f"l{l}.attn_norm"] = params[f"l{l}.attn_norm"]
+        sp[f"l{l}.mlp_norm"] = params[f"l{l}.mlp_norm"]
+        sp[f"l{l}.wq"] = params[f"l{l}.wq"]
+        sp[f"l{l}.wk"] = params[f"l{l}.wk"]
+        sp[f"l{l}.w1"] = params[f"l{l}.w1"]
+        sp[f"l{l}.w2"] = params[f"l{l}.w2"]
+        sp[f"l{l}.p_qk"] = p_qk[l]
+        sp[f"l{l}.p_vo"] = p_vo[l]
+        # Ŵ_V: per kv-head block of columns
+        wv = params[f"l{l}.wv"].reshape(d, nkv, dh)
+        wv_hat = np.einsum("dhe,hef->dhf", wv, p_vo[l]).reshape(d, nkv * dh)
+        sp[f"l{l}.wv_hat"] = wv_hat.astype(np.float32)
+        # Ŵ_O: per q-head slice pre-multiplied by its group's P_VO^T
+        wo = params[f"l{l}.wo"].reshape(nq, dh, d)
+        wo_hat = np.stack([p_vo[l, j // g].T @ wo[j] for j in range(nq)])
+        sp[f"l{l}.wo_hat"] = wo_hat.reshape(nq * dh, d).astype(np.float32)
+    return sp

@@ -1,0 +1,165 @@
+"""Shared configuration, parameter containers and binary tensor I/O.
+
+The binary tensor container (`write_tensors` / `read_tensors`) is the
+interchange format between the build-time python side and the rust runtime
+(`rust/src/model/weights.rs` implements the mirror reader/writer).
+
+Layout (little endian):
+    magic   8 bytes  b"SWANWTS1"
+    meta    u32 json_len + utf-8 json blob (model hyper-parameters)
+    count   u32 number of tensors
+    tensor* repeated:
+        u16  name_len, name bytes (utf-8)
+        u8   dtype  (0 = f32, 1 = i32)
+        u8   ndim
+        u32  dims[ndim]
+        raw  little-endian data (prod(dims) * 4 bytes)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Dict, Tuple
+
+import numpy as np
+
+MAGIC = b"SWANWTS1"
+
+# Character-level tokenizer: ids 0..95 map to ASCII 32..127 (' ' .. '~').
+VOCAB_SIZE = 96
+CHAR_BASE = 32
+
+
+def encode_text(s: str) -> np.ndarray:
+    """Map a string to token ids; characters outside the alphabet become ' '."""
+    ids = np.frombuffer(s.encode("ascii", errors="replace"), dtype=np.uint8).astype(np.int32)
+    ids = ids - CHAR_BASE
+    ids = np.where((ids < 0) | (ids >= VOCAB_SIZE), 0, ids)
+    return ids
+
+
+def decode_ids(ids) -> str:
+    return "".join(chr(int(i) + CHAR_BASE) for i in ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of a swan-nano model variant."""
+
+    name: str
+    d_model: int = 256
+    n_layers: int = 4
+    n_q_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 64
+    d_ff: int = 1024
+    vocab: int = VOCAB_SIZE
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def group(self) -> int:
+        assert self.n_q_heads % self.n_kv_heads == 0
+        return self.n_q_heads // self.n_kv_heads
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(s: str) -> "ModelConfig":
+        return ModelConfig(**json.loads(s))
+
+
+#: The two architectures evaluated in the paper (Fig. 3/5): a GQA model
+#: (Llama-3.1 analogue) and an MHA model (OLMoE analogue).
+NANO_GQA = ModelConfig(name="swan-nano-gqa", n_q_heads=4, n_kv_heads=1)
+NANO_MHA = ModelConfig(name="swan-nano-mha", n_q_heads=4, n_kv_heads=4)
+
+CONFIGS = {c.name: c for c in (NANO_GQA, NANO_MHA)}
+
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path: str, meta: dict, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        blob = json.dumps(meta).encode("utf-8")
+        f.write(struct.pack("<I", len(blob)))
+        f.write(blob)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_CODES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                else:
+                    arr = arr.astype(np.int32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _DTYPE_CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> Tuple[dict, Dict[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, "bad magic"
+        (jlen,) = struct.unpack("<I", f.read(4))
+        meta = json.loads(f.read(jlen).decode("utf-8"))
+        (count,) = struct.unpack("<I", f.read(4))
+        out: Dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack("<" + "I" * ndim, f.read(4 * ndim))
+            dt = _DTYPES[dtype_code]
+            n = int(np.prod(dims)) if ndim else 1
+            out[name] = np.frombuffer(f.read(4 * n), dtype=dt).reshape(dims).copy()
+        return meta, out
+
+
+def param_names(cfg: ModelConfig) -> list:
+    """Deterministic flat ordering of model parameters.
+
+    This ordering defines the HLO parameter order for AOT graphs and the
+    buffer order the rust runtime feeds to `execute_b`.
+    """
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.attn_norm",
+            f"l{l}.wq",
+            f"l{l}.wk",
+            f"l{l}.wv",
+            f"l{l}.wo",
+            f"l{l}.mlp_norm",
+            f"l{l}.w1",
+            f"l{l}.w2",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def swan_param_names(cfg: ModelConfig) -> list:
+    """Parameter ordering for SWAN graphs: absorbed weights + projections."""
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.attn_norm",
+            f"l{l}.wq",
+            f"l{l}.wk",
+            f"l{l}.wv_hat",
+            f"l{l}.wo_hat",
+            f"l{l}.p_qk",
+            f"l{l}.mlp_norm",
+            f"l{l}.w1",
+            f"l{l}.w2",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names

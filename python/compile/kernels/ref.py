@@ -1,0 +1,84 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: the pytest suite asserts the Pallas
+kernels (interpret=True) match these implementations to float tolerance on
+hypothesis-generated shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rotate_ref(x: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Rotate vectors by an orthogonal projection: x[..., d] @ p[d, d]."""
+    return x @ p
+
+
+def topk_prune_ref(x: jnp.ndarray, k: int):
+    """Magnitude top-k prune of each row of x[N, d].
+
+    Returns (values[N, k], indices[N, k]) — the k largest-|.| entries per
+    row, with original signs, ordered by descending magnitude (ties broken
+    by lower index first, via the stable argsort on negated magnitudes).
+    """
+    order = jnp.argsort(-jnp.abs(x), axis=-1, stable=True)
+    idx = order[..., :k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def sparse_scores_ref(q: jnp.ndarray, kvals: jnp.ndarray, kidx: jnp.ndarray) -> jnp.ndarray:
+    """Decompression-free score: s[l] = sum_j kvals[l, j] * q[kidx[l, j]]."""
+    return jnp.sum(kvals * q[kidx], axis=-1)
+
+
+def sparse_output_ref(w: jnp.ndarray, vvals: jnp.ndarray, vidx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Decompression-free output: out[t] = sum_l w[l] * scatter(vvals[l] at vidx[l])[t]."""
+    contrib = w[:, None] * vvals  # [L, k]
+    return jnp.zeros((d,), dtype=w.dtype).at[vidx.reshape(-1)].add(contrib.reshape(-1))
+
+
+def swan_attention_ref(
+    qhat: jnp.ndarray,      # [d]
+    kvals: jnp.ndarray,     # [Ls, k]
+    kidx: jnp.ndarray,      # [Ls, k] int32
+    vvals: jnp.ndarray,     # [Ls, k]
+    vidx: jnp.ndarray,      # [Ls, k] int32
+    kbuf: jnp.ndarray,      # [B, d] dense (buffer + current token rows)
+    vbuf: jnp.ndarray,      # [B, d]
+    smask: jnp.ndarray,     # [Ls] 1.0 = live, 0.0 = padding
+    bmask: jnp.ndarray,     # [B]
+) -> jnp.ndarray:
+    """Hybrid-cache attention (Algorithm 1, lines 13-17) for one head.
+
+    Attention over the concatenation [sparse cache ; dense buffer] without
+    reconstructing the sparse vectors.
+    """
+    d = qhat.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=qhat.dtype))
+    s_sparse = sparse_scores_ref(qhat, kvals, kidx) * scale
+    s_buf = (kbuf @ qhat) * scale
+    s_sparse = jnp.where(smask > 0, s_sparse, NEG_INF)
+    s_buf = jnp.where(bmask > 0, s_buf, NEG_INF)
+    s = jnp.concatenate([s_sparse, s_buf])
+    m = jnp.max(s)
+    e = jnp.exp(s - m)
+    w = e / jnp.sum(e)
+    w_sparse, w_buf = w[: kvals.shape[0]], w[kvals.shape[0]:]
+    out = sparse_output_ref(w_sparse, vvals, vidx, d) + w_buf @ vbuf
+    return out
+
+
+def dense_attention_ref(q: jnp.ndarray, kcache: jnp.ndarray, vcache: jnp.ndarray,
+                        mask: jnp.ndarray) -> jnp.ndarray:
+    """Standard dense decode attention for one head (baseline oracle)."""
+    d = q.shape[-1]
+    s = (kcache @ q) / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = jnp.where(mask > 0, s, NEG_INF)
+    m = jnp.max(s)
+    e = jnp.exp(s - m)
+    w = e / jnp.sum(e)
+    return w @ vcache

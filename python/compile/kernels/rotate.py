@@ -1,0 +1,28 @@
+"""L1 Pallas kernel: runtime rotation of query/key vectors by P_QK.
+
+RoPE is position-dependent, so P_QK cannot be absorbed into W_Q/W_K
+(§4.2); this kernel applies the d_h x d_h orthogonal rotation at each
+decode step.  Cost is the fixed 2*d_h^2-FLOP overhead in the Eq. 2
+break-even analysis.  A (N, d_h) x (d_h, d_h) tile fits VMEM for every
+configuration we ship; on TPU this is the only MXU-shaped op in the
+decode path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rotate_kernel(x_ref, p_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], p_ref[...])
+
+
+def rotate(x: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Rotate x[N, d] by the orthogonal matrix p[d, d] -> x @ p."""
+    return pl.pallas_call(
+        _rotate_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, p)

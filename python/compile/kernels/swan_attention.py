@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: SWAN hybrid-cache decode attention (Algorithm 1).
+
+One grid step processes one (kv-head) worth of hybrid cache for a single
+query vector.  The sparse half of the cache is the paper's winnowed store:
+per-token (values, indices) arrays of the top-k_active rotated dimensions;
+the dense half is the recency buffer (plus the current token's row).  The
+kernel computes attention *directly* on this representation — scores via a
+gather (sparse-dense mat-vec), the output via a scatter-add — with no
+decompression/reconstruction of d_h-dim vectors.
+
+Hardware adaptation (paper targets GPU/HBM): on TPU the BlockSpec streams
+the (block_L, k) sparse tiles HBM->VMEM; gathers/scatter-adds map to VPU
+lanes (decode is a mat-vec: MXU is structurally idle, the win is bytes
+moved, Eq. 1).  Kernels are lowered with interpret=True here because the
+CPU PJRT plugin cannot execute Mosaic custom-calls; the HLO produced is
+plain gather/scatter/reduce ops that any backend runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _swan_attention_kernel(q_ref, kvals_ref, kidx_ref, vvals_ref, vidx_ref,
+                           kbuf_ref, vbuf_ref, smask_ref, bmask_ref, o_ref):
+    qhat = q_ref[...]            # [d]
+    kvals = kvals_ref[...]       # [Ls, k]
+    kidx = kidx_ref[...]         # [Ls, k]
+    vvals = vvals_ref[...]
+    vidx = vidx_ref[...]
+    kbuf = kbuf_ref[...]         # [B, d]
+    vbuf = vbuf_ref[...]
+    smask = smask_ref[...]       # [Ls]
+    bmask = bmask_ref[...]       # [B]
+
+    d = qhat.shape[-1]
+    ls = kvals.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=qhat.dtype))
+
+    # --- scores: sparse-dense mat-vec (gather, no reconstruction) ---
+    gathered = jnp.take(qhat, kidx, axis=0)            # [Ls, k]
+    s_sparse = jnp.sum(kvals * gathered, axis=-1) * scale
+    s_buf = jnp.dot(kbuf, qhat) * scale                # [B]
+    s_sparse = jnp.where(smask > 0, s_sparse, NEG_INF)
+    s_buf = jnp.where(bmask > 0, s_buf, NEG_INF)
+
+    # --- numerically-stable softmax over the hybrid score vector ---
+    m = jnp.maximum(jnp.max(s_sparse), jnp.max(s_buf))
+    e_sparse = jnp.exp(s_sparse - m)
+    e_buf = jnp.exp(s_buf - m)
+    z = jnp.sum(e_sparse) + jnp.sum(e_buf)
+    w_sparse = e_sparse / z                            # [Ls]
+    w_buf = e_buf / z                                  # [B]
+
+    # --- output: scatter-add of weighted sparse values + dense buffer ---
+    contrib = (w_sparse[:, None] * vvals).reshape(-1)  # [Ls*k]
+    out = jnp.zeros((d,), dtype=qhat.dtype).at[vidx.reshape(-1)].add(contrib)
+    out = out + jnp.dot(w_buf, vbuf)
+    o_ref[...] = out
+
+
+def swan_attention(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf, smask, bmask):
+    """Single-head hybrid attention. Shapes:
+
+    qhat [d]; kvals/kidx/vvals/vidx [Ls, k]; kbuf/vbuf [B, d];
+    smask [Ls]; bmask [B].  Returns out [d].
+    """
+    d = qhat.shape[-1]
+    return pl.pallas_call(
+        _swan_attention_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), qhat.dtype),
+        interpret=True,
+    )(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf, smask, bmask)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def swan_attention_heads(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf, smask, bmask):
+    """vmap over kv-heads: qhat [H, d], caches [H, Ls, k], buffers [H, B, d]."""
+    fn = jax.vmap(swan_attention, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None))
+    return fn(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf, smask, bmask)

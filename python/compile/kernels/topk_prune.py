@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: magnitude top-k pruning (Algorithm 1, lines 7-11).
+
+Winnows a block of rotated vectors to their k_active most significant
+dimensions, emitting (values, indices) — the sparse representation stored
+in the historical cache.  The sort runs entirely in VMEM on a
+(block_N, d_h) tile; on TPU this is a VPU sort, on the interpret path it
+lowers to an XLA variadic sort.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_prune_kernel(k: int, x_ref, vals_ref, idx_ref):
+    x = x_ref[...]                                     # [N, d]
+    order = jnp.argsort(-jnp.abs(x), axis=-1, stable=True)
+    idx = order[..., :k]                               # [N, k]
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    vals_ref[...] = vals
+    idx_ref[...] = idx.astype(jnp.int32)
+
+
+def topk_prune(x: jnp.ndarray, k: int):
+    """Prune rows of x[N, d] to top-k magnitude entries.
+
+    Returns (values[N, k] f32, indices[N, k] i32), magnitude-descending.
+    """
+    n, _ = x.shape
+    return pl.pallas_call(
+        functools.partial(_topk_prune_kernel, k),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, k), x.dtype),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+        ),
+        interpret=True,
+    )(x)

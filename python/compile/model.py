@@ -1,0 +1,273 @@
+"""L2: swan-nano transformer in JAX (MHA + GQA variants).
+
+Three entry points matter downstream:
+
+  * ``dense_forward``      — training-time causal forward (original weights).
+  * ``swan_prefill``       — prompt phase in the *rotated* space: emits
+                             logits plus the rotated k̂/v̂ history the rust
+                             coordinator splits into buffer + sparse cache.
+  * ``swan_decode_step``   — one autoregressive step over the hybrid cache,
+                             calling the L1 Pallas kernels (rotate +
+                             swan_attention).  This is the graph AOT-lowered
+                             to HLO and executed from rust.
+
+Weights are passed as a flat list in the deterministic order of
+``common.swan_param_names`` / ``common.param_names`` so the HLO parameter
+order is stable for the rust runtime.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common
+from .common import ModelConfig
+from .kernels.rotate import rotate
+from .kernels.swan_attention import swan_attention
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter initialisation
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Initialise original (pre-SWAN) model parameters."""
+    rng = np.random.default_rng(seed)
+    d, dh, nq, nkv = cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads
+
+    def dense(shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return (rng.normal(size=shape) * scale).astype(np.float32)
+
+    params: Dict[str, np.ndarray] = {"embed": dense((cfg.vocab, d), 0.02)}
+    for l in range(cfg.n_layers):
+        params[f"l{l}.attn_norm"] = np.ones(d, np.float32)
+        params[f"l{l}.wq"] = dense((d, nq * dh))
+        params[f"l{l}.wk"] = dense((d, nkv * dh))
+        params[f"l{l}.wv"] = dense((d, nkv * dh))
+        params[f"l{l}.wo"] = dense((nq * dh, d))
+        params[f"l{l}.mlp_norm"] = np.ones(d, np.float32)
+        params[f"l{l}.w1"] = dense((d, cfg.d_ff))
+        params[f"l{l}.w2"] = dense((cfg.d_ff, d))
+    params["final_norm"] = np.ones(d, np.float32)
+    params["lm_head"] = dense((d, cfg.vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, positions: jnp.ndarray) -> jnp.ndarray:
+    """[T, d_head/2] rotary angles for given positions."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / cfg.d_head)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jnp.ndarray, ang: jnp.ndarray) -> jnp.ndarray:
+    """Apply rotary embedding to x[..., d] with matching-rank angles [..., d/2].
+
+    Pairs are (x[2i], x[2i+1]); rank of `ang` must broadcast against x's
+    leading axes (e.g. x [T, H, d], ang [T, 1, d/2]).
+    """
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def mlp(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# ---------------------------------------------------------------------------
+# training / baseline forward (original weights, no rotation)
+# ---------------------------------------------------------------------------
+
+def dense_forward(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                  tokens: jnp.ndarray) -> jnp.ndarray:
+    """Causal forward over tokens [T] -> logits [T, vocab]."""
+    t = tokens.shape[0]
+    dh, nq, nkv, g = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group
+    h = params["embed"][tokens]                        # [T, d]
+    ang = rope_angles(cfg, jnp.arange(t))[:, None, :]  # [T, 1, half]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, params[f"l{l}.attn_norm"])
+        q = (xn @ params[f"l{l}.wq"]).reshape(t, nq, dh)
+        k = (xn @ params[f"l{l}.wk"]).reshape(t, nkv, dh)
+        v = (xn @ params[f"l{l}.wv"]).reshape(t, nkv, dh)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+        kx = jnp.repeat(k, g, axis=1)                  # [T, nq, dh]
+        vx = jnp.repeat(v, g, axis=1)
+        s = jnp.einsum("thd,shd->hts", q, kx) / jnp.sqrt(jnp.float32(dh))
+        s = jnp.where(causal[None] > 0, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hts,shd->thd", w, vx).reshape(t, nq * dh)
+        h = h + o @ params[f"l{l}.wo"]
+        h = h + mlp(rmsnorm(h, params[f"l{l}.mlp_norm"]),
+                    params[f"l{l}.w1"], params[f"l{l}.w2"])
+    return rmsnorm(h, params["final_norm"]) @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# SWAN rotated-space graphs
+# ---------------------------------------------------------------------------
+
+def params_to_list(params: Dict[str, np.ndarray], names: List[str]) -> List[np.ndarray]:
+    return [params[n] for n in names]
+
+
+def list_to_params(flat: List[jnp.ndarray], names: List[str]) -> Dict[str, jnp.ndarray]:
+    return dict(zip(names, flat))
+
+
+def swan_prefill(sp: Dict[str, jnp.ndarray], cfg: ModelConfig, tokens: jnp.ndarray,
+                 tmask: jnp.ndarray):
+    """Prompt phase in rotated space.
+
+    tokens [T] int32, tmask [T] f32 (1 = real token, 0 = right padding).
+    Returns (logits_last [vocab], khat [L, n_kv, T, dh], vhat [L, n_kv, T, dh]).
+    Rotation is lossless (Lemma A.1/A.2) so logits match the dense model.
+    """
+    t = tokens.shape[0]
+    dh, nq, nkv, g = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group
+    h = sp["embed"][tokens]
+    ang = rope_angles(cfg, jnp.arange(t))[:, None, :]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32)) * tmask[None, :]
+    khats, vhats = [], []
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, sp[f"l{l}.attn_norm"])
+        q = (xn @ sp[f"l{l}.wq"]).reshape(t, nq, dh)
+        k = (xn @ sp[f"l{l}.wk"]).reshape(t, nkv, dh)
+        vhat = (xn @ sp[f"l{l}.wv_hat"]).reshape(t, nkv, dh)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+        p = sp[f"l{l}.p_qk"]                           # [n_kv, dh, dh]
+        # rotate: query head j uses its kv-group's projection
+        qhat = jnp.einsum("thd,hde->the", q.reshape(t, nq, dh),
+                          jnp.repeat(p, g, axis=0))
+        khat = jnp.einsum("thd,hde->the", k, p)
+        kx = jnp.repeat(khat, g, axis=1)
+        vx = jnp.repeat(vhat, g, axis=1)
+        s = jnp.einsum("thd,shd->hts", qhat, kx) / jnp.sqrt(jnp.float32(dh))
+        s = jnp.where(causal[None] > 0, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hts,shd->thd", w, vx).reshape(t, nq * dh)
+        h = h + o @ sp[f"l{l}.wo_hat"]
+        h = h + mlp(rmsnorm(h, sp[f"l{l}.mlp_norm"]), sp[f"l{l}.w1"], sp[f"l{l}.w2"])
+        khats.append(jnp.transpose(khat, (1, 0, 2)))   # [n_kv, T, dh]
+        vhats.append(jnp.transpose(vhat, (1, 0, 2)))
+    last = jnp.maximum(jnp.sum(tmask).astype(jnp.int32) - 1, 0)
+    logits = rmsnorm(h[last], sp["final_norm"]) @ sp["lm_head"]
+    return logits, jnp.stack(khats), jnp.stack(vhats)
+
+
+def swan_decode_step(sp: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                     token: jnp.ndarray, pos: jnp.ndarray,
+                     sp_kvals: jnp.ndarray, sp_kidx: jnp.ndarray,
+                     sp_vvals: jnp.ndarray, sp_vidx: jnp.ndarray,
+                     kbuf: jnp.ndarray, vbuf: jnp.ndarray,
+                     smask: jnp.ndarray, bmask: jnp.ndarray):
+    """One decode step over the hybrid cache (Algorithm 1).
+
+    token, pos: i32 scalars.
+    sp_* : [L, n_kv, Ls, k] (f32 / i32) — winnowed historical cache.
+    kbuf/vbuf: [L, n_kv, B, dh] — dense recency buffers.
+    smask [Ls], bmask [B] — validity masks (shared across layers).
+    Returns (logits [vocab], khat [L, n_kv, dh], vhat [L, n_kv, dh]).
+    The *current* token attends to itself via a virtual buffer row appended
+    inside the graph; the rust side appends it to the real buffer after the
+    call.
+    """
+    dh, nq, nkv, g = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group
+    h = sp["embed"][token]
+    ang = rope_angles(cfg, pos[None])[0][None, :]      # [1, half]
+    khats, vhats = [], []
+    bmask_eff = jnp.concatenate([bmask, jnp.ones((1,), jnp.float32)])
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, sp[f"l{l}.attn_norm"])
+        q = (xn @ sp[f"l{l}.wq"]).reshape(nq, dh)
+        k = (xn @ sp[f"l{l}.wk"]).reshape(nkv, dh)
+        vhat = (xn @ sp[f"l{l}.wv_hat"]).reshape(nkv, dh)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+        p = sp[f"l{l}.p_qk"]                           # [n_kv, dh, dh]
+        # L1 rotate kernel: queries grouped per kv head, keys per kv head
+        qhat = jnp.stack([rotate(q[j][None], p[j // g])[0] for j in range(nq)])
+        khat = jnp.stack([rotate(k[i][None], p[i])[0] for i in range(nkv)])
+        outs = []
+        for j in range(nq):
+            grp = j // g
+            kb = jnp.concatenate([kbuf[l, grp], khat[grp][None]], axis=0)
+            vb = jnp.concatenate([vbuf[l, grp], vhat[grp][None]], axis=0)
+            outs.append(swan_attention(
+                qhat[j],
+                sp_kvals[l, grp], sp_kidx[l, grp],
+                sp_vvals[l, grp], sp_vidx[l, grp],
+                kb, vb, smask, bmask_eff))
+        o = jnp.concatenate(outs)                      # [nq*dh]
+        h = h + o @ sp[f"l{l}.wo_hat"]
+        h = h + mlp(rmsnorm(h, sp[f"l{l}.mlp_norm"]), sp[f"l{l}.w1"], sp[f"l{l}.w2"])
+        khats.append(khat)
+        vhats.append(vhat)
+    logits = rmsnorm(h, sp["final_norm"]) @ sp["lm_head"]
+    return logits, jnp.stack(khats), jnp.stack(vhats)
+
+
+def dense_decode_step(sp: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                      token: jnp.ndarray, pos: jnp.ndarray,
+                      kcache: jnp.ndarray, vcache: jnp.ndarray,
+                      cmask: jnp.ndarray):
+    """Baseline decode step over a dense rotated cache [L, n_kv, Lmax, dh].
+
+    Because rotation is lossless, this is numerically the uncompressed
+    model — it is the serving-mode baseline the paper compares against.
+    """
+    dh, nq, nkv, g = cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group
+    h = sp["embed"][token]
+    ang = rope_angles(cfg, pos[None])[0][None, :]
+    khats, vhats = [], []
+    cmask_eff = jnp.concatenate([cmask, jnp.ones((1,), jnp.float32)])
+    for l in range(cfg.n_layers):
+        xn = rmsnorm(h, sp[f"l{l}.attn_norm"])
+        q = (xn @ sp[f"l{l}.wq"]).reshape(nq, dh)
+        k = (xn @ sp[f"l{l}.wk"]).reshape(nkv, dh)
+        vhat = (xn @ sp[f"l{l}.wv_hat"]).reshape(nkv, dh)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+        p = sp[f"l{l}.p_qk"]
+        qhat = jnp.einsum("hd,hde->he", q, jnp.repeat(p, g, axis=0))
+        khat = jnp.einsum("hd,hde->he", k, p)
+        outs = []
+        for j in range(nq):
+            grp = j // g
+            kc = jnp.concatenate([kcache[l, grp], khat[grp][None]], axis=0)
+            vc = jnp.concatenate([vcache[l, grp], vhat[grp][None]], axis=0)
+            s = (kc @ qhat[j]) / jnp.sqrt(jnp.float32(dh))
+            s = jnp.where(cmask_eff > 0, s, NEG_INF)
+            w = jax.nn.softmax(s)
+            outs.append(w @ vc)
+        o = jnp.concatenate(outs)
+        h = h + o @ sp[f"l{l}.wo_hat"]
+        h = h + mlp(rmsnorm(h, sp[f"l{l}.mlp_norm"]), sp[f"l{l}.w1"], sp[f"l{l}.w2"])
+        khats.append(khat)
+        vhats.append(vhat)
+    logits = rmsnorm(h, sp["final_norm"]) @ sp["lm_head"]
+    return logits, jnp.stack(khats), jnp.stack(vhats)

@@ -1,0 +1,84 @@
+"""Build-time training of the swan-nano models on the synthetic corpus.
+
+Runs once inside ``make artifacts`` (python is never on the request path).
+A hand-rolled Adam is used (optax is not available in the sandbox).  The
+loss curve is written next to the weights so EXPERIMENTS.md can record the
+end-to-end training evidence.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common, corpus, model
+from .common import ModelConfig
+
+SEQ_LEN = 320
+BATCH = 12
+
+
+def make_batches(text_ids: np.ndarray, n_steps: int, seed: int):
+    """Yield [BATCH, SEQ_LEN+1] windows sampled uniformly from the corpus."""
+    rng = np.random.default_rng(seed)
+    hi = len(text_ids) - SEQ_LEN - 1
+    for _ in range(n_steps):
+        starts = rng.integers(0, hi, size=BATCH)
+        yield np.stack([text_ids[s : s + SEQ_LEN + 1] for s in starts])
+
+
+def loss_fn(params, cfg: ModelConfig, batch: jnp.ndarray) -> jnp.ndarray:
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = jax.vmap(lambda t: model.dense_forward(params, cfg, t))(tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree_util.tree_map(lambda a: a / (1 - b1 ** step), m)
+    vh = jax.tree_util.tree_map(lambda a: a / (1 - b2 ** step), v)
+    params = jax.tree_util.tree_map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mh, vh)
+    return params, m, v
+
+
+def train(cfg: ModelConfig, steps: int = 400, seed: int = 0,
+          lr: float = 3e-3, log_every: int = 25) -> Tuple[Dict[str, np.ndarray], List[Tuple[int, float]]]:
+    """Train and return (params, loss_log)."""
+    text = corpus.generate_text(400_000, seed=seed + 7)
+    ids = common.encode_text(text)
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, seed).items()}
+    m, v = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, m, v, batch, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        # cosine decay with short warmup
+        warm = jnp.minimum(step / 20.0, 1.0)
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / steps, 1.0)))
+        cur_lr = lr * warm * (0.1 + 0.9 * decay)
+        params, m, v = adam_update(params, grads, m, v, step, cur_lr)
+        return params, m, v, loss
+
+    log: List[Tuple[int, float]] = []
+    t0 = time.time()
+    for i, batch in enumerate(make_batches(ids, steps, seed), start=1):
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(batch), jnp.float32(i))
+        if i % log_every == 0 or i == 1 or i == steps:
+            l = float(loss)
+            log.append((i, l))
+            print(f"[train {cfg.name}] step {i}/{steps} loss {l:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return {k: np.asarray(v) for k, v in params.items()}, log

@@ -1,0 +1,97 @@
+# Calibration pipeline: shapes, groupings, SVD properties, absorption algebra.
+import numpy as np
+import pytest
+
+from compile import calibrate, common, model
+
+
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = common.NANO_GQA
+    params = model.init_params(cfg, seed=4)
+    return cfg, params
+
+
+def test_joint_svd_basis_properties():
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=(200, 16)).astype(np.float32)
+    v = calibrate.joint_svd_basis(m)
+    assert v.shape == (16, 16)
+    np.testing.assert_allclose(v @ v.T, np.eye(16), atol=1e-5)
+    # energy concentration: leading dims carry descending variance of m @ v
+    proj = m @ v
+    var = proj.var(axis=0)
+    assert (np.diff(var) <= 1e-3).all(), "variance must be (weakly) descending"
+
+
+def test_joint_svd_concentrates_lowrank_signal():
+    """A matrix with planted rank-4 structure should concentrate >90% energy
+    in the first 4 rotated dims."""
+    rng = np.random.default_rng(1)
+    basis = rng.normal(size=(4, 32))
+    m = (rng.normal(size=(500, 4)) @ basis + 0.01 * rng.normal(size=(500, 32)))
+    v = calibrate.joint_svd_basis(m.astype(np.float32))
+    proj = m @ v
+    energy = (proj ** 2).sum(axis=0)
+    assert energy[:4].sum() / energy.sum() > 0.9
+
+
+def test_collect_activations_shapes(gqa_setup):
+    cfg, params = gqa_setup
+    batches = np.zeros((2, 16), np.int32)
+    acts = calibrate.collect_activations(params, cfg, batches)
+    assert len(acts) == cfg.n_layers
+    q, k, v = acts[0]
+    assert q.shape == (32, cfg.n_q_heads, cfg.d_head)
+    assert k.shape == (32, cfg.n_kv_heads, cfg.d_head)
+    assert v.shape == (32, cfg.n_kv_heads, cfg.d_head)
+
+
+def test_compute_projections_shapes(gqa_setup):
+    cfg, params = gqa_setup
+    p_qk, p_vo = calibrate.compute_projections(params, cfg, seed=4)
+    assert p_qk.shape == (cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_head)
+    assert p_vo.shape == p_qk.shape
+
+
+def test_absorption_algebra(gqa_setup):
+    """Ŵ_V = W_V P_VO and Ŵ_O = P_VO^T W_O per head slice, exactly."""
+    cfg, params = gqa_setup
+    rng = np.random.default_rng(2)
+    dh, nkv, nq, g, d = cfg.d_head, cfg.n_kv_heads, cfg.n_q_heads, cfg.group, cfg.d_model
+    p_vo = np.stack([
+        np.stack([np.linalg.qr(rng.normal(size=(dh, dh)))[0].astype(np.float32)
+                  for _ in range(nkv)])
+        for _ in range(cfg.n_layers)])
+    p_qk = p_vo.copy()
+    sp = calibrate.absorb_weights(params, cfg, p_qk, p_vo)
+    l = 0
+    wv = params[f"l{l}.wv"].reshape(d, nkv, dh)
+    for j in range(nkv):
+        np.testing.assert_allclose(
+            sp[f"l{l}.wv_hat"].reshape(d, nkv, dh)[:, j],
+            wv[:, j] @ p_vo[l, j], rtol=1e-5, atol=1e-5)
+    wo = params[f"l{l}.wo"].reshape(nq, dh, d)
+    wo_hat = sp[f"l{l}.wo_hat"].reshape(nq, dh, d)
+    for j in range(nq):
+        np.testing.assert_allclose(wo_hat[j], p_vo[l, j // g].T @ wo[j],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_absorption_identity_projection_is_noop(gqa_setup):
+    cfg, params = gqa_setup
+    eye = np.broadcast_to(
+        np.eye(cfg.d_head, dtype=np.float32),
+        (cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_head)).copy()
+    sp = calibrate.absorb_weights(params, cfg, eye, eye)
+    np.testing.assert_allclose(sp["l0.wv_hat"], params["l0.wv"], atol=1e-6)
+    np.testing.assert_allclose(sp["l0.wo_hat"], params["l0.wo"], atol=1e-6)
+
+
+def test_mha_grouping_is_identity():
+    """In MHA (G=1) the query grouping must be a plain transpose."""
+    cfg = common.NANO_MHA
+    assert cfg.group == 1
+    params = model.init_params(cfg, seed=5)
+    p_qk, p_vo = calibrate.compute_projections(params, cfg, seed=5)
+    assert p_qk.shape[1] == cfg.n_q_heads

@@ -1,0 +1,172 @@
+# pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+# Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rotate import rotate
+from compile.kernels.swan_attention import swan_attention, swan_attention_heads
+from compile.kernels.topk_prune import topk_prune
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# topk_prune
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 16), d=st.sampled_from([8, 16, 64, 128]),
+       frac=st.sampled_from([0.25, 0.5, 0.75, 1.0]), seed=st.integers(0, 2**31))
+def test_topk_prune_matches_ref(n, d, frac, seed):
+    k = max(1, int(d * frac))
+    x = jnp.asarray(_rng(seed).normal(size=(n, d)), jnp.float32)
+    vals, idx = topk_prune(x, k)
+    rvals, ridx = ref.topk_prune_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals))
+
+
+def test_topk_prune_is_magnitude_descending():
+    x = jnp.asarray(_rng(3).normal(size=(5, 32)), jnp.float32)
+    vals, _ = topk_prune(x, 8)
+    mags = np.abs(np.asarray(vals))
+    assert (np.diff(mags, axis=-1) <= 1e-7).all()
+
+
+def test_topk_prune_full_k_is_permutation():
+    x = jnp.asarray(_rng(4).normal(size=(3, 16)), jnp.float32)
+    vals, idx = topk_prune(x, 16)
+    for r in range(3):
+        assert sorted(np.asarray(idx)[r].tolist()) == list(range(16))
+        np.testing.assert_allclose(np.sort(np.asarray(vals)[r]),
+                                   np.sort(np.asarray(x)[r]))
+
+
+def test_topk_prune_preserves_signs():
+    x = jnp.asarray([[-5.0, 1.0, 4.0, -0.5]], jnp.float32)
+    vals, idx = topk_prune(x, 2)
+    np.testing.assert_allclose(np.asarray(vals)[0], [-5.0, 4.0])
+    np.testing.assert_array_equal(np.asarray(idx)[0], [0, 2])
+
+
+# ---------------------------------------------------------------------------
+# rotate
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 8), d=st.sampled_from([8, 32, 64]), seed=st.integers(0, 2**31))
+def test_rotate_matches_ref(n, d, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+    p = jnp.asarray(np.linalg.qr(r.normal(size=(d, d)))[0], jnp.float32)
+    np.testing.assert_allclose(np.asarray(rotate(x, p)),
+                               np.asarray(ref.rotate_ref(x, p)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_orthogonal_preserves_norm():
+    r = _rng(7)
+    x = jnp.asarray(r.normal(size=(4, 32)), jnp.float32)
+    p = jnp.asarray(np.linalg.qr(r.normal(size=(32, 32)))[0], jnp.float32)
+    y = np.asarray(rotate(x, p))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# swan_attention
+# ---------------------------------------------------------------------------
+
+def _attention_inputs(seed, d=64, ls=24, k=16, b=8, live_s=None, live_b=None):
+    r = _rng(seed)
+    live_s = ls if live_s is None else live_s
+    live_b = b if live_b is None else live_b
+    qhat = jnp.asarray(r.normal(size=d), jnp.float32)
+    kvals, kidx = ref.topk_prune_ref(jnp.asarray(r.normal(size=(ls, d)), jnp.float32), k)
+    vvals, vidx = ref.topk_prune_ref(jnp.asarray(r.normal(size=(ls, d)), jnp.float32), k)
+    kbuf = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    vbuf = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    smask = jnp.asarray((np.arange(ls) < live_s).astype(np.float32))
+    bmask = jnp.asarray((np.arange(b) < live_b).astype(np.float32))
+    return qhat, kvals, kidx, vvals, vidx, kbuf, vbuf, smask, bmask
+
+
+@given(d=st.sampled_from([16, 64, 128]), ls=st.integers(2, 48),
+       b=st.integers(1, 16), kfrac=st.sampled_from([0.25, 0.5, 1.0]),
+       seed=st.integers(0, 2**31))
+def test_swan_attention_matches_ref(d, ls, b, kfrac, seed):
+    k = max(1, int(d * kfrac))
+    args = _attention_inputs(seed, d=d, ls=ls, k=k, b=b)
+    out = swan_attention(*args)
+    outr = ref.swan_attention_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(live_s=st.integers(0, 24), live_b=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_swan_attention_respects_masks(live_s, live_b, seed):
+    """Padding rows must not influence the output at all."""
+    args = list(_attention_inputs(seed, live_s=live_s, live_b=live_b))
+    out1 = np.asarray(swan_attention(*args))
+    # scribble garbage into masked rows — output must be unchanged
+    r = _rng(seed + 1)
+    kvals = np.array(args[1], copy=True); kvals[live_s:] = r.normal(size=kvals[live_s:].shape)
+    kbuf = np.array(args[5], copy=True); kbuf[live_b:] = r.normal(size=kbuf[live_b:].shape)
+    args[1] = jnp.asarray(kvals); args[5] = jnp.asarray(kbuf)
+    out2 = np.asarray(swan_attention(*args))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+def test_swan_attention_full_k_equals_dense():
+    """With k_active = d the sparse cache is lossless: hybrid attention must
+    equal dense attention over the concatenated cache (Lemma A.1 corollary)."""
+    d, ls, b = 32, 12, 4
+    r = _rng(11)
+    kcache = jnp.asarray(r.normal(size=(ls, d)), jnp.float32)
+    vcache = jnp.asarray(r.normal(size=(ls, d)), jnp.float32)
+    kbuf = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    vbuf = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    qhat = jnp.asarray(r.normal(size=d), jnp.float32)
+    kvals, kidx = ref.topk_prune_ref(kcache, d)
+    vvals, vidx = ref.topk_prune_ref(vcache, d)
+    out = swan_attention(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf,
+                         jnp.ones(ls), jnp.ones(b))
+    dense = ref.dense_attention_ref(
+        qhat, jnp.concatenate([kcache, kbuf]), jnp.concatenate([vcache, vbuf]),
+        jnp.ones(ls + b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_swan_attention_weights_sum_to_one():
+    """Uniform values expose the softmax normalisation: if v == const*scatter
+    of ones over all dims... simpler: zero sparse values and constant buffer
+    values give exactly the buffer-mass fraction."""
+    d, ls, b = 16, 8, 4
+    qhat = jnp.zeros(d)  # uniform scores
+    kvals = jnp.zeros((ls, 2)); kidx = jnp.zeros((ls, 2), jnp.int32)
+    vvals = jnp.zeros((ls, 2)); vidx = jnp.zeros((ls, 2), jnp.int32)
+    kbuf = jnp.zeros((b, d)); vbuf = jnp.ones((b, d))
+    out = np.asarray(swan_attention(qhat, kvals, kidx, vvals, vidx, kbuf, vbuf,
+                                    jnp.ones(ls), jnp.ones(b)))
+    # all ls+b slots have equal weight; value mass only from buffer
+    np.testing.assert_allclose(out, np.full(d, b / (ls + b)), rtol=1e-5)
+
+
+def test_swan_attention_heads_vmap():
+    h, d = 3, 32
+    base = [_attention_inputs(s, d=d) for s in range(h)]
+    stacked = [jnp.stack([b[i] for b in base]) for i in range(7)]
+    out = swan_attention_heads(*stacked, base[0][7], base[0][8])
+    for i in range(h):
+        args = list(base[i][:7]) + [base[0][7], base[0][8]]
+        np.testing.assert_allclose(np.asarray(out[i]),
+                                   np.asarray(ref.swan_attention_ref(*args)),
+                                   rtol=1e-5, atol=1e-5)

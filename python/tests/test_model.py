@@ -1,0 +1,118 @@
+# Model-level shape/semantic tests (dense forward, rope, masks, container IO).
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, corpus, model
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    cfg = common.NANO_GQA
+    params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 8).items()}
+    return cfg, params
+
+
+def test_dense_forward_shapes(gqa):
+    cfg, params = gqa
+    logits = model.dense_forward(params, cfg, jnp.zeros(10, jnp.int32))
+    assert logits.shape == (10, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_dense_forward_causality(gqa):
+    """Changing a future token must not affect earlier logits."""
+    cfg, params = gqa
+    t1 = jnp.asarray(np.arange(12) % cfg.vocab, jnp.int32)
+    t2 = t1.at[-1].set((t1[-1] + 3) % cfg.vocab)
+    l1 = np.asarray(model.dense_forward(params, cfg, t1))
+    l2 = np.asarray(model.dense_forward(params, cfg, t2))
+    np.testing.assert_allclose(l1[:-1], l2[:-1], atol=1e-5)
+    assert np.abs(l1[-1] - l2[-1]).max() > 1e-6
+
+
+def test_rope_position_dependence():
+    cfg = common.NANO_GQA
+    x = jnp.ones((1, 1, cfg.d_head))
+    a0 = model.rope_angles(cfg, jnp.asarray([0]))[:, None, :]
+    a5 = model.rope_angles(cfg, jnp.asarray([5]))[:, None, :]
+    r0 = np.asarray(model.apply_rope(x, a0))
+    r5 = np.asarray(model.apply_rope(x, a5))
+    assert np.abs(r0 - r5).max() > 1e-3
+    # position 0 is the identity rotation
+    np.testing.assert_allclose(r0, np.asarray(x), atol=1e-6)
+
+
+def test_rope_preserves_norm():
+    cfg = common.NANO_GQA
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 2, cfg.d_head)), jnp.float32)
+    ang = model.rope_angles(cfg, jnp.asarray([1, 9, 100]))[:, None, :]
+    r = np.asarray(model.apply_rope(x, ang))
+    np.testing.assert_allclose(np.linalg.norm(r, axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE scores depend only on relative distance: <R_m q, R_n k> is a
+    function of (m - n)."""
+    cfg = common.NANO_GQA
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, cfg.d_head)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, cfg.d_head)), jnp.float32)
+
+    def score(m, n):
+        qm = model.apply_rope(q, model.rope_angles(cfg, jnp.asarray([m]))[:, None, :])
+        kn = model.apply_rope(k, model.rope_angles(cfg, jnp.asarray([n]))[:, None, :])
+        return float(np.asarray(qm).reshape(-1) @ np.asarray(kn).reshape(-1))
+
+    assert abs(score(3, 1) - score(10, 8)) < 1e-3
+    assert abs(score(5, 5) - score(0, 0)) < 1e-3
+
+
+def test_tokenizer_roundtrip():
+    s = "the passkey is 12345 . def f(x): return x + 1"
+    ids = common.encode_text(s)
+    assert (ids >= 0).all() and (ids < common.VOCAB_SIZE).all()
+    assert common.decode_ids(ids) == s
+
+
+def test_corpus_deterministic_and_alphabet():
+    a = corpus.generate_text(5000, seed=3)
+    b = corpus.generate_text(5000, seed=3)
+    assert a == b
+    assert corpus.generate_text(5000, seed=4) != a
+    ids = common.encode_text(a)
+    assert len(ids) == 5000
+
+
+def test_tensor_container_roundtrip():
+    rng = np.random.default_rng(2)
+    tensors = {
+        "a": rng.normal(size=(3, 4)).astype(np.float32),
+        "b.idx": rng.integers(0, 10, size=(2, 2, 2)).astype(np.int32),
+        "scalarish": np.asarray([1.5], np.float32),
+    }
+    meta = {"name": "t", "n": 3}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        common.write_tensors(path, meta, tensors)
+        meta2, tensors2 = common.read_tensors(path)
+    assert meta2 == meta
+    assert set(tensors2) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(tensors2[k], tensors[k])
+        assert tensors2[k].dtype == tensors[k].dtype
+
+
+def test_param_name_orderings():
+    cfg = common.NANO_GQA
+    params = model.init_params(cfg, 0)
+    assert set(common.param_names(cfg)) <= set(params)
+    # swan names are disjoint additions except shared tensors
+    swan = common.swan_param_names(cfg)
+    assert "l0.wv_hat" in swan and "l0.p_qk" in swan
+    assert len(swan) == len(set(swan))

@@ -1,0 +1,97 @@
+# Lemma A.1 / A.2: the SWAN rotation is lossless before pruning.
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import calibrate, common, corpus, model
+
+
+@pytest.fixture(scope="module")
+def calibrated():
+    """Small randomly-initialised GQA + MHA models with real calibration."""
+    out = {}
+    for cfg in (common.NANO_GQA, common.NANO_MHA):
+        params = model.init_params(cfg, seed=1)
+        p_qk, p_vo = calibrate.compute_projections(params, cfg, seed=1)
+        sp = calibrate.absorb_weights(params, cfg, p_qk, p_vo)
+        out[cfg.name] = (cfg, params, p_qk, p_vo, sp)
+    return out
+
+
+@pytest.mark.parametrize("name", ["swan-nano-gqa", "swan-nano-mha"])
+def test_projections_are_orthogonal(calibrated, name):
+    cfg, _, p_qk, p_vo, _ = calibrated[name]
+    eye = np.eye(cfg.d_head)
+    for l in range(cfg.n_layers):
+        for j in range(cfg.n_kv_heads):
+            np.testing.assert_allclose(p_qk[l, j] @ p_qk[l, j].T, eye, atol=1e-4)
+            np.testing.assert_allclose(p_vo[l, j] @ p_vo[l, j].T, eye, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["swan-nano-gqa", "swan-nano-mha"])
+def test_lemma_a1_scores_invariant(calibrated, name):
+    """q K^T == (q P)(K P)^T for the calibrated P_QK."""
+    cfg, _, p_qk, _, _ = calibrated[name]
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(cfg.d_head,)).astype(np.float32)
+    kc = rng.normal(size=(10, cfg.d_head)).astype(np.float32)
+    p = p_qk[0, 0]
+    s = kc @ q
+    s_rot = (kc @ p) @ (q @ p)
+    np.testing.assert_allclose(s_rot, s, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["swan-nano-gqa", "swan-nano-mha"])
+def test_lemma_a2_full_model_lossless(calibrated, name):
+    """swan_prefill (rotated space, absorbed weights) reproduces the dense
+    model's logits exactly (up to float32 noise) — the only approximation in
+    SWAN is pruning."""
+    cfg, params, _, _, sp = calibrated[name]
+    t = 32
+    tokens = common.encode_text(corpus.generate_text(200, seed=2))[:t]
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    jsp = {k: jnp.asarray(v) for k, v in sp.items()}
+    dense = np.asarray(model.dense_forward(jp, cfg, jnp.asarray(tokens)))
+    pf, khat, vhat = model.swan_prefill(jsp, cfg, jnp.asarray(tokens),
+                                        jnp.ones(t, jnp.float32))
+    np.testing.assert_allclose(np.asarray(pf), dense[-1], rtol=5e-3, atol=5e-3)
+    assert khat.shape == (cfg.n_layers, cfg.n_kv_heads, t, cfg.d_head)
+
+
+@pytest.mark.parametrize("name", ["swan-nano-gqa"])
+def test_swan_decode_full_retention_equals_dense_decode(calibrated, name):
+    """Hybrid decode with k_active = d_h must equal the dense decode step."""
+    cfg, _, _, _, sp = calibrated[name]
+    from compile.kernels.topk_prune import topk_prune
+    jsp = {k: jnp.asarray(v) for k, v in sp.items()}
+    t, bufn, ls = 24, 8, 32
+    dh, nl, nkv = cfg.d_head, cfg.n_layers, cfg.n_kv_heads
+    tokens = common.encode_text(corpus.generate_text(120, seed=3))[:t]
+    _, khat, vhat = model.swan_prefill(jsp, cfg, jnp.asarray(tokens),
+                                       jnp.ones(t, jnp.float32))
+    khat, vhat = np.asarray(khat), np.asarray(vhat)
+
+    kc = np.zeros((nl, nkv, 32, dh), np.float32); kc[:, :, :t] = khat
+    vc = np.zeros((nl, nkv, 32, dh), np.float32); vc[:, :, :t] = vhat
+    cm = np.zeros(32, np.float32); cm[:t] = 1
+    dl, _, _ = model.dense_decode_step(jsp, cfg, jnp.int32(7), jnp.int32(t),
+                                       jnp.asarray(kc), jnp.asarray(vc),
+                                       jnp.asarray(cm))
+
+    nsp = t - bufn
+    kbuf = khat[:, :, nsp:t]; vbuf = vhat[:, :, nsp:t]
+    kvals = np.zeros((nl, nkv, ls, dh), np.float32); kidx = np.zeros((nl, nkv, ls, dh), np.int32)
+    vvals = np.zeros((nl, nkv, ls, dh), np.float32); vidx = np.zeros((nl, nkv, ls, dh), np.int32)
+    for l in range(nl):
+        for h in range(nkv):
+            kv, ki = topk_prune(jnp.asarray(khat[l, h, :nsp]), dh)
+            vv, vi = topk_prune(jnp.asarray(vhat[l, h, :nsp]), dh)
+            kvals[l, h, :nsp] = kv; kidx[l, h, :nsp] = ki
+            vvals[l, h, :nsp] = vv; vidx[l, h, :nsp] = vi
+    sm = np.zeros(ls, np.float32); sm[:nsp] = 1
+    sl, _, _ = model.swan_decode_step(
+        jsp, cfg, jnp.int32(7), jnp.int32(t),
+        *map(jnp.asarray, [kvals, kidx, vvals, vidx, kbuf, vbuf, sm,
+                           np.ones(bufn, np.float32)]))
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(dl),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,68 @@
+//! Bench: Eq. 2 computational break-even (paper §5.2 / Appendix A.2.1).
+//!
+//! Measures the rust decompression-free attention against dense attention
+//! over a sequence-length sweep and reports where the measured crossover
+//! falls relative to the closed-form prediction.  (In-repo harness;
+//! criterion is unavailable offline.)
+
+use swan::sparse::StorageMode;
+use swan::swan::attention::{dense_attention, swan_attention};
+use swan::swan::breakeven::breakeven_length;
+use swan::swan::hybrid_cache::{HybridCache, SwanParams};
+use swan::tensor::ops::vecmat;
+use swan::util::stats::{bench_batched, Summary};
+use swan::util::Pcg64;
+
+fn main() {
+    let d = 128usize;
+    let b = 128usize;
+    println!("# attention_breakeven (d_h={d}, buffer={b})");
+    println!(
+        "{:<8} {:<10} {:>14} {:>14} {:>8}",
+        "L", "k_active", "dense median", "swan median", "ratio"
+    );
+    let mut rng = Pcg64::new(7);
+    let q = rng.normal_vec(d);
+    let kc = rng.normal_vec(d);
+    let vc = rng.normal_vec(d);
+    let proj = rng.normal_vec(d * d);
+
+    for &k_active in &[32usize, 64, 96] {
+        let mut crossover = None;
+        for &l in &[64usize, 128, 256, 512, 1024, 2048, 4096, 8192] {
+            let kflat = rng.normal_vec(l * d);
+            let vflat = rng.normal_vec(l * d);
+            let mut out = vec![0.0f32; d];
+            let dense_t = bench_batched(3, 12, 4, || {
+                dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut out);
+                std::hint::black_box(&out);
+            });
+            let mut cache = HybridCache::new(d, SwanParams::new(k_active, b.min(l), StorageMode::F32));
+            for t in 0..l {
+                cache.append(&kflat[t * d..(t + 1) * d], &vflat[t * d..(t + 1) * d]);
+            }
+            let mut qr = vec![0.0f32; d];
+            let mut kr = vec![0.0f32; d];
+            let swan_t = bench_batched(3, 12, 4, || {
+                vecmat(&q, &proj, d, d, &mut qr);
+                vecmat(&kc, &proj, d, d, &mut kr);
+                swan_attention(&qr, &cache, &kr, &vc, &mut out);
+                std::hint::black_box(&out);
+            });
+            let ratio = swan_t.median_ns / dense_t.median_ns;
+            if ratio < 1.0 && crossover.is_none() {
+                crossover = Some(l);
+            }
+            println!(
+                "{l:<8} {k_active:<10} {:>14} {:>14} {ratio:>8.3}",
+                Summary::fmt_time(dense_t.median_ns),
+                Summary::fmt_time(swan_t.median_ns)
+            );
+        }
+        let formula = breakeven_length(d, b, k_active).unwrap();
+        println!(
+            "k={k_active}: measured crossover {} | formula L* = {formula:.0}\n",
+            crossover.map(|l| l.to_string()).unwrap_or_else(|| "not reached".into())
+        );
+    }
+}

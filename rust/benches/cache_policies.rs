@@ -1,0 +1,49 @@
+//! Bench: per-step attend+append cost of every cache policy at a fixed
+//! history length — the compute side of the related-work comparison
+//! (KIVI pays an explicit dequantization pass; SWAN does not).
+
+use swan::kvcache::{PolicyKind, CachePolicy};
+use swan::sparse::StorageMode;
+use swan::util::stats::{bench, Summary};
+use swan::util::Pcg64;
+
+fn main() {
+    let d = 128usize;
+    let hist = 1024usize;
+    println!("# cache_policies (d_h={d}, history={hist} tokens): attend cost/step");
+    let kinds = [
+        PolicyKind::Dense,
+        PolicyKind::Swan { k_active: 32, buffer: 128, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 64, buffer: 128, mode: StorageMode::F16 },
+        PolicyKind::Swan { k_active: 32, buffer: 128, mode: StorageMode::F8 },
+        PolicyKind::H2O { budget: 512, recent: 128 },
+        PolicyKind::Streaming { sinks: 4, window: 508 },
+        PolicyKind::Kivi { bits: 4, residual: 128 },
+        PolicyKind::Kivi { bits: 8, residual: 128 },
+    ];
+    let mut rng = Pcg64::new(1);
+    let stream: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..hist).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect();
+    let q = rng.normal_vec(d);
+    let kc = rng.normal_vec(d);
+    let vc = rng.normal_vec(d);
+
+    for kind in kinds {
+        let mut p: Box<dyn CachePolicy> = kind.build(d);
+        for (k, v) in &stream {
+            p.append(k, v);
+        }
+        let mut out = vec![0.0f32; d];
+        let t = bench(3, 25, || {
+            p.attend(&q, &kc, &vc, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{:<36} {:>12}   mem {:>10} ({} tokens retained)",
+            kind.label(),
+            Summary::fmt_time(t.median_ns),
+            swan::sparse::memory::human_bytes(p.storage_bytes()),
+            p.retained_tokens()
+        );
+    }
+}

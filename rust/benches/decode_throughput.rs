@@ -1,0 +1,71 @@
+//! Bench: PJRT decode-step latency per shape bucket, SWAN vs dense
+//! baseline graphs — the serving-path compute comparison (needs
+//! `make artifacts`).
+
+use swan::runtime::engine::{HostTensor, LoadedModel};
+use swan::util::stats::{bench, Summary};
+use swan::util::Pcg64;
+
+fn main() {
+    let dir = swan::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("decode_throughput: skipping (run `make artifacts` first)");
+        return;
+    }
+    let lm = LoadedModel::open(&dir, "swan-nano-gqa").expect("artifacts");
+    let arts = lm.store.model("swan-nano-gqa").unwrap();
+    let cfg = arts.config.clone();
+    let (nl, nkv, dh, buf) = (cfg.n_layers, cfg.n_kv_heads, cfg.d_head, arts.buf);
+    let mut rng = Pcg64::new(9);
+
+    println!("# decode_throughput (PJRT CPU, {} graphs)", arts.graphs.len());
+    for (l_cap, k) in arts.decode_buckets() {
+        let graph = format!("decode_l{l_cap}_k{k}");
+        let sp_shape = vec![nl, nkv, l_cap, k];
+        let spn = nl * nkv * l_cap * k;
+        let args = vec![
+            HostTensor::scalar_i32(5),
+            HostTensor::scalar_i32((l_cap / 2) as i32),
+            HostTensor::f32(rng.normal_vec(spn), sp_shape.clone()),
+            HostTensor::i32((0..spn).map(|i| (i % dh) as i32).collect(), sp_shape.clone()),
+            HostTensor::f32(rng.normal_vec(spn), sp_shape.clone()),
+            HostTensor::i32((0..spn).map(|i| (i % dh) as i32).collect(), sp_shape),
+            HostTensor::f32(rng.normal_vec(nl * nkv * buf * dh), vec![nl, nkv, buf, dh]),
+            HostTensor::f32(rng.normal_vec(nl * nkv * buf * dh), vec![nl, nkv, buf, dh]),
+            HostTensor::f32(vec![1.0; l_cap], vec![l_cap]),
+            HostTensor::f32(vec![1.0; buf], vec![buf]),
+        ];
+        // compile outside the timed region
+        lm.execute(&graph, &args).expect("warmup");
+        let t = bench(2, 20, || {
+            std::hint::black_box(lm.execute(&graph, &args).unwrap());
+        });
+        println!(
+            "{:<22} {:>12}/step  ({:>8.1} tok/s)",
+            graph,
+            Summary::fmt_time(t.median_ns),
+            1e9 / t.median_ns
+        );
+    }
+
+    // dense baseline graph
+    let l_cap = 512usize;
+    let graph = "decode_dense_l512";
+    let args = vec![
+        HostTensor::scalar_i32(5),
+        HostTensor::scalar_i32(256),
+        HostTensor::f32(rng.normal_vec(nl * nkv * l_cap * dh), vec![nl, nkv, l_cap, dh]),
+        HostTensor::f32(rng.normal_vec(nl * nkv * l_cap * dh), vec![nl, nkv, l_cap, dh]),
+        HostTensor::f32(vec![1.0; l_cap], vec![l_cap]),
+    ];
+    lm.execute(graph, &args).expect("warmup");
+    let t = bench(2, 20, || {
+        std::hint::black_box(lm.execute(graph, &args).unwrap());
+    });
+    println!(
+        "{:<22} {:>12}/step  ({:>8.1} tok/s)",
+        graph,
+        Summary::fmt_time(t.median_ns),
+        1e9 / t.median_ns
+    );
+}

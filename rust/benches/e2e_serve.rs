@@ -1,0 +1,83 @@
+//! Bench: end-to-end serving throughput — batched requests through the
+//! full coordinator (prefill graph + hybrid-cache decode + continuous
+//! batching), SWAN vs the dense-baseline serving mode.  Reports request
+//! latency, decode tok/s and KV memory savings (needs `make artifacts`).
+
+use swan::config::ServeConfig;
+use swan::coordinator::Engine;
+use swan::eval::corpus;
+use swan::sparse::StorageMode;
+use swan::util::Pcg64;
+
+fn run_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Result<String> {
+    let dir = swan::artifacts_dir();
+    let mut engine = Engine::new(&dir, cfg)?;
+    engine.warmup()?;
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        engine.submit_text(&prompt, max_new);
+    }
+    let responses = engine.run_to_completion()?;
+    let wall = t0.elapsed();
+    let total_decoded: usize = responses.iter().map(|r| r.stats.decode_steps).sum();
+    let mean_decode_tps: f64 =
+        responses.iter().map(|r| r.stats.decode_tps()).sum::<f64>() / responses.len() as f64;
+    let mean_saving: f64 =
+        responses.iter().map(|r| r.stats.memory_saving()).sum::<f64>() / responses.len() as f64;
+    let mean_prefill_ms: f64 = responses
+        .iter()
+        .map(|r| r.stats.prefill_time.as_secs_f64() * 1e3)
+        .sum::<f64>()
+        / responses.len() as f64;
+    Ok(format!(
+        "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s | per-seq {:>7.1} tok/s | \
+         prefill {:>6.1} ms | kv saving {:>5.1}%",
+        responses.len(),
+        wall.as_secs_f64(),
+        total_decoded as f64 / wall.as_secs_f64(),
+        mean_decode_tps,
+        mean_prefill_ms,
+        mean_saving * 100.0
+    ))
+}
+
+fn main() {
+    let dir = swan::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("e2e_serve: skipping (run `make artifacts` first)");
+        return;
+    }
+    let n = 8usize;
+    let max_new = 32usize;
+    println!("# e2e_serve ({n} requests, {max_new} new tokens each, ~180-char prompts)");
+    for (label, cfg) in [
+        ("dense baseline", ServeConfig { dense_baseline: true, ..Default::default() }),
+        (
+            "swan k=48 16-bit",
+            ServeConfig { k_active: 48, mode: StorageMode::F16, ..Default::default() },
+        ),
+        (
+            "swan k=32 16-bit",
+            ServeConfig { k_active: 32, mode: StorageMode::F16, ..Default::default() },
+        ),
+        (
+            "swan k=32 8-bit",
+            ServeConfig { k_active: 32, mode: StorageMode::F8, ..Default::default() },
+        ),
+        (
+            "swan k=16 8-bit",
+            ServeConfig { k_active: 16, mode: StorageMode::F8, ..Default::default() },
+        ),
+    ] {
+        match run_batch(cfg, n, max_new) {
+            Ok(row) => println!("{label:<18} {row}"),
+            Err(e) => println!("{label:<18} FAILED: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench/table: Fig 2a memory trade-off measured on *actual stored
+//! bytes* of a HybridCache (not just the closed form), plus the §1
+//! motivation calculator.
+
+use swan::sparse::memory::{compression_ratio, human_bytes, MemoryModel, StorageMode};
+use swan::swan::hybrid_cache::{HybridCache, SwanParams};
+use swan::util::Pcg64;
+
+fn main() {
+    let d = 128usize;
+    let n_tokens = 4096usize;
+    println!("# mem_tradeoff (d_h={d}, {n_tokens} tokens, buffer=128)");
+    println!(
+        "{:<10} {:<8} {:>14} {:>12} {:>12}",
+        "retention", "mode", "measured", "ratio", "formula"
+    );
+    let mut rng = Pcg64::new(2);
+    let stream: Vec<(Vec<f32>, Vec<f32>)> =
+        (0..n_tokens).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect();
+    for &mode in &[StorageMode::F16, StorageMode::F8] {
+        for &ret in &[0.9f64, 0.75, 0.66, 0.5, 0.3, 0.125] {
+            let k = (ret * d as f64).round() as usize;
+            let mut cache = HybridCache::new(d, SwanParams::new(k, 128, mode));
+            for (kv, vv) in &stream {
+                cache.append(kv, vv);
+            }
+            let dense = cache.dense_equiv_bytes();
+            let used = cache.storage_bytes();
+            println!(
+                "{:<10.3} {:<8} {:>14} {:>12.3} {:>12.3}",
+                ret,
+                mode.label(),
+                human_bytes(used),
+                used as f64 / dense as f64,
+                compression_ratio(d, k, mode),
+            );
+        }
+    }
+
+    println!("\n# §1 motivation (Llama-2 7B)");
+    let m = MemoryModel::llama2_7b();
+    println!(
+        "dense @32k/b16: {} (paper ~256 GB); swan k=64/16b: {}; k=64/8b: {}",
+        human_bytes(m.dense_bytes(32 * 1024, 16)),
+        human_bytes(m.swan_bytes(32 * 1024, 128, 64, StorageMode::F16) * 16),
+        human_bytes(m.swan_bytes(32 * 1024, 128, 64, StorageMode::F8) * 16),
+    );
+}

@@ -1,0 +1,39 @@
+//! Bench: the eviction-path winnowing (Algorithm 1 lines 7-11) —
+//! top-k selection + quantization, sort vs partial-select implementations.
+
+use swan::sparse::topk::{topk_indices, topk_indices_select};
+use swan::sparse::{SparseVec, StorageMode};
+use swan::util::stats::{bench_batched, Summary};
+use swan::util::Pcg64;
+
+fn main() {
+    println!("# prune_topk");
+    let mut rng = Pcg64::new(5);
+    for &d in &[64usize, 128] {
+        let rows: Vec<Vec<f32>> = (0..256).map(|_| rng.normal_vec(d)).collect();
+        for &k in &[d / 4, d / 2, 3 * d / 4] {
+            let sort_t = bench_batched(3, 15, 1, || {
+                for r in &rows {
+                    std::hint::black_box(topk_indices(r, k));
+                }
+            });
+            let sel_t = bench_batched(3, 15, 1, || {
+                for r in &rows {
+                    std::hint::black_box(topk_indices_select(r, k));
+                }
+            });
+            let full_t = bench_batched(3, 15, 1, || {
+                for r in &rows {
+                    std::hint::black_box(SparseVec::prune(r, k, StorageMode::F16));
+                }
+            });
+            println!(
+                "d={d:<4} k={k:<4} sort {:>12} | select {:>12} ({:.2}x) | prune+f16 {:>12}",
+                Summary::fmt_time(sort_t.median_ns / 256.0),
+                Summary::fmt_time(sel_t.median_ns / 256.0),
+                sort_t.median_ns / sel_t.median_ns,
+                Summary::fmt_time(full_t.median_ns / 256.0),
+            );
+        }
+    }
+}

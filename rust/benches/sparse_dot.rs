@@ -1,0 +1,75 @@
+//! Bench: the decompression-free primitives — sparse-dense score product
+//! and scatter-add output — vs their dense counterparts, across k_active.
+//! This is the per-token saving that Eq. 2's denominator (d_h - k) models.
+
+use swan::sparse::{SparseVec, StorageMode};
+use swan::tensor::ops::dot;
+use swan::util::stats::{bench_batched, Summary};
+use swan::util::Pcg64;
+
+fn main() {
+    let d = 128usize;
+    let n = 1024usize; // cache rows per iteration
+    let mut rng = Pcg64::new(3);
+    let q = rng.normal_vec(d);
+    let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+
+    println!("# sparse_dot (d_h={d}, {n} rows/iter)");
+    let mut out_acc = 0.0f32;
+    let dense_t = bench_batched(3, 15, 2, || {
+        let mut s = 0.0f32;
+        for r in &rows {
+            s += dot(r, &q);
+        }
+        out_acc += s;
+        std::hint::black_box(s);
+    });
+    println!(
+        "{:<28} {:>14}  (per row {:>10})",
+        "dense dot",
+        Summary::fmt_time(dense_t.median_ns),
+        Summary::fmt_time(dense_t.median_ns / n as f64)
+    );
+
+    for &k in &[16usize, 32, 64, 96, 128] {
+        let sparse: Vec<SparseVec> =
+            rows.iter().map(|r| SparseVec::prune(r, k, StorageMode::F32)).collect();
+        let t = bench_batched(3, 15, 2, || {
+            let mut s = 0.0f32;
+            for sv in &sparse {
+                s += sv.dot_dense(&q);
+            }
+            out_acc += s;
+            std::hint::black_box(s);
+        });
+        println!(
+            "{:<28} {:>14}  (per row {:>10}, vs dense {:.2}x)",
+            format!("sparse dot k={k}"),
+            Summary::fmt_time(t.median_ns),
+            Summary::fmt_time(t.median_ns / n as f64),
+            dense_t.median_ns / t.median_ns
+        );
+    }
+
+    // scatter-add output side
+    let w = 1.0 / n as f32;
+    for &k in &[16usize, 32, 64] {
+        let sparse: Vec<SparseVec> =
+            rows.iter().map(|r| SparseVec::prune(r, k, StorageMode::F32)).collect();
+        let mut acc = vec![0.0f32; d];
+        let t = bench_batched(3, 15, 2, || {
+            acc.iter_mut().for_each(|a| *a = 0.0);
+            for sv in &sparse {
+                sv.axpy_into(w, &mut acc);
+            }
+            std::hint::black_box(&acc);
+        });
+        println!(
+            "{:<28} {:>14}  (per row {:>10})",
+            format!("scatter-add k={k}"),
+            Summary::fmt_time(t.median_ns),
+            Summary::fmt_time(t.median_ns / n as f64)
+        );
+    }
+    std::hint::black_box(out_acc);
+}

@@ -1,0 +1,120 @@
+//! Minimal argument parser (clap is unavailable offline).
+//!
+//! Grammar: `swan <command> [positional...] [--flag [value]]...`.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut out = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                let value = if inline.is_some() {
+                    inline
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next()
+                } else {
+                    None
+                };
+                out.flags.insert(name, value);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.as_deref())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+}
+
+pub const USAGE: &str = "\
+swan — Sparse Winnowed Attention serving stack
+
+USAGE:
+  swan serve    [--model M] [--bind ADDR] [--k-active K] [--buffer B]
+                [--mode 16|8] [--max-batch N] [--mem-budget BYTES] [--dense]
+  swan generate <prompt...> [--model M] [--max-new N] [--k-active K]
+                [--mode 16|8] [--dense]
+  swan eval     [--model M] [--cases N]       run the task battery natively
+  swan repro    <fig2a|fig2b|fig3|fig4|fig5|fig6|table1|table2|table3|
+                 breakeven|motivation|all> [--cases N]
+  swan breakeven [--d-head D] [--buffer B]    Eq.2 break-even calculator
+  swan info                                   artifact + runtime summary
+
+Artifacts are found via $SWAN_ARTIFACTS or ./artifacts (run `make
+artifacts` first).";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_and_positionals() {
+        let a = parse("generate hello world --max-new 8");
+        assert_eq!(a.command, "generate");
+        assert_eq!(a.positional, vec!["hello", "world"]);
+        assert_eq!(a.get_usize("max-new", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn parses_flags_with_and_without_values() {
+        let a = parse("serve --dense --k-active 16 --bind=0.0.0.0:1234");
+        assert!(a.has("dense"));
+        assert_eq!(a.get("k-active"), Some("16"));
+        assert_eq!(a.get("bind"), Some("0.0.0.0:1234"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("serve --k-active nope");
+        assert!(a.get_usize("k-active", 1).is_err());
+    }
+
+    #[test]
+    fn missing_flag_uses_default() {
+        let a = parse("serve");
+        assert_eq!(a.get_usize("k-active", 32).unwrap(), 32);
+        assert_eq!(a.get_str("model", "m"), "m");
+    }
+}

@@ -1,0 +1,114 @@
+//! Configuration types for the serving stack and experiments.
+
+use crate::sparse::StorageMode;
+use crate::util::json::Json;
+
+/// Model hyper-parameters (mirrors `python/compile/common.ModelConfig`;
+/// parsed from the weights-container meta blob / manifest).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn group(&self) -> usize {
+        debug_assert_eq!(self.n_q_heads % self.n_kv_heads, 0);
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ModelConfig> {
+        let get_n = |k: &str| -> crate::Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("config missing field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("config missing name"))?
+                .to_string(),
+            d_model: get_n("d_model")?,
+            n_layers: get_n("n_layers")?,
+            n_q_heads: get_n("n_q_heads")?,
+            n_kv_heads: get_n("n_kv_heads")?,
+            d_head: get_n("d_head")?,
+            d_ff: get_n("d_ff")?,
+            vocab: get_n("vocab")?,
+            rope_theta: j.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0) as f32,
+            norm_eps: j.get("norm_eps").and_then(Json::as_f64).unwrap_or(1e-5) as f32,
+        })
+    }
+}
+
+/// Serving engine configuration (coordinator defaults).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Model artifact name (e.g. "swan-nano-gqa").
+    pub model: String,
+    /// SWAN compression: retained dims on eviction.
+    pub k_active: usize,
+    /// Dense buffer tokens.
+    pub buffer: usize,
+    /// Sparse value storage.
+    pub mode: StorageMode,
+    /// Max concurrent sequences in a decode batch.
+    pub max_batch: usize,
+    /// Max new tokens per request unless the request overrides.
+    pub max_new_tokens: usize,
+    /// KV-cache memory budget (bytes) for admission control; 0 = unlimited.
+    pub mem_budget: usize,
+    /// Serve with the dense baseline instead of SWAN (for A/B runs).
+    pub dense_baseline: bool,
+    /// TCP bind address for `swan serve`.
+    pub bind: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            model: "swan-nano-gqa".into(),
+            k_active: 32,
+            buffer: 64,
+            mode: StorageMode::F16,
+            max_batch: 8,
+            max_new_tokens: 64,
+            mem_budget: 0,
+            dense_baseline: false,
+            bind: "127.0.0.1:7877".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_config_from_json() {
+        let j = Json::parse(
+            r#"{"name":"m","d_model":256,"n_layers":4,"n_q_heads":4,
+                "n_kv_heads":1,"d_head":64,"d_ff":1024,"vocab":96,
+                "rope_theta":10000.0,"norm_eps":1e-5}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.group(), 4);
+        assert_eq!(c.d_head, 64);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"name":"m"}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

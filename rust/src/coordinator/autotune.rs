@@ -1,0 +1,107 @@
+//! Runtime compression auto-tuner.
+//!
+//! SWAN's `k_active` is runtime-tunable (the paper's key operational
+//! flexibility): this controller watches live KV memory against a budget
+//! and recommends the largest available compression bucket that keeps
+//! projected usage under the high watermark — operators can also pin the
+//! level manually (`swan serve --k-active`, or `SET k_active` over TCP).
+
+/// Hysteresis thresholds as fractions of the budget.
+const HIGH_WATERMARK: f64 = 0.85;
+const LOW_WATERMARK: f64 = 0.60;
+
+#[derive(Clone, Debug)]
+pub struct AutoTuner {
+    /// KV byte budget (0 disables tuning).
+    pub budget: usize,
+    /// Available k buckets, ascending (from the compiled graphs).
+    pub k_buckets: Vec<usize>,
+    /// Currently recommended bucket index.
+    idx: usize,
+}
+
+impl AutoTuner {
+    /// Start at the largest (least compressed) bucket.
+    pub fn new(budget: usize, mut k_buckets: Vec<usize>) -> AutoTuner {
+        k_buckets.sort_unstable();
+        k_buckets.dedup();
+        assert!(!k_buckets.is_empty());
+        let idx = k_buckets.len() - 1;
+        AutoTuner { budget, k_buckets, idx }
+    }
+
+    pub fn current_k(&self) -> usize {
+        self.k_buckets[self.idx]
+    }
+
+    /// Pin to the bucket closest to `k` (manual override).
+    pub fn pin(&mut self, k: usize) {
+        self.idx = self
+            .k_buckets
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &b)| b.abs_diff(k))
+            .map(|(i, _)| i)
+            .unwrap();
+    }
+
+    /// Observe live usage; returns the (possibly changed) recommended k.
+    pub fn observe(&mut self, live_bytes: usize) -> usize {
+        if self.budget == 0 {
+            return self.current_k();
+        }
+        let frac = live_bytes as f64 / self.budget as f64;
+        if frac > HIGH_WATERMARK && self.idx > 0 {
+            self.idx -= 1; // compress harder
+        } else if frac < LOW_WATERMARK && self.idx + 1 < self.k_buckets.len() {
+            self.idx += 1; // relax toward quality
+        }
+        self.current_k()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_largest() {
+        let t = AutoTuner::new(1000, vec![32, 16, 48]);
+        assert_eq!(t.current_k(), 48);
+    }
+
+    #[test]
+    fn tightens_under_pressure_relaxes_when_free() {
+        let mut t = AutoTuner::new(1000, vec![16, 32, 48]);
+        assert_eq!(t.observe(900), 32);
+        assert_eq!(t.observe(900), 16);
+        assert_eq!(t.observe(900), 16); // floor
+        assert_eq!(t.observe(100), 32);
+        assert_eq!(t.observe(100), 48);
+        assert_eq!(t.observe(100), 48); // ceiling
+    }
+
+    #[test]
+    fn hysteresis_band_is_stable() {
+        let mut t = AutoTuner::new(1000, vec![16, 32, 48]);
+        t.observe(900); // -> 32
+        // inside the band: no change either way
+        assert_eq!(t.observe(700), 32);
+        assert_eq!(t.observe(700), 32);
+    }
+
+    #[test]
+    fn disabled_budget_never_moves() {
+        let mut t = AutoTuner::new(0, vec![16, 32, 48]);
+        assert_eq!(t.observe(usize::MAX / 2), 48);
+    }
+
+    #[test]
+    fn pin_selects_nearest() {
+        let mut t = AutoTuner::new(0, vec![16, 32, 48]);
+        t.pin(30);
+        assert_eq!(t.current_k(), 32);
+        t.pin(100);
+        assert_eq!(t.current_k(), 48);
+    }
+}

@@ -1,0 +1,511 @@
+//! The serving engine: PJRT-backed prefill/decode over hybrid caches with
+//! iteration-level continuous batching.
+//!
+//! One [`Engine::step`] performs: (1) admission — pop admissible requests
+//! from the scheduler, run their prefill graph, winnow the history into a
+//! fresh [`SeqCache`]; (2) one decode iteration — a single decode-graph
+//! call per active sequence (the batch is re-formed every iteration, so
+//! short and long requests interleave without head-of-line blocking);
+//! (3) completion — finished sequences are emitted with their stats.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::config::ServeConfig;
+use crate::coordinator::autotune::AutoTuner;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::sequence::{CacheShape, SeqCache};
+use crate::runtime::engine::{ArgView, HostTensor, LoadedModel};
+
+use crate::tensor::ops::{argmax, softmax_inplace};
+use crate::util::Pcg64;
+
+/// Backend cache of one active sequence: SWAN hybrid or dense baseline.
+enum SeqBackend {
+    Swan(SeqCache),
+    Dense { k: Vec<f32>, v: Vec<f32>, len: usize, cap: usize },
+}
+
+struct ActiveSeq {
+    req: Request,
+    backend: SeqBackend,
+    produced: Vec<u32>,
+    next_token: u32,
+    stats: RequestStats,
+    rng: Pcg64,
+    decode_graph: String,
+}
+
+/// The serving engine (single-threaded stepper; wrap in a thread for the
+/// TCP server).
+pub struct Engine {
+    pub lm: LoadedModel,
+    pub cfg: ServeConfig,
+    pub metrics: Arc<Metrics>,
+    scheduler: Scheduler,
+    tuner: AutoTuner,
+    active: Vec<ActiveSeq>,
+    finished: VecDeque<Response>,
+    shape: CacheShape,
+    decode_l_buckets: Vec<usize>,
+    prefill_buckets: Vec<usize>,
+    next_id: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Engine> {
+        let lm = LoadedModel::open(artifacts_dir, &cfg.model)
+            .with_context(|| format!("loading model {}", cfg.model))?;
+        let arts = lm.store.model(&cfg.model)?;
+        let mc = &arts.config;
+        let shape = CacheShape {
+            n_layers: mc.n_layers,
+            n_kv: mc.n_kv_heads,
+            d_head: mc.d_head,
+            buf_cap: arts.buf,
+        };
+        let buckets = arts.decode_buckets();
+        let mut k_buckets: Vec<usize> = buckets.iter().map(|&(_, k)| k).collect();
+        k_buckets.sort_unstable();
+        k_buckets.dedup();
+        anyhow::ensure!(!k_buckets.is_empty(), "no decode graphs in manifest");
+        let mut decode_l_buckets: Vec<usize> = buckets.iter().map(|&(l, _)| l).collect();
+        decode_l_buckets.sort_unstable();
+        decode_l_buckets.dedup();
+        let mut tuner = AutoTuner::new(cfg.mem_budget, k_buckets);
+        tuner.pin(cfg.k_active);
+        Ok(Engine {
+            shape,
+            decode_l_buckets,
+            prefill_buckets: arts.prefill_buckets(),
+            scheduler: Scheduler::new(cfg.max_batch, cfg.mem_budget),
+            tuner,
+            active: Vec::new(),
+            finished: VecDeque::new(),
+            metrics: Arc::new(Metrics::default()),
+            next_id: 1,
+            lm,
+            cfg,
+        })
+    }
+
+    /// Pre-compile the graphs the engine will hit (optional warmup).
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        let arts = self.lm.store.model(&self.cfg.model)?;
+        let k = self.tuner.current_k();
+        for (name, meta) in &arts.graphs {
+            let is_needed = name.starts_with("prefill_")
+                || name == &format!("decode_l{}_k{k}", self.decode_l_buckets[0])
+                || (self.cfg.dense_baseline && name.starts_with("decode_dense"));
+            if is_needed {
+                self.lm.runtime.warmup(&self.cfg.model, name, meta)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Change the compression level for newly admitted sequences.
+    pub fn set_k_active(&mut self, k: usize) {
+        self.tuner.pin(k);
+    }
+
+    pub fn current_k_active(&self) -> usize {
+        self.tuner.current_k()
+    }
+
+    /// Submit a request; returns its id.
+    pub fn submit(&mut self, mut req: Request) -> u64 {
+        if req.id == 0 {
+            req.id = self.next_id;
+        }
+        self.next_id = self.next_id.max(req.id) + 1;
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        self.scheduler.enqueue(req);
+        self.next_id - 1
+    }
+
+    pub fn submit_text(&mut self, text: &str, max_new: usize) -> u64 {
+        let id = self.next_id;
+        self.submit(Request::from_text(id, text, max_new))
+    }
+
+    /// Live KV bytes across active sequences.
+    pub fn live_cache_bytes(&self) -> usize {
+        self.active
+            .iter()
+            .map(|s| match &s.backend {
+                SeqBackend::Swan(c) => c.storage_bytes(),
+                SeqBackend::Dense { len, .. } => {
+                    2 * self.shape.n_layers * self.shape.n_kv * self.shape.d_head * 2 * len
+                }
+            })
+            .sum()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.active.is_empty() || self.scheduler.queue_len() > 0
+    }
+
+    pub fn pop_finished(&mut self) -> Option<Response> {
+        self.finished.pop_front()
+    }
+
+    /// One engine iteration: admit, decode every active sequence once,
+    /// retire finished sequences.
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        self.admit()?;
+        self.decode_iteration()?;
+        Ok(())
+    }
+
+    /// Run until all queued + active work is done; returns responses in
+    /// completion order.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<Response>> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            self.step()?;
+            while let Some(r) = self.pop_finished() {
+                out.push(r);
+            }
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    fn admit(&mut self) -> anyhow::Result<()> {
+        let live = self.live_cache_bytes();
+        let k_now = {
+            let t = &mut self.tuner;
+            t.observe(live)
+        };
+        let shape = self.shape;
+        let mode = self.cfg.mode;
+        let buf = shape.buf_cap;
+        loop {
+            let proj = |req: &Request| {
+                let sparse_b =
+                    2 * shape.n_layers * shape.n_kv * mode.vector_bytes(k_now);
+                let dense_b = 2 * shape.n_layers * shape.n_kv * shape.d_head * 2;
+                Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
+            };
+            let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
+                break;
+            };
+            let queue_time = pending.enqueued.elapsed();
+            match self.prefill(pending.req, k_now, queue_time) {
+                Ok(seq) => self.active.push(seq),
+                Err(e) => {
+                    self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("prefill failed: {e:#}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn prefill(&mut self, req: Request, k_active: usize, queue_time: std::time::Duration) -> anyhow::Result<ActiveSeq> {
+        let t0 = Instant::now();
+        let prompt = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
+        let cap = self
+            .prefill_buckets
+            .iter()
+            .copied()
+            .find(|&t| t >= prompt.len())
+            .or(self.prefill_buckets.last().copied())
+            .context("no prefill graphs")?;
+        // prompts longer than the largest bucket keep their suffix (the
+        // bucket limit is a compile-time artifact knob, not a model limit)
+        let prompt: Vec<u32> =
+            prompt.iter().skip(prompt.len().saturating_sub(cap)).copied().collect();
+
+        let mut tokens = vec![0i32; cap];
+        let mut tmask = vec![0.0f32; cap];
+        for (i, &t) in prompt.iter().enumerate() {
+            tokens[i] = t as i32;
+            tmask[i] = 1.0;
+        }
+        let outs = self.lm.execute(
+            &format!("prefill_t{cap}"),
+            &[
+                HostTensor::i32(tokens, vec![cap]),
+                HostTensor::f32(tmask, vec![cap]),
+            ],
+        )?;
+        let logits = outs[0].as_f32()?.to_vec();
+        let khat = outs[1].as_f32()?;
+        let vhat = outs[2].as_f32()?;
+
+        let mut stats = RequestStats { queue_time, ..Default::default() };
+        stats.prefill_time = t0.elapsed();
+        self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
+        self.metrics.prefill_tokens.fetch_add(prompt.len() as u64, Ordering::Relaxed);
+
+        let backend = if self.cfg.dense_baseline {
+            let dense_cap = 512; // decode_dense_l512 bucket
+            let heads = self.shape.n_layers * self.shape.n_kv;
+            let dh = self.shape.d_head;
+            let mut k = vec![0.0f32; heads * dense_cap * dh];
+            let mut v = vec![0.0f32; heads * dense_cap * dh];
+            for hh in 0..heads {
+                for t in 0..prompt.len() {
+                    let src = (hh * cap + t) * dh;
+                    let dst = (hh * dense_cap + t) * dh;
+                    k[dst..dst + dh].copy_from_slice(&khat[src..src + dh]);
+                    v[dst..dst + dh].copy_from_slice(&vhat[src..src + dh]);
+                }
+            }
+            SeqBackend::Dense { k, v, len: prompt.len(), cap: dense_cap }
+        } else {
+            let sparse_need = prompt.len().saturating_sub(self.shape.buf_cap);
+            let l_cap = self
+                .decode_l_buckets
+                .iter()
+                .copied()
+                .find(|&l| l >= sparse_need + 1)
+                .or(self.decode_l_buckets.last().copied())
+                .context("no decode buckets")?;
+            let mut cache = SeqCache::new(self.shape, l_cap, k_active, self.cfg.mode);
+            cache.load_prefill(khat, vhat, cap, prompt.len());
+            SeqBackend::Swan(cache)
+        };
+
+        let next_token = sample(&logits, req.temperature, &mut Pcg64::new(req.id));
+        Ok(ActiveSeq {
+            rng: Pcg64::new(req.id ^ x5wan_seed()),
+            decode_graph: String::new(),
+            produced: vec![next_token],
+            next_token,
+            stats,
+            backend,
+            req,
+        })
+    }
+
+    fn decode_iteration(&mut self) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < self.active.len() {
+            let done = self.decode_one(i)?;
+            if done {
+                let seq = self.active.swap_remove(i);
+                let resp = finish(seq);
+                self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                self.finished.push_back(resp);
+            } else {
+                i += 1;
+            }
+        }
+        // metrics snapshot of live cache
+        self.metrics.cache_bytes.store(self.live_cache_bytes(), Ordering::Relaxed);
+        let dense_equiv: usize = self
+            .active
+            .iter()
+            .map(|s| match &s.backend {
+                SeqBackend::Swan(c) => c.dense_equiv_bytes(),
+                SeqBackend::Dense { len, .. } => {
+                    2 * self.shape.n_layers * self.shape.n_kv * self.shape.d_head * 2 * len
+                }
+            })
+            .sum();
+        self.metrics.dense_equiv_bytes.store(dense_equiv, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// One decode step for sequence `i`; returns true when finished.
+    fn decode_one(&mut self, i: usize) -> anyhow::Result<bool> {
+        let t0 = Instant::now();
+        let shape = self.shape;
+        let seq = &mut self.active[i];
+        if seq.produced.len() >= seq.req.max_new_tokens {
+            return Ok(true);
+        }
+        if let Some(stop) = seq.req.stop_token {
+            if seq.next_token == stop {
+                return Ok(true);
+            }
+        }
+
+        // SWAN_CLONE_ARGS=1 forces the pre-optimization clone-per-step
+        // path (kept for the §Perf before/after measurement).
+        let clone_args = std::env::var("SWAN_CLONE_ARGS").is_ok();
+        let outs = match &mut seq.backend {
+            SeqBackend::Swan(cache) => {
+                if cache.needs_growth() {
+                    let next = self
+                        .decode_l_buckets
+                        .iter()
+                        .copied()
+                        .find(|&l| l > cache.l_cap);
+                    match next {
+                        Some(l) => cache.grow(l),
+                        None => return Ok(true), // length limit reached
+                    }
+                }
+                let nl = shape.n_layers;
+                let nkv = shape.n_kv;
+                let graph = format!("decode_l{}_k{}", cache.l_cap, cache.k_active);
+                seq.decode_graph = graph.clone();
+                let sp_shape = vec![nl, nkv, cache.l_cap, cache.k_active];
+                let buf_shape = vec![nl, nkv, shape.buf_cap, shape.d_head];
+                let tok = [seq.next_token as i32];
+                let pos = [cache.pos as i32];
+                let smask = cache.smask();
+                let bmask = cache.bmask();
+                let scalar: [usize; 0] = [];
+                let l_shape = [cache.l_cap];
+                let b_shape = [shape.buf_cap];
+                let views = [
+                    ArgView::I32(&tok, &scalar),
+                    ArgView::I32(&pos, &scalar),
+                    ArgView::F32(&cache.sp_kvals, &sp_shape),
+                    ArgView::I32(&cache.sp_kidx, &sp_shape),
+                    ArgView::F32(&cache.sp_vvals, &sp_shape),
+                    ArgView::I32(&cache.sp_vidx, &sp_shape),
+                    ArgView::F32(&cache.kbuf, &buf_shape),
+                    ArgView::F32(&cache.vbuf, &buf_shape),
+                    ArgView::F32(&smask, &l_shape),
+                    ArgView::F32(&bmask, &b_shape),
+                ];
+                if clone_args {
+                    let args = vec![
+                        HostTensor::scalar_i32(seq.next_token as i32),
+                        HostTensor::scalar_i32(cache.pos as i32),
+                        HostTensor::f32(cache.sp_kvals.clone(), sp_shape.clone()),
+                        HostTensor::i32(cache.sp_kidx.clone(), sp_shape.clone()),
+                        HostTensor::f32(cache.sp_vvals.clone(), sp_shape.clone()),
+                        HostTensor::i32(cache.sp_vidx.clone(), sp_shape.clone()),
+                        HostTensor::f32(cache.kbuf.clone(), buf_shape.clone()),
+                        HostTensor::f32(cache.vbuf.clone(), buf_shape.clone()),
+                        HostTensor::f32(smask.clone(), vec![cache.l_cap]),
+                        HostTensor::f32(bmask.clone(), vec![shape.buf_cap]),
+                    ];
+                    self.lm.execute(&graph, &args)?
+                } else {
+                    self.lm.execute_views(&graph, &views)?
+                }
+            }
+            SeqBackend::Dense { k, v, len, cap } => {
+                if *len >= *cap {
+                    return Ok(true);
+                }
+                let nl = shape.n_layers;
+                let nkv = shape.n_kv;
+                let graph = format!("decode_dense_l{cap}");
+                seq.decode_graph = graph.clone();
+                let mut cmask = vec![0.0f32; *cap];
+                cmask[..*len].iter_mut().for_each(|x| *x = 1.0);
+                let tok = [seq.next_token as i32];
+                let pos = [*len as i32];
+                let scalar: [usize; 0] = [];
+                let kv_shape = vec![nl, nkv, *cap, shape.d_head];
+                let c_shape = [*cap];
+                let views = [
+                    ArgView::I32(&tok, &scalar),
+                    ArgView::I32(&pos, &scalar),
+                    ArgView::F32(k, &kv_shape),
+                    ArgView::F32(v, &kv_shape),
+                    ArgView::F32(&cmask, &c_shape),
+                ];
+                self.lm.execute_views(&graph, &views)?
+            }
+        };
+        let logits = outs[0].as_f32()?;
+        let khat = outs[1].as_f32()?;
+        let vhat = outs[2].as_f32()?;
+
+        match &mut seq.backend {
+            SeqBackend::Swan(cache) => cache.append(khat, vhat),
+            SeqBackend::Dense { k, v, len, cap } => {
+                let dh = shape.d_head;
+                let heads = shape.n_layers * shape.n_kv;
+                for hh in 0..heads {
+                    let dst = (hh * *cap + *len) * dh;
+                    k[dst..dst + dh].copy_from_slice(&khat[hh * dh..(hh + 1) * dh]);
+                    v[dst..dst + dh].copy_from_slice(&vhat[hh * dh..(hh + 1) * dh]);
+                }
+                *len += 1;
+            }
+        }
+
+        let next = sample(logits, seq.req.temperature, &mut seq.rng);
+        seq.next_token = next;
+        seq.produced.push(next);
+        seq.stats.decode_steps += 1;
+        seq.stats.decode_time += t0.elapsed();
+        let bytes = match &seq.backend {
+            SeqBackend::Swan(c) => c.storage_bytes(),
+            SeqBackend::Dense { len, .. } => {
+                2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
+            }
+        };
+        seq.stats.peak_cache_bytes = seq.stats.peak_cache_bytes.max(bytes);
+        seq.stats.dense_equiv_bytes = match &seq.backend {
+            SeqBackend::Swan(c) => c.dense_equiv_bytes(),
+            SeqBackend::Dense { len, .. } => {
+                2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
+            }
+        };
+        self.metrics.decode_step_ns.record(t0.elapsed().as_nanos() as f64);
+        self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
+        Ok(false)
+    }
+}
+
+fn finish(seq: ActiveSeq) -> Response {
+    Response {
+        id: seq.req.id,
+        text: decode_tokens(&seq.produced),
+        tokens: seq.produced,
+        stats: seq.stats,
+    }
+}
+
+fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    let mut p: Vec<f32> = logits.iter().map(|l| l / temperature).collect();
+    softmax_inplace(&mut p);
+    let mut u = rng.next_f32();
+    for (i, &pi) in p.iter().enumerate() {
+        if u < pi {
+            return i as u32;
+        }
+        u -= pi;
+    }
+    (p.len() - 1) as u32
+}
+
+#[allow(non_snake_case)]
+fn x5wan_seed() -> u64 {
+    0x53_57_41_4e // "SWAN"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_greedy_and_temperature() {
+        let logits = vec![0.0f32, 5.0, 1.0];
+        let mut rng = Pcg64::new(0);
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+        // high temperature explores
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample(&logits, 5.0, &mut rng));
+        }
+        assert!(seen.len() > 1);
+    }
+
+    // Engine integration tests (needing artifacts) live in
+    // rust/tests/serve_integration.rs.
+}

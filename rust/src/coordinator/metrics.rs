@@ -1,0 +1,122 @@
+//! Engine-level metrics: counters and latency reservoirs, shared across
+//! scheduler threads.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Fixed-size latency reservoir (keeps the most recent N samples).
+pub struct Reservoir {
+    samples: Mutex<Vec<f64>>,
+    cap: usize,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        Reservoir { samples: Mutex::new(Vec::with_capacity(cap)), cap }
+    }
+
+    pub fn record(&self, ns: f64) {
+        let mut s = self.samples.lock().unwrap();
+        if s.len() == self.cap {
+            s.remove(0);
+        }
+        s.push(ns);
+    }
+
+    pub fn summary(&self) -> Option<crate::util::stats::Summary> {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::Summary::from_ns(s.clone()))
+        }
+    }
+}
+
+/// Serving metrics.
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_tokens: AtomicU64,
+    pub cache_bytes: AtomicUsize,
+    pub dense_equiv_bytes: AtomicUsize,
+    pub prefill_ns: Reservoir,
+    pub decode_step_ns: Reservoir,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            decode_tokens: AtomicU64::new(0),
+            cache_bytes: AtomicUsize::new(0),
+            dense_equiv_bytes: AtomicUsize::new(0),
+            prefill_ns: Reservoir::new(1024),
+            decode_step_ns: Reservoir::new(4096),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests: submitted={} completed={} rejected={}\n",
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+        ));
+        out.push_str(&format!(
+            "tokens: prefill={} decode={}\n",
+            self.prefill_tokens.load(Ordering::Relaxed),
+            self.decode_tokens.load(Ordering::Relaxed),
+        ));
+        let used = self.cache_bytes.load(Ordering::Relaxed);
+        let dense = self.dense_equiv_bytes.load(Ordering::Relaxed);
+        let saving = if dense > 0 { 100.0 * (1.0 - used as f64 / dense as f64) } else { 0.0 };
+        out.push_str(&format!(
+            "kv-cache: {} live (dense-equiv {}, saving {saving:.1}%)\n",
+            crate::sparse::memory::human_bytes(used),
+            crate::sparse::memory::human_bytes(dense),
+        ));
+        if let Some(s) = self.prefill_ns.summary() {
+            out.push_str(&format!("prefill:     {}\n", s.row("")));
+        }
+        if let Some(s) = self.decode_step_ns.summary() {
+            out.push_str(&format!("decode-step: {}\n", s.row("")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_caps() {
+        let r = Reservoir::new(3);
+        for i in 0..10 {
+            r.record(i as f64);
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min_ns, 7.0);
+    }
+
+    #[test]
+    fn snapshot_renders() {
+        let m = Metrics::default();
+        m.requests_submitted.store(5, Ordering::Relaxed);
+        m.cache_bytes.store(512, Ordering::Relaxed);
+        m.dense_equiv_bytes.store(1024, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!(s.contains("submitted=5"));
+        assert!(s.contains("saving 50.0%"));
+    }
+}

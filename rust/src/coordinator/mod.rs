@@ -1,0 +1,26 @@
+//! Layer-3 serving coordinator.
+//!
+//! The request path is rust-only: requests enter via [`engine::Engine`]
+//! (in-process) or the TCP front-end in [`crate::server`]; the scheduler
+//! admits them (admission control against a KV-memory budget), runs
+//! prefill on the AOT PJRT graphs, then interleaves decode steps across
+//! active sequences (iteration-level continuous batching, as in
+//! Orca/vLLM).  Each sequence's hybrid cache lives in
+//! [`sequence::SeqCache`]: a dense recency buffer plus winnowed sparse
+//! arrays shaped for the compiled shape buckets.
+//!
+//! Runtime compression tuning: [`engine::Engine::set_k_active`] re-points
+//! the pruner for newly admitted sequences and the autotuner
+//! ([`autotune::AutoTuner`]) lowers/raises the level under memory pressure.
+
+pub mod autotune;
+pub mod pool;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod sequence;
+
+pub use engine::Engine;
+pub use metrics::Metrics;
+pub use request::{Request, Response};

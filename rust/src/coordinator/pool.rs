@@ -1,0 +1,174 @@
+//! Paged KV-cache block pool (PagedAttention-style, Kwon et al. 2023).
+//!
+//! The paper positions SWAN as orthogonal to system-level memory managers
+//! like PagedAttention: SWAN shrinks the bytes per token, paging removes
+//! fragmentation across sequences.  This pool composes the two: fixed-size
+//! byte blocks are leased to sequences, and because SWAN's winnowed tokens
+//! occupy `mode.vector_bytes(k)` bytes instead of `2·d_h`, the same pool
+//! holds proportionally more tokens.  The serving engine uses it for
+//! admission accounting; `repro motivation` reports the composition.
+
+use crate::sparse::StorageMode;
+
+/// A fixed-size block pool with per-sequence leases.
+pub struct BlockPool {
+    pub block_bytes: usize,
+    pub n_blocks: usize,
+    free: Vec<u32>,
+    /// lease id -> blocks held
+    leases: std::collections::HashMap<u64, Vec<u32>>,
+    next_lease: u64,
+}
+
+/// Errors from the pool.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PoolError {
+    #[error("pool exhausted: requested {requested} blocks, {available} free")]
+    Exhausted { requested: usize, available: usize },
+    #[error("unknown lease {0}")]
+    UnknownLease(u64),
+}
+
+impl BlockPool {
+    pub fn new(block_bytes: usize, n_blocks: usize) -> BlockPool {
+        assert!(block_bytes > 0 && n_blocks > 0);
+        BlockPool {
+            block_bytes,
+            n_blocks,
+            free: (0..n_blocks as u32).rev().collect(),
+            leases: std::collections::HashMap::new(),
+            next_lease: 1,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.n_blocks as f64
+    }
+
+    /// Blocks needed for `bytes` of cache.
+    pub fn blocks_for(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.block_bytes)
+    }
+
+    /// Open a lease with an initial reservation.
+    pub fn lease(&mut self, bytes: usize) -> Result<u64, PoolError> {
+        let need = self.blocks_for(bytes);
+        if need > self.free.len() {
+            return Err(PoolError::Exhausted { requested: need, available: self.free.len() });
+        }
+        let id = self.next_lease;
+        self.next_lease += 1;
+        let blocks: Vec<u32> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.leases.insert(id, blocks);
+        Ok(id)
+    }
+
+    /// Grow a lease to cover `total_bytes` (no-op if already covered).
+    pub fn grow(&mut self, lease: u64, total_bytes: usize) -> Result<(), PoolError> {
+        let need = self.blocks_for(total_bytes);
+        let have = self.leases.get(&lease).ok_or(PoolError::UnknownLease(lease))?.len();
+        if need <= have {
+            return Ok(());
+        }
+        let extra = need - have;
+        if extra > self.free.len() {
+            return Err(PoolError::Exhausted { requested: extra, available: self.free.len() });
+        }
+        let blocks = self.leases.get_mut(&lease).unwrap();
+        for _ in 0..extra {
+            blocks.push(self.free.pop().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Release a lease, returning its blocks to the pool.
+    pub fn release(&mut self, lease: u64) -> Result<(), PoolError> {
+        let blocks = self.leases.remove(&lease).ok_or(PoolError::UnknownLease(lease))?;
+        self.free.extend(blocks);
+        Ok(())
+    }
+
+    /// Tokens one block holds under a given SWAN setting (vs dense).
+    pub fn tokens_per_block(&self, d_h: usize, heads: usize, k_active: usize,
+                            mode: StorageMode, dense: bool) -> usize {
+        let per_token = if dense {
+            2 * heads * d_h * 2
+        } else {
+            2 * heads * mode.vector_bytes(k_active)
+        };
+        self.block_bytes / per_token.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_grow_release_cycle() {
+        let mut p = BlockPool::new(1024, 8);
+        let a = p.lease(3000).unwrap(); // 3 blocks
+        assert_eq!(p.used_blocks(), 3);
+        p.grow(a, 5000).unwrap(); // 5 blocks total
+        assert_eq!(p.used_blocks(), 5);
+        p.grow(a, 100).unwrap(); // shrink request is a no-op
+        assert_eq!(p.used_blocks(), 5);
+        p.release(a).unwrap();
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn exhaustion_is_reported_not_panicked() {
+        let mut p = BlockPool::new(1024, 4);
+        let _a = p.lease(4096).unwrap();
+        let err = p.lease(1).unwrap_err();
+        assert_eq!(err, PoolError::Exhausted { requested: 1, available: 0 });
+    }
+
+    #[test]
+    fn unknown_lease_errors() {
+        let mut p = BlockPool::new(64, 2);
+        assert_eq!(p.release(99).unwrap_err(), PoolError::UnknownLease(99));
+        assert_eq!(p.grow(99, 10).unwrap_err(), PoolError::UnknownLease(99));
+    }
+
+    #[test]
+    fn no_block_leaks_under_churn() {
+        let mut p = BlockPool::new(256, 32);
+        let mut rng = crate::util::Pcg64::new(0);
+        let mut live = Vec::new();
+        for _ in 0..500 {
+            if rng.next_f64() < 0.6 || live.is_empty() {
+                if let Ok(id) = p.lease(1 + rng.below(2048) as usize) {
+                    live.push(id);
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                p.release(live.swap_remove(idx)).unwrap();
+            }
+        }
+        for id in live.drain(..) {
+            p.release(id).unwrap();
+        }
+        assert_eq!(p.free_blocks(), 32);
+    }
+
+    #[test]
+    fn swan_multiplies_block_capacity() {
+        // the composition claim: SWAN tokens/block > dense tokens/block
+        let p = BlockPool::new(64 * 1024, 4);
+        let dense = p.tokens_per_block(128, 8, 0, StorageMode::F16, true);
+        let swan16 = p.tokens_per_block(128, 8, 32, StorageMode::F16, false);
+        let swan8 = p.tokens_per_block(128, 8, 32, StorageMode::F8, false);
+        assert!(swan16 > 2 * dense);
+        assert!(swan8 > swan16);
+    }
+}

@@ -1,0 +1,121 @@
+//! Request/response types for the serving engine.
+
+use std::time::Duration;
+
+/// Character-level tokenizer shared with the python side: ids 0..95 map to
+/// ASCII 32..127.
+pub const VOCAB_SIZE: usize = 96;
+pub const CHAR_BASE: u8 = 32;
+
+pub fn encode_text(s: &str) -> Vec<u32> {
+    s.bytes()
+        .map(|b| {
+            let x = b.wrapping_sub(CHAR_BASE);
+            if (x as usize) < VOCAB_SIZE {
+                x as u32
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+pub fn decode_tokens(ids: &[u32]) -> String {
+    ids.iter().map(|&i| (i as u8 + CHAR_BASE) as char).collect()
+}
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Softmax temperature; 0 = greedy.
+    pub temperature: f32,
+    /// Optional stop token.
+    pub stop_token: Option<u32>,
+}
+
+impl Request {
+    pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt: encode_text(text),
+            max_new_tokens,
+            temperature: 0.0,
+            stop_token: None,
+        }
+    }
+}
+
+/// Per-request latency/throughput accounting.
+#[derive(Clone, Debug, Default)]
+pub struct RequestStats {
+    pub queue_time: Duration,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub decode_steps: usize,
+    /// Peak KV-cache bytes for this sequence.
+    pub peak_cache_bytes: usize,
+    /// Bytes an uncompressed cache would have used at completion.
+    pub dense_equiv_bytes: usize,
+}
+
+impl RequestStats {
+    /// Decode throughput in tokens/s.
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_time.is_zero() {
+            0.0
+        } else {
+            self.decode_steps as f64 / self.decode_time.as_secs_f64()
+        }
+    }
+
+    /// Cache memory saving vs dense (1 - used/dense).
+    pub fn memory_saving(&self) -> f64 {
+        if self.dense_equiv_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.peak_cache_bytes as f64 / self.dense_equiv_bytes as f64
+        }
+    }
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub stats: RequestStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let s = "the passkey is 41579 .";
+        assert_eq!(decode_tokens(&encode_text(s)), s);
+    }
+
+    #[test]
+    fn out_of_alphabet_maps_to_space() {
+        let ids = encode_text("a\nb");
+        assert_eq!(decode_tokens(&ids), "a b");
+    }
+
+    #[test]
+    fn stats_derivations() {
+        let st = RequestStats {
+            decode_time: Duration::from_secs(2),
+            decode_steps: 100,
+            peak_cache_bytes: 250,
+            dense_equiv_bytes: 1000,
+            ..Default::default()
+        };
+        assert_eq!(st.decode_tps(), 50.0);
+        assert_eq!(st.memory_saving(), 0.75);
+    }
+}

@@ -1,0 +1,363 @@
+//! Per-sequence hybrid-cache state for the PJRT serving path.
+//!
+//! The AOT decode graphs take the sparse cache as zero-padded
+//! `[L, n_kv, Ls, k]` (values, indices) arrays plus a dense buffer
+//! `[L, n_kv, BUF, d_h]` and validity masks.  `SeqCache` owns those flat
+//! arrays, performs Algorithm 1's buffer/evict/winnow bookkeeping in
+//! place, and grows to the next compiled length bucket when the sparse
+//! store fills up.  Zero-padding is lossless: padded value entries
+//! contribute 0 to scores/outputs and masked slots are -inf'd in softmax.
+
+use crate::sparse::topk::topk_indices_select;
+use crate::sparse::StorageMode;
+use crate::util::fp::{quantize_f16, quantize_fp8};
+
+/// Static shape info shared by all sequences of a model.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheShape {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub d_head: usize,
+    /// Dense buffer capacity in the compiled graphs.
+    pub buf_cap: usize,
+}
+
+/// One sequence's hybrid cache, shaped for bucket (`l_cap`, `k_active`).
+pub struct SeqCache {
+    pub shape: CacheShape,
+    pub k_active: usize,
+    pub mode: StorageMode,
+    /// Current sparse length bucket (capacity).
+    pub l_cap: usize,
+    /// Live sparse tokens (<= l_cap).
+    pub sparse_len: usize,
+    /// Live buffer tokens (<= buf_cap).
+    pub buf_len: usize,
+    /// [L, n_kv, l_cap, k] flattened.
+    pub sp_kvals: Vec<f32>,
+    pub sp_kidx: Vec<i32>,
+    pub sp_vvals: Vec<f32>,
+    pub sp_vidx: Vec<i32>,
+    /// [L, n_kv, buf_cap, d_h] flattened (slot 0 oldest).
+    pub kbuf: Vec<f32>,
+    pub vbuf: Vec<f32>,
+    /// Total tokens represented.
+    pub pos: usize,
+}
+
+impl SeqCache {
+    pub fn new(shape: CacheShape, l_cap: usize, k_active: usize, mode: StorageMode) -> SeqCache {
+        let sp = shape.n_layers * shape.n_kv * l_cap * k_active;
+        let bf = shape.n_layers * shape.n_kv * shape.buf_cap * shape.d_head;
+        SeqCache {
+            shape,
+            k_active,
+            mode,
+            l_cap,
+            sparse_len: 0,
+            buf_len: 0,
+            sp_kvals: vec![0.0; sp],
+            sp_kidx: vec![0; sp],
+            sp_vvals: vec![0.0; sp],
+            sp_vidx: vec![0; sp],
+            kbuf: vec![0.0; bf],
+            vbuf: vec![0.0; bf],
+            pos: 0,
+        }
+    }
+
+    #[inline]
+    fn sp_off(&self, l: usize, h: usize, t: usize) -> usize {
+        ((l * self.shape.n_kv + h) * self.l_cap + t) * self.k_active
+    }
+
+    #[inline]
+    fn buf_off(&self, l: usize, h: usize, t: usize) -> usize {
+        ((l * self.shape.n_kv + h) * self.shape.buf_cap + t) * self.shape.d_head
+    }
+
+    fn quant(&self, x: f32) -> f32 {
+        match self.mode {
+            StorageMode::F16 => quantize_f16(x),
+            StorageMode::F8 => quantize_fp8(x),
+            StorageMode::F32 => x,
+        }
+    }
+
+    /// Winnow one dense vector into sparse slot `t` of (l, h).
+    fn write_sparse(&mut self, l: usize, h: usize, t: usize, k_vec: &[f32], v_vec: &[f32]) {
+        let k = self.k_active;
+        let off = self.sp_off(l, h, t);
+        let ki = topk_indices_select(k_vec, k);
+        let vi = topk_indices_select(v_vec, k);
+        for j in 0..k {
+            self.sp_kvals[off + j] = self.quant(k_vec[ki[j] as usize]);
+            self.sp_kidx[off + j] = ki[j] as i32;
+            self.sp_vvals[off + j] = self.quant(v_vec[vi[j] as usize]);
+            self.sp_vidx[off + j] = vi[j] as i32;
+        }
+    }
+
+    /// Grow the sparse arrays to a bigger length bucket.
+    pub fn grow(&mut self, new_l_cap: usize) {
+        assert!(new_l_cap >= self.l_cap);
+        if new_l_cap == self.l_cap {
+            return;
+        }
+        let (nl, nkv, k) = (self.shape.n_layers, self.shape.n_kv, self.k_active);
+        let mut grown = SeqCache::new(self.shape, new_l_cap, k, self.mode);
+        for l in 0..nl {
+            for h in 0..nkv {
+                let src = self.sp_off(l, h, 0);
+                let dst = grown.sp_off(l, h, 0);
+                let n = self.sparse_len * k;
+                grown.sp_kvals[dst..dst + n].copy_from_slice(&self.sp_kvals[src..src + n]);
+                grown.sp_kidx[dst..dst + n].copy_from_slice(&self.sp_kidx[src..src + n]);
+                grown.sp_vvals[dst..dst + n].copy_from_slice(&self.sp_vvals[src..src + n]);
+                grown.sp_vidx[dst..dst + n].copy_from_slice(&self.sp_vidx[src..src + n]);
+            }
+        }
+        grown.sparse_len = self.sparse_len;
+        grown.buf_len = self.buf_len;
+        grown.kbuf = std::mem::take(&mut self.kbuf);
+        grown.vbuf = std::mem::take(&mut self.vbuf);
+        grown.pos = self.pos;
+        *self = grown;
+    }
+
+    /// True if appending one more token would need a bigger bucket.
+    pub fn needs_growth(&self) -> bool {
+        self.buf_len == self.shape.buf_cap && self.sparse_len == self.l_cap
+    }
+
+    /// Append one token's rotated (k̂, v̂) rows, `[L * n_kv * d_h]` each in
+    /// layer-major order (the decode graph's output layout).  Evicts the
+    /// oldest buffer token into the sparse store when the buffer is full.
+    pub fn append(&mut self, khat: &[f32], vhat: &[f32]) {
+        let (nl, nkv, dh) = (self.shape.n_layers, self.shape.n_kv, self.shape.d_head);
+        debug_assert_eq!(khat.len(), nl * nkv * dh);
+        if self.buf_len == self.shape.buf_cap {
+            // evict oldest buffer row of every (l, h) into the sparse store
+            assert!(self.sparse_len < self.l_cap, "grow() must be called first");
+            let t = self.sparse_len;
+            for l in 0..nl {
+                for h in 0..nkv {
+                    let b0 = self.buf_off(l, h, 0);
+                    let k_old: Vec<f32> = self.kbuf[b0..b0 + dh].to_vec();
+                    let v_old: Vec<f32> = self.vbuf[b0..b0 + dh].to_vec();
+                    self.write_sparse(l, h, t, &k_old, &v_old);
+                    // shift the ring left one slot
+                    let span = self.shape.buf_cap * dh;
+                    let base = self.buf_off(l, h, 0);
+                    self.kbuf.copy_within(base + dh..base + span, base);
+                    self.vbuf.copy_within(base + dh..base + span, base);
+                }
+            }
+            self.sparse_len += 1;
+            self.buf_len -= 1;
+        }
+        let t = self.buf_len;
+        for l in 0..nl {
+            for h in 0..nkv {
+                let src = (l * nkv + h) * dh;
+                let dst = self.buf_off(l, h, t);
+                self.kbuf[dst..dst + dh].copy_from_slice(&khat[src..src + dh]);
+                self.vbuf[dst..dst + dh].copy_from_slice(&vhat[src..src + dh]);
+            }
+        }
+        self.buf_len += 1;
+        self.pos += 1;
+    }
+
+    /// Load a prefill history: `khat`/`vhat` are `[L, n_kv, T, d_h]`
+    /// (the prefill graph's output), `t_real` = actual prompt tokens.
+    /// The last `buf_cap` tokens stay dense; older ones are winnowed.
+    pub fn load_prefill(&mut self, khat: &[f32], vhat: &[f32], t_cap: usize, t_real: usize) {
+        let (nl, nkv, dh) = (self.shape.n_layers, self.shape.n_kv, self.shape.d_head);
+        let n_buf = t_real.min(self.shape.buf_cap);
+        let n_sparse = t_real - n_buf;
+        while n_sparse > self.l_cap {
+            // caller should have sized the bucket; grow defensively
+            let next = self.l_cap * 2;
+            self.grow(next);
+        }
+        let row = |l: usize, h: usize, t: usize| ((l * nkv + h) * t_cap + t) * dh;
+        for l in 0..nl {
+            for h in 0..nkv {
+                for t in 0..n_sparse {
+                    let r = row(l, h, t);
+                    let kv: Vec<f32> = khat[r..r + dh].to_vec();
+                    let vv: Vec<f32> = vhat[r..r + dh].to_vec();
+                    self.write_sparse(l, h, t, &kv, &vv);
+                }
+                for (slot, t) in (n_sparse..t_real).enumerate() {
+                    let r = row(l, h, t);
+                    let dst = self.buf_off(l, h, slot);
+                    self.kbuf[dst..dst + dh].copy_from_slice(&khat[r..r + dh]);
+                    self.vbuf[dst..dst + dh].copy_from_slice(&vhat[r..r + dh]);
+                }
+            }
+        }
+        self.sparse_len = n_sparse;
+        self.buf_len = n_buf;
+        self.pos = t_real;
+    }
+
+    /// Sparse-slot validity mask (1.0 = live).
+    pub fn smask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.l_cap];
+        m[..self.sparse_len].iter_mut().for_each(|x| *x = 1.0);
+        m
+    }
+
+    /// Buffer validity mask.
+    pub fn bmask(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.shape.buf_cap];
+        m[..self.buf_len].iter_mut().for_each(|x| *x = 1.0);
+        m
+    }
+
+    /// Serving-accounting bytes of this cache (Eq. 1 sparse + f16 buffer).
+    pub fn storage_bytes(&self) -> usize {
+        let heads = self.shape.n_layers * self.shape.n_kv;
+        let per_vec = self.mode.vector_bytes(self.k_active);
+        let sparse = 2 * heads * per_vec * self.sparse_len;
+        let dense = 2 * heads * self.shape.d_head * 2 * self.buf_len;
+        sparse + dense
+    }
+
+    /// Bytes an uncompressed cache of the same token count would use.
+    pub fn dense_equiv_bytes(&self) -> usize {
+        2 * self.shape.n_layers * self.shape.n_kv * self.shape.d_head * 2 * self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn shape() -> CacheShape {
+        CacheShape { n_layers: 2, n_kv: 2, d_head: 8, buf_cap: 4 }
+    }
+
+    fn rows(r: &mut Pcg64, shape: &CacheShape) -> (Vec<f32>, Vec<f32>) {
+        let n = shape.n_layers * shape.n_kv * shape.d_head;
+        (r.normal_vec(n), r.normal_vec(n))
+    }
+
+    #[test]
+    fn append_fills_buffer_then_sparse() {
+        let mut c = SeqCache::new(shape(), 16, 4, StorageMode::F32);
+        let mut r = Pcg64::new(0);
+        for i in 0..6 {
+            let (k, v) = rows(&mut r, &shape());
+            c.append(&k, &v);
+            assert_eq!(c.pos, i + 1);
+        }
+        assert_eq!(c.buf_len, 4);
+        assert_eq!(c.sparse_len, 2);
+        // masks
+        assert_eq!(c.smask().iter().sum::<f32>(), 2.0);
+        assert_eq!(c.bmask().iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn eviction_preserves_topk_content() {
+        let sh = CacheShape { n_layers: 1, n_kv: 1, d_head: 8, buf_cap: 1 };
+        let mut c = SeqCache::new(sh, 8, 8, StorageMode::F32); // full retention
+        let k1: Vec<f32> = (0..8).map(|i| i as f32 + 1.0).collect();
+        let v1: Vec<f32> = (0..8).map(|i| -(i as f32) - 1.0).collect();
+        c.append(&k1, &v1);
+        c.append(&vec![9.0; 8], &vec![9.0; 8]); // evicts token 0
+        assert_eq!(c.sparse_len, 1);
+        // reconstruct slot 0: values at their indices must equal k1
+        let mut rec = vec![0.0f32; 8];
+        for j in 0..8 {
+            rec[c.sp_kidx[j] as usize] = c.sp_kvals[j];
+        }
+        assert_eq!(rec, k1);
+        let mut recv = vec![0.0f32; 8];
+        for j in 0..8 {
+            recv[c.sp_vidx[j] as usize] = c.sp_vvals[j];
+        }
+        assert_eq!(recv, v1);
+    }
+
+    #[test]
+    fn buffer_is_fifo_after_eviction() {
+        let sh = CacheShape { n_layers: 1, n_kv: 1, d_head: 4, buf_cap: 2 };
+        let mut c = SeqCache::new(sh, 8, 2, StorageMode::F32);
+        c.append(&[1.0; 4], &[1.0; 4]);
+        c.append(&[2.0; 4], &[2.0; 4]);
+        c.append(&[3.0; 4], &[3.0; 4]); // evicts "1"
+        assert_eq!(&c.kbuf[0..4], &[2.0; 4]);
+        assert_eq!(&c.kbuf[4..8], &[3.0; 4]);
+        assert_eq!(c.sparse_len, 1);
+    }
+
+    #[test]
+    fn grow_preserves_content() {
+        let mut c = SeqCache::new(shape(), 4, 4, StorageMode::F16);
+        let mut r = Pcg64::new(1);
+        for _ in 0..8 {
+            let (k, v) = rows(&mut r, &shape());
+            c.append(&k, &v);
+        }
+        assert_eq!(c.sparse_len, 4);
+        assert!(c.needs_growth());
+        let kvals_before = c.sp_kvals.clone();
+        let off_before = c.sp_off(1, 1, 0);
+        c.grow(16);
+        assert_eq!(c.l_cap, 16);
+        let off_after = c.sp_off(1, 1, 0);
+        // content preserved per (l, h) block
+        assert_eq!(
+            &c.sp_kvals[off_after..off_after + 4 * 4],
+            &kvals_before[off_before..off_before + 4 * 4]
+        );
+        // appending now works
+        let (k, v) = rows(&mut r, &shape());
+        c.append(&k, &v);
+        assert_eq!(c.sparse_len, 5);
+    }
+
+    #[test]
+    fn load_prefill_layout() {
+        let sh = CacheShape { n_layers: 1, n_kv: 1, d_head: 4, buf_cap: 2 };
+        let mut c = SeqCache::new(sh, 8, 4, StorageMode::F32);
+        let t_cap = 8;
+        let t_real = 5;
+        // khat[t] = [t+1; 4]
+        let mut khat = vec![0.0f32; t_cap * 4];
+        for t in 0..t_real {
+            for j in 0..4 {
+                khat[t * 4 + j] = (t + 1) as f32;
+            }
+        }
+        let vhat = khat.clone();
+        c.load_prefill(&khat, &vhat, t_cap, t_real);
+        assert_eq!(c.sparse_len, 3);
+        assert_eq!(c.buf_len, 2);
+        assert_eq!(c.pos, 5);
+        // buffer holds tokens 4,5 (values 4.0 and 5.0)
+        assert_eq!(&c.kbuf[0..4], &[4.0; 4]);
+        assert_eq!(&c.kbuf[4..8], &[5.0; 4]);
+        // sparse slot 0 reconstructs token 1 (all-equal vector: top-4 = all)
+        assert_eq!(c.sp_kvals[0], 1.0);
+    }
+
+    #[test]
+    fn storage_bytes_tracks_eq1() {
+        let mut c = SeqCache::new(shape(), 16, 4, StorageMode::F16);
+        let mut r = Pcg64::new(2);
+        for _ in 0..10 {
+            let (k, v) = rows(&mut r, &shape());
+            c.append(&k, &v);
+        }
+        // 6 sparse + 4 buffer; heads = 4
+        let expect = 2 * 4 * (3 * 4 + 2) * 6 + 2 * 4 * 8 * 2 * 4;
+        assert_eq!(c.storage_bytes(), expect);
+        assert!(c.storage_bytes() < c.dense_equiv_bytes());
+    }
+}

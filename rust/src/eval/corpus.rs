@@ -1,0 +1,155 @@
+//! Rust-side synthetic corpus generators over the same grammar as
+//! `python/compile/corpus.py` (same alphabet and word lists; streams need
+//! not be bit-identical — the model generalises over the grammar).
+
+use crate::util::Pcg64;
+
+pub const ADJS: [&str; 10] = [
+    "quick", "sparse", "dense", "rotated", "pruned", "long", "short", "hidden", "salient", "quiet",
+];
+pub const NOUNS: [&str; 10] = [
+    "cache", "vector", "token", "model", "matrix", "buffer", "kernel", "query", "key", "value",
+];
+pub const VERBS: [&str; 10] = [
+    "stores", "rotates", "prunes", "reads", "writes", "scans", "maps", "folds", "splits", "joins",
+];
+
+pub fn prose(rng: &mut Pcg64) -> String {
+    format!(
+        "the {} {} {} the {} {} . ",
+        rng.choose(&ADJS),
+        rng.choose(&NOUNS),
+        rng.choose(&VERBS),
+        rng.choose(&ADJS),
+        rng.choose(&NOUNS)
+    )
+}
+
+pub fn fact(rng: &mut Pcg64) -> (String, String, String) {
+    let key = format!("{}{}", rng.choose(&NOUNS), rng.below(100));
+    let val = rng.below(1000).to_string();
+    let decl = format!("fact {key} is {val} . ");
+    (decl, key, val)
+}
+
+/// Arithmetic chain: returns (text-without-answer, answer-string).
+/// Mirrors the training grammar `start x ; add d = y ; ... answer y .`
+pub fn arith_chain(rng: &mut Pcg64, steps: usize) -> (String, String) {
+    let mut x = rng.range(1, 50);
+    let mut s = format!("start {x} ;");
+    for _ in 0..steps {
+        let d = rng.range(1, 10);
+        if rng.next_f64() < 0.5 {
+            x += d;
+            s.push_str(&format!(" add {d} = {x} ;"));
+        } else {
+            x -= d;
+            s.push_str(&format!(" sub {d} = {x} ;"));
+        }
+    }
+    s.push_str(" answer ");
+    (s, x.to_string())
+}
+
+/// Code definition: returns (definition + call prefix, expected arg digits).
+pub fn code_def(rng: &mut Pcg64) -> (String, String) {
+    let i = rng.below(100);
+    let n = rng.range(1, 20);
+    let op = *rng.choose(&["+", "-", "*"]);
+    (format!("def f{i}(x): return x {op} {n} ; f{i}("), n.to_string())
+}
+
+/// Passkey sentence pieces: (declaration, key).
+pub fn passkey(rng: &mut Pcg64) -> (String, String) {
+    let key: String = (0..5).map(|_| char::from(b'0' + rng.below(10) as u8)).collect();
+    (format!("the passkey is {key} . "), key)
+}
+
+/// Filler prose of roughly `n_chars` characters.
+pub fn filler(rng: &mut Pcg64, n_chars: usize) -> String {
+    let mut s = String::new();
+    while s.len() < n_chars {
+        s.push_str(&prose(rng));
+    }
+    s.truncate(n_chars);
+    // avoid cutting mid-word confusing the model more than needed
+    if let Some(i) = s.rfind(' ') {
+        s.truncate(i + 1);
+    }
+    s
+}
+
+/// Mixed corpus text (for perplexity), ~`n_chars` characters.
+pub fn mixed_text(rng: &mut Pcg64, n_chars: usize) -> String {
+    let mut s = String::new();
+    while s.len() < n_chars {
+        match rng.below(5) {
+            0 | 1 => s.push_str(&prose(rng)),
+            2 => {
+                let (decl, key, val) = fact(rng);
+                s.push_str(&decl);
+                s.push_str(&format!("recall {key} -> {val} . "));
+            }
+            3 => {
+                let (body, ans) = arith_chain(rng, 4);
+                s.push_str(&body);
+                s.push_str(&ans);
+                s.push_str(" . ");
+            }
+            _ => {
+                let (def, arg) = code_def(rng);
+                s.push_str(&def);
+                s.push_str(&arg);
+                s.push_str(") ; ");
+            }
+        }
+    }
+    s.truncate(n_chars);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = mixed_text(&mut Pcg64::new(1), 500);
+        let b = mixed_text(&mut Pcg64::new(1), 500);
+        assert_eq!(a, b);
+        assert_ne!(a, mixed_text(&mut Pcg64::new(2), 500));
+    }
+
+    #[test]
+    fn arith_chain_is_consistent() {
+        for seed in 0..20 {
+            let (body, ans) = arith_chain(&mut Pcg64::new(seed), 5);
+            // re-derive the answer by parsing the chain
+            let mut x: i64 = 0;
+            for tok in body.split(';') {
+                let tok = tok.trim();
+                if let Some(v) = tok.strip_prefix("start ") {
+                    x = v.trim().parse().unwrap();
+                } else if tok.starts_with("add") || tok.starts_with("sub") {
+                    let y: i64 = tok.split('=').nth(1).unwrap().trim().parse().unwrap();
+                    x = y;
+                }
+            }
+            assert_eq!(x.to_string(), ans, "{body}");
+        }
+    }
+
+    #[test]
+    fn passkey_embedded_in_declaration() {
+        let (decl, key) = passkey(&mut Pcg64::new(3));
+        assert!(decl.contains(&key));
+        assert_eq!(key.len(), 5);
+    }
+
+    #[test]
+    fn filler_is_ascii_printable() {
+        let f = filler(&mut Pcg64::new(4), 300);
+        assert!(f.bytes().all(|b| (32..127).contains(&b)));
+        assert!(f.len() <= 300);
+    }
+}

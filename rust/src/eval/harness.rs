@@ -1,0 +1,247 @@
+//! Evaluation harness: runs (model x policy x task) grids.
+//!
+//! Protocol per case (the paper's serving flow): the prompt is prefilled
+//! *exactly* (prompt-phase attention is dense), the resulting rotated KV
+//! history is loaded into the cache policy (winnowing everything beyond
+//! the buffer), and the answer is generated greedily through the
+//! compressed cache.  Perplexity instead teacher-forces every token
+//! through the policy so compression applies to the whole history — the
+//! regime where zero-buffer SWAN collapses (Fig 2b/4).
+
+use crate::coordinator::request::{decode_tokens, encode_text};
+use crate::eval::tasks::Task;
+use crate::kvcache::PolicyKind;
+use crate::model::transformer::{Prefill, SequenceState, SwanModel};
+use crate::tensor::ops::argmax;
+use crate::util::Pcg64;
+
+/// Result of one (policy, task) cell.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub task: String,
+    pub policy: String,
+    pub accuracy: f64,
+    pub n_cases: usize,
+    /// Mean measured cache bytes / dense-equivalent bytes at answer time.
+    pub compression_ratio: f64,
+}
+
+/// Harness over one model.
+pub struct Harness<'m> {
+    pub model: &'m SwanModel,
+    /// Cache of exact prefills keyed by prompt (prefill is
+    /// policy-independent, so it is shared across the policy grid).
+    prefills: std::collections::HashMap<Vec<u32>, std::rc::Rc<Prefill>>,
+}
+
+impl<'m> Harness<'m> {
+    pub fn new(model: &'m SwanModel) -> Harness<'m> {
+        Harness { model, prefills: std::collections::HashMap::new() }
+    }
+
+    fn prefill_cached(&mut self, tokens: &[u32]) -> std::rc::Rc<Prefill> {
+        if let Some(p) = self.prefills.get(tokens) {
+            return p.clone();
+        }
+        let p = std::rc::Rc::new(self.model.prefill(tokens));
+        self.prefills.insert(tokens.to_vec(), p.clone());
+        p
+    }
+
+    /// Exact-match accuracy of `policy` on `task`.
+    pub fn run_task(&mut self, task: &Task, policy: PolicyKind) -> EvalResult {
+        self.run_cases(&task.kind.label(), &task.cases(), policy)
+    }
+
+    /// Exact-match accuracy of `policy` over explicit cases.
+    pub fn run_cases(
+        &mut self,
+        label: &str,
+        cases: &[crate::eval::tasks::TaskCase],
+        policy: PolicyKind,
+    ) -> EvalResult {
+        let mut correct = 0usize;
+        let mut ratio_sum = 0.0f64;
+        for case in cases {
+            let tokens = encode_text(&case.prompt);
+            let pf = self.prefill_cached(&tokens);
+            let mut st = SequenceState::new(self.model, policy);
+            st.load_prefill(&pf);
+            // measured compression at answer time
+            let used = st.storage_bytes() as f64;
+            let dense = {
+                let cfg = &self.model.cfg;
+                (2 * cfg.n_layers * cfg.n_kv_heads * cfg.d_head * 2 * st.pos) as f64
+            };
+            ratio_sum += used / dense;
+
+            let first = argmax(&pf.logits) as u32;
+            let max_new = case.answer.len() + 2;
+            let mut produced = vec![first];
+            let mut tok = first;
+            for _ in 1..max_new {
+                let logits = self.model.decode_step(&mut st, tok);
+                tok = argmax(&logits) as u32;
+                produced.push(tok);
+            }
+            let text = decode_tokens(&produced);
+            if text.trim_start().starts_with(&case.answer) {
+                correct += 1;
+            }
+        }
+        EvalResult {
+            task: label.to_string(),
+            policy: policy.label(),
+            accuracy: correct as f64 / cases.len() as f64,
+            n_cases: cases.len(),
+            compression_ratio: ratio_sum / cases.len() as f64,
+        }
+    }
+
+    /// Teacher-forced per-character negative log-likelihood under a
+    /// policy-compressed history (WikiText-perplexity analogue; lower is
+    /// better).  Compression applies from token 0 — the bt=0 stress
+    /// regime.
+    pub fn perplexity(&mut self, text: &str, policy: PolicyKind) -> f64 {
+        let ids = encode_text(text);
+        assert!(ids.len() >= 8, "text too short");
+        let mut st = SequenceState::new(self.model, policy);
+        let mut nll = 0.0f64;
+        let mut count = 0usize;
+        let mut tok = ids[0];
+        for &next in &ids[1..] {
+            let logits = self.model.decode_step(&mut st, tok);
+            let lse = crate::tensor::ops::logsumexp(&logits);
+            nll += (lse - logits[next as usize]) as f64;
+            count += 1;
+            tok = next;
+        }
+        (nll / count as f64).exp()
+    }
+
+    /// Continuation-choice accuracy (HellaSwag/Winogrande analogue): after
+    /// a context processed through `policy`, the model must assign higher
+    /// likelihood to the true continuation than to a distractor sampled
+    /// from elsewhere in the corpus.
+    pub fn continuation_choice(
+        &mut self,
+        policy: PolicyKind,
+        n_cases: usize,
+        ctx_chars: usize,
+        cont_chars: usize,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Pcg64::new(seed ^ 0xc0ac_u64);
+        let mut wins = 0usize;
+        for case in 0..n_cases {
+            let text = crate::eval::corpus::mixed_text(
+                &mut rng.fork(case as u64),
+                ctx_chars + cont_chars + 8,
+            );
+            let ids = encode_text(&text);
+            let (ctx, rest) = ids.split_at(ctx_chars.min(ids.len() - cont_chars - 1));
+            let truth: Vec<u32> = rest[..cont_chars].to_vec();
+            let distractor_text =
+                crate::eval::corpus::mixed_text(&mut rng.fork(10_000 + case as u64), cont_chars + 8);
+            let distractor: Vec<u32> = encode_text(&distractor_text)[..cont_chars].to_vec();
+
+            let lp_true = self.continuation_logprob(ctx, &truth, policy);
+            let lp_dis = self.continuation_logprob(ctx, &distractor, policy);
+            if lp_true > lp_dis {
+                wins += 1;
+            }
+        }
+        wins as f64 / n_cases as f64
+    }
+
+    fn continuation_logprob(&mut self, ctx: &[u32], cont: &[u32], policy: PolicyKind) -> f64 {
+        // context through the policy (compressed), continuation scored
+        // token by token
+        let mut st = SequenceState::new(self.model, policy);
+        if ctx.len() > 1 {
+            let pf = self.prefill_cached(ctx);
+            st.load_prefill(&pf);
+        }
+        let mut lp = 0.0f64;
+        let mut tok = *ctx.last().unwrap_or(&0);
+        for &next in cont {
+            let logits = self.model.decode_step(&mut st, tok);
+            let lse = crate::tensor::ops::logsumexp(&logits);
+            lp += (logits[next as usize] - lse) as f64;
+            tok = next;
+        }
+        lp
+    }
+}
+
+/// Format a grid of results as an aligned table.
+pub fn format_table(title: &str, rows: &[EvalResult]) -> String {
+    let mut out = format!("## {title}\n");
+    out.push_str(&format!(
+        "{:<34} {:<28} {:>9} {:>8} {:>7}\n",
+        "policy", "task", "accuracy", "ratio", "n"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<34} {:<28} {:>8.3} {:>8.3} {:>7}\n",
+            r.policy, r.task, r.accuracy, r.compression_ratio, r.n_cases
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::tests::tiny_model;
+    use crate::eval::tasks::TaskKind;
+
+    #[test]
+    fn harness_runs_on_tiny_model() {
+        // the tiny random model scores ~0, but the plumbing must work and
+        // dense must not crash across tasks
+        let m = tiny_model(2);
+        let mut h = Harness::new(&m);
+        let task = Task { kind: TaskKind::Arith { steps: 2 }, n_cases: 2, seed: 0 };
+        let r = h.run_task(&task, PolicyKind::Dense);
+        assert_eq!(r.n_cases, 2);
+        assert!((0.0..=1.0).contains(&r.accuracy));
+        assert!((r.compression_ratio - 1.0).abs() < 1e-6, "dense ratio must be 1");
+    }
+
+    #[test]
+    fn swan_ratio_below_one_on_long_prompts() {
+        let m = tiny_model(2);
+        let mut h = Harness::new(&m);
+        let task = Task { kind: TaskKind::Passkey { distance: 150 }, n_cases: 1, seed: 1 };
+        let r = h.run_task(
+            &task,
+            PolicyKind::Swan {
+                k_active: 2,
+                buffer: 8,
+                mode: crate::sparse::StorageMode::F16,
+            },
+        );
+        assert!(r.compression_ratio < 0.8, "ratio {}", r.compression_ratio);
+    }
+
+    #[test]
+    fn perplexity_is_finite_and_reasonable() {
+        let m = tiny_model(2);
+        let mut h = Harness::new(&m);
+        let text = crate::eval::corpus::mixed_text(&mut Pcg64::new(0), 120);
+        let p = h.perplexity(&text, PolicyKind::Dense);
+        assert!(p.is_finite() && p > 1.0 && p < 200.0, "ppl {p}");
+    }
+
+    #[test]
+    fn prefill_cache_is_shared() {
+        let m = tiny_model(2);
+        let mut h = Harness::new(&m);
+        let task = Task { kind: TaskKind::Arith { steps: 2 }, n_cases: 2, seed: 0 };
+        h.run_task(&task, PolicyKind::Dense);
+        let n1 = h.prefills.len();
+        h.run_task(&task, PolicyKind::Dense);
+        assert_eq!(h.prefills.len(), n1, "second run must reuse prefills");
+    }
+}

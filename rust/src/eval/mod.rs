@@ -1,0 +1,17 @@
+//! Synthetic evaluation suite (the repro substitutes for GSM8K / MMLU /
+//! LongBench — see DESIGN.md for the task-by-task mapping).
+//!
+//! * [`corpus`]  — rust-side generators over the same grammar the model
+//!   was trained on (python `compile/corpus.py`).
+//! * [`tasks`]   — prompted tasks with exact-match answers (arithmetic
+//!   chains, fact recall, passkey retrieval, code completion, long copy).
+//! * [`harness`] — runs (model x cache-policy x task) grids, teacher-forced
+//!   perplexity and continuation-choice scoring, measured compression
+//!   ratios.
+
+pub mod corpus;
+pub mod harness;
+pub mod tasks;
+
+pub use harness::{EvalResult, Harness};
+pub use tasks::{Task, TaskCase, TaskKind};

@@ -1,0 +1,166 @@
+//! Prompted evaluation tasks with exact-match answers.
+//!
+//! Paper-benchmark analogues (DESIGN.md table):
+//!   Arith        -> GSM8K (multi-step reasoning; unforgiving to KV loss)
+//!   FactRecall   -> MMLU/ARC (mid-context factual recall)
+//!   Passkey      -> LongBench PassageRetrieval
+//!   Code         -> LongBench LCC (code completion)
+//!   LongRecall   -> LongBench summarisation proxy (recall the gist of an
+//!                   early declaration after a long document)
+
+use crate::eval::corpus;
+use crate::util::Pcg64;
+
+/// One evaluation case.
+#[derive(Clone, Debug)]
+pub struct TaskCase {
+    pub prompt: String,
+    /// Expected generation prefix (exact match after trimming).
+    pub answer: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// Chained arithmetic with `steps` operations.
+    Arith { steps: usize },
+    /// A fact declared early, recalled after `distance` chars of filler.
+    FactRecall { distance: usize },
+    /// Passkey retrieval across `distance` chars of filler.
+    Passkey { distance: usize },
+    /// Code-call completion after `clutter` other definitions.
+    Code { clutter: usize },
+    /// Early passkey + long document + recall (summarisation-gist proxy).
+    LongRecall { distance: usize },
+}
+
+impl TaskKind {
+    pub fn label(&self) -> String {
+        match self {
+            TaskKind::Arith { steps } => format!("arith({steps})"),
+            TaskKind::FactRecall { distance } => format!("fact-recall(d={distance})"),
+            TaskKind::Passkey { distance } => format!("passkey(d={distance})"),
+            TaskKind::Code { clutter } => format!("code(c={clutter})"),
+            TaskKind::LongRecall { distance } => format!("long-recall(d={distance})"),
+        }
+    }
+
+    /// Generate one case.
+    pub fn gen(&self, rng: &mut Pcg64) -> TaskCase {
+        match *self {
+            TaskKind::Arith { steps } => {
+                let (prompt, answer) = corpus::arith_chain(rng, steps);
+                TaskCase { prompt, answer }
+            }
+            TaskKind::FactRecall { distance } => {
+                let (decl, key, val) = corpus::fact(rng);
+                // the training grammar always pairs decl+recall adjacently;
+                // distance stresses the cache beyond the training regime
+                let fill = corpus::filler(rng, distance);
+                TaskCase {
+                    prompt: format!("{decl}{fill}recall {key} -> "),
+                    answer: val,
+                }
+            }
+            TaskKind::Passkey { distance } => {
+                let (decl, key) = corpus::passkey(rng);
+                let fill = corpus::filler(rng, distance);
+                TaskCase {
+                    prompt: format!("{decl}{fill}. the passkey was "),
+                    answer: key,
+                }
+            }
+            TaskKind::Code { clutter } => {
+                let (def, arg) = corpus::code_def(rng);
+                let mut mid = String::new();
+                for _ in 0..clutter {
+                    let (d2, a2) = corpus::code_def(rng);
+                    mid.push_str(&d2);
+                    mid.push_str(&a2);
+                    mid.push_str(") ; ");
+                }
+                TaskCase { prompt: format!("{mid}{def}"), answer: arg }
+            }
+            TaskKind::LongRecall { distance } => {
+                let (decl, key) = corpus::passkey(rng);
+                let doc = corpus::mixed_text(rng, distance);
+                TaskCase {
+                    prompt: format!("{decl}{doc} . the passkey was "),
+                    answer: key,
+                }
+            }
+        }
+    }
+}
+
+/// A named task = kind + number of cases + seed.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub n_cases: usize,
+    pub seed: u64,
+}
+
+impl Task {
+    pub fn cases(&self) -> Vec<TaskCase> {
+        let mut rng = Pcg64::new(self.seed ^ 0xe7a1);
+        (0..self.n_cases).map(|_| self.kind.gen(&mut rng)).collect()
+    }
+}
+
+/// The standard NLP-benchmark battery (Fig 3 / Table 1 analogue).
+pub fn standard_battery(n_cases: usize, seed: u64) -> Vec<Task> {
+    vec![
+        Task { kind: TaskKind::Arith { steps: 5 }, n_cases, seed },
+        Task { kind: TaskKind::FactRecall { distance: 120 }, n_cases, seed: seed + 1 },
+        Task { kind: TaskKind::Passkey { distance: 120 }, n_cases, seed: seed + 2 },
+        Task { kind: TaskKind::Code { clutter: 3 }, n_cases, seed: seed + 3 },
+    ]
+}
+
+/// The long-context battery (Fig 4/6 analogue).
+pub fn long_battery(n_cases: usize, seed: u64) -> Vec<Task> {
+    vec![
+        Task { kind: TaskKind::Passkey { distance: 300 }, n_cases, seed },
+        Task { kind: TaskKind::FactRecall { distance: 300 }, n_cases, seed: seed + 1 },
+        Task { kind: TaskKind::LongRecall { distance: 350 }, n_cases, seed: seed + 2 },
+        Task { kind: TaskKind::Code { clutter: 10 }, n_cases, seed: seed + 3 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let t = Task { kind: TaskKind::Arith { steps: 4 }, n_cases: 5, seed: 7 };
+        let a = t.cases();
+        let b = t.cases();
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn prompts_contain_answers_context() {
+        let mut rng = Pcg64::new(1);
+        let c = TaskKind::Passkey { distance: 100 }.gen(&mut rng);
+        assert!(c.prompt.contains(&format!("the passkey is {}", c.answer)));
+        assert!(c.prompt.ends_with("the passkey was "));
+
+        let c = TaskKind::FactRecall { distance: 50 }.gen(&mut rng);
+        assert!(c.prompt.contains(&format!("is {}", c.answer)));
+
+        let c = TaskKind::Code { clutter: 2 }.gen(&mut rng);
+        assert!(c.prompt.ends_with('('));
+    }
+
+    #[test]
+    fn batteries_have_distinct_kinds() {
+        let b = standard_battery(3, 0);
+        let kinds: std::collections::HashSet<_> = b.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds.len(), b.len());
+    }
+}

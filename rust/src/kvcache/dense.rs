@@ -1,0 +1,71 @@
+//! Uncompressed dense cache — the quality upper bound and the memory
+//! baseline every ratio in the figures is relative to.
+
+use crate::kvcache::CachePolicy;
+use crate::swan::attention::dense_attention;
+
+pub struct DenseCache {
+    d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    seen: usize,
+}
+
+impl DenseCache {
+    pub fn new(d: usize) -> DenseCache {
+        DenseCache { d, k: Vec::new(), v: Vec::new(), seen: 0 }
+    }
+}
+
+impl CachePolicy for DenseCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        debug_assert_eq!(k_hat.len(), self.d);
+        self.k.extend_from_slice(k_hat);
+        self.v.extend_from_slice(v_hat);
+        self.seen += 1;
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        dense_attention(q_hat, &self.k, &self.v, k_cur, v_cur, self.d, out);
+    }
+
+    fn storage_bytes(&self) -> usize {
+        2 * self.seen * self.d * 2 // k+v, f16 serving convention
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        "dense".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::test_support::run_policy;
+
+    #[test]
+    fn dense_is_exact() {
+        let mut p = DenseCache::new(24);
+        let (out, want) = run_policy(&mut p, 24, 20, 0);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn memory_grows_linearly() {
+        let mut p = DenseCache::new(16);
+        p.append(&vec![0.0; 16], &vec![0.0; 16]);
+        let one = p.storage_bytes();
+        p.append(&vec![0.0; 16], &vec![0.0; 16]);
+        assert_eq!(p.storage_bytes(), 2 * one);
+    }
+}

@@ -1,0 +1,195 @@
+//! H2O-style heavy-hitter eviction baseline (Zhang et al., 2023).
+//!
+//! Keeps a fixed token budget: the `recent` most recent tokens always stay;
+//! beyond that, the tokens with the highest *cumulative attention mass*
+//! (observed across past `attend` calls) survive and the lightest hitter is
+//! evicted.  Evicted tokens are gone forever — the irreversible information
+//! loss the paper contrasts SWAN against.
+
+use crate::kvcache::CachePolicy;
+use crate::tensor::ops::{dot, softmax_inplace};
+
+struct Entry {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// cumulative attention mass this token has received
+    mass: f32,
+    /// arrival index (for the recency window)
+    arrival: usize,
+}
+
+pub struct H2OCache {
+    d: usize,
+    budget: usize,
+    recent: usize,
+    entries: Vec<Entry>,
+    seen: usize,
+}
+
+impl H2OCache {
+    pub fn new(d: usize, budget: usize, recent: usize) -> H2OCache {
+        assert!(recent <= budget, "recency window must fit in budget");
+        H2OCache { d, budget: budget.max(1), recent, entries: Vec::new(), seen: 0 }
+    }
+
+    fn evict_if_needed(&mut self) {
+        while self.entries.len() > self.budget {
+            // candidates: everything outside the recency window
+            let cutoff = self.seen.saturating_sub(self.recent);
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.arrival < cutoff)
+                .min_by(|(_, a), (_, b)| a.mass.partial_cmp(&b.mass).unwrap())
+                .map(|(i, _)| i)
+                // all inside the window (tiny budget): drop the oldest
+                .unwrap_or(0);
+            self.entries.remove(victim);
+        }
+    }
+}
+
+impl CachePolicy for H2OCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        self.entries.push(Entry {
+            k: k_hat.to_vec(),
+            v: v_hat.to_vec(),
+            mass: 0.0,
+            arrival: self.seen,
+        });
+        self.seen += 1;
+        self.evict_if_needed();
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n = self.entries.len();
+        let mut scores: Vec<f32> = self
+            .entries
+            .iter()
+            .map(|e| dot(&e.k, q_hat) * scale)
+            .collect();
+        scores.push(dot(k_cur, q_hat) * scale);
+        softmax_inplace(&mut scores);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, e) in self.entries.iter_mut().enumerate() {
+            let w = scores[i];
+            e.mass += w; // heavy-hitter statistic
+            for (o, x) in out.iter_mut().zip(&e.v) {
+                *o += w * x;
+            }
+        }
+        for (o, x) in out.iter_mut().zip(v_cur) {
+            *o += scores[n] * x;
+        }
+    }
+
+    fn load_history(&mut self, k_flat: &[f32], v_flat: &[f32], d: usize, mass: Option<&[f32]>) {
+        let n = if d == 0 { 0 } else { k_flat.len() / d };
+        for t in 0..n {
+            self.entries.push(Entry {
+                k: k_flat[t * d..(t + 1) * d].to_vec(),
+                v: v_flat[t * d..(t + 1) * d].to_vec(),
+                // seed heavy-hitter stats from the prefill attention mass
+                mass: mass.map(|m| m[t]).unwrap_or(0.0),
+                arrival: self.seen,
+            });
+            self.seen += 1;
+            self.evict_if_needed();
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        // k+v f16 + 4-byte mass counter per retained token
+        self.entries.len() * (2 * self.d * 2 + 4)
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.entries.len()
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        format!("h2o b={} r={}", self.budget, self.recent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::test_support::run_policy;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn within_budget_is_exact() {
+        let mut p = H2OCache::new(16, 64, 8);
+        let (out, want) = run_policy(&mut p, 16, 20, 0);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn budget_is_enforced() {
+        let mut p = H2OCache::new(8, 10, 4);
+        let mut r = Pcg64::new(1);
+        for _ in 0..50 {
+            let k = r.normal_vec(8);
+            let v = r.normal_vec(8);
+            p.append(&k, &v);
+            // interleave attends so masses accumulate
+            let q = r.normal_vec(8);
+            let mut out = vec![0.0; 8];
+            let kc = r.normal_vec(8);
+            let vc = r.normal_vec(8);
+            p.attend(&q, &kc, &vc, &mut out);
+        }
+        assert_eq!(p.retained_tokens(), 10);
+        assert_eq!(p.seen_tokens(), 50);
+    }
+
+    #[test]
+    fn recent_tokens_survive() {
+        let mut p = H2OCache::new(8, 6, 4);
+        let mut r = Pcg64::new(2);
+        for i in 0..30 {
+            let mut k = r.normal_vec(8);
+            k[0] = i as f32; // tag
+            p.append(&k, &r.normal_vec(8));
+        }
+        // the 4 most recent tags must be present
+        let tags: Vec<f32> = p.entries.iter().map(|e| e.k[0]).collect();
+        for want in 26..30 {
+            assert!(tags.contains(&(want as f32)), "missing {want} in {tags:?}");
+        }
+    }
+
+    #[test]
+    fn heavy_hitters_survive() {
+        // one key aligned with every future query accumulates mass and must
+        // outlive orthogonal keys
+        let d = 8;
+        let mut p = H2OCache::new(d, 5, 1);
+        let mut hot = vec![0.0; d];
+        hot[0] = 5.0;
+        p.append(&hot, &vec![1.0; d]);
+        let mut r = Pcg64::new(3);
+        for _ in 0..40 {
+            let mut k = r.normal_vec(d);
+            k[0] = 0.0; // orthogonal to the hot direction
+            p.append(&k, &r.normal_vec(d));
+            let mut q = vec![0.0; d];
+            q[0] = 3.0; // queries keep hitting the hot key
+            let mut out = vec![0.0; d];
+            let kc = vec![0.0; d];
+            let vc = vec![0.0; d];
+            p.attend(&q, &kc, &vc, &mut out);
+        }
+        assert!(p.entries.iter().any(|e| e.k[0] == 5.0), "heavy hitter evicted");
+    }
+}

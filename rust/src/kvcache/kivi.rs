@@ -1,0 +1,213 @@
+//! KIVI-style quantization baseline (Zirui Liu et al., 2023): historical
+//! tokens are stored at low bit-width (asymmetric per-vector uint
+//! quantization), while a small dense residual window of recent tokens
+//! stays in full precision.  Unlike SWAN this has a hard compression
+//! ceiling (the bit-width) and must dequantize on read.
+
+use crate::kvcache::CachePolicy;
+use crate::tensor::ops::{dot, softmax_inplace};
+
+/// Per-vector asymmetric uint-b quantization: q = round((x - min) / step).
+struct QuantVec {
+    codes: Vec<u8>,
+    min: f32,
+    step: f32,
+}
+
+impl QuantVec {
+    fn quantize(x: &[f32], bits: u8) -> QuantVec {
+        let levels = ((1u32 << bits) - 1) as f32;
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in x {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let step = if hi > lo { (hi - lo) / levels } else { 1.0 };
+        let codes = x
+            .iter()
+            .map(|&v| (((v - lo) / step).round() as i64).clamp(0, levels as i64) as u8)
+            .collect();
+        QuantVec { codes, min: lo, step }
+    }
+
+    fn dequantize_into(&self, out: &mut [f32]) {
+        for (o, &c) in out.iter_mut().zip(&self.codes) {
+            *o = self.min + c as f32 * self.step;
+        }
+    }
+
+    fn bytes(&self, bits: u8) -> usize {
+        // packed codes + two f16 scale params
+        (self.codes.len() * bits as usize).div_ceil(8) + 4
+    }
+}
+
+pub struct KiviCache {
+    d: usize,
+    bits: u8,
+    residual: usize,
+    hist_k: Vec<QuantVec>,
+    hist_v: Vec<QuantVec>,
+    res_k: Vec<f32>,
+    res_v: Vec<f32>,
+    res_len: usize,
+    seen: usize,
+    scratch: Vec<f32>,
+}
+
+impl KiviCache {
+    pub fn new(d: usize, bits: u8, residual: usize) -> KiviCache {
+        assert!(bits >= 1 && bits <= 8);
+        KiviCache {
+            d,
+            bits,
+            residual,
+            hist_k: Vec::new(),
+            hist_v: Vec::new(),
+            res_k: Vec::new(),
+            res_v: Vec::new(),
+            res_len: 0,
+            seen: 0,
+            scratch: vec![0.0; d],
+        }
+    }
+}
+
+impl CachePolicy for KiviCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        self.res_k.extend_from_slice(k_hat);
+        self.res_v.extend_from_slice(v_hat);
+        self.res_len += 1;
+        self.seen += 1;
+        while self.res_len > self.residual {
+            let k_old: Vec<f32> = self.res_k.drain(..self.d).collect();
+            let v_old: Vec<f32> = self.res_v.drain(..self.d).collect();
+            self.res_len -= 1;
+            self.hist_k.push(QuantVec::quantize(&k_old, self.bits));
+            self.hist_v.push(QuantVec::quantize(&v_old, self.bits));
+        }
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let nh = self.hist_k.len();
+        let nr = self.res_len;
+        let mut scores = Vec::with_capacity(nh + nr + 1);
+        // explicit decompression step — the overhead SWAN eliminates
+        for qk in &self.hist_k {
+            qk.dequantize_into(&mut self.scratch);
+            scores.push(dot(&self.scratch, q_hat) * scale);
+        }
+        for t in 0..nr {
+            scores.push(dot(&self.res_k[t * d..(t + 1) * d], q_hat) * scale);
+        }
+        scores.push(dot(k_cur, q_hat) * scale);
+        softmax_inplace(&mut scores);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, qv) in self.hist_v.iter().enumerate() {
+            qv.dequantize_into(&mut self.scratch);
+            let w = scores[i];
+            for (o, x) in out.iter_mut().zip(&self.scratch) {
+                *o += w * x;
+            }
+        }
+        for t in 0..nr {
+            let w = scores[nh + t];
+            for (o, x) in out.iter_mut().zip(&self.res_v[t * d..(t + 1) * d]) {
+                *o += w * x;
+            }
+        }
+        for (o, x) in out.iter_mut().zip(v_cur) {
+            *o += scores[nh + nr] * x;
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        let hist: usize = self
+            .hist_k
+            .iter()
+            .chain(self.hist_v.iter())
+            .map(|q| q.bytes(self.bits))
+            .sum();
+        hist + 2 * self.res_len * self.d * 2
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.hist_k.len() + self.res_len
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        format!("kivi{} r={}", self.bits, self.residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::test_support::run_policy;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn within_residual_is_exact() {
+        let mut p = KiviCache::new(16, 2, 64);
+        let (out, want) = run_policy(&mut p, 16, 20, 0);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn int8_is_close_to_dense() {
+        let mut p = KiviCache::new(32, 8, 4);
+        let (out, want) = run_policy(&mut p, 32, 50, 1);
+        let err: f32 = out.iter().zip(&want).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+        let norm: f32 = want.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(err / norm < 0.05, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn lower_bits_use_less_memory_more_error() {
+        let d = 32;
+        let run = |bits| {
+            let mut p = KiviCache::new(d, bits, 4);
+            let (out, want) = run_policy(&mut p, d, 60, 2);
+            let err: f32 =
+                out.iter().zip(&want).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+            (p.storage_bytes(), err)
+        };
+        let (m8, e8) = run(8);
+        let (m2, e2) = run(2);
+        assert!(m2 < m8);
+        assert!(e2 > e8);
+    }
+
+    #[test]
+    fn quantvec_roundtrip_error_bounded() {
+        let mut r = Pcg64::new(3);
+        let x = r.normal_vec(64);
+        let q = QuantVec::quantize(&x, 8);
+        let mut y = vec![0.0; 64];
+        q.dequantize_into(&mut y);
+        let span = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+            - x.iter().fold(f32::INFINITY, |a, &b| a.min(b));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= span / 255.0 * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn retains_all_tokens_like_swan() {
+        let mut p = KiviCache::new(8, 4, 2);
+        let mut r = Pcg64::new(4);
+        for _ in 0..30 {
+            p.append(&r.normal_vec(8), &r.normal_vec(8));
+        }
+        assert_eq!(p.retained_tokens(), 30);
+    }
+}

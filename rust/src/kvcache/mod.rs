@@ -1,0 +1,189 @@
+//! Pluggable KV-cache compression policies.
+//!
+//! A [`CachePolicy`] instance manages one (layer, kv-head) cache of one
+//! sequence, in the *rotated* space (every policy receives the same k̂/v̂
+//! streams, so comparisons isolate the cache strategy itself).  SWAN is the
+//! paper's method; the others are the baselines its related-work section
+//! compares against:
+//!
+//! * [`dense::DenseCache`]        — uncompressed upper bound
+//! * [`swan_policy::SwanCache`]   — hybrid winnowed cache (16/8-bit)
+//! * [`h2o::H2OCache`]            — heavy-hitter token eviction (H2O)
+//! * [`streaming::StreamingCache`]— attention sinks + recency window
+//!   (StreamingLLM)
+//! * [`kivi::KiviCache`]          — low-bit quantization with a dense
+//!   residual window (KIVI-style)
+
+pub mod dense;
+pub mod h2o;
+pub mod kivi;
+pub mod streaming;
+pub mod swan_policy;
+
+pub use dense::DenseCache;
+pub use h2o::H2OCache;
+pub use kivi::KiviCache;
+pub use streaming::StreamingCache;
+pub use swan_policy::SwanCache;
+
+use crate::sparse::StorageMode;
+use crate::swan::hybrid_cache::SwanParams;
+
+/// One (layer, kv-head) cache of one sequence.
+///
+/// `attend` computes softmax(q̂·K/√d)·V over everything the policy has
+/// retained **plus** the current token's (k̂_cur, v̂_cur), and may update
+/// internal statistics (H2O tracks cumulative attention mass).
+pub trait CachePolicy: Send {
+    /// Append one token's rotated key/value to the cache.
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]);
+
+    /// Attention for one query over the retained cache + current token.
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]);
+
+    /// Bulk-load an exact prefill history (flat [n, d] arrays, oldest
+    /// first).  `mass` optionally carries the cumulative attention each
+    /// position received during prefill — H2O seeds its heavy-hitter
+    /// statistics from it; other policies ignore it.
+    fn load_history(&mut self, k_flat: &[f32], v_flat: &[f32], d: usize, mass: Option<&[f32]>) {
+        let _ = mass;
+        let n = if d == 0 { 0 } else { k_flat.len() / d };
+        for t in 0..n {
+            self.append(&k_flat[t * d..(t + 1) * d], &v_flat[t * d..(t + 1) * d]);
+        }
+    }
+
+    /// Bytes of the stored representation under serving accounting.
+    fn storage_bytes(&self) -> usize;
+
+    /// Tokens currently represented (retained) in the cache.
+    fn retained_tokens(&self) -> usize;
+
+    /// Tokens ever appended.
+    fn seen_tokens(&self) -> usize;
+
+    fn label(&self) -> String;
+}
+
+/// Which policy to instantiate (CLI / experiment configuration).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PolicyKind {
+    Dense,
+    /// SWAN with retention ratio, buffer tokens, storage mode.
+    Swan { k_active: usize, buffer: usize, mode: StorageMode },
+    /// SWAN with asymmetric key/value retention (Table 2).
+    SwanAsym { k_keys: usize, k_vals: usize, buffer: usize, mode: StorageMode },
+    /// H2O with a token budget (heavy hitters + recent).
+    H2O { budget: usize, recent: usize },
+    /// StreamingLLM with sink + window token counts.
+    Streaming { sinks: usize, window: usize },
+    /// KIVI-style quantization: bits per value, dense residual window.
+    Kivi { bits: u8, residual: usize },
+}
+
+impl PolicyKind {
+    pub fn build(self, d_h: usize) -> Box<dyn CachePolicy> {
+        match self {
+            PolicyKind::Dense => Box::new(DenseCache::new(d_h)),
+            PolicyKind::Swan { k_active, buffer, mode } => Box::new(SwanCache::new(
+                d_h,
+                SwanParams::new(k_active, buffer, mode),
+            )),
+            PolicyKind::SwanAsym { k_keys, k_vals, buffer, mode } => {
+                let mut p = SwanParams::new(k_keys, buffer, mode);
+                p.k_active_vals = k_vals;
+                Box::new(SwanCache::new(d_h, p))
+            }
+            PolicyKind::H2O { budget, recent } => Box::new(H2OCache::new(d_h, budget, recent)),
+            PolicyKind::Streaming { sinks, window } => {
+                Box::new(StreamingCache::new(d_h, sinks, window))
+            }
+            PolicyKind::Kivi { bits, residual } => Box::new(KiviCache::new(d_h, bits, residual)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Dense => "dense".into(),
+            PolicyKind::Swan { k_active, buffer, mode } => {
+                format!("swan-{} k={k_active} bt={buffer}", mode.label())
+            }
+            PolicyKind::SwanAsym { k_keys, k_vals, buffer, .. } => {
+                format!("swan-asym k_k={k_keys} k_v={k_vals} bt={buffer}")
+            }
+            PolicyKind::H2O { budget, recent } => format!("h2o b={budget} r={recent}"),
+            PolicyKind::Streaming { sinks, window } => {
+                format!("streaming s={sinks} w={window}")
+            }
+            PolicyKind::Kivi { bits, residual } => format!("kivi{bits} r={residual}"),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Drive a policy through `n` random tokens, then attend with a random
+    /// query; returns (output, dense reference output).
+    pub fn run_policy(policy: &mut dyn CachePolicy, d: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Pcg64::new(seed);
+        let mut kflat = Vec::new();
+        let mut vflat = Vec::new();
+        for _ in 0..n {
+            let k = r.normal_vec(d);
+            let v = r.normal_vec(d);
+            policy.append(&k, &v);
+            kflat.extend_from_slice(&k);
+            vflat.extend_from_slice(&v);
+        }
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut out = vec![0.0; d];
+        policy.attend(&q, &kc, &vc, &mut out);
+        let mut dense = vec![0.0; d];
+        crate::swan::attention::dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut dense);
+        (out, dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_labels_unique() {
+        let kinds = [
+            PolicyKind::Dense,
+            PolicyKind::Swan { k_active: 16, buffer: 64, mode: StorageMode::F16 },
+            PolicyKind::Swan { k_active: 16, buffer: 64, mode: StorageMode::F8 },
+            PolicyKind::H2O { budget: 64, recent: 16 },
+            PolicyKind::Streaming { sinks: 4, window: 60 },
+            PolicyKind::Kivi { bits: 4, residual: 32 },
+        ];
+        let labels: Vec<String> = kinds.iter().map(|k| k.label()).collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+
+    #[test]
+    fn build_constructs_every_kind() {
+        for kind in [
+            PolicyKind::Dense,
+            PolicyKind::Swan { k_active: 8, buffer: 2, mode: StorageMode::F16 },
+            PolicyKind::SwanAsym { k_keys: 8, k_vals: 4, buffer: 2, mode: StorageMode::F8 },
+            PolicyKind::H2O { budget: 8, recent: 2 },
+            PolicyKind::Streaming { sinks: 2, window: 6 },
+            PolicyKind::Kivi { bits: 8, residual: 4 },
+        ] {
+            let mut p = kind.build(16);
+            let (out, _) = test_support::run_policy(p.as_mut(), 16, 12, 1);
+            assert!(out.iter().all(|x| x.is_finite()), "{}", kind.label());
+            assert_eq!(p.seen_tokens(), 12);
+        }
+    }
+}

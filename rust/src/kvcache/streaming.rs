@@ -1,0 +1,152 @@
+//! StreamingLLM baseline (Xiao et al., 2024): keep the first `sinks`
+//! tokens (attention sinks) plus a sliding window of the most recent
+//! `window` tokens; everything in between is discarded.
+
+use crate::kvcache::CachePolicy;
+use crate::tensor::ops::{dot, softmax_inplace};
+
+pub struct StreamingCache {
+    d: usize,
+    sinks: usize,
+    window: usize,
+    sink_k: Vec<f32>,
+    sink_v: Vec<f32>,
+    sink_len: usize,
+    win_k: Vec<f32>,
+    win_v: Vec<f32>,
+    win_len: usize,
+    seen: usize,
+}
+
+impl StreamingCache {
+    pub fn new(d: usize, sinks: usize, window: usize) -> StreamingCache {
+        StreamingCache {
+            d,
+            sinks,
+            window: window.max(1),
+            sink_k: Vec::new(),
+            sink_v: Vec::new(),
+            sink_len: 0,
+            win_k: Vec::new(),
+            win_v: Vec::new(),
+            win_len: 0,
+            seen: 0,
+        }
+    }
+}
+
+impl CachePolicy for StreamingCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        if self.sink_len < self.sinks {
+            self.sink_k.extend_from_slice(k_hat);
+            self.sink_v.extend_from_slice(v_hat);
+            self.sink_len += 1;
+        } else {
+            self.win_k.extend_from_slice(k_hat);
+            self.win_v.extend_from_slice(v_hat);
+            self.win_len += 1;
+            if self.win_len > self.window {
+                self.win_k.drain(..self.d);
+                self.win_v.drain(..self.d);
+                self.win_len -= 1;
+            }
+        }
+        self.seen += 1;
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        let scale = 1.0 / (d as f32).sqrt();
+        let n = self.sink_len + self.win_len;
+        let mut scores = Vec::with_capacity(n + 1);
+        for t in 0..self.sink_len {
+            scores.push(dot(&self.sink_k[t * d..(t + 1) * d], q_hat) * scale);
+        }
+        for t in 0..self.win_len {
+            scores.push(dot(&self.win_k[t * d..(t + 1) * d], q_hat) * scale);
+        }
+        scores.push(dot(k_cur, q_hat) * scale);
+        softmax_inplace(&mut scores);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for t in 0..self.sink_len {
+            let w = scores[t];
+            for (o, x) in out.iter_mut().zip(&self.sink_v[t * d..(t + 1) * d]) {
+                *o += w * x;
+            }
+        }
+        for t in 0..self.win_len {
+            let w = scores[self.sink_len + t];
+            for (o, x) in out.iter_mut().zip(&self.win_v[t * d..(t + 1) * d]) {
+                *o += w * x;
+            }
+        }
+        for (o, x) in out.iter_mut().zip(v_cur) {
+            *o += scores[n] * x;
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        2 * (self.sink_len + self.win_len) * self.d * 2
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.sink_len + self.win_len
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        format!("streaming s={} w={}", self.sinks, self.window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::test_support::run_policy;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn within_capacity_is_exact() {
+        let mut p = StreamingCache::new(16, 4, 60);
+        let (out, want) = run_policy(&mut p, 16, 20, 0);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn middle_tokens_are_dropped() {
+        let d = 8;
+        let mut p = StreamingCache::new(d, 2, 3);
+        let mut r = Pcg64::new(1);
+        for i in 0..10 {
+            let mut k = r.normal_vec(d);
+            k[0] = 100.0 + i as f32;
+            p.append(&k, &r.normal_vec(d));
+        }
+        assert_eq!(p.retained_tokens(), 5);
+        // sinks = tokens 0,1; window = 7,8,9
+        let mut tags = Vec::new();
+        for t in 0..p.sink_len {
+            tags.push(p.sink_k[t * d] - 100.0);
+        }
+        for t in 0..p.win_len {
+            tags.push(p.win_k[t * d] - 100.0);
+        }
+        assert_eq!(tags, vec![0.0, 1.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let mut p = StreamingCache::new(4, 2, 8);
+        let mut r = Pcg64::new(2);
+        for _ in 0..100 {
+            p.append(&r.normal_vec(4), &r.normal_vec(4));
+        }
+        assert_eq!(p.retained_tokens(), 10);
+        assert_eq!(p.storage_bytes(), 2 * 10 * 4 * 2);
+    }
+}

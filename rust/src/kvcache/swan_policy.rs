@@ -1,0 +1,106 @@
+//! SWAN as a [`CachePolicy`] — a thin adapter over
+//! [`crate::swan::HybridCache`] + the decompression-free attention kernel.
+
+use crate::kvcache::CachePolicy;
+use crate::swan::attention::swan_attention;
+use crate::swan::hybrid_cache::{HybridCache, SwanParams};
+
+pub struct SwanCache {
+    cache: HybridCache,
+    seen: usize,
+}
+
+impl SwanCache {
+    pub fn new(d_h: usize, params: SwanParams) -> SwanCache {
+        SwanCache { cache: HybridCache::new(d_h, params), seen: 0 }
+    }
+
+    /// Runtime compression tuning (the paper's operational flexibility).
+    pub fn set_k_active(&mut self, k_keys: usize, k_vals: usize) {
+        self.cache.set_k_active(k_keys, k_vals);
+    }
+
+    pub fn inner(&self) -> &HybridCache {
+        &self.cache
+    }
+}
+
+impl CachePolicy for SwanCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        self.cache.append(k_hat, v_hat);
+        self.seen += 1;
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        swan_attention(q_hat, &self.cache, k_cur, v_cur, out);
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.cache.storage_bytes()
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "swan-{} k={}/{} bt={}",
+            self.cache.params.mode.label(),
+            self.cache.params.k_active_keys,
+            self.cache.params.k_active_vals,
+            self.cache.params.buffer
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::test_support::run_policy;
+    use crate::sparse::StorageMode;
+
+    #[test]
+    fn full_retention_matches_dense() {
+        let d = 16;
+        let mut p = SwanCache::new(d, SwanParams::new(d, 4, StorageMode::F32));
+        let (out, want) = run_policy(&mut p, d, 15, 3);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn keeps_every_token() {
+        // unlike eviction baselines, SWAN retains (partial) info for all
+        let d = 16;
+        let mut p = SwanCache::new(d, SwanParams::new(4, 2, StorageMode::F16));
+        let (_, _) = run_policy(&mut p, d, 40, 4);
+        assert_eq!(p.retained_tokens(), 40);
+    }
+
+    #[test]
+    fn memory_below_dense_at_low_k() {
+        let d = 64;
+        let mut p = SwanCache::new(d, SwanParams::new(16, 8, StorageMode::F16));
+        let mut dense = crate::kvcache::DenseCache::new(d);
+        run_policy(&mut p, d, 100, 5);
+        run_policy(&mut dense, d, 100, 5);
+        assert!(p.storage_bytes() < dense.storage_bytes());
+    }
+
+    #[test]
+    fn approximation_bounded_at_half_retention() {
+        // sanity: at k=d/2 the attention output should stay close to dense
+        let d = 64;
+        let mut p = SwanCache::new(d, SwanParams::new(32, 8, StorageMode::F16));
+        let (out, want) = run_policy(&mut p, d, 60, 6);
+        let err: f32 = out.iter().zip(&want).map(|(a, b)| (a - b).powi(2)).sum::<f32>().sqrt();
+        let norm: f32 = want.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!(err / norm < 0.5, "rel err {}", err / norm);
+    }
+}

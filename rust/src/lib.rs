@@ -1,0 +1,61 @@
+//! SWAN: Sparse Winnowed Attention — decompression-free KV-cache compression.
+//!
+//! This crate is the Layer-3 serving stack of the SWAN reproduction:
+//!
+//! * [`sparse`] / [`swan`] — the paper's core contribution: rotated,
+//!   magnitude-winnowed sparse KV vectors, the hybrid (sparse + dense-buffer)
+//!   cache of Algorithm 1, and attention computed *directly* on the
+//!   compressed representation (no decompression step).
+//! * [`kvcache`] — pluggable cache-compression policies: SWAN (16/8-bit),
+//!   plus the baselines the paper compares against (dense, H2O heavy-hitter
+//!   eviction, StreamingLLM sinks, KIVI-style quantization).
+//! * [`model`] — a rust-native transformer (MHA/GQA + RoPE) that loads the
+//!   JAX-trained `artifacts/weights_*.bin` and is golden-verified against
+//!   the python model; used by the experiment harness.
+//! * [`runtime`] — PJRT execution of the AOT HLO graphs lowered by
+//!   `python/compile/aot.py` (the serving hot path; python never runs at
+//!   request time).
+//! * [`coordinator`] / [`server`] — request router, continuous batcher,
+//!   prefill/decode scheduler, admission control and the runtime-tunable
+//!   compression controller.
+//! * [`eval`] / [`repro`] — the synthetic evaluation suite and one module
+//!   per paper table/figure.
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod swan;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T, E = anyhow::Error> = std::result::Result<T, E>;
+
+/// Locate the artifacts directory: `$SWAN_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walking up from the current dir).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SWAN_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! `swan` — CLI entrypoint for the SWAN serving stack.
+
+use swan::cli::{Args, USAGE};
+use swan::config::ServeConfig;
+use swan::coordinator::Engine;
+use swan::sparse::StorageMode;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_mode(args: &Args) -> anyhow::Result<StorageMode> {
+    match args.get("mode").unwrap_or("16") {
+        "16" => Ok(StorageMode::F16),
+        "8" => Ok(StorageMode::F8),
+        other => anyhow::bail!("--mode must be 16 or 8, got '{other}'"),
+    }
+}
+
+fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
+    let mut cfg = ServeConfig::default();
+    cfg.model = args.get_str("model", &cfg.model);
+    cfg.k_active = args.get_usize("k-active", cfg.k_active)?;
+    cfg.buffer = args.get_usize("buffer", cfg.buffer)?;
+    cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
+    cfg.max_new_tokens = args.get_usize("max-new", cfg.max_new_tokens)?;
+    cfg.mem_budget = args.get_usize("mem-budget", cfg.mem_budget)?;
+    cfg.mode = parse_mode(args)?;
+    cfg.dense_baseline = args.has("dense");
+    cfg.bind = args.get_str("bind", &cfg.bind);
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let artifacts = swan::artifacts_dir();
+    match args.command.as_str() {
+        "serve" => {
+            let cfg = serve_config(args)?;
+            swan::server::serve(&artifacts, cfg)
+        }
+        "generate" => {
+            anyhow::ensure!(!args.positional.is_empty(), "generate: missing prompt");
+            let prompt = args.positional.join(" ");
+            let cfg = serve_config(args)?;
+            let mut engine = Engine::new(&artifacts, cfg)?;
+            let max_new = args.get_usize("max-new", 48)?;
+            engine.submit_text(&prompt, max_new);
+            let responses = engine.run_to_completion()?;
+            for r in responses {
+                println!("{}", r.text);
+                println!(
+                    "[prefill {:.1} ms | {} tokens in {:.1} ms = {:.1} tok/s | kv saving {:.1}%]",
+                    r.stats.prefill_time.as_secs_f64() * 1e3,
+                    r.stats.decode_steps,
+                    r.stats.decode_time.as_secs_f64() * 1e3,
+                    r.stats.decode_tps(),
+                    r.stats.memory_saving() * 100.0
+                );
+            }
+            Ok(())
+        }
+        "eval" => {
+            let cases = args.get_usize("cases", 10)?;
+            let model_name = args.get_str("model", "swan-nano-gqa");
+            let mut ctx = swan::repro::ReproCtx::new(artifacts, cases);
+            let model = ctx.model(&model_name)?;
+            let mut h = swan::eval::Harness::new(model);
+            let mut rows = Vec::new();
+            for t in &swan::eval::tasks::standard_battery(cases, 5) {
+                rows.push(h.run_task(t, swan::kvcache::PolicyKind::Dense));
+                rows.push(h.run_task(
+                    t,
+                    swan::kvcache::PolicyKind::Swan {
+                        k_active: 32,
+                        buffer: 64,
+                        mode: StorageMode::F16,
+                    },
+                ));
+            }
+            print!("{}", swan::eval::harness::format_table(&model_name, &rows));
+            Ok(())
+        }
+        "repro" => {
+            anyhow::ensure!(!args.positional.is_empty(), "repro: missing experiment name");
+            let cases = args.get_usize("cases", 10)?;
+            let mut ctx = swan::repro::ReproCtx::new(artifacts, cases);
+            let names: Vec<&str> = if args.positional[0] == "all" {
+                swan::repro::ALL.to_vec()
+            } else {
+                args.positional.iter().map(String::as_str).collect()
+            };
+            for name in names {
+                eprintln!(">>> running {name} ...");
+                let out = swan::repro::run(name, &mut ctx)?;
+                println!("{out}");
+            }
+            Ok(())
+        }
+        "breakeven" => {
+            let d = args.get_usize("d-head", 128)?;
+            let b = args.get_usize("buffer", 128)?;
+            println!("break-even sequence lengths (d_h={d}, buffer={b}):");
+            println!("{:<10} {:>12}", "k_active", "L*");
+            for frac in [0.25f64, 0.5, 0.75, 0.9] {
+                let k = (frac * d as f64).round() as usize;
+                match swan::swan::breakeven::breakeven_length(d, b, k) {
+                    Some(l) => println!("{k:<10} {l:>12.1}"),
+                    None => println!("{k:<10} {:>12}", "never"),
+                }
+            }
+            Ok(())
+        }
+        "info" => {
+            let store = swan::runtime::ArtifactStore::load(&artifacts)?;
+            println!("artifacts: {}", store.dir.display());
+            for (name, m) in &store.models {
+                println!(
+                    "  {name}: {} layers, {} q / {} kv heads, d_h {}, graphs: {}",
+                    m.config.n_layers,
+                    m.config.n_q_heads,
+                    m.config.n_kv_heads,
+                    m.config.d_head,
+                    m.graphs.len()
+                );
+                println!(
+                    "    decode buckets {:?}, prefill {:?}",
+                    m.decode_buckets(),
+                    m.prefill_buckets()
+                );
+            }
+            let rt = swan::runtime::Runtime::new()?;
+            println!("pjrt platform: {}", rt.platform());
+            Ok(())
+        }
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}

@@ -1,0 +1,11 @@
+//! Rust-native model path: loads `artifacts/weights_*.bin` (trained +
+//! calibrated by the python build step) and runs the transformer forward
+//! with pluggable KV-cache policies.  Golden-verified against the python
+//! model (`tests/golden.rs`).
+
+pub mod generate;
+pub mod transformer;
+pub mod weights;
+
+pub use transformer::{SwanModel, SequenceState};
+pub use weights::WeightFile;

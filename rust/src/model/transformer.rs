@@ -1,0 +1,499 @@
+//! Rust-native SWAN transformer.
+//!
+//! Loads the python-trained weights (original + absorbed) and runs:
+//!
+//! * [`SwanModel::prefill`] — exact (dense, rotated-space) prompt
+//!   processing.  Policy-independent, so the experiment harness computes it
+//!   once per prompt and replays it into any number of cache policies.
+//! * [`SwanModel::decode_step`] — one autoregressive step through a
+//!   [`SequenceState`] whose per-(layer, kv-head) caches are any
+//!   [`CachePolicy`] (SWAN, dense, H2O, StreamingLLM, KIVI).
+//!
+//! The rotation is carried in the weights themselves: Ŵ_V / Ŵ_O are the
+//! absorbed matrices (§4.2) and P_QK is applied at runtime after RoPE —
+//! exactly the structure of the serving graphs in `python/compile/model.py`.
+
+use anyhow::Context;
+
+use crate::config::ModelConfig;
+use crate::kvcache::{CachePolicy, PolicyKind};
+use crate::model::weights::WeightFile;
+use crate::swan::projection::{ProjectionSet, ProjectionVariant};
+use crate::tensor::ops::{dot, gelu, rmsnorm, softmax_inplace, vecmat};
+use crate::tensor::rope::apply_rope;
+
+/// Per-layer weights (rotated-space serving set + originals for
+/// re-absorption under projection ablations).
+#[derive(Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Vec<f32>,     // [d, nq*dh]
+    pub wk: Vec<f32>,     // [d, nkv*dh]
+    pub wv_hat: Vec<f32>, // [d, nkv*dh] absorbed
+    pub wo_hat: Vec<f32>, // [nq*dh, d] absorbed
+    pub mlp_norm: Vec<f32>,
+    pub w1: Vec<f32>, // [d, dff]
+    pub w2: Vec<f32>, // [dff, d]
+    // originals (ablation support)
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+}
+
+pub struct SwanModel {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>, // [vocab, d]
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Vec<f32>, // [d, vocab]
+    /// Runtime rotation for Q/K (post-RoPE).
+    pub proj: ProjectionSet,
+}
+
+/// Exact prefill results (policy-independent).
+pub struct Prefill {
+    /// khat[layer][kv_head] flat [T, d_h], oldest first.
+    pub khat: Vec<Vec<Vec<f32>>>,
+    pub vhat: Vec<Vec<Vec<f32>>>,
+    /// Cumulative attention mass each position received (for H2O seeding):
+    /// mass[layer][kv_head][t].
+    pub mass: Vec<Vec<Vec<f32>>>,
+    /// Logits at the last prompt position.
+    pub logits: Vec<f32>,
+    /// Prompt length.
+    pub len: usize,
+}
+
+/// One live sequence: per-(layer, kv-head) cache policies + position.
+pub struct SequenceState {
+    pub caches: Vec<Box<dyn CachePolicy>>,
+    pub pos: usize,
+    n_kv: usize,
+}
+
+impl SequenceState {
+    pub fn new(model: &SwanModel, kind: PolicyKind) -> SequenceState {
+        let cfg = &model.cfg;
+        let caches = (0..cfg.n_layers * cfg.n_kv_heads)
+            .map(|_| kind.build(cfg.d_head))
+            .collect();
+        SequenceState { caches, pos: 0, n_kv: cfg.n_kv_heads }
+    }
+
+    /// Seed the caches from an exact prefill.
+    pub fn load_prefill(&mut self, pf: &Prefill) {
+        let d = if pf.khat.is_empty() || pf.khat[0].is_empty() || pf.len == 0 {
+            0
+        } else {
+            pf.khat[0][0].len() / pf.len
+        };
+        for (l, layer_k) in pf.khat.iter().enumerate() {
+            for (h, kf) in layer_k.iter().enumerate() {
+                let cache = &mut self.caches[l * self.n_kv + h];
+                cache.load_history(kf, &pf.vhat[l][h], d, Some(&pf.mass[l][h]));
+            }
+        }
+        self.pos = pf.len;
+    }
+
+    pub fn cache(&self, layer: usize, kv_head: usize) -> &dyn CachePolicy {
+        self.caches[layer * self.n_kv + kv_head].as_ref()
+    }
+
+    /// Total cache bytes across all layers/heads.
+    pub fn storage_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.storage_bytes()).sum()
+    }
+}
+
+impl SwanModel {
+    /// Load from a weights container, optionally applying a projection
+    /// ablation (Table 3): non-`Calibrated` variants re-absorb Ŵ_V/Ŵ_O
+    /// from the originals with the ablated P_VO.
+    pub fn load(wf: &WeightFile, variant: ProjectionVariant, seed: u64) -> anyhow::Result<SwanModel> {
+        let cfg = wf.config().context("weights meta")?;
+        let (nl, nkv, dh) = (cfg.n_layers, cfg.n_kv_heads, cfg.d_head);
+
+        // calibrated projections from the artifact
+        let mut proj = ProjectionSet::identity(nl, nkv, dh);
+        for l in 0..nl {
+            let pqk = wf.f32(&format!("l{l}.p_qk"))?;
+            let pvo = wf.f32(&format!("l{l}.p_vo"))?;
+            for h in 0..nkv {
+                proj.p_qk[l][h] = pqk[h * dh * dh..(h + 1) * dh * dh].to_vec();
+                proj.p_vo[l][h] = pvo[h * dh * dh..(h + 1) * dh * dh].to_vec();
+            }
+        }
+        let proj = proj.ablate(variant, seed);
+
+        let mut layers = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let mut lw = LayerWeights {
+                attn_norm: wf.f32(&format!("l{l}.attn_norm"))?.to_vec(),
+                wq: wf.f32(&format!("l{l}.wq"))?.to_vec(),
+                wk: wf.f32(&format!("l{l}.wk"))?.to_vec(),
+                wv_hat: wf.f32(&format!("l{l}.wv_hat"))?.to_vec(),
+                wo_hat: wf.f32(&format!("l{l}.wo_hat"))?.to_vec(),
+                mlp_norm: wf.f32(&format!("l{l}.mlp_norm"))?.to_vec(),
+                w1: wf.f32(&format!("l{l}.w1"))?.to_vec(),
+                w2: wf.f32(&format!("l{l}.w2"))?.to_vec(),
+                wv: wf.f32(&format!("l{l}.wv"))?.to_vec(),
+                wo: wf.f32(&format!("l{l}.wo"))?.to_vec(),
+            };
+            if variant != ProjectionVariant::Calibrated {
+                absorb(&cfg, &mut lw, &proj.p_vo[l]);
+            }
+            layers.push(lw);
+        }
+
+        Ok(SwanModel {
+            embed: wf.f32("embed")?.to_vec(),
+            final_norm: wf.f32("final_norm")?.to_vec(),
+            lm_head: wf.f32("lm_head")?.to_vec(),
+            layers,
+            proj,
+            cfg,
+        })
+    }
+
+    /// Exact rotated-space prefill over `tokens` (policy-independent).
+    pub fn prefill(&self, tokens: &[u32]) -> Prefill {
+        let cfg = &self.cfg;
+        let (t, d, dh, nq, nkv, g) =
+            (tokens.len(), cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut h: Vec<f32> = Vec::with_capacity(t * d);
+        for &tok in tokens {
+            h.extend_from_slice(&self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+
+        let mut khat = vec![vec![Vec::new(); nkv]; cfg.n_layers];
+        let mut vhat = vec![vec![Vec::new(); nkv]; cfg.n_layers];
+        let mut mass = vec![vec![vec![0.0f32; t]; nkv]; cfg.n_layers];
+
+        let mut xn = vec![0.0f32; d];
+        let mut scores: Vec<f32> = Vec::with_capacity(t);
+        for (l, lw) in self.layers.iter().enumerate() {
+            // per-token q/k/v in rotated space
+            let mut qh = vec![0.0f32; t * nq * dh];
+            let kh_l = &mut khat[l];
+            let vh_l = &mut vhat[l];
+            for hd in 0..nkv {
+                kh_l[hd] = vec![0.0; t * dh];
+                vh_l[hd] = vec![0.0; t * dh];
+            }
+            let mut qraw = vec![0.0f32; nq * dh];
+            let mut kraw = vec![0.0f32; nkv * dh];
+            let mut vr = vec![0.0f32; nkv * dh];
+            for ti in 0..t {
+                let x = &h[ti * d..(ti + 1) * d];
+                rmsnorm(x, &lw.attn_norm, cfg.norm_eps, &mut xn);
+                vecmat(&xn, &lw.wq, d, nq * dh, &mut qraw);
+                vecmat(&xn, &lw.wk, d, nkv * dh, &mut kraw);
+                vecmat(&xn, &lw.wv_hat, d, nkv * dh, &mut vr);
+                for j in 0..nq {
+                    apply_rope(&mut qraw[j * dh..(j + 1) * dh], ti as u32, cfg.rope_theta);
+                    self.proj.rotate_qk(
+                        l,
+                        j / g,
+                        &qraw[j * dh..(j + 1) * dh].to_vec(),
+                        &mut qh[(ti * nq + j) * dh..(ti * nq + j + 1) * dh],
+                    );
+                }
+                for hd in 0..nkv {
+                    apply_rope(&mut kraw[hd * dh..(hd + 1) * dh], ti as u32, cfg.rope_theta);
+                    let mut rot = vec![0.0f32; dh];
+                    self.proj
+                        .rotate_qk(l, hd, &kraw[hd * dh..(hd + 1) * dh].to_vec(), &mut rot);
+                    kh_l[hd][ti * dh..(ti + 1) * dh].copy_from_slice(&rot);
+                    vh_l[hd][ti * dh..(ti + 1) * dh]
+                        .copy_from_slice(&vr[hd * dh..(hd + 1) * dh]);
+                }
+            }
+            // causal attention + residual
+            let mut attn_out = vec![0.0f32; nq * dh];
+            for ti in 0..t {
+                for j in 0..nq {
+                    let grp = j / g;
+                    let q = &qh[(ti * nq + j) * dh..(ti * nq + j + 1) * dh];
+                    scores.clear();
+                    for s in 0..=ti {
+                        scores.push(dot(&kh_l[grp][s * dh..(s + 1) * dh], q) * scale);
+                    }
+                    softmax_inplace(&mut scores);
+                    let o = &mut attn_out[j * dh..(j + 1) * dh];
+                    o.iter_mut().for_each(|x| *x = 0.0);
+                    for s in 0..=ti {
+                        let w = scores[s];
+                        mass[l][grp][s] += w;
+                        for (oo, vv) in o.iter_mut().zip(&vh_l[grp][s * dh..(s + 1) * dh]) {
+                            *oo += w * vv;
+                        }
+                    }
+                }
+                let mut proj_out = vec![0.0f32; d];
+                vecmat(&attn_out, &lw.wo_hat, nq * dh, d, &mut proj_out);
+                let hrow = &mut h[ti * d..(ti + 1) * d];
+                for (hr, po) in hrow.iter_mut().zip(&proj_out) {
+                    *hr += po;
+                }
+                // MLP
+                let hrow_copy = h[ti * d..(ti + 1) * d].to_vec();
+                rmsnorm(&hrow_copy, &lw.mlp_norm, cfg.norm_eps, &mut xn);
+                let mut mid = vec![0.0f32; cfg.d_ff];
+                vecmat(&xn, &lw.w1, d, cfg.d_ff, &mut mid);
+                mid.iter_mut().for_each(|m| *m = gelu(*m));
+                let mut back = vec![0.0f32; d];
+                vecmat(&mid, &lw.w2, cfg.d_ff, d, &mut back);
+                let hrow = &mut h[ti * d..(ti + 1) * d];
+                for (hr, b) in hrow.iter_mut().zip(&back) {
+                    *hr += b;
+                }
+            }
+        }
+
+        let last = &h[(t - 1) * d..t * d];
+        rmsnorm(last, &self.final_norm, cfg.norm_eps, &mut xn);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        vecmat(&xn, &self.lm_head, d, cfg.vocab, &mut logits);
+
+        Prefill { khat, vhat, mass, logits, len: t }
+    }
+
+    /// One decode step through the sequence's cache policies; returns the
+    /// logits for `token`'s successor and advances the state.
+    pub fn decode_step(&self, state: &mut SequenceState, token: u32) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, dh, nq, nkv, g) =
+            (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+        let pos = state.pos as u32;
+
+        let mut h = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let mut xn = vec![0.0f32; d];
+        let mut qraw = vec![0.0f32; nq * dh];
+        let mut kraw = vec![0.0f32; nkv * dh];
+        let mut vr = vec![0.0f32; nkv * dh];
+        let mut qhat = vec![0.0f32; nq * dh];
+        let mut khat = vec![0.0f32; nkv * dh];
+        let mut attn_out = vec![0.0f32; nq * dh];
+
+        for (l, lw) in self.layers.iter().enumerate() {
+            rmsnorm(&h, &lw.attn_norm, cfg.norm_eps, &mut xn);
+            vecmat(&xn, &lw.wq, d, nq * dh, &mut qraw);
+            vecmat(&xn, &lw.wk, d, nkv * dh, &mut kraw);
+            vecmat(&xn, &lw.wv_hat, d, nkv * dh, &mut vr);
+            for j in 0..nq {
+                apply_rope(&mut qraw[j * dh..(j + 1) * dh], pos, cfg.rope_theta);
+                let src = qraw[j * dh..(j + 1) * dh].to_vec();
+                self.proj.rotate_qk(l, j / g, &src, &mut qhat[j * dh..(j + 1) * dh]);
+            }
+            for hd in 0..nkv {
+                apply_rope(&mut kraw[hd * dh..(hd + 1) * dh], pos, cfg.rope_theta);
+                let src = kraw[hd * dh..(hd + 1) * dh].to_vec();
+                self.proj.rotate_qk(l, hd, &src, &mut khat[hd * dh..(hd + 1) * dh]);
+            }
+            for j in 0..nq {
+                let grp = j / g;
+                let cache = &mut state.caches[l * nkv + grp];
+                cache.attend(
+                    &qhat[j * dh..(j + 1) * dh],
+                    &khat[grp * dh..(grp + 1) * dh],
+                    &vr[grp * dh..(grp + 1) * dh],
+                    &mut attn_out[j * dh..(j + 1) * dh],
+                );
+            }
+            for hd in 0..nkv {
+                state.caches[l * nkv + hd]
+                    .append(&khat[hd * dh..(hd + 1) * dh], &vr[hd * dh..(hd + 1) * dh]);
+            }
+            let mut proj_out = vec![0.0f32; d];
+            vecmat(&attn_out, &lw.wo_hat, nq * dh, d, &mut proj_out);
+            for (hr, po) in h.iter_mut().zip(&proj_out) {
+                *hr += po;
+            }
+            rmsnorm(&h.clone(), &lw.mlp_norm, cfg.norm_eps, &mut xn);
+            let mut mid = vec![0.0f32; cfg.d_ff];
+            vecmat(&xn, &lw.w1, d, cfg.d_ff, &mut mid);
+            mid.iter_mut().for_each(|m| *m = gelu(*m));
+            let mut back = vec![0.0f32; d];
+            vecmat(&mid, &lw.w2, cfg.d_ff, d, &mut back);
+            for (hr, b) in h.iter_mut().zip(&back) {
+                *hr += b;
+            }
+        }
+
+        state.pos += 1;
+        rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut xn);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        vecmat(&xn, &self.lm_head, d, cfg.vocab, &mut logits);
+        logits
+    }
+}
+
+/// Re-absorb Ŵ_V = W_V · P_VO and Ŵ_O = P_VO^T · W_O per head slice
+/// (the rust mirror of `python/compile/calibrate.absorb_weights`).
+fn absorb(cfg: &ModelConfig, lw: &mut LayerWeights, p_vo: &[Vec<f32>]) {
+    let (d, dh, nq, nkv, g) = (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+    // wv [d, nkv*dh] -> per kv block column-transform
+    for row in 0..d {
+        for hd in 0..nkv {
+            let block = lw.wv[row * nkv * dh + hd * dh..row * nkv * dh + (hd + 1) * dh].to_vec();
+            let p = &p_vo[hd];
+            let out = &mut lw.wv_hat[row * nkv * dh + hd * dh..row * nkv * dh + (hd + 1) * dh];
+            for c in 0..dh {
+                let mut s = 0.0f32;
+                for r in 0..dh {
+                    s += block[r] * p[r * dh + c];
+                }
+                out[c] = s;
+            }
+        }
+    }
+    // wo [nq*dh, d]: head slice j rows j*dh..(j+1)*dh -> P^T @ slice
+    for j in 0..nq {
+        let p = &p_vo[j / g];
+        let src = lw.wo[j * dh * d..(j + 1) * dh * d].to_vec();
+        let dst = &mut lw.wo_hat[j * dh * d..(j + 1) * dh * d];
+        for r in 0..dh {
+            for c in 0..d {
+                let mut s = 0.0f32;
+                for k in 0..dh {
+                    // (P^T)[r,k] = P[k,r]
+                    s += p[k * dh + r] * src[k * d + c];
+                }
+                dst[r * d + c] = s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::sparse::StorageMode;
+    use crate::util::Pcg64;
+
+    /// Build a tiny random model directly (no artifact needed).
+    pub(crate) fn tiny_model(nkv: usize) -> SwanModel {
+        let cfg = ModelConfig {
+            name: "tiny".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: nkv,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 96,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        };
+        let mut r = Pcg64::new(9);
+        let scale = 0.2;
+        let mut layers = Vec::new();
+        for _ in 0..cfg.n_layers {
+            let wv: Vec<f32> = r.normal_vec(32 * nkv * 8).iter().map(|x| x * scale).collect();
+            let wo: Vec<f32> = r.normal_vec(32 * 8 * 4).iter().map(|x| x * scale).collect();
+            layers.push(LayerWeights {
+                attn_norm: vec![1.0; 32],
+                wq: r.normal_vec(32 * 32).iter().map(|x| x * scale).collect(),
+                wk: r.normal_vec(32 * nkv * 8).iter().map(|x| x * scale).collect(),
+                wv_hat: wv.clone(),
+                wo_hat: wo.clone(),
+                mlp_norm: vec![1.0; 32],
+                w1: r.normal_vec(32 * 64).iter().map(|x| x * scale).collect(),
+                w2: r.normal_vec(64 * 32).iter().map(|x| x * scale).collect(),
+                wv,
+                wo,
+            });
+        }
+        SwanModel {
+            embed: r.normal_vec(96 * 32).iter().map(|x| x * 0.5).collect(),
+            layers,
+            final_norm: vec![1.0; 32],
+            lm_head: r.normal_vec(32 * 96).iter().map(|x| x * scale).collect(),
+            proj: ProjectionSet::identity(2, nkv, 8),
+            cfg,
+        }
+    }
+
+    /// Dense decode after exact prefill == continuing the prefill: check
+    /// that prefill(t..n) logits equal step-by-step decode logits with a
+    /// dense policy.
+    #[test]
+    fn decode_consistent_with_prefill() {
+        for nkv in [1usize, 4] {
+            let m = tiny_model(nkv);
+            let tokens: Vec<u32> = (0..10).map(|i| (i * 7 % 96) as u32).collect();
+            let pf_full = m.prefill(&tokens);
+
+            let pf_part = m.prefill(&tokens[..9]);
+            let mut st = SequenceState::new(&m, PolicyKind::Dense);
+            st.load_prefill(&pf_part);
+            let logits = m.decode_step(&mut st, tokens[9]);
+            for (a, b) in logits.iter().zip(&pf_full.logits) {
+                assert!((a - b).abs() < 1e-3, "nkv={nkv}: {a} vs {b}");
+            }
+            assert_eq!(st.pos, 10);
+        }
+    }
+
+    /// SWAN at full retention with a roomy buffer must equal dense.
+    #[test]
+    fn swan_full_retention_matches_dense_decode() {
+        let m = tiny_model(2);
+        let tokens: Vec<u32> = (0..8).map(|i| (i * 5 % 96) as u32).collect();
+        let pf = m.prefill(&tokens);
+
+        let mut dense = SequenceState::new(&m, PolicyKind::Dense);
+        dense.load_prefill(&pf);
+        let mut swan = SequenceState::new(
+            &m,
+            PolicyKind::Swan { k_active: 8, buffer: 4, mode: StorageMode::F32 },
+        );
+        swan.load_prefill(&pf);
+
+        let mut t = 3u32;
+        for _ in 0..4 {
+            let a = m.decode_step(&mut dense, t);
+            let b = m.decode_step(&mut swan, t);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+            t = crate::tensor::ops::argmax(&a) as u32;
+        }
+    }
+
+    /// Projection ablation with orthogonal P must leave the *unpruned*
+    /// model unchanged (Lemma A.1/A.2 in the rust path).
+    #[test]
+    fn random_projection_lossless_without_pruning() {
+        let mut m = tiny_model(2);
+        let tokens: Vec<u32> = (0..8).map(|i| (i * 3 % 96) as u32).collect();
+        let base = m.prefill(&tokens).logits;
+
+        // apply a random orthogonal projection set + re-absorb
+        let proj = ProjectionSet::random(2, 2, 8, 42);
+        for (l, lw) in m.layers.iter_mut().enumerate() {
+            absorb(&m.cfg, lw, &proj.p_vo[l]);
+        }
+        m.proj = proj;
+        let rotated = m.prefill(&tokens).logits;
+        for (a, b) in base.iter().zip(&rotated) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn storage_accounting_spans_all_caches() {
+        let m = tiny_model(2);
+        let mut st = SequenceState::new(
+            &m,
+            PolicyKind::Swan { k_active: 4, buffer: 2, mode: StorageMode::F16 },
+        );
+        let pf = m.prefill(&[1, 2, 3, 4, 5, 6]);
+        st.load_prefill(&pf);
+        // 2 layers * 2 kv heads, each: 4 sparse tokens (2*(3*4+2) bytes) + 2 buffered
+        let per_cache = 4 * 2 * (3 * 4 + 2) + 2 * 2 * 8 * 2;
+        assert_eq!(st.storage_bytes(), 4 * per_cache);
+    }
+}

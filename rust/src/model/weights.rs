@@ -1,0 +1,183 @@
+//! Reader for the binary tensor container written by
+//! `python/compile/common.write_tensors` (see that module for the layout).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"SWANWTS1";
+
+/// A named tensor: f32 or i32 data plus shape.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+/// A loaded tensor container: model meta + named tensors.
+pub struct WeightFile {
+    pub meta: Json,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> anyhow::Result<WeightFile> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> anyhow::Result<WeightFile> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated container at {pos}");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != MAGIC {
+            bail!("bad magic");
+        }
+        let jlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let meta_raw = std::str::from_utf8(take(&mut pos, jlen)?)?.to_string();
+        let meta = Json::parse(&meta_raw).map_err(|e| anyhow::anyhow!("meta json: {e}"))?;
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = std::str::from_utf8(take(&mut pos, nlen)?)?.to_string();
+            let hdr = take(&mut pos, 2)?;
+            let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = shape.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+            let raw = take(&mut pos, numel * 4)?;
+            let data = match dtype {
+                0 => TensorData::F32(
+                    raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                1 => TensorData::I32(
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                ),
+                d => bail!("unknown dtype code {d}"),
+            };
+            tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(WeightFile { meta, tensors })
+    }
+
+    pub fn config(&self) -> anyhow::Result<ModelConfig> {
+        ModelConfig::from_json(&self.meta)
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor '{name}'"))
+    }
+
+    pub fn f32(&self, name: &str) -> anyhow::Result<&[f32]> {
+        self.get(name)?.as_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a container in the python layout and parse it back.
+    fn build_container() -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        let meta = br#"{"name": "t", "x": 1}"#;
+        buf.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": f32 [2,2]
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'a');
+        buf.push(0); // f32
+        buf.push(2); // ndim
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensor "b": i32 [3]
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'b');
+        buf.push(1); // i32
+        buf.push(1);
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        for v in [7i32, 8, 9] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn parses_container() {
+        let wf = WeightFile::parse(&build_container()).unwrap();
+        assert_eq!(wf.meta.get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(wf.f32("a").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(wf.get("b").unwrap().as_i32().unwrap(), &[7, 8, 9]);
+        assert_eq!(wf.get("a").unwrap().shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = build_container();
+        buf[0] = b'X';
+        assert!(WeightFile::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let buf = build_container();
+        assert!(WeightFile::parse(&buf[..buf.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let wf = WeightFile::parse(&build_container()).unwrap();
+        assert!(wf.f32("nope").is_err());
+        assert!(wf.get("a").unwrap().as_i32().is_err());
+    }
+}

@@ -1,0 +1,56 @@
+//! Figure 2a: the compression-pruning trade-off.
+//!
+//! Paper series: effective memory ratio vs retention ratio for 16-bit and
+//! 8-bit sparse values; the shaded region (ratio > 1) is where the sparse
+//! form is *larger* than dense.  Paper facts to reproduce: 16-bit breaks
+//! even at retention ≈ 0.66 (d_h = 128); 8-bit is "almost one-to-one".
+
+use crate::repro::ReproCtx;
+use crate::sparse::memory::{breakeven_retention, compression_ratio, StorageMode};
+
+pub fn run(ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    let mut out = String::from(
+        "# Fig 2a — compression vs pruning (memory ratio per stored vector)\n\n");
+    for &d_h in &[128usize, 64] {
+        out.push_str(&format!("## d_h = {d_h}\n"));
+        out.push_str(&format!(
+            "{:<10} {:>14} {:>14}\n", "retention", "16-bit ratio", "8-bit ratio"));
+        let mut step = 0.05f64;
+        let mut r = step;
+        while r <= 1.0 + 1e-9 {
+            let k = (r * d_h as f64).round() as usize;
+            out.push_str(&format!(
+                "{:<10.2} {:>14.3} {:>14.3}\n",
+                r,
+                compression_ratio(d_h, k, StorageMode::F16),
+                compression_ratio(d_h, k, StorageMode::F8),
+            ));
+            if (r - 0.6).abs() < 1e-9 {
+                step = 0.05; // uniform grid; kept for clarity
+            }
+            r += step;
+        }
+        let be16 = breakeven_retention(d_h, StorageMode::F16);
+        let be8 = breakeven_retention(d_h, StorageMode::F8);
+        out.push_str(&format!(
+            "break-even retention: 16-bit {be16:.3} (paper: ~0.66 at d_h=128), \
+             8-bit {be8:.3} (paper: almost 1.0)\n\n"
+        ));
+    }
+    ctx.emit("fig2a", out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_thresholds() {
+        let mut ctx = ReproCtx::new(std::env::temp_dir().join("swan-none"), 1);
+        ctx.results_dir = std::env::temp_dir().join("swan-results-test");
+        let out = run(&mut ctx).unwrap();
+        assert!(out.contains("d_h = 128"));
+        // the 16-bit break-even row must be ~0.66
+        assert!(out.contains("16-bit 0.66"), "{out}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Figure 3: standard NLP battery on both architectures (GQA vs MHA).
+//!
+//! Paper findings to reproduce: the bt=64 buffer keeps accuracy high to
+//! 50-60% savings while bt=0 degrades sharply; the 8-bit variant shines
+//! under high compression on knowledge tasks; the MHA model (OLMoE
+//! analogue) degrades *less* than the GQA model (Llama analogue).
+
+use crate::eval::tasks::standard_battery;
+use crate::eval::{harness::format_table, Harness};
+use crate::kvcache::PolicyKind;
+use crate::repro::ReproCtx;
+use crate::sparse::StorageMode;
+
+pub fn run(ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    let n_cases = ctx.cases.max(6);
+    let mut out = String::from("# Fig 3 — standard NLP battery, GQA vs MHA\n\n");
+    let d_h = 64usize;
+    let ratios = [0.5f64, 0.2, 0.08];
+    for model_name in ["swan-nano-gqa", "swan-nano-mha"] {
+        let model = ctx.model(model_name)?;
+        let mut h = Harness::new(model);
+        let tasks = standard_battery(n_cases, 77);
+        let mut rows = Vec::new();
+        for t in &tasks {
+            rows.push(h.run_task(t, PolicyKind::Dense));
+        }
+        for &r in &ratios {
+            let k = ((r * d_h as f64).round() as usize).max(1);
+            for (mode, bt) in [
+                (StorageMode::F16, 64usize),
+                (StorageMode::F8, 64),
+                (StorageMode::F16, 0),
+            ] {
+                for t in &tasks {
+                    rows.push(h.run_task(t, PolicyKind::Swan { k_active: k, buffer: bt, mode }));
+                }
+            }
+        }
+        out.push_str(&format_table(model_name, &rows));
+        // per-model average degradation vs dense (the MHA-vs-GQA claim)
+        let dense_avg: f64 =
+            rows[..tasks.len()].iter().map(|r| r.accuracy).sum::<f64>() / tasks.len() as f64;
+        let comp_avg: f64 = rows[tasks.len()..]
+            .iter()
+            .map(|r| r.accuracy)
+            .sum::<f64>()
+            / (rows.len() - tasks.len()) as f64;
+        out.push_str(&format!(
+            "{model_name}: dense avg {dense_avg:.3}, compressed avg {comp_avg:.3}, \
+             drop {:.3}\n\n",
+            dense_avg - comp_avg
+        ));
+    }
+    out.push_str("paper shape: buffered variants stay near dense; bt=0 collapses;\n\
+                  the MHA model's drop is consistently smaller than the GQA model's.\n");
+    ctx.emit("fig3", out)
+}

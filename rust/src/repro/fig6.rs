@@ -1,0 +1,56 @@
+//! Figure 6: remaining LongBench tasks — code completion (LCC analogue),
+//! long classification (TREC analogue via continuation choice over long
+//! contexts), passage retrieval (passkey).
+//!
+//! Paper findings: the 128-token buffer is essential everywhere; buffered
+//! variants trade off gracefully; TREC-style tasks drop sharply beyond
+//! ~50% compression.
+
+use crate::eval::tasks::{Task, TaskKind};
+use crate::eval::{harness::format_table, Harness};
+use crate::kvcache::PolicyKind;
+use crate::repro::ReproCtx;
+use crate::sparse::StorageMode;
+
+pub fn run(ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    let n_cases = ctx.cases.max(5);
+    let model = ctx.model("swan-nano-gqa")?;
+    let mut h = Harness::new(model);
+    let d_h = model.cfg.d_head;
+
+    let tasks = vec![
+        Task { kind: TaskKind::Code { clutter: 12 }, n_cases, seed: 60 },
+        Task { kind: TaskKind::Passkey { distance: 280 }, n_cases, seed: 61 },
+        Task { kind: TaskKind::LongRecall { distance: 320 }, n_cases, seed: 62 },
+    ];
+
+    let mut rows = Vec::new();
+    let mut choice_rows = String::new();
+    for t in &tasks {
+        rows.push(h.run_task(t, PolicyKind::Dense));
+    }
+    // TREC-analogue: continuation choice over a long compressed context
+    let dense_choice = h.continuation_choice(PolicyKind::Dense, n_cases, 260, 16, 7);
+    choice_rows.push_str(&format!(
+        "{:<34} {:>9.3}\n", "dense", dense_choice));
+
+    for &r in &[0.5f64, 0.2, 0.08] {
+        let k = ((r * d_h as f64).round() as usize).max(1);
+        for (mode, bt) in [(StorageMode::F16, 128usize), (StorageMode::F8, 128), (StorageMode::F16, 0)] {
+            let policy = PolicyKind::Swan { k_active: k, buffer: bt, mode };
+            for t in &tasks {
+                rows.push(h.run_task(t, policy));
+            }
+            let c = h.continuation_choice(policy, n_cases, 260, 16, 7);
+            choice_rows.push_str(&format!("{:<34} {:>9.3}\n", policy.label(), c));
+        }
+    }
+    let mut out = String::from("# Fig 6 — LCC / TREC / PassageRetrieval analogues\n\n");
+    out.push_str(&format_table("generation tasks", &rows));
+    out.push_str("\n## long-context continuation choice (TREC-classification analogue)\n");
+    out.push_str(&format!("{:<34} {:>9}\n", "policy", "accuracy"));
+    out.push_str(&choice_rows);
+    out.push_str("\npaper shape: buffer essential; graceful buffered trade-off;\n\
+                  classification-style scores drop sharply past ~50% compression.\n");
+    ctx.emit("fig6", out)
+}

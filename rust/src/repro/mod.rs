@@ -1,0 +1,112 @@
+//! One module per paper table/figure (see DESIGN.md per-experiment index).
+//!
+//! Every module exposes `run(&mut ReproCtx) -> anyhow::Result<String>`
+//! printing the same rows/series the paper reports, measured on the
+//! swan-nano artifacts.  `swan repro <name|all>` drives them; outputs are
+//! also written to `results/<name>.txt` for EXPERIMENTS.md.
+
+pub mod breakeven;
+pub mod fig2a;
+pub mod fig2b;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod motivation;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::Context;
+
+use crate::model::{SwanModel, WeightFile};
+use crate::swan::projection::ProjectionVariant;
+
+/// Shared context: lazily-loaded models + output directory.
+pub struct ReproCtx {
+    pub artifacts: PathBuf,
+    pub results_dir: PathBuf,
+    /// Scale factor for case counts (1 = paper-repro default; smaller for
+    /// smoke runs).
+    pub cases: usize,
+    models: HashMap<String, SwanModel>,
+    weight_files: HashMap<String, WeightFile>,
+}
+
+impl ReproCtx {
+    pub fn new(artifacts: PathBuf, cases: usize) -> ReproCtx {
+        let results_dir = artifacts.parent().unwrap_or(&artifacts).join("results");
+        ReproCtx {
+            artifacts,
+            results_dir,
+            cases,
+            models: HashMap::new(),
+            weight_files: HashMap::new(),
+        }
+    }
+
+    pub fn weight_file(&mut self, name: &str) -> anyhow::Result<&WeightFile> {
+        if !self.weight_files.contains_key(name) {
+            let wf = WeightFile::load(&self.artifacts.join(format!("weights_{name}.bin")))
+                .with_context(|| format!("weights for {name} (run `make artifacts`)"))?;
+            self.weight_files.insert(name.to_string(), wf);
+        }
+        Ok(&self.weight_files[name])
+    }
+
+    pub fn model(&mut self, name: &str) -> anyhow::Result<&SwanModel> {
+        if !self.models.contains_key(name) {
+            let wf = WeightFile::load(&self.artifacts.join(format!("weights_{name}.bin")))
+                .with_context(|| format!("weights for {name} (run `make artifacts`)"))?;
+            let m = SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?;
+            self.models.insert(name.to_string(), m);
+        }
+        Ok(&self.models[name])
+    }
+
+    /// Load a model with an ablated projection set (Table 3).
+    pub fn model_with_variant(
+        &mut self,
+        name: &str,
+        variant: ProjectionVariant,
+        seed: u64,
+    ) -> anyhow::Result<SwanModel> {
+        let wf = self.weight_file(name)?;
+        SwanModel::load(wf, variant, seed)
+    }
+
+    /// Persist an experiment's output and return it.
+    pub fn emit(&self, exp: &str, body: String) -> anyhow::Result<String> {
+        std::fs::create_dir_all(&self.results_dir).ok();
+        std::fs::write(self.results_dir.join(format!("{exp}.txt")), &body)
+            .with_context(|| format!("writing results/{exp}.txt"))?;
+        Ok(body)
+    }
+}
+
+/// All experiment names, in paper order.
+pub const ALL: &[&str] = &[
+    "motivation", "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6",
+    "table1", "table2", "table3", "breakeven",
+];
+
+/// Dispatch by name.
+pub fn run(name: &str, ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    match name {
+        "motivation" => motivation::run(ctx),
+        "fig2a" => fig2a::run(ctx),
+        "fig2b" => fig2b::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "table1" => table1::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "breakeven" => breakeven::run(ctx),
+        other => anyhow::bail!("unknown experiment '{other}' (available: {ALL:?})"),
+    }
+}

@@ -1,0 +1,53 @@
+//! Table 1: performance as a function of the retention ratio
+//! (k_active / d_h) with the serving buffer, on the GQA model.
+//!
+//! Paper rows: ratio ∈ {1.0 (baseline), 0.9, 0.75, 0.5, 0.3}; performance
+//! stays within ~1% of baseline at 0.75, degrades <5% at 0.5, and
+//! collapses at 0.3 (GSM8K first).
+
+use crate::eval::tasks::standard_battery;
+use crate::eval::Harness;
+use crate::kvcache::PolicyKind;
+use crate::repro::fig2b::fewshot_arith_cases;
+use crate::repro::ReproCtx;
+use crate::sparse::StorageMode;
+use crate::util::Pcg64;
+
+pub fn run(ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    let n_cases = ctx.cases.max(6);
+    let model = ctx.model("swan-nano-gqa")?;
+    let mut h = Harness::new(model);
+    let d_h = model.cfg.d_head;
+    let tasks = standard_battery(n_cases, 11);
+    let arith_fs = fewshot_arith_cases(n_cases, 5, 12);
+    let text = crate::eval::corpus::mixed_text(&mut Pcg64::new(99), 320);
+
+    let mut out = String::from("# Table 1 — performance vs retention ratio (bt=64, 16-bit)\n\n");
+    out.push_str(&format!(
+        "{:<8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}\n",
+        "ratio", "arith", "fact", "passkey", "code", "gsm-fs", "ppl", "avg-acc"
+    ));
+    for &r in &[1.0f64, 0.75, 0.5, 0.3, 0.12, 0.05] {
+        let policy = if r >= 1.0 {
+            PolicyKind::Dense
+        } else {
+            let k = ((r * d_h as f64).round() as usize).max(1);
+            PolicyKind::Swan { k_active: k, buffer: 64, mode: StorageMode::F16 }
+        };
+        let mut acc = Vec::new();
+        for t in &tasks {
+            acc.push(h.run_task(t, policy).accuracy);
+        }
+        let gsm = h.run_cases("gsm-fs", &arith_fs, policy).accuracy;
+        let ppl = h.perplexity(&text, policy);
+        let avg = (acc.iter().sum::<f64>() + gsm) / (acc.len() + 1) as f64;
+        out.push_str(&format!(
+            "{:<8} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.2} {:>9.3}\n",
+            if r >= 1.0 { "1.0 (B)".to_string() } else { format!("{r}") },
+            acc[0], acc[1], acc[2], acc[3], gsm, ppl, avg
+        ));
+    }
+    out.push_str("\npaper shape: ~flat to 0.75, mild drop at 0.5, collapse at 0.3\n\
+                  (reasoning task most sensitive; perplexity spikes at 0.3).\n");
+    ctx.emit("table1", out)
+}

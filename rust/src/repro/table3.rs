@@ -1,0 +1,53 @@
+//! Table 3: projection-specificity ablation at 50% retention.
+//!
+//! Variants: ours (calibrated), head-shuffle, layer-shuffle, KV-shuffle,
+//! random orthogonal (+ identity as an extra floor).  Paper finding: the
+//! calibrated, component-specific projections win on every benchmark;
+//! random is worst; all shuffles cost accuracy — the learned subspaces
+//! are layer-, head- and component-specific.
+
+use crate::eval::tasks::standard_battery;
+use crate::eval::Harness;
+use crate::kvcache::PolicyKind;
+use crate::repro::ReproCtx;
+use crate::sparse::StorageMode;
+use crate::swan::projection::ProjectionVariant;
+use crate::util::Pcg64;
+
+pub fn run(ctx: &mut ReproCtx) -> anyhow::Result<String> {
+    let n_cases = ctx.cases.max(6);
+    let d_h = 64usize;
+    let k = d_h / 2; // 50% retention, the paper's ablation point
+    let tasks = standard_battery(n_cases, 31);
+    let text = crate::eval::corpus::mixed_text(&mut Pcg64::new(77), 280);
+
+    let mut out = String::from("# Table 3 — projection ablation (50% retention, bt=0)\n\n");
+    out.push_str(&format!(
+        "{:<26} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9}\n",
+        "projection", "arith", "fact", "passkey", "code", "ppl", "avg-acc"
+    ));
+    let mut ours_avg = -1.0f64;
+    for variant in ProjectionVariant::ALL {
+        let model = ctx.model_with_variant("swan-nano-gqa", variant, 1234)?;
+        let mut h = Harness::new(&model);
+        let policy = PolicyKind::Swan { k_active: k, buffer: 0, mode: StorageMode::F16 };
+        let mut acc = Vec::new();
+        for t in &tasks {
+            acc.push(h.run_task(t, policy).accuracy);
+        }
+        let ppl = h.perplexity(&text, policy);
+        let avg = acc.iter().sum::<f64>() / acc.len() as f64;
+        if variant == ProjectionVariant::Calibrated {
+            ours_avg = avg;
+        }
+        out.push_str(&format!(
+            "{:<26} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.2} {:>9.3}\n",
+            variant.label(), acc[0], acc[1], acc[2], acc[3], ppl, avg
+        ));
+    }
+    out.push_str(&format!(
+        "\nours avg: {ours_avg:.3} — paper: calibrated projections beat every\n\
+         shuffle; random projection degrades most.\n"
+    ));
+    ctx.emit("table3", out)
+}

@@ -1,0 +1,237 @@
+//! Artifact discovery: parses `artifacts/manifest.json` into typed
+//! metadata the engine uses to locate graphs, order weight parameters and
+//! validate runtime argument shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One runtime argument of a graph (after the weight parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+/// One AOT graph.
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub file: PathBuf,
+    /// Weight tensors fed first, in this order.
+    pub param_names: Vec<String>,
+    /// Runtime arguments fed after the weights.
+    pub args: Vec<ArgMeta>,
+}
+
+/// One model's artifact entry.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub weights: PathBuf,
+    pub golden: PathBuf,
+    pub buf: usize,
+    pub graphs: BTreeMap<String, GraphMeta>,
+}
+
+impl ModelArtifacts {
+    /// Decode graph buckets available, sorted: (sparse_len, k_active).
+    pub fn decode_buckets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for name in self.graphs.keys() {
+            if let Some(rest) = name.strip_prefix("decode_l") {
+                if let Some((l, k)) = rest.split_once("_k") {
+                    if let (Ok(l), Ok(k)) = (l.parse(), k.parse()) {
+                        out.push((l, k));
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Prefill buckets (token capacities) available, sorted.
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .graphs
+            .keys()
+            .filter_map(|n| n.strip_prefix("prefill_t").and_then(|t| t.parse().ok()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Smallest decode bucket holding `sparse_len` tokens at >= `k_active`
+    /// retained dims; falls back to the largest bucket.
+    pub fn pick_decode_bucket(&self, sparse_len: usize, k_active: usize) -> Option<(usize, usize)> {
+        let buckets = self.decode_buckets();
+        // exact-k preferred, else smallest k >= requested
+        let ks: Vec<usize> = {
+            let mut v: Vec<usize> = buckets.iter().map(|&(_, k)| k).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let k = ks.iter().copied().find(|&k| k >= k_active).or(ks.last().copied())?;
+        let ls: Vec<usize> = {
+            let mut v: Vec<usize> =
+                buckets.iter().filter(|&&(_, bk)| bk == k).map(|&(l, _)| l).collect();
+            v.sort();
+            v
+        };
+        let l = ls.iter().copied().find(|&l| l >= sparse_len).or(ls.last().copied())?;
+        Some((l, k))
+    }
+}
+
+/// The whole artifact directory.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub prune_graphs: BTreeMap<String, GraphMeta>,
+}
+
+fn parse_graphs(dir: &Path, j: &Json) -> anyhow::Result<BTreeMap<String, GraphMeta>> {
+    let mut graphs = BTreeMap::new();
+    for (gname, g) in j.as_obj().context("graphs not an object")? {
+        let file = dir.join(
+            g.get("file").and_then(Json::as_str).context("graph missing file")?,
+        );
+        let param_names = g
+            .get("param_names")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let mut args = Vec::new();
+        for a in g.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+            args.push(ArgMeta {
+                name: a.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                shape: a
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                dtype: a.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+            });
+        }
+        graphs.insert(gname.clone(), GraphMeta { file, param_names, args });
+    }
+    Ok(graphs)
+}
+
+impl ArtifactStore {
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactStore> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).context("manifest: models")? {
+            let config = ModelConfig::from_json(m.get("config").context("model config")?)?;
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    config,
+                    weights: dir.join(m.get("weights").and_then(Json::as_str).unwrap_or("")),
+                    golden: dir.join(m.get("golden").and_then(Json::as_str).unwrap_or("")),
+                    buf: m.get("buf").and_then(Json::as_usize).unwrap_or(64),
+                    graphs: parse_graphs(dir, m.get("graphs").context("model graphs")?)?,
+                },
+            );
+        }
+        let prune_graphs = j
+            .get("prune_graphs")
+            .map(|g| parse_graphs(dir, g))
+            .transpose()?
+            .unwrap_or_default();
+        Ok(ArtifactStore { dir: dir.to_path_buf(), models, prune_graphs })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest ({:?})",
+                                           self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Json {
+        Json::parse(
+            r#"{"models": {"m": {
+                "config": {"name":"m","d_model":256,"n_layers":4,"n_q_heads":4,
+                           "n_kv_heads":1,"d_head":64,"d_ff":1024,"vocab":96},
+                "weights": "w.bin", "golden": "g.bin", "buf": 64,
+                "graphs": {
+                  "decode_l128_k16": {"file":"a.hlo.txt","param_names":["embed"],"args":[]},
+                  "decode_l128_k32": {"file":"b.hlo.txt","param_names":[],"args":[]},
+                  "decode_l512_k32": {"file":"c.hlo.txt","param_names":[],"args":[]},
+                  "prefill_t64": {"file":"d.hlo.txt","param_names":[],
+                     "args":[{"name":"tokens","shape":[64],"dtype":"int32"}]}
+                }}}}"#,
+        )
+        .unwrap()
+    }
+
+    fn fake_store() -> ArtifactStore {
+        let j = fake_manifest();
+        let dir = Path::new("/tmp/fake");
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).unwrap() {
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    config: ModelConfig::from_json(m.get("config").unwrap()).unwrap(),
+                    weights: dir.join("w.bin"),
+                    golden: dir.join("g.bin"),
+                    buf: 64,
+                    graphs: parse_graphs(dir, m.get("graphs").unwrap()).unwrap(),
+                },
+            );
+        }
+        ArtifactStore { dir: dir.into(), models, prune_graphs: BTreeMap::new() }
+    }
+
+    #[test]
+    fn decode_buckets_parsed() {
+        let s = fake_store();
+        let m = s.model("m").unwrap();
+        assert_eq!(m.decode_buckets(), vec![(128, 16), (128, 32), (512, 32)]);
+        assert_eq!(m.prefill_buckets(), vec![64]);
+    }
+
+    #[test]
+    fn bucket_picking() {
+        let s = fake_store();
+        let m = s.model("m").unwrap();
+        assert_eq!(m.pick_decode_bucket(100, 32), Some((128, 32)));
+        assert_eq!(m.pick_decode_bucket(200, 32), Some((512, 32)));
+        // k above available: falls back to largest k
+        assert_eq!(m.pick_decode_bucket(100, 64), Some((128, 32)));
+        // l above available: falls back to largest bucket
+        assert_eq!(m.pick_decode_bucket(9999, 16), Some((128, 16)));
+    }
+
+    #[test]
+    fn args_parsed() {
+        let s = fake_store();
+        let g = &s.model("m").unwrap().graphs["prefill_t64"];
+        assert_eq!(g.args[0].name, "tokens");
+        assert_eq!(g.args[0].shape, vec![64]);
+        assert_eq!(g.args[0].dtype, "int32");
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        assert!(fake_store().model("nope").is_err());
+    }
+}

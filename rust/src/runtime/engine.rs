@@ -1,0 +1,317 @@
+//! PJRT execution engine.
+//!
+//! Responsibilities:
+//! * one CPU PJRT client per process;
+//! * lazy compile cache: HLO text -> `PjRtLoadedExecutable`, keyed by
+//!   (model, graph) — mirrors vLLM's CUDA-graph pool over shape buckets;
+//! * device-resident weight buffers, uploaded once per model and reused by
+//!   every request (`execute_b`);
+//! * typed host tensors for runtime arguments and outputs.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use crate::model::weights::{TensorData, WeightFile};
+use crate::runtime::artifacts::{ArtifactStore, GraphMeta};
+
+/// A host-side tensor fed to / read from a graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> HostTensor {
+        HostTensor::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> HostTensor {
+        HostTensor::I32(data, shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => anyhow::bail!("expected i32 tensor"),
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(match shape.ty() {
+            xla::ElementType::F32 => HostTensor::F32(lit.to_vec::<f32>()?, dims),
+            xla::ElementType::S32 => HostTensor::I32(lit.to_vec::<i32>()?, dims),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        })
+    }
+}
+
+/// Borrowed view of a runtime argument — lets the serving hot path feed
+/// its live cache arrays without cloning them every decode step (§Perf
+/// L3 optimization; see EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug)]
+pub enum ArgView<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> ArgView<'a> {
+    pub fn shape(&self) -> &'a [usize] {
+        match self {
+            ArgView::F32(_, s) | ArgView::I32(_, s) => s,
+        }
+    }
+
+    pub fn from_host(t: &'a HostTensor) -> ArgView<'a> {
+        match t {
+            HostTensor::F32(d, s) => ArgView::F32(d, s),
+            HostTensor::I32(d, s) => ArgView::I32(d, s),
+        }
+    }
+}
+
+struct CompiledGraph {
+    exe: xla::PjRtLoadedExecutable,
+    n_params: usize,
+}
+
+/// The process-wide PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// (model, graph) -> compiled executable.
+    compiled: Mutex<BTreeMap<(String, String), std::sync::Arc<CompiledGraph>>>,
+    /// model -> device-resident weight buffers in manifest param order.
+    weights: Mutex<BTreeMap<String, std::sync::Arc<Vec<xla::PjRtBuffer>>>>,
+}
+
+// The PJRT CPU client is thread-safe for compilation/execution.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    pub fn new() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            compiled: Mutex::new(BTreeMap::new()),
+            weights: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a model's weights (from its container) as device buffers in
+    /// the given parameter order; cached per model name.
+    pub fn ensure_weights(
+        &self,
+        model: &str,
+        wf: &WeightFile,
+        param_names: &[String],
+    ) -> anyhow::Result<()> {
+        let mut guard = self.weights.lock().unwrap();
+        if guard.contains_key(model) {
+            return Ok(());
+        }
+        let mut bufs = Vec::with_capacity(param_names.len());
+        for name in param_names {
+            let t = wf.get(name)?;
+            let buf = match &t.data {
+                TensorData::F32(d) => {
+                    self.client.buffer_from_host_buffer(d, &t.shape, None)?
+                }
+                TensorData::I32(d) => {
+                    self.client.buffer_from_host_buffer(d, &t.shape, None)?
+                }
+            };
+            bufs.push(buf);
+        }
+        guard.insert(model.to_string(), std::sync::Arc::new(bufs));
+        Ok(())
+    }
+
+    fn compile(&self, model: &str, graph: &str, meta: &GraphMeta) -> anyhow::Result<std::sync::Arc<CompiledGraph>> {
+        {
+            let guard = self.compiled.lock().unwrap();
+            if let Some(c) = guard.get(&(model.to_string(), graph.to_string())) {
+                return Ok(c.clone());
+            }
+        }
+        let path = meta.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO {}: {e:?}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {graph}: {e:?}"))?;
+        let compiled = std::sync::Arc::new(CompiledGraph { exe, n_params: meta.param_names.len() });
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert((model.to_string(), graph.to_string()), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Pre-compile a graph (startup warmup).
+    pub fn warmup(&self, model: &str, graph: &str, meta: &GraphMeta) -> anyhow::Result<()> {
+        self.compile(model, graph, meta).map(|_| ())
+    }
+
+    /// Number of compiled graphs currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    /// Execute `graph` of `model`: weight buffers (if the graph takes
+    /// parameters) followed by `args`.  Returns the flattened tuple
+    /// outputs.
+    pub fn execute(
+        &self,
+        model: &str,
+        graph: &str,
+        meta: &GraphMeta,
+        args: &[HostTensor],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        let views: Vec<ArgView> = args.iter().map(ArgView::from_host).collect();
+        self.execute_views(model, graph, meta, &views)
+    }
+
+    /// Zero-copy variant of [`Runtime::execute`]: arguments are borrowed
+    /// slices uploaded straight to device buffers (the decode hot path
+    /// feeds its live cache arrays this way — no per-step cloning).
+    pub fn execute_views(
+        &self,
+        model: &str,
+        graph: &str,
+        meta: &GraphMeta,
+        args: &[ArgView<'_>],
+    ) -> anyhow::Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            args.len() == meta.args.len(),
+            "graph {graph}: expected {} runtime args, got {}",
+            meta.args.len(),
+            args.len()
+        );
+        for (a, m) in args.iter().zip(&meta.args) {
+            anyhow::ensure!(
+                a.shape() == m.shape.as_slice(),
+                "graph {graph} arg '{}': shape {:?} != expected {:?}",
+                m.name,
+                a.shape(),
+                m.shape
+            );
+        }
+        let compiled = self.compile(model, graph, meta)?;
+
+        let mut arg_bufs = Vec::with_capacity(args.len());
+        for a in args {
+            arg_bufs.push(match a {
+                ArgView::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+                ArgView::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+            });
+        }
+        let out = if compiled.n_params > 0 {
+            let wguard = self.weights.lock().unwrap();
+            let weights = wguard
+                .get(model)
+                .ok_or_else(|| anyhow::anyhow!("weights for '{model}' not uploaded"))?
+                .clone();
+            drop(wguard);
+            // weights stay device-resident; runtime args were uploaded above
+            let all: Vec<&xla::PjRtBuffer> = weights.iter().chain(arg_bufs.iter()).collect();
+            compiled.exe.execute_b(&all).map_err(|e| anyhow::anyhow!("execute {graph}: {e:?}"))?
+        } else {
+            let refs: Vec<&xla::PjRtBuffer> = arg_bufs.iter().collect();
+            compiled.exe.execute_b(&refs).map_err(|e| anyhow::anyhow!("execute {graph}: {e:?}"))?
+        };
+
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {graph}: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {graph}: {e:?}"))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// Convenience: open the artifact store + runtime together.
+pub struct LoadedModel {
+    pub store: ArtifactStore,
+    pub runtime: Runtime,
+    pub model: String,
+}
+
+impl LoadedModel {
+    pub fn open(dir: &Path, model: &str) -> anyhow::Result<LoadedModel> {
+        let store = ArtifactStore::load(dir)?;
+        let runtime = Runtime::new()?;
+        let arts = store.model(model)?;
+        let wf = WeightFile::load(&arts.weights)?;
+        // all graphs share the same param ordering; take any decode graph
+        let names = arts
+            .graphs
+            .values()
+            .find(|g| !g.param_names.is_empty())
+            .map(|g| g.param_names.clone())
+            .unwrap_or_default();
+        runtime.ensure_weights(model, &wf, &names)?;
+        Ok(LoadedModel { store, runtime, model: model.to_string() })
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphMeta> {
+        self.store
+            .model(&self.model)?
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph '{name}' missing"))
+    }
+
+    pub fn execute(&self, graph: &str, args: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
+        let meta = self.graph(graph)?.clone();
+        self.runtime.execute(&self.model, graph, &meta, args)
+    }
+
+    /// Zero-copy execute (serving hot path).
+    pub fn execute_views(&self, graph: &str, args: &[ArgView<'_>]) -> anyhow::Result<Vec<HostTensor>> {
+        let meta = self.graph(graph)?.clone();
+        self.runtime.execute_views(&self.model, graph, &meta, args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.shape(), &[2]);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs where
+    // they can be skipped when artifacts are absent.
+}

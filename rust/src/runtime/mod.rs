@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text graphs lowered by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the serving hot path — python never runs at request time.
+//!
+//! * [`artifacts`] — manifest parsing + artifact discovery.
+//! * [`engine`] — compiled-executable cache, device-resident weight
+//!   buffers (uploaded once per model), typed execute helpers.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactStore, GraphMeta};
+pub use engine::{HostTensor, Runtime};

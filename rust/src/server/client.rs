@@ -1,0 +1,121 @@
+//! Blocking client for the TCP protocol (used by examples, benches and
+//! integration tests; doubles as the reference protocol implementation).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::Context;
+
+/// Parsed per-request stats from the server's STAT line.
+#[derive(Clone, Debug, Default)]
+pub struct GenStats {
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub tokens: usize,
+    pub tps: f64,
+    pub mem_saving_pct: f64,
+}
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    fn line(&mut self) -> anyhow::Result<String> {
+        let mut s = String::new();
+        self.reader.read_line(&mut s)?;
+        anyhow::ensure!(!s.is_empty(), "server closed the connection");
+        Ok(s.trim_end().to_string())
+    }
+
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        writeln!(self.writer, "PING")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == "PONG", "unexpected reply '{l}'");
+        Ok(())
+    }
+
+    pub fn set_k_active(&mut self, k: usize) -> anyhow::Result<()> {
+        writeln!(self.writer, "SET k_active {k}")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == "OK", "unexpected reply '{l}'");
+        Ok(())
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<String> {
+        writeln!(self.writer, "STATS")?;
+        let mut out = String::new();
+        loop {
+            let l = self.line()?;
+            if l == "." {
+                return Ok(out);
+            }
+            out.push_str(&l);
+            out.push('\n');
+        }
+    }
+
+    /// Generate; returns (text, stats).
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> anyhow::Result<(String, GenStats)> {
+        anyhow::ensure!(!prompt.contains('\n'), "prompt must be single-line");
+        writeln!(self.writer, "GEN {max_new} {prompt}")?;
+        let l = self.line()?;
+        let rest = l
+            .strip_prefix("OK ")
+            .ok_or_else(|| anyhow::anyhow!("generation failed: {l}"))?;
+        let text = rest.split_once(' ').map(|(_, t)| t.to_string()).unwrap_or_default();
+        let stat_line = self.line()?;
+        let stats = parse_stat_line(&stat_line).unwrap_or_default();
+        Ok((text, stats))
+    }
+
+    pub fn quit(mut self) {
+        let _ = writeln!(self.writer, "QUIT");
+    }
+}
+
+fn parse_stat_line(line: &str) -> Option<GenStats> {
+    let rest = line.strip_prefix("STAT ")?;
+    let mut s = GenStats::default();
+    for kv in rest.split_whitespace() {
+        let (k, v) = kv.split_once('=')?;
+        let v = v.trim_end_matches('%');
+        match k {
+            "prefill_ms" => s.prefill_ms = v.parse().ok()?,
+            "decode_ms" => s.decode_ms = v.parse().ok()?,
+            "tokens" => s.tokens = v.parse().ok()?,
+            "tps" => s.tps = v.parse().ok()?,
+            "mem_saving" => s.mem_saving_pct = v.parse().ok()?,
+            _ => {}
+        }
+    }
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_line_parses() {
+        let s = parse_stat_line(
+            "STAT prefill_ms=12.50 decode_ms=30.10 tokens=16 tps=531.2 mem_saving=42.3%",
+        )
+        .unwrap();
+        assert_eq!(s.tokens, 16);
+        assert!((s.prefill_ms - 12.5).abs() < 1e-9);
+        assert!((s.mem_saving_pct - 42.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn garbage_stat_line_is_none() {
+        assert!(parse_stat_line("nonsense").is_none());
+    }
+}

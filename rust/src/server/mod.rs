@@ -1,0 +1,18 @@
+//! TCP front-end: a line-oriented protocol over the serving engine.
+//!
+//! Protocol (one command per line):
+//!   GEN <max_new_tokens> <prompt text...>   -> "OK <id> <text>" + stats line
+//!   SET k_active <n>                        -> "OK"
+//!   STATS                                   -> metrics snapshot, "." line
+//!   PING                                    -> "PONG"
+//!   QUIT                                    -> closes the connection
+//!
+//! The engine runs on a dedicated thread; connections are handled by a
+//! small thread pool and communicate via channels (tokio is unavailable
+//! offline — std threads keep the request path dependency-free).
+
+pub mod client;
+pub mod proto;
+pub mod tcp;
+
+pub use tcp::serve;

@@ -1,0 +1,80 @@
+//! Wire protocol parsing for the TCP front-end.
+
+/// A parsed client command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// GEN <max_new> <prompt...>
+    Gen { max_new: usize, prompt: String },
+    /// SET k_active <n>
+    SetKActive(usize),
+    Stats,
+    Ping,
+    Quit,
+}
+
+/// Parse one protocol line.
+pub fn parse_line(line: &str) -> Result<Command, String> {
+    let line = line.trim_end_matches(['\r', '\n']);
+    let mut parts = line.splitn(2, ' ');
+    let verb = parts.next().unwrap_or("").to_ascii_uppercase();
+    let rest = parts.next().unwrap_or("");
+    match verb.as_str() {
+        "GEN" => {
+            let mut p = rest.splitn(2, ' ');
+            let max_new: usize = p
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| "GEN: expected '<max_new_tokens> <prompt>'".to_string())?;
+            let prompt = p.next().unwrap_or("").to_string();
+            if prompt.is_empty() {
+                return Err("GEN: empty prompt".into());
+            }
+            Ok(Command::Gen { max_new, prompt })
+        }
+        "SET" => {
+            let mut p = rest.split_whitespace();
+            match (p.next(), p.next()) {
+                (Some("k_active"), Some(n)) => n
+                    .parse()
+                    .map(Command::SetKActive)
+                    .map_err(|_| "SET k_active: bad number".to_string()),
+                _ => Err("SET: expected 'k_active <n>'".into()),
+            }
+        }
+        "STATS" => Ok(Command::Stats),
+        "PING" => Ok(Command::Ping),
+        "QUIT" => Ok(Command::Quit),
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_gen() {
+        assert_eq!(
+            parse_line("GEN 32 the passkey is\n").unwrap(),
+            Command::Gen { max_new: 32, prompt: "the passkey is".into() }
+        );
+    }
+
+    #[test]
+    fn parses_set_and_misc() {
+        assert_eq!(parse_line("SET k_active 16").unwrap(), Command::SetKActive(16));
+        assert_eq!(parse_line("stats").unwrap(), Command::Stats);
+        assert_eq!(parse_line("PING").unwrap(), Command::Ping);
+        assert_eq!(parse_line("QUIT\r\n").unwrap(), Command::Quit);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_line("GEN").is_err());
+        assert!(parse_line("GEN x y").is_err());
+        assert!(parse_line("GEN 5 ").is_err());
+        assert!(parse_line("SET foo 3").is_err());
+        assert!(parse_line("NOPE").is_err());
+    }
+}

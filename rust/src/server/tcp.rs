@@ -1,0 +1,173 @@
+//! TCP serving loop.
+//!
+//! One engine thread owns the [`Engine`]; connection threads translate
+//! protocol lines into engine commands over channels.  Generation is
+//! synchronous per connection (the engine still interleaves decode across
+//! concurrent connections — iteration-level batching happens inside
+//! `Engine::step`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::config::ServeConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Request, Response};
+use crate::server::proto::{parse_line, Command};
+
+enum EngineCmd {
+    Gen { req: Request, reply: mpsc::Sender<anyhow::Result<Response>> },
+    SetK(usize),
+    Stats(mpsc::Sender<String>),
+    Shutdown,
+}
+
+/// Engine thread: pulls commands, steps the engine, routes completions.
+fn engine_thread(mut engine: Engine, rx: mpsc::Receiver<EngineCmd>) {
+    let mut waiters: std::collections::HashMap<u64, mpsc::Sender<anyhow::Result<Response>>> =
+        std::collections::HashMap::new();
+    loop {
+        // drain commands (non-blocking when busy, blocking when idle)
+        loop {
+            let cmd = if engine.has_work() {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                }
+            };
+            match cmd {
+                EngineCmd::Gen { req, reply } => {
+                    let id = engine.submit(req);
+                    waiters.insert(id, reply);
+                }
+                EngineCmd::SetK(k) => engine.set_k_active(k),
+                EngineCmd::Stats(tx) => {
+                    let mut s = engine.metrics.snapshot();
+                    s.push_str(&format!("k_active: {}\n", engine.current_k_active()));
+                    s.push_str(&format!("queue: {} active: {}\n",
+                        0, // queue length folded into metrics
+                        engine.live_cache_bytes()));
+                    let _ = tx.send(s);
+                }
+                EngineCmd::Shutdown => return,
+            }
+        }
+        if let Err(e) = engine.step() {
+            log::error!("engine step failed: {e:#}");
+        }
+        while let Some(resp) = engine.pop_finished() {
+            if let Some(tx) = waiters.remove(&resp.id) {
+                let _ = tx.send(Ok(resp));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<EngineCmd>>>, max_new_cap: usize) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line) {
+            Ok(Command::Quit) => break,
+            Ok(Command::Ping) => {
+                let _ = writeln!(writer, "PONG");
+            }
+            Ok(Command::Stats) => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.lock().unwrap().send(EngineCmd::Stats(rtx));
+                if let Ok(s) = rrx.recv() {
+                    let _ = write!(writer, "{s}");
+                }
+                let _ = writeln!(writer, ".");
+            }
+            Ok(Command::SetKActive(k)) => {
+                let _ = tx.lock().unwrap().send(EngineCmd::SetK(k));
+                let _ = writeln!(writer, "OK");
+            }
+            Ok(Command::Gen { max_new, prompt }) => {
+                let (rtx, rrx) = mpsc::channel();
+                let req = Request::from_text(0, &prompt, max_new.min(max_new_cap));
+                let _ = tx.lock().unwrap().send(EngineCmd::Gen { req, reply: rtx });
+                match rrx.recv() {
+                    Ok(Ok(resp)) => {
+                        let _ = writeln!(writer, "OK {} {}", resp.id, resp.text);
+                        let _ = writeln!(
+                            writer,
+                            "STAT prefill_ms={:.2} decode_ms={:.2} tokens={} tps={:.1} mem_saving={:.1}%",
+                            resp.stats.prefill_time.as_secs_f64() * 1e3,
+                            resp.stats.decode_time.as_secs_f64() * 1e3,
+                            resp.stats.decode_steps,
+                            resp.stats.decode_tps(),
+                            resp.stats.memory_saving() * 100.0
+                        );
+                    }
+                    Ok(Err(e)) => {
+                        let _ = writeln!(writer, "ERR {e}");
+                    }
+                    Err(_) => {
+                        let _ = writeln!(writer, "ERR engine gone");
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                let _ = writeln!(writer, "ERR {e}");
+            }
+        }
+    }
+    log::info!("connection {peer} closed");
+}
+
+/// Serve until the process is killed.  Binds `cfg.bind`.
+pub fn serve(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<()> {
+    serve_with_ready(artifacts_dir, cfg, |_| {})
+}
+
+/// Like [`serve`], invoking `on_ready(local_addr)` once listening (used by
+/// tests to learn the ephemeral port).
+pub fn serve_with_ready(
+    artifacts_dir: &std::path::Path,
+    cfg: ServeConfig,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let max_new_cap = cfg.max_new_tokens.max(1) * 8;
+    let engine = Engine::new(artifacts_dir, cfg.clone())?;
+    engine.warmup()?;
+    let (tx, rx) = mpsc::channel();
+    let tx = Arc::new(Mutex::new(tx));
+    std::thread::spawn(move || engine_thread(engine, rx));
+
+    let listener = TcpListener::bind(&cfg.bind)?;
+    let addr = listener.local_addr()?;
+    println!("swan serving {} on {addr} (k_active={} buffer={} mode={})",
+        cfg.model, cfg.k_active, cfg.buffer, cfg.mode.label());
+    on_ready(addr);
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let tx = tx.clone();
+                std::thread::spawn(move || handle_conn(s, tx, max_new_cap));
+            }
+            Err(e) => log::warn!("accept: {e}"),
+        }
+    }
+    // unreachable: incoming() iterates forever; keep the sender alive
+    drop(tx);
+    let _ = EngineCmd::Shutdown;
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Eq. 1 memory accounting and the §1 motivation calculator.
+//!
+//! `M_sparse = k_active * (sizeof(value) + sizeof(int8)) + 2` bytes per
+//! vector; dense is `d_h * 2` bytes (f16 serving convention).  These
+//! formulas drive Fig. 2a, the admission controller, and the `repro
+//! motivation` table.
+
+/// How sparse values are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageMode {
+    /// float16 values: 3*k + 2 bytes/vector (paper default).
+    F16,
+    /// fp8 E4M3 values: 2*k + 2 bytes/vector (aggressive mode).
+    F8,
+    /// float32 values (diagnostics only; never used for serving accounting).
+    F32,
+}
+
+impl StorageMode {
+    pub fn value_bytes(self) -> usize {
+        match self {
+            StorageMode::F16 => 2,
+            StorageMode::F8 => 1,
+            StorageMode::F32 => 4,
+        }
+    }
+
+    /// Eq. 1: bytes for one winnowed vector with `k` retained dims
+    /// (+1 byte/entry int8 index, +2 bytes CSR offset).
+    pub fn vector_bytes(self, k: usize) -> usize {
+        k * (self.value_bytes() + 1) + 2
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            StorageMode::F16 => "16-bit",
+            StorageMode::F8 => "8-bit",
+            StorageMode::F32 => "32-bit",
+        }
+    }
+}
+
+/// Dense vector bytes at serving precision (f16, as the paper assumes).
+pub fn dense_vector_bytes(d_h: usize) -> usize {
+    d_h * 2
+}
+
+/// Compression ratio of the sparse representation vs dense
+/// (Fig. 2a y-axis): `< 1` means the sparse form is smaller.
+pub fn compression_ratio(d_h: usize, k_active: usize, mode: StorageMode) -> f64 {
+    mode.vector_bytes(k_active) as f64 / dense_vector_bytes(d_h) as f64
+}
+
+/// Retention ratio at which sparse storage breaks even with dense
+/// (Fig. 2a shaded-region boundary): solves vector_bytes(k) == 2*d_h for
+/// k/d_h.
+pub fn breakeven_retention(d_h: usize, mode: StorageMode) -> f64 {
+    let per_entry = (mode.value_bytes() + 1) as f64;
+    ((dense_vector_bytes(d_h) as f64 - 2.0) / per_entry) / d_h as f64
+}
+
+/// Whole-model KV-cache memory model (the §1 motivation numbers).
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    /// bytes per stored scalar for the dense cache (2 = f16).
+    pub dense_scalar_bytes: usize,
+}
+
+impl MemoryModel {
+    pub fn llama2_7b() -> MemoryModel {
+        MemoryModel { n_layers: 32, n_kv_heads: 32, d_head: 128, dense_scalar_bytes: 2 }
+    }
+
+    /// Model for the swan-nano artifacts.
+    pub fn nano(n_layers: usize, n_kv_heads: usize, d_head: usize) -> MemoryModel {
+        MemoryModel { n_layers, n_kv_heads, d_head, dense_scalar_bytes: 2 }
+    }
+
+    /// Dense KV-cache bytes per token (K and V).
+    pub fn dense_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.d_head * self.dense_scalar_bytes
+    }
+
+    /// Dense KV-cache bytes for a full batch of sequences.
+    pub fn dense_bytes(&self, seq_len: usize, batch: usize) -> usize {
+        self.dense_bytes_per_token() * seq_len * batch
+    }
+
+    /// SWAN hybrid-cache bytes for one sequence: `buffer` recent tokens
+    /// dense + the rest winnowed at `k_active` in `mode`.
+    pub fn swan_bytes(&self, seq_len: usize, buffer: usize, k_active: usize,
+                      mode: StorageMode) -> usize {
+        let heads = self.n_layers * self.n_kv_heads;
+        let dense_tokens = seq_len.min(buffer);
+        let sparse_tokens = seq_len - dense_tokens;
+        let dense = 2 * heads * self.d_head * self.dense_scalar_bytes * dense_tokens;
+        let sparse = 2 * heads * mode.vector_bytes(k_active) * sparse_tokens;
+        dense + sparse
+    }
+
+    /// Fraction of dense memory that the SWAN cache occupies.
+    pub fn swan_ratio(&self, seq_len: usize, buffer: usize, k_active: usize,
+                      mode: StorageMode) -> f64 {
+        self.swan_bytes(seq_len, buffer, k_active, mode) as f64
+            / self.dense_bytes(seq_len, 1) as f64
+    }
+}
+
+/// Pretty-print byte counts.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_paper_values() {
+        // paper: d_h=128, f16 -> 3k+2; dense 256 B
+        assert_eq!(StorageMode::F16.vector_bytes(64), 194);
+        assert_eq!(StorageMode::F8.vector_bytes(64), 130);
+        assert_eq!(dense_vector_bytes(128), 256);
+    }
+
+    #[test]
+    fn paper_breakeven_is_66_percent_f16() {
+        // paper: "must prune over 34% just to break even" for 16-bit
+        let be = breakeven_retention(128, StorageMode::F16);
+        assert!((be - 0.661).abs() < 0.01, "{be}");
+        // 8-bit "almost one-to-one"
+        let be8 = breakeven_retention(128, StorageMode::F8);
+        assert!(be8 > 0.98, "{be8}");
+    }
+
+    #[test]
+    fn compression_monotonic_in_k() {
+        let mut last = 0.0;
+        for k in (8..=128).step_by(8) {
+            let r = compression_ratio(128, k, StorageMode::F16);
+            assert!(r > last);
+            last = r;
+        }
+    }
+
+    #[test]
+    fn motivation_llama2_7b_32k() {
+        // paper §1: Llama-2 7B, 32k tokens, batch 16 -> ~256 GB KV cache
+        let m = MemoryModel::llama2_7b();
+        let bytes = m.dense_bytes(32 * 1024, 16);
+        let gib = bytes as f64 / (1u64 << 30) as f64;
+        assert!((gib - 256.0).abs() < 8.0, "{gib} GiB");
+    }
+
+    #[test]
+    fn swan_ratio_limits() {
+        let m = MemoryModel::nano(4, 1, 64);
+        // no compression if everything fits in the buffer
+        assert_eq!(m.swan_ratio(64, 128, 16, StorageMode::F16), 1.0);
+        // long sequence, tiny buffer: approaches vector ratio
+        let r = m.swan_ratio(100_000, 0, 16, StorageMode::F16);
+        let expect = compression_ratio(64, 16, StorageMode::F16);
+        assert!((r - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn swan_bytes_additive() {
+        let m = MemoryModel::nano(2, 2, 64);
+        let total = m.swan_bytes(100, 20, 16, StorageMode::F8);
+        let dense_part = 2 * 4 * 64 * 2 * 20;
+        let sparse_part = 2 * 4 * StorageMode::F8.vector_bytes(16) * 80;
+        assert_eq!(total, dense_part + sparse_part);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(100), "100 B");
+        assert!(human_bytes(10 * 1024).contains("KiB"));
+        assert!(human_bytes(3 << 30).contains("GiB"));
+    }
+}

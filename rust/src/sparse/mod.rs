@@ -1,0 +1,12 @@
+//! Sparse KV-vector substrate: winnowed (top-k) vectors, their CSR-style
+//! storage, quantized storage modes, and the paper's Eq. 1 byte accounting.
+
+pub mod memory;
+pub mod store;
+pub mod topk;
+pub mod vector;
+
+pub use memory::{MemoryModel, StorageMode};
+pub use store::SparseStore;
+pub use topk::{topk_indices, topk_prune};
+pub use vector::SparseVec;

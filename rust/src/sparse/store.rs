@@ -1,0 +1,221 @@
+//! Contiguous CSR store for winnowed vectors (§Perf L3 optimization).
+//!
+//! The first implementation kept one heap-allocated [`SparseVec`] per
+//! cached token; at L >= 2k tokens the pointer chasing dominated the
+//! attention walk (see EXPERIMENTS.md §Perf "before").  This store packs
+//! all rows into three flat arrays (values, indices, offsets) — the
+//! actual CSR layout §5.1 accounts for — so the score/output loops stream
+//! contiguous memory exactly like the dense baseline does.
+
+use crate::sparse::memory::StorageMode;
+use crate::sparse::topk::topk_indices_select;
+use crate::util::fp::{quantize_f16, quantize_fp8};
+
+/// Flat CSR store of winnowed rows, append-only.
+#[derive(Clone, Debug, Default)]
+pub struct SparseStore {
+    vals: Vec<f32>,
+    idx: Vec<u16>,
+    /// Row boundaries; offsets.len() == rows + 1.  Rows may have different
+    /// nnz (runtime-tunable k_active).
+    offsets: Vec<u32>,
+    /// Bytes of the stored representation (accumulated per Eq. 1, since
+    /// rows can be written under different storage modes).
+    bytes: usize,
+}
+
+impl SparseStore {
+    pub fn new() -> SparseStore {
+        SparseStore { vals: Vec::new(), idx: Vec::new(), offsets: vec![0], bytes: 0 }
+    }
+
+    pub fn with_capacity(rows: usize, k: usize) -> SparseStore {
+        let mut s = SparseStore::new();
+        s.vals.reserve(rows * k);
+        s.idx.reserve(rows * k);
+        s.offsets.reserve(rows + 1);
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Winnow `dense` to its top-`k` dims and append as a new row.
+    pub fn push_pruned(&mut self, dense: &[f32], k: usize, mode: StorageMode) {
+        let ki = topk_indices_select(dense, k);
+        for &i in &ki {
+            let v = dense[i as usize];
+            self.vals.push(match mode {
+                StorageMode::F16 => quantize_f16(v),
+                StorageMode::F8 => quantize_fp8(v),
+                StorageMode::F32 => v,
+            });
+            self.idx.push(i);
+        }
+        self.offsets.push(self.vals.len() as u32);
+        self.bytes += mode.vector_bytes(ki.len());
+    }
+
+    /// Row accessor: (values, indices).
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[f32], &[u16]) {
+        let lo = self.offsets[r] as usize;
+        let hi = self.offsets[r + 1] as usize;
+        (&self.vals[lo..hi], &self.idx[lo..hi])
+    }
+
+    pub fn nnz(&self, r: usize) -> usize {
+        (self.offsets[r + 1] - self.offsets[r]) as usize
+    }
+
+    /// Decompression-free scores for ALL rows against a dense query:
+    /// out[r] = sum_j vals[r,j] * q[idx[r,j]] * scale.  Contiguous walk;
+    /// the inner gather uses unchecked indexing (indices are validated at
+    /// insertion: every idx < d_h <= q.len()) with 2-way unrolling to
+    /// hide gather latency — see EXPERIMENTS.md §Perf.
+    pub fn scores_into(&self, q: &[f32], scale: f32, out: &mut Vec<f32>) {
+        out.reserve(self.len());
+        for r in 0..self.len() {
+            let lo = self.offsets[r] as usize;
+            let hi = self.offsets[r + 1] as usize;
+            let vals = &self.vals[lo..hi];
+            let idx = &self.idx[lo..hi];
+            let n = vals.len();
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            let pairs = n / 2;
+            // SAFETY: idx entries are < d_h (checked at push), q.len() >= d_h
+            // (debug-asserted by callers), and j bounds follow from `pairs`.
+            unsafe {
+                for p in 0..pairs {
+                    let j = 2 * p;
+                    s0 += vals.get_unchecked(j) * q.get_unchecked(*idx.get_unchecked(j) as usize);
+                    s1 += vals.get_unchecked(j + 1)
+                        * q.get_unchecked(*idx.get_unchecked(j + 1) as usize);
+                }
+                if n % 2 == 1 {
+                    s0 += vals.get_unchecked(n - 1)
+                        * q.get_unchecked(*idx.get_unchecked(n - 1) as usize);
+                }
+            }
+            out.push((s0 + s1) * scale);
+        }
+    }
+
+    /// Weighted scatter-add of all rows: out += sum_r w[r] * row_r.
+    /// Unchecked indexing as in [`SparseStore::scores_into`].
+    pub fn axpy_all(&self, w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), self.len());
+        for r in 0..self.len() {
+            let lo = self.offsets[r] as usize;
+            let hi = self.offsets[r + 1] as usize;
+            let wr = w[r];
+            // SAFETY: idx entries < d_h <= out.len() (validated at push).
+            unsafe {
+                for j in lo..hi {
+                    let i = *self.idx.get_unchecked(j) as usize;
+                    *out.get_unchecked_mut(i) += wr * self.vals.get_unchecked(j);
+                }
+            }
+        }
+    }
+
+    /// Eq. 1 bytes of everything stored.
+    pub fn storage_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Reconstruct row `r` densely (tests/error analysis only).
+    pub fn reconstruct(&self, r: usize, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        let (vals, idx) = self.row(r);
+        for (v, &i) in vals.iter().zip(idx) {
+            out[i as usize] = *v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn rows_match_sparsevec() {
+        let mut rng = Pcg64::new(0);
+        let mut store = SparseStore::new();
+        let rows: Vec<Vec<f32>> = (0..20).map(|_| rng.normal_vec(64)).collect();
+        for r in &rows {
+            store.push_pruned(r, 16, StorageMode::F16);
+        }
+        assert_eq!(store.len(), 20);
+        for (i, r) in rows.iter().enumerate() {
+            let sv = SparseVec::prune(r, 16, StorageMode::F16);
+            let (vals, idx) = store.row(i);
+            assert_eq!(vals, sv.vals.as_slice());
+            let idx16: Vec<u16> = idx.to_vec();
+            assert_eq!(idx16, sv.idx);
+        }
+    }
+
+    #[test]
+    fn scores_and_axpy_match_per_row_ops() {
+        let mut rng = Pcg64::new(1);
+        let mut store = SparseStore::new();
+        let rows: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(32)).collect();
+        for r in &rows {
+            store.push_pruned(r, 8, StorageMode::F32);
+        }
+        let q = rng.normal_vec(32);
+        let mut scores = Vec::new();
+        store.scores_into(&q, 0.5, &mut scores);
+        for (i, r) in rows.iter().enumerate() {
+            let sv = SparseVec::prune(r, 8, StorageMode::F32);
+            assert!((scores[i] - 0.5 * sv.dot_dense(&q)).abs() < 1e-5);
+        }
+        let w: Vec<f32> = (0..12).map(|i| 0.1 * i as f32).collect();
+        let mut out = vec![0.0f32; 32];
+        store.axpy_all(&w, &mut out);
+        let mut want = vec![0.0f32; 32];
+        for (i, r) in rows.iter().enumerate() {
+            SparseVec::prune(r, 8, StorageMode::F32).axpy_into(w[i], &mut want);
+        }
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mixed_k_rows_supported() {
+        // runtime-tunable k: rows written at different k coexist
+        let mut store = SparseStore::new();
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        store.push_pruned(&x, 4, StorageMode::F16);
+        store.push_pruned(&x, 8, StorageMode::F8);
+        assert_eq!(store.nnz(0), 4);
+        assert_eq!(store.nnz(1), 8);
+        assert_eq!(
+            store.storage_bytes(),
+            StorageMode::F16.vector_bytes(4) + StorageMode::F8.vector_bytes(8)
+        );
+    }
+
+    #[test]
+    fn scores_append_preserves_existing() {
+        let mut store = SparseStore::new();
+        store.push_pruned(&[1.0, -2.0, 3.0], 2, StorageMode::F32);
+        let q = [1.0f32, 1.0, 1.0];
+        let mut scores = vec![99.0];
+        store.scores_into(&q, 1.0, &mut scores);
+        assert_eq!(scores.len(), 2);
+        assert_eq!(scores[0], 99.0);
+        assert_eq!(scores[1], 1.0); // 3.0 + (-2.0)
+    }
+}

@@ -1,0 +1,104 @@
+//! Magnitude top-k selection (Algorithm 1, `arg TopK(|v|, k_active)`).
+//!
+//! Matches the python oracle exactly: entries ordered by descending
+//! magnitude, ties broken by lower index first.
+
+/// Indices of the `k` largest-magnitude entries of `x`, magnitude-descending
+/// (ties: lower index first).  O(d log d); see `topk_select` for the O(d)
+/// partial-select variant used on the hot path.
+pub fn topk_indices(x: &[f32], k: usize) -> Vec<u16> {
+    let k = k.min(x.len());
+    let mut idx: Vec<u16> = (0..x.len() as u16).collect();
+    idx.sort_by(|&a, &b| {
+        let ma = x[a as usize].abs();
+        let mb = x[b as usize].abs();
+        mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// (values, indices) of the top-k magnitude entries, original signs kept.
+pub fn topk_prune(x: &[f32], k: usize) -> (Vec<f32>, Vec<u16>) {
+    let idx = topk_indices(x, k);
+    let vals = idx.iter().map(|&i| x[i as usize]).collect();
+    (vals, idx)
+}
+
+/// Partial-selection top-k: O(d) average via quickselect on magnitudes, then
+/// sorts only the selected k entries.  Same output contract as
+/// [`topk_indices`].  Used on the eviction hot path (see EXPERIMENTS.md
+/// §Perf).
+pub fn topk_indices_select(x: &[f32], k: usize) -> Vec<u16> {
+    let d = x.len();
+    let k = k.min(d);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == d {
+        return topk_indices(x, k);
+    }
+    let mut idx: Vec<u16> = (0..d as u16).collect();
+    // quickselect so that the first k entries are the k largest magnitudes
+    let cmp = |a: &u16, b: &u16| {
+        let ma = x[*a as usize].abs();
+        let mb = x[*b as usize].abs();
+        mb.partial_cmp(&ma).unwrap().then(a.cmp(b))
+    };
+    idx.select_nth_unstable_by(k - 1, cmp);
+    idx.truncate(k);
+    idx.sort_by(cmp);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let x = [1.0f32, -5.0, 0.1, 3.0, -2.0];
+        let (vals, idx) = topk_prune(&x, 3);
+        assert_eq!(idx, vec![1, 3, 4]);
+        assert_eq!(vals, vec![-5.0, 3.0, -2.0]);
+    }
+
+    #[test]
+    fn tie_break_lower_index_first() {
+        let x = [2.0f32, -2.0, 2.0];
+        let idx = topk_indices(&x, 2);
+        assert_eq!(idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn k_zero_and_k_full() {
+        let x = [1.0f32, 2.0];
+        assert!(topk_indices(&x, 0).is_empty());
+        assert_eq!(topk_indices(&x, 5), vec![1, 0]);
+    }
+
+    #[test]
+    fn select_variant_matches_sort_variant() {
+        let mut r = Pcg64::new(0);
+        for _ in 0..200 {
+            let d = 1 + r.below(128) as usize;
+            let k = r.below(d as u64 + 1) as usize;
+            let x = r.normal_vec(d);
+            assert_eq!(topk_indices(&x, k), topk_indices_select(&x, k), "d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn pruned_energy_is_maximal() {
+        // no other k-subset can carry more L2 energy
+        let mut r = Pcg64::new(1);
+        let x = r.normal_vec(32);
+        let (vals, _) = topk_prune(&x, 8);
+        let kept: f32 = vals.iter().map(|v| v * v).sum();
+        let mut sorted: Vec<f32> = x.iter().map(|v| v * v).collect();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let best: f32 = sorted[..8].iter().sum();
+        assert!((kept - best).abs() < 1e-5);
+    }
+}

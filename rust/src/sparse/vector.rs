@@ -1,0 +1,176 @@
+//! The winnowed sparse vector: (values, indices) of the top-k_active
+//! rotated dimensions, with value storage in f16 or fp8-E4M3.
+//!
+//! This is the unit of the paper's Eq. 1: a d_h-dim vector stored as
+//! `k_active * (sizeof(value) + sizeof(int8)) + 2` bytes.  The in-memory
+//! struct keeps f32 working copies for compute (dequantize-on-read happens
+//! at construction); `storage_bytes` reports the bytes the *stored*
+//! representation occupies, which is what the memory accounting and the
+//! serving admission controller use.
+
+use crate::sparse::memory::StorageMode;
+use crate::sparse::topk::topk_indices_select;
+use crate::tensor::ops::dot;
+use crate::util::fp::{quantize_f16, quantize_fp8};
+
+/// A magnitude-winnowed sparse vector in the rotated space.
+#[derive(Clone, Debug)]
+pub struct SparseVec {
+    /// Values after storage quantization, dequantized to f32 for compute.
+    pub vals: Vec<f32>,
+    /// Dimension indices (u8-range for d_h <= 256; stored u16 for safety).
+    pub idx: Vec<u16>,
+    /// Original dense dimensionality d_h.
+    pub dim: u16,
+    /// Storage mode the values round-tripped through.
+    pub mode: StorageMode,
+}
+
+impl SparseVec {
+    /// Winnow a dense rotated vector to its top-`k_active` dimensions
+    /// (Algorithm 1 lines 7-8), quantizing values per `mode`.
+    pub fn prune(dense: &[f32], k_active: usize, mode: StorageMode) -> SparseVec {
+        let idx = topk_indices_select(dense, k_active);
+        let vals = idx
+            .iter()
+            .map(|&i| match mode {
+                StorageMode::F16 => quantize_f16(dense[i as usize]),
+                StorageMode::F8 => quantize_fp8(dense[i as usize]),
+                StorageMode::F32 => dense[i as usize],
+            })
+            .collect();
+        SparseVec { vals, idx, dim: dense.len() as u16, mode }
+    }
+
+    /// Number of retained dimensions (k_active, unless the vector was
+    /// shorter).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Bytes of the stored representation (Eq. 1).
+    pub fn storage_bytes(&self) -> usize {
+        self.mode.vector_bytes(self.nnz())
+    }
+
+    /// Decompression-free inner product with a dense query:
+    /// `sum_j vals[j] * q[idx[j]]` — Algorithm 1 line 15's sparse-dense
+    /// mat-vec, one row.
+    #[inline]
+    pub fn dot_dense(&self, q: &[f32]) -> f32 {
+        debug_assert!(q.len() >= self.dim as usize);
+        let mut s = 0.0f32;
+        for (v, &i) in self.vals.iter().zip(&self.idx) {
+            s += v * q[i as usize];
+        }
+        s
+    }
+
+    /// Scatter-accumulate `weight * self` into a dense accumulator
+    /// (Algorithm 1 line 16's output side).
+    #[inline]
+    pub fn axpy_into(&self, weight: f32, out: &mut [f32]) {
+        debug_assert!(out.len() >= self.dim as usize);
+        for (v, &i) in self.vals.iter().zip(&self.idx) {
+            out[i as usize] += weight * v;
+        }
+    }
+
+    /// Reconstruct the dense vector (NOT used on any hot path — only for
+    /// tests and error analysis; SWAN's point is that attention never needs
+    /// this).
+    pub fn reconstruct(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim as usize];
+        for (v, &i) in self.vals.iter().zip(&self.idx) {
+            out[i as usize] = *v;
+        }
+        out
+    }
+
+    /// Relative L2 reconstruction error vs the original dense vector.
+    pub fn rel_error(&self, dense: &[f32]) -> f32 {
+        let rec = self.reconstruct();
+        let mut err = 0.0f32;
+        for (r, d) in rec.iter().zip(dense) {
+            err += (r - d) * (r - d);
+        }
+        let norm = dot(dense, dense);
+        if norm == 0.0 {
+            0.0
+        } else {
+            (err / norm).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn prune_full_k_reconstructs_exactly_f32() {
+        let mut r = Pcg64::new(0);
+        let x = r.normal_vec(32);
+        let sv = SparseVec::prune(&x, 32, StorageMode::F32);
+        assert_eq!(sv.reconstruct(), x);
+        assert_eq!(sv.rel_error(&x), 0.0);
+    }
+
+    #[test]
+    fn dot_dense_matches_reconstructed_dot() {
+        let mut r = Pcg64::new(1);
+        let x = r.normal_vec(64);
+        let q = r.normal_vec(64);
+        let sv = SparseVec::prune(&x, 16, StorageMode::F32);
+        let want = dot(&sv.reconstruct(), &q);
+        assert!((sv.dot_dense(&q) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn axpy_matches_scaled_reconstruction() {
+        let mut r = Pcg64::new(2);
+        let x = r.normal_vec(32);
+        let sv = SparseVec::prune(&x, 8, StorageMode::F16);
+        let mut out = vec![0.0f32; 32];
+        sv.axpy_into(0.5, &mut out);
+        for (o, rec) in out.iter().zip(sv.reconstruct()) {
+            assert!((o - 0.5 * rec).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_k() {
+        let mut r = Pcg64::new(3);
+        let x = r.normal_vec(128);
+        let mut last = f32::INFINITY;
+        for k in [8, 32, 64, 128] {
+            let e = SparseVec::prune(&x, k, StorageMode::F32).rel_error(&x);
+            assert!(e <= last + 1e-6, "k={k}");
+            last = e;
+        }
+        assert_eq!(last, 0.0);
+    }
+
+    #[test]
+    fn storage_bytes_eq1() {
+        let x = vec![1.0f32; 128];
+        // 16-bit: 3k + 2
+        let sv = SparseVec::prune(&x, 64, StorageMode::F16);
+        assert_eq!(sv.storage_bytes(), 3 * 64 + 2);
+        // 8-bit: 2k + 2
+        let sv8 = SparseVec::prune(&x, 64, StorageMode::F8);
+        assert_eq!(sv8.storage_bytes(), 2 * 64 + 2);
+    }
+
+    #[test]
+    fn fp8_values_are_quantized() {
+        let x = vec![0.3f32; 8];
+        let sv = SparseVec::prune(&x, 4, StorageMode::F8);
+        for v in &sv.vals {
+            // 0.3 is not representable in e4m3; must equal its quantization
+            assert_eq!(*v, crate::util::fp::quantize_fp8(0.3));
+            assert_ne!(*v, 0.3);
+        }
+    }
+}

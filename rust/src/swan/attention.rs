@@ -1,0 +1,196 @@
+//! Decompression-free attention over the hybrid cache (Algorithm 1 lines
+//! 13-17) — the rust-native mirror of the L1 Pallas kernel, used by the
+//! experiment harness and as the reference the PJRT path is tested against.
+
+use crate::swan::hybrid_cache::HybridCache;
+use crate::tensor::ops::{dot, softmax_inplace};
+
+/// Compute one head's attention output for query `q_hat` over `cache`
+/// plus the current token's `(k_hat_cur, v_hat_cur)` (which Algorithm 1
+/// conceptually appends to the buffer before attending).
+///
+/// Scores on the sparse half are sparse-dense dot products; the output's
+/// sparse half is a scatter-add — no d_h-dim reconstruction anywhere.
+pub fn swan_attention(
+    q_hat: &[f32],
+    cache: &HybridCache,
+    k_hat_cur: &[f32],
+    v_hat_cur: &[f32],
+    out: &mut [f32],
+) {
+    let d = cache.d_h();
+    debug_assert_eq!(q_hat.len(), d);
+    debug_assert_eq!(out.len(), d);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let ns = cache.sparse_len();
+    let nb = cache.buffer_len();
+    let mut scores = Vec::with_capacity(ns + nb + 1);
+
+    // sparse-dense mat-vec over the contiguous CSR store (no
+    // reconstruction, no per-row pointer chasing)
+    cache.k_sparse.scores_into(q_hat, scale, &mut scores);
+    // dense buffer
+    let kb = cache.k_buffer();
+    for t in 0..nb {
+        scores.push(dot(&kb[t * d..(t + 1) * d], q_hat) * scale);
+    }
+    // current token
+    scores.push(dot(k_hat_cur, q_hat) * scale);
+
+    softmax_inplace(&mut scores);
+
+    out.iter_mut().for_each(|o| *o = 0.0);
+    cache.v_sparse.axpy_all(&scores[..ns], out);
+    let vb = cache.v_buffer();
+    for t in 0..nb {
+        let w = scores[ns + t];
+        let row = &vb[t * d..(t + 1) * d];
+        for (o, x) in out.iter_mut().zip(row) {
+            *o += w * x;
+        }
+    }
+    let wc = scores[ns + nb];
+    for (o, x) in out.iter_mut().zip(v_hat_cur) {
+        *o += wc * x;
+    }
+}
+
+/// Dense reference attention over explicit caches (for tests/baselines):
+/// `k_cache`/`v_cache` are flat [n, d] plus the current row.
+pub fn dense_attention(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    k_cur: &[f32],
+    v_cur: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    let n = k_cache.len() / d;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = Vec::with_capacity(n + 1);
+    for t in 0..n {
+        scores.push(dot(&k_cache[t * d..(t + 1) * d], q) * scale);
+    }
+    scores.push(dot(k_cur, q) * scale);
+    softmax_inplace(&mut scores);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for t in 0..n {
+        let w = scores[t];
+        for (o, x) in out.iter_mut().zip(&v_cache[t * d..(t + 1) * d]) {
+            *o += w * x;
+        }
+    }
+    for (o, x) in out.iter_mut().zip(v_cur) {
+        *o += scores[n] * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::StorageMode;
+    use crate::swan::hybrid_cache::SwanParams;
+    use crate::util::Pcg64;
+
+    /// Full retention + f32 storage must reproduce dense attention exactly.
+    #[test]
+    fn full_retention_equals_dense() {
+        let d = 32;
+        let mut r = Pcg64::new(0);
+        let mut cache = HybridCache::new(d, SwanParams::new(d, 4, StorageMode::F32));
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for _ in 0..12 {
+            let k = r.normal_vec(d);
+            let v = r.normal_vec(d);
+            cache.append(&k, &v);
+            ks.extend_from_slice(&k);
+            vs.extend_from_slice(&v);
+        }
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut out = vec![0.0; d];
+        swan_attention(&q, &cache, &kc, &vc, &mut out);
+        let mut want = vec![0.0; d];
+        dense_attention(&q, &ks, &vs, &kc, &vc, d, &mut want);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    /// Output weights sum to 1: constant values give a constant output.
+    #[test]
+    fn convexity() {
+        let d = 16;
+        let mut r = Pcg64::new(1);
+        let mut cache = HybridCache::new(d, SwanParams::new(d, 2, StorageMode::F32));
+        for _ in 0..8 {
+            let k = r.normal_vec(d);
+            cache.append(&k, &vec![1.0; d]);
+        }
+        let q = r.normal_vec(d);
+        let mut out = vec![0.0; d];
+        swan_attention(&q, &cache, &r.normal_vec(d), &vec![1.0; d], &mut out);
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-4, "{o}");
+        }
+    }
+
+    /// Pruning error decreases as k_active rises.
+    #[test]
+    fn error_monotone_in_k() {
+        let d = 64;
+        let mut r = Pcg64::new(2);
+        let tokens: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..24).map(|_| (r.normal_vec(d), r.normal_vec(d))).collect();
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut kflat = Vec::new();
+        let mut vflat = Vec::new();
+        for (k, v) in &tokens {
+            kflat.extend_from_slice(k);
+            vflat.extend_from_slice(v);
+        }
+        let mut dense = vec![0.0; d];
+        dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut dense);
+
+        let mut last_err = f32::INFINITY;
+        for k_active in [8, 16, 32, 64] {
+            let mut cache =
+                HybridCache::new(d, SwanParams::new(k_active, 0, StorageMode::F32));
+            for (k, v) in &tokens {
+                cache.append(k, v);
+            }
+            let mut out = vec![0.0; d];
+            swan_attention(&q, &cache, &kc, &vc, &mut out);
+            let err: f32 = out
+                .iter()
+                .zip(&dense)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            assert!(err <= last_err + 1e-4, "k={k_active} err={err} last={last_err}");
+            last_err = err;
+        }
+        assert!(last_err < 1e-4); // k = d is exact
+    }
+
+    /// Current token participates even with an empty cache.
+    #[test]
+    fn empty_cache_attends_to_current() {
+        let d = 8;
+        let cache = HybridCache::new(d, SwanParams::new(4, 2, StorageMode::F16));
+        let q = vec![1.0; d];
+        let kc = vec![0.5; d];
+        let vc: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let mut out = vec![0.0; d];
+        swan_attention(&q, &cache, &kc, &vc, &mut out);
+        for (o, v) in out.iter().zip(&vc) {
+            assert!((o - v).abs() < 1e-6);
+        }
+    }
+}

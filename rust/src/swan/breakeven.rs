@@ -1,0 +1,98 @@
+//! Eq. 2: the computational break-even model (§5.2, Appendix A.2).
+//!
+//! `C_std  ≈ 4 L d_h`
+//! `C_swan ≈ 4 d_h² + 4 (L − b) k_active + 4 b d_h`
+//! break-even: `L > d_h² / (d_h − k_active) + b`.
+//!
+//! The `repro breakeven` command and the `attention_breakeven` bench verify
+//! both the algebra (exact FLOP counts) and the measured-wallclock shape.
+
+/// FLOPs of standard dense decode attention at sequence length `l`
+/// (Proposition A.3).
+pub fn flops_std(l: usize, d_h: usize) -> u64 {
+    4 * l as u64 * d_h as u64
+}
+
+/// FLOPs of SWAN decode attention (Proposition A.4).
+pub fn flops_swan(l: usize, d_h: usize, b: usize, k_active: usize) -> u64 {
+    let dense_part = l.min(b);
+    let sparse_part = l - dense_part;
+    4 * (d_h as u64) * (d_h as u64)
+        + 4 * sparse_part as u64 * k_active as u64
+        + 4 * dense_part as u64 * d_h as u64
+}
+
+/// The break-even sequence length of Proposition A.5 (`None` when
+/// `k_active >= d_h`, i.e. no per-token savings exist).
+pub fn breakeven_length(d_h: usize, b: usize, k_active: usize) -> Option<f64> {
+    if k_active >= d_h {
+        return None;
+    }
+    Some((d_h * d_h) as f64 / (d_h - k_active) as f64 + b as f64)
+}
+
+/// Empirical break-even from the FLOP counters: smallest L where SWAN's
+/// count drops below standard attention (scans up to `max_l`).
+pub fn breakeven_by_counting(d_h: usize, b: usize, k_active: usize, max_l: usize) -> Option<usize> {
+    (1..=max_l).find(|&l| flops_swan(l, d_h, b, k_active) < flops_std(l, d_h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Appendix A.2.1 numeric examples, no buffer.
+    #[test]
+    fn paper_examples_b0() {
+        assert_eq!(breakeven_length(128, 0, 32).unwrap().ceil() as usize, 171);
+        assert_eq!(breakeven_length(128, 0, 64).unwrap() as usize, 256);
+        assert_eq!(breakeven_length(128, 0, 96).unwrap() as usize, 512);
+    }
+
+    /// Appendix A.2.1 numeric examples, b = 128.
+    #[test]
+    fn paper_examples_b128() {
+        assert_eq!(breakeven_length(128, 128, 32).unwrap().ceil() as usize, 299);
+        assert_eq!(breakeven_length(128, 128, 64).unwrap() as usize, 384);
+        assert_eq!(breakeven_length(128, 128, 96).unwrap() as usize, 640);
+    }
+
+    /// The closed form and the FLOP counters must agree.
+    #[test]
+    fn closed_form_matches_counters() {
+        for d_h in [64usize, 128] {
+            for b in [0usize, 64, 128] {
+                for k in [d_h / 4, d_h / 2, 3 * d_h / 4] {
+                    let formula = breakeven_length(d_h, b, k).unwrap();
+                    let counted = breakeven_by_counting(d_h, b, k, 10_000).unwrap();
+                    // counted L is the first strictly-cheaper length
+                    assert!(
+                        (counted as f64 - formula).abs() <= 2.0,
+                        "d_h={d_h} b={b} k={k}: formula {formula} counted {counted}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_breakeven_without_pruning() {
+        assert!(breakeven_length(128, 0, 128).is_none());
+        assert!(breakeven_by_counting(128, 0, 128, 100_000).is_none());
+    }
+
+    #[test]
+    fn aggressive_pruning_breaks_even_sooner() {
+        let a = breakeven_length(128, 64, 32).unwrap();
+        let b = breakeven_length(128, 64, 96).unwrap();
+        assert!(a < b);
+    }
+
+    #[test]
+    fn flops_swan_below_std_beyond_breakeven() {
+        let (d_h, b, k) = (128, 128, 64);
+        let be = breakeven_length(d_h, b, k).unwrap() as usize;
+        assert!(flops_swan(be + 1, d_h, b, k) < flops_std(be + 1, d_h));
+        assert!(flops_swan(be.saturating_sub(10), d_h, b, k) >= flops_std(be - 10, d_h));
+    }
+}

@@ -1,0 +1,253 @@
+//! The hybrid KV-cache of Algorithm 1: a small dense ring buffer of recent
+//! rotated vectors plus the growing sparse (winnowed) historical store.
+//!
+//! One `HybridCache` instance serves one (layer, kv-head) pair of one
+//! sequence.  Appending a new rotated (k̂, v̂) pair may evict the oldest
+//! buffer entry, which is magnitude-pruned (separate I_k / I_v index sets)
+//! and moved to the sparse store — compression work happens once per token,
+//! attention never decompresses.
+
+use crate::sparse::{SparseStore, StorageMode};
+
+/// Tunable SWAN parameters.  `k_active` may be changed *at runtime*
+/// between steps (the paper's runtime-adaptability claim): already-pruned
+/// entries keep their old k, new evictions use the new value.
+#[derive(Clone, Copy, Debug)]
+pub struct SwanParams {
+    /// Retained dims for evicted key vectors.
+    pub k_active_keys: usize,
+    /// Retained dims for evicted value vectors (Table 2 studies asymmetric
+    /// settings; defaults equal).
+    pub k_active_vals: usize,
+    /// Dense buffer capacity in tokens (`bt` in the figures).
+    pub buffer: usize,
+    /// Value storage precision.
+    pub mode: StorageMode,
+}
+
+impl SwanParams {
+    pub fn new(k_active: usize, buffer: usize, mode: StorageMode) -> SwanParams {
+        SwanParams { k_active_keys: k_active, k_active_vals: k_active, buffer, mode }
+    }
+
+    /// Retention ratio (k_active / d_h) for reporting.
+    pub fn retention(&self, d_h: usize) -> f64 {
+        self.k_active_keys as f64 / d_h as f64
+    }
+}
+
+/// Hybrid sparse + buffer cache for one (layer, kv-head).
+#[derive(Clone, Debug)]
+pub struct HybridCache {
+    pub params: SwanParams,
+    d_h: usize,
+    /// Sparse historical store, oldest first (contiguous CSR — see
+    /// EXPERIMENTS.md §Perf for the layout rationale).
+    pub k_sparse: SparseStore,
+    pub v_sparse: SparseStore,
+    /// Dense recency buffer, oldest first (flat [n, d_h] storage).
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    buf_len: usize,
+}
+
+impl HybridCache {
+    pub fn new(d_h: usize, params: SwanParams) -> HybridCache {
+        HybridCache {
+            params,
+            d_h,
+            k_sparse: SparseStore::new(),
+            v_sparse: SparseStore::new(),
+            k_buf: Vec::with_capacity((params.buffer + 1) * d_h),
+            v_buf: Vec::with_capacity((params.buffer + 1) * d_h),
+            buf_len: 0,
+        }
+    }
+
+    pub fn d_h(&self) -> usize {
+        self.d_h
+    }
+
+    /// Tokens in the dense buffer.
+    pub fn buffer_len(&self) -> usize {
+        self.buf_len
+    }
+
+    /// Tokens in the sparse store.
+    pub fn sparse_len(&self) -> usize {
+        self.k_sparse.len()
+    }
+
+    /// Total tokens cached.
+    pub fn len(&self) -> usize {
+        self.buf_len + self.k_sparse.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Buffer contents as flat [buffer_len, d_h] slices (oldest first).
+    pub fn k_buffer(&self) -> &[f32] {
+        &self.k_buf[..self.buf_len * self.d_h]
+    }
+
+    pub fn v_buffer(&self) -> &[f32] {
+        &self.v_buf[..self.buf_len * self.d_h]
+    }
+
+    /// Change the compression level at runtime (paper §"runtime
+    /// adaptability").  Existing sparse entries are untouched.
+    pub fn set_k_active(&mut self, k_keys: usize, k_vals: usize) {
+        self.params.k_active_keys = k_keys.min(self.d_h);
+        self.params.k_active_vals = k_vals.min(self.d_h);
+    }
+
+    /// Append a rotated (k̂, v̂) pair (Algorithm 1 lines 3-12).  If the
+    /// buffer is over capacity, the oldest entry is winnowed into the
+    /// sparse store.
+    pub fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        debug_assert_eq!(k_hat.len(), self.d_h);
+        debug_assert_eq!(v_hat.len(), self.d_h);
+        self.k_buf.extend_from_slice(k_hat);
+        self.v_buf.extend_from_slice(v_hat);
+        self.buf_len += 1;
+        while self.buf_len > self.params.buffer {
+            self.evict_oldest();
+        }
+    }
+
+    /// Pop the oldest dense pair, winnow it (separate I_k / I_v) and move
+    /// it to the sparse store.
+    fn evict_oldest(&mut self) {
+        let d = self.d_h;
+        let k_old: Vec<f32> = self.k_buf.drain(..d).collect();
+        let v_old: Vec<f32> = self.v_buf.drain(..d).collect();
+        self.buf_len -= 1;
+        self.k_sparse.push_pruned(&k_old, self.params.k_active_keys, self.params.mode);
+        self.v_sparse.push_pruned(&v_old, self.params.k_active_vals, self.params.mode);
+    }
+
+    /// Bulk-load a prefill history: all but the last `buffer` tokens are
+    /// winnowed directly, the tail stays dense.  `k_hats`/`v_hats` are
+    /// [n, d_h] flat (oldest first).
+    pub fn load_prefill(&mut self, k_hats: &[f32], v_hats: &[f32]) {
+        let n = k_hats.len() / self.d_h;
+        debug_assert_eq!(k_hats.len(), n * self.d_h);
+        for t in 0..n {
+            self.append(
+                &k_hats[t * self.d_h..(t + 1) * self.d_h],
+                &v_hats[t * self.d_h..(t + 1) * self.d_h],
+            );
+        }
+    }
+
+    /// Stored bytes of the cache under serving accounting (Eq. 1 for the
+    /// sparse part, f16 convention for the dense buffer).
+    pub fn storage_bytes(&self) -> usize {
+        let sparse = self.k_sparse.storage_bytes() + self.v_sparse.storage_bytes();
+        let dense = 2 * self.buf_len * self.d_h * 2; // k+v, f16
+        sparse + dense
+    }
+
+    /// Bytes a dense cache of the same token count would use.
+    pub fn dense_equiv_bytes(&self) -> usize {
+        2 * self.len() * self.d_h * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn mk(buffer: usize, k: usize) -> HybridCache {
+        HybridCache::new(32, SwanParams::new(k, buffer, StorageMode::F16))
+    }
+
+    #[test]
+    fn buffer_fills_before_sparse() {
+        let mut c = mk(4, 8);
+        let mut r = Pcg64::new(0);
+        for _ in 0..4 {
+            c.append(&r.normal_vec(32), &r.normal_vec(32));
+        }
+        assert_eq!(c.buffer_len(), 4);
+        assert_eq!(c.sparse_len(), 0);
+        c.append(&r.normal_vec(32), &r.normal_vec(32));
+        assert_eq!(c.buffer_len(), 4);
+        assert_eq!(c.sparse_len(), 1);
+        assert_eq!(c.len(), 5);
+    }
+
+    #[test]
+    fn eviction_is_fifo() {
+        let mut c = mk(2, 32); // full retention: values survive exactly
+        let mut vecs = Vec::new();
+        let mut r = Pcg64::new(1);
+        for _ in 0..5 {
+            let k = r.normal_vec(32);
+            let v = r.normal_vec(32);
+            c.append(&k, &v);
+            vecs.push(k);
+        }
+        assert_eq!(c.sparse_len(), 3);
+        for i in 0..c.k_sparse.len() {
+            let rec = c.k_sparse.reconstruct(i, 32);
+            for (a, b) in rec.iter().zip(&vecs[i]) {
+                assert!((a - crate::util::fp::quantize_f16(*b)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_buffer_prunes_all_but_current() {
+        let mut c = mk(0, 8);
+        let mut r = Pcg64::new(2);
+        for _ in 0..3 {
+            c.append(&r.normal_vec(32), &r.normal_vec(32));
+        }
+        assert_eq!(c.buffer_len(), 0);
+        assert_eq!(c.sparse_len(), 3);
+    }
+
+    #[test]
+    fn runtime_k_change_applies_to_new_evictions_only() {
+        let mut c = mk(1, 16);
+        let mut r = Pcg64::new(3);
+        c.append(&r.normal_vec(32), &r.normal_vec(32));
+        c.append(&r.normal_vec(32), &r.normal_vec(32)); // evicts with k=16
+        c.set_k_active(4, 4);
+        c.append(&r.normal_vec(32), &r.normal_vec(32)); // evicts with k=4
+        assert_eq!(c.k_sparse.nnz(0), 16);
+        assert_eq!(c.k_sparse.nnz(1), 4);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let mut c = mk(2, 8);
+        let mut r = Pcg64::new(4);
+        for _ in 0..6 {
+            c.append(&r.normal_vec(32), &r.normal_vec(32));
+        }
+        // 4 sparse tokens * 2 vectors * (3*8+2) + 2 dense tokens * 2 * 32 * 2
+        assert_eq!(c.storage_bytes(), 4 * 2 * 26 + 2 * 2 * 32 * 2);
+        assert_eq!(c.dense_equiv_bytes(), 6 * 2 * 32 * 2);
+        assert!(c.storage_bytes() < c.dense_equiv_bytes());
+    }
+
+    #[test]
+    fn load_prefill_splits_correctly() {
+        let mut c = mk(3, 8);
+        let mut r = Pcg64::new(5);
+        let n = 10;
+        let ks = r.normal_vec(n * 32);
+        let vs = r.normal_vec(n * 32);
+        c.load_prefill(&ks, &vs);
+        assert_eq!(c.buffer_len(), 3);
+        assert_eq!(c.sparse_len(), 7);
+        // buffer holds the *last* 3 tokens
+        let kb = c.k_buffer();
+        assert_eq!(&kb[..32], &ks[7 * 32..8 * 32]);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's core contribution: SWAN hybrid cache + decompression-free
+//! attention (Algorithm 1), projection handling (§4.1-4.2), and the Eq. 2
+//! computational break-even model.
+
+pub mod attention;
+pub mod breakeven;
+pub mod hybrid_cache;
+pub mod projection;
+
+pub use attention::swan_attention;
+pub use breakeven::{breakeven_length, flops_std, flops_swan};
+pub use hybrid_cache::{HybridCache, SwanParams};
+pub use projection::ProjectionSet;

@@ -1,0 +1,228 @@
+//! Projection matrices (§4.1) on the rust side: loading the calibrated
+//! P_QK / P_VO from the weight artifacts, applying rotations, and building
+//! the Table-3 ablation variants (random / layer-shuffle / head-shuffle /
+//! KV-shuffle).
+
+use crate::tensor::linalg::gram_schmidt_orthonormal;
+use crate::tensor::ops::vecmat;
+use crate::util::Pcg64;
+
+/// Per-model projection set: `[n_layers][n_kv]` matrices of `d_h x d_h`
+/// (row-major; rotation is `x @ P`).
+#[derive(Clone, Debug)]
+pub struct ProjectionSet {
+    pub d_h: usize,
+    pub n_layers: usize,
+    pub n_kv: usize,
+    /// p_qk[layer][kv_head] flattened d_h*d_h
+    pub p_qk: Vec<Vec<Vec<f32>>>,
+    pub p_vo: Vec<Vec<Vec<f32>>>,
+}
+
+/// Table-3 ablation variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionVariant {
+    /// The calibrated, component-specific projections (ours).
+    Calibrated,
+    /// Orthonormalised Gaussian matrices (data-free baseline).
+    Random,
+    /// Projections shuffled across layers.
+    LayerShuffle,
+    /// Projections shuffled across heads within each layer.
+    HeadShuffle,
+    /// P_QK and P_VO interchanged.
+    KvShuffle,
+    /// Identity rotation (sanity floor: pure magnitude pruning in the
+    /// original basis).
+    Identity,
+}
+
+impl ProjectionVariant {
+    pub fn label(self) -> &'static str {
+        match self {
+            ProjectionVariant::Calibrated => "Our Projection",
+            ProjectionVariant::Random => "Random Projection",
+            ProjectionVariant::LayerShuffle => "Layer-Shuffle",
+            ProjectionVariant::HeadShuffle => "Head-Shuffle",
+            ProjectionVariant::KvShuffle => "KV-Shuffle",
+            ProjectionVariant::Identity => "Identity (no rotation)",
+        }
+    }
+
+    pub const ALL: [ProjectionVariant; 6] = [
+        ProjectionVariant::Calibrated,
+        ProjectionVariant::HeadShuffle,
+        ProjectionVariant::LayerShuffle,
+        ProjectionVariant::KvShuffle,
+        ProjectionVariant::Random,
+        ProjectionVariant::Identity,
+    ];
+}
+
+impl ProjectionSet {
+    pub fn identity(n_layers: usize, n_kv: usize, d_h: usize) -> ProjectionSet {
+        let mut eye = vec![0.0f32; d_h * d_h];
+        for i in 0..d_h {
+            eye[i * d_h + i] = 1.0;
+        }
+        ProjectionSet {
+            d_h,
+            n_layers,
+            n_kv,
+            p_qk: vec![vec![eye.clone(); n_kv]; n_layers],
+            p_vo: vec![vec![eye; n_kv]; n_layers],
+        }
+    }
+
+    /// Random orthogonal projections (Table 3 "Random Projection").
+    pub fn random(n_layers: usize, n_kv: usize, d_h: usize, seed: u64) -> ProjectionSet {
+        let mut rng = Pcg64::new(seed);
+        let mut gen = || {
+            let mut m = rng.normal_vec(d_h * d_h);
+            gram_schmidt_orthonormal(&mut m, d_h);
+            m
+        };
+        ProjectionSet {
+            d_h,
+            n_layers,
+            n_kv,
+            p_qk: (0..n_layers).map(|_| (0..n_kv).map(|_| gen()).collect()).collect(),
+            p_vo: (0..n_layers).map(|_| (0..n_kv).map(|_| gen()).collect()).collect(),
+        }
+    }
+
+    /// Apply a Table-3 ablation to this (calibrated) set.
+    pub fn ablate(&self, variant: ProjectionVariant, seed: u64) -> ProjectionSet {
+        let mut rng = Pcg64::new(seed);
+        match variant {
+            ProjectionVariant::Calibrated => self.clone(),
+            ProjectionVariant::Identity => {
+                ProjectionSet::identity(self.n_layers, self.n_kv, self.d_h)
+            }
+            ProjectionVariant::Random => {
+                ProjectionSet::random(self.n_layers, self.n_kv, self.d_h, seed)
+            }
+            ProjectionVariant::LayerShuffle => {
+                let mut order: Vec<usize> = (0..self.n_layers).collect();
+                // derangement-ish: rotate by one then shuffle lightly
+                order.rotate_left(1);
+                if self.n_layers > 2 {
+                    rng.shuffle(&mut order[..self.n_layers - 1]);
+                }
+                let mut out = self.clone();
+                for (l, &src) in order.iter().enumerate() {
+                    out.p_qk[l] = self.p_qk[src].clone();
+                    out.p_vo[l] = self.p_vo[src].clone();
+                }
+                out
+            }
+            ProjectionVariant::HeadShuffle => {
+                let mut out = self.clone();
+                for l in 0..self.n_layers {
+                    let mut order: Vec<usize> = (0..self.n_kv).collect();
+                    order.rotate_left(1.min(self.n_kv - 1));
+                    if self.n_kv > 2 {
+                        rng.shuffle(&mut order[..self.n_kv - 1]);
+                    }
+                    for (h, &src) in order.iter().enumerate() {
+                        out.p_qk[l][h] = self.p_qk[l][src].clone();
+                        out.p_vo[l][h] = self.p_vo[l][src].clone();
+                    }
+                }
+                out
+            }
+            ProjectionVariant::KvShuffle => {
+                let mut out = self.clone();
+                std::mem::swap(&mut out.p_qk, &mut out.p_vo);
+                out
+            }
+        }
+    }
+
+    /// Rotate a d_h vector: `out = x @ p_qk[layer][head]`.
+    pub fn rotate_qk(&self, layer: usize, head: usize, x: &[f32], out: &mut [f32]) {
+        vecmat(x, &self.p_qk[layer][head], self.d_h, self.d_h, out);
+    }
+
+    pub fn rotate_vo(&self, layer: usize, head: usize, x: &[f32], out: &mut [f32]) {
+        vecmat(x, &self.p_vo[layer][head], self.d_h, self.d_h, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::orthonormality_error;
+    use crate::tensor::ops::dot;
+
+    #[test]
+    fn identity_rotation_is_noop() {
+        let ps = ProjectionSet::identity(2, 2, 8);
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut out = vec![0.0; 8];
+        ps.rotate_qk(0, 1, &x, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn random_projections_orthogonal_and_distinct() {
+        let ps = ProjectionSet::random(2, 2, 16, 7);
+        for l in 0..2 {
+            for h in 0..2 {
+                assert!(orthonormality_error(&ps.p_qk[l][h], 16) < 1e-4);
+            }
+        }
+        assert_ne!(ps.p_qk[0][0], ps.p_qk[1][0]);
+        assert_ne!(ps.p_qk[0][0], ps.p_vo[0][0]);
+    }
+
+    #[test]
+    fn rotation_preserves_dot_products() {
+        let ps = ProjectionSet::random(1, 1, 32, 3);
+        let mut r = Pcg64::new(0);
+        let q = r.normal_vec(32);
+        let k = r.normal_vec(32);
+        let mut qr = vec![0.0; 32];
+        let mut kr = vec![0.0; 32];
+        ps.rotate_qk(0, 0, &q, &mut qr);
+        ps.rotate_qk(0, 0, &k, &mut kr);
+        assert!((dot(&q, &k) - dot(&qr, &kr)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layer_shuffle_permutes() {
+        let base = ProjectionSet::random(4, 1, 8, 1);
+        let sh = base.ablate(ProjectionVariant::LayerShuffle, 2);
+        // every layer's matrix still exists somewhere, but at least one moved
+        let mut moved = false;
+        for l in 0..4 {
+            if sh.p_qk[l][0] != base.p_qk[l][0] {
+                moved = true;
+            }
+            assert!(base.p_qk.iter().any(|layer| layer[0] == sh.p_qk[l][0]));
+        }
+        assert!(moved);
+    }
+
+    #[test]
+    fn kv_shuffle_swaps() {
+        let base = ProjectionSet::random(2, 1, 8, 1);
+        let sh = base.ablate(ProjectionVariant::KvShuffle, 0);
+        assert_eq!(sh.p_qk[0][0], base.p_vo[0][0]);
+        assert_eq!(sh.p_vo[1][0], base.p_qk[1][0]);
+    }
+
+    #[test]
+    fn head_shuffle_within_layer() {
+        let base = ProjectionSet::random(1, 4, 8, 1);
+        let sh = base.ablate(ProjectionVariant::HeadShuffle, 3);
+        let mut moved = false;
+        for h in 0..4 {
+            if sh.p_qk[0][h] != base.p_qk[0][h] {
+                moved = true;
+            }
+            assert!(base.p_qk[0].iter().any(|m| *m == sh.p_qk[0][h]));
+        }
+        assert!(moved);
+    }
+}

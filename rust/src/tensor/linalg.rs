@@ -1,0 +1,246 @@
+//! Dense linear algebra: one-sided Jacobi SVD (right-singular basis) and
+//! Gram-Schmidt orthonormalisation.
+//!
+//! Used by the Table-3 ablations: the rust side can (a) re-derive
+//! data-driven projections from rust-collected activations, and (b) build
+//! the "Random Projection" baseline by orthonormalising Gaussian matrices.
+
+/// Right-singular basis of `a` [m, n] (row-major): returns V [n, n]
+/// column-orthonormal, with columns ordered by descending singular value —
+/// the same object `numpy.linalg.svd(...).Vh.T` gives the python
+/// calibration pipeline.
+///
+/// One-sided Jacobi on A^T A via implicit rotations of V; O(n^2 m) per
+/// sweep, fine for the d_h <= 128 matrices SWAN uses.
+pub fn svd_right_basis(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * n);
+    // Work on B = A^T A (n x n symmetric, f64 for stability), diagonalise
+    // with cyclic Jacobi: B <- J^T B J accumulating V <- V J.
+    let mut b = vec![0.0f64; n * n];
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        for p in 0..n {
+            let rp = row[p] as f64;
+            if rp == 0.0 {
+                continue;
+            }
+            for q in p..n {
+                b[p * n + q] += rp * row[q] as f64;
+            }
+        }
+    }
+    for p in 0..n {
+        for q in 0..p {
+            b[p * n + q] = b[q * n + p];
+        }
+    }
+
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += b[p * n + q] * b[p * n + q];
+            }
+        }
+        let norm: f64 = (0..n).map(|i| b[i * n + i] * b[i * n + i]).sum();
+        if off <= 1e-24 * norm.max(1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let bpq = b[p * n + q];
+                if bpq.abs() < 1e-300 {
+                    continue;
+                }
+                let bpp = b[p * n + p];
+                let bqq = b[q * n + q];
+                let tau = (bqq - bpp) / (2.0 * bpq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // B <- J^T B J (rows/cols p, q)
+                for i in 0..n {
+                    let bip = b[i * n + p];
+                    let biq = b[i * n + q];
+                    b[i * n + p] = c * bip - s * biq;
+                    b[i * n + q] = s * bip + c * biq;
+                }
+                for i in 0..n {
+                    let bpi = b[p * n + i];
+                    let bqi = b[q * n + i];
+                    b[p * n + i] = c * bpi - s * bqi;
+                    b[q * n + i] = s * bpi + c * bqi;
+                }
+                // V <- V J
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    // sort columns by descending eigenvalue (diagonal of B)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| b[y * n + y].partial_cmp(&b[x * n + x]).unwrap());
+    let mut out = vec![0.0f32; n * n];
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            out[r * n + new_c] = v[r * n + old_c] as f32;
+        }
+    }
+    out
+}
+
+/// Orthonormalise the columns of `a` [n, n] in place via modified
+/// Gram-Schmidt; used for the Random-Projection ablation baseline.
+pub fn gram_schmidt_orthonormal(a: &mut [f32], n: usize) {
+    assert_eq!(a.len(), n * n);
+    for c in 0..n {
+        // subtract projections on previous columns (twice for stability)
+        for _ in 0..2 {
+            for prev in 0..c {
+                let mut proj = 0.0f64;
+                for r in 0..n {
+                    proj += a[r * n + c] as f64 * a[r * n + prev] as f64;
+                }
+                for r in 0..n {
+                    a[r * n + c] -= (proj as f32) * a[r * n + prev];
+                }
+            }
+        }
+        let mut norm = 0.0f64;
+        for r in 0..n {
+            norm += (a[r * n + c] as f64).powi(2);
+        }
+        let inv = 1.0 / norm.sqrt().max(1e-30) as f32;
+        for r in 0..n {
+            a[r * n + c] *= inv;
+        }
+    }
+}
+
+/// Check `v^T v == I` within `tol`; returns max deviation.
+pub fn orthonormality_error(v: &[f32], n: usize) -> f32 {
+    let mut worst = 0.0f32;
+    for c1 in 0..n {
+        for c2 in c1..n {
+            let mut d = 0.0f64;
+            for r in 0..n {
+                d += v[r * n + c1] as f64 * v[r * n + c2] as f64;
+            }
+            let target = if c1 == c2 { 1.0 } else { 0.0 };
+            worst = worst.max((d - target).abs() as f32);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn svd_basis_orthonormal() {
+        let mut r = Pcg64::new(0);
+        let (m, n) = (50, 16);
+        let a = r.normal_vec(m * n);
+        let v = svd_right_basis(&a, m, n);
+        assert!(orthonormality_error(&v, n) < 1e-4);
+    }
+
+    #[test]
+    fn svd_energy_descending() {
+        let mut r = Pcg64::new(1);
+        let (m, n) = (200, 12);
+        let a = r.normal_vec(m * n);
+        let v = svd_right_basis(&a, m, n);
+        // project rows of a onto v; column energies must descend
+        let mut energy = vec![0.0f64; n];
+        for i in 0..m {
+            for c in 0..n {
+                let mut p = 0.0f64;
+                for j in 0..n {
+                    p += a[i * n + j] as f64 * v[j * n + c] as f64;
+                }
+                energy[c] += p * p;
+            }
+        }
+        for c in 1..n {
+            assert!(
+                energy[c] <= energy[c - 1] + 1e-6,
+                "energy not descending at {c}: {energy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn svd_concentrates_planted_lowrank() {
+        // rank-3 signal + small noise: first 3 dirs must hold >90% energy
+        let mut r = Pcg64::new(2);
+        let (m, n, rank) = (300, 16, 3);
+        let basis = r.normal_vec(rank * n);
+        let mut a = vec![0.0f32; m * n];
+        for i in 0..m {
+            let coef = r.normal_vec(rank);
+            for j in 0..n {
+                let mut x = 0.0;
+                for k in 0..rank {
+                    x += coef[k] * basis[k * n + j];
+                }
+                a[i * n + j] = x + 0.01 * r.normal_f32();
+            }
+        }
+        let v = svd_right_basis(&a, m, n);
+        let mut energy = vec![0.0f64; n];
+        for i in 0..m {
+            for c in 0..n {
+                let mut p = 0.0f64;
+                for j in 0..n {
+                    p += a[i * n + j] as f64 * v[j * n + c] as f64;
+                }
+                energy[c] += p * p;
+            }
+        }
+        let lead: f64 = energy[..rank].iter().sum();
+        let total: f64 = energy.iter().sum();
+        assert!(lead / total > 0.9, "lead fraction {}", lead / total);
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormalises() {
+        let mut r = Pcg64::new(3);
+        let n = 24;
+        let mut a = r.normal_vec(n * n);
+        gram_schmidt_orthonormal(&mut a, n);
+        assert!(orthonormality_error(&a, n) < 1e-4);
+    }
+
+    #[test]
+    fn rotation_by_svd_basis_preserves_dots() {
+        // orthogonality of V means q.k == (qV).(kV) — Lemma A.1 in rust
+        let mut r = Pcg64::new(4);
+        let n = 16;
+        let a = r.normal_vec(100 * n);
+        let v = svd_right_basis(&a, 100, n);
+        let q = r.normal_vec(n);
+        let k = r.normal_vec(n);
+        let rot = |x: &[f32]| -> Vec<f32> {
+            (0..n)
+                .map(|c| (0..n).map(|j| x[j] * v[j * n + c]).sum())
+                .collect()
+        };
+        let d0 = crate::tensor::ops::dot(&q, &k);
+        let d1 = crate::tensor::ops::dot(&rot(&q), &rot(&k));
+        assert!((d0 - d1).abs() < 1e-3, "{d0} vs {d1}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Dense f32 tensor substrate for the rust-native model and experiment
+//! harness: matmul/mat-vec, softmax, RMSNorm, RoPE, and a one-sided Jacobi
+//! SVD (used for on-the-fly calibration and the random-projection ablation).
+
+pub mod linalg;
+pub mod ops;
+pub mod rope;
+
+pub use linalg::{gram_schmidt_orthonormal, svd_right_basis};
+pub use ops::*;
+pub use rope::apply_rope;

@@ -1,0 +1,239 @@
+//! Core dense operations.  Row-major `&[f32]` slices with explicit shapes;
+//! no generic tensor type — the model is small and the call sites are
+//! explicit about layout, which keeps the hot paths allocation-free.
+
+/// y[m] += a[m,n] @ x[n]  (row-major `a`).
+pub fn matvec_acc(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        y[i] += dot(row, x);
+    }
+}
+
+/// y[m] = a[m,n] @ x[n].
+pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    matvec_acc(a, x, m, n, y);
+}
+
+/// y[n] = x[m] @ a[m,n]  (vector-matrix; the layout used by `x @ W`).
+pub fn vecmat(x: &[f32], a: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    y.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a[i * n..(i + 1) * n];
+        for (yj, aij) in y.iter_mut().zip(row) {
+            *yj += xi * aij;
+        }
+    }
+}
+
+/// c[m,n] = a[m,k] @ b[k,n].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cij, bpj) in crow.iter_mut().zip(brow) {
+                *cij += aip * bpj;
+            }
+        }
+    }
+    c
+}
+
+/// Dot product (manually unrolled 4-wide; the single hottest primitive in
+/// the dense baselines).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place numerically-stable softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if !m.is_finite() {
+        // all -inf: define as uniform to avoid NaN (callers mask at least
+        // one live slot in practice)
+        let u = 1.0 / x.len() as f32;
+        x.iter_mut().for_each(|v| *v = u);
+        return;
+    }
+    let mut z = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    x.iter_mut().for_each(|v| *v *= inv);
+}
+
+/// RMSNorm: x * rsqrt(mean(x^2) + eps) * w.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.len());
+    let ms = dot(x, x) / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * r * wi;
+    }
+}
+
+/// GELU (tanh approximation, matching jax.nn.gelu's default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// argmax of a slice.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..x.len() {
+        if x[i] > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-sum-exp of a slice (stable).
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if !m.is_finite() {
+        return m;
+    }
+    m + x.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut y = vec![0.0; 2];
+        matvec(&a, &[3.0, 4.0], 2, 2, &mut y);
+        assert_eq!(y, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn vecmat_matches_matvec_transpose() {
+        let mut r = crate::util::Pcg64::new(0);
+        let (m, n) = (7, 5);
+        let a = r.normal_vec(m * n);
+        let x = r.normal_vec(m);
+        let mut y1 = vec![0.0; n];
+        vecmat(&x, &a, m, n, &mut y1);
+        // transpose a then matvec
+        let mut at = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let mut y2 = vec![0.0; n];
+        matvec(&at, &x, n, m, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let c = matmul(&[1.0, 2.0, 3.0, 4.0], &[1.0, 1.0, 1.0, 1.0], 2, 2, 2);
+        assert_eq!(c, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn softmax_properties() {
+        let mut x = vec![1.0, 2.0, 3.0];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+        // shift invariance
+        let mut y = vec![1001.0, 1002.0, 1003.0];
+        softmax_inplace(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_with_neg_inf_mask() {
+        let mut x = vec![f32::NEG_INFINITY, 0.0, f32::NEG_INFINITY];
+        softmax_inplace(&mut x);
+        assert_eq!(x[1], 1.0);
+        assert_eq!(x[0], 0.0);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![2.0f32; 8];
+        let w = vec![1.0f32; 8];
+        let mut out = vec![0.0; 8];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(100.0) - 100.0).abs() < 1e-3);
+        assert!(gelu(-100.0).abs() < 1e-3);
+        // jax.nn.gelu(1.0) ≈ 0.841192
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut r = crate::util::Pcg64::new(1);
+        for n in [1usize, 3, 4, 7, 64, 129] {
+            let a = r.normal_vec(n);
+            let b = r.normal_vec(n);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let x = vec![1000.0f32, 1000.0];
+        let l = logsumexp(&x);
+        assert!((l - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+}

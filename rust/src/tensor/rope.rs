@@ -1,0 +1,64 @@
+//! Rotary positional embeddings, matching `python/compile/model.py`
+//! (`apply_rope`): pairs are (x[2i], x[2i+1]), angle(pos, i) =
+//! pos * theta^(-2i/d).
+
+/// Apply RoPE in place to a single head vector `x[d]` at position `pos`.
+pub fn apply_rope(x: &mut [f32], pos: u32, theta: f32) {
+    let d = x.len();
+    debug_assert!(d % 2 == 0);
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(2.0 * i as f32) / d as f32);
+        let ang = pos as f32 * freq;
+        let (s, c) = ang.sin_cos();
+        let a = x[2 * i];
+        let b = x[2 * i + 1];
+        x[2 * i] = a * c - b * s;
+        x[2 * i + 1] = a * s + b * c;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::dot;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let orig = x.clone();
+        apply_rope(&mut x, 0, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut r = Pcg64::new(0);
+        for pos in [1u32, 7, 100, 5000] {
+            let mut x = r.normal_vec(64);
+            let norm0 = dot(&x, &x);
+            apply_rope(&mut x, pos, 10000.0);
+            let norm1 = dot(&x, &x);
+            assert!((norm0 - norm1).abs() / norm0 < 1e-4);
+        }
+    }
+
+    #[test]
+    fn relative_position_property() {
+        // <R_m q, R_n k> depends only on m - n
+        let mut r = Pcg64::new(1);
+        let q0 = r.normal_vec(32);
+        let k0 = r.normal_vec(32);
+        let score = |m: u32, n: u32| {
+            let mut q = q0.clone();
+            let mut k = k0.clone();
+            apply_rope(&mut q, m, 10000.0);
+            apply_rope(&mut k, n, 10000.0);
+            dot(&q, &k)
+        };
+        assert!((score(3, 1) - score(10, 8)).abs() < 1e-3);
+        assert!((score(6, 6) - score(0, 0)).abs() < 1e-3);
+        assert!((score(5, 0) - score(9, 4)).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-repo property-testing harness (proptest is unavailable offline).
+//!
+//! [`prop::check`] runs a property over `n` generated cases with
+//! deterministic seeds and, on failure, performs greedy shrinking via the
+//! case's [`prop::Shrink`] implementation before panicking with the
+//! minimal counterexample.
+
+pub mod prop;

@@ -1,0 +1,233 @@
+//! Reduced-precision float codecs used for KV-cache *storage*.
+//!
+//! SWAN stores sparse values as float16 (default, Eq. 1: 3k+2 bytes/vector)
+//! or as 8-bit E4M3 floats (aggressive mode, 2k+2 bytes/vector).  Compute
+//! always happens in f32 after a dequantize-on-read; these codecs define
+//! exactly what information survives storage.
+
+/// Convert an f32 to IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // subnormal or zero
+        if e < -10 {
+            return sign;
+        }
+        let m = mant | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        // round to nearest even
+        let rem = m & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half & 1) == 1) {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = (e as u32) << 10 | (mant >> 13);
+    let rem = mant & 0x1fff;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1 // may carry into exponent; that is correct rounding
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// Convert IEEE binary16 bits to f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalise
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((127 - 15 + e + 2) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip f32 through f16 (storage precision of the 16-bit variant).
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// FP8 E4M3 (1 sign, 4 exponent, 3 mantissa; bias 7; max finite 448,
+/// matching the OCP FP8 spec without NaN-overloading subtleties —
+/// out-of-range values saturate).
+pub fn f32_to_fp8_e4m3(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7f;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    if a >= 448.0 {
+        return sign | 0x7e; // saturate to max finite 448
+    }
+    // smallest subnormal = 2^-9
+    if a < 2.0_f32.powi(-9) * 0.5 {
+        return sign;
+    }
+    let bits = a.to_bits();
+    let mut e = ((bits >> 23) & 0xff) as i32 - 127;
+    let mant = bits & 0x7f_ffff;
+    if e < -6 {
+        // subnormal range: value = m * 2^-9, m in 1..7
+        let m = (a / 2.0_f32.powi(-9)).round() as u32;
+        if m == 0 {
+            return sign;
+        }
+        if m >= 8 {
+            return sign | (1 << 3); // rounds up into the normal range
+        }
+        return sign | m as u8;
+    }
+    // normal: round the 3-bit mantissa
+    let mut m3 = (mant >> 20) as u32;
+    let rem = mant & 0xf_ffff;
+    let halfway = 0x8_0000;
+    if rem > halfway || (rem == halfway && (m3 & 1) == 1) {
+        m3 += 1;
+        if m3 == 8 {
+            m3 = 0;
+            e += 1;
+            if e > 8 {
+                return sign | 0x7e;
+            }
+        }
+    }
+    sign | (((e + 7) as u8) << 3) | m3 as u8
+}
+
+/// FP8 E4M3 bits to f32.
+pub fn fp8_e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 3) & 0x0f) as i32;
+    let mant = (b & 0x7) as f32;
+    if exp == 0 {
+        sign * mant * 2.0_f32.powi(-9)
+    } else {
+        sign * (1.0 + mant / 8.0) * 2.0_f32.powi(exp - 7)
+    }
+}
+
+/// Round-trip f32 through FP8 E4M3 (storage precision of the 8-bit variant).
+pub fn quantize_fp8(x: f32) -> f32 {
+    fp8_e4m3_to_f32(f32_to_fp8_e4m3(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -0.25, 1024.0] {
+            assert_eq!(quantize_f16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut r = crate::util::Pcg64::new(1);
+        for _ in 0..10_000 {
+            let x = (r.normal_f32()) * 10.0;
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x.abs().max(1e-6)).abs();
+            assert!(rel < 1e-3 || x.abs() < 1e-4, "x={x} q={q}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 3.0e-6f32; // subnormal range of f16
+        let q = quantize_f16(tiny);
+        assert!((q - tiny).abs() / tiny < 0.1, "tiny={tiny} q={q}");
+    }
+
+    #[test]
+    fn fp8_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 448.0, -448.0, 0.125] {
+            assert_eq!(quantize_fp8(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn fp8_saturates() {
+        assert_eq!(quantize_fp8(1e9), 448.0);
+        assert_eq!(quantize_fp8(-1e9), -448.0);
+    }
+
+    #[test]
+    fn fp8_relative_error_bounded() {
+        let mut r = crate::util::Pcg64::new(2);
+        for _ in 0..10_000 {
+            let x = r.normal_f32() * 4.0;
+            if x.abs() < 0.015625 {
+                // subnormal range: absolute (not relative) error bound applies
+                continue;
+            }
+            let q = quantize_fp8(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 0.0625 + 1e-6, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn fp8_monotonic() {
+        let mut last = -f32::INFINITY;
+        for b in 0..0x7f {
+            // positive codes ascending
+            let v = fp8_e4m3_to_f32(b);
+            assert!(v >= last, "code {b}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn fp8_roundtrip_idempotent() {
+        let mut r = crate::util::Pcg64::new(3);
+        for _ in 0..1000 {
+            let x = r.normal_f32() * 100.0;
+            let q = quantize_fp8(x);
+            assert_eq!(quantize_fp8(q), q);
+        }
+    }
+}

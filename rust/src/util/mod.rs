@@ -1,0 +1,11 @@
+//! Small self-contained utilities (the sandbox has no external crates for
+//! these: rng, half/8-bit float codecs, statistics, JSON).
+
+pub mod fp;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use fp::{f16_bits_to_f32, f32_to_f16_bits, f32_to_fp8_e4m3, fp8_e4m3_to_f32};
+pub use rng::Pcg64;
+pub use stats::Summary;

@@ -1,0 +1,153 @@
+//! Summary statistics for the in-repo benchmark harness (criterion is not
+//! available offline; `rust/benches/*` use this instead).
+
+use std::time::{Duration, Instant};
+
+/// Summary of a sample of measurements (nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Summary {
+    pub fn from_ns(mut samples: Vec<f64>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean_ns: mean,
+            median_ns: percentile(&samples, 50.0),
+            p95_ns: percentile(&samples, 95.0),
+            min_ns: samples[0],
+            max_ns: samples[n - 1],
+            std_ns: var.sqrt(),
+        }
+    }
+
+    /// Human-readable time with unit scaling.
+    pub fn fmt_time(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    }
+
+    pub fn row(&self, name: &str) -> String {
+        format!(
+            "{name:<44} {:>12} {:>12} {:>12}  (n={})",
+            Self::fmt_time(self.median_ns),
+            Self::fmt_time(self.mean_ns),
+            Self::fmt_time(self.p95_ns),
+            self.n
+        )
+    }
+}
+
+/// Percentile of an ascending-sorted sample (linear interpolation).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Benchmark runner: warms up, then measures `iters` runs of `f`.
+/// Returns per-iteration timings.  `f` should include a `black_box` on its
+/// result to defeat dead-code elimination.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    Summary::from_ns(samples)
+}
+
+/// Bench a batch-amortized operation: measures `batch` calls at a time to
+/// keep fast ops above the timer resolution.
+pub fn bench_batched<F: FnMut()>(warmup: usize, iters: usize, batch: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    Summary::from_ns(samples)
+}
+
+/// Wall-clock helper for throughput numbers.
+pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 100.0), 30.0);
+        assert_eq!(percentile(&v, 50.0), 15.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::from_ns(vec![1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert!(s.mean_ns > s.median_ns);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut count = 0u64;
+        let s = bench(2, 10, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, 12);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(Summary::fmt_time(500.0).contains("ns"));
+        assert!(Summary::fmt_time(5_000.0).contains("µs"));
+        assert!(Summary::fmt_time(5_000_000.0).contains("ms"));
+        assert!(Summary::fmt_time(5e9).contains(" s"));
+    }
+}

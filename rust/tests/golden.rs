@@ -1,0 +1,111 @@
+//! Golden verification of the rust-native model path against the python
+//! model: same weights, same prompt, logits must agree.  This is what
+//! makes the rust-side experiment harness a valid stand-in for the JAX
+//! model in the quality experiments.
+
+use swan::kvcache::PolicyKind;
+use swan::model::transformer::SequenceState;
+use swan::model::{SwanModel, WeightFile};
+use swan::sparse::StorageMode;
+use swan::swan::projection::ProjectionVariant;
+
+fn load(name: &str) -> Option<(SwanModel, WeightFile)> {
+    let dir = swan::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let wf = WeightFile::load(&dir.join(format!("weights_{name}.bin"))).unwrap();
+    let golden = WeightFile::load(&dir.join(format!("golden_{name}.bin"))).unwrap();
+    let model = SwanModel::load(&wf, ProjectionVariant::Calibrated, 0).unwrap();
+    Some((model, golden))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn native_prefill_matches_python_gqa() {
+    let Some((model, golden)) = load("swan-nano-gqa") else { return };
+    let prompt: Vec<u32> =
+        golden.get("prompt_tokens").unwrap().as_i32().unwrap().iter().map(|&t| t as u32).collect();
+    let pf = model.prefill(&prompt);
+    let want = golden.f32("prefill_logits").unwrap();
+    let diff = max_abs_diff(&pf.logits, want);
+    assert!(diff < 3e-2, "native prefill logits deviate: {diff}");
+
+    // khat history must match too (layout [L, nkv, T, dh])
+    let gk = golden.f32("prefill_khat").unwrap();
+    let cfg = &model.cfg;
+    let t = prompt.len();
+    let mut kdiff = 0.0f32;
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            let ours = &pf.khat[l][h];
+            let base = (l * cfg.n_kv_heads + h) * t * cfg.d_head;
+            kdiff = kdiff.max(max_abs_diff(ours, &gk[base..base + t * cfg.d_head]));
+        }
+    }
+    assert!(kdiff < 2e-2, "native khat deviates: {kdiff}");
+}
+
+#[test]
+fn native_prefill_matches_python_mha() {
+    let Some((model, golden)) = load("swan-nano-mha") else { return };
+    let prompt: Vec<u32> =
+        golden.get("prompt_tokens").unwrap().as_i32().unwrap().iter().map(|&t| t as u32).collect();
+    let pf = model.prefill(&prompt);
+    let diff = max_abs_diff(&pf.logits, golden.f32("prefill_logits").unwrap());
+    assert!(diff < 3e-2, "native MHA prefill deviates: {diff}");
+}
+
+#[test]
+fn native_dense_decode_matches_python() {
+    let Some((model, golden)) = load("swan-nano-gqa") else { return };
+    let prompt: Vec<u32> =
+        golden.get("prompt_tokens").unwrap().as_i32().unwrap().iter().map(|&t| t as u32).collect();
+    let next = golden.get("swan_decode_token").unwrap().as_i32().unwrap()[0] as u32;
+
+    let pf = model.prefill(&prompt);
+    let mut st = SequenceState::new(&model, PolicyKind::Dense);
+    st.load_prefill(&pf);
+    let logits = model.decode_step(&mut st, next);
+    let diff = max_abs_diff(&logits, golden.f32("dense_decode_logits").unwrap());
+    assert!(diff < 5e-2, "native dense decode deviates: {diff}");
+}
+
+#[test]
+fn native_swan_decode_matches_python() {
+    let Some((model, golden)) = load("swan-nano-gqa") else { return };
+    let prompt: Vec<u32> =
+        golden.get("prompt_tokens").unwrap().as_i32().unwrap().iter().map(|&t| t as u32).collect();
+    let meta = golden.get("swan_decode_cfg").unwrap().as_i32().unwrap();
+    let (buf_n, k_active) = (meta[0] as usize, meta[1] as usize);
+    let next = golden.get("swan_decode_token").unwrap().as_i32().unwrap()[0] as u32;
+
+    let pf = model.prefill(&prompt);
+    let mut st = SequenceState::new(
+        &model,
+        PolicyKind::Swan { k_active, buffer: buf_n, mode: StorageMode::F32 },
+    );
+    st.load_prefill(&pf);
+    let logits = model.decode_step(&mut st, next);
+    let diff = max_abs_diff(&logits, golden.f32("swan_decode_logits").unwrap());
+    assert!(diff < 5e-2, "native swan decode deviates: {diff}");
+}
+
+#[test]
+fn trained_model_continues_corpus_plausibly() {
+    // end-to-end sanity: greedy continuation of corpus-like text stays in
+    // the printable alphabet and is deterministic
+    let Some((model, _)) = load("swan-nano-gqa") else { return };
+    let prompt = swan::coordinator::request::encode_text("the sparse cache stores the ");
+    let pf = model.prefill(&prompt);
+    let mut st = SequenceState::new(&model, PolicyKind::Dense);
+    st.load_prefill(&pf);
+    let next = swan::tensor::ops::argmax(&pf.logits) as u32;
+    let toks = swan::model::generate::greedy(&model, &mut st, next, 24);
+    let text = swan::coordinator::request::decode_tokens(&toks);
+    assert!(text.is_ascii(), "{text}");
+}

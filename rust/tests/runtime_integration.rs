@@ -1,0 +1,233 @@
+//! PJRT runtime integration: load AOT artifacts, execute graphs, compare
+//! against the python goldens.  Skipped (cleanly) when `make artifacts`
+//! has not been run.
+
+use swan::coordinator::request::decode_tokens;
+use swan::model::weights::WeightFile;
+use swan::runtime::engine::{HostTensor, LoadedModel};
+use swan::runtime::ArtifactStore;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = swan::artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_complete() {
+    let dir = require_artifacts!();
+    let store = ArtifactStore::load(&dir).unwrap();
+    for name in ["swan-nano-gqa", "swan-nano-mha"] {
+        let m = store.model(name).unwrap();
+        assert!(!m.decode_buckets().is_empty());
+        assert!(!m.prefill_buckets().is_empty());
+        assert!(m.weights.exists());
+        assert!(m.golden.exists());
+        for g in m.graphs.values() {
+            assert!(g.file.exists(), "{:?}", g.file);
+        }
+    }
+}
+
+#[test]
+fn smoke_graph_executes() {
+    let dir = require_artifacts!();
+    // model.hlo.txt: single-head swan attention, d=8, ls=4, k=2, b=3
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(
+        dir.join("model.hlo.txt").to_str().unwrap(),
+    )
+    .unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+
+    let d = 8usize;
+    let q = vec![1.0f32; d];
+    let kvals = vec![0.0f32; 4 * 2];
+    let kidx = vec![0i32; 4 * 2];
+    let smask = vec![0.0f32; 4]; // sparse all masked
+    let bmask = vec![1.0f32, 0.0, 0.0];
+    let kbuf = vec![0.0f32; 3 * d];
+    let mut vbuf = vec![0.0f32; 3 * d];
+    vbuf[..d].iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+
+    let lit = |v: &Vec<f32>, dims: &[i64]| xla::Literal::vec1(v).reshape(dims).unwrap();
+    let liti = |v: &Vec<i32>, dims: &[i64]| xla::Literal::vec1(v).reshape(dims).unwrap();
+    let args = vec![
+        lit(&q, &[8]),
+        lit(&kvals, &[4, 2]),
+        liti(&kidx, &[4, 2]),
+        lit(&kvals, &[4, 2]),
+        liti(&kidx, &[4, 2]),
+        lit(&kbuf, &[3, 8]),
+        lit(&vbuf, &[3, 8]),
+        lit(&smask, &[4]),
+        lit(&bmask, &[3]),
+    ];
+    let out = exe.execute::<xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let vals = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+    // single live slot (buffer row 0) -> output == vbuf row 0
+    for (i, v) in vals.iter().enumerate() {
+        assert!((v - i as f32).abs() < 1e-5, "{vals:?}");
+    }
+}
+
+#[test]
+fn prefill_matches_python_golden() {
+    let dir = require_artifacts!();
+    let lm = LoadedModel::open(&dir, "swan-nano-gqa").unwrap();
+    let arts = lm.store.model("swan-nano-gqa").unwrap();
+    let golden = WeightFile::load(&arts.golden).unwrap();
+
+    let prompt = golden.get("prompt_tokens").unwrap().as_i32().unwrap().to_vec();
+    let t = prompt.len();
+    let cap = 64usize;
+    let mut tokens = vec![0i32; cap];
+    tokens[..t].copy_from_slice(&prompt);
+    let mut tmask = vec![0.0f32; cap];
+    tmask[..t].iter_mut().for_each(|x| *x = 1.0);
+
+    let outs = lm
+        .execute(
+            "prefill_t64",
+            &[HostTensor::i32(tokens, vec![cap]), HostTensor::f32(tmask, vec![cap])],
+        )
+        .unwrap();
+    let logits = outs[0].as_f32().unwrap();
+    let want = golden.f32("prefill_logits").unwrap();
+    let mut max_diff = 0.0f32;
+    for (a, b) in logits.iter().zip(want) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 2e-2, "prefill logits deviate: {max_diff}");
+
+    // khat must match on the live prefix
+    let khat = outs[1].as_f32().unwrap();
+    let gk = golden.f32("prefill_khat").unwrap();
+    let cfg = &arts.config;
+    // graph layout [L, nkv, cap, dh], golden [L, nkv, t, dh]
+    let dh = cfg.d_head;
+    let mut kdiff = 0.0f32;
+    for l in 0..cfg.n_layers {
+        for h in 0..cfg.n_kv_heads {
+            for ti in 0..t {
+                let src = ((l * cfg.n_kv_heads + h) * cap + ti) * dh;
+                let dst = ((l * cfg.n_kv_heads + h) * t + ti) * dh;
+                for j in 0..dh {
+                    kdiff = kdiff.max((khat[src + j] - gk[dst + j]).abs());
+                }
+            }
+        }
+    }
+    assert!(kdiff < 1e-2, "prefill khat deviates: {kdiff}");
+}
+
+#[test]
+fn swan_decode_matches_python_golden() {
+    let dir = require_artifacts!();
+    let lm = LoadedModel::open(&dir, "swan-nano-gqa").unwrap();
+    let arts = lm.store.model("swan-nano-gqa").unwrap();
+    let golden = WeightFile::load(&arts.golden).unwrap();
+    let cfg = arts.config.clone();
+
+    // golden swan decode used buf=16, k=32, ls=64 over a 48-token prefill;
+    // replay it through the compiled decode_l128_k32 graph (pad 64 -> 128).
+    let meta = golden.get("swan_decode_cfg").unwrap().as_i32().unwrap();
+    let (buf_n, k_active, ls_g, t) =
+        (meta[0] as usize, meta[1] as usize, meta[2] as usize, meta[3] as usize);
+    assert_eq!((buf_n, k_active, ls_g, t), (16, 32, 64, 48));
+
+    let khat = golden.f32("prefill_khat").unwrap();
+    let vhat = golden.f32("prefill_vhat").unwrap();
+    let (nl, nkv, dh) = (cfg.n_layers, cfg.n_kv_heads, cfg.d_head);
+    let n_sp = t - buf_n;
+    let l_cap = 128usize;
+    let buf_cap = 64usize;
+
+    let sp_n = nl * nkv * l_cap * k_active;
+    let mut kvals = vec![0.0f32; sp_n];
+    let mut kidx = vec![0i32; sp_n];
+    let mut vvals = vec![0.0f32; sp_n];
+    let mut vidx = vec![0i32; sp_n];
+    let mut kbuf = vec![0.0f32; nl * nkv * buf_cap * dh];
+    let mut vbuf = vec![0.0f32; nl * nkv * buf_cap * dh];
+    for l in 0..nl {
+        for h in 0..nkv {
+            for ti in 0..n_sp {
+                let row = &khat[((l * nkv + h) * t + ti) * dh..][..dh];
+                let vrow = &vhat[((l * nkv + h) * t + ti) * dh..][..dh];
+                let ki = swan::sparse::topk::topk_indices(row, k_active);
+                let vi = swan::sparse::topk::topk_indices(vrow, k_active);
+                let off = ((l * nkv + h) * l_cap + ti) * k_active;
+                for j in 0..k_active {
+                    kvals[off + j] = row[ki[j] as usize];
+                    kidx[off + j] = ki[j] as i32;
+                    vvals[off + j] = vrow[vi[j] as usize];
+                    vidx[off + j] = vi[j] as i32;
+                }
+            }
+            for (slot, ti) in (n_sp..t).enumerate() {
+                let src = ((l * nkv + h) * t + ti) * dh;
+                let dst = ((l * nkv + h) * buf_cap + slot) * dh;
+                kbuf[dst..dst + dh].copy_from_slice(&khat[src..src + dh]);
+                vbuf[dst..dst + dh].copy_from_slice(&vhat[src..src + dh]);
+            }
+        }
+    }
+    let mut smask = vec![0.0f32; l_cap];
+    smask[..n_sp].iter_mut().for_each(|x| *x = 1.0);
+    let mut bmask = vec![0.0f32; buf_cap];
+    bmask[..buf_n].iter_mut().for_each(|x| *x = 1.0);
+
+    let next_tok = golden.get("swan_decode_token").unwrap().as_i32().unwrap()[0];
+    let sp_shape = vec![nl, nkv, l_cap, k_active];
+    let outs = lm
+        .execute(
+            "decode_l128_k32",
+            &[
+                HostTensor::scalar_i32(next_tok),
+                HostTensor::scalar_i32(t as i32),
+                HostTensor::f32(kvals, sp_shape.clone()),
+                HostTensor::i32(kidx, sp_shape.clone()),
+                HostTensor::f32(vvals, sp_shape.clone()),
+                HostTensor::i32(vidx, sp_shape),
+                HostTensor::f32(kbuf, vec![nl, nkv, buf_cap, dh]),
+                HostTensor::f32(vbuf, vec![nl, nkv, buf_cap, dh]),
+                HostTensor::f32(smask, vec![l_cap]),
+                HostTensor::f32(bmask, vec![buf_cap]),
+            ],
+        )
+        .unwrap();
+    let logits = outs[0].as_f32().unwrap();
+    let want = golden.f32("swan_decode_logits").unwrap();
+    let mut max_diff = 0.0f32;
+    for (a, b) in logits.iter().zip(want) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 2e-2, "swan decode logits deviate: {max_diff}");
+}
+
+#[test]
+fn golden_prompt_is_corpus_text() {
+    let dir = require_artifacts!();
+    let store = ArtifactStore::load(&dir).unwrap();
+    let golden = WeightFile::load(&store.model("swan-nano-gqa").unwrap().golden).unwrap();
+    let toks: Vec<u32> =
+        golden.get("prompt_tokens").unwrap().as_i32().unwrap().iter().map(|&t| t as u32).collect();
+    let text = decode_tokens(&toks);
+    assert!(text.is_ascii());
+    assert!(text.contains(' '));
+}

@@ -1,0 +1,156 @@
+//! Serving-stack integration: engine over the real AOT artifacts, plus a
+//! live TCP round-trip.  Skipped cleanly when artifacts are absent.
+
+use std::io::{BufRead, BufReader, Write};
+
+use swan::config::ServeConfig;
+use swan::coordinator::Engine;
+use swan::sparse::StorageMode;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = swan::artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn engine_serves_single_request() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir, ServeConfig::default()).unwrap();
+    engine.submit_text("the quick cache stores the ", 12);
+    let rs = engine.run_to_completion().unwrap();
+    assert_eq!(rs.len(), 1);
+    let r = &rs[0];
+    assert_eq!(r.stats.decode_steps + 1, r.tokens.len().max(r.stats.decode_steps + 1));
+    assert!(r.tokens.len() <= 12);
+    assert!(r.text.is_ascii());
+    assert!(r.stats.prefill_time.as_nanos() > 0);
+}
+
+#[test]
+fn engine_batches_multiple_requests() {
+    let dir = require_artifacts!();
+    let mut engine = Engine::new(&dir, ServeConfig { max_batch: 4, ..Default::default() }).unwrap();
+    for i in 0..5 {
+        engine.submit_text(&format!("the sparse vector {i} maps the "), 8);
+    }
+    let rs = engine.run_to_completion().unwrap();
+    assert_eq!(rs.len(), 5);
+    let ids: std::collections::HashSet<u64> = rs.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 5, "every request answered exactly once");
+}
+
+#[test]
+fn swan_saves_memory_vs_dense_serving() {
+    let dir = require_artifacts!();
+    let prompt = format!(
+        "{} the value ",
+        swan::eval::corpus::mixed_text(&mut swan::util::Pcg64::new(4), 220)
+    );
+    let run = |cfg: ServeConfig| {
+        let mut engine = Engine::new(&dir, cfg).unwrap();
+        engine.submit_text(&prompt, 16);
+        engine.run_to_completion().unwrap().pop().unwrap()
+    };
+    let dense = run(ServeConfig { dense_baseline: true, ..Default::default() });
+    let sw = run(ServeConfig { k_active: 16, mode: StorageMode::F8, ..Default::default() });
+    assert!(dense.stats.memory_saving().abs() < 1e-6);
+    assert!(
+        sw.stats.memory_saving() > 0.3,
+        "swan saving {:.3} too small",
+        sw.stats.memory_saving()
+    );
+}
+
+#[test]
+fn swan_output_tracks_dense_output() {
+    // greedy generations should agree for at least the first tokens at
+    // mild compression
+    let dir = require_artifacts!();
+    let prompt = "fact kernel9 is 300 . recall kernel9 -> ";
+    let run = |cfg: ServeConfig| {
+        let mut engine = Engine::new(&dir, cfg).unwrap();
+        engine.submit_text(prompt, 6);
+        engine.run_to_completion().unwrap().pop().unwrap().text
+    };
+    let dense = run(ServeConfig { dense_baseline: true, ..Default::default() });
+    let sw = run(ServeConfig { k_active: 48, ..Default::default() });
+    assert_eq!(
+        dense.chars().take(3).collect::<String>(),
+        sw.chars().take(3).collect::<String>(),
+        "dense '{dense}' vs swan '{sw}'"
+    );
+}
+
+#[test]
+fn runtime_k_change_applies() {
+    let dir = require_artifacts!();
+    let mut engine =
+        Engine::new(&dir, ServeConfig { k_active: 48, ..Default::default() }).unwrap();
+    assert_eq!(engine.current_k_active(), 48);
+    engine.set_k_active(16);
+    assert_eq!(engine.current_k_active(), 16);
+    engine.submit_text("the rotated kernel splits the ", 4);
+    let r = engine.run_to_completion().unwrap().pop().unwrap();
+    assert!(r.text.is_ascii());
+}
+
+#[test]
+fn tcp_round_trip() {
+    let dir = require_artifacts!();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let cfg = ServeConfig { bind: "127.0.0.1:0".into(), ..Default::default() };
+    std::thread::spawn(move || {
+        let _ = swan::server::tcp::serve_with_ready(&dir, cfg, move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(120)).expect("server start");
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    writeln!(stream, "PING").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG");
+
+    line.clear();
+    writeln!(stream, "SET k_active 32").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "OK");
+
+    line.clear();
+    writeln!(stream, "GEN 8 the quick cache stores the ").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK "), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("STAT "), "{line}");
+
+    line.clear();
+    writeln!(stream, "STATS").unwrap();
+    let mut saw_dot = false;
+    for _ in 0..32 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        if line.trim() == "." {
+            saw_dot = true;
+            break;
+        }
+    }
+    assert!(saw_dot, "STATS terminator missing");
+
+    writeln!(stream, "QUIT").unwrap();
+}
