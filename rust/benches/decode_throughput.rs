@@ -1,15 +1,112 @@
-//! Bench: PJRT decode-step latency per shape bucket, SWAN vs dense
-//! baseline graphs — the serving-path compute comparison (needs
-//! `make artifacts`).
+//! Bench: decode throughput.
+//!
+//! Part 1 (always runs): the rust-native batched decode path — serial
+//! `decode_step` per sequence vs `decode_step_batch` fanned across the
+//! worker pool, at batch sizes {1, 4, 16, 64}.  This is the tentpole
+//! comparison: same arithmetic, different scheduling, so tokens/sec is
+//! the whole story.
+//!
+//! Part 2 (needs `make artifacts`): PJRT decode-step latency per shape
+//! bucket, SWAN vs dense baseline graphs.
 
+use swan::config::ModelConfig;
+use swan::kvcache::PolicyKind;
+use swan::model::transformer::{SequenceState, SwanModel};
 use swan::runtime::engine::{HostTensor, LoadedModel};
+use swan::sparse::StorageMode;
+use swan::swan::batch::WorkerPool;
+use swan::tensor::ops::argmax;
 use swan::util::stats::{bench, Summary};
 use swan::util::Pcg64;
 
-fn main() {
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "swan-bench".into(),
+        d_model: 128,
+        n_layers: 4,
+        n_q_heads: 8,
+        n_kv_heads: 4,
+        d_head: 16,
+        d_ff: 256,
+        vocab: 96,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    }
+}
+
+fn fresh_states(model: &SwanModel, pf: &swan::model::transformer::Prefill, n: usize) -> Vec<SequenceState> {
+    (0..n)
+        .map(|_| {
+            let mut st = SequenceState::new(
+                model,
+                PolicyKind::Swan { k_active: 8, buffer: 16, mode: StorageMode::F16 },
+            );
+            st.load_prefill(pf);
+            st
+        })
+        .collect()
+}
+
+fn native_batched_section() {
+    let model = SwanModel::synthetic(bench_cfg(), 11);
+    let prompt: Vec<u32> = (0..48).map(|i| (i * 7 % 96) as u32).collect();
+    let pf = model.prefill(&prompt);
+    let steps = 32usize;
+    let workers = WorkerPool::recommended_threads();
+
+    println!(
+        "# decode_throughput: native batched decode ({} layers, d={}, {} q / {} kv heads; \
+         {} steps/seq, {} workers)",
+        model.cfg.n_layers, model.cfg.d_model, model.cfg.n_q_heads, model.cfg.n_kv_heads,
+        steps, workers
+    );
+    println!(
+        "{:<8} {:>14} {:>16} {:>9}",
+        "batch", "serial tok/s", "parallel tok/s", "speedup"
+    );
+
+    for &batch in &[1usize, 4, 16, 64] {
+        // serial: one decode_step per sequence per iteration
+        let mut states = fresh_states(&model, &pf, batch);
+        let mut toks = vec![argmax(&pf.logits) as u32; batch];
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            for (st, tok) in states.iter_mut().zip(toks.iter_mut()) {
+                let logits = model.decode_step(st, *tok);
+                *tok = argmax(&logits) as u32;
+            }
+        }
+        let serial_s = t0.elapsed().as_secs_f64();
+        let serial_tps = (batch * steps) as f64 / serial_s;
+        let serial_tokens = toks.clone();
+
+        // parallel: lock-step decode_step_batch over the pool
+        let mut pool = WorkerPool::new(workers);
+        let mut states = fresh_states(&model, &pf, batch);
+        let mut toks = vec![argmax(&pf.logits) as u32; batch];
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let logits = model.decode_step_batch(&mut states, &toks, &mut pool);
+            for (tok, l) in toks.iter_mut().zip(&logits) {
+                *tok = argmax(l) as u32;
+            }
+        }
+        let par_s = t0.elapsed().as_secs_f64();
+        let par_tps = (batch * steps) as f64 / par_s;
+
+        assert_eq!(serial_tokens, toks, "parallel decode diverged from serial");
+        println!(
+            "{batch:<8} {serial_tps:>14.1} {par_tps:>16.1} {:>8.2}x",
+            par_tps / serial_tps
+        );
+    }
+    println!();
+}
+
+fn pjrt_section() {
     let dir = swan::artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        println!("decode_throughput: skipping (run `make artifacts` first)");
+        println!("decode_throughput (PJRT): skipping (run `make artifacts` first)");
         return;
     }
     let lm = LoadedModel::open(&dir, "swan-nano-gqa").expect("artifacts");
@@ -68,4 +165,9 @@ fn main() {
         Summary::fmt_time(t.median_ns),
         1e9 / t.median_ns
     );
+}
+
+fn main() {
+    native_batched_section();
+    pjrt_section();
 }

@@ -55,6 +55,7 @@ fn main() {
     }
     let n = 8usize;
     let max_new = 32usize;
+    let workers = swan::swan::batch::WorkerPool::recommended_threads();
     println!("# e2e_serve ({n} requests, {max_new} new tokens each, ~180-char prompts)");
     for (label, cfg) in [
         ("dense baseline", ServeConfig { dense_baseline: true, ..Default::default() }),
@@ -67,8 +68,26 @@ fn main() {
             ServeConfig { k_active: 32, mode: StorageMode::F16, ..Default::default() },
         ),
         (
+            "swan k=32 16-bit ∥",
+            ServeConfig {
+                k_active: 32,
+                mode: StorageMode::F16,
+                decode_workers: workers,
+                ..Default::default()
+            },
+        ),
+        (
             "swan k=32 8-bit",
             ServeConfig { k_active: 32, mode: StorageMode::F8, ..Default::default() },
+        ),
+        (
+            "swan k=32 8-bit ∥",
+            ServeConfig {
+                k_active: 32,
+                mode: StorageMode::F8,
+                decode_workers: workers,
+                ..Default::default()
+            },
         ),
         (
             "swan k=16 8-bit",

@@ -69,6 +69,9 @@ pub struct ServeConfig {
     pub mem_budget: usize,
     /// Serve with the dense baseline instead of SWAN (for A/B runs).
     pub dense_baseline: bool,
+    /// Worker threads for the iteration-level decode fan-out (0 = serial
+    /// single-thread decode; results are identical either way).
+    pub decode_workers: usize,
     /// TCP bind address for `swan serve`.
     pub bind: String,
 }
@@ -84,6 +87,7 @@ impl Default for ServeConfig {
             max_new_tokens: 64,
             mem_budget: 0,
             dense_baseline: false,
+            decode_workers: 0,
             bind: "127.0.0.1:7877".into(),
         }
     }

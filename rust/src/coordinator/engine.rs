@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
@@ -22,6 +22,7 @@ use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response
 use crate::coordinator::scheduler::Scheduler;
 use crate::coordinator::sequence::{CacheShape, SeqCache};
 use crate::runtime::engine::{ArgView, HostTensor, LoadedModel};
+use crate::swan::batch::WorkerPool;
 
 use crate::tensor::ops::{argmax, softmax_inplace};
 use crate::util::Pcg64;
@@ -40,10 +41,15 @@ struct ActiveSeq {
     stats: RequestStats,
     rng: Pcg64,
     decode_graph: String,
+    /// Set by the commit phase; the sequence is retired at iteration end.
+    finished: bool,
 }
 
 /// The serving engine (single-threaded stepper; wrap in a thread for the
-/// TCP server).
+/// TCP server).  With `cfg.decode_workers > 0` each decode iteration fans
+/// the per-sequence graph executions across a worker pool — the batch is
+/// still re-formed every iteration, so continuous-batching semantics are
+/// unchanged and results are identical to serial stepping.
 pub struct Engine {
     pub lm: LoadedModel,
     pub cfg: ServeConfig,
@@ -56,6 +62,7 @@ pub struct Engine {
     decode_l_buckets: Vec<usize>,
     prefill_buckets: Vec<usize>,
     next_id: u64,
+    pool: WorkerPool,
 }
 
 impl Engine {
@@ -90,6 +97,7 @@ impl Engine {
             finished: VecDeque::new(),
             metrics: Arc::new(Metrics::default()),
             next_id: 1,
+            pool: WorkerPool::new(cfg.decode_workers),
             lm,
             cfg,
         })
@@ -287,22 +295,118 @@ impl Engine {
             stats,
             backend,
             req,
+            finished: false,
         })
     }
 
+    /// One decode iteration, in two phases:
+    ///
+    /// * **read/execute** — every active sequence runs its decode graph;
+    ///   with `decode_workers > 0` these independent executions fan
+    ///   across the pool (each task owns its sequence `&mut`, the PJRT
+    ///   runtime is shared immutably);
+    /// * **commit** — serially, in submission order: append the new
+    ///   (k̂, v̂) rows, sample the next token, account stats, retire
+    ///   finished sequences.
+    ///
+    /// Each sequence's compute depends only on its own pre-iteration
+    /// state, so the fan-out produces the same tokens as serial stepping.
     fn decode_iteration(&mut self) -> anyhow::Result<()> {
-        let mut i = 0;
-        while i < self.active.len() {
-            let done = self.decode_one(i)?;
-            if done {
-                let seq = self.active.swap_remove(i);
-                let resp = finish(seq);
-                self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-                self.finished.push_back(resp);
-            } else {
-                i += 1;
+        let shape = self.shape;
+        // SWAN_CLONE_ARGS=1 forces the pre-optimization clone-per-step
+        // path (kept for the §Perf before/after measurement).
+        let clone_args = std::env::var("SWAN_CLONE_ARGS").is_ok();
+
+        struct StepTask<'a> {
+            seq: &'a mut ActiveSeq,
+            out: Option<anyhow::Result<Option<Vec<HostTensor>>>>,
+            exec: Duration,
+        }
+
+        // phase 1: execute (parallel when the pool has workers)
+        {
+            let lm = &self.lm;
+            let l_buckets = &self.decode_l_buckets;
+            let mut tasks: Vec<StepTask> = self
+                .active
+                .iter_mut()
+                .map(|seq| StepTask { seq, out: None, exec: Duration::ZERO })
+                .collect();
+            self.pool.for_each_mut(&mut tasks, |_scratch, t| {
+                let t0 = Instant::now();
+                t.out = Some(decode_execute(lm, shape, l_buckets, clone_args, t.seq));
+                t.exec = t0.elapsed();
+            });
+
+            // phase 2: commit serially, in submission order
+            for t in tasks.iter_mut() {
+                let t0 = Instant::now();
+                let outs = match t.out.take().expect("phase 1 ran for every task") {
+                    Ok(Some(outs)) => outs,
+                    Ok(None) => {
+                        t.seq.finished = true;
+                        continue;
+                    }
+                    Err(e) => return Err(e),
+                };
+                let seq = &mut *t.seq;
+                let logits = outs[0].as_f32()?;
+                let khat = outs[1].as_f32()?;
+                let vhat = outs[2].as_f32()?;
+
+                match &mut seq.backend {
+                    SeqBackend::Swan(cache) => cache.append(khat, vhat),
+                    SeqBackend::Dense { k, v, len, cap } => {
+                        let dh = shape.d_head;
+                        let heads = shape.n_layers * shape.n_kv;
+                        for hh in 0..heads {
+                            let dst = (hh * *cap + *len) * dh;
+                            k[dst..dst + dh].copy_from_slice(&khat[hh * dh..(hh + 1) * dh]);
+                            v[dst..dst + dh].copy_from_slice(&vhat[hh * dh..(hh + 1) * dh]);
+                        }
+                        *len += 1;
+                    }
+                }
+
+                let next = sample(logits, seq.req.temperature, &mut seq.rng);
+                seq.next_token = next;
+                seq.produced.push(next);
+                seq.stats.decode_steps += 1;
+                let step_time = t.exec + t0.elapsed();
+                seq.stats.decode_time += step_time;
+                let bytes = match &seq.backend {
+                    SeqBackend::Swan(c) => c.storage_bytes(),
+                    SeqBackend::Dense { len, .. } => {
+                        2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
+                    }
+                };
+                seq.stats.peak_cache_bytes = seq.stats.peak_cache_bytes.max(bytes);
+                seq.stats.dense_equiv_bytes = match &seq.backend {
+                    SeqBackend::Swan(c) => c.dense_equiv_bytes(),
+                    SeqBackend::Dense { len, .. } => {
+                        2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
+                    }
+                };
+                self.metrics.decode_step_ns.record(step_time.as_nanos() as f64);
+                self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
             }
         }
+
+        // retire finished sequences, preserving submission order (skip the
+        // rebuild entirely on the common nothing-finished iteration)
+        if self.active.iter().any(|s| s.finished) {
+            let mut keep = Vec::with_capacity(self.active.len());
+            for seq in self.active.drain(..) {
+                if seq.finished {
+                    self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    self.finished.push_back(finish(seq));
+                } else {
+                    keep.push(seq);
+                }
+            }
+            self.active = keep;
+        }
+
         // metrics snapshot of live cache
         self.metrics.cache_bytes.store(self.live_cache_bytes(), Ordering::Relaxed);
         let dense_equiv: usize = self
@@ -318,145 +422,105 @@ impl Engine {
         self.metrics.dense_equiv_bytes.store(dense_equiv, Ordering::Relaxed);
         Ok(())
     }
+}
 
-    /// One decode step for sequence `i`; returns true when finished.
-    fn decode_one(&mut self, i: usize) -> anyhow::Result<bool> {
-        let t0 = Instant::now();
-        let shape = self.shape;
-        let seq = &mut self.active[i];
-        if seq.produced.len() >= seq.req.max_new_tokens {
-            return Ok(true);
-        }
-        if let Some(stop) = seq.req.stop_token {
-            if seq.next_token == stop {
-                return Ok(true);
-            }
-        }
-
-        // SWAN_CLONE_ARGS=1 forces the pre-optimization clone-per-step
-        // path (kept for the §Perf before/after measurement).
-        let clone_args = std::env::var("SWAN_CLONE_ARGS").is_ok();
-        let outs = match &mut seq.backend {
-            SeqBackend::Swan(cache) => {
-                if cache.needs_growth() {
-                    let next = self
-                        .decode_l_buckets
-                        .iter()
-                        .copied()
-                        .find(|&l| l > cache.l_cap);
-                    match next {
-                        Some(l) => cache.grow(l),
-                        None => return Ok(true), // length limit reached
-                    }
-                }
-                let nl = shape.n_layers;
-                let nkv = shape.n_kv;
-                let graph = format!("decode_l{}_k{}", cache.l_cap, cache.k_active);
-                seq.decode_graph = graph.clone();
-                let sp_shape = vec![nl, nkv, cache.l_cap, cache.k_active];
-                let buf_shape = vec![nl, nkv, shape.buf_cap, shape.d_head];
-                let tok = [seq.next_token as i32];
-                let pos = [cache.pos as i32];
-                let smask = cache.smask();
-                let bmask = cache.bmask();
-                let scalar: [usize; 0] = [];
-                let l_shape = [cache.l_cap];
-                let b_shape = [shape.buf_cap];
-                let views = [
-                    ArgView::I32(&tok, &scalar),
-                    ArgView::I32(&pos, &scalar),
-                    ArgView::F32(&cache.sp_kvals, &sp_shape),
-                    ArgView::I32(&cache.sp_kidx, &sp_shape),
-                    ArgView::F32(&cache.sp_vvals, &sp_shape),
-                    ArgView::I32(&cache.sp_vidx, &sp_shape),
-                    ArgView::F32(&cache.kbuf, &buf_shape),
-                    ArgView::F32(&cache.vbuf, &buf_shape),
-                    ArgView::F32(&smask, &l_shape),
-                    ArgView::F32(&bmask, &b_shape),
-                ];
-                if clone_args {
-                    let args = vec![
-                        HostTensor::scalar_i32(seq.next_token as i32),
-                        HostTensor::scalar_i32(cache.pos as i32),
-                        HostTensor::f32(cache.sp_kvals.clone(), sp_shape.clone()),
-                        HostTensor::i32(cache.sp_kidx.clone(), sp_shape.clone()),
-                        HostTensor::f32(cache.sp_vvals.clone(), sp_shape.clone()),
-                        HostTensor::i32(cache.sp_vidx.clone(), sp_shape.clone()),
-                        HostTensor::f32(cache.kbuf.clone(), buf_shape.clone()),
-                        HostTensor::f32(cache.vbuf.clone(), buf_shape.clone()),
-                        HostTensor::f32(smask.clone(), vec![cache.l_cap]),
-                        HostTensor::f32(bmask.clone(), vec![shape.buf_cap]),
-                    ];
-                    self.lm.execute(&graph, &args)?
-                } else {
-                    self.lm.execute_views(&graph, &views)?
-                }
-            }
-            SeqBackend::Dense { k, v, len, cap } => {
-                if *len >= *cap {
-                    return Ok(true);
-                }
-                let nl = shape.n_layers;
-                let nkv = shape.n_kv;
-                let graph = format!("decode_dense_l{cap}");
-                seq.decode_graph = graph.clone();
-                let mut cmask = vec![0.0f32; *cap];
-                cmask[..*len].iter_mut().for_each(|x| *x = 1.0);
-                let tok = [seq.next_token as i32];
-                let pos = [*len as i32];
-                let scalar: [usize; 0] = [];
-                let kv_shape = vec![nl, nkv, *cap, shape.d_head];
-                let c_shape = [*cap];
-                let views = [
-                    ArgView::I32(&tok, &scalar),
-                    ArgView::I32(&pos, &scalar),
-                    ArgView::F32(k, &kv_shape),
-                    ArgView::F32(v, &kv_shape),
-                    ArgView::F32(&cmask, &c_shape),
-                ];
-                self.lm.execute_views(&graph, &views)?
-            }
-        };
-        let logits = outs[0].as_f32()?;
-        let khat = outs[1].as_f32()?;
-        let vhat = outs[2].as_f32()?;
-
-        match &mut seq.backend {
-            SeqBackend::Swan(cache) => cache.append(khat, vhat),
-            SeqBackend::Dense { k, v, len, cap } => {
-                let dh = shape.d_head;
-                let heads = shape.n_layers * shape.n_kv;
-                for hh in 0..heads {
-                    let dst = (hh * *cap + *len) * dh;
-                    k[dst..dst + dh].copy_from_slice(&khat[hh * dh..(hh + 1) * dh]);
-                    v[dst..dst + dh].copy_from_slice(&vhat[hh * dh..(hh + 1) * dh]);
-                }
-                *len += 1;
-            }
-        }
-
-        let next = sample(logits, seq.req.temperature, &mut seq.rng);
-        seq.next_token = next;
-        seq.produced.push(next);
-        seq.stats.decode_steps += 1;
-        seq.stats.decode_time += t0.elapsed();
-        let bytes = match &seq.backend {
-            SeqBackend::Swan(c) => c.storage_bytes(),
-            SeqBackend::Dense { len, .. } => {
-                2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
-            }
-        };
-        seq.stats.peak_cache_bytes = seq.stats.peak_cache_bytes.max(bytes);
-        seq.stats.dense_equiv_bytes = match &seq.backend {
-            SeqBackend::Swan(c) => c.dense_equiv_bytes(),
-            SeqBackend::Dense { len, .. } => {
-                2 * shape.n_layers * shape.n_kv * shape.d_head * 2 * len
-            }
-        };
-        self.metrics.decode_step_ns.record(t0.elapsed().as_nanos() as f64);
-        self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
-        Ok(false)
+/// Run one sequence's decode graph (the parallel phase of an iteration).
+/// Returns `Ok(None)` when the sequence is finished (token budget, stop
+/// token, or length limit) and nothing was executed.
+fn decode_execute(
+    lm: &LoadedModel,
+    shape: CacheShape,
+    l_buckets: &[usize],
+    clone_args: bool,
+    seq: &mut ActiveSeq,
+) -> anyhow::Result<Option<Vec<HostTensor>>> {
+    if seq.produced.len() >= seq.req.max_new_tokens {
+        return Ok(None);
     }
+    if let Some(stop) = seq.req.stop_token {
+        if seq.next_token == stop {
+            return Ok(None);
+        }
+    }
+
+    let outs = match &mut seq.backend {
+        SeqBackend::Swan(cache) => {
+            if cache.needs_growth() {
+                let next = l_buckets.iter().copied().find(|&l| l > cache.l_cap);
+                match next {
+                    Some(l) => cache.grow(l),
+                    None => return Ok(None), // length limit reached
+                }
+            }
+            let nl = shape.n_layers;
+            let nkv = shape.n_kv;
+            let graph = format!("decode_l{}_k{}", cache.l_cap, cache.k_active);
+            seq.decode_graph = graph.clone();
+            let sp_shape = vec![nl, nkv, cache.l_cap, cache.k_active];
+            let buf_shape = vec![nl, nkv, shape.buf_cap, shape.d_head];
+            let tok = [seq.next_token as i32];
+            let pos = [cache.pos as i32];
+            let smask = cache.smask();
+            let bmask = cache.bmask();
+            let scalar: [usize; 0] = [];
+            let l_shape = [cache.l_cap];
+            let b_shape = [shape.buf_cap];
+            let views = [
+                ArgView::I32(&tok, &scalar),
+                ArgView::I32(&pos, &scalar),
+                ArgView::F32(&cache.sp_kvals, &sp_shape),
+                ArgView::I32(&cache.sp_kidx, &sp_shape),
+                ArgView::F32(&cache.sp_vvals, &sp_shape),
+                ArgView::I32(&cache.sp_vidx, &sp_shape),
+                ArgView::F32(&cache.kbuf, &buf_shape),
+                ArgView::F32(&cache.vbuf, &buf_shape),
+                ArgView::F32(smask, &l_shape),
+                ArgView::F32(bmask, &b_shape),
+            ];
+            if clone_args {
+                let args = vec![
+                    HostTensor::scalar_i32(seq.next_token as i32),
+                    HostTensor::scalar_i32(cache.pos as i32),
+                    HostTensor::f32(cache.sp_kvals.clone(), sp_shape.clone()),
+                    HostTensor::i32(cache.sp_kidx.clone(), sp_shape.clone()),
+                    HostTensor::f32(cache.sp_vvals.clone(), sp_shape.clone()),
+                    HostTensor::i32(cache.sp_vidx.clone(), sp_shape.clone()),
+                    HostTensor::f32(cache.kbuf.clone(), buf_shape.clone()),
+                    HostTensor::f32(cache.vbuf.clone(), buf_shape.clone()),
+                    HostTensor::f32(smask.to_vec(), vec![cache.l_cap]),
+                    HostTensor::f32(bmask.to_vec(), vec![shape.buf_cap]),
+                ];
+                lm.execute(&graph, &args)?
+            } else {
+                lm.execute_views(&graph, &views)?
+            }
+        }
+        SeqBackend::Dense { k, v, len, cap } => {
+            if *len >= *cap {
+                return Ok(None);
+            }
+            let nl = shape.n_layers;
+            let nkv = shape.n_kv;
+            let graph = format!("decode_dense_l{cap}");
+            seq.decode_graph = graph.clone();
+            let mut cmask = vec![0.0f32; *cap];
+            cmask[..*len].iter_mut().for_each(|x| *x = 1.0);
+            let tok = [seq.next_token as i32];
+            let pos = [*len as i32];
+            let scalar: [usize; 0] = [];
+            let kv_shape = vec![nl, nkv, *cap, shape.d_head];
+            let c_shape = [*cap];
+            let views = [
+                ArgView::I32(&tok, &scalar),
+                ArgView::I32(&pos, &scalar),
+                ArgView::F32(k, &kv_shape),
+                ArgView::F32(v, &kv_shape),
+                ArgView::F32(&cmask, &c_shape),
+            ];
+            lm.execute_views(&graph, &views)?
+        }
+    };
+    Ok(Some(outs))
 }
 
 fn finish(seq: ActiveSeq) -> Response {

@@ -21,13 +21,24 @@ pub struct BlockPool {
 }
 
 /// Errors from the pool.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PoolError {
-    #[error("pool exhausted: requested {requested} blocks, {available} free")]
     Exhausted { requested: usize, available: usize },
-    #[error("unknown lease {0}")]
     UnknownLease(u64),
 }
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::Exhausted { requested, available } => {
+                write!(f, "pool exhausted: requested {requested} blocks, {available} free")
+            }
+            PoolError::UnknownLease(id) => write!(f, "unknown lease {id}"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 impl BlockPool {
     pub fn new(block_bytes: usize, n_blocks: usize) -> BlockPool {

@@ -43,6 +43,12 @@ pub struct SeqCache {
     pub vbuf: Vec<f32>,
     /// Total tokens represented.
     pub pos: usize,
+    /// Cached sparse-slot validity mask (1.0 = live), maintained on
+    /// append/grow/load so the decode hot path borrows it instead of
+    /// allocating one per step.
+    smask_buf: Vec<f32>,
+    /// Cached buffer validity mask.
+    bmask_buf: Vec<f32>,
 }
 
 impl SeqCache {
@@ -63,6 +69,8 @@ impl SeqCache {
             kbuf: vec![0.0; bf],
             vbuf: vec![0.0; bf],
             pos: 0,
+            smask_buf: vec![0.0; l_cap],
+            bmask_buf: vec![0.0; shape.buf_cap],
         }
     }
 
@@ -122,6 +130,8 @@ impl SeqCache {
         grown.kbuf = std::mem::take(&mut self.kbuf);
         grown.vbuf = std::mem::take(&mut self.vbuf);
         grown.pos = self.pos;
+        grown.smask_buf[..self.sparse_len].iter_mut().for_each(|m| *m = 1.0);
+        grown.bmask_buf = std::mem::take(&mut self.bmask_buf);
         *self = grown;
     }
 
@@ -155,6 +165,7 @@ impl SeqCache {
             }
             self.sparse_len += 1;
             self.buf_len -= 1;
+            self.smask_buf[self.sparse_len - 1] = 1.0;
         }
         let t = self.buf_len;
         for l in 0..nl {
@@ -166,6 +177,7 @@ impl SeqCache {
             }
         }
         self.buf_len += 1;
+        self.bmask_buf[self.buf_len - 1] = 1.0;
         self.pos += 1;
     }
 
@@ -201,20 +213,23 @@ impl SeqCache {
         self.sparse_len = n_sparse;
         self.buf_len = n_buf;
         self.pos = t_real;
+        for (i, m) in self.smask_buf.iter_mut().enumerate() {
+            *m = if i < n_sparse { 1.0 } else { 0.0 };
+        }
+        for (i, m) in self.bmask_buf.iter_mut().enumerate() {
+            *m = if i < n_buf { 1.0 } else { 0.0 };
+        }
     }
 
-    /// Sparse-slot validity mask (1.0 = live).
-    pub fn smask(&self) -> Vec<f32> {
-        let mut m = vec![0.0f32; self.l_cap];
-        m[..self.sparse_len].iter_mut().for_each(|x| *x = 1.0);
-        m
+    /// Sparse-slot validity mask (1.0 = live).  Borrowed from the cache's
+    /// maintained buffer — no per-step allocation on the decode path.
+    pub fn smask(&self) -> &[f32] {
+        &self.smask_buf
     }
 
-    /// Buffer validity mask.
-    pub fn bmask(&self) -> Vec<f32> {
-        let mut m = vec![0.0f32; self.shape.buf_cap];
-        m[..self.buf_len].iter_mut().for_each(|x| *x = 1.0);
-        m
+    /// Buffer validity mask (borrowed, see [`SeqCache::smask`]).
+    pub fn bmask(&self) -> &[f32] {
+        &self.bmask_buf
     }
 
     /// Serving-accounting bytes of this cache (Eq. 1 sparse + f16 buffer).
@@ -345,6 +360,32 @@ mod tests {
         assert_eq!(&c.kbuf[4..8], &[5.0; 4]);
         // sparse slot 0 reconstructs token 1 (all-equal vector: top-4 = all)
         assert_eq!(c.sp_kvals[0], 1.0);
+    }
+
+    #[test]
+    fn masks_track_counters_through_growth_and_prefill() {
+        let mut c = SeqCache::new(shape(), 4, 4, StorageMode::F32);
+        let mut r = Pcg64::new(9);
+        for _ in 0..8 {
+            let (k, v) = rows(&mut r, &shape());
+            c.append(&k, &v);
+        }
+        assert_eq!(c.smask().iter().sum::<f32>() as usize, c.sparse_len);
+        assert_eq!(c.bmask().iter().sum::<f32>() as usize, c.buf_len);
+        c.grow(16);
+        assert_eq!(c.smask().len(), 16);
+        assert_eq!(c.smask().iter().sum::<f32>() as usize, c.sparse_len);
+        let (k, v) = rows(&mut r, &shape());
+        c.append(&k, &v);
+        assert_eq!(c.smask().iter().sum::<f32>() as usize, c.sparse_len);
+        assert_eq!(c.bmask().iter().sum::<f32>() as usize, c.buf_len);
+
+        let sh = CacheShape { n_layers: 1, n_kv: 1, d_head: 4, buf_cap: 2 };
+        let mut p = SeqCache::new(sh, 8, 4, StorageMode::F32);
+        let khat = vec![1.0f32; 8 * 4];
+        p.load_prefill(&khat, &khat, 8, 5);
+        assert_eq!(p.smask(), &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(p.bmask(), &[1.0, 1.0]);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! baseline every ratio in the figures is relative to.
 
 use crate::kvcache::CachePolicy;
-use crate::swan::attention::dense_attention;
+use crate::swan::attention::{dense_attention, dense_attention_scratch};
+use crate::swan::batch::AttentionScratch;
 
 pub struct DenseCache {
     d: usize,
@@ -27,6 +28,26 @@ impl CachePolicy for DenseCache {
 
     fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
         dense_attention(q_hat, &self.k, &self.v, k_cur, v_cur, self.d, out);
+    }
+
+    fn attend_with(
+        &mut self,
+        q_hat: &[f32],
+        k_cur: &[f32],
+        v_cur: &[f32],
+        scratch: &mut AttentionScratch,
+        out: &mut [f32],
+    ) {
+        dense_attention_scratch(
+            q_hat,
+            &self.k,
+            &self.v,
+            k_cur,
+            v_cur,
+            self.d,
+            &mut scratch.scores,
+            out,
+        );
     }
 
     fn storage_bytes(&self) -> usize {

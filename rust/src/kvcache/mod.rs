@@ -27,6 +27,7 @@ pub use streaming::StreamingCache;
 pub use swan_policy::SwanCache;
 
 use crate::sparse::StorageMode;
+use crate::swan::batch::AttentionScratch;
 use crate::swan::hybrid_cache::SwanParams;
 
 /// One (layer, kv-head) cache of one sequence.
@@ -40,6 +41,23 @@ pub trait CachePolicy: Send {
 
     /// Attention for one query over the retained cache + current token.
     fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]);
+
+    /// [`CachePolicy::attend`] through a caller-provided
+    /// [`AttentionScratch`] (the batched decode path hands every task its
+    /// worker's scratch).  Policies whose kernel accepts an external score
+    /// buffer override this to run allocation-free; the default ignores
+    /// the scratch and must stay result-identical to `attend`.
+    fn attend_with(
+        &mut self,
+        q_hat: &[f32],
+        k_cur: &[f32],
+        v_cur: &[f32],
+        scratch: &mut AttentionScratch,
+        out: &mut [f32],
+    ) {
+        let _ = scratch;
+        self.attend(q_hat, k_cur, v_cur, out);
+    }
 
     /// Bulk-load an exact prefill history (flat [n, d] arrays, oldest
     /// first).  `mass` optionally carries the cumulative attention each

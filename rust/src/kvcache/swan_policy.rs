@@ -3,6 +3,7 @@
 
 use crate::kvcache::CachePolicy;
 use crate::swan::attention::swan_attention;
+use crate::swan::batch::AttentionScratch;
 use crate::swan::hybrid_cache::{HybridCache, SwanParams};
 
 pub struct SwanCache {
@@ -33,6 +34,17 @@ impl CachePolicy for SwanCache {
 
     fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
         swan_attention(q_hat, &self.cache, k_cur, v_cur, out);
+    }
+
+    fn attend_with(
+        &mut self,
+        q_hat: &[f32],
+        k_cur: &[f32],
+        v_cur: &[f32],
+        scratch: &mut AttentionScratch,
+        out: &mut [f32],
+    ) {
+        self.cache.attend(q_hat, k_cur, v_cur, &mut scratch.scores, out);
     }
 
     fn storage_bytes(&self) -> usize {

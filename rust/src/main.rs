@@ -1,5 +1,9 @@
 //! `swan` — CLI entrypoint for the SWAN serving stack.
 
+// config builders assign field-by-field over Default on purpose (mirrors
+// the flag list); keep clippy's -D warnings CI gate green
+#![allow(clippy::field_reassign_with_default)]
+
 use swan::cli::{Args, USAGE};
 use swan::config::ServeConfig;
 use swan::coordinator::Engine;
@@ -33,6 +37,7 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.max_batch = args.get_usize("max-batch", cfg.max_batch)?;
     cfg.max_new_tokens = args.get_usize("max-new", cfg.max_new_tokens)?;
     cfg.mem_budget = args.get_usize("mem-budget", cfg.mem_budget)?;
+    cfg.decode_workers = args.get_usize("decode-workers", cfg.decode_workers)?;
     cfg.mode = parse_mode(args)?;
     cfg.dense_baseline = args.has("dense");
     cfg.bind = args.get_str("bind", &cfg.bind);

@@ -18,9 +18,11 @@ use anyhow::Context;
 use crate::config::ModelConfig;
 use crate::kvcache::{CachePolicy, PolicyKind};
 use crate::model::weights::WeightFile;
+use crate::swan::batch::WorkerPool;
 use crate::swan::projection::{ProjectionSet, ProjectionVariant};
 use crate::tensor::ops::{dot, gelu, rmsnorm, softmax_inplace, vecmat};
 use crate::tensor::rope::apply_rope;
+use crate::util::Pcg64;
 
 /// Per-layer weights (rotated-space serving set + originals for
 /// re-absorption under projection ablations).
@@ -262,72 +264,229 @@ impl SwanModel {
 
     /// One decode step through the sequence's cache policies; returns the
     /// logits for `token`'s successor and advances the state.
+    ///
+    /// This is the batch-of-one case of [`SwanModel::decode_step_batch`]
+    /// run on a serial pool — the single implementation is what makes the
+    /// serial-vs-parallel determinism guarantee checkable.
     pub fn decode_step(&self, state: &mut SequenceState, token: u32) -> Vec<f32> {
+        // one serial pool per thread, reused across steps so the scratch
+        // keeps its capacity and no pool machinery is built per token
+        thread_local! {
+            static SERIAL_POOL: std::cell::RefCell<WorkerPool> =
+                std::cell::RefCell::new(WorkerPool::serial());
+        }
+        SERIAL_POOL
+            .with(|pool| {
+                self.decode_step_batch(
+                    std::slice::from_mut(state),
+                    &[token],
+                    &mut pool.borrow_mut(),
+                )
+            })
+            .pop()
+            .expect("one sequence in, one logits row out")
+    }
+
+    /// One lock-step decode iteration for a batch of sequences: every
+    /// sequence advances by one token, layer by layer, with the per-layer
+    /// work fanned across `pool`:
+    ///
+    /// 1. projections + RoPE + rotation — one task per sequence;
+    /// 2. attention — one task per `(sequence, kv-head)`; the task owns
+    ///    that head's cache `&mut` (disjoint from every other task) and
+    ///    attends all query heads of the GQA group through the worker's
+    ///    reusable scratch;
+    /// 3. cache append + output projection + MLP — one task per sequence.
+    ///
+    /// Each task writes only its own buffers, so the produced logits are
+    /// bit-identical to calling [`SwanModel::decode_step`] per sequence,
+    /// for any pool size (`tests/batch_decode.rs`).
+    pub fn decode_step_batch(
+        &self,
+        states: &mut [SequenceState],
+        tokens: &[u32],
+        pool: &mut WorkerPool,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(states.len(), tokens.len(), "one token per sequence");
         let cfg = &self.cfg;
         let (d, dh, nq, nkv, g) =
             (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
-        let pos = state.pos as u32;
 
-        let mut h = self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
-        let mut xn = vec![0.0f32; d];
-        let mut qraw = vec![0.0f32; nq * dh];
-        let mut kraw = vec![0.0f32; nkv * dh];
-        let mut vr = vec![0.0f32; nkv * dh];
-        let mut qhat = vec![0.0f32; nq * dh];
-        let mut khat = vec![0.0f32; nkv * dh];
-        let mut attn_out = vec![0.0f32; nq * dh];
+        let mut works: Vec<DecodeWork> = states
+            .iter()
+            .zip(tokens)
+            .map(|(st, &tok)| DecodeWork {
+                h: self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec(),
+                xn: vec![0.0; d],
+                qraw: vec![0.0; nq * dh],
+                kraw: vec![0.0; nkv * dh],
+                vr: vec![0.0; nkv * dh],
+                qhat: vec![0.0; nq * dh],
+                khat: vec![0.0; nkv * dh],
+                attn_out: vec![0.0; nq * dh],
+                proj: vec![0.0; d],
+                mid: vec![0.0; cfg.d_ff],
+                back: vec![0.0; d],
+                logits: vec![0.0; cfg.vocab],
+                pos: st.pos as u32,
+            })
+            .collect();
 
         for (l, lw) in self.layers.iter().enumerate() {
-            rmsnorm(&h, &lw.attn_norm, cfg.norm_eps, &mut xn);
-            vecmat(&xn, &lw.wq, d, nq * dh, &mut qraw);
-            vecmat(&xn, &lw.wk, d, nkv * dh, &mut kraw);
-            vecmat(&xn, &lw.wv_hat, d, nkv * dh, &mut vr);
-            for j in 0..nq {
-                apply_rope(&mut qraw[j * dh..(j + 1) * dh], pos, cfg.rope_theta);
-                let src = qraw[j * dh..(j + 1) * dh].to_vec();
-                self.proj.rotate_qk(l, j / g, &src, &mut qhat[j * dh..(j + 1) * dh]);
+            // 1. per-sequence projections into rotated q̂/k̂/v̂
+            pool.for_each_mut(&mut works, |_scratch, w| {
+                rmsnorm(&w.h, &lw.attn_norm, cfg.norm_eps, &mut w.xn);
+                vecmat(&w.xn, &lw.wq, d, nq * dh, &mut w.qraw);
+                vecmat(&w.xn, &lw.wk, d, nkv * dh, &mut w.kraw);
+                vecmat(&w.xn, &lw.wv_hat, d, nkv * dh, &mut w.vr);
+                for j in 0..nq {
+                    apply_rope(&mut w.qraw[j * dh..(j + 1) * dh], w.pos, cfg.rope_theta);
+                    self.proj.rotate_qk(
+                        l,
+                        j / g,
+                        &w.qraw[j * dh..(j + 1) * dh],
+                        &mut w.qhat[j * dh..(j + 1) * dh],
+                    );
+                }
+                for hd in 0..nkv {
+                    apply_rope(&mut w.kraw[hd * dh..(hd + 1) * dh], w.pos, cfg.rope_theta);
+                    self.proj.rotate_qk(
+                        l,
+                        hd,
+                        &w.kraw[hd * dh..(hd + 1) * dh],
+                        &mut w.khat[hd * dh..(hd + 1) * dh],
+                    );
+                }
+            });
+
+            // 2. attention read phase: (sequence, kv-head) tasks, each with
+            // exclusive access to one cache and its group's output slice
+            {
+                let mut tasks: Vec<AttnTask> = Vec::with_capacity(states.len() * nkv);
+                for (st, w) in states.iter_mut().zip(works.iter_mut()) {
+                    let caches = &mut st.caches[l * nkv..(l + 1) * nkv];
+                    let head_outs = w.attn_out.chunks_mut(g * dh);
+                    let head_qs = w.qhat.chunks(g * dh);
+                    for (hd, ((cache, out_h), q_h)) in
+                        caches.iter_mut().zip(head_outs).zip(head_qs).enumerate()
+                    {
+                        tasks.push(AttnTask {
+                            cache: &mut **cache,
+                            q: q_h,
+                            k_cur: &w.khat[hd * dh..(hd + 1) * dh],
+                            v_cur: &w.vr[hd * dh..(hd + 1) * dh],
+                            out: out_h,
+                        });
+                    }
+                }
+                pool.for_each_mut(&mut tasks, |scratch, t| {
+                    for (q, out) in t.q.chunks(dh).zip(t.out.chunks_mut(dh)) {
+                        t.cache.attend_with(q, t.k_cur, t.v_cur, scratch, out);
+                    }
+                });
             }
-            for hd in 0..nkv {
-                apply_rope(&mut kraw[hd * dh..(hd + 1) * dh], pos, cfg.rope_theta);
-                let src = kraw[hd * dh..(hd + 1) * dh].to_vec();
-                self.proj.rotate_qk(l, hd, &src, &mut khat[hd * dh..(hd + 1) * dh]);
-            }
-            for j in 0..nq {
-                let grp = j / g;
-                let cache = &mut state.caches[l * nkv + grp];
-                cache.attend(
-                    &qhat[j * dh..(j + 1) * dh],
-                    &khat[grp * dh..(grp + 1) * dh],
-                    &vr[grp * dh..(grp + 1) * dh],
-                    &mut attn_out[j * dh..(j + 1) * dh],
-                );
-            }
-            for hd in 0..nkv {
-                state.caches[l * nkv + hd]
-                    .append(&khat[hd * dh..(hd + 1) * dh], &vr[hd * dh..(hd + 1) * dh]);
-            }
-            let mut proj_out = vec![0.0f32; d];
-            vecmat(&attn_out, &lw.wo_hat, nq * dh, d, &mut proj_out);
-            for (hr, po) in h.iter_mut().zip(&proj_out) {
-                *hr += po;
-            }
-            rmsnorm(&h.clone(), &lw.mlp_norm, cfg.norm_eps, &mut xn);
-            let mut mid = vec![0.0f32; cfg.d_ff];
-            vecmat(&xn, &lw.w1, d, cfg.d_ff, &mut mid);
-            mid.iter_mut().for_each(|m| *m = gelu(*m));
-            let mut back = vec![0.0f32; d];
-            vecmat(&mid, &lw.w2, cfg.d_ff, d, &mut back);
-            for (hr, b) in h.iter_mut().zip(&back) {
-                *hr += b;
+
+            // 3. write phase: append the new rows, then output proj + MLP
+            {
+                let mut pairs: Vec<(&mut SequenceState, &mut DecodeWork)> =
+                    states.iter_mut().zip(works.iter_mut()).collect();
+                pool.for_each_mut(&mut pairs, |_scratch, pair| {
+                    let (st, w) = pair;
+                    for hd in 0..nkv {
+                        st.caches[l * nkv + hd]
+                            .append(&w.khat[hd * dh..(hd + 1) * dh], &w.vr[hd * dh..(hd + 1) * dh]);
+                    }
+                    vecmat(&w.attn_out, &lw.wo_hat, nq * dh, d, &mut w.proj);
+                    for (hr, po) in w.h.iter_mut().zip(&w.proj) {
+                        *hr += po;
+                    }
+                    rmsnorm(&w.h, &lw.mlp_norm, cfg.norm_eps, &mut w.xn);
+                    vecmat(&w.xn, &lw.w1, d, cfg.d_ff, &mut w.mid);
+                    w.mid.iter_mut().for_each(|m| *m = gelu(*m));
+                    vecmat(&w.mid, &lw.w2, cfg.d_ff, d, &mut w.back);
+                    for (hr, b) in w.h.iter_mut().zip(&w.back) {
+                        *hr += b;
+                    }
+                });
             }
         }
 
-        state.pos += 1;
-        rmsnorm(&h, &self.final_norm, cfg.norm_eps, &mut xn);
-        let mut logits = vec![0.0f32; cfg.vocab];
-        vecmat(&xn, &self.lm_head, d, cfg.vocab, &mut logits);
-        logits
+        pool.for_each_mut(&mut works, |_scratch, w| {
+            rmsnorm(&w.h, &self.final_norm, cfg.norm_eps, &mut w.xn);
+            vecmat(&w.xn, &self.lm_head, d, cfg.vocab, &mut w.logits);
+        });
+        for st in states.iter_mut() {
+            st.pos += 1;
+        }
+        works.into_iter().map(|w| w.logits).collect()
     }
+
+    /// Build a randomly-initialised model — no artifacts needed.  Used by
+    /// the throughput benches and the determinism tests; deterministic in
+    /// `seed` (same stream as the original in-test tiny fixture).
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> SwanModel {
+        let (d, dh, nq, nkv) = (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads);
+        let (dff, vocab, nl) = (cfg.d_ff, cfg.vocab, cfg.n_layers);
+        let mut r = Pcg64::new(seed);
+        let scale = 0.2f32;
+        let mut layers = Vec::with_capacity(nl);
+        for _ in 0..nl {
+            let wv: Vec<f32> = r.normal_vec(d * nkv * dh).iter().map(|x| x * scale).collect();
+            let wo: Vec<f32> = r.normal_vec(nq * dh * d).iter().map(|x| x * scale).collect();
+            layers.push(LayerWeights {
+                attn_norm: vec![1.0; d],
+                wq: r.normal_vec(d * nq * dh).iter().map(|x| x * scale).collect(),
+                wk: r.normal_vec(d * nkv * dh).iter().map(|x| x * scale).collect(),
+                wv_hat: wv.clone(),
+                wo_hat: wo.clone(),
+                mlp_norm: vec![1.0; d],
+                w1: r.normal_vec(d * dff).iter().map(|x| x * scale).collect(),
+                w2: r.normal_vec(dff * d).iter().map(|x| x * scale).collect(),
+                wv,
+                wo,
+            });
+        }
+        SwanModel {
+            embed: r.normal_vec(vocab * d).iter().map(|x| x * 0.5).collect(),
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: r.normal_vec(d * vocab).iter().map(|x| x * scale).collect(),
+            proj: ProjectionSet::identity(nl, nkv, dh),
+            cfg,
+        }
+    }
+}
+
+/// Per-sequence working buffers for one batched decode step (allocated
+/// once per step; the attention score row lives in the per-worker scratch
+/// instead).
+struct DecodeWork {
+    h: Vec<f32>,
+    xn: Vec<f32>,
+    qraw: Vec<f32>,
+    kraw: Vec<f32>,
+    vr: Vec<f32>,
+    qhat: Vec<f32>,
+    khat: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    mid: Vec<f32>,
+    back: Vec<f32>,
+    logits: Vec<f32>,
+    pos: u32,
+}
+
+/// One `(sequence, kv-head)` attention task of the read phase: exclusive
+/// `&mut` on that head's cache, shared reads on the query/current-token
+/// rows, exclusive writes on the group's output slice.
+struct AttnTask<'a> {
+    cache: &'a mut dyn CachePolicy,
+    /// The GQA group's query heads, `[g, d_h]` flat.
+    q: &'a [f32],
+    k_cur: &'a [f32],
+    v_cur: &'a [f32],
+    /// The group's output rows, `[g, d_h]` flat.
+    out: &'a mut [f32],
 }
 
 /// Re-absorb Ŵ_V = W_V · P_VO and Ŵ_O = P_VO^T · W_O per head slice
@@ -371,49 +530,26 @@ fn absorb(cfg: &ModelConfig, lw: &mut LayerWeights, p_vo: &[Vec<f32>]) {
 pub(crate) mod tests {
     use super::*;
     use crate::sparse::StorageMode;
-    use crate::util::Pcg64;
 
-    /// Build a tiny random model directly (no artifact needed).
+    /// Build a tiny random model directly (no artifact needed).  Same
+    /// RNG stream as before the [`SwanModel::synthetic`] refactor, so the
+    /// weights (and every tolerance-checked expectation) are unchanged.
     pub(crate) fn tiny_model(nkv: usize) -> SwanModel {
-        let cfg = ModelConfig {
-            name: "tiny".into(),
-            d_model: 32,
-            n_layers: 2,
-            n_q_heads: 4,
-            n_kv_heads: nkv,
-            d_head: 8,
-            d_ff: 64,
-            vocab: 96,
-            rope_theta: 10000.0,
-            norm_eps: 1e-5,
-        };
-        let mut r = Pcg64::new(9);
-        let scale = 0.2;
-        let mut layers = Vec::new();
-        for _ in 0..cfg.n_layers {
-            let wv: Vec<f32> = r.normal_vec(32 * nkv * 8).iter().map(|x| x * scale).collect();
-            let wo: Vec<f32> = r.normal_vec(32 * 8 * 4).iter().map(|x| x * scale).collect();
-            layers.push(LayerWeights {
-                attn_norm: vec![1.0; 32],
-                wq: r.normal_vec(32 * 32).iter().map(|x| x * scale).collect(),
-                wk: r.normal_vec(32 * nkv * 8).iter().map(|x| x * scale).collect(),
-                wv_hat: wv.clone(),
-                wo_hat: wo.clone(),
-                mlp_norm: vec![1.0; 32],
-                w1: r.normal_vec(32 * 64).iter().map(|x| x * scale).collect(),
-                w2: r.normal_vec(64 * 32).iter().map(|x| x * scale).collect(),
-                wv,
-                wo,
-            });
-        }
-        SwanModel {
-            embed: r.normal_vec(96 * 32).iter().map(|x| x * 0.5).collect(),
-            layers,
-            final_norm: vec![1.0; 32],
-            lm_head: r.normal_vec(32 * 96).iter().map(|x| x * scale).collect(),
-            proj: ProjectionSet::identity(2, nkv, 8),
-            cfg,
-        }
+        SwanModel::synthetic(
+            ModelConfig {
+                name: "tiny".into(),
+                d_model: 32,
+                n_layers: 2,
+                n_q_heads: 4,
+                n_kv_heads: nkv,
+                d_head: 8,
+                d_ff: 64,
+                vocab: 96,
+                rope_theta: 10000.0,
+                norm_eps: 1e-5,
+            },
+            9,
+        )
     }
 
     /// Dense decode after exact prefill == continuing the prefill: check

@@ -287,14 +287,18 @@ impl LoadedModel {
     }
 
     pub fn execute(&self, graph: &str, args: &[HostTensor]) -> anyhow::Result<Vec<HostTensor>> {
-        let meta = self.graph(graph)?.clone();
-        self.runtime.execute(&self.model, graph, &meta, args)
+        let meta = self.graph(graph)?;
+        self.runtime.execute(&self.model, graph, meta, args)
     }
 
-    /// Zero-copy execute (serving hot path).
+    /// Zero-copy execute (serving hot path).  Takes `&self` and the PJRT
+    /// client is thread-safe, so the engine's decode worker pool calls
+    /// this concurrently, one sequence per task; the graph metadata is
+    /// borrowed (no more per-step `GraphMeta` clone of every param name
+    /// and arg shape).
     pub fn execute_views(&self, graph: &str, args: &[ArgView<'_>]) -> anyhow::Result<Vec<HostTensor>> {
-        let meta = self.graph(graph)?.clone();
-        self.runtime.execute_views(&self.model, graph, &meta, args)
+        let meta = self.graph(graph)?;
+        self.runtime.execute_views(&self.model, graph, meta, args)
     }
 }
 

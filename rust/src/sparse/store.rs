@@ -130,6 +130,39 @@ impl SparseStore {
         self.bytes
     }
 
+    /// Read-only view of the CSR row boundaries (`offsets.len() == rows + 1`).
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Check the store's structural invariants, returning the first
+    /// violation: offsets start at 0 and are monotone non-decreasing, the
+    /// final offset equals the value count, and values/indices stay in
+    /// lock-step.  Used by the property tests; cheap enough to call after
+    /// every mutation in a shrink loop.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.offsets.first() != Some(&0) {
+            return Err(format!("offsets must start at 0, got {:?}", self.offsets.first()));
+        }
+        for (r, w) in self.offsets.windows(2).enumerate() {
+            if w[1] < w[0] {
+                return Err(format!("offsets not monotone at row {r}: {} -> {}", w[0], w[1]));
+            }
+        }
+        let last = *self.offsets.last().unwrap() as usize;
+        if last != self.vals.len() {
+            return Err(format!("last offset {last} != vals.len() {}", self.vals.len()));
+        }
+        if self.vals.len() != self.idx.len() {
+            return Err(format!(
+                "vals.len() {} != idx.len() {}",
+                self.vals.len(),
+                self.idx.len()
+            ));
+        }
+        Ok(())
+    }
+
     /// Reconstruct row `r` densely (tests/error analysis only).
     pub fn reconstruct(&self, r: usize, dim: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; dim];
@@ -205,6 +238,38 @@ mod tests {
             store.storage_bytes(),
             StorageMode::F16.vector_bytes(4) + StorageMode::F8.vector_bytes(8)
         );
+    }
+
+    /// Hand-computed fixture for the invariant checker, offsets accessor
+    /// and mixed-mode byte accounting (the randomized sweep lives in
+    /// `tests/prop_invariants.rs`; this pins exact expected values).
+    #[test]
+    fn invariants_and_walks_on_hand_computed_fixture() {
+        let mut store = SparseStore::new();
+        store.check_invariants().unwrap();
+        // row 0: top-2 of [1, -2, 3] -> idx [2, 1], vals [3, -2]
+        store.push_pruned(&[1.0, -2.0, 3.0], 2, StorageMode::F32);
+        // row 1: top-1 of [0.5, 4, -0.25] -> idx [1], vals [4]
+        store.push_pruned(&[0.5, 4.0, -0.25], 1, StorageMode::F32);
+        store.check_invariants().unwrap();
+        assert_eq!(store.offsets(), &[0, 2, 3]);
+        assert_eq!(store.nnz(0), 2);
+        assert_eq!(store.nnz(1), 1);
+        assert_eq!(
+            store.storage_bytes(),
+            StorageMode::F32.vector_bytes(2) + StorageMode::F32.vector_bytes(1)
+        );
+
+        let q = [1.0f32, 2.0, 3.0];
+        let mut scores = Vec::new();
+        store.scores_into(&q, 1.0, &mut scores);
+        // row 0: 3*q[2] + (-2)*q[1] = 5;  row 1: 4*q[1] = 8
+        assert_eq!(scores, vec![5.0, 8.0]);
+
+        let mut out = vec![0.0f32; 3];
+        store.axpy_all(&[0.5, 0.25], &mut out);
+        // out[2] = 0.5*3; out[1] = 0.5*(-2) + 0.25*4 = 0
+        assert_eq!(out, vec![0.0, 0.0, 1.5]);
     }
 
     #[test]

@@ -11,11 +11,33 @@ use crate::tensor::ops::{dot, softmax_inplace};
 ///
 /// Scores on the sparse half are sparse-dense dot products; the output's
 /// sparse half is a scatter-add — no d_h-dim reconstruction anywhere.
+///
+/// Allocates a fresh score row per call; the batched serving path uses
+/// [`swan_attention_scratch`] with a per-worker reusable buffer instead.
 pub fn swan_attention(
     q_hat: &[f32],
     cache: &HybridCache,
     k_hat_cur: &[f32],
     v_hat_cur: &[f32],
+    out: &mut [f32],
+) {
+    let mut scores = Vec::with_capacity(cache.len() + 1);
+    swan_attention_scratch(q_hat, cache, k_hat_cur, v_hat_cur, &mut scores, out);
+}
+
+/// Allocation-free variant of [`swan_attention`]: the caller provides the
+/// score buffer (cleared here, capacity retained), typically the
+/// `scores` field of a per-worker
+/// [`AttentionScratch`](crate::swan::batch::AttentionScratch).  Only reads
+/// `cache` — a sequence's caches can be attended by many workers (one per
+/// kv-head/query-head task) concurrently, with appends deferred to the
+/// step's write phase.
+pub fn swan_attention_scratch(
+    q_hat: &[f32],
+    cache: &HybridCache,
+    k_hat_cur: &[f32],
+    v_hat_cur: &[f32],
+    scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     let d = cache.d_h();
@@ -25,11 +47,12 @@ pub fn swan_attention(
 
     let ns = cache.sparse_len();
     let nb = cache.buffer_len();
-    let mut scores = Vec::with_capacity(ns + nb + 1);
+    scores.clear();
+    scores.reserve(ns + nb + 1);
 
     // sparse-dense mat-vec over the contiguous CSR store (no
     // reconstruction, no per-row pointer chasing)
-    cache.k_sparse.scores_into(q_hat, scale, &mut scores);
+    cache.k_sparse.scores_into(q_hat, scale, scores);
     // dense buffer
     let kb = cache.k_buffer();
     for t in 0..nb {
@@ -38,7 +61,7 @@ pub fn swan_attention(
     // current token
     scores.push(dot(k_hat_cur, q_hat) * scale);
 
-    softmax_inplace(&mut scores);
+    softmax_inplace(scores);
 
     out.iter_mut().for_each(|o| *o = 0.0);
     cache.v_sparse.axpy_all(&scores[..ns], out);
@@ -67,14 +90,33 @@ pub fn dense_attention(
     d: usize,
     out: &mut [f32],
 ) {
+    let mut scores = Vec::with_capacity(k_cache.len() / d + 1);
+    dense_attention_scratch(q, k_cache, v_cache, k_cur, v_cur, d, &mut scores, out);
+}
+
+/// Allocation-free variant of [`dense_attention`] (caller-provided score
+/// buffer, cleared here) — the dense-baseline leg of the batched decode
+/// path.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_scratch(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    k_cur: &[f32],
+    v_cur: &[f32],
+    d: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
     let n = k_cache.len() / d;
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = Vec::with_capacity(n + 1);
+    scores.clear();
+    scores.reserve(n + 1);
     for t in 0..n {
         scores.push(dot(&k_cache[t * d..(t + 1) * d], q) * scale);
     }
     scores.push(dot(k_cur, q) * scale);
-    softmax_inplace(&mut scores);
+    softmax_inplace(scores);
     out.iter_mut().for_each(|o| *o = 0.0);
     for t in 0..n {
         let w = scores[t];
@@ -177,6 +219,30 @@ mod tests {
             last_err = err;
         }
         assert!(last_err < 1e-4); // k = d is exact
+    }
+
+    /// The scratch-based entry point is bit-identical to the allocating
+    /// one and retains buffer capacity across calls.
+    #[test]
+    fn scratch_variant_matches_and_reuses_buffer() {
+        let d = 32;
+        let mut r = Pcg64::new(7);
+        let mut cache = HybridCache::new(d, SwanParams::new(8, 3, StorageMode::F16));
+        for _ in 0..20 {
+            cache.append(&r.normal_vec(d), &r.normal_vec(d));
+        }
+        let mut scores = Vec::new();
+        for _ in 0..4 {
+            let q = r.normal_vec(d);
+            let kc = r.normal_vec(d);
+            let vc = r.normal_vec(d);
+            let mut a = vec![0.0; d];
+            let mut b = vec![0.0; d];
+            swan_attention(&q, &cache, &kc, &vc, &mut a);
+            swan_attention_scratch(&q, &cache, &kc, &vc, &mut scores, &mut b);
+            assert_eq!(a, b);
+        }
+        assert!(scores.capacity() >= cache.len() + 1);
     }
 
     /// Current token participates even with an empty cache.

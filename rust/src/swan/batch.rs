@@ -1,0 +1,333 @@
+//! Parallel batched execution: a small std-thread worker pool with a
+//! reusable per-worker [`AttentionScratch`].
+//!
+//! The decompression-free kernel is embarrassingly parallel across the
+//! `(sequence, layer, kv-head)` attention tasks that an iteration-level
+//! scheduler forms every decode step, but the serial path paid two costs:
+//! a fresh `Vec` allocation per `swan_attention` call, and one core.  This
+//! module removes both:
+//!
+//! * [`AttentionScratch`] owns the score buffer so steady-state
+//!   attention is allocation-free;
+//! * [`WorkerPool`] keeps `n` workers alive across decode iterations, each
+//!   with its *own* scratch — no sharing, no locking on the hot path.
+//!
+//! Determinism contract: the pool only changes *where* a task runs, never
+//! what it computes.  Tasks must write exclusively to their own output
+//! slices (the [`WorkerPool::for_each_mut`] API enforces this by handing
+//! each task `&mut` access to one element), so batched-parallel results
+//! are bit-identical to serial execution.  `tests/batch_decode.rs` locks
+//! this down end-to-end.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Reusable per-worker buffer for the attention walk: `scores` backs the
+/// softmax row (sparse + buffer + current slots) and keeps its capacity
+/// across tasks, so a warmed-up worker never reallocates.
+#[derive(Default, Debug)]
+pub struct AttentionScratch {
+    pub scores: Vec<f32>,
+}
+
+impl AttentionScratch {
+    pub fn new() -> AttentionScratch {
+        AttentionScratch::default()
+    }
+}
+
+/// A unit of work: runs on some worker with that worker's scratch.
+type Job<'a> = Box<dyn FnOnce(&mut AttentionScratch) + Send + 'a>;
+type StaticJob = Box<dyn FnOnce(&mut AttentionScratch) + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<StaticJob>,
+    /// Jobs queued or currently running.
+    pending: usize,
+    /// Set when a job panicked; re-raised on the submitting thread.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signals workers that jobs (or shutdown) are available.
+    work_cv: Condvar,
+    /// Signals the submitter that `pending` reached zero.
+    done_cv: Condvar,
+}
+
+/// A fixed-size worker pool for decode-step fan-out.
+///
+/// `threads == 0` is the *serial* pool: jobs run inline on the calling
+/// thread against a single owned scratch.  This keeps one code path for
+/// both execution modes (the engine just constructs a different pool),
+/// which is what makes the serial-vs-parallel determinism test meaningful.
+///
+/// Submission takes `&mut self`: one batch in flight at a time, by
+/// construction.  [`WorkerPool::run`] does not return until every
+/// submitted job has completed, which is what makes it sound to run
+/// non-`'static` jobs (see the safety note there).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Scratch for the serial (0-thread) pool.
+    serial_scratch: AttentionScratch,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `threads` workers (0 = run jobs inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("swan-decode-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning decode worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, threads, serial_scratch: AttentionScratch::new() }
+    }
+
+    /// Serial pool: every job runs inline on the caller's thread.
+    pub fn serial() -> WorkerPool {
+        WorkerPool::new(0)
+    }
+
+    /// Worker count for the host: `available_parallelism`, capped at 16
+    /// (decode tasks are memory-bound and stop scaling past that).
+    pub fn recommended_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    }
+
+    /// Pool sized to the host via [`WorkerPool::recommended_threads`].
+    pub fn host_sized() -> WorkerPool {
+        WorkerPool::new(WorkerPool::recommended_threads())
+    }
+
+    /// Number of worker threads (0 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of jobs to completion.  Blocks until every job has
+    /// finished; re-raises a panic if any job panicked.
+    pub fn run<'a, I>(&mut self, jobs: I)
+    where
+        I: IntoIterator<Item = Job<'a>>,
+    {
+        if self.threads == 0 {
+            for job in jobs {
+                job(&mut self.serial_scratch);
+            }
+            return;
+        }
+        // SAFETY: the jobs may borrow data with lifetime 'a (shorter than
+        // 'static).  Erasing the lifetime is sound because this function
+        // does not return until `pending` drops back to zero, i.e. until
+        // every erased job has been executed (or the panic flag traded for
+        // it); no job can outlive the borrows it captured.  The panic path
+        // still decrements `pending` (see `worker_loop`), so the wait
+        // below cannot be skipped or starved.
+        let jobs: Vec<StaticJob> = jobs
+            .into_iter()
+            .map(|j| unsafe { std::mem::transmute::<Job<'a>, StaticJob>(j) })
+            .collect();
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.pending += n;
+            st.jobs.extend(jobs);
+        }
+        self.shared.work_cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        if st.panicked {
+            st.panicked = false;
+            drop(st);
+            panic!("a decode worker task panicked");
+        }
+    }
+
+    /// Run `f` once per element of `tasks`, fanned across the workers in
+    /// contiguous chunks.  Each invocation gets the executing worker's
+    /// scratch and exclusive `&mut` access to its task — tasks cannot
+    /// observe each other, so the result is identical to the serial loop
+    /// `for t in tasks { f(scratch, t) }` regardless of thread count.
+    pub fn for_each_mut<T, F>(&mut self, tasks: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut AttentionScratch, &mut T) + Sync,
+    {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.threads == 0 {
+            for t in tasks.iter_mut() {
+                f(&mut self.serial_scratch, t);
+            }
+            return;
+        }
+        // Small chunks (4 per worker) balance load when per-task cost is
+        // skewed (sequences at different lengths) without boxing one job
+        // per task.
+        let chunk = tasks.len().div_ceil(self.threads * 4).max(1);
+        let f = &f;
+        let jobs = tasks.chunks_mut(chunk).map(|c| {
+            Box::new(move |scratch: &mut AttentionScratch| {
+                for t in c {
+                    f(scratch, t);
+                }
+            }) as Job<'_>
+        });
+        // collect into Vec so `run` sees the concrete iterator type
+        let jobs: Vec<Job<'_>> = jobs.collect();
+        self.run(jobs);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    let mut scratch = AttentionScratch::new();
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            job(&mut scratch);
+        }))
+        .is_ok();
+        let mut st = shared.state.lock().unwrap();
+        st.pending -= 1;
+        if !ok {
+            st.panicked = true;
+        }
+        if st.pending == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let mut pool = WorkerPool::serial();
+        let mut xs = vec![0usize; 10];
+        pool.for_each_mut(&mut xs, |_s, x| *x += 1);
+        assert!(xs.iter().all(|&x| x == 1));
+        assert_eq!(pool.threads(), 0);
+    }
+
+    #[test]
+    fn parallel_pool_executes_every_task_once() {
+        let mut pool = WorkerPool::new(4);
+        let mut xs: Vec<usize> = (0..1000).collect();
+        pool.for_each_mut(&mut xs, |_s, x| *x *= 2);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(x, i * 2);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_batches() {
+        let mut pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let mut xs = vec![(); 64];
+            pool.for_each_mut(&mut xs, |_s, _x| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 5 * 64);
+    }
+
+    #[test]
+    fn borrowed_jobs_complete_before_run_returns() {
+        let mut pool = WorkerPool::new(3);
+        let data: Vec<usize> = (0..256).collect();
+        // explicit run() with closures borrowing non-'static stack data
+        let total = Mutex::new(0usize);
+        let jobs: Vec<Job<'_>> = data
+            .chunks(64)
+            .map(|c| {
+                let total = &total;
+                Box::new(move |_s: &mut AttentionScratch| {
+                    let sum: usize = c.iter().sum();
+                    *total.lock().unwrap() += sum;
+                }) as Job<'_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(*total.lock().unwrap(), (0..256).sum::<usize>());
+    }
+
+    #[test]
+    fn scratch_capacity_is_retained() {
+        let mut pool = WorkerPool::serial();
+        let mut once = [()];
+        pool.for_each_mut(&mut once, |s, _| {
+            s.scores.extend_from_slice(&[1.0; 128]);
+            s.scores.clear();
+        });
+        let mut caps = [0usize];
+        pool.for_each_mut(&mut caps, |s, c| *c = s.scores.capacity());
+        assert!(caps[0] >= 128, "scratch capacity lost: {}", caps[0]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let result = std::panic::catch_unwind(|| {
+            let mut pool = WorkerPool::new(2);
+            let mut xs = vec![0usize; 8];
+            pool.for_each_mut(&mut xs, |_s, x| {
+                if *x == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err());
+    }
+}

@@ -103,6 +103,24 @@ impl HybridCache {
         self.params.k_active_vals = k_vals.min(self.d_h);
     }
 
+    /// One head's attention over this cache plus the current token —
+    /// read-only, so a step's attention tasks can borrow a sequence's
+    /// caches immutably across workers (the batched decode read phase).
+    /// `scores` is the caller's reusable buffer (cleared here); see
+    /// [`crate::swan::batch::AttentionScratch`].
+    pub fn attend(
+        &self,
+        q_hat: &[f32],
+        k_hat_cur: &[f32],
+        v_hat_cur: &[f32],
+        scores: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        crate::swan::attention::swan_attention_scratch(
+            q_hat, self, k_hat_cur, v_hat_cur, scores, out,
+        );
+    }
+
     /// Append a rotated (k̂, v̂) pair (Algorithm 1 lines 3-12).  If the
     /// buffer is over capacity, the oldest entry is winnowed into the
     /// sparse store.

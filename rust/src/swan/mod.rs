@@ -1,13 +1,40 @@
 //! The paper's core contribution: SWAN hybrid cache + decompression-free
 //! attention (Algorithm 1), projection handling (§4.1-4.2), and the Eq. 2
 //! computational break-even model.
+//!
+//! # Batched execution model
+//!
+//! The serving hot path is the sparse-dense score/scatter walk in
+//! [`attention`].  Because attention only *reads* the [`HybridCache`]
+//! (compression work happens once per token at append time), a decode
+//! step splits cleanly into a read phase and a write phase:
+//!
+//! 1. **Read phase** — the iteration-level scheduler forms one attention
+//!    task per `(sequence, layer, kv-head)` and fans them across the
+//!    [`batch::WorkerPool`].  Each task borrows its caches immutably
+//!    (query heads of a GQA group share one task so H2O-style policies
+//!    can still update per-head statistics under `&mut`), and runs the
+//!    kernel through the executing worker's reusable
+//!    [`batch::AttentionScratch`] — steady-state attention performs no
+//!    heap allocation.
+//! 2. **Write phase** — each sequence appends the new rotated `(k̂, v̂)`
+//!    rows to its own caches (exclusive `&mut`, no synchronization).
+//!
+//! Tasks write only to their own output slices, so batched-parallel
+//! decode is bit-identical to serial decode — `tests/batch_decode.rs`
+//! asserts equal token streams across batch sizes and worker counts.
+//! [`crate::model::SwanModel::decode_step_batch`] is the native-model
+//! entry point; `coordinator::engine` applies the same fan-out to the
+//! PJRT graph path.
 
 pub mod attention;
+pub mod batch;
 pub mod breakeven;
 pub mod hybrid_cache;
 pub mod projection;
 
-pub use attention::swan_attention;
+pub use attention::{swan_attention, swan_attention_scratch};
+pub use batch::{AttentionScratch, WorkerPool};
 pub use breakeven::{breakeven_length, flops_std, flops_swan};
 pub use hybrid_cache::{HybridCache, SwanParams};
 pub use projection::ProjectionSet;

@@ -3,9 +3,11 @@
 
 use swan::coordinator::sequence::{CacheShape, SeqCache};
 use swan::sparse::topk::{topk_indices, topk_indices_select};
-use swan::sparse::{SparseVec, StorageMode};
+use swan::sparse::{SparseStore, SparseVec, StorageMode};
 use swan::swan::attention::{dense_attention, swan_attention};
 use swan::swan::hybrid_cache::{HybridCache, SwanParams};
+use swan::swan::projection::ProjectionSet;
+use swan::tensor::ops::matvec;
 use swan::testing::prop::{check, gen_vec};
 use swan::util::Pcg64;
 
@@ -137,6 +139,239 @@ fn prop_seqcache_matches_hybridcache_counters() {
         // layers x 1 head; hybrid counts 1)
         if seq.storage_bytes() != 2 * hyb.storage_bytes() {
             return Err(format!("{} != 2*{}", seq.storage_bytes(), hyb.storage_bytes()));
+        }
+        Ok(())
+    });
+}
+
+/// SparseStore structural invariants survive arbitrary interleavings of
+/// per-row `k` (including 0 and > d) and storage modes, and the Eq. 1
+/// byte accounting matches the per-row closed form exactly.
+#[test]
+fn prop_store_invariants_under_mixed_pushes() {
+    let modes = [StorageMode::F32, StorageMode::F16, StorageMode::F8];
+    check("store-mixed", 150, |r| {
+        let rows = r.below(20) as usize;
+        (0..rows)
+            .map(|_| (r.below(20) as usize, r.below(3) as usize))
+            .collect::<Vec<(usize, usize)>>()
+    }, |pushes| {
+        let d = 16usize;
+        let mut rng = Pcg64::new(13);
+        let mut store = SparseStore::new();
+        let mut expect_bytes = 0usize;
+        for (i, &(k, m)) in pushes.iter().enumerate() {
+            let mode = modes[m % 3];
+            store.push_pruned(&rng.normal_vec(d), k, mode);
+            store.check_invariants()?;
+            let kk = k.min(d);
+            if store.nnz(i) != kk {
+                return Err(format!("row {i}: nnz {} != {kk}", store.nnz(i)));
+            }
+            expect_bytes += mode.vector_bytes(kk);
+        }
+        if store.len() != pushes.len() {
+            return Err(format!("len {} != {}", store.len(), pushes.len()));
+        }
+        if store.storage_bytes() != expect_bytes {
+            return Err(format!("bytes {} != {expect_bytes}", store.storage_bytes()));
+        }
+        Ok(())
+    });
+}
+
+/// The batched CSR walks (`scores_into` / `axpy_all`) agree with a naive
+/// per-row implementation over `row()`.
+#[test]
+fn prop_store_walks_match_naive() {
+    check("store-walks", 150, |r| {
+        let n = r.below(24) as usize;
+        let k = 1 + r.below(16) as usize;
+        (n, k)
+    }, |(n, k)| {
+        let d = 32usize;
+        let mut rng = Pcg64::new(17);
+        let mut store = SparseStore::new();
+        for _ in 0..*n {
+            store.push_pruned(&rng.normal_vec(d), *k, StorageMode::F16);
+        }
+        let q = rng.normal_vec(d);
+        let mut scores = Vec::new();
+        store.scores_into(&q, 0.5, &mut scores);
+        if scores.len() != *n {
+            return Err(format!("scores len {} != {n}", scores.len()));
+        }
+        for r in 0..store.len() {
+            let (vals, idx) = store.row(r);
+            let naive: f32 =
+                vals.iter().zip(idx).map(|(v, &i)| v * q[i as usize]).sum::<f32>() * 0.5;
+            if (scores[r] - naive).abs() > 1e-4 {
+                return Err(format!("row {r}: {} vs {naive}", scores[r]));
+            }
+        }
+        let w: Vec<f32> = (0..*n).map(|i| 0.2 - 0.01 * i as f32).collect();
+        let mut out = vec![0.0f32; d];
+        store.axpy_all(&w, &mut out);
+        let mut naive = vec![0.0f32; d];
+        for r in 0..store.len() {
+            let (vals, idx) = store.row(r);
+            for (v, &i) in vals.iter().zip(idx) {
+                naive[i as usize] += w[r] * v;
+            }
+        }
+        for (a, b) in out.iter().zip(&naive) {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("axpy {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Lossless-retention invariant: at `k_active = d_h` (f32 storage) the
+/// decompression-free kernel reproduces dense attention for any sequence
+/// length and buffer split.  Shrinks on both.
+#[test]
+fn prop_swan_attention_exact_at_full_k() {
+    check("attn-exact-full-k", 150, |r| {
+        let n = 1 + r.below(30) as usize;
+        let buffer = r.below(8) as usize;
+        (n, buffer)
+    }, |(n, buffer)| {
+        let d = 16usize;
+        let mut rng = Pcg64::new(23);
+        let mut cache = HybridCache::new(d, SwanParams::new(d, *buffer, StorageMode::F32));
+        let mut kflat = Vec::new();
+        let mut vflat = Vec::new();
+        for _ in 0..*n {
+            let kv = rng.normal_vec(d);
+            let vv = rng.normal_vec(d);
+            cache.append(&kv, &vv);
+            kflat.extend_from_slice(&kv);
+            vflat.extend_from_slice(&vv);
+        }
+        let q = rng.normal_vec(d);
+        let kc = rng.normal_vec(d);
+        let vc = rng.normal_vec(d);
+        let mut got = vec![0.0; d];
+        swan_attention(&q, &cache, &kc, &vc, &mut got);
+        let mut want = vec![0.0; d];
+        dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut want);
+        for (a, b) in got.iter().zip(&want) {
+            if (a - b).abs() > 1e-4 {
+                return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bounded error under pruning: both outputs are convex combinations of
+/// value rows (winnowed rows may zero dims), so every output dim must lie
+/// in the per-dim hull `[min(0, values), max(0, values)]` and the
+/// swan-dense gap cannot exceed the hull width.  Shrinks on sequence
+/// length and `k_active`.
+#[test]
+fn prop_swan_attention_error_bounded_under_pruning() {
+    check("attn-bounded-pruned", 150, |r| {
+        let n = 1 + r.below(24) as usize;
+        let k = 1 + r.below(16) as usize;
+        (n, k)
+    }, |(n, k)| {
+        let d = 16usize;
+        let eps = 1e-3f32;
+        let mut rng = Pcg64::new(29);
+        let mut cache = HybridCache::new(d, SwanParams::new(*k, 2, StorageMode::F32));
+        let mut vrows: Vec<Vec<f32>> = Vec::new();
+        let mut kflat = Vec::new();
+        let mut vflat = Vec::new();
+        for _ in 0..*n {
+            let kv = rng.normal_vec(d);
+            let vv = rng.normal_vec(d);
+            cache.append(&kv, &vv);
+            kflat.extend_from_slice(&kv);
+            vflat.extend_from_slice(&vv);
+            vrows.push(vv);
+        }
+        let q = rng.normal_vec(d);
+        let kc = rng.normal_vec(d);
+        let vc = rng.normal_vec(d);
+        let mut got = vec![0.0; d];
+        swan_attention(&q, &cache, &kc, &vc, &mut got);
+        let mut want = vec![0.0; d];
+        dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut want);
+        for i in 0..d {
+            let mut lo = 0.0f32.min(vc[i]);
+            let mut hi = 0.0f32.max(vc[i]);
+            for vr in &vrows {
+                lo = lo.min(vr[i]);
+                hi = hi.max(vr[i]);
+            }
+            if got[i] < lo - eps || got[i] > hi + eps {
+                return Err(format!("dim {i}: {} outside hull [{lo}, {hi}]", got[i]));
+            }
+            if (got[i] - want[i]).abs() > (hi - lo) + 2.0 * eps {
+                return Err(format!(
+                    "dim {i}: gap {} exceeds hull width {}",
+                    (got[i] - want[i]).abs(),
+                    hi - lo
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Rotation-lossless invariant (rust mirror of
+/// `python/tests/test_rotation_lossless.py`): with orthogonal P_QK/P_VO
+/// and full retention, attending in the rotated space and un-rotating the
+/// output reproduces unrotated dense attention.
+#[test]
+fn prop_rotation_lossless_at_full_retention() {
+    check("rotation-lossless", 60, |r| {
+        let n = 1 + r.below(16) as usize;
+        let seed = r.below(1000) as usize;
+        (n, seed)
+    }, |(n, seed)| {
+        let d = 16usize;
+        let ps = ProjectionSet::random(1, 1, d, *seed as u64 + 1);
+        let mut rng = Pcg64::new(31);
+        let mut cache = HybridCache::new(d, SwanParams::new(d, 3, StorageMode::F32));
+        let mut kflat = Vec::new();
+        let mut vflat = Vec::new();
+        let mut krot = vec![0.0f32; d];
+        let mut vrot = vec![0.0f32; d];
+        for _ in 0..*n {
+            let kv = rng.normal_vec(d);
+            let vv = rng.normal_vec(d);
+            ps.rotate_qk(0, 0, &kv, &mut krot);
+            ps.rotate_vo(0, 0, &vv, &mut vrot);
+            cache.append(&krot, &vrot);
+            kflat.extend_from_slice(&kv);
+            vflat.extend_from_slice(&vv);
+        }
+        let q = rng.normal_vec(d);
+        let kc = rng.normal_vec(d);
+        let vc = rng.normal_vec(d);
+        let mut qrot = vec![0.0f32; d];
+        let mut kcrot = vec![0.0f32; d];
+        let mut vcrot = vec![0.0f32; d];
+        ps.rotate_qk(0, 0, &q, &mut qrot);
+        ps.rotate_qk(0, 0, &kc, &mut kcrot);
+        ps.rotate_vo(0, 0, &vc, &mut vcrot);
+
+        let mut out_rot = vec![0.0; d];
+        swan_attention(&qrot, &cache, &kcrot, &vcrot, &mut out_rot);
+        // un-rotate: out = out_rot @ P_vo^T  (P orthonormal)
+        let mut got = vec![0.0; d];
+        matvec(&ps.p_vo[0][0], &out_rot, d, d, &mut got);
+
+        let mut want = vec![0.0; d];
+        dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut want);
+        for (a, b) in got.iter().zip(&want) {
+            if (a - b).abs() > 1e-2 {
+                return Err(format!("{a} vs {b}"));
+            }
         }
         Ok(())
     });

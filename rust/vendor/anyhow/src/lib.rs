@@ -1,0 +1,190 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The sandbox has no crates.io access, so this in-tree crate provides the
+//! subset of anyhow's API that the swan crate uses: the [`Error`] type
+//! (with context chaining), the [`Result`] alias, the [`Context`]
+//! extension trait for `Result` and `Option`, and the `anyhow!` / `bail!`
+//! / `ensure!` macros.  Like the real crate, `Error` deliberately does
+//! *not* implement `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the reflexive
+//! `From<Error>` impl.
+
+use std::fmt;
+
+/// Error type: a message plus an optional chain of causes (each stored as
+/// a formatted string — this shim never needs to downcast).
+pub struct Error {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        let mut chain = vec![self.msg];
+        chain.extend(self.chain);
+        Error { msg: ctx.to_string(), chain }
+    }
+
+    /// The context/cause messages below the top-level one, outermost
+    /// first (mirrors `anyhow::Error::chain` skipping `self`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            // `{:#}` prints the whole chain on one line, like anyhow
+            for c in &self.chain {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg: e.to_string(), chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*).into())
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err(
+                $crate::Error::msg(concat!("condition failed: ", stringify!($cond))).into(),
+            );
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "missing file");
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("bucket {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "bucket 3");
+        assert_eq!(Some(1u32).context("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky");
+        let name = "k";
+        let e = anyhow!("--{name}: bad");
+        assert_eq!(format!("{e}"), "--k: bad");
+    }
+}

@@ -1,0 +1,94 @@
+//! Minimal offline shim of the `log` crate facade.
+//!
+//! No pluggable logger registry — records go straight to stderr with a
+//! level prefix.  `SWAN_LOG=off` silences everything, `SWAN_LOG=debug`
+//! (or `trace`) enables the verbose levels; the default shows
+//! error/warn/info, matching how the serving stack used env_logger-less
+//! logging before.
+
+/// Log levels, ordered from most to least severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Maximum level currently enabled (driven by `SWAN_LOG`, read once).
+pub fn max_level() -> Level {
+    static LEVEL: std::sync::OnceLock<Level> = std::sync::OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("SWAN_LOG").ok().as_deref() {
+        Some("off") | Some("none") => Level::Error, // errors always print
+        Some("trace") => Level::Trace,
+        Some("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+/// Emit one record (used by the macros; not part of the real log API).
+pub fn __emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if level <= max_level() {
+        eprintln!("[{:<5}] {}", level.as_str(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Trace);
+    }
+
+    #[test]
+    fn macros_format() {
+        // smoke: must not panic, and must accept format captures
+        let x = 3;
+        warn!("value {x} out of range");
+        error!("{}: {}", "ctx", 7);
+        info!("plain");
+        debug!("dbg {x}");
+        trace!("trc");
+    }
+}
