@@ -1,11 +1,13 @@
 //! Bench: end-to-end serving throughput — batched requests through the
 //! full coordinator (prefill graph + hybrid-cache decode + continuous
-//! batching), SWAN vs the dense-baseline serving mode.  Reports request
-//! latency, decode tok/s and KV memory savings (needs `make artifacts`).
+//! batching), SWAN vs the dense-baseline serving mode, plus shard
+//! scaling through the front-end router.  Reports request latency,
+//! decode tok/s and KV memory savings (needs `make artifacts`).
 
 use swan::config::ServeConfig;
-use swan::coordinator::Engine;
+use swan::coordinator::{Engine, Request};
 use swan::eval::corpus;
+use swan::shard::Router;
 use swan::sparse::StorageMode;
 use swan::util::Pcg64;
 
@@ -44,6 +46,36 @@ fn run_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Res
         mean_decode_tps,
         mean_prefill_ms,
         mean_saving * 100.0
+    ))
+}
+
+/// Drive `n_requests` concurrent generations through a multi-shard
+/// router; returns the aggregate decode tokens/sec row.
+fn run_shard_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Result<String> {
+    let dir = swan::artifacts_dir();
+    let router = Router::launch(&dir, cfg)?;
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        pending.push(router.submit(Request::from_text(0, &prompt, max_new))?);
+    }
+    let mut total_decoded = 0usize;
+    for rx in pending {
+        let resp = rx.recv()??;
+        total_decoded += resp.stats.decode_steps;
+    }
+    let wall = t0.elapsed();
+    Ok(format!(
+        "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s",
+        n_requests,
+        wall.as_secs_f64(),
+        total_decoded as f64 / wall.as_secs_f64(),
     ))
 }
 
@@ -97,6 +129,29 @@ fn main() {
         match run_batch(cfg, n, max_new) {
             Ok(row) => println!("{label:<18} {row}"),
             Err(e) => println!("{label:<18} FAILED: {e:#}"),
+        }
+    }
+
+    // shard scaling: aggregate decode throughput through the router at
+    // shards {1,2,4} × concurrent-request batch {4,16} (least-queued
+    // placement, swan k=32 16-bit, decode workers split across shards)
+    println!("# shard_scaling ({max_new} new tokens each, ~180-char prompts)");
+    for shards in [1usize, 2, 4] {
+        for batch in [4usize, 16] {
+            let cfg = ServeConfig {
+                shards,
+                balance: "least-queued".into(),
+                k_active: 32,
+                mode: StorageMode::F16,
+                max_batch: batch,
+                decode_workers: (workers / shards).max(1),
+                ..Default::default()
+            };
+            let label = format!("shards={shards} batch={batch}");
+            match run_shard_batch(cfg, batch, max_new) {
+                Ok(row) => println!("{label:<18} {row}"),
+                Err(e) => println!("{label:<18} FAILED: {e:#}"),
+            }
         }
     }
 }

@@ -70,7 +70,9 @@ swan — Sparse Winnowed Attention serving stack
 USAGE:
   swan serve    [--model M] [--bind ADDR] [--k-active K] [--buffer B]
                 [--mode 16|8] [--max-batch N] [--mem-budget BYTES] [--dense]
-                [--decode-workers N]   fan decode across N threads (0 = serial)
+                [--shards N]           engine shards behind the router (default 1)
+                [--balance P]          placement: round-robin|least-queued|mem-aware
+                [--decode-workers N]   decode threads per shard (0 = serial)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]
                 [--mode 16|8] [--dense]
   swan eval     [--model M] [--cases N]       run the task battery natively

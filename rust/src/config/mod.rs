@@ -66,12 +66,22 @@ pub struct ServeConfig {
     /// Max new tokens per request unless the request overrides.
     pub max_new_tokens: usize,
     /// KV-cache memory budget (bytes) for admission control; 0 = unlimited.
+    /// With `shards > 1` this is the *fleet* budget, split evenly across
+    /// shards at launch.
     pub mem_budget: usize,
     /// Serve with the dense baseline instead of SWAN (for A/B runs).
     pub dense_baseline: bool,
-    /// Worker threads for the iteration-level decode fan-out (0 = serial
-    /// single-thread decode; results are identical either way).
+    /// Worker threads **per shard** for the iteration-level decode
+    /// fan-out (0 = serial single-thread decode; results are identical
+    /// either way).
     pub decode_workers: usize,
+    /// Engine shards behind the front-end router (>= 1); each shard runs
+    /// its own thread, scheduler, worker pool and KV budget slice.
+    pub shards: usize,
+    /// Placement policy name for the router (see
+    /// `shard::balance::POLICY_NAMES`): "round-robin", "least-queued" or
+    /// "mem-aware".
+    pub balance: String,
     /// TCP bind address for `swan serve`.
     pub bind: String,
 }
@@ -88,6 +98,8 @@ impl Default for ServeConfig {
             mem_budget: 0,
             dense_baseline: false,
             decode_workers: 0,
+            shards: 1,
+            balance: "round-robin".into(),
             bind: "127.0.0.1:7877".into(),
         }
     }

@@ -27,6 +27,12 @@ use crate::swan::batch::WorkerPool;
 use crate::tensor::ops::{argmax, softmax_inplace};
 use crate::util::Pcg64;
 
+/// Sequences each pool worker can decode before admission defers: matches
+/// the pool's load-balancing chunk factor (`WorkerPool::for_each_mut`
+/// forms ~4 chunks per worker), so a "full" pool still balances skewed
+/// sequence lengths but never stretches an iteration past ~4 tasks deep.
+const DECODE_SLOTS_PER_WORKER: usize = 4;
+
 /// Backend cache of one active sequence: SWAN hybrid or dense baseline.
 enum SeqBackend {
     Swan(SeqCache),
@@ -58,6 +64,9 @@ pub struct Engine {
     tuner: AutoTuner,
     active: Vec<ActiveSeq>,
     finished: VecDeque<Response>,
+    /// Ids rejected at admission (prefill failure) — drained by callers
+    /// that hold per-request reply channels, so no waiter leaks.
+    rejected: VecDeque<u64>,
     shape: CacheShape,
     decode_l_buckets: Vec<usize>,
     prefill_buckets: Vec<usize>,
@@ -87,14 +96,19 @@ impl Engine {
         decode_l_buckets.dedup();
         let mut tuner = AutoTuner::new(cfg.mem_budget, k_buckets);
         tuner.pin(cfg.k_active);
+        let mut scheduler = Scheduler::new(cfg.max_batch, cfg.mem_budget);
+        if cfg.decode_workers > 0 {
+            scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
+        }
         Ok(Engine {
             shape,
             decode_l_buckets,
             prefill_buckets: arts.prefill_buckets(),
-            scheduler: Scheduler::new(cfg.max_batch, cfg.mem_budget),
+            scheduler,
             tuner,
             active: Vec::new(),
             finished: VecDeque::new(),
+            rejected: VecDeque::new(),
             metrics: Arc::new(Metrics::default()),
             next_id: 1,
             pool: WorkerPool::new(cfg.decode_workers),
@@ -156,12 +170,44 @@ impl Engine {
             .sum()
     }
 
+    /// Requests queued behind admission control.
+    pub fn queue_len(&self) -> usize {
+        self.scheduler.queue_len()
+    }
+
+    /// Sequences currently decoding.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Projected total KV load: live bytes of the active set plus the
+    /// admission projection ([`Scheduler::projected_bytes`]) of every
+    /// queued request at the current compression level.  The shard
+    /// router's `MemAware` placement policy balances on this figure.
+    pub fn projected_load_bytes(&self) -> usize {
+        let (sparse_b, dense_b) = self.token_byte_rates(self.tuner.current_k());
+        let buf = self.shape.buf_cap;
+        let queued: usize = self
+            .scheduler
+            .queued()
+            .map(|r| Scheduler::projected_bytes(r.prompt.len(), r.max_new_tokens, sparse_b, dense_b, buf))
+            .sum();
+        self.live_cache_bytes() + queued
+    }
+
     pub fn has_work(&self) -> bool {
         !self.active.is_empty() || self.scheduler.queue_len() > 0
     }
 
     pub fn pop_finished(&mut self) -> Option<Response> {
         self.finished.pop_front()
+    }
+
+    /// Drain one id that was rejected at admission (its request will
+    /// never produce a [`Response`]); serving fronts answer the waiting
+    /// client with an error instead of leaving it blocked.
+    pub fn pop_rejected(&mut self) -> Option<u64> {
+        self.rejected.pop_front()
     }
 
     /// One engine iteration: admit, decode every active sequence once,
@@ -189,30 +235,36 @@ impl Engine {
     // internals
     // ------------------------------------------------------------------
 
+    /// Per-token KV byte rates `(sparse, dense)` at compression level
+    /// `k` — the single source feeding both admission control and the
+    /// router's `MemAware` projection ([`Engine::projected_load_bytes`]).
+    fn token_byte_rates(&self, k: usize) -> (usize, usize) {
+        let per_head = 2 * self.shape.n_layers * self.shape.n_kv;
+        (per_head * self.cfg.mode.vector_bytes(k), per_head * self.shape.d_head * 2)
+    }
+
     fn admit(&mut self) -> anyhow::Result<()> {
         let live = self.live_cache_bytes();
         let k_now = {
             let t = &mut self.tuner;
             t.observe(live)
         };
-        let shape = self.shape;
-        let mode = self.cfg.mode;
-        let buf = shape.buf_cap;
+        let (sparse_b, dense_b) = self.token_byte_rates(k_now);
+        let buf = self.shape.buf_cap;
         loop {
             let proj = |req: &Request| {
-                let sparse_b =
-                    2 * shape.n_layers * shape.n_kv * mode.vector_bytes(k_now);
-                let dense_b = 2 * shape.n_layers * shape.n_kv * shape.d_head * 2;
                 Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
                 break;
             };
             let queue_time = pending.enqueued.elapsed();
+            let rid = pending.req.id;
             match self.prefill(pending.req, k_now, queue_time) {
                 Ok(seq) => self.active.push(seq),
                 Err(e) => {
                     self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    self.rejected.push_back(rid);
                     log::warn!("prefill failed: {e:#}");
                 }
             }
@@ -301,16 +353,20 @@ impl Engine {
 
     /// One decode iteration, in two phases:
     ///
-    /// * **read/execute** — every active sequence runs its decode graph;
-    ///   with `decode_workers > 0` these independent executions fan
-    ///   across the pool (each task owns its sequence `&mut`, the PJRT
-    ///   runtime is shared immutably);
+    /// * **read/execute + sample** — every active sequence runs its decode
+    ///   graph and samples its next token; with `decode_workers > 0` these
+    ///   independent executions fan across the pool (each task owns its
+    ///   sequence `&mut` — including its private RNG stream — and the PJRT
+    ///   runtime is shared immutably).  Sampling lives here rather than on
+    ///   the coordinator thread so per-token costs beyond argmax (top-p,
+    ///   repetition penalties) scale with the pool;
     /// * **commit** — serially, in submission order: append the new
-    ///   (k̂, v̂) rows, sample the next token, account stats, retire
+    ///   (k̂, v̂) rows, record the sampled token, account stats, retire
     ///   finished sequences.
     ///
-    /// Each sequence's compute depends only on its own pre-iteration
-    /// state, so the fan-out produces the same tokens as serial stepping.
+    /// Each sequence's compute (and RNG consumption) depends only on its
+    /// own pre-iteration state, so the fan-out produces the same tokens as
+    /// serial stepping.
     fn decode_iteration(&mut self) -> anyhow::Result<()> {
         let shape = self.shape;
         // SWAN_CLONE_ARGS=1 forces the pre-optimization clone-per-step
@@ -320,21 +376,30 @@ impl Engine {
         struct StepTask<'a> {
             seq: &'a mut ActiveSeq,
             out: Option<anyhow::Result<Option<Vec<HostTensor>>>>,
+            /// Token sampled in the execute phase (None when the sequence
+            /// finished, errored, or produced non-f32 logits).
+            next: Option<u32>,
             exec: Duration,
         }
 
-        // phase 1: execute (parallel when the pool has workers)
+        // phase 1: execute + sample (parallel when the pool has workers)
         {
             let lm = &self.lm;
             let l_buckets = &self.decode_l_buckets;
             let mut tasks: Vec<StepTask> = self
                 .active
                 .iter_mut()
-                .map(|seq| StepTask { seq, out: None, exec: Duration::ZERO })
+                .map(|seq| StepTask { seq, out: None, next: None, exec: Duration::ZERO })
                 .collect();
             self.pool.for_each_mut(&mut tasks, |_scratch, t| {
                 let t0 = Instant::now();
-                t.out = Some(decode_execute(lm, shape, l_buckets, clone_args, t.seq));
+                let out = decode_execute(lm, shape, l_buckets, clone_args, t.seq);
+                if let Ok(Some(outs)) = &out {
+                    if let Ok(logits) = outs[0].as_f32() {
+                        t.next = Some(sample(logits, t.seq.req.temperature, &mut t.seq.rng));
+                    }
+                }
+                t.out = Some(out);
                 t.exec = t0.elapsed();
             });
 
@@ -350,7 +415,12 @@ impl Engine {
                     Err(e) => return Err(e),
                 };
                 let seq = &mut *t.seq;
-                let logits = outs[0].as_f32()?;
+                let Some(next) = t.next else {
+                    // outs[0] existed but was not f32 — surface the type
+                    // error the sampler hit in the execute phase
+                    outs[0].as_f32()?;
+                    anyhow::bail!("decode graph produced no sampleable logits");
+                };
                 let khat = outs[1].as_f32()?;
                 let vhat = outs[2].as_f32()?;
 
@@ -368,7 +438,6 @@ impl Engine {
                     }
                 }
 
-                let next = sample(logits, seq.req.temperature, &mut seq.rng);
                 seq.next_token = next;
                 seq.produced.push(next);
                 seq.stats.decode_steps += 1;

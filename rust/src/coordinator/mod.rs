@@ -12,6 +12,10 @@
 //! Runtime compression tuning: [`engine::Engine::set_k_active`] re-points
 //! the pruner for newly admitted sequences and the autotuner
 //! ([`autotune::AutoTuner`]) lowers/raises the level under memory pressure.
+//!
+//! One `Engine` is one *shard*: [`crate::shard`] runs N of them behind a
+//! front-end router, holding the engine by the load-introspection handles
+//! exposed here (`queue_len` / `active_len` / `projected_load_bytes`).
 
 pub mod autotune;
 pub mod pool;

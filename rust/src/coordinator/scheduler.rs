@@ -1,7 +1,14 @@
-//! Scheduling policy pieces: FIFO request queue with memory-aware
-//! admission control and iteration-level batch selection
+//! Scheduling policy pieces: FIFO request queue with memory- and
+//! pool-aware admission control and iteration-level batch selection
 //! (Orca-style continuous batching: the decode "batch" is re-formed every
 //! iteration from whatever sequences are alive).
+//!
+//! Admission projects two resources before popping the queue:
+//! * **memory** — the caller supplies a per-request KV-byte projection
+//!   (see [`Scheduler::projected_bytes`]) checked against `mem_budget`;
+//! * **decode-pool occupancy** — when `decode_slots > 0`, admission stops
+//!   once the active set would oversubscribe the shard's worker pool, so
+//!   per-token latency SLOs survive mixed long/short batches.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -21,11 +28,19 @@ pub struct Scheduler {
     pub max_batch: usize,
     /// KV memory budget in bytes (0 = unlimited).
     pub mem_budget: usize,
+    /// Decode-pool capacity in sequences (0 = unlimited): admission defers
+    /// once the active set would oversubscribe the shard's worker pool.
+    pub decode_slots: usize,
 }
 
 impl Scheduler {
     pub fn new(max_batch: usize, mem_budget: usize) -> Scheduler {
-        Scheduler { queue: VecDeque::new(), max_batch, mem_budget }
+        Scheduler { queue: VecDeque::new(), max_batch, mem_budget, decode_slots: 0 }
+    }
+
+    /// Cap concurrent decodes to the worker pool's capacity (0 disables).
+    pub fn set_decode_slots(&mut self, slots: usize) {
+        self.decode_slots = slots;
     }
 
     pub fn enqueue(&mut self, req: Request) {
@@ -34,6 +49,12 @@ impl Scheduler {
 
     pub fn queue_len(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Iterate the queued (not yet admitted) requests in FIFO order; used
+    /// by the shard router to project a shard's total KV load.
+    pub fn queued(&self) -> impl Iterator<Item = &Request> {
+        self.queue.iter().map(|p| &p.req)
     }
 
     /// Estimate of the KV bytes a new sequence will need at admission
@@ -51,7 +72,8 @@ impl Scheduler {
             + (total - dense_tokens) * bytes_per_token_sparse
     }
 
-    /// Pop the next admissible request, if capacity and memory allow.
+    /// Pop the next admissible request, if capacity, memory and the
+    /// decode pool allow.
     pub fn admit_next(
         &mut self,
         active: usize,
@@ -59,6 +81,13 @@ impl Scheduler {
         project: impl Fn(&Request) -> usize,
     ) -> Option<Pending> {
         if active >= self.max_batch {
+            return None;
+        }
+        // pool-aware admission: the worker pool is saturated — admitting
+        // more sequences would stretch every iteration without raising
+        // throughput (decode_slots >= 1 implies active >= 1 here, so the
+        // no-deadlock invariant of the memory check below still holds).
+        if self.decode_slots > 0 && active >= self.decode_slots {
             return None;
         }
         let head = self.queue.front()?;
@@ -109,6 +138,31 @@ mod tests {
         assert_eq!(s.queue_len(), 1);
         // same pressure but engine idle -> admit anyway
         assert!(s.admit_next(0, 900, |_| 200).is_some());
+    }
+
+    #[test]
+    fn decode_slots_defer_when_pool_saturated() {
+        let mut s = Scheduler::new(16, 0);
+        s.set_decode_slots(2);
+        s.enqueue(req(1, 4));
+        // pool full (2 active vs 2 slots) -> defer, request stays queued
+        assert!(s.admit_next(2, 0, |_| 0).is_none());
+        assert_eq!(s.queue_len(), 1);
+        // a slot frees up -> admit
+        assert!(s.admit_next(1, 0, |_| 0).is_some());
+        // slots disabled (0) -> never defers on occupancy
+        let mut u = Scheduler::new(16, 0);
+        u.enqueue(req(2, 4));
+        assert!(u.admit_next(15, 0, |_| 0).is_some());
+    }
+
+    #[test]
+    fn queued_iterates_fifo() {
+        let mut s = Scheduler::new(4, 0);
+        s.enqueue(req(7, 4));
+        s.enqueue(req(8, 4));
+        let ids: Vec<u64> = s.queued().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7, 8]);
     }
 
     #[test]

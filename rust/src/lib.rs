@@ -15,9 +15,12 @@
 //! * [`runtime`] — PJRT execution of the AOT HLO graphs lowered by
 //!   `python/compile/aot.py` (the serving hot path; python never runs at
 //!   request time).
-//! * [`coordinator`] / [`server`] — request router, continuous batcher,
-//!   prefill/decode scheduler, admission control and the runtime-tunable
-//!   compression controller.
+//! * [`coordinator`] / [`server`] — continuous batcher, prefill/decode
+//!   scheduler, admission control and the runtime-tunable compression
+//!   controller, plus the TCP front-end.
+//! * [`shard`] — multi-shard serving: N engines on their own threads
+//!   behind a request router with pluggable balance policies and
+//!   fleet-wide live compression retuning.
 //! * [`eval`] / [`repro`] — the synthetic evaluation suite and one module
 //!   per paper table/figure.
 //!
@@ -49,6 +52,7 @@ pub mod model;
 pub mod repro;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod sparse;
 pub mod swan;
 pub mod tensor;

@@ -38,6 +38,11 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.max_new_tokens = args.get_usize("max-new", cfg.max_new_tokens)?;
     cfg.mem_budget = args.get_usize("mem-budget", cfg.mem_budget)?;
     cfg.decode_workers = args.get_usize("decode-workers", cfg.decode_workers)?;
+    cfg.shards = args.get_usize("shards", cfg.shards)?;
+    anyhow::ensure!(cfg.shards >= 1, "--shards must be >= 1");
+    cfg.balance = args.get_str("balance", &cfg.balance);
+    // fail fast on a typo'd policy name (the router re-validates at launch)
+    swan::shard::balance::policy_from_name(&cfg.balance)?;
     cfg.mode = parse_mode(args)?;
     cfg.dense_baseline = args.has("dense");
     cfg.bind = args.get_str("bind", &cfg.bind);

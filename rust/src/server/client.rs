@@ -49,6 +49,14 @@ impl Client {
         Ok(())
     }
 
+    /// Swap the router's placement policy live.
+    pub fn set_balance(&mut self, policy: &str) -> anyhow::Result<()> {
+        writeln!(self.writer, "SET balance {policy}")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == "OK", "unexpected reply '{l}'");
+        Ok(())
+    }
+
     pub fn stats(&mut self) -> anyhow::Result<String> {
         writeln!(self.writer, "STATS")?;
         let mut out = String::new();

@@ -1,15 +1,19 @@
-//! TCP front-end: a line-oriented protocol over the serving engine.
+//! TCP front-end: a line-oriented protocol over the shard router.
 //!
 //! Protocol (one command per line):
 //!   GEN <max_new_tokens> <prompt text...>   -> "OK <id> <text>" + stats line
-//!   SET k_active <n>                        -> "OK"
-//!   STATS                                   -> metrics snapshot, "." line
+//!   SET k_active <n>                        -> "OK" (fleet-wide: every shard)
+//!   SET balance <policy>                    -> "OK" (swap placement live)
+//!   STATS                                   -> fleet + per-shard view, "." line
 //!   PING                                    -> "PONG"
 //!   QUIT                                    -> closes the connection
+//! Malformed lines answer `ERR <code> <message>` and keep the connection.
 //!
-//! The engine runs on a dedicated thread; connections are handled by a
-//! small thread pool and communicate via channels (tokio is unavailable
-//! offline — std threads keep the request path dependency-free).
+//! Each shard's engine runs on its own thread behind
+//! [`crate::shard::Router`]; connection threads place `GEN` through the
+//! balance policy and fan admin commands out to every shard (tokio is
+//! unavailable offline — std threads keep the request path
+//! dependency-free).
 
 pub mod client;
 pub mod proto;

@@ -1,51 +1,110 @@
 //! Wire protocol parsing for the TCP front-end.
+//!
+//! Malformed lines parse to a structured [`ProtoError`] (stable machine
+//! code + human message) rather than a bare string; the connection loop
+//! answers `ERR <code> <message>` and keeps the connection open, so a
+//! client typo never costs the session.
 
 /// A parsed client command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
     /// GEN <max_new> <prompt...>
     Gen { max_new: usize, prompt: String },
-    /// SET k_active <n>
+    /// SET k_active <n> — fleet-wide live compression retune.
     SetKActive(usize),
+    /// SET balance <policy> — swap the router's placement policy live.
+    SetBalance(String),
     Stats,
     Ping,
     Quit,
 }
 
+/// A structured protocol error: `code()` is the stable machine-readable
+/// token on the `ERR` reply line, `Display` the human explanation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtoError {
+    /// The line was empty (no verb).
+    Empty,
+    /// The verb is not part of the protocol.
+    UnknownCommand(String),
+    /// The verb is known but its arguments don't parse.
+    BadArgs { verb: &'static str, expected: &'static str, got: String },
+}
+
+impl ProtoError {
+    pub fn code(&self) -> &'static str {
+        match self {
+            ProtoError::Empty => "empty",
+            ProtoError::UnknownCommand(_) => "unknown-command",
+            ProtoError::BadArgs { .. } => "bad-args",
+        }
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Empty => write!(f, "empty command line"),
+            ProtoError::UnknownCommand(verb) => write!(f, "unknown command '{verb}'"),
+            ProtoError::BadArgs { verb, expected, got } => {
+                write!(f, "{verb}: expected {expected}, got '{got}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
 /// Parse one protocol line.
-pub fn parse_line(line: &str) -> Result<Command, String> {
+pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
     let line = line.trim_end_matches(['\r', '\n']);
     let mut parts = line.splitn(2, ' ');
-    let verb = parts.next().unwrap_or("").to_ascii_uppercase();
+    let verb_raw = parts.next().unwrap_or("");
+    let verb = verb_raw.to_ascii_uppercase();
     let rest = parts.next().unwrap_or("");
     match verb.as_str() {
+        "" => Err(ProtoError::Empty),
         "GEN" => {
             let mut p = rest.splitn(2, ' ');
-            let max_new: usize = p
-                .next()
-                .unwrap_or("")
-                .parse()
-                .map_err(|_| "GEN: expected '<max_new_tokens> <prompt>'".to_string())?;
+            let max_new: usize = p.next().unwrap_or("").parse().map_err(|_| {
+                ProtoError::BadArgs {
+                    verb: "GEN",
+                    expected: "'<max_new_tokens> <prompt>'",
+                    got: rest.to_string(),
+                }
+            })?;
             let prompt = p.next().unwrap_or("").to_string();
             if prompt.is_empty() {
-                return Err("GEN: empty prompt".into());
+                return Err(ProtoError::BadArgs {
+                    verb: "GEN",
+                    expected: "a non-empty prompt after <max_new_tokens>",
+                    got: rest.to_string(),
+                });
             }
             Ok(Command::Gen { max_new, prompt })
         }
         "SET" => {
             let mut p = rest.split_whitespace();
             match (p.next(), p.next()) {
-                (Some("k_active"), Some(n)) => n
-                    .parse()
-                    .map(Command::SetKActive)
-                    .map_err(|_| "SET k_active: bad number".to_string()),
-                _ => Err("SET: expected 'k_active <n>'".into()),
+                (Some("k_active"), Some(n)) => {
+                    n.parse().map(Command::SetKActive).map_err(|_| ProtoError::BadArgs {
+                        verb: "SET k_active",
+                        expected: "a number",
+                        got: n.to_string(),
+                    })
+                }
+                (Some("balance"), Some(policy)) => Ok(Command::SetBalance(policy.to_string())),
+                _ => Err(ProtoError::BadArgs {
+                    verb: "SET",
+                    expected: "'k_active <n>' or 'balance <policy>'",
+                    got: rest.to_string(),
+                }),
             }
         }
         "STATS" => Ok(Command::Stats),
         "PING" => Ok(Command::Ping),
         "QUIT" => Ok(Command::Quit),
-        other => Err(format!("unknown command '{other}'")),
+        _ => Err(ProtoError::UnknownCommand(verb_raw.to_string())),
     }
 }
 
@@ -64,6 +123,10 @@ mod tests {
     #[test]
     fn parses_set_and_misc() {
         assert_eq!(parse_line("SET k_active 16").unwrap(), Command::SetKActive(16));
+        assert_eq!(
+            parse_line("SET balance mem-aware").unwrap(),
+            Command::SetBalance("mem-aware".into())
+        );
         assert_eq!(parse_line("stats").unwrap(), Command::Stats);
         assert_eq!(parse_line("PING").unwrap(), Command::Ping);
         assert_eq!(parse_line("QUIT\r\n").unwrap(), Command::Quit);
@@ -76,5 +139,22 @@ mod tests {
         assert!(parse_line("GEN 5 ").is_err());
         assert!(parse_line("SET foo 3").is_err());
         assert!(parse_line("NOPE").is_err());
+    }
+
+    #[test]
+    fn errors_are_structured() {
+        assert_eq!(parse_line("").unwrap_err().code(), "empty");
+        assert_eq!(parse_line("NOPE 1 2").unwrap_err().code(), "unknown-command");
+        // empty rest after SET is a bad-args error, not a verb mismatch
+        let e = parse_line("SET").unwrap_err();
+        assert_eq!(e.code(), "bad-args");
+        assert!(e.to_string().contains("SET: expected"), "{e}");
+        // GEN with a count but no prompt names the missing piece
+        let e = parse_line("GEN 5 ").unwrap_err();
+        assert_eq!(e.code(), "bad-args");
+        assert!(e.to_string().contains("non-empty prompt"), "{e}");
+        // the number that failed to parse is echoed back
+        let e = parse_line("SET k_active lots").unwrap_err();
+        assert!(e.to_string().contains("'lots'"), "{e}");
     }
 }

@@ -1,76 +1,24 @@
-//! TCP serving loop.
+//! TCP serving loop over the shard router.
 //!
-//! One engine thread owns the [`Engine`]; connection threads translate
-//! protocol lines into engine commands over channels.  Generation is
-//! synchronous per connection (the engine still interleaves decode across
-//! concurrent connections — iteration-level batching happens inside
-//! `Engine::step`).
+//! [`crate::shard::Router`] owns `cfg.shards` engines, each on its own
+//! thread; connection threads translate protocol lines into router calls.
+//! `GEN` is *placed* on one shard by the configured balance policy, while
+//! `SET k_active` and `STATS` fan out to every shard (broadcast + gather)
+//! — one wire command retunes or inspects the whole fleet.  Generation is
+//! synchronous per connection (each shard still interleaves decode across
+//! its sequences — iteration-level batching happens inside the engine).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::ServeConfig;
-use crate::coordinator::engine::Engine;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::Request;
 use crate::server::proto::{parse_line, Command};
+use crate::shard::balance::policy_from_name;
+use crate::shard::Router;
 
-enum EngineCmd {
-    Gen { req: Request, reply: mpsc::Sender<anyhow::Result<Response>> },
-    SetK(usize),
-    Stats(mpsc::Sender<String>),
-    Shutdown,
-}
-
-/// Engine thread: pulls commands, steps the engine, routes completions.
-fn engine_thread(mut engine: Engine, rx: mpsc::Receiver<EngineCmd>) {
-    let mut waiters: std::collections::HashMap<u64, mpsc::Sender<anyhow::Result<Response>>> =
-        std::collections::HashMap::new();
-    loop {
-        // drain commands (non-blocking when busy, blocking when idle)
-        loop {
-            let cmd = if engine.has_work() {
-                match rx.try_recv() {
-                    Ok(c) => c,
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => return,
-                }
-            } else {
-                match rx.recv() {
-                    Ok(c) => c,
-                    Err(_) => return,
-                }
-            };
-            match cmd {
-                EngineCmd::Gen { req, reply } => {
-                    let id = engine.submit(req);
-                    waiters.insert(id, reply);
-                }
-                EngineCmd::SetK(k) => engine.set_k_active(k),
-                EngineCmd::Stats(tx) => {
-                    let mut s = engine.metrics.snapshot();
-                    s.push_str(&format!("k_active: {}\n", engine.current_k_active()));
-                    s.push_str(&format!("queue: {} active: {}\n",
-                        0, // queue length folded into metrics
-                        engine.live_cache_bytes()));
-                    let _ = tx.send(s);
-                }
-                EngineCmd::Shutdown => return,
-            }
-        }
-        if let Err(e) = engine.step() {
-            log::error!("engine step failed: {e:#}");
-        }
-        while let Some(resp) = engine.pop_finished() {
-            if let Some(tx) = waiters.remove(&resp.id) {
-                let _ = tx.send(Ok(resp));
-            }
-        }
-    }
-}
-
-fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<EngineCmd>>>, max_new_cap: usize) {
+fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -88,22 +36,36 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<EngineCmd>>>, max_n
                 let _ = writeln!(writer, "PONG");
             }
             Ok(Command::Stats) => {
-                let (rtx, rrx) = mpsc::channel();
-                let _ = tx.lock().unwrap().send(EngineCmd::Stats(rtx));
-                if let Ok(s) = rrx.recv() {
-                    let _ = write!(writer, "{s}");
-                }
+                let _ = write!(writer, "{}", router.stats());
                 let _ = writeln!(writer, ".");
             }
-            Ok(Command::SetKActive(k)) => {
-                let _ = tx.lock().unwrap().send(EngineCmd::SetK(k));
-                let _ = writeln!(writer, "OK");
-            }
+            Ok(Command::SetKActive(k)) => match router.set_k_active(k) {
+                Ok(_) => {
+                    let _ = writeln!(writer, "OK");
+                }
+                Err(e) => {
+                    let _ = writeln!(writer, "ERR unavailable {e}");
+                }
+            },
+            Ok(Command::SetBalance(name)) => match policy_from_name(&name) {
+                Ok(policy) => {
+                    router.set_policy(policy);
+                    let _ = writeln!(writer, "OK");
+                }
+                Err(e) => {
+                    let _ = writeln!(writer, "ERR bad-args {e}");
+                }
+            },
             Ok(Command::Gen { max_new, prompt }) => {
-                let (rtx, rrx) = mpsc::channel();
                 let req = Request::from_text(0, &prompt, max_new.min(max_new_cap));
-                let _ = tx.lock().unwrap().send(EngineCmd::Gen { req, reply: rtx });
-                match rrx.recv() {
+                let reply = match router.submit(req) {
+                    Ok(rx) => rx.recv(),
+                    Err(e) => {
+                        let _ = writeln!(writer, "ERR unavailable {e}");
+                        continue;
+                    }
+                };
+                match reply {
                     Ok(Ok(resp)) => {
                         let _ = writeln!(writer, "OK {} {}", resp.id, resp.text);
                         let _ = writeln!(
@@ -117,16 +79,17 @@ fn handle_conn(stream: TcpStream, tx: Arc<Mutex<mpsc::Sender<EngineCmd>>>, max_n
                         );
                     }
                     Ok(Err(e)) => {
-                        let _ = writeln!(writer, "ERR {e}");
+                        let _ = writeln!(writer, "ERR generation {e}");
                     }
                     Err(_) => {
-                        let _ = writeln!(writer, "ERR engine gone");
+                        let _ = writeln!(writer, "ERR unavailable shard gone");
                         break;
                     }
                 }
             }
             Err(e) => {
-                let _ = writeln!(writer, "ERR {e}");
+                // structured reply; the connection stays open
+                let _ = writeln!(writer, "ERR {} {e}", e.code());
             }
         }
     }
@@ -146,28 +109,29 @@ pub fn serve_with_ready(
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
     let max_new_cap = cfg.max_new_tokens.max(1) * 8;
-    let engine = Engine::new(artifacts_dir, cfg.clone())?;
-    engine.warmup()?;
-    let (tx, rx) = mpsc::channel();
-    let tx = Arc::new(Mutex::new(tx));
-    std::thread::spawn(move || engine_thread(engine, rx));
+    let router = Arc::new(Router::launch(artifacts_dir, cfg.clone())?);
 
     let listener = TcpListener::bind(&cfg.bind)?;
     let addr = listener.local_addr()?;
-    println!("swan serving {} on {addr} (k_active={} buffer={} mode={})",
-        cfg.model, cfg.k_active, cfg.buffer, cfg.mode.label());
+    println!(
+        "swan serving {} on {addr} (shards={} balance={} k_active={} buffer={} mode={} workers/shard={})",
+        cfg.model,
+        router.n_shards(),
+        router.policy_name(),
+        cfg.k_active,
+        cfg.buffer,
+        cfg.mode.label(),
+        cfg.decode_workers,
+    );
     on_ready(addr);
     for stream in listener.incoming() {
         match stream {
             Ok(s) => {
-                let tx = tx.clone();
-                std::thread::spawn(move || handle_conn(s, tx, max_new_cap));
+                let router = router.clone();
+                std::thread::spawn(move || handle_conn(s, router, max_new_cap));
             }
             Err(e) => log::warn!("accept: {e}"),
         }
     }
-    // unreachable: incoming() iterates forever; keep the sender alive
-    drop(tx);
-    let _ = EngineCmd::Shutdown;
     Ok(())
 }

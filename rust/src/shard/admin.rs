@@ -1,0 +1,115 @@
+//! Fleet administration: the aggregated STATS view.
+//!
+//! `STATS` over the wire is a fleet operation: the router broadcasts a
+//! stats request to every shard (so the shards render their blocks
+//! concurrently), gathers the replies, and appends totals aggregated
+//! straight from the shards' shared [`Metrics`] — the aggregate never
+//! blocks on a shard thread, so a wedged shard degrades to a "timed out"
+//! line instead of hanging the whole view.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+use crate::shard::shard::{ShardCmd, ShardHandle};
+use crate::sparse::memory::human_bytes;
+
+/// How long the gather waits on any one shard's stats block.
+const STATS_GATHER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Render the fleet view: header, per-shard blocks, aggregate totals.
+pub fn fleet_stats(shards: &[ShardHandle], policy: &str) -> String {
+    let mut out = format!("fleet: shards={} balance={policy}\n", shards.len());
+    // broadcast first, then gather — shards render in parallel
+    let mut pending = Vec::with_capacity(shards.len());
+    for s in shards {
+        let (tx, rx) = mpsc::channel();
+        match s.send(ShardCmd::Stats { reply: tx }) {
+            Ok(()) => pending.push((s.id, rx)),
+            Err(_) => out.push_str(&format!("shard {}: unreachable\n", s.id)),
+        }
+    }
+    for (id, rx) in pending {
+        match rx.recv_timeout(STATS_GATHER_TIMEOUT) {
+            Ok(block) => out.push_str(&block),
+            Err(_) => out.push_str(&format!("shard {id}: stats timed out\n")),
+        }
+    }
+    out.push_str(&aggregate_totals(shards.iter().map(|s| s.metrics.as_ref())));
+    out
+}
+
+/// Sum every shard's counters into the fleet totals block.
+pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> String {
+    let (mut submitted, mut completed, mut rejected) = (0u64, 0u64, 0u64);
+    let (mut prefill, mut decode) = (0u64, 0u64);
+    let (mut cache, mut dense) = (0usize, 0usize);
+    for m in metrics {
+        submitted += m.requests_submitted.load(Ordering::Relaxed);
+        completed += m.requests_completed.load(Ordering::Relaxed);
+        rejected += m.requests_rejected.load(Ordering::Relaxed);
+        prefill += m.prefill_tokens.load(Ordering::Relaxed);
+        decode += m.decode_tokens.load(Ordering::Relaxed);
+        cache += m.cache_bytes.load(Ordering::Relaxed);
+        dense += m.dense_equiv_bytes.load(Ordering::Relaxed);
+    }
+    let saving = if dense > 0 { 100.0 * (1.0 - cache as f64 / dense as f64) } else { 0.0 };
+    format!(
+        "fleet requests: submitted={submitted} completed={completed} rejected={rejected}\n\
+         fleet tokens: prefill={prefill} decode={decode}\n\
+         fleet kv-cache: {} live (dense-equiv {}, saving {saving:.1}%)\n",
+        human_bytes(cache),
+        human_bytes(dense),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_sums_across_shards() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.requests_submitted.store(3, Ordering::Relaxed);
+        b.requests_submitted.store(4, Ordering::Relaxed);
+        a.decode_tokens.store(10, Ordering::Relaxed);
+        b.decode_tokens.store(30, Ordering::Relaxed);
+        a.cache_bytes.store(256, Ordering::Relaxed);
+        b.cache_bytes.store(256, Ordering::Relaxed);
+        a.dense_equiv_bytes.store(1024, Ordering::Relaxed);
+        b.dense_equiv_bytes.store(1024, Ordering::Relaxed);
+        let s = aggregate_totals([&a, &b].into_iter());
+        assert!(s.contains("submitted=7"), "{s}");
+        assert!(s.contains("decode=40"), "{s}");
+        assert!(s.contains("saving 75.0%"), "{s}");
+    }
+
+    #[test]
+    fn fleet_stats_gathers_stub_blocks() {
+        let (h0, rx0) = ShardHandle::stub(0);
+        let (h1, rx1) = ShardHandle::stub(1);
+        // script the shard side: answer one stats request each
+        let responders: Vec<_> = [rx0, rx1]
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| {
+                std::thread::spawn(move || {
+                    if let Ok(ShardCmd::Stats { reply }) = rx.recv() {
+                        let _ = reply.send(format!("shard {i}: k_active=32\n"));
+                    }
+                })
+            })
+            .collect();
+        let shards = vec![h0, h1];
+        let s = fleet_stats(&shards, "round-robin");
+        for r in responders {
+            r.join().unwrap();
+        }
+        assert!(s.contains("fleet: shards=2 balance=round-robin"), "{s}");
+        assert!(s.contains("shard 0: k_active=32"), "{s}");
+        assert!(s.contains("shard 1: k_active=32"), "{s}");
+        assert!(s.contains("fleet requests:"), "{s}");
+    }
+}

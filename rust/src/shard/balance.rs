@@ -1,0 +1,141 @@
+//! Placement policies: which shard gets the next request.
+//!
+//! Policies are deliberately cheap and deterministic — they look only at
+//! [`ShardSnapshot`]s (no locks into the shards, no RPCs), so placement
+//! adds nothing measurable to the request path and a scripted snapshot
+//! sequence fully determines the routing (see `tests/shard_router.rs`).
+
+use crate::shard::ShardSnapshot;
+
+/// A pluggable shard-placement policy.
+///
+/// `pick` receives one snapshot per shard (never empty, indexed by
+/// position) and returns the index of the shard to place the next request
+/// on.  Policies may keep state (`&mut self`) — e.g. the round-robin
+/// cursor — which the router guards with its own lock.
+pub trait BalancePolicy: Send {
+    /// Stable policy name (the `--balance` / `SET balance` spelling).
+    fn name(&self) -> &'static str;
+
+    /// Choose a shard index in `0..shards.len()` for the next request.
+    fn pick(&mut self, shards: &[ShardSnapshot]) -> usize;
+}
+
+/// Cycle through the shards in order, ignoring load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl BalancePolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, shards: &[ShardSnapshot]) -> usize {
+        let i = self.next % shards.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Place on the shard with the fewest queued + active sequences
+/// (ties break toward the lowest shard id).
+#[derive(Debug, Default)]
+pub struct LeastQueued;
+
+impl BalancePolicy for LeastQueued {
+    fn name(&self) -> &'static str {
+        "least-queued"
+    }
+
+    fn pick(&mut self, shards: &[ShardSnapshot]) -> usize {
+        shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.load(), s.id))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Place on the shard with the smallest projected KV footprint — the
+/// figure each shard's scheduler derives from `Scheduler::projected_bytes`
+/// over its live set and queue.  Sequence *count* ties break by load,
+/// then id, so an all-idle fleet degrades to round-robin-by-id rather
+/// than piling onto shard 0.
+#[derive(Debug, Default)]
+pub struct MemAware;
+
+impl BalancePolicy for MemAware {
+    fn name(&self) -> &'static str {
+        "mem-aware"
+    }
+
+    fn pick(&mut self, shards: &[ShardSnapshot]) -> usize {
+        shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.projected_bytes, s.load(), s.id))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// The `--balance` spellings, for usage strings and error messages.
+pub const POLICY_NAMES: &[&str] = &["round-robin", "least-queued", "mem-aware"];
+
+/// Build a policy from its wire/CLI name.
+pub fn policy_from_name(name: &str) -> anyhow::Result<Box<dyn BalancePolicy>> {
+    match name {
+        "round-robin" | "rr" => Ok(Box::new(RoundRobin::default())),
+        "least-queued" | "lq" => Ok(Box::new(LeastQueued)),
+        "mem-aware" | "mem" => Ok(Box::new(MemAware)),
+        other => anyhow::bail!(
+            "unknown balance policy '{other}' (expected one of {})",
+            POLICY_NAMES.join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: usize, queued: usize, active: usize, projected: usize) -> ShardSnapshot {
+        ShardSnapshot { id, queued, active, projected_bytes: projected, ..Default::default() }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let shards = vec![snap(0, 9, 9, 9), snap(1, 0, 0, 0), snap(2, 5, 5, 5)];
+        let mut p = RoundRobin::default();
+        let picks: Vec<usize> = (0..7).map(|_| p.pick(&shards)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_queued_picks_min_load_lowest_id_on_tie() {
+        let mut p = LeastQueued;
+        assert_eq!(p.pick(&[snap(0, 3, 1, 0), snap(1, 0, 2, 0), snap(2, 1, 3, 0)]), 1);
+        // tie on load -> lowest id
+        assert_eq!(p.pick(&[snap(0, 1, 1, 0), snap(1, 2, 0, 0), snap(2, 0, 2, 0)]), 0);
+    }
+
+    #[test]
+    fn mem_aware_follows_projected_bytes() {
+        let mut p = MemAware;
+        assert_eq!(p.pick(&[snap(0, 0, 0, 900), snap(1, 9, 9, 100), snap(2, 0, 0, 500)]), 1);
+        // byte tie -> fewer sequences wins
+        assert_eq!(p.pick(&[snap(0, 2, 2, 100), snap(1, 0, 1, 100)]), 1);
+    }
+
+    #[test]
+    fn names_resolve_and_unknown_errors() {
+        for name in POLICY_NAMES {
+            assert_eq!(policy_from_name(name).unwrap().name(), *name);
+        }
+        assert_eq!(policy_from_name("rr").unwrap().name(), "round-robin");
+        assert!(policy_from_name("hash-ring").is_err());
+    }
+}

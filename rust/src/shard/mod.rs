@@ -1,0 +1,65 @@
+//! Multi-shard serving: N independent engines behind one router.
+//!
+//! One [`crate::coordinator::Engine`] owns one thread, one
+//! [`crate::coordinator::scheduler::Scheduler`], one
+//! `swan::batch::WorkerPool` and one KV memory budget — which caps the
+//! stack at a single host-thread's worth of decode.  This subsystem is
+//! the layer between the wire protocol and the engine that removes the
+//! cap:
+//!
+//! * [`shard::ShardHandle`] — one engine on its own thread, driven by a
+//!   command channel, publishing a lock-free [`shard::ShardStatus`] load
+//!   view (queued / active / projected KV bytes / current `k_active`);
+//! * [`balance::BalancePolicy`] — pluggable placement over
+//!   [`ShardSnapshot`]s: [`balance::RoundRobin`], [`balance::LeastQueued`]
+//!   and [`balance::MemAware`] (routes by the projected KV bytes each
+//!   shard's scheduler reports);
+//! * [`router::Router`] — places `GEN` on one shard and fans `SET
+//!   k_active` / `STATS` out to every shard (broadcast + gather), which
+//!   is what makes SWAN's compression knob *fleet-wide* and live: one
+//!   wire command retunes every engine without restarting any of them;
+//! * [`admin`] — the fleet view: per-shard stats gathered concurrently
+//!   plus aggregated totals across all shard metrics.
+//!
+//! The TCP front-end (`crate::server::tcp`) talks only to the router;
+//! `ServeConfig::shards` / `ServeConfig::balance` size the fleet, and
+//! `ServeConfig::decode_workers` is per shard.
+
+pub mod admin;
+pub mod balance;
+pub mod router;
+pub mod shard;
+
+pub use balance::{policy_from_name, BalancePolicy, LeastQueued, MemAware, RoundRobin};
+pub use router::Router;
+pub use shard::{ShardCmd, ShardHandle, ShardStatus};
+
+/// Point-in-time load view of one shard, consumed by placement policies.
+///
+/// Published by the shard thread after every engine iteration (plus an
+/// optimistic bump at placement time), so values may trail the engine by
+/// at most one iteration — good enough for load balancing, never for
+/// accounting (the authoritative numbers live in the shard's `Metrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    /// Shard id (index into the router's shard list).
+    pub id: usize,
+    /// Requests queued behind admission control.
+    pub queued: usize,
+    /// Sequences currently decoding.
+    pub active: usize,
+    /// Live KV bytes of the active set.
+    pub live_bytes: usize,
+    /// Projected KV load: live bytes + admission projection of the queue
+    /// (see `Engine::projected_load_bytes`).
+    pub projected_bytes: usize,
+    /// The shard's current compression level.
+    pub k_active: usize,
+}
+
+impl ShardSnapshot {
+    /// Total sequences this shard is responsible for (queued + active).
+    pub fn load(&self) -> usize {
+        self.queued + self.active
+    }
+}

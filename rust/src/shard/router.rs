@@ -1,0 +1,175 @@
+//! The front-end router: places `GEN` on one shard, fans admin commands
+//! out to all of them.
+//!
+//! The router is the only object connection threads touch.  It is shared
+//! as `Arc<Router>`; interior mutability is confined to the policy lock
+//! (placement state such as the round-robin cursor) and each handle's
+//! sender lock, so concurrent connections place and submit without
+//! serializing on the shards themselves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::Context;
+
+use crate::config::ServeConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Request, Response};
+use crate::shard::admin;
+use crate::shard::balance::{policy_from_name, BalancePolicy};
+use crate::shard::shard::{ShardCmd, ShardHandle};
+use crate::shard::ShardSnapshot;
+
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    policy: Mutex<Box<dyn BalancePolicy>>,
+    /// Fleet-global request ids (per-shard engines would otherwise hand
+    /// out colliding ids on the wire).
+    next_id: AtomicU64,
+}
+
+impl Router {
+    /// Launch `cfg.shards` engines (each on its own thread, each with its
+    /// own scheduler, worker pool, and `mem_budget / shards` slice of the
+    /// KV budget) and front them with the configured balance policy.
+    /// Shard bring-up (artifact load + graph warmup) runs concurrently,
+    /// so fleet startup costs ~one engine launch, not N.
+    pub fn launch(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Router> {
+        anyhow::ensure!(cfg.shards >= 1, "shards must be >= 1, got {}", cfg.shards);
+        let policy = policy_from_name(&cfg.balance)?;
+        let per_shard_budget =
+            if cfg.mem_budget == 0 { 0 } else { (cfg.mem_budget / cfg.shards).max(1) };
+        let launchers: Vec<_> = (0..cfg.shards)
+            .map(|id| {
+                let shard_cfg = ServeConfig { mem_budget: per_shard_budget, ..cfg.clone() };
+                let dir = artifacts_dir.to_path_buf();
+                std::thread::Builder::new()
+                    .name(format!("swan-shard-launch-{id}"))
+                    .spawn(move || -> anyhow::Result<Engine> {
+                        let engine = Engine::new(&dir, shard_cfg)?;
+                        engine.warmup()?;
+                        Ok(engine)
+                    })
+                    .expect("spawning shard launch thread")
+            })
+            .collect();
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for (id, launcher) in launchers.into_iter().enumerate() {
+            let engine = launcher
+                .join()
+                .map_err(|_| anyhow::anyhow!("shard {id} launch thread panicked"))?
+                .with_context(|| format!("launching shard {id}"))?;
+            shards.push(ShardHandle::spawn(id, engine));
+        }
+        Ok(Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) })
+    }
+
+    /// Assemble a router from pre-built handles (tests, embedders).
+    pub fn from_handles(shards: Vec<ShardHandle>, policy: Box<dyn BalancePolicy>) -> Router {
+        assert!(!shards.is_empty(), "router needs at least one shard");
+        Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[ShardHandle] {
+        &self.shards
+    }
+
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.shards.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Swap the placement policy live (`SET balance <name>`).
+    pub fn set_policy(&self, policy: Box<dyn BalancePolicy>) {
+        *self.policy.lock().unwrap() = policy;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.lock().unwrap().name()
+    }
+
+    /// Pick the shard the next request should land on (placement only).
+    pub fn place(&self) -> usize {
+        let snaps = self.snapshots();
+        let pick = self.policy.lock().unwrap().pick(&snaps);
+        // a misbehaving policy must not take the fleet down
+        pick.min(self.shards.len() - 1)
+    }
+
+    /// Place and submit one request; the returned receiver yields the
+    /// response when the sequence completes on its shard.
+    pub fn submit(&self, mut req: Request) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let idx = self.place();
+        let (tx, rx) = mpsc::channel();
+        let shard = &self.shards[idx];
+        // optimistic bump so back-to-back placements see this request
+        // before the shard thread next publishes authoritative counts
+        shard.status.queued.fetch_add(1, Ordering::Relaxed);
+        shard.send(ShardCmd::Gen { req, reply: tx })?;
+        Ok(rx)
+    }
+
+    /// Fleet-wide live compression retune: broadcast `SET k_active` to
+    /// every shard, then gather the acks.  Returns `(shard id, applied
+    /// k)` per shard — "applied" because each engine snaps to its nearest
+    /// compiled bucket.  No engine restarts; newly admitted sequences on
+    /// every shard use the new level.
+    pub fn set_k_active(&self, k: usize) -> anyhow::Result<Vec<(usize, usize)>> {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            s.send(ShardCmd::SetK { k, ack: ack_tx })?;
+            pending.push((s.id, ack_rx));
+        }
+        let mut applied = Vec::with_capacity(pending.len());
+        for (id, rx) in pending {
+            let got = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("shard {id} dropped its SET k_active ack"))?;
+            applied.push((id, got));
+        }
+        Ok(applied)
+    }
+
+    /// The fleet STATS view: per-shard blocks + aggregate totals.
+    pub fn stats(&self) -> String {
+        admin::fleet_stats(&self.shards, self.policy_name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::balance::RoundRobin;
+
+    #[test]
+    fn place_clamps_rogue_policy() {
+        struct Rogue;
+        impl BalancePolicy for Rogue {
+            fn name(&self) -> &'static str {
+                "rogue"
+            }
+            fn pick(&mut self, _s: &[ShardSnapshot]) -> usize {
+                usize::MAX
+            }
+        }
+        let (h, _rx) = ShardHandle::stub(0);
+        let router = Router::from_handles(vec![h], Box::new(Rogue));
+        assert_eq!(router.place(), 0);
+    }
+
+    #[test]
+    fn policy_swap_is_visible() {
+        let (h, _rx) = ShardHandle::stub(0);
+        let router = Router::from_handles(vec![h], Box::new(RoundRobin::default()));
+        assert_eq!(router.policy_name(), "round-robin");
+        router.set_policy(policy_from_name("mem-aware").unwrap());
+        assert_eq!(router.policy_name(), "mem-aware");
+    }
+}

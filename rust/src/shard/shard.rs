@@ -1,0 +1,242 @@
+//! One shard: an engine on its own thread behind a command channel.
+//!
+//! The shard thread owns the [`Engine`] (and with it a scheduler, a
+//! decode worker pool and a slice of the fleet's KV budget).  It drains
+//! commands between engine iterations — non-blocking while there is work,
+//! blocking when idle — exactly like the single-engine TCP loop this
+//! subsystem replaces, and additionally publishes a lock-free
+//! [`ShardStatus`] after every iteration so the router can place requests
+//! without a round trip into the shard.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, Response};
+use crate::shard::ShardSnapshot;
+
+/// Commands a shard thread accepts.
+pub enum ShardCmd {
+    /// Place one generation; the response is sent on `reply` when the
+    /// sequence completes.
+    Gen { req: Request, reply: mpsc::Sender<anyhow::Result<Response>> },
+    /// Retune compression; the applied (bucket-snapped) `k` is acked.
+    SetK { k: usize, ack: mpsc::Sender<usize> },
+    /// Render this shard's stats block.
+    Stats { reply: mpsc::Sender<String> },
+    /// Stop the shard thread (in-flight sequences are abandoned).
+    Shutdown,
+}
+
+/// Lock-free load view a shard publishes for the router's placement
+/// policies.  See [`ShardSnapshot`] for the staleness contract.
+#[derive(Debug, Default)]
+pub struct ShardStatus {
+    pub queued: AtomicUsize,
+    pub active: AtomicUsize,
+    pub live_bytes: AtomicUsize,
+    pub projected_bytes: AtomicUsize,
+    pub k_active: AtomicUsize,
+}
+
+impl ShardStatus {
+    pub fn snapshot(&self, id: usize) -> ShardSnapshot {
+        ShardSnapshot {
+            id,
+            queued: self.queued.load(Ordering::Relaxed),
+            active: self.active.load(Ordering::Relaxed),
+            live_bytes: self.live_bytes.load(Ordering::Relaxed),
+            projected_bytes: self.projected_bytes.load(Ordering::Relaxed),
+            k_active: self.k_active.load(Ordering::Relaxed),
+        }
+    }
+
+    fn publish(&self, engine: &Engine) {
+        self.queued.store(engine.queue_len(), Ordering::Relaxed);
+        self.active.store(engine.active_len(), Ordering::Relaxed);
+        self.live_bytes.store(engine.live_cache_bytes(), Ordering::Relaxed);
+        self.projected_bytes.store(engine.projected_load_bytes(), Ordering::Relaxed);
+        self.k_active.store(engine.current_k_active(), Ordering::Relaxed);
+    }
+}
+
+/// Handle the router holds for one shard: the command channel, the shared
+/// status, and the shard's metrics (for fleet aggregation).
+pub struct ShardHandle {
+    pub id: usize,
+    tx: Mutex<mpsc::Sender<ShardCmd>>,
+    pub status: Arc<ShardStatus>,
+    pub metrics: Arc<Metrics>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ShardHandle {
+    /// Move `engine` onto a dedicated shard thread and return its handle.
+    pub fn spawn(id: usize, engine: Engine) -> ShardHandle {
+        let status = Arc::new(ShardStatus::default());
+        status.k_active.store(engine.current_k_active(), Ordering::Relaxed);
+        let metrics = engine.metrics.clone();
+        let (tx, rx) = mpsc::channel();
+        let thread_status = status.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("swan-shard-{id}"))
+            .spawn(move || shard_loop(id, engine, rx, &thread_status))
+            .expect("spawning shard thread");
+        ShardHandle { id, tx: Mutex::new(tx), status, metrics, join: Some(join) }
+    }
+
+    /// A handle with no engine behind it: commands sent through it arrive
+    /// on the returned receiver.  For router/policy tests and tooling that
+    /// script shard behaviour without model artifacts.
+    pub fn stub(id: usize) -> (ShardHandle, mpsc::Receiver<ShardCmd>) {
+        let (tx, rx) = mpsc::channel();
+        let handle = ShardHandle {
+            id,
+            tx: Mutex::new(tx),
+            status: Arc::new(ShardStatus::default()),
+            metrics: Arc::new(Metrics::default()),
+            join: None,
+        };
+        (handle, rx)
+    }
+
+    /// Send a command to the shard thread.
+    pub fn send(&self, cmd: ShardCmd) -> anyhow::Result<()> {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("shard {} is gone", self.id))
+    }
+
+    pub fn snapshot(&self) -> ShardSnapshot {
+        self.status.snapshot(self.id)
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(ShardCmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Render one shard's stats block (header line + indented engine metrics).
+fn shard_stats(id: usize, engine: &Engine) -> String {
+    use crate::sparse::memory::human_bytes;
+    let mut out = format!(
+        "shard {id}: k_active={} queued={} active={} kv={} projected={}\n",
+        engine.current_k_active(),
+        engine.queue_len(),
+        engine.active_len(),
+        human_bytes(engine.live_cache_bytes()),
+        human_bytes(engine.projected_load_bytes()),
+    );
+    for line in engine.metrics.snapshot().lines() {
+        out.push_str("  ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// The shard thread: drain commands, step the engine, route completions,
+/// publish status.
+fn shard_loop(
+    id: usize,
+    mut engine: Engine,
+    rx: mpsc::Receiver<ShardCmd>,
+    status: &ShardStatus,
+) {
+    let mut waiters: HashMap<u64, mpsc::Sender<anyhow::Result<Response>>> = HashMap::new();
+    loop {
+        // drain commands (non-blocking when busy, blocking when idle)
+        loop {
+            let cmd = if engine.has_work() {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            } else {
+                status.publish(&engine);
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                }
+            };
+            match cmd {
+                ShardCmd::Gen { req, reply } => {
+                    let rid = engine.submit(req);
+                    waiters.insert(rid, reply);
+                    status.publish(&engine);
+                }
+                ShardCmd::SetK { k, ack } => {
+                    engine.set_k_active(k);
+                    let applied = engine.current_k_active();
+                    status.k_active.store(applied, Ordering::Relaxed);
+                    let _ = ack.send(applied);
+                }
+                ShardCmd::Stats { reply } => {
+                    let _ = reply.send(shard_stats(id, &engine));
+                }
+                ShardCmd::Shutdown => return,
+            }
+        }
+        if let Err(e) = engine.step() {
+            log::error!("shard {id}: engine step failed: {e:#}");
+        }
+        while let Some(resp) = engine.pop_finished() {
+            if let Some(tx) = waiters.remove(&resp.id) {
+                let _ = tx.send(Ok(resp));
+            }
+        }
+        // admission-rejected requests never produce a Response — answer
+        // their waiters with an error instead of leaving them blocked
+        while let Some(rid) = engine.pop_rejected() {
+            if let Some(tx) = waiters.remove(&rid) {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "request {rid} rejected at admission on shard {id}"
+                )));
+            }
+        }
+        status.publish(&engine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_handle_delivers_commands() {
+        let (handle, rx) = ShardHandle::stub(3);
+        let (ack_tx, ack_rx) = mpsc::channel();
+        handle.send(ShardCmd::SetK { k: 16, ack: ack_tx }).unwrap();
+        match rx.recv().unwrap() {
+            ShardCmd::SetK { k, ack } => {
+                assert_eq!(k, 16);
+                ack.send(k).unwrap();
+            }
+            _ => panic!("expected SetK"),
+        }
+        assert_eq!(ack_rx.recv().unwrap(), 16);
+    }
+
+    #[test]
+    fn status_snapshot_reflects_stores() {
+        let (handle, _rx) = ShardHandle::stub(1);
+        handle.status.queued.store(4, Ordering::Relaxed);
+        handle.status.projected_bytes.store(1024, Ordering::Relaxed);
+        let s = handle.snapshot();
+        assert_eq!(s.id, 1);
+        assert_eq!(s.queued, 4);
+        assert_eq!(s.projected_bytes, 1024);
+        assert_eq!(s.load(), 4);
+    }
+}

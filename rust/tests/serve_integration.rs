@@ -107,6 +107,68 @@ fn runtime_k_change_applies() {
 }
 
 #[test]
+fn multi_shard_tcp_concurrent_clients_and_fleet_retune() {
+    let dir = require_artifacts!();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let cfg = ServeConfig {
+        bind: "127.0.0.1:0".into(),
+        shards: 2,
+        balance: "least-queued".into(),
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = swan::server::tcp::serve_with_ready(&dir, cfg, move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(240)).expect("server start");
+
+    // concurrent clients: every generation completes, correctly bounded
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = swan::server::client::Client::connect(&addr.to_string()).unwrap();
+                let (text, stats) =
+                    c.generate(&format!("the sparse vector {i} maps the "), 8).unwrap();
+                assert!(text.is_ascii());
+                assert!(stats.tokens <= 8, "tokens {} > cap", stats.tokens);
+                c.quit();
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let mut c = swan::server::client::Client::connect(&addr.to_string()).unwrap();
+
+    // live fleet-wide retune: STATS must report the new level on *every*
+    // shard, with no engine restarted
+    c.set_k_active(16).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("fleet: shards=2"), "{stats}");
+    for shard in 0..2 {
+        assert!(stats.contains(&format!("shard {shard}: k_active=16")), "{stats}");
+    }
+    // the placement policy is also swappable live
+    c.set_balance("mem-aware").unwrap();
+    c.quit();
+
+    // malformed lines answer a structured ERR and keep the connection
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    writeln!(stream, "SET").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR bad-args"), "{line}");
+    line.clear();
+    writeln!(stream, "PING").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "PONG", "connection should survive a bad line");
+    writeln!(stream, "QUIT").unwrap();
+}
+
+#[test]
 fn tcp_round_trip() {
     let dir = require_artifacts!();
     let (addr_tx, addr_rx) = std::sync::mpsc::channel();

@@ -1,0 +1,133 @@
+//! Shard-router semantics over stub shards — placement per balance
+//! policy, the optimistic queue bump, and the `SET k_active`
+//! broadcast+gather — all without model artifacts (the stubs script the
+//! shard side of the command channel).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+
+use swan::coordinator::Request;
+use swan::shard::balance::{LeastQueued, MemAware, RoundRobin};
+use swan::shard::{policy_from_name, Router, ShardCmd, ShardHandle};
+
+fn stub_fleet(n: usize) -> (Vec<ShardHandle>, Vec<mpsc::Receiver<ShardCmd>>) {
+    (0..n).map(ShardHandle::stub).unzip()
+}
+
+fn gen_count(rx: &mpsc::Receiver<ShardCmd>) -> usize {
+    let mut n = 0;
+    while let Ok(cmd) = rx.try_recv() {
+        if matches!(cmd, ShardCmd::Gen { .. }) {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn round_robin_routes_a_mix_cyclically() {
+    let (shards, rxs) = stub_fleet(3);
+    // skew the load heavily — round-robin must ignore it
+    shards[0].status.queued.store(50, Ordering::Relaxed);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    for i in 0..6 {
+        router.submit(Request::from_text(0, &format!("req {i}"), 4)).unwrap();
+    }
+    assert_eq!(rxs.iter().map(gen_count).collect::<Vec<_>>(), vec![2, 2, 2]);
+}
+
+#[test]
+fn least_queued_balances_and_reacts_to_scripted_load() {
+    let (shards, rxs) = stub_fleet(2);
+    let router = Router::from_handles(shards, Box::new(LeastQueued));
+    // idle fleet: the optimistic bump alternates placements 0,1,0,1
+    for i in 0..4 {
+        router.submit(Request::from_text(0, &format!("req {i}"), 4)).unwrap();
+    }
+    assert_eq!(rxs.iter().map(gen_count).collect::<Vec<_>>(), vec![2, 2]);
+    // now script shard 0 as saturated: everything goes to shard 1
+    router.shards()[0].status.active.store(8, Ordering::Relaxed);
+    for i in 0..3 {
+        router.submit(Request::from_text(0, &format!("more {i}"), 4)).unwrap();
+    }
+    assert_eq!(rxs.iter().map(gen_count).collect::<Vec<_>>(), vec![0, 3]);
+}
+
+#[test]
+fn mem_aware_follows_projected_kv_bytes() {
+    let (shards, rxs) = stub_fleet(3);
+    shards[0].status.projected_bytes.store(1 << 20, Ordering::Relaxed);
+    shards[1].status.projected_bytes.store(1 << 10, Ordering::Relaxed);
+    shards[2].status.projected_bytes.store(1 << 30, Ordering::Relaxed);
+    let router = Router::from_handles(shards, Box::new(MemAware));
+    for i in 0..3 {
+        router.submit(Request::from_text(0, &format!("req {i}"), 4)).unwrap();
+    }
+    // projected bytes are scripted (stubs never republish), so the
+    // lightest shard keeps winning regardless of the queue bumps
+    assert_eq!(rxs.iter().map(gen_count).collect::<Vec<_>>(), vec![0, 3, 0]);
+}
+
+#[test]
+fn submit_bumps_the_placed_shards_queue() {
+    let (shards, _rxs) = stub_fleet(2);
+    let router = Router::from_handles(shards, Box::new(LeastQueued));
+    router.submit(Request::from_text(0, "hello", 4)).unwrap();
+    assert_eq!(router.shards()[0].snapshot().queued, 1);
+    assert_eq!(router.shards()[1].snapshot().queued, 0);
+}
+
+#[test]
+fn submit_assigns_fleet_unique_ids() {
+    let (shards, rxs) = stub_fleet(2);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    for _ in 0..4 {
+        router.submit(Request::from_text(0, "hello", 4)).unwrap();
+    }
+    let mut ids = Vec::new();
+    for rx in &rxs {
+        while let Ok(ShardCmd::Gen { req, .. }) = rx.try_recv() {
+            ids.push(req.id);
+        }
+    }
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 2, 3, 4]);
+}
+
+#[test]
+fn set_k_active_broadcast_reaches_every_shard() {
+    let (shards, rxs) = stub_fleet(3);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    // script the shard side: each shard acks the retune with the k it
+    // applied (a real engine snaps to its nearest compiled bucket)
+    let responders: Vec<_> = rxs
+        .into_iter()
+        .map(|rx| {
+            std::thread::spawn(move || match rx.recv().unwrap() {
+                ShardCmd::SetK { k, ack } => {
+                    ack.send(k).unwrap();
+                    k
+                }
+                _ => panic!("expected SetK"),
+            })
+        })
+        .collect();
+    let applied = router.set_k_active(24).unwrap();
+    assert_eq!(applied, vec![(0, 24), (1, 24), (2, 24)]);
+    for r in responders {
+        assert_eq!(r.join().unwrap(), 24);
+    }
+}
+
+#[test]
+fn live_policy_swap_changes_placement() {
+    let (shards, rxs) = stub_fleet(2);
+    shards[1].status.projected_bytes.store(0, Ordering::Relaxed);
+    shards[0].status.projected_bytes.store(1 << 20, Ordering::Relaxed);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    router.submit(Request::from_text(0, "a", 4)).unwrap(); // rr -> shard 0
+    router.set_policy(policy_from_name("mem-aware").unwrap());
+    router.submit(Request::from_text(0, "b", 4)).unwrap(); // mem -> shard 1
+    assert_eq!(gen_count(&rxs[0]), 1);
+    assert_eq!(gen_count(&rxs[1]), 1);
+}
