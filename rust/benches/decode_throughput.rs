@@ -2,21 +2,27 @@
 //!
 //! Part 1 (always runs): the rust-native batched decode path — serial
 //! `decode_step` per sequence vs `decode_step_batch` fanned across the
-//! worker pool, at batch sizes {1, 4, 16, 64}.  This is the tentpole
-//! comparison: same arithmetic, different scheduling, so tokens/sec is
-//! the whole story.
+//! worker pool, at batch sizes {1, 4, 16, 64}, repeated **per kernel
+//! path** (scalar, and AVX2 where the host supports it).  Same
+//! arithmetic, different scheduling/kernels, so tokens/sec is the whole
+//! story.  Per-path tokens/sec land in `BENCH_kernels.json`
+//! (`decode_throughput` section).
 //!
-//! Part 2 (needs `make artifacts`): PJRT decode-step latency per shape
+//! Part 2 (always runs): serial vs pool-fanned `prefill` on one long
+//! prompt (`prefill` section of the report).
+//!
+//! Part 3 (needs `make artifacts`): PJRT decode-step latency per shape
 //! bucket, SWAN vs dense baseline graphs.
 
 use swan::config::ModelConfig;
 use swan::kvcache::PolicyKind;
 use swan::model::transformer::{SequenceState, SwanModel};
 use swan::runtime::engine::{HostTensor, LoadedModel};
+use swan::simd::Kernels;
 use swan::sparse::StorageMode;
 use swan::swan::batch::WorkerPool;
 use swan::tensor::ops::argmax;
-use swan::util::stats::{bench, Summary};
+use swan::util::stats::{bench, BenchReport, Summary};
 use swan::util::Pcg64;
 
 fn bench_cfg() -> ModelConfig {
@@ -47,7 +53,8 @@ fn fresh_states(model: &SwanModel, pf: &swan::model::transformer::Prefill, n: us
         .collect()
 }
 
-fn native_batched_section() {
+fn native_batched_section(ks: Kernels, report: &mut BenchReport) {
+    swan::simd::set_active(ks);
     let model = SwanModel::synthetic(bench_cfg(), 11);
     let prompt: Vec<u32> = (0..48).map(|i| (i * 7 % 96) as u32).collect();
     let pf = model.prefill(&prompt);
@@ -55,10 +62,10 @@ fn native_batched_section() {
     let workers = WorkerPool::recommended_threads();
 
     println!(
-        "# decode_throughput: native batched decode ({} layers, d={}, {} q / {} kv heads; \
-         {} steps/seq, {} workers)",
-        model.cfg.n_layers, model.cfg.d_model, model.cfg.n_q_heads, model.cfg.n_kv_heads,
-        steps, workers
+        "# decode_throughput: native batched decode, kernels={} ({} layers, d={}, {} q / {} kv \
+         heads; {} steps/seq, {} workers)",
+        ks.label(), model.cfg.n_layers, model.cfg.d_model, model.cfg.n_q_heads,
+        model.cfg.n_kv_heads, steps, workers
     );
     println!(
         "{:<8} {:>14} {:>16} {:>9}",
@@ -99,8 +106,46 @@ fn native_batched_section() {
             "{batch:<8} {serial_tps:>14.1} {par_tps:>16.1} {:>8.2}x",
             par_tps / serial_tps
         );
+        report.set(
+            "decode_throughput",
+            &format!("{}_batch{batch}_serial_tps", ks.label()),
+            serial_tps,
+        );
+        report.set(
+            "decode_throughput",
+            &format!("{}_batch{batch}_parallel_tps", ks.label()),
+            par_tps,
+        );
     }
     println!();
+}
+
+/// Serial vs pool-fanned prefill on one long prompt (ROADMAP "parallel
+/// prefill" item): per-layer projection/attention/MLP phases fanned
+/// across the worker pool, results bit-identical by contract.
+fn prefill_section(report: &mut BenchReport) {
+    let model = SwanModel::synthetic(bench_cfg(), 11);
+    let prompt: Vec<u32> = (0..256).map(|i| (i * 7 % 96) as u32).collect();
+    let workers = WorkerPool::recommended_threads();
+
+    let t_serial = bench(1, 5, || {
+        std::hint::black_box(model.prefill(&prompt));
+    });
+    let mut pool = WorkerPool::new(workers);
+    let t_par = bench(1, 5, || {
+        std::hint::black_box(model.prefill_with_pool(&prompt, &mut pool));
+    });
+    let speedup = t_serial.median_ns / t_par.median_ns;
+    println!(
+        "# decode_throughput: prefill ({} tokens): serial {} vs {} workers {}  ({speedup:.2}x)\n",
+        prompt.len(),
+        Summary::fmt_time(t_serial.median_ns),
+        workers,
+        Summary::fmt_time(t_par.median_ns)
+    );
+    report.set("prefill", "serial_ns", t_serial.median_ns);
+    report.set("prefill", "parallel_ns", t_par.median_ns);
+    report.set("prefill", "workers", workers as f64);
 }
 
 fn pjrt_section() {
@@ -168,6 +213,17 @@ fn pjrt_section() {
 }
 
 fn main() {
-    native_batched_section();
+    let mut report = BenchReport::open(
+        &std::env::var("SWAN_BENCH_JSON").unwrap_or_else(|_| "BENCH_kernels.json".into()),
+    );
+    for ks in Kernels::available() {
+        native_batched_section(ks, &mut report);
+    }
+    swan::simd::set_active(Kernels::detect());
+    prefill_section(&mut report);
+    match report.save() {
+        Ok(()) => println!("(wrote {})\n", report.path().display()),
+        Err(e) => eprintln!("warning: could not write bench report: {e}"),
+    }
     pjrt_section();
 }

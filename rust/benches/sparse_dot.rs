@@ -1,13 +1,79 @@
 //! Bench: the decompression-free primitives — sparse-dense score product
-//! and scatter-add output — vs their dense counterparts, across k_active.
-//! This is the per-token saving that Eq. 2's denominator (d_h - k) models.
+//! and scatter-add output — vs their dense counterparts, across k_active,
+//! plus the CSR store walk per kernel path (scalar vs AVX2, unpadded vs
+//! lane-padded rows).  Per-path numbers land in `BENCH_kernels.json`
+//! (`sparse_dot` section, ns per row) so the trajectory is tracked across
+//! PRs.
 
-use swan::sparse::{SparseVec, StorageMode};
+use swan::simd::Kernels;
+use swan::sparse::{SparseStore, SparseVec, StorageMode};
 use swan::tensor::ops::dot;
-use swan::util::stats::{bench_batched, Summary};
+use swan::util::stats::{bench_batched, BenchReport, Summary};
 use swan::util::Pcg64;
 
+/// The CSR walk on every kernel path × row layout: the tentpole
+/// comparison — same rows, same query, different kernels — recorded
+/// machine-readably.
+fn kernel_path_section(d: usize, n: usize, report: &mut BenchReport) {
+    let mut rng = Pcg64::new(7);
+    let q = rng.normal_vec(d);
+    let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d)).collect();
+    let kernels = Kernels::available();
+
+    println!("# CSR store walk by kernel path (d_h={d}, {n} rows/iter)");
+    println!(
+        "{:<34} {:>12} {:>12}",
+        "kernel / layout / k", "scores", "scatter-add"
+    );
+    for &k in &[16usize, 32, 64, 128] {
+        for lane in [1usize, 8] {
+            let mut store = SparseStore::with_capacity_lanes(n, k, lane);
+            for r in &rows {
+                store.push_pruned(r, k, StorageMode::F32);
+            }
+            let w = vec![1.0 / n as f32; n];
+            for ks in &kernels {
+                let mut scores: Vec<f32> = Vec::with_capacity(store.len());
+                let mut msum = 0.0f32;
+                let t_scores = bench_batched(3, 15, 2, || {
+                    scores.clear();
+                    msum += store.scores_max_into_with(*ks, &q, 0.5, &mut scores);
+                    std::hint::black_box(&scores);
+                });
+                let mut acc = vec![0.0f32; d];
+                let t_axpy = bench_batched(3, 15, 2, || {
+                    acc.iter_mut().for_each(|a| *a = 0.0);
+                    store.axpy_all_with(*ks, &w, &mut acc);
+                    std::hint::black_box(&acc);
+                });
+                std::hint::black_box(msum);
+                let scores_row = t_scores.median_ns / n as f64;
+                let axpy_row = t_axpy.median_ns / n as f64;
+                println!(
+                    "{:<34} {:>12} {:>12}",
+                    format!("{} lane={lane} k={k}", ks.label()),
+                    Summary::fmt_time(scores_row),
+                    Summary::fmt_time(axpy_row)
+                );
+                let tag = format!("{}_lane{lane}_k{k}", ks.label());
+                report.set("sparse_dot", &format!("{tag}_scores_ns_per_row"), scores_row);
+                report.set("sparse_dot", &format!("{tag}_axpy_ns_per_row"), axpy_row);
+            }
+        }
+    }
+    println!();
+}
+
 fn main() {
+    let mut report = BenchReport::open(
+        &std::env::var("SWAN_BENCH_JSON").unwrap_or_else(|_| "BENCH_kernels.json".into()),
+    );
+    report.set_str("meta", "kernels_detected", swan::simd::Kernels::detect().label());
+    kernel_path_section(128, 1024, &mut report);
+    match report.save() {
+        Ok(()) => println!("(wrote {})\n", report.path().display()),
+        Err(e) => eprintln!("warning: could not write bench report: {e}"),
+    }
     let d = 128usize;
     let n = 1024usize; // cache rows per iteration
     let mut rng = Pcg64::new(3);

@@ -73,6 +73,8 @@ USAGE:
                 [--shards N]           engine shards behind the router (default 1)
                 [--balance P]          placement: round-robin|least-queued|mem-aware
                 [--decode-workers N]   decode threads per shard (0 = serial)
+                [--kernels K]          compute kernels: auto|scalar|avx2
+                                       (accepted by every command; default auto)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]
                 [--mode 16|8] [--dense]
   swan eval     [--model M] [--cases N]       run the task battery natively

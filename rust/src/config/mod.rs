@@ -82,6 +82,11 @@ pub struct ServeConfig {
     /// `shard::balance::POLICY_NAMES`): "round-robin", "least-queued" or
     /// "mem-aware".
     pub balance: String,
+    /// Compute kernel path ("auto", "scalar" or "avx2") — pinned
+    /// process-wide at startup via [`crate::simd::init_from_name`]; every
+    /// shard's engines, worker pools and cache policies dispatch through
+    /// the same selection.
+    pub kernels: String,
     /// TCP bind address for `swan serve`.
     pub bind: String,
 }
@@ -100,6 +105,7 @@ impl Default for ServeConfig {
             decode_workers: 0,
             shards: 1,
             balance: "round-robin".into(),
+            kernels: "auto".into(),
             bind: "127.0.0.1:7877".into(),
         }
     }

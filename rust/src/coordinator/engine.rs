@@ -76,6 +76,13 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Engine> {
+        // an explicit kernel choice pins the process-wide path (idempotent
+        // across shards — every engine of a fleet carries the same config
+        // value); "auto" leaves any selection an embedder already made
+        // untouched rather than re-resolving and clobbering it
+        if !matches!(cfg.kernels.as_str(), "auto" | "") {
+            crate::simd::init_from_name(&cfg.kernels)?;
+        }
         let lm = LoadedModel::open(artifacts_dir, &cfg.model)
             .with_context(|| format!("loading model {}", cfg.model))?;
         let arts = lm.store.model(&cfg.model)?;
@@ -274,18 +281,19 @@ impl Engine {
 
     fn prefill(&mut self, req: Request, k_active: usize, queue_time: std::time::Duration) -> anyhow::Result<ActiveSeq> {
         let t0 = Instant::now();
-        let prompt = if req.prompt.is_empty() { vec![0u32] } else { req.prompt.clone() };
+        // one pass, no copies: borrow the request's prompt (or a static
+        // dummy token for empty prompts) and slice the suffix in place —
+        // prompts longer than the largest bucket keep their suffix (the
+        // bucket limit is a compile-time artifact knob, not a model limit)
+        let full: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
         let cap = self
             .prefill_buckets
             .iter()
             .copied()
-            .find(|&t| t >= prompt.len())
+            .find(|&t| t >= full.len())
             .or(self.prefill_buckets.last().copied())
             .context("no prefill graphs")?;
-        // prompts longer than the largest bucket keep their suffix (the
-        // bucket limit is a compile-time artifact knob, not a model limit)
-        let prompt: Vec<u32> =
-            prompt.iter().skip(prompt.len().saturating_sub(cap)).copied().collect();
+        let prompt = &full[full.len().saturating_sub(cap)..];
 
         let mut tokens = vec![0i32; cap];
         let mut tmask = vec![0.0f32; cap];

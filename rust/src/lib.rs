@@ -21,6 +21,9 @@
 //! * [`shard`] — multi-shard serving: N engines on their own threads
 //!   behind a request router with pluggable balance policies and
 //!   fleet-wide live compression retuning.
+//! * [`simd`] — runtime-dispatched kernel layer (scalar / AVX2+FMA,
+//!   selected once at startup) behind every dense primitive and the
+//!   sparse CSR walks; `--kernels auto|scalar|avx2` pins the path.
 //! * [`eval`] / [`repro`] — the synthetic evaluation suite and one module
 //!   per paper table/figure.
 //!
@@ -53,6 +56,7 @@ pub mod repro;
 pub mod runtime;
 pub mod server;
 pub mod shard;
+pub mod simd;
 pub mod sparse;
 pub mod swan;
 pub mod tensor;

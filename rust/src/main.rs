@@ -43,6 +43,7 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.balance = args.get_str("balance", &cfg.balance);
     // fail fast on a typo'd policy name (the router re-validates at launch)
     swan::shard::balance::policy_from_name(&cfg.balance)?;
+    cfg.kernels = args.get_str("kernels", &cfg.kernels);
     cfg.mode = parse_mode(args)?;
     cfg.dense_baseline = args.has("dense");
     cfg.bind = args.get_str("bind", &cfg.bind);
@@ -50,6 +51,10 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
+    // pin the compute kernel path before anything dispatches (applies to
+    // every command; `auto` picks the best the host supports)
+    let kernels = swan::simd::init_from_name(args.get("kernels").unwrap_or("auto"))?;
+    log::debug!("kernels: {}", kernels.label());
     let artifacts = swan::artifacts_dir();
     match args.command.as_str() {
         "serve" => {

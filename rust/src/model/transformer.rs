@@ -20,7 +20,7 @@ use crate::kvcache::{CachePolicy, PolicyKind};
 use crate::model::weights::WeightFile;
 use crate::swan::batch::WorkerPool;
 use crate::swan::projection::{ProjectionSet, ProjectionVariant};
-use crate::tensor::ops::{dot, gelu, rmsnorm, softmax_inplace, vecmat};
+use crate::tensor::ops::{gelu, rmsnorm, vecmat};
 use crate::tensor::rope::apply_rope;
 use crate::util::Pcg64;
 
@@ -158,11 +158,37 @@ impl SwanModel {
     }
 
     /// Exact rotated-space prefill over `tokens` (policy-independent).
+    ///
+    /// Serial entry point: runs [`SwanModel::prefill_with_pool`] on a
+    /// thread-local serial pool, exactly like [`SwanModel::decode_step`]
+    /// wraps the batched decode — one implementation for both modes is
+    /// what makes the serial≡parallel determinism test meaningful.
     pub fn prefill(&self, tokens: &[u32]) -> Prefill {
+        thread_local! {
+            static SERIAL_POOL: std::cell::RefCell<WorkerPool> =
+                std::cell::RefCell::new(WorkerPool::serial());
+        }
+        SERIAL_POOL.with(|pool| self.prefill_with_pool(tokens, &mut pool.borrow_mut()))
+    }
+
+    /// Prefill with the per-layer work fanned across `pool`, in three
+    /// phases per layer (each task writes only its own buffers, so the
+    /// result is bit-identical to the serial loop for any pool size):
+    ///
+    /// 1. projections + RoPE + rotation — one task per token (working
+    ///    buffers live in the worker's [`AttentionScratch`] `tmp`);
+    /// 2. causal attention — one task per kv-head: the task exclusively
+    ///    owns that group's attention-mass row and output buffer and
+    ///    walks its tokens oldest-first, so per-cell accumulation order
+    ///    matches the serial loop exactly;
+    /// 3. output projection + residual + MLP — one task per token.
+    pub fn prefill_with_pool(&self, tokens: &[u32], pool: &mut WorkerPool) -> Prefill {
         let cfg = &self.cfg;
         let (t, d, dh, nq, nkv, g) =
             (tokens.len(), cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+        let (dff, theta, eps) = (cfg.d_ff, cfg.rope_theta, cfg.norm_eps);
         let scale = 1.0 / (dh as f32).sqrt();
+        let ks = crate::simd::active();
 
         let mut h: Vec<f32> = Vec::with_capacity(t * d);
         for &tok in tokens {
@@ -173,89 +199,166 @@ impl SwanModel {
         let mut vhat = vec![vec![Vec::new(); nkv]; cfg.n_layers];
         let mut mass = vec![vec![vec![0.0f32; t]; nkv]; cfg.n_layers];
 
-        let mut xn = vec![0.0f32; d];
-        let mut scores: Vec<f32> = Vec::with_capacity(t);
+        /// Phase 1 task: one token's q̂/k̂/v̂ rows.
+        struct ProjTask<'a> {
+            x: &'a [f32],
+            q: &'a mut [f32],
+            k: &'a mut [f32],
+            v: &'a mut [f32],
+            pos: u32,
+        }
+
+        /// Phase 2 task: one kv-head group's attention over all tokens.
+        struct HeadTask<'a> {
+            grp: usize,
+            kh: &'a [f32],
+            vh: &'a [f32],
+            mass: &'a mut [f32],
+            /// [t, g, d_h] flat — the group's slice of every token's
+            /// attention output row.
+            out: Vec<f32>,
+        }
+
         for (l, lw) in self.layers.iter().enumerate() {
-            // per-token q/k/v in rotated space
+            // phase 1: per-token projections into rotated q̂ and staging
+            // rows for k̂/v̂ ([t, nkv*dh]; distributed to the per-head
+            // [t, dh] output layout right after)
             let mut qh = vec![0.0f32; t * nq * dh];
+            let mut krows = vec![0.0f32; t * nkv * dh];
+            let mut vrows = vec![0.0f32; t * nkv * dh];
+            {
+                let mut tasks: Vec<ProjTask> = qh
+                    .chunks_mut(nq * dh)
+                    .zip(krows.chunks_mut(nkv * dh))
+                    .zip(vrows.chunks_mut(nkv * dh))
+                    .zip(h.chunks(d))
+                    .enumerate()
+                    .map(|(ti, (((q, k), v), x))| ProjTask { x, q, k, v, pos: ti as u32 })
+                    .collect();
+                pool.for_each_mut(&mut tasks, |scratch, tk| {
+                    // tmp layout: xn [d] | raw [max(nq, nkv) * dh]
+                    let need = d + nq.max(nkv) * dh;
+                    if scratch.tmp.len() < need {
+                        scratch.tmp.resize(need, 0.0);
+                    }
+                    let (xn, raw) = scratch.tmp.split_at_mut(d);
+                    ks.rmsnorm(tk.x, &lw.attn_norm, eps, xn);
+                    let qraw = &mut raw[..nq * dh];
+                    ks.vecmat(xn, &lw.wq, d, nq * dh, qraw);
+                    for j in 0..nq {
+                        apply_rope(&mut qraw[j * dh..(j + 1) * dh], tk.pos, theta);
+                        self.proj.rotate_qk(
+                            l,
+                            j / g,
+                            &qraw[j * dh..(j + 1) * dh],
+                            &mut tk.q[j * dh..(j + 1) * dh],
+                        );
+                    }
+                    let kraw = &mut raw[..nkv * dh];
+                    ks.vecmat(xn, &lw.wk, d, nkv * dh, kraw);
+                    for hd in 0..nkv {
+                        apply_rope(&mut kraw[hd * dh..(hd + 1) * dh], tk.pos, theta);
+                        self.proj.rotate_qk(
+                            l,
+                            hd,
+                            &kraw[hd * dh..(hd + 1) * dh],
+                            &mut tk.k[hd * dh..(hd + 1) * dh],
+                        );
+                    }
+                    ks.vecmat(xn, &lw.wv_hat, d, nkv * dh, tk.v);
+                });
+            }
             let kh_l = &mut khat[l];
             let vh_l = &mut vhat[l];
             for hd in 0..nkv {
                 kh_l[hd] = vec![0.0; t * dh];
                 vh_l[hd] = vec![0.0; t * dh];
-            }
-            let mut qraw = vec![0.0f32; nq * dh];
-            let mut kraw = vec![0.0f32; nkv * dh];
-            let mut vr = vec![0.0f32; nkv * dh];
-            for ti in 0..t {
-                let x = &h[ti * d..(ti + 1) * d];
-                rmsnorm(x, &lw.attn_norm, cfg.norm_eps, &mut xn);
-                vecmat(&xn, &lw.wq, d, nq * dh, &mut qraw);
-                vecmat(&xn, &lw.wk, d, nkv * dh, &mut kraw);
-                vecmat(&xn, &lw.wv_hat, d, nkv * dh, &mut vr);
-                for j in 0..nq {
-                    apply_rope(&mut qraw[j * dh..(j + 1) * dh], ti as u32, cfg.rope_theta);
-                    self.proj.rotate_qk(
-                        l,
-                        j / g,
-                        &qraw[j * dh..(j + 1) * dh].to_vec(),
-                        &mut qh[(ti * nq + j) * dh..(ti * nq + j + 1) * dh],
-                    );
-                }
-                for hd in 0..nkv {
-                    apply_rope(&mut kraw[hd * dh..(hd + 1) * dh], ti as u32, cfg.rope_theta);
-                    let mut rot = vec![0.0f32; dh];
-                    self.proj
-                        .rotate_qk(l, hd, &kraw[hd * dh..(hd + 1) * dh].to_vec(), &mut rot);
-                    kh_l[hd][ti * dh..(ti + 1) * dh].copy_from_slice(&rot);
+                for ti in 0..t {
+                    let src = (ti * nkv + hd) * dh;
+                    kh_l[hd][ti * dh..(ti + 1) * dh]
+                        .copy_from_slice(&krows[src..src + dh]);
                     vh_l[hd][ti * dh..(ti + 1) * dh]
-                        .copy_from_slice(&vr[hd * dh..(hd + 1) * dh]);
+                        .copy_from_slice(&vrows[src..src + dh]);
                 }
             }
-            // causal attention + residual
-            let mut attn_out = vec![0.0f32; nq * dh];
-            for ti in 0..t {
-                for j in 0..nq {
-                    let grp = j / g;
-                    let q = &qh[(ti * nq + j) * dh..(ti * nq + j + 1) * dh];
-                    scores.clear();
-                    for s in 0..=ti {
-                        scores.push(dot(&kh_l[grp][s * dh..(s + 1) * dh], q) * scale);
-                    }
-                    softmax_inplace(&mut scores);
-                    let o = &mut attn_out[j * dh..(j + 1) * dh];
-                    o.iter_mut().for_each(|x| *x = 0.0);
-                    for s in 0..=ti {
-                        let w = scores[s];
-                        mass[l][grp][s] += w;
-                        for (oo, vv) in o.iter_mut().zip(&vh_l[grp][s * dh..(s + 1) * dh]) {
-                            *oo += w * vv;
+
+            // phase 2: causal attention, one task per kv-head group
+            let mut gtasks: Vec<HeadTask> = kh_l
+                .iter()
+                .zip(vh_l.iter())
+                .zip(mass[l].iter_mut())
+                .enumerate()
+                .map(|(grp, ((kh, vh), mass_g))| HeadTask {
+                    grp,
+                    kh: kh.as_slice(),
+                    vh: vh.as_slice(),
+                    mass: mass_g.as_mut_slice(),
+                    out: vec![0.0f32; t * g * dh],
+                })
+                .collect();
+            pool.for_each_mut(&mut gtasks, |scratch, gt| {
+                let scores = &mut scratch.scores;
+                for ti in 0..t {
+                    for jg in 0..g {
+                        let j = gt.grp * g + jg;
+                        let q = &qh[(ti * nq + j) * dh..(ti * nq + j + 1) * dh];
+                        scores.clear();
+                        scores.reserve(ti + 1);
+                        let mut m = f32::NEG_INFINITY;
+                        for s in 0..=ti {
+                            let sc = ks.dot(&gt.kh[s * dh..(s + 1) * dh], q) * scale;
+                            m = m.max(sc);
+                            scores.push(sc);
+                        }
+                        ks.softmax_inplace_with_max(scores, m);
+                        let o = &mut gt.out[(ti * g + jg) * dh..(ti * g + jg + 1) * dh];
+                        o.iter_mut().for_each(|x| *x = 0.0);
+                        for s in 0..=ti {
+                            gt.mass[s] += scores[s];
+                            ks.axpy(scores[s], &gt.vh[s * dh..(s + 1) * dh], o);
                         }
                     }
                 }
-                let mut proj_out = vec![0.0f32; d];
-                vecmat(&attn_out, &lw.wo_hat, nq * dh, d, &mut proj_out);
-                let hrow = &mut h[ti * d..(ti + 1) * d];
-                for (hr, po) in hrow.iter_mut().zip(&proj_out) {
-                    *hr += po;
+            });
+            let attn_groups: Vec<Vec<f32>> = gtasks.into_iter().map(|gt| gt.out).collect();
+
+            // phase 3: output projection + residual + MLP, one task per token
+            let mut otasks: Vec<(usize, &mut [f32])> =
+                h.chunks_mut(d).enumerate().collect();
+            pool.for_each_mut(&mut otasks, |scratch, task| {
+                let ti = task.0;
+                let hrow = &mut *task.1;
+                // tmp layout: arow [nq*dh] | xn [d] | proj [d] | mid [dff] | back [d]
+                let need = nq * dh + 3 * d + dff;
+                if scratch.tmp.len() < need {
+                    scratch.tmp.resize(need, 0.0);
                 }
-                // MLP
-                let hrow_copy = h[ti * d..(ti + 1) * d].to_vec();
-                rmsnorm(&hrow_copy, &lw.mlp_norm, cfg.norm_eps, &mut xn);
-                let mut mid = vec![0.0f32; cfg.d_ff];
-                vecmat(&xn, &lw.w1, d, cfg.d_ff, &mut mid);
+                let (arow, rest) = scratch.tmp.split_at_mut(nq * dh);
+                let (xn, rest) = rest.split_at_mut(d);
+                let (proj_out, rest) = rest.split_at_mut(d);
+                let (mid, rest) = rest.split_at_mut(dff);
+                let back = &mut rest[..d];
+                for (grp, gout) in attn_groups.iter().enumerate() {
+                    arow[grp * g * dh..(grp + 1) * g * dh]
+                        .copy_from_slice(&gout[ti * g * dh..(ti + 1) * g * dh]);
+                }
+                ks.vecmat(arow, &lw.wo_hat, nq * dh, d, proj_out);
+                for (hr, po) in hrow.iter_mut().zip(proj_out.iter()) {
+                    *hr += *po;
+                }
+                ks.rmsnorm(hrow, &lw.mlp_norm, eps, xn);
+                ks.vecmat(xn, &lw.w1, d, dff, mid);
                 mid.iter_mut().for_each(|m| *m = gelu(*m));
-                let mut back = vec![0.0f32; d];
-                vecmat(&mid, &lw.w2, cfg.d_ff, d, &mut back);
-                let hrow = &mut h[ti * d..(ti + 1) * d];
-                for (hr, b) in hrow.iter_mut().zip(&back) {
-                    *hr += b;
+                ks.vecmat(mid, &lw.w2, dff, d, back);
+                for (hr, b) in hrow.iter_mut().zip(back.iter()) {
+                    *hr += *b;
                 }
-            }
+            });
         }
 
+        let mut xn = vec![0.0f32; d];
         let last = &h[(t - 1) * d..t * d];
-        rmsnorm(last, &self.final_norm, cfg.norm_eps, &mut xn);
+        rmsnorm(last, &self.final_norm, eps, &mut xn);
         let mut logits = vec![0.0f32; cfg.vocab];
         vecmat(&xn, &self.lm_head, d, cfg.vocab, &mut logits);
 

@@ -1,0 +1,258 @@
+//! AVX2 + FMA kernels (x86_64).
+//!
+//! Every function is `#[target_feature]`-gated and therefore `unsafe fn`:
+//! the dispatch layer ([`crate::simd::Kernels`]) only constructs the Avx2
+//! kind after `is_x86_feature_detected!("avx2") && ("fma")`, which is the
+//! soundness argument for every call site.
+//!
+//! Numerics: FMA contraction (`dot`, `axpy`) and 8-lane accumulation
+//! trees mean reductions differ from the scalar path in rounding only
+//! (property-tested tolerance in `tests/prop_invariants.rs`).  Ops whose
+//! per-element arithmetic matches scalar exactly (softmax's scale phase,
+//! rmsnorm's final multiply, the CSR scatter-add) stay bit-identical
+//! given the same inputs.  `max` is order-insensitive, so `max_fold` is
+//! exact (inputs here are finite or `-inf`, never NaN — `vmaxps` NaN
+//! semantics don't apply).
+
+#![allow(clippy::missing_safety_doc)] // one safety contract, stated at module level
+
+use std::arch::x86_64::*;
+
+/// Horizontal sum of 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+/// Horizontal max of 8 lanes.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hmax(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let m = _mm_max_ps(lo, hi);
+    let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+    let m = _mm_max_ss(m, _mm_shuffle_ps::<1>(m, m));
+    _mm_cvtss_f32(m)
+}
+
+/// Dot product: two 8-lane FMA accumulators (16 floats/iter).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        i += 16;
+    }
+    if i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let mut s = hsum(_mm256_add_ps(acc0, acc1));
+    while i < n {
+        s += *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+    s
+}
+
+/// out += w * row (8-lane FMA; per-element arithmetic identical to scalar).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy(w: f32, row: &[f32], out: &mut [f32]) {
+    let n = row.len();
+    let vw = _mm256_set1_ps(w);
+    let pr = row.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let o = _mm256_loadu_ps(po.add(i));
+        _mm256_storeu_ps(po.add(i), _mm256_fmadd_ps(vw, _mm256_loadu_ps(pr.add(i)), o));
+        i += 8;
+    }
+    while i < n {
+        *po.add(i) += w * *pr.add(i);
+        i += 1;
+    }
+}
+
+/// y[n] = x[m] @ a[m,n]: zero y, then one 8-lane axpy per non-zero x row.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn vecmat(x: &[f32], a: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        axpy(xi, &a[i * n..(i + 1) * n], y);
+    }
+}
+
+/// Maximum element (`NEG_INFINITY` when empty).
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn max_fold(x: &[f32]) -> f32 {
+    let n = x.len();
+    let p = x.as_ptr();
+    let mut m = f32::NEG_INFINITY;
+    let mut i = 0usize;
+    if n >= 8 {
+        let mut vm = _mm256_loadu_ps(p);
+        i = 8;
+        while i + 8 <= n {
+            vm = _mm256_max_ps(vm, _mm256_loadu_ps(p.add(i)));
+            i += 8;
+        }
+        m = hmax(vm);
+    }
+    while i < n {
+        m = m.max(*p.add(i));
+        i += 1;
+    }
+    m
+}
+
+/// exp/sum/scale phase of softmax; `m` is the (finite) maximum.  The
+/// exp+sum loop is scalar (shared arithmetic with the scalar path keeps
+/// softmax bit-exact across kernels); only the final scale is 8-lane.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn softmax_with_max(x: &mut [f32], m: f32) {
+    let mut z = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    let n = x.len();
+    let p = x.as_mut_ptr();
+    let vi = _mm256_set1_ps(inv);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), vi));
+        i += 8;
+    }
+    while i < n {
+        *p.add(i) *= inv;
+        i += 1;
+    }
+}
+
+/// RMSNorm: out = (x * r) * w with the mean-square via the AVX2 dot.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = dot(x, x) / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    let n = x.len();
+    let vr = _mm256_set1_ps(r);
+    let px = x.as_ptr();
+    let pw = w.as_ptr();
+    let po = out.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let xr = _mm256_mul_ps(_mm256_loadu_ps(px.add(i)), vr);
+        _mm256_storeu_ps(po.add(i), _mm256_mul_ps(xr, _mm256_loadu_ps(pw.add(i))));
+        i += 8;
+    }
+    while i < n {
+        *po.add(i) = *px.add(i) * r * *pw.add(i);
+        i += 1;
+    }
+}
+
+/// Fused CSR scores + running max.  The inner loop is the vectorized
+/// gather walk: 8 u16 indices widen to i32 (`vpmovzxwd`), gather 8 query
+/// lanes (`vgatherdps`), FMA against the stored values.  Lane-padded rows
+/// (multiples of 8) run with no scalar tail — that layout is what
+/// `SparseStore::with_lanes(8)` provides.
+///
+/// Safety (beyond target features): every `idx[j] < q.len()` — validated
+/// by `SparseStore` at insertion time.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn csr_scores_max_into(
+    vals: &[f32],
+    idx: &[u16],
+    offsets: &[u32],
+    scale: f32,
+    q: &[f32],
+    out: &mut Vec<f32>,
+) -> f32 {
+    let rows = offsets.len() - 1;
+    out.reserve(rows);
+    let qp = q.as_ptr();
+    let mut m = f32::NEG_INFINITY;
+    for r in 0..rows {
+        let lo = *offsets.get_unchecked(r) as usize;
+        let hi = *offsets.get_unchecked(r + 1) as usize;
+        let n = hi - lo;
+        let vp = vals.as_ptr().add(lo);
+        let ip = idx.as_ptr().add(lo);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let raw = _mm_loadu_si128(ip.add(j) as *const __m128i);
+            let idx32 = _mm256_cvtepu16_epi32(raw);
+            let gathered = _mm256_i32gather_ps::<4>(qp, idx32);
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(vp.add(j)), gathered, acc);
+            j += 8;
+        }
+        let mut s = hsum(acc);
+        while j < n {
+            s += *vp.add(j) * *qp.add(*ip.add(j) as usize);
+            j += 1;
+        }
+        let s = s * scale;
+        m = m.max(s);
+        out.push(s);
+    }
+    m
+}
+
+/// Weighted scatter-add of all rows.  AVX2 has no scatter instruction, so
+/// the products are formed 8 lanes at a time and committed with scalar
+/// read-modify-writes (bit-identical to the scalar walk: same per-element
+/// multiply, same in-row commit order).
+///
+/// Safety (beyond target features): every `idx[j] < out.len()`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn csr_axpy_all(vals: &[f32], idx: &[u16], offsets: &[u32], w: &[f32], out: &mut [f32]) {
+    let rows = offsets.len() - 1;
+    let mut buf = [0.0f32; 8];
+    for r in 0..rows {
+        let lo = *offsets.get_unchecked(r) as usize;
+        let hi = *offsets.get_unchecked(r + 1) as usize;
+        let n = hi - lo;
+        let wr = *w.get_unchecked(r);
+        let vw = _mm256_set1_ps(wr);
+        let vp = vals.as_ptr().add(lo);
+        let ip = idx.as_ptr().add(lo);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            _mm256_storeu_ps(buf.as_mut_ptr(), _mm256_mul_ps(vw, _mm256_loadu_ps(vp.add(j))));
+            for (l, &p) in buf.iter().enumerate() {
+                let i = *ip.add(j + l) as usize;
+                *out.get_unchecked_mut(i) += p;
+            }
+            j += 8;
+        }
+        while j < n {
+            let i = *ip.add(j) as usize;
+            *out.get_unchecked_mut(i) += wr * *vp.add(j);
+            j += 1;
+        }
+    }
+}

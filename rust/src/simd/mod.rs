@@ -1,0 +1,443 @@
+//! Runtime-dispatched SIMD kernel layer.
+//!
+//! The decompression-free CSR walk and the dense primitives behind it are
+//! the serving hot path (no decompression step means the kernel *is* the
+//! request latency).  This module provides every hot primitive in two
+//! implementations:
+//!
+//! * [`scalar`] — the portable reference (the unrolled loops that used to
+//!   live inline in `tensor::ops` / `sparse::store`), and
+//! * [`avx2`] — 8-lane AVX2+FMA paths (`vfmadd` dots, `vgatherdps` CSR
+//!   score gathers), compiled on x86_64 and selected only when the CPU
+//!   reports the features at runtime.
+//!
+//! Selection happens **once**: [`active`] detects the best path on first
+//! use (honouring the `SWAN_KERNELS` env var), and the CLI's `--kernels
+//! auto|scalar|avx2` flag pins it at startup via [`init_from_name`].  All
+//! downstream layers — `tensor::ops`, `SparseStore`, the attention
+//! kernels, batch decode, shard engines — go through the same dispatch,
+//! so a single switch flips the whole stack.
+//!
+//! # Numerics contract
+//!
+//! Kernel paths may differ in floating-point *accumulation order* (8-lane
+//! trees vs 2/4-way unrolls), so cross-path results agree to tight
+//! tolerance, not bit-for-bit — `tests/prop_invariants.rs` locks the
+//! tolerance down for every primitive.  Within one path, results are
+//! deterministic: the serial≡parallel guarantees of `swan::batch` and the
+//! prefill fan-out are unaffected because every worker dispatches to the
+//! same active kernel.  `softmax` is the exception that stays bit-exact
+//! across paths: `max` is order-insensitive and the exp/sum loop is
+//! shared, so only provably-identical element-wise ops differ.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which implementation a [`Kernels`] instance dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable unrolled loops (every host).
+    Scalar,
+    /// AVX2 + FMA, 8 x f32 lanes (x86_64 hosts that report the features).
+    Avx2,
+}
+
+/// A selected kernel implementation.  The inner kind is private: `Avx2`
+/// instances can only be obtained through the feature-checked
+/// constructors, which is what makes the `unsafe` target-feature calls in
+/// the dispatch methods sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels(KernelKind);
+
+/// Dispatch to the scalar or (feature-checked) AVX2 implementation.  On
+/// non-x86_64 builds the Avx2 arm falls back to scalar; such an instance
+/// cannot be constructed there, the arm just keeps the match total.
+macro_rules! dispatch {
+    ($kind:expr, $scalar:expr, $avx2:expr) => {
+        match $kind {
+            KernelKind::Scalar => $scalar,
+            #[cfg(target_arch = "x86_64")]
+            KernelKind::Avx2 => $avx2,
+            #[cfg(not(target_arch = "x86_64"))]
+            KernelKind::Avx2 => $scalar,
+        }
+    };
+}
+
+impl Kernels {
+    /// The portable reference path (always available).
+    pub const fn scalar() -> Kernels {
+        Kernels(KernelKind::Scalar)
+    }
+
+    /// The AVX2+FMA path, if this host supports it.
+    pub fn avx2() -> Option<Kernels> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Some(Kernels(KernelKind::Avx2));
+            }
+        }
+        None
+    }
+
+    /// Every path this host can run (scalar first).
+    pub fn available() -> Vec<Kernels> {
+        let mut v = vec![Kernels::scalar()];
+        if let Some(k) = Kernels::avx2() {
+            v.push(k);
+        }
+        v
+    }
+
+    /// The best path the hardware supports, ignoring overrides.
+    fn hw_best() -> Kernels {
+        Kernels::avx2().unwrap_or(Kernels::scalar())
+    }
+
+    /// Best path for this host, honouring a `SWAN_KERNELS` override
+    /// (`scalar`, `avx2` or `auto`).  Unlike `--kernels`, an env override
+    /// cannot abort startup, so an unsupported `avx2` or a typo'd value
+    /// falls back to hardware detection — with a warning, never silently.
+    pub fn detect() -> Kernels {
+        match std::env::var("SWAN_KERNELS").as_deref() {
+            Ok("scalar") => Kernels::scalar(),
+            Ok("avx2") => Kernels::avx2().unwrap_or_else(|| {
+                log::warn!("SWAN_KERNELS=avx2 but this host lacks AVX2+FMA; using scalar");
+                Kernels::scalar()
+            }),
+            Ok("auto") | Ok("") | Err(_) => Kernels::hw_best(),
+            Ok(other) => {
+                log::warn!("SWAN_KERNELS='{other}' not recognised (auto|scalar|avx2); auto-detecting");
+                Kernels::hw_best()
+            }
+        }
+    }
+
+    /// Parse a `--kernels` value.  `auto` resolves through
+    /// [`Kernels::detect`] (so a `SWAN_KERNELS` env override survives the
+    /// CLI's and `Engine::new`'s default-`auto` re-pin); `avx2` errors on
+    /// hosts without the features (rather than silently degrading, so a
+    /// pinned production config fails loudly).
+    pub fn from_name(name: &str) -> anyhow::Result<Kernels> {
+        match name {
+            "scalar" => Ok(Kernels::scalar()),
+            "avx2" => Kernels::avx2().ok_or_else(|| {
+                anyhow::anyhow!("avx2 kernels requested but this host lacks AVX2+FMA")
+            }),
+            "auto" | "" => Ok(Kernels::detect()),
+            other => anyhow::bail!("--kernels must be auto, scalar or avx2, got '{other}'"),
+        }
+    }
+
+    pub fn kind(&self) -> KernelKind {
+        self.0
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self.0 {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+
+    /// Preferred f32 lane width: the multiple [`crate::sparse::SparseStore`]
+    /// rows are padded to so the CSR gather loop runs with no scalar tail.
+    pub fn lanes(&self) -> usize {
+        match self.0 {
+            KernelKind::Scalar => 1,
+            KernelKind::Avx2 => 8,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // dense primitives
+    // ------------------------------------------------------------------
+
+    /// Dot product.
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        dispatch!(self.0, scalar::dot(a, b), unsafe { avx2::dot(a, b) })
+    }
+
+    /// y[n] = x[m] @ a[m,n] (row-major `a`).
+    #[inline]
+    pub fn vecmat(&self, x: &[f32], a: &[f32], m: usize, n: usize, y: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(x.len(), m);
+        debug_assert_eq!(y.len(), n);
+        dispatch!(self.0, scalar::vecmat(x, a, m, n, y), unsafe {
+            avx2::vecmat(x, a, m, n, y)
+        })
+    }
+
+    /// out += w * row.
+    #[inline]
+    pub fn axpy(&self, w: f32, row: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(row.len(), out.len());
+        dispatch!(self.0, scalar::axpy(w, row, out), unsafe { avx2::axpy(w, row, out) })
+    }
+
+    /// Maximum element (`NEG_INFINITY` for an empty slice).
+    #[inline]
+    pub fn max_fold(&self, x: &[f32]) -> f32 {
+        dispatch!(self.0, scalar::max_fold(x), unsafe { avx2::max_fold(x) })
+    }
+
+    /// In-place numerically-stable softmax.
+    #[inline]
+    pub fn softmax_inplace(&self, x: &mut [f32]) {
+        let m = self.max_fold(x);
+        self.softmax_inplace_with_max(x, m);
+    }
+
+    /// Softmax when the caller already knows `max(x)` — the fused
+    /// scores+running-max CSR walk feeds this so the softmax drops its
+    /// max pass.  `m` MUST equal the true maximum (the `-inf`-masked
+    /// uniform fallback is keyed off it).
+    #[inline]
+    pub fn softmax_inplace_with_max(&self, x: &mut [f32], m: f32) {
+        if !m.is_finite() {
+            // all -inf (or empty): define as uniform to avoid NaN —
+            // callers mask at least one live slot in practice
+            let u = 1.0 / x.len() as f32;
+            x.iter_mut().for_each(|v| *v = u);
+            return;
+        }
+        dispatch!(self.0, scalar::softmax_with_max(x, m), unsafe {
+            avx2::softmax_with_max(x, m)
+        })
+    }
+
+    /// RMSNorm: out = x * rsqrt(mean(x^2) + eps) * w.
+    #[inline]
+    pub fn rmsnorm(&self, x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), w.len());
+        debug_assert_eq!(x.len(), out.len());
+        dispatch!(self.0, scalar::rmsnorm(x, w, eps, out), unsafe {
+            avx2::rmsnorm(x, w, eps, out)
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // sparse CSR walks (the decompression-free hot path)
+    // ------------------------------------------------------------------
+    //
+    // Layout contract (shared with `SparseStore`): `offsets.len() == rows
+    // + 1`, row r spans `vals[offsets[r]..offsets[r+1]]` in lock-step with
+    // `idx`, and every index satisfies `idx[j] < q.len()` (resp.
+    // `out.len()`) — validated at insertion, which is what makes the
+    // unchecked gathers sound.  Zero-padded sentinel entries (value 0.0,
+    // index 0) contribute nothing to either walk.
+
+    /// Scores for all rows: `out.push(sum_j vals[r,j] * q[idx[r,j]] * scale)`.
+    #[inline]
+    pub fn csr_scores_into(
+        &self,
+        vals: &[f32],
+        idx: &[u16],
+        offsets: &[u32],
+        scale: f32,
+        q: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        self.csr_scores_max_into(vals, idx, offsets, scale, q, out);
+    }
+
+    /// Fused scores + running max: as [`Kernels::csr_scores_into`], also
+    /// returning the maximum pushed score (`NEG_INFINITY` when there are
+    /// no rows) so the downstream softmax can skip its max pass.
+    #[inline]
+    pub fn csr_scores_max_into(
+        &self,
+        vals: &[f32],
+        idx: &[u16],
+        offsets: &[u32],
+        scale: f32,
+        q: &[f32],
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        dispatch!(
+            self.0,
+            scalar::csr_scores_max_into(vals, idx, offsets, scale, q, out),
+            unsafe { avx2::csr_scores_max_into(vals, idx, offsets, scale, q, out) }
+        )
+    }
+
+    /// Weighted scatter-add of all rows: `out[idx[r,j]] += w[r] * vals[r,j]`.
+    #[inline]
+    pub fn csr_axpy_all(
+        &self,
+        vals: &[f32],
+        idx: &[u16],
+        offsets: &[u32],
+        w: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(w.len(), offsets.len() - 1);
+        dispatch!(self.0, scalar::csr_axpy_all(vals, idx, offsets, w, out), unsafe {
+            avx2::csr_axpy_all(vals, idx, offsets, w, out)
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// process-wide selection
+// ----------------------------------------------------------------------
+
+const CODE_UNSET: u8 = 0;
+const CODE_SCALAR: u8 = 1;
+const CODE_AVX2: u8 = 2;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(CODE_UNSET);
+
+/// The process-wide active kernel set.  First use runs [`Kernels::detect`]
+/// and caches the result; [`set_active`] / [`init_from_name`] override it
+/// (the CLI does this once at startup).
+#[inline]
+pub fn active() -> Kernels {
+    match ACTIVE.load(Ordering::Relaxed) {
+        CODE_SCALAR => Kernels(KernelKind::Scalar),
+        CODE_AVX2 => Kernels(KernelKind::Avx2),
+        _ => {
+            let k = Kernels::detect();
+            set_active(k);
+            k
+        }
+    }
+}
+
+/// Pin the process-wide kernel set.  Safe at any time (an atomic swap);
+/// in-flight attention calls finish on the path they started with.
+pub fn set_active(k: Kernels) {
+    let code = match k.kind() {
+        KernelKind::Scalar => CODE_SCALAR,
+        KernelKind::Avx2 => CODE_AVX2,
+    };
+    ACTIVE.store(code, Ordering::Relaxed);
+}
+
+/// Parse a `--kernels` value and pin the process-wide selection to it.
+pub fn init_from_name(name: &str) -> anyhow::Result<Kernels> {
+    let k = Kernels::from_name(name)?;
+    set_active(k);
+    Ok(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn scalar_always_available_and_labelled() {
+        let ks = Kernels::available();
+        assert_eq!(ks[0], Kernels::scalar());
+        assert_eq!(ks[0].label(), "scalar");
+        assert_eq!(ks[0].lanes(), 1);
+        for k in &ks[1..] {
+            assert_eq!(k.label(), "avx2");
+            assert_eq!(k.lanes(), 8);
+        }
+    }
+
+    #[test]
+    fn from_name_parses_and_rejects() {
+        assert_eq!(Kernels::from_name("scalar").unwrap(), Kernels::scalar());
+        assert!(Kernels::from_name("auto").is_ok());
+        assert!(Kernels::from_name("neon").is_err());
+        match Kernels::avx2() {
+            Some(k) => assert_eq!(Kernels::from_name("avx2").unwrap(), k),
+            None => assert!(Kernels::from_name("avx2").is_err()),
+        }
+    }
+
+    /// The global selection resolves to something this host can run.
+    /// (Flipping it is covered in `tests/prop_invariants.rs`, a separate
+    /// process — lib tests run concurrently and some assert exact
+    /// equality between two dispatched calls, so none may flip the
+    /// global mid-run.)
+    #[test]
+    fn active_resolves_to_an_available_path() {
+        let k = active();
+        assert!(Kernels::available().contains(&k));
+        set_active(k); // idempotent re-pin
+        assert_eq!(active(), k);
+    }
+
+    /// Every available path agrees with scalar on every primitive (the
+    /// exhaustive sweep lives in tests/prop_invariants.rs; this is the
+    /// in-module smoke check).
+    #[test]
+    fn paths_agree_on_dense_primitives() {
+        let mut r = Pcg64::new(41);
+        let sc = Kernels::scalar();
+        for k in Kernels::available() {
+            for n in [1usize, 7, 8, 9, 16, 33, 100] {
+                let a = r.normal_vec(n);
+                let b = r.normal_vec(n);
+                assert!(close(k.dot(&a, &b), sc.dot(&a, &b), 1e-5), "dot n={n} {}", k.label());
+
+                let mut x1 = a.clone();
+                let mut x2 = a.clone();
+                k.softmax_inplace(&mut x1);
+                sc.softmax_inplace(&mut x2);
+                // softmax is bit-exact across paths (shared exp/sum loop)
+                assert_eq!(x1, x2, "softmax n={n} {}", k.label());
+
+                let w = r.normal_vec(n);
+                let mut o1 = vec![0.0; n];
+                let mut o2 = vec![0.0; n];
+                k.rmsnorm(&a, &w, 1e-5, &mut o1);
+                sc.rmsnorm(&a, &w, 1e-5, &mut o2);
+                for (p, q) in o1.iter().zip(&o2) {
+                    assert!(close(*p, *q, 1e-5), "rmsnorm n={n} {}", k.label());
+                }
+
+                let mut y1 = b.clone();
+                let mut y2 = b.clone();
+                k.axpy(0.3, &a, &mut y1);
+                sc.axpy(0.3, &a, &mut y2);
+                for (p, q) in y1.iter().zip(&y2) {
+                    assert!(close(*p, *q, 1e-5), "axpy n={n} {}", k.label());
+                }
+            }
+            let (m, n) = (13, 19);
+            let x = r.normal_vec(m);
+            let a = r.normal_vec(m * n);
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            k.vecmat(&x, &a, m, n, &mut y1);
+            sc.vecmat(&x, &a, m, n, &mut y2);
+            for (p, q) in y1.iter().zip(&y2) {
+                assert!(close(*p, *q, 1e-4), "vecmat {}", k.label());
+            }
+        }
+    }
+
+    #[test]
+    fn max_fold_handles_empty_and_neg_inf() {
+        for k in Kernels::available() {
+            assert_eq!(k.max_fold(&[]), f32::NEG_INFINITY);
+            assert_eq!(k.max_fold(&[f32::NEG_INFINITY; 11]), f32::NEG_INFINITY);
+            let mut v = vec![f32::NEG_INFINITY; 10];
+            v[7] = 2.5;
+            assert_eq!(k.max_fold(&v), 2.5);
+            let mut x = v.clone();
+            k.softmax_inplace(&mut x);
+            assert_eq!(x[7], 1.0);
+            assert_eq!(x[0], 0.0);
+        }
+    }
+}

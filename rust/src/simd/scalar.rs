@@ -1,0 +1,138 @@
+//! Portable scalar kernels — the reference implementations every other
+//! path is property-tested against.
+//!
+//! These are the unrolled loops that previously lived inline in
+//! `tensor::ops` and `sparse::store`, moved here verbatim so the scalar
+//! path of the dispatch layer is bit-identical to the pre-dispatch
+//! behaviour (goldens and determinism tests carry over unchanged).
+
+/// Dot product, manually unrolled 4-wide.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y[n] = x[m] @ a[m,n] (row-major `a`), with the zero-row skip.
+pub fn vecmat(x: &[f32], a: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    y.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &a[i * n..(i + 1) * n];
+        for (yj, aij) in y.iter_mut().zip(row) {
+            *yj += xi * aij;
+        }
+    }
+}
+
+/// out += w * row.
+#[inline]
+pub fn axpy(w: f32, row: &[f32], out: &mut [f32]) {
+    for (o, x) in out.iter_mut().zip(row) {
+        *o += w * x;
+    }
+}
+
+/// Maximum element (`NEG_INFINITY` when empty).
+#[inline]
+pub fn max_fold(x: &[f32]) -> f32 {
+    x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+/// exp/sum/scale phase of softmax; `m` is the (finite) maximum.
+pub fn softmax_with_max(x: &mut [f32], m: f32) {
+    let mut z = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    x.iter_mut().for_each(|v| *v *= inv);
+}
+
+/// RMSNorm: out = x * rsqrt(mean(x^2) + eps) * w.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = dot(x, x) / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * r * wi;
+    }
+}
+
+/// CSR scores with fused running max: `out.push(row · q * scale)` per row,
+/// returning the max pushed score.  Contiguous walk; the inner gather uses
+/// unchecked indexing (indices are validated at insertion: every
+/// `idx < d_h <= q.len()`) with 2-way unrolling to hide gather latency.
+pub fn csr_scores_max_into(
+    vals: &[f32],
+    idx: &[u16],
+    offsets: &[u32],
+    scale: f32,
+    q: &[f32],
+    out: &mut Vec<f32>,
+) -> f32 {
+    let rows = offsets.len() - 1;
+    out.reserve(rows);
+    let mut m = f32::NEG_INFINITY;
+    for r in 0..rows {
+        let lo = offsets[r] as usize;
+        let hi = offsets[r + 1] as usize;
+        let vals = &vals[lo..hi];
+        let idx = &idx[lo..hi];
+        let n = vals.len();
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        let pairs = n / 2;
+        // SAFETY: idx entries are < d_h (checked at push), q.len() >= d_h
+        // (debug-asserted by callers), and j bounds follow from `pairs`.
+        unsafe {
+            for p in 0..pairs {
+                let j = 2 * p;
+                s0 += vals.get_unchecked(j) * q.get_unchecked(*idx.get_unchecked(j) as usize);
+                s1 += vals.get_unchecked(j + 1)
+                    * q.get_unchecked(*idx.get_unchecked(j + 1) as usize);
+            }
+            if n % 2 == 1 {
+                s0 += vals.get_unchecked(n - 1)
+                    * q.get_unchecked(*idx.get_unchecked(n - 1) as usize);
+            }
+        }
+        let s = (s0 + s1) * scale;
+        m = m.max(s);
+        out.push(s);
+    }
+    m
+}
+
+/// Weighted scatter-add of all rows: `out[idx[r,j]] += w[r] * vals[r,j]`.
+pub fn csr_axpy_all(vals: &[f32], idx: &[u16], offsets: &[u32], w: &[f32], out: &mut [f32]) {
+    let rows = offsets.len() - 1;
+    for r in 0..rows {
+        let lo = offsets[r] as usize;
+        let hi = offsets[r + 1] as usize;
+        let wr = w[r];
+        // SAFETY: idx entries < d_h <= out.len() (validated at push).
+        unsafe {
+            for j in lo..hi {
+                let i = *idx.get_unchecked(j) as usize;
+                *out.get_unchecked_mut(i) += wr * vals.get_unchecked(j);
+            }
+        }
+    }
+}

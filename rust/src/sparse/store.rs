@@ -6,34 +6,83 @@
 //! all rows into three flat arrays (values, indices, offsets) — the
 //! actual CSR layout §5.1 accounts for — so the score/output loops stream
 //! contiguous memory exactly like the dense baseline does.
+//!
+//! # Lane padding
+//!
+//! A store built with [`SparseStore::with_lanes`] zero-pads every row to
+//! a multiple of the kernel lane width (value `0.0`, index `0` sentinels)
+//! so the AVX2 gather walk runs with no scalar tail.  The *real* nnz of
+//! each row is kept in offsets-adjacent metadata (`nnz`), which is what
+//! [`SparseStore::row`]/[`SparseStore::nnz`] report and what the Eq. 1
+//! byte accounting charges — padding changes neither results (sentinels
+//! contribute exactly zero to scores and scatter-adds) nor accounting.
+//!
+//! Note on accounting: Eq. 1 models the *serving representation* the
+//! paper costs out, not process RSS — this store already holds f32s in
+//! memory while charging f16/f8 bytes, and the sentinel slots follow the
+//! same convention (real heap, zero charged bytes).  At worst (lane 8,
+//! `k_active % 8 == 1`) padding adds 7 slots/row of working memory that
+//! the `mem_budget` admission model does not see.
 
+use crate::simd::Kernels;
 use crate::sparse::memory::StorageMode;
 use crate::sparse::topk::topk_indices_select;
 use crate::util::fp::{quantize_f16, quantize_fp8};
 
 /// Flat CSR store of winnowed rows, append-only.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SparseStore {
     vals: Vec<f32>,
     idx: Vec<u16>,
-    /// Row boundaries; offsets.len() == rows + 1.  Rows may have different
-    /// nnz (runtime-tunable k_active).
+    /// Padded row boundaries; offsets.len() == rows + 1.  Rows may have
+    /// different nnz (runtime-tunable k_active).
     offsets: Vec<u32>,
-    /// Bytes of the stored representation (accumulated per Eq. 1, since
-    /// rows can be written under different storage modes).
+    /// Real (unpadded) nnz per row; `offsets[r] + nnz[r]` bounds the live
+    /// entries, the rest of the row (if any) is sentinel padding.
+    nnz: Vec<u32>,
+    /// Rows are padded to a multiple of this lane count (1 = unpadded).
+    lane: usize,
+    /// Bytes of the stored representation (accumulated per Eq. 1 over the
+    /// *real* nnz, since rows can be written under different storage
+    /// modes and padding is never charged).
     bytes: usize,
+}
+
+impl Default for SparseStore {
+    fn default() -> SparseStore {
+        SparseStore::new()
+    }
 }
 
 impl SparseStore {
     pub fn new() -> SparseStore {
-        SparseStore { vals: Vec::new(), idx: Vec::new(), offsets: vec![0], bytes: 0 }
+        SparseStore::with_lanes(1)
+    }
+
+    /// A store whose rows are zero-padded to a multiple of `lane`
+    /// (use [`Kernels::lanes`] of the active kernel set; 1 = unpadded).
+    pub fn with_lanes(lane: usize) -> SparseStore {
+        SparseStore {
+            vals: Vec::new(),
+            idx: Vec::new(),
+            offsets: vec![0],
+            nnz: Vec::new(),
+            lane: lane.max(1),
+            bytes: 0,
+        }
     }
 
     pub fn with_capacity(rows: usize, k: usize) -> SparseStore {
-        let mut s = SparseStore::new();
-        s.vals.reserve(rows * k);
-        s.idx.reserve(rows * k);
+        SparseStore::with_capacity_lanes(rows, k, 1)
+    }
+
+    pub fn with_capacity_lanes(rows: usize, k: usize, lane: usize) -> SparseStore {
+        let mut s = SparseStore::with_lanes(lane);
+        let padded_k = k.div_ceil(s.lane) * s.lane;
+        s.vals.reserve(rows * padded_k);
+        s.idx.reserve(rows * padded_k);
         s.offsets.reserve(rows + 1);
+        s.nnz.reserve(rows);
         s
     }
 
@@ -45,7 +94,13 @@ impl SparseStore {
         self.len() == 0
     }
 
-    /// Winnow `dense` to its top-`k` dims and append as a new row.
+    /// The lane multiple rows are padded to (1 = unpadded).
+    pub fn lanes(&self) -> usize {
+        self.lane
+    }
+
+    /// Winnow `dense` to its top-`k` dims and append as a new row
+    /// (zero-padded to the store's lane multiple).
     pub fn push_pruned(&mut self, dense: &[f32], k: usize, mode: StorageMode) {
         let ki = topk_indices_select(dense, k);
         for &i in &ki {
@@ -57,72 +112,78 @@ impl SparseStore {
             });
             self.idx.push(i);
         }
+        let pad = (self.lane - ki.len() % self.lane) % self.lane;
+        for _ in 0..pad {
+            self.vals.push(0.0);
+            self.idx.push(0);
+        }
         self.offsets.push(self.vals.len() as u32);
+        self.nnz.push(ki.len() as u32);
         self.bytes += mode.vector_bytes(ki.len());
     }
 
-    /// Row accessor: (values, indices).
+    /// Row accessor: (values, indices) of the *live* entries (padding
+    /// sentinels excluded).
     #[inline]
     pub fn row(&self, r: usize) -> (&[f32], &[u16]) {
         let lo = self.offsets[r] as usize;
-        let hi = self.offsets[r + 1] as usize;
+        let hi = lo + self.nnz[r] as usize;
         (&self.vals[lo..hi], &self.idx[lo..hi])
     }
 
+    /// Real (unpadded) nnz of row `r`.
     pub fn nnz(&self, r: usize) -> usize {
+        self.nnz[r] as usize
+    }
+
+    /// Padded width of row `r` (== [`SparseStore::nnz`] when unpadded).
+    pub fn padded_nnz(&self, r: usize) -> usize {
         (self.offsets[r + 1] - self.offsets[r]) as usize
     }
 
     /// Decompression-free scores for ALL rows against a dense query:
-    /// out[r] = sum_j vals[r,j] * q[idx[r,j]] * scale.  Contiguous walk;
-    /// the inner gather uses unchecked indexing (indices are validated at
-    /// insertion: every idx < d_h <= q.len()) with 2-way unrolling to
-    /// hide gather latency — see EXPERIMENTS.md §Perf.
+    /// out[r] = sum_j vals[r,j] * q[idx[r,j]] * scale, through the
+    /// process-wide active kernel set (scalar 2-way-unrolled gather or
+    /// AVX2 `vgatherdps` — see [`crate::simd`]).  Padding sentinels
+    /// contribute exactly zero.
     pub fn scores_into(&self, q: &[f32], scale: f32, out: &mut Vec<f32>) {
-        out.reserve(self.len());
-        for r in 0..self.len() {
-            let lo = self.offsets[r] as usize;
-            let hi = self.offsets[r + 1] as usize;
-            let vals = &self.vals[lo..hi];
-            let idx = &self.idx[lo..hi];
-            let n = vals.len();
-            let mut s0 = 0.0f32;
-            let mut s1 = 0.0f32;
-            let pairs = n / 2;
-            // SAFETY: idx entries are < d_h (checked at push), q.len() >= d_h
-            // (debug-asserted by callers), and j bounds follow from `pairs`.
-            unsafe {
-                for p in 0..pairs {
-                    let j = 2 * p;
-                    s0 += vals.get_unchecked(j) * q.get_unchecked(*idx.get_unchecked(j) as usize);
-                    s1 += vals.get_unchecked(j + 1)
-                        * q.get_unchecked(*idx.get_unchecked(j + 1) as usize);
-                }
-                if n % 2 == 1 {
-                    s0 += vals.get_unchecked(n - 1)
-                        * q.get_unchecked(*idx.get_unchecked(n - 1) as usize);
-                }
-            }
-            out.push((s0 + s1) * scale);
-        }
+        self.scores_into_with(crate::simd::active(), q, scale, out);
     }
 
-    /// Weighted scatter-add of all rows: out += sum_r w[r] * row_r.
-    /// Unchecked indexing as in [`SparseStore::scores_into`].
+    /// [`SparseStore::scores_into`] on an explicit kernel set (benches and
+    /// the dispatch-parity property tests force paths through this).
+    pub fn scores_into_with(&self, ks: Kernels, q: &[f32], scale: f32, out: &mut Vec<f32>) {
+        ks.csr_scores_into(&self.vals, &self.idx, &self.offsets, scale, q, out);
+    }
+
+    /// Fused scores + running max: as [`SparseStore::scores_into`], also
+    /// returning the max pushed score (`NEG_INFINITY` for an empty store)
+    /// so the downstream softmax drops its max pass.
+    pub fn scores_max_into(&self, q: &[f32], scale: f32, out: &mut Vec<f32>) -> f32 {
+        self.scores_max_into_with(crate::simd::active(), q, scale, out)
+    }
+
+    /// [`SparseStore::scores_max_into`] on an explicit kernel set.
+    pub fn scores_max_into_with(
+        &self,
+        ks: Kernels,
+        q: &[f32],
+        scale: f32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        ks.csr_scores_max_into(&self.vals, &self.idx, &self.offsets, scale, q, out)
+    }
+
+    /// Weighted scatter-add of all rows: out += sum_r w[r] * row_r,
+    /// through the active kernel set.
     pub fn axpy_all(&self, w: &[f32], out: &mut [f32]) {
+        self.axpy_all_with(crate::simd::active(), w, out);
+    }
+
+    /// [`SparseStore::axpy_all`] on an explicit kernel set.
+    pub fn axpy_all_with(&self, ks: Kernels, w: &[f32], out: &mut [f32]) {
         debug_assert_eq!(w.len(), self.len());
-        for r in 0..self.len() {
-            let lo = self.offsets[r] as usize;
-            let hi = self.offsets[r + 1] as usize;
-            let wr = w[r];
-            // SAFETY: idx entries < d_h <= out.len() (validated at push).
-            unsafe {
-                for j in lo..hi {
-                    let i = *self.idx.get_unchecked(j) as usize;
-                    *out.get_unchecked_mut(i) += wr * self.vals.get_unchecked(j);
-                }
-            }
-        }
+        ks.csr_axpy_all(&self.vals, &self.idx, &self.offsets, w, out);
     }
 
     /// Eq. 1 bytes of everything stored.
@@ -137,9 +198,12 @@ impl SparseStore {
 
     /// Check the store's structural invariants, returning the first
     /// violation: offsets start at 0 and are monotone non-decreasing, the
-    /// final offset equals the value count, and values/indices stay in
-    /// lock-step.  Used by the property tests; cheap enough to call after
-    /// every mutation in a shrink loop.
+    /// final offset equals the value count, values/indices stay in
+    /// lock-step, and the lane-padding metadata is consistent (real nnz
+    /// within the padded row, padded width the smallest lane multiple
+    /// covering it, sentinel entries exactly `(0.0, 0)`).  Used by the
+    /// property tests; cheap enough to call after every mutation in a
+    /// shrink loop.
     pub fn check_invariants(&self) -> Result<(), String> {
         if self.offsets.first() != Some(&0) {
             return Err(format!("offsets must start at 0, got {:?}", self.offsets.first()));
@@ -159,6 +223,36 @@ impl SparseStore {
                 self.vals.len(),
                 self.idx.len()
             ));
+        }
+        if self.lane == 0 {
+            return Err("lane must be >= 1".into());
+        }
+        if self.nnz.len() != self.len() {
+            return Err(format!("nnz.len() {} != rows {}", self.nnz.len(), self.len()));
+        }
+        for r in 0..self.len() {
+            let width = self.padded_nnz(r);
+            let live = self.nnz[r] as usize;
+            if live > width {
+                return Err(format!("row {r}: nnz {live} > padded width {width}"));
+            }
+            if width != live.div_ceil(self.lane) * self.lane {
+                return Err(format!(
+                    "row {r}: padded width {width} is not nnz {live} rounded to lane {}",
+                    self.lane
+                ));
+            }
+            let lo = self.offsets[r] as usize;
+            for j in lo + live..lo + width {
+                if self.vals[j] != 0.0 || self.idx[j] != 0 {
+                    return Err(format!(
+                        "row {r}: padding slot {} holds ({}, {}), expected (0, 0)",
+                        j - lo,
+                        self.vals[j],
+                        self.idx[j]
+                    ));
+                }
+            }
         }
         Ok(())
     }
@@ -282,5 +376,68 @@ mod tests {
         assert_eq!(scores.len(), 2);
         assert_eq!(scores[0], 99.0);
         assert_eq!(scores[1], 1.0); // 3.0 + (-2.0)
+    }
+
+    /// Lane padding is invisible to every accessor and walk: rows report
+    /// their real nnz, Eq. 1 bytes never charge padding, and scores/axpy
+    /// match the unpadded store on identical pushes.
+    #[test]
+    fn lane_padded_store_matches_unpadded() {
+        let mut rng = Pcg64::new(8);
+        let d = 32usize;
+        let mut plain = SparseStore::new();
+        let mut padded = SparseStore::with_lanes(8);
+        for (i, k) in [3usize, 8, 5, 13, 1, 32].into_iter().enumerate() {
+            let x = rng.normal_vec(d);
+            plain.push_pruned(&x, k, StorageMode::F16);
+            padded.push_pruned(&x, k, StorageMode::F16);
+            padded.check_invariants().unwrap();
+            assert_eq!(padded.nnz(i), plain.nnz(i));
+            assert_eq!(padded.padded_nnz(i), k.div_ceil(8) * 8);
+            assert_eq!(padded.row(i), plain.row(i));
+        }
+        assert_eq!(padded.storage_bytes(), plain.storage_bytes());
+        assert_eq!(padded.lanes(), 8);
+        assert_eq!(plain.lanes(), 1);
+
+        // pin the scalar kernel: on that path padding is bit-invisible
+        // (sentinel terms land in the same unroll partials as +0.0); the
+        // cross-kernel tolerance sweep lives in tests/prop_invariants.rs
+        let sc = crate::simd::Kernels::scalar();
+        let q = rng.normal_vec(d);
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        plain.scores_into_with(sc, &q, 0.5, &mut s1);
+        let m = padded.scores_max_into_with(sc, &q, 0.5, &mut s2);
+        assert_eq!(s1, s2); // sentinels contribute exactly zero
+        assert_eq!(m, s1.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)));
+
+        let w: Vec<f32> = (0..plain.len()).map(|i| 0.3 - 0.05 * i as f32).collect();
+        let (mut o1, mut o2) = (vec![0.0f32; d], vec![0.0f32; d]);
+        plain.axpy_all_with(sc, &w, &mut o1);
+        padded.axpy_all_with(sc, &w, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    /// The fused scores+max walk returns NEG_INFINITY on an empty store
+    /// and agrees with a post-hoc fold otherwise, on every kernel path.
+    #[test]
+    fn fused_max_matches_fold_on_every_kernel() {
+        use crate::simd::Kernels;
+        let mut rng = Pcg64::new(21);
+        for ks in Kernels::available() {
+            let empty = SparseStore::new();
+            let mut out = Vec::new();
+            assert_eq!(empty.scores_max_into_with(ks, &[1.0; 4], 1.0, &mut out), f32::NEG_INFINITY);
+            assert!(out.is_empty());
+
+            let mut store = SparseStore::with_lanes(ks.lanes());
+            for k in [1usize, 7, 16] {
+                store.push_pruned(&rng.normal_vec(24), k, StorageMode::F32);
+            }
+            let q = rng.normal_vec(24);
+            let mut scores = Vec::new();
+            let m = store.scores_max_into_with(ks, &q, 0.7, &mut scores);
+            assert_eq!(m, scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)));
+        }
     }
 }

@@ -3,7 +3,6 @@
 //! experiment harness and as the reference the PJRT path is tested against.
 
 use crate::swan::hybrid_cache::HybridCache;
-use crate::tensor::ops::{dot, softmax_inplace};
 
 /// Compute one head's attention output for query `q_hat` over `cache`
 /// plus the current token's `(k_hat_cur, v_hat_cur)` (which Algorithm 1
@@ -40,6 +39,7 @@ pub fn swan_attention_scratch(
     scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
+    let ks = crate::simd::active();
     let d = cache.d_h();
     debug_assert_eq!(q_hat.len(), d);
     debug_assert_eq!(out.len(), d);
@@ -51,32 +51,30 @@ pub fn swan_attention_scratch(
     scores.reserve(ns + nb + 1);
 
     // sparse-dense mat-vec over the contiguous CSR store (no
-    // reconstruction, no per-row pointer chasing)
-    cache.k_sparse.scores_into(q_hat, scale, scores);
+    // reconstruction, no per-row pointer chasing), fused with the
+    // softmax's running max so the score row is walked once
+    let mut m = cache.k_sparse.scores_max_into_with(ks, q_hat, scale, scores);
     // dense buffer
     let kb = cache.k_buffer();
     for t in 0..nb {
-        scores.push(dot(&kb[t * d..(t + 1) * d], q_hat) * scale);
+        let s = ks.dot(&kb[t * d..(t + 1) * d], q_hat) * scale;
+        m = m.max(s);
+        scores.push(s);
     }
     // current token
-    scores.push(dot(k_hat_cur, q_hat) * scale);
+    let s = ks.dot(k_hat_cur, q_hat) * scale;
+    m = m.max(s);
+    scores.push(s);
 
-    softmax_inplace(scores);
+    ks.softmax_inplace_with_max(scores, m);
 
     out.iter_mut().for_each(|o| *o = 0.0);
-    cache.v_sparse.axpy_all(&scores[..ns], out);
+    cache.v_sparse.axpy_all_with(ks, &scores[..ns], out);
     let vb = cache.v_buffer();
     for t in 0..nb {
-        let w = scores[ns + t];
-        let row = &vb[t * d..(t + 1) * d];
-        for (o, x) in out.iter_mut().zip(row) {
-            *o += w * x;
-        }
+        ks.axpy(scores[ns + t], &vb[t * d..(t + 1) * d], out);
     }
-    let wc = scores[ns + nb];
-    for (o, x) in out.iter_mut().zip(v_hat_cur) {
-        *o += wc * x;
-    }
+    ks.axpy(scores[ns + nb], v_hat_cur, out);
 }
 
 /// Dense reference attention over explicit caches (for tests/baselines):
@@ -108,25 +106,26 @@ pub fn dense_attention_scratch(
     scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
+    let ks = crate::simd::active();
     let n = k_cache.len() / d;
     let scale = 1.0 / (d as f32).sqrt();
     scores.clear();
     scores.reserve(n + 1);
+    let mut m = f32::NEG_INFINITY;
     for t in 0..n {
-        scores.push(dot(&k_cache[t * d..(t + 1) * d], q) * scale);
+        let s = ks.dot(&k_cache[t * d..(t + 1) * d], q) * scale;
+        m = m.max(s);
+        scores.push(s);
     }
-    scores.push(dot(k_cur, q) * scale);
-    softmax_inplace(scores);
+    let s = ks.dot(k_cur, q) * scale;
+    m = m.max(s);
+    scores.push(s);
+    ks.softmax_inplace_with_max(scores, m);
     out.iter_mut().for_each(|o| *o = 0.0);
     for t in 0..n {
-        let w = scores[t];
-        for (o, x) in out.iter_mut().zip(&v_cache[t * d..(t + 1) * d]) {
-            *o += w * x;
-        }
+        ks.axpy(scores[t], &v_cache[t * d..(t + 1) * d], out);
     }
-    for (o, x) in out.iter_mut().zip(v_cur) {
-        *o += scores[n] * x;
-    }
+    ks.axpy(scores[n], v_cur, out);
 }
 
 #[cfg(test)]

@@ -24,11 +24,14 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Reusable per-worker buffer for the attention walk: `scores` backs the
-/// softmax row (sparse + buffer + current slots) and keeps its capacity
-/// across tasks, so a warmed-up worker never reallocates.
+/// softmax row (sparse + buffer + current slots) and `tmp` backs whatever
+/// per-task working set a fan-out needs (the parallel prefill packs its
+/// norm/projection/MLP buffers into it).  Both keep their capacity across
+/// tasks, so a warmed-up worker never reallocates.
 #[derive(Default, Debug)]
 pub struct AttentionScratch {
     pub scores: Vec<f32>,
+    pub tmp: Vec<f32>,
 }
 
 impl AttentionScratch {

@@ -23,11 +23,27 @@ pub struct SwanParams {
     pub buffer: usize,
     /// Value storage precision.
     pub mode: StorageMode,
+    /// Lane multiple the sparse stores pad rows to (defaults to the
+    /// active kernel set's width, so AVX2 hosts get tail-free gather rows
+    /// transparently; results and Eq. 1 accounting are unaffected).
+    pub lanes: usize,
 }
 
 impl SwanParams {
     pub fn new(k_active: usize, buffer: usize, mode: StorageMode) -> SwanParams {
-        SwanParams { k_active_keys: k_active, k_active_vals: k_active, buffer, mode }
+        SwanParams {
+            k_active_keys: k_active,
+            k_active_vals: k_active,
+            buffer,
+            mode,
+            lanes: crate::simd::active().lanes(),
+        }
+    }
+
+    /// Override the sparse-row lane padding (tests/benches pin layouts).
+    pub fn with_lanes(mut self, lanes: usize) -> SwanParams {
+        self.lanes = lanes.max(1);
+        self
     }
 
     /// Retention ratio (k_active / d_h) for reporting.
@@ -56,8 +72,8 @@ impl HybridCache {
         HybridCache {
             params,
             d_h,
-            k_sparse: SparseStore::new(),
-            v_sparse: SparseStore::new(),
+            k_sparse: SparseStore::with_lanes(params.lanes),
+            v_sparse: SparseStore::with_lanes(params.lanes),
             k_buf: Vec::with_capacity((params.buffer + 1) * d_h),
             v_buf: Vec::with_capacity((params.buffer + 1) * d_h),
             buf_len: 0,

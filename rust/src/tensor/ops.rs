@@ -1,6 +1,13 @@
 //! Core dense operations.  Row-major `&[f32]` slices with explicit shapes;
 //! no generic tensor type — the model is small and the call sites are
 //! explicit about layout, which keeps the hot paths allocation-free.
+//!
+//! The hot primitives (`dot`, `vecmat`, `softmax_inplace`, `rmsnorm`)
+//! delegate to the process-wide [`crate::simd`] kernel set — scalar or
+//! AVX2+FMA, selected once at startup — so every caller (model, attention,
+//! cache policies, batch decode, shard engines) picks the SIMD path up
+//! transparently.  Signatures and semantics are unchanged; the scalar
+//! path is bit-identical to the pre-dispatch implementations.
 
 /// y[m] += a[m,n] @ x[n]  (row-major `a`).
 pub fn matvec_acc(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
@@ -21,20 +28,7 @@ pub fn matvec(a: &[f32], x: &[f32], m: usize, n: usize, y: &mut [f32]) {
 
 /// y[n] = x[m] @ a[m,n]  (vector-matrix; the layout used by `x @ W`).
 pub fn vecmat(x: &[f32], a: &[f32], m: usize, n: usize, y: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(x.len(), m);
-    debug_assert_eq!(y.len(), n);
-    y.iter_mut().for_each(|v| *v = 0.0);
-    for i in 0..m {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &a[i * n..(i + 1) * n];
-        for (yj, aij) in y.iter_mut().zip(row) {
-            *yj += xi * aij;
-        }
-    }
+    crate::simd::active().vecmat(x, a, m, n, y);
 }
 
 /// c[m,n] = a[m,k] @ b[k,n].
@@ -58,55 +52,21 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     c
 }
 
-/// Dot product (manually unrolled 4-wide; the single hottest primitive in
-/// the dense baselines).
+/// Dot product (the single hottest primitive in the dense baselines);
+/// 4-wide-unrolled scalar or 8-lane AVX2 FMA per the active kernel set.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::simd::active().dot(a, b)
 }
 
 /// In-place numerically-stable softmax.
 pub fn softmax_inplace(x: &mut [f32]) {
-    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    if !m.is_finite() {
-        // all -inf: define as uniform to avoid NaN (callers mask at least
-        // one live slot in practice)
-        let u = 1.0 / x.len() as f32;
-        x.iter_mut().for_each(|v| *v = u);
-        return;
-    }
-    let mut z = 0.0f32;
-    for v in x.iter_mut() {
-        *v = (*v - m).exp();
-        z += *v;
-    }
-    let inv = 1.0 / z;
-    x.iter_mut().for_each(|v| *v *= inv);
+    crate::simd::active().softmax_inplace(x);
 }
 
 /// RMSNorm: x * rsqrt(mean(x^2) + eps) * w.
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
-    debug_assert_eq!(x.len(), w.len());
-    let ms = dot(x, x) / x.len() as f32;
-    let r = 1.0 / (ms + eps).sqrt();
-    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
-        *o = xi * r * wi;
-    }
+    crate::simd::active().rmsnorm(x, w, eps, out);
 }
 
 /// GELU (tanh approximation, matching jax.nn.gelu's default).

@@ -110,6 +110,73 @@ pub fn time_it<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     (out, t0.elapsed())
 }
 
+/// Accumulating machine-readable bench report (`BENCH_kernels.json` and
+/// friends): a flat two-level JSON object `{section: {key: value}}` that
+/// independent bench binaries merge into, so the perf trajectory of each
+/// kernel path is trackable across PRs.  Existing content at `path` is
+/// preserved; same keys overwrite.
+pub struct BenchReport {
+    path: std::path::PathBuf,
+    root: crate::util::json::Json,
+}
+
+impl BenchReport {
+    /// Open (or create) the report at `path`, merging into any existing
+    /// valid JSON object there.
+    pub fn open(path: &str) -> BenchReport {
+        use crate::util::json::Json;
+        let path = std::path::PathBuf::from(path);
+        let root = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| Json::parse(&s).ok())
+            .filter(|j| matches!(j, Json::Obj(_)))
+            .unwrap_or_else(|| Json::Obj(std::collections::BTreeMap::new()));
+        BenchReport { path, root }
+    }
+
+    fn section_mut(
+        &mut self,
+        section: &str,
+    ) -> &mut std::collections::BTreeMap<String, crate::util::json::Json> {
+        use crate::util::json::Json;
+        let root = match &mut self.root {
+            Json::Obj(m) => m,
+            _ => unreachable!("root is always an object"),
+        };
+        let entry = root
+            .entry(section.to_string())
+            .or_insert_with(|| Json::Obj(std::collections::BTreeMap::new()));
+        if !matches!(entry, Json::Obj(_)) {
+            *entry = Json::Obj(std::collections::BTreeMap::new());
+        }
+        match entry {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Set `section.key` to a numeric value.
+    pub fn set(&mut self, section: &str, key: &str, value: f64) {
+        self.section_mut(section)
+            .insert(key.to_string(), crate::util::json::Json::Num(value));
+    }
+
+    /// Set `section.key` to a string value.
+    pub fn set_str(&mut self, section: &str, key: &str, value: &str) {
+        self.section_mut(section)
+            .insert(key.to_string(), crate::util::json::Json::Str(value.to_string()));
+    }
+
+    /// Write the report back to its path (compact JSON + newline).
+    pub fn save(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, format!("{}\n", self.root))
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +216,39 @@ mod tests {
         assert!(Summary::fmt_time(5_000.0).contains("µs"));
         assert!(Summary::fmt_time(5_000_000.0).contains("ms"));
         assert!(Summary::fmt_time(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn bench_report_merges_sections_across_opens() {
+        let path = std::env::temp_dir().join(format!(
+            "swan_bench_report_test_{}.json",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut r1 = BenchReport::open(&path_s);
+        r1.set("sparse_dot", "scalar_k32_ns", 120.5);
+        r1.set_str("sparse_dot", "host", "test");
+        r1.save().unwrap();
+
+        // a second bench binary opens the same file and adds its section
+        let mut r2 = BenchReport::open(&path_s);
+        r2.set("decode_throughput", "scalar_batch4_tps", 1000.0);
+        r2.set("sparse_dot", "scalar_k32_ns", 99.0); // overwrite
+        r2.save().unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(
+            j.get("sparse_dot").and_then(|s| s.get("scalar_k32_ns")).and_then(|v| v.as_f64()),
+            Some(99.0)
+        );
+        assert_eq!(
+            j.get("sparse_dot").and_then(|s| s.get("host")).and_then(|v| v.as_str()),
+            Some("test")
+        );
+        assert!(j.get("decode_throughput").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 }

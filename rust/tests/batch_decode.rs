@@ -138,6 +138,74 @@ fn batched_decode_advances_all_positions() {
     }
 }
 
+/// Parallel prefill determinism: fanning the per-layer prefill phases
+/// across a pool must be *bit-identical* to the serial path — every
+/// output (rotated K̂/V̂ streams, attention-mass seeds, logits) — for any
+/// worker count, prompt length and GQA grouping.
+#[test]
+fn parallel_prefill_is_bit_identical_to_serial() {
+    for nkv in [1usize, 2, 4] {
+        let mut cfg = test_model().cfg;
+        cfg.n_kv_heads = nkv;
+        let model = SwanModel::synthetic(cfg, 21);
+        for len in [1usize, 5, 23] {
+            let tokens: Vec<u32> = (0..len).map(|t| ((t * 17 + nkv) % 96) as u32).collect();
+            let serial = model.prefill(&tokens);
+            for workers in [2usize, 8] {
+                let mut pool = WorkerPool::new(workers);
+                let parallel = model.prefill_with_pool(&tokens, &mut pool);
+                assert_eq!(serial.len, parallel.len);
+                let bits =
+                    |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(
+                    bits(&serial.logits),
+                    bits(&parallel.logits),
+                    "nkv={nkv} len={len} workers={workers}: logits diverged"
+                );
+                for l in 0..model.cfg.n_layers {
+                    for h in 0..nkv {
+                        assert_eq!(
+                            bits(&serial.khat[l][h]),
+                            bits(&parallel.khat[l][h]),
+                            "khat l={l} h={h} nkv={nkv} len={len} workers={workers}"
+                        );
+                        assert_eq!(
+                            bits(&serial.vhat[l][h]),
+                            bits(&parallel.vhat[l][h]),
+                            "vhat l={l} h={h} nkv={nkv} len={len} workers={workers}"
+                        );
+                        assert_eq!(
+                            bits(&serial.mass[l][h]),
+                            bits(&parallel.mass[l][h]),
+                            "mass l={l} h={h} nkv={nkv} len={len} workers={workers}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Prefill → decode consistency is preserved when the prefill itself ran
+/// on a pool (the decode path consumes a parallel prefill unchanged).
+#[test]
+fn decode_after_parallel_prefill_matches_serial_prefill() {
+    let model = test_model();
+    let p: Vec<u32> = (0..11).map(|t| (t * 7 % 96) as u32).collect();
+    let mut pool = WorkerPool::new(4);
+    let pf_serial = model.prefill(&p);
+    let pf_parallel = model.prefill_with_pool(&p, &mut pool);
+    let mut st_a = SequenceState::new(&model, policy_for(0));
+    let mut st_b = SequenceState::new(&model, policy_for(0));
+    st_a.load_prefill(&pf_serial);
+    st_b.load_prefill(&pf_parallel);
+    let a = model.decode_step(&mut st_a, 5);
+    let b = model.decode_step(&mut st_b, 5);
+    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(ab, bb);
+}
+
 #[test]
 fn decode_step_is_the_batch_of_one_case() {
     let model = test_model();

@@ -1,0 +1,78 @@
+//! The forced `--kernels` override, exercised end-to-end through the
+//! *global* dispatch every layer (ops, stores, attention) routes through.
+//!
+//! This lives in its own integration binary on purpose: flipping the
+//! process-wide kernel selection mid-run would race with concurrently
+//! running tests that compare two globally-dispatched computations (see
+//! the note in `swan::simd`'s lib tests).  Here the flip tests are the
+//! only tests in the process, and they serialize themselves through one
+//! `#[test]` fn.
+//!
+//! `--kernels scalar|avx2` on the CLI and `SWAN_KERNELS` both feed the
+//! same `init_from_name`/`detect` entry points exercised below.
+
+use swan::simd::{self, KernelKind, Kernels};
+use swan::sparse::StorageMode;
+use swan::swan::attention::swan_attention;
+use swan::swan::hybrid_cache::{HybridCache, SwanParams};
+use swan::util::Pcg64;
+
+/// One attention output computed under the *current global* selection.
+fn attend_under_active(lanes: usize) -> Vec<f32> {
+    let d = 16;
+    let mut cache =
+        HybridCache::new(d, SwanParams::new(8, 2, StorageMode::F16).with_lanes(lanes));
+    let mut rng = Pcg64::new(3);
+    for _ in 0..12 {
+        cache.append(&rng.normal_vec(d), &rng.normal_vec(d));
+    }
+    let q = rng.normal_vec(d);
+    let kc = rng.normal_vec(d);
+    let vc = rng.normal_vec(d);
+    let mut out = vec![0.0; d];
+    swan_attention(&q, &cache, &kc, &vc, &mut out);
+    out
+}
+
+#[test]
+fn forced_override_routes_global_dispatch() {
+    // every path this host can run, forced by name through the same
+    // entry point the CLI flag uses
+    for ks in Kernels::available() {
+        let pinned = simd::init_from_name(ks.label()).unwrap();
+        assert_eq!(pinned, ks);
+        assert_eq!(simd::active(), ks, "global did not follow --kernels {}", ks.label());
+        let out = attend_under_active(ks.lanes());
+        assert!(out.iter().all(|x| x.is_finite()), "kernels {}", ks.label());
+    }
+
+    // the two paths agree on the same workload to tight tolerance
+    let a = {
+        simd::set_active(Kernels::scalar());
+        attend_under_active(1)
+    };
+    let b = {
+        simd::set_active(simd::Kernels::detect());
+        attend_under_active(simd::active().lanes())
+    };
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+
+    // `auto` resolves to something runnable; garbage is rejected loudly
+    let auto = simd::init_from_name("auto").unwrap();
+    assert!(Kernels::available().contains(&auto));
+    assert!(simd::init_from_name("no-such-kernel").is_err());
+    match Kernels::avx2() {
+        Some(k) => assert_eq!(simd::init_from_name("avx2").unwrap(), k),
+        None => assert!(simd::init_from_name("avx2").is_err()),
+    }
+
+    // scalar is always forceable, and its kind is what it claims
+    let sc = simd::init_from_name("scalar").unwrap();
+    assert_eq!(sc.kind(), KernelKind::Scalar);
+    assert_eq!(simd::active().lanes(), 1);
+
+    // leave the process on the detected default
+    simd::set_active(Kernels::detect());
+}

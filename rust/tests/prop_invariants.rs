@@ -2,6 +2,7 @@
 //! harness; proptest is unavailable offline).
 
 use swan::coordinator::sequence::{CacheShape, SeqCache};
+use swan::simd::Kernels;
 use swan::sparse::topk::{topk_indices, topk_indices_select};
 use swan::sparse::{SparseStore, SparseVec, StorageMode};
 use swan::swan::attention::{dense_attention, swan_attention};
@@ -10,6 +11,12 @@ use swan::swan::projection::ProjectionSet;
 use swan::tensor::ops::matvec;
 use swan::testing::prop::{check, gen_vec};
 use swan::util::Pcg64;
+
+/// Relative-ish tolerance for cross-kernel comparisons (different
+/// accumulation trees, same math).
+fn kernel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
 
 /// topk select variant == sort variant on arbitrary inputs.
 #[test]
@@ -371,6 +378,147 @@ fn prop_rotation_lossless_at_full_retention() {
         for (a, b) in got.iter().zip(&want) {
             if (a - b).abs() > 1e-2 {
                 return Err(format!("{a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Kernel-dispatch parity, dense primitives: every available path
+/// (scalar, and AVX2 where the host supports it) agrees with the scalar
+/// reference on dot / vecmat / rmsnorm / axpy to tight tolerance, and on
+/// softmax / max bit-exactly, across odd lengths that exercise every
+/// remainder-handling branch.
+#[test]
+fn prop_kernel_dispatch_parity_dense() {
+    let kinds = Kernels::available();
+    check("kernel-parity-dense", 120, |r| {
+        let n = 1 + r.below(150) as usize;
+        let m = 1 + r.below(20) as usize;
+        (n, m)
+    }, |(n, m)| {
+        let sc = Kernels::scalar();
+        let mut rng = Pcg64::new(37);
+        let a = rng.normal_vec(*n);
+        let b = rng.normal_vec(*n);
+        let w = rng.normal_vec(*n);
+        let x = rng.normal_vec(*m);
+        let mat = rng.normal_vec(*m * *n);
+        for ks in &kinds {
+            if !kernel_close(ks.dot(&a, &b), sc.dot(&a, &b), 1e-4) {
+                return Err(format!("dot n={n} {}", ks.label()));
+            }
+            if ks.max_fold(&a) != sc.max_fold(&a) {
+                return Err(format!("max n={n} {}", ks.label()));
+            }
+            let mut s1 = a.clone();
+            let mut s2 = a.clone();
+            ks.softmax_inplace(&mut s1);
+            sc.softmax_inplace(&mut s2);
+            if s1 != s2 {
+                return Err(format!("softmax not bit-exact n={n} {}", ks.label()));
+            }
+            let mut o1 = vec![0.0; *n];
+            let mut o2 = vec![0.0; *n];
+            ks.rmsnorm(&a, &w, 1e-5, &mut o1);
+            sc.rmsnorm(&a, &w, 1e-5, &mut o2);
+            for (p, q) in o1.iter().zip(&o2) {
+                if !kernel_close(*p, *q, 1e-4) {
+                    return Err(format!("rmsnorm n={n} {}", ks.label()));
+                }
+            }
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            ks.axpy(0.37, &a, &mut y1);
+            sc.axpy(0.37, &a, &mut y2);
+            for (p, q) in y1.iter().zip(&y2) {
+                if !kernel_close(*p, *q, 1e-4) {
+                    return Err(format!("axpy n={n} {}", ks.label()));
+                }
+            }
+            let mut v1 = vec![0.0; *n];
+            let mut v2 = vec![0.0; *n];
+            ks.vecmat(&x, &mat, *m, *n, &mut v1);
+            sc.vecmat(&x, &mat, *m, *n, &mut v2);
+            for (p, q) in v1.iter().zip(&v2) {
+                if !kernel_close(*p, *q, 1e-3) {
+                    return Err(format!("vecmat m={m} n={n} {}", ks.label()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Kernel-dispatch parity, CSR walks: scalar and AVX2 agree on
+/// scores/axpy over stores with mixed per-row k (odd lengths included),
+/// both unpadded and lane-padded; the fused scores+max equals a post-hoc
+/// fold exactly; padding never changes results beyond kernel tolerance.
+#[test]
+fn prop_kernel_dispatch_parity_csr() {
+    let kinds = Kernels::available();
+    check("kernel-parity-csr", 100, |r| {
+        let rows = r.below(24) as usize;
+        let d = 8 + r.below(120) as usize;
+        let ks: Vec<usize> = (0..rows).map(|_| 1 + r.below(d as u64) as usize).collect();
+        (d, ks)
+    }, |(d, row_ks)| {
+        let sc = Kernels::scalar();
+        let mut rng = Pcg64::new(43);
+        let mut plain = SparseStore::new();
+        let mut padded = SparseStore::with_lanes(8);
+        for &k in row_ks.iter() {
+            let x = rng.normal_vec(*d);
+            plain.push_pruned(&x, k, StorageMode::F16);
+            padded.push_pruned(&x, k, StorageMode::F16);
+        }
+        padded.check_invariants()?;
+        if padded.storage_bytes() != plain.storage_bytes() {
+            return Err("padding changed Eq.1 bytes".into());
+        }
+        let q = rng.normal_vec(*d);
+        let w: Vec<f32> = (0..plain.len()).map(|i| 0.25 - 0.01 * i as f32).collect();
+
+        let mut ref_scores = Vec::new();
+        let ref_max = plain.scores_max_into_with(sc, &q, 0.5, &mut ref_scores);
+        let fold = ref_scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if ref_max != fold {
+            return Err(format!("fused max {ref_max} != fold {fold}"));
+        }
+        let mut ref_out = vec![0.0f32; *d];
+        plain.axpy_all_with(sc, &w, &mut ref_out);
+
+        for ks in &kinds {
+            for store in [&plain, &padded] {
+                let mut scores = Vec::new();
+                let m = store.scores_max_into_with(*ks, &q, 0.5, &mut scores);
+                if scores.len() != plain.len() {
+                    return Err(format!("{}: scores len {}", ks.label(), scores.len()));
+                }
+                let fold = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                if m != fold {
+                    return Err(format!("{}: fused max {m} != fold {fold}", ks.label()));
+                }
+                for (r, (a, b)) in scores.iter().zip(&ref_scores).enumerate() {
+                    if !kernel_close(*a, *b, 1e-4) {
+                        return Err(format!(
+                            "{} lane={}: score row {r}: {a} vs {b}",
+                            ks.label(),
+                            store.lanes()
+                        ));
+                    }
+                }
+                let mut out = vec![0.0f32; *d];
+                store.axpy_all_with(*ks, &w, &mut out);
+                for (i, (a, b)) in out.iter().zip(&ref_out).enumerate() {
+                    if !kernel_close(*a, *b, 1e-4) {
+                        return Err(format!(
+                            "{} lane={}: axpy dim {i}: {a} vs {b}",
+                            ks.label(),
+                            store.lanes()
+                        ));
+                    }
+                }
             }
         }
         Ok(())
