@@ -49,11 +49,10 @@ fn run_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Res
     ))
 }
 
-/// Drive `n_requests` concurrent generations through a multi-shard
-/// router; returns the aggregate decode tokens/sec row.
-fn run_shard_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Result<String> {
-    let dir = swan::artifacts_dir();
-    let router = Router::launch(&dir, cfg)?;
+/// Drive `n_requests` concurrent generations through an already-built
+/// router (engine shards or pipeline groups — the driver is topology-
+/// agnostic); returns the aggregate decode tokens/sec and the row.
+fn drive_router(router: &Router, n_requests: usize, max_new: usize) -> anyhow::Result<(f64, String)> {
     let mut rng = Pcg64::new(42);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
@@ -71,12 +70,44 @@ fn run_shard_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyho
         total_decoded += resp.stats.decode_steps;
     }
     let wall = t0.elapsed();
-    Ok(format!(
-        "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s",
-        n_requests,
-        wall.as_secs_f64(),
-        total_decoded as f64 / wall.as_secs_f64(),
+    let tps = total_decoded as f64 / wall.as_secs_f64();
+    Ok((
+        tps,
+        format!(
+            "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s",
+            n_requests,
+            wall.as_secs_f64(),
+            tps,
+        ),
     ))
+}
+
+/// Shard-scaling leg: the full `Router::launch` fleet (PJRT engines).
+fn run_shard_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Result<(f64, String)> {
+    let router = Router::launch(&swan::artifacts_dir(), cfg)?;
+    drive_router(&router, n_requests, max_new)
+}
+
+/// Pipeline-scaling leg: ONE native pipeline group of `cfg.pipeline`
+/// stages, built directly from `pipeline::launch_group` so every row —
+/// including the depth-1 baseline — runs the same (native) backend and
+/// the sweep varies only stage depth (`Router::launch` would serve
+/// pipeline=1 through the PJRT engine instead).
+fn run_pipeline_batch(
+    cfg: ServeConfig,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(f64, String)> {
+    use swan::model::{SwanModel, WeightFile};
+    use swan::shard::pipeline::launch_group;
+    use swan::swan::projection::ProjectionVariant;
+
+    let dir = swan::artifacts_dir();
+    let wf = WeightFile::load(&dir.join(format!("weights_{}.bin", cfg.model)))?;
+    let model = std::sync::Arc::new(SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?);
+    let handle = launch_group(0, model, &cfg)?;
+    let router = Router::from_handles(vec![handle], swan::shard::policy_from_name("round-robin")?);
+    drive_router(&router, n_requests, max_new)
 }
 
 fn main() {
@@ -149,9 +180,43 @@ fn main() {
             };
             let label = format!("shards={shards} batch={batch}");
             match run_shard_batch(cfg, batch, max_new) {
-                Ok(row) => println!("{label:<18} {row}"),
+                Ok((_, row)) => println!("{label:<18} {row}"),
                 Err(e) => println!("{label:<18} FAILED: {e:#}"),
             }
         }
+    }
+
+    // pipeline scaling: one pipeline group at stage depth {1,2,4} over
+    // the rust-native model (layer-sharded serving), 8 concurrent
+    // requests; machine-readable rows land in BENCH_pipeline.json so the
+    // layer-sharding trajectory is tracked across PRs.  Every row —
+    // including the depth-1 baseline — is built directly from
+    // `pipeline::launch_group`, so the sweep varies ONLY stage depth,
+    // never the execution backend (Router::launch would serve
+    // pipeline=1 through the PJRT engine instead).
+    println!("# pipeline_scaling ({max_new} new tokens each, ~180-char prompts)");
+    let mut report = swan::util::stats::BenchReport::open("BENCH_pipeline.json");
+    for stages in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            pipeline: stages,
+            k_active: 32,
+            mode: StorageMode::F16,
+            max_batch: 8,
+            decode_workers: (workers / stages).max(1),
+            ..Default::default()
+        };
+        let label = format!("stages={stages}");
+        match run_pipeline_batch(cfg, n, max_new) {
+            Ok((tps, row)) => {
+                println!("{label:<18} {row}");
+                report.set("pipeline_scaling", &format!("stages{stages}_decode_tps"), tps);
+            }
+            Err(e) => println!("{label:<18} FAILED: {e:#}"),
+        }
+    }
+    report.set("pipeline_scaling", "requests", n as f64);
+    report.set("pipeline_scaling", "max_new", max_new as f64);
+    if let Err(e) = report.save() {
+        eprintln!("could not write {}: {e}", report.path().display());
     }
 }

@@ -71,8 +71,15 @@ USAGE:
   swan serve    [--model M] [--bind ADDR] [--k-active K] [--buffer B]
                 [--mode 16|8] [--max-batch N] [--mem-budget BYTES] [--dense]
                 [--shards N]           engine shards behind the router (default 1)
+                [--pipeline P]         layer-shard the model: group the shards
+                                       into N/P pipeline groups of P stages,
+                                       each stage owning a contiguous layer
+                                       range (default 1 = whole-model shards;
+                                       N must be a multiple of P)
                 [--balance P]          placement: round-robin|least-queued|mem-aware
                 [--decode-workers N]   decode threads per shard (0 = serial)
+                [--admit-lookahead W]  admission scans the first W queued
+                                       requests under memory pressure (default 4)
                 [--kernels K]          compute kernels: auto|scalar|avx2
                                        (accepted by every command; default auto)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]

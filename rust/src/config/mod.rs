@@ -67,8 +67,13 @@ pub struct ServeConfig {
     pub max_new_tokens: usize,
     /// KV-cache memory budget (bytes) for admission control; 0 = unlimited.
     /// With `shards > 1` this is the *fleet* budget, split evenly across
-    /// shards at launch.
+    /// shards at launch (in pipeline mode: across pipeline *groups*, each
+    /// stage's share then proportional to its layer count).
     pub mem_budget: usize,
+    /// Admission lookahead window: under a tight `mem_budget`, the first
+    /// admissible request among the first N pending is admitted instead of
+    /// letting one oversized head block the queue (1 = strict FIFO).
+    pub admit_lookahead: usize,
     /// Serve with the dense baseline instead of SWAN (for A/B runs).
     pub dense_baseline: bool,
     /// Worker threads **per shard** for the iteration-level decode
@@ -78,6 +83,13 @@ pub struct ServeConfig {
     /// Engine shards behind the front-end router (>= 1); each shard runs
     /// its own thread, scheduler, worker pool and KV budget slice.
     pub shards: usize,
+    /// Pipeline depth: with `pipeline > 1` the fleet runs in layer-sharded
+    /// mode — the `shards` slots are grouped into `shards / pipeline`
+    /// pipeline *groups* of `pipeline` stages each, every stage owning a
+    /// contiguous layer range of the model and sequences flowing through
+    /// the group via cross-stage activation handoff.  `1` = classic
+    /// data-parallel shards (each engine owns the whole model).
+    pub pipeline: usize,
     /// Placement policy name for the router (see
     /// `shard::balance::POLICY_NAMES`): "round-robin", "least-queued" or
     /// "mem-aware".
@@ -101,9 +113,11 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_new_tokens: 64,
             mem_budget: 0,
+            admit_lookahead: crate::coordinator::scheduler::DEFAULT_LOOKAHEAD,
             dense_baseline: false,
             decode_workers: 0,
             shards: 1,
+            pipeline: 1,
             balance: "round-robin".into(),
             kernels: "auto".into(),
             bind: "127.0.0.1:7877".into(),

@@ -31,7 +31,9 @@ use crate::util::Pcg64;
 /// the pool's load-balancing chunk factor (`WorkerPool::for_each_mut`
 /// forms ~4 chunks per worker), so a "full" pool still balances skewed
 /// sequence lengths but never stretches an iteration past ~4 tasks deep.
-const DECODE_SLOTS_PER_WORKER: usize = 4;
+/// (Shared with the pipeline-group coordinator, which sizes its
+/// admission the same way against its stage worker pools.)
+pub(crate) const DECODE_SLOTS_PER_WORKER: usize = 4;
 
 /// Backend cache of one active sequence: SWAN hybrid or dense baseline.
 enum SeqBackend {
@@ -104,6 +106,7 @@ impl Engine {
         let mut tuner = AutoTuner::new(cfg.mem_budget, k_buckets);
         tuner.pin(cfg.k_active);
         let mut scheduler = Scheduler::new(cfg.max_batch, cfg.mem_budget);
+        scheduler.set_lookahead(cfg.admit_lookahead);
         if cfg.decode_workers > 0 {
             scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
         }
@@ -244,21 +247,32 @@ impl Engine {
 
     /// Per-token KV byte rates `(sparse, dense)` at compression level
     /// `k` — the single source feeding both admission control and the
-    /// router's `MemAware` projection ([`Engine::projected_load_bytes`]).
+    /// router's `MemAware` projection ([`Engine::projected_load_bytes`]);
+    /// the closed form is shared with the pipeline groups
+    /// ([`crate::sparse::memory::token_byte_rates`]).
     fn token_byte_rates(&self, k: usize) -> (usize, usize) {
-        let per_head = 2 * self.shape.n_layers * self.shape.n_kv;
-        (per_head * self.cfg.mode.vector_bytes(k), per_head * self.shape.d_head * 2)
+        crate::sparse::memory::token_byte_rates(
+            self.shape.n_layers,
+            self.shape.n_kv,
+            self.shape.d_head,
+            self.cfg.mode,
+            k,
+        )
     }
 
     fn admit(&mut self) -> anyhow::Result<()> {
-        let live = self.live_cache_bytes();
         let k_now = {
+            let live = self.live_cache_bytes();
             let t = &mut self.tuner;
             t.observe(live)
         };
         let (sparse_b, dense_b) = self.token_byte_rates(k_now);
         let buf = self.shape.buf_cap;
         loop {
+            // re-read live bytes per admission: each admitted prefill
+            // grows the active set, and a burst gated against one stale
+            // snapshot could collectively overshoot the budget
+            let live = self.live_cache_bytes();
             let proj = |req: &Request| {
                 Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
             };
@@ -609,7 +623,12 @@ fn finish(seq: ActiveSeq) -> Response {
     }
 }
 
-fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> u32 {
+/// Sample one token from a logits row: greedy at `temperature <= 0`,
+/// softmax sampling otherwise.  Shared by the PJRT engine and the
+/// pipeline-group coordinator ([`crate::shard::pipeline`]) so both paths
+/// consume identical RNG streams for identical logits — the basis of the
+/// pipeline-vs-single-shard bit-identity guarantee.
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> u32 {
     if temperature <= 0.0 {
         return argmax(logits) as u32;
     }
@@ -625,8 +644,11 @@ fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> u32 {
     (p.len() - 1) as u32
 }
 
+/// Seed XOR'd into every sequence's decode RNG stream (shared with the
+/// pipeline-group coordinator so both serving paths derive the same
+/// per-request streams).
 #[allow(non_snake_case)]
-fn x5wan_seed() -> u64 {
+pub(crate) fn x5wan_seed() -> u64 {
     0x53_57_41_4e // "SWAN"
 }
 

@@ -9,6 +9,18 @@
 //! * **decode-pool occupancy** — when `decode_slots > 0`, admission stops
 //!   once the active set would oversubscribe the shard's worker pool, so
 //!   per-token latency SLOs survive mixed long/short batches.
+//!
+//! One oversized request must not head-of-line-block admissible followers
+//! under a tight budget, so memory-gated admission scans a bounded
+//! lookahead window: the first admissible request among the first
+//! [`Scheduler::lookahead`] pending ones is admitted (relative order of
+//! everything else is untouched, so service stays FIFO apart from the
+//! skipped-over giants).  Skipping ages: after [`MAX_HEAD_SKIPS`]
+//! skip-overs the head becomes *sticky* (the window collapses to 1), the
+//! queue stops draining around it, and the always-admit-when-idle escape
+//! eventually takes it — so even a request whose projection exceeds the
+//! whole budget is never starved, exactly the liveness the old head-only
+//! gate provided.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -31,16 +43,43 @@ pub struct Scheduler {
     /// Decode-pool capacity in sequences (0 = unlimited): admission defers
     /// once the active set would oversubscribe the shard's worker pool.
     pub decode_slots: usize,
+    /// Memory-gated admission scans the first `lookahead` pending requests
+    /// for the first admissible one (1 = strict head-only FIFO).
+    pub lookahead: usize,
+    /// Times the current head has been skipped over by the lookahead;
+    /// at [`MAX_HEAD_SKIPS`] the head turns sticky (see the module doc).
+    head_skips: usize,
 }
+
+/// Default admission lookahead window (see [`Scheduler::lookahead`]).
+pub const DEFAULT_LOOKAHEAD: usize = 4;
+
+/// Skip-overs before the queue head becomes sticky and the lookahead
+/// window collapses to head-only — the aging bound that guarantees even
+/// a never-fitting head is eventually admitted through the idle escape.
+pub const MAX_HEAD_SKIPS: usize = 16;
 
 impl Scheduler {
     pub fn new(max_batch: usize, mem_budget: usize) -> Scheduler {
-        Scheduler { queue: VecDeque::new(), max_batch, mem_budget, decode_slots: 0 }
+        Scheduler {
+            queue: VecDeque::new(),
+            max_batch,
+            mem_budget,
+            decode_slots: 0,
+            lookahead: DEFAULT_LOOKAHEAD,
+            head_skips: 0,
+        }
     }
 
     /// Cap concurrent decodes to the worker pool's capacity (0 disables).
     pub fn set_decode_slots(&mut self, slots: usize) {
         self.decode_slots = slots;
+    }
+
+    /// Set the admission lookahead window (clamped to >= 1; 1 restores
+    /// strict head-only admission).
+    pub fn set_lookahead(&mut self, window: usize) {
+        self.lookahead = window.max(1);
     }
 
     pub fn enqueue(&mut self, req: Request) {
@@ -73,7 +112,10 @@ impl Scheduler {
     }
 
     /// Pop the next admissible request, if capacity, memory and the
-    /// decode pool allow.
+    /// decode pool allow.  Under memory pressure the first admissible
+    /// request among the first [`Scheduler::lookahead`] pending ones is
+    /// taken, so one oversized head cannot starve admissible followers;
+    /// with no budget (or an idle engine) this is plain FIFO pop.
     pub fn admit_next(
         &mut self,
         active: usize,
@@ -90,16 +132,32 @@ impl Scheduler {
         if self.decode_slots > 0 && active >= self.decode_slots {
             return None;
         }
-        let head = self.queue.front()?;
-        if self.mem_budget > 0 {
-            let projected = project(&head.req);
-            if live_bytes + projected > self.mem_budget && active > 0 {
-                // defer until memory frees up (always admit when idle so we
-                // cannot deadlock)
-                return None;
+        self.queue.front()?;
+        // unlimited memory, or an idle engine (always admit when idle so
+        // we cannot deadlock): strict FIFO
+        if self.mem_budget == 0 || active == 0 {
+            self.head_skips = 0;
+            return self.queue.pop_front();
+        }
+        // a head that has been skipped too often is sticky: collapse to
+        // head-only so the active set drains and the idle escape above
+        // eventually admits it (liveness for never-fitting projections)
+        let width = if self.head_skips >= MAX_HEAD_SKIPS { 1 } else { self.lookahead.max(1) };
+        let window = width.min(self.queue.len());
+        for i in 0..window {
+            let projected = project(&self.queue[i].req);
+            if live_bytes + projected <= self.mem_budget {
+                if i == 0 {
+                    self.head_skips = 0;
+                } else {
+                    self.head_skips += 1;
+                }
+                // remove(i) preserves the relative order of the rest
+                return self.queue.remove(i);
             }
         }
-        self.queue.pop_front()
+        // every windowed request over-projects: defer until memory frees
+        None
     }
 }
 
@@ -154,6 +212,86 @@ mod tests {
         let mut u = Scheduler::new(16, 0);
         u.enqueue(req(2, 4));
         assert!(u.admit_next(15, 0, |_| 0).is_some());
+    }
+
+    #[test]
+    fn lookahead_skips_oversized_head() {
+        let mut s = Scheduler::new(8, 1000);
+        s.set_lookahead(4);
+        s.enqueue(req(1, 900)); // projects over budget
+        s.enqueue(req(2, 100));
+        s.enqueue(req(3, 100));
+        let proj = |r: &Request| r.prompt.len();
+        // engine busy (active=1), 500 bytes live: head (900) doesn't fit,
+        // follower (100) does — admit it, keep the giant queued at front
+        let got = s.admit_next(1, 500, proj).unwrap();
+        assert_eq!(got.req.id, 2);
+        let ids: Vec<u64> = s.queued().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3], "relative order preserved");
+        // memory frees up -> the giant is admitted first (FIFO restored)
+        let got = s.admit_next(1, 0, proj).unwrap();
+        assert_eq!(got.req.id, 1);
+    }
+
+    #[test]
+    fn lookahead_window_is_bounded() {
+        let mut s = Scheduler::new(8, 1000);
+        s.set_lookahead(2);
+        s.enqueue(req(1, 900));
+        s.enqueue(req(2, 900));
+        s.enqueue(req(3, 100)); // admissible, but outside the window
+        let proj = |r: &Request| r.prompt.len();
+        assert!(s.admit_next(1, 500, proj).is_none());
+        assert_eq!(s.queue_len(), 3);
+        // widening the window finds it
+        s.set_lookahead(3);
+        assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 3);
+    }
+
+    #[test]
+    fn lookahead_one_is_head_only_and_idle_still_admits() {
+        let mut s = Scheduler::new(8, 1000);
+        s.set_lookahead(1);
+        s.enqueue(req(1, 900));
+        s.enqueue(req(2, 100));
+        let proj = |r: &Request| r.prompt.len();
+        // busy: head-only gate defers even though id=2 would fit
+        assert!(s.admit_next(1, 500, proj).is_none());
+        // idle: the head is admitted regardless of projection (no deadlock)
+        assert_eq!(s.admit_next(0, 500, proj).unwrap().req.id, 1);
+        // set_lookahead(0) clamps to 1 rather than disabling admission
+        s.set_lookahead(0);
+        assert_eq!(s.lookahead, 1);
+    }
+
+    /// A head whose projection exceeds the whole budget must not be
+    /// starved by a stream of admissible followers: after
+    /// `MAX_HEAD_SKIPS` skip-overs it turns sticky, followers stop
+    /// bypassing it, and the idle escape finally admits it.
+    #[test]
+    fn skipped_head_ages_into_sticky_and_is_never_starved() {
+        let mut s = Scheduler::new(64, 1000);
+        s.set_lookahead(4);
+        s.enqueue(req(1, 1500)); // can NEVER fit under the budget
+        let proj = |r: &Request| r.prompt.len();
+        // sustained small traffic bypasses the giant... but only
+        // MAX_HEAD_SKIPS times
+        for i in 0..MAX_HEAD_SKIPS as u64 {
+            s.enqueue(req(100 + i, 100));
+            assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 100 + i);
+        }
+        // sticky now: admissible followers no longer pass the head
+        s.enqueue(req(999, 100));
+        assert!(s.admit_next(1, 500, proj).is_none());
+        assert_eq!(s.queue_len(), 2);
+        // the active set drains -> the idle escape admits the giant
+        assert_eq!(s.admit_next(0, 500, proj).unwrap().req.id, 1);
+        // and the skip counter reset: the waiting follower pops head-first
+        assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 999);
+        // lookahead skipping works again for the next giant head
+        s.enqueue(req(2, 1500));
+        s.enqueue(req(3, 100));
+        assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 3);
     }
 
     #[test]

@@ -47,6 +47,19 @@ impl CachePolicy for SwanCache {
         self.cache.attend(q_hat, k_cur, v_cur, &mut scratch.scores, out);
     }
 
+    /// Bulk path: winnow the head of the history straight into the sparse
+    /// stores and copy only the tail into the ring
+    /// ([`HybridCache::load_prefill`]) — bit-identical to the default
+    /// per-token appends, without paying the eviction path n - buffer
+    /// times.
+    fn load_history(&mut self, k_flat: &[f32], v_flat: &[f32], d: usize, _mass: Option<&[f32]>) {
+        if d == 0 {
+            return;
+        }
+        self.cache.load_prefill(k_flat, v_flat);
+        self.seen += k_flat.len() / d;
+    }
+
     fn storage_bytes(&self) -> usize {
         self.cache.storage_bytes()
     }
@@ -103,6 +116,33 @@ mod tests {
         run_policy(&mut p, d, 100, 5);
         run_policy(&mut dense, d, 100, 5);
         assert!(p.storage_bytes() < dense.storage_bytes());
+    }
+
+    #[test]
+    fn bulk_load_history_matches_per_token_appends() {
+        let d = 16;
+        let mut r = crate::util::Pcg64::new(11);
+        let n = 23;
+        let kflat = r.normal_vec(n * d);
+        let vflat = r.normal_vec(n * d);
+        let mut bulk = SwanCache::new(d, SwanParams::new(6, 4, StorageMode::F16));
+        let mut serial = SwanCache::new(d, SwanParams::new(6, 4, StorageMode::F16));
+        bulk.load_history(&kflat, &vflat, d, None);
+        for t in 0..n {
+            serial.append(&kflat[t * d..(t + 1) * d], &vflat[t * d..(t + 1) * d]);
+        }
+        assert_eq!(bulk.seen_tokens(), serial.seen_tokens());
+        assert_eq!(bulk.retained_tokens(), serial.retained_tokens());
+        assert_eq!(bulk.storage_bytes(), serial.storage_bytes());
+        // attention over both caches must be bit-identical
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        bulk.attend(&q, &kc, &vc, &mut a);
+        serial.attend(&q, &kc, &vc, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

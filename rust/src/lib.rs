@@ -20,7 +20,10 @@
 //!   controller, plus the TCP front-end.
 //! * [`shard`] — multi-shard serving: N engines on their own threads
 //!   behind a request router with pluggable balance policies and
-//!   fleet-wide live compression retuning.
+//!   fleet-wide live compression retuning; `--pipeline P` switches the
+//!   fleet to layer-sharded pipeline groups (contiguous layer ranges per
+//!   stage, batched cross-stage activation handoff) for models whose KV
+//!   working set exceeds any single engine's budget.
 //! * [`simd`] — runtime-dispatched kernel layer (scalar / AVX2+FMA,
 //!   selected once at startup) behind every dense primitive and the
 //!   sparse CSR walks; `--kernels auto|scalar|avx2` pins the path.

@@ -38,8 +38,17 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.max_new_tokens = args.get_usize("max-new", cfg.max_new_tokens)?;
     cfg.mem_budget = args.get_usize("mem-budget", cfg.mem_budget)?;
     cfg.decode_workers = args.get_usize("decode-workers", cfg.decode_workers)?;
+    cfg.admit_lookahead = args.get_usize("admit-lookahead", cfg.admit_lookahead)?.max(1);
     cfg.shards = args.get_usize("shards", cfg.shards)?;
     anyhow::ensure!(cfg.shards >= 1, "--shards must be >= 1");
+    cfg.pipeline = args.get_usize("pipeline", cfg.pipeline)?;
+    anyhow::ensure!(cfg.pipeline >= 1, "--pipeline must be >= 1");
+    anyhow::ensure!(
+        cfg.shards % cfg.pipeline == 0,
+        "--shards ({}) must be a multiple of --pipeline ({}) so stages form whole groups",
+        cfg.shards,
+        cfg.pipeline
+    );
     cfg.balance = args.get_str("balance", &cfg.balance);
     // fail fast on a typo'd policy name (the router re-validates at launch)
     swan::shard::balance::policy_from_name(&cfg.balance)?;

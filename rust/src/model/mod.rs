@@ -7,5 +7,5 @@ pub mod generate;
 pub mod transformer;
 pub mod weights;
 
-pub use transformer::{SwanModel, SequenceState};
+pub use transformer::{Prefill, SequenceState, StageInput, SwanModel};
 pub use weights::WeightFile;

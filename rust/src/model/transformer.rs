@@ -52,6 +52,11 @@ pub struct SwanModel {
 }
 
 /// Exact prefill results (policy-independent).
+///
+/// For a full-model prefill the outer index runs over all layers; a
+/// pipeline stage's [`SwanModel::prefill_layers`] returns the same shape
+/// indexed by layer *within its range* (and leaves `logits` empty — only
+/// the last stage computes them via [`SwanModel::prefill_logits`]).
 pub struct Prefill {
     /// khat[layer][kv_head] flat [T, d_h], oldest first.
     pub khat: Vec<Vec<Vec<f32>>>,
@@ -65,6 +70,16 @@ pub struct Prefill {
     pub len: usize,
 }
 
+/// Decode-step input for one pipeline stage: the first stage embeds the
+/// sampled tokens, every later stage continues from the hidden rows the
+/// previous stage handed off.
+pub enum StageInput<'a> {
+    /// One sampled token per sequence (stage 0).
+    Tokens(&'a [u32]),
+    /// One `[d_model]` hidden row per sequence (stages 1..).
+    Hidden(Vec<Vec<f32>>),
+}
+
 /// One live sequence: per-(layer, kv-head) cache policies + position.
 pub struct SequenceState {
     pub caches: Vec<Box<dyn CachePolicy>>,
@@ -74,8 +89,15 @@ pub struct SequenceState {
 
 impl SequenceState {
     pub fn new(model: &SwanModel, kind: PolicyKind) -> SequenceState {
+        SequenceState::for_layers(model, kind, model.cfg.n_layers)
+    }
+
+    /// State covering only `n_layers` of the model — a pipeline stage
+    /// builds one per sequence for its own layer range; cache index
+    /// `(layer_within_range) * n_kv + head`.
+    pub fn for_layers(model: &SwanModel, kind: PolicyKind, n_layers: usize) -> SequenceState {
         let cfg = &model.cfg;
-        let caches = (0..cfg.n_layers * cfg.n_kv_heads)
+        let caches = (0..n_layers * cfg.n_kv_heads)
             .map(|_| kind.build(cfg.d_head))
             .collect();
         SequenceState { caches, pos: 0, n_kv: cfg.n_kv_heads }
@@ -171,9 +193,34 @@ impl SwanModel {
         SERIAL_POOL.with(|pool| self.prefill_with_pool(tokens, &mut pool.borrow_mut()))
     }
 
-    /// Prefill with the per-layer work fanned across `pool`, in three
-    /// phases per layer (each task writes only its own buffers, so the
-    /// result is bit-identical to the serial loop for any pool size):
+    /// Prefill with the per-layer work fanned across `pool`: embed, run
+    /// every layer ([`SwanModel::prefill_layers`]), project the last
+    /// position to logits ([`SwanModel::prefill_logits`]).  A pipeline
+    /// fleet runs the same three pieces split across stages, so the
+    /// composition here is what makes stage counts bit-identical.
+    pub fn prefill_with_pool(&self, tokens: &[u32], pool: &mut WorkerPool) -> Prefill {
+        let mut h = self.embed_prompt(tokens);
+        let mut pf = self.prefill_layers(&mut h, 0..self.cfg.n_layers, pool);
+        pf.logits = self.prefill_logits(&h);
+        pf
+    }
+
+    /// Embed a prompt into its initial hidden rows (`[T, d_model]` flat).
+    pub fn embed_prompt(&self, tokens: &[u32]) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut h: Vec<f32> = Vec::with_capacity(tokens.len() * d);
+        for &tok in tokens {
+            h.extend_from_slice(&self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        h
+    }
+
+    /// Run prefill through `layers` only, transforming `h` (`[T, d_model]`
+    /// flat hidden rows) in place and returning the range's rotated
+    /// (k̂, v̂) streams + attention mass, indexed by layer *within the
+    /// range* (`logits` left empty).  Three phases per layer, each task
+    /// writing only its own buffers, so the result is bit-identical to the
+    /// serial loop for any pool size:
     ///
     /// 1. projections + RoPE + rotation — one task per token (working
     ///    buffers live in the worker's [`AttentionScratch`] `tmp`);
@@ -182,22 +229,25 @@ impl SwanModel {
     ///    walks its tokens oldest-first, so per-cell accumulation order
     ///    matches the serial loop exactly;
     /// 3. output projection + residual + MLP — one task per token.
-    pub fn prefill_with_pool(&self, tokens: &[u32], pool: &mut WorkerPool) -> Prefill {
+    pub fn prefill_layers(
+        &self,
+        h: &mut [f32],
+        layers: std::ops::Range<usize>,
+        pool: &mut WorkerPool,
+    ) -> Prefill {
         let cfg = &self.cfg;
-        let (t, d, dh, nq, nkv, g) =
-            (tokens.len(), cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+        let (d, dh, nq, nkv, g) =
+            (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
+        let t = h.len() / d;
+        debug_assert_eq!(h.len(), t * d);
         let (dff, theta, eps) = (cfg.d_ff, cfg.rope_theta, cfg.norm_eps);
         let scale = 1.0 / (dh as f32).sqrt();
         let ks = crate::simd::active();
+        let n_range = layers.len();
 
-        let mut h: Vec<f32> = Vec::with_capacity(t * d);
-        for &tok in tokens {
-            h.extend_from_slice(&self.embed[tok as usize * d..(tok as usize + 1) * d]);
-        }
-
-        let mut khat = vec![vec![Vec::new(); nkv]; cfg.n_layers];
-        let mut vhat = vec![vec![Vec::new(); nkv]; cfg.n_layers];
-        let mut mass = vec![vec![vec![0.0f32; t]; nkv]; cfg.n_layers];
+        let mut khat = vec![vec![Vec::new(); nkv]; n_range];
+        let mut vhat = vec![vec![Vec::new(); nkv]; n_range];
+        let mut mass = vec![vec![vec![0.0f32; t]; nkv]; n_range];
 
         /// Phase 1 task: one token's q̂/k̂/v̂ rows.
         struct ProjTask<'a> {
@@ -219,7 +269,8 @@ impl SwanModel {
             out: Vec<f32>,
         }
 
-        for (l, lw) in self.layers.iter().enumerate() {
+        for (li, l) in layers.clone().enumerate() {
+            let lw = &self.layers[l];
             // phase 1: per-token projections into rotated q̂ and staging
             // rows for k̂/v̂ ([t, nkv*dh]; distributed to the per-head
             // [t, dh] output layout right after)
@@ -268,8 +319,8 @@ impl SwanModel {
                     ks.vecmat(xn, &lw.wv_hat, d, nkv * dh, tk.v);
                 });
             }
-            let kh_l = &mut khat[l];
-            let vh_l = &mut vhat[l];
+            let kh_l = &mut khat[li];
+            let vh_l = &mut vhat[li];
             for hd in 0..nkv {
                 kh_l[hd] = vec![0.0; t * dh];
                 vh_l[hd] = vec![0.0; t * dh];
@@ -286,7 +337,7 @@ impl SwanModel {
             let mut gtasks: Vec<HeadTask> = kh_l
                 .iter()
                 .zip(vh_l.iter())
-                .zip(mass[l].iter_mut())
+                .zip(mass[li].iter_mut())
                 .enumerate()
                 .map(|(grp, ((kh, vh), mass_g))| HeadTask {
                     grp,
@@ -356,13 +407,21 @@ impl SwanModel {
             });
         }
 
+        Prefill { khat, vhat, mass, logits: Vec::new(), len: t }
+    }
+
+    /// Final-norm + lm-head over the last hidden row of a prefill (`h` is
+    /// `[T, d_model]` flat, fully transformed by every layer).  Only the
+    /// last pipeline stage runs this.
+    pub fn prefill_logits(&self, h: &[f32]) -> Vec<f32> {
+        let (d, eps) = (self.cfg.d_model, self.cfg.norm_eps);
+        let t = h.len() / d;
         let mut xn = vec![0.0f32; d];
         let last = &h[(t - 1) * d..t * d];
         rmsnorm(last, &self.final_norm, eps, &mut xn);
-        let mut logits = vec![0.0f32; cfg.vocab];
-        vecmat(&xn, &self.lm_head, d, cfg.vocab, &mut logits);
-
-        Prefill { khat, vhat, mass, logits, len: t }
+        let mut logits = vec![0.0f32; self.cfg.vocab];
+        vecmat(&xn, &self.lm_head, d, self.cfg.vocab, &mut logits);
+        logits
     }
 
     /// One decode step through the sequence's cache policies; returns the
@@ -410,16 +469,57 @@ impl SwanModel {
         tokens: &[u32],
         pool: &mut WorkerPool,
     ) -> Vec<Vec<f32>> {
-        assert_eq!(states.len(), tokens.len(), "one token per sequence");
+        self.decode_step_pipeline(
+            states,
+            StageInput::Tokens(tokens),
+            0..self.cfg.n_layers,
+            true,
+            pool,
+        )
+    }
+
+    /// One lock-step decode iteration through `layers` only — the
+    /// pipeline-stage form of [`SwanModel::decode_step_batch`] (which is
+    /// exactly this call over the full range with token input and logits
+    /// output).  `states` must cover `layers.len()` layers (see
+    /// [`SequenceState::for_layers`]); positions advance by one per call,
+    /// so every stage of a pipeline tracks the same RoPE positions.
+    ///
+    /// Returns one row per sequence: the final logits when `emit_logits`
+    /// (the last stage), otherwise the transformed hidden rows to hand to
+    /// the next stage.  Per-layer math and task decomposition are
+    /// identical to the full-range call, which is what makes an N-stage
+    /// pipeline bit-identical to a single engine.
+    pub fn decode_step_pipeline(
+        &self,
+        states: &mut [SequenceState],
+        input: StageInput<'_>,
+        layers: std::ops::Range<usize>,
+        emit_logits: bool,
+        pool: &mut WorkerPool,
+    ) -> Vec<Vec<f32>> {
         let cfg = &self.cfg;
         let (d, dh, nq, nkv, g) =
             (cfg.d_model, cfg.d_head, cfg.n_q_heads, cfg.n_kv_heads, cfg.group());
 
+        let rows: Vec<Vec<f32>> = match input {
+            StageInput::Tokens(tokens) => {
+                assert_eq!(states.len(), tokens.len(), "one token per sequence");
+                tokens
+                    .iter()
+                    .map(|&tok| self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec())
+                    .collect()
+            }
+            StageInput::Hidden(rows) => {
+                assert_eq!(states.len(), rows.len(), "one hidden row per sequence");
+                rows
+            }
+        };
         let mut works: Vec<DecodeWork> = states
             .iter()
-            .zip(tokens)
-            .map(|(st, &tok)| DecodeWork {
-                h: self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec(),
+            .zip(rows)
+            .map(|(st, h)| DecodeWork {
+                h,
                 xn: vec![0.0; d],
                 qraw: vec![0.0; nq * dh],
                 kraw: vec![0.0; nkv * dh],
@@ -430,12 +530,13 @@ impl SwanModel {
                 proj: vec![0.0; d],
                 mid: vec![0.0; cfg.d_ff],
                 back: vec![0.0; d],
-                logits: vec![0.0; cfg.vocab],
+                logits: vec![0.0; if emit_logits { cfg.vocab } else { 0 }],
                 pos: st.pos as u32,
             })
             .collect();
 
-        for (l, lw) in self.layers.iter().enumerate() {
+        for (li, l) in layers.clone().enumerate() {
+            let lw = &self.layers[l];
             // 1. per-sequence projections into rotated q̂/k̂/v̂
             pool.for_each_mut(&mut works, |_scratch, w| {
                 rmsnorm(&w.h, &lw.attn_norm, cfg.norm_eps, &mut w.xn);
@@ -467,7 +568,7 @@ impl SwanModel {
             {
                 let mut tasks: Vec<AttnTask> = Vec::with_capacity(states.len() * nkv);
                 for (st, w) in states.iter_mut().zip(works.iter_mut()) {
-                    let caches = &mut st.caches[l * nkv..(l + 1) * nkv];
+                    let caches = &mut st.caches[li * nkv..(li + 1) * nkv];
                     let head_outs = w.attn_out.chunks_mut(g * dh);
                     let head_qs = w.qhat.chunks(g * dh);
                     for (hd, ((cache, out_h), q_h)) in
@@ -496,7 +597,7 @@ impl SwanModel {
                 pool.for_each_mut(&mut pairs, |_scratch, pair| {
                     let (st, w) = pair;
                     for hd in 0..nkv {
-                        st.caches[l * nkv + hd]
+                        st.caches[li * nkv + hd]
                             .append(&w.khat[hd * dh..(hd + 1) * dh], &w.vr[hd * dh..(hd + 1) * dh]);
                     }
                     vecmat(&w.attn_out, &lw.wo_hat, nq * dh, d, &mut w.proj);
@@ -514,14 +615,20 @@ impl SwanModel {
             }
         }
 
-        pool.for_each_mut(&mut works, |_scratch, w| {
-            rmsnorm(&w.h, &self.final_norm, cfg.norm_eps, &mut w.xn);
-            vecmat(&w.xn, &self.lm_head, d, cfg.vocab, &mut w.logits);
-        });
+        if emit_logits {
+            pool.for_each_mut(&mut works, |_scratch, w| {
+                rmsnorm(&w.h, &self.final_norm, cfg.norm_eps, &mut w.xn);
+                vecmat(&w.xn, &self.lm_head, d, cfg.vocab, &mut w.logits);
+            });
+        }
         for st in states.iter_mut() {
             st.pos += 1;
         }
-        works.into_iter().map(|w| w.logits).collect()
+        if emit_logits {
+            works.into_iter().map(|w| w.logits).collect()
+        } else {
+            works.into_iter().map(|w| w.h).collect()
+        }
     }
 
     /// Build a randomly-initialised model — no artifacts needed.  Used by
@@ -720,6 +827,71 @@ pub(crate) mod tests {
         for (a, b) in base.iter().zip(&rotated) {
             assert!((a - b).abs() < 1e-2, "{a} vs {b}");
         }
+    }
+
+    /// Splitting the layer range across two "stages" (embed+layer 0, then
+    /// layer 1+logits) must be bit-identical to the full-range call, for
+    /// both prefill and decode — the contract the pipeline fleet rests on.
+    #[test]
+    fn layer_range_split_is_bit_identical_to_full_run() {
+        let m = tiny_model(2);
+        let tokens: Vec<u32> = (0..9).map(|i| (i * 13 % 96) as u32).collect();
+        let mut pool = WorkerPool::serial();
+
+        // full-model reference
+        let pf_full = m.prefill(&tokens);
+        let kind = PolicyKind::Swan { k_active: 4, buffer: 2, mode: StorageMode::F16 };
+        let mut st_full = SequenceState::new(&m, kind);
+        st_full.load_prefill(&pf_full);
+        let mut tok = crate::tensor::ops::argmax(&pf_full.logits) as u32;
+        let mut full_stream = vec![tok];
+        for _ in 0..6 {
+            let logits = m.decode_step(&mut st_full, tok);
+            tok = crate::tensor::ops::argmax(&logits) as u32;
+            full_stream.push(tok);
+        }
+
+        // two-stage split: prefill
+        let mut h = m.embed_prompt(&tokens);
+        let pf0 = m.prefill_layers(&mut h, 0..1, &mut pool);
+        let pf1 = m.prefill_layers(&mut h, 1..2, &mut pool);
+        let logits = m.prefill_logits(&h);
+        assert_eq!(logits, pf_full.logits, "stage-split prefill logits diverged");
+        assert_eq!(pf0.khat[0], pf_full.khat[0]);
+        assert_eq!(pf1.khat[0], pf_full.khat[1]);
+
+        let mut st0 = SequenceState::for_layers(&m, kind, 1);
+        let mut st1 = SequenceState::for_layers(&m, kind, 1);
+        st0.load_prefill(&pf0);
+        st1.load_prefill(&pf1);
+
+        // two-stage split: decode
+        let mut tok = crate::tensor::ops::argmax(&logits) as u32;
+        let mut split_stream = vec![tok];
+        for _ in 0..6 {
+            let h = m.decode_step_pipeline(
+                std::slice::from_mut(&mut st0),
+                StageInput::Tokens(&[tok]),
+                0..1,
+                false,
+                &mut pool,
+            );
+            let logits = m
+                .decode_step_pipeline(
+                    std::slice::from_mut(&mut st1),
+                    StageInput::Hidden(h),
+                    1..2,
+                    true,
+                    &mut pool,
+                )
+                .pop()
+                .unwrap();
+            tok = crate::tensor::ops::argmax(&logits) as u32;
+            split_stream.push(tok);
+        }
+        assert_eq!(full_stream, split_stream, "pipeline split diverged from full run");
+        assert_eq!(st0.pos, st_full.pos);
+        assert_eq!(st1.pos, st_full.pos);
     }
 
     #[test]

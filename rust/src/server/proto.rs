@@ -4,6 +4,12 @@
 //! code + human message) rather than a bare string; the connection loop
 //! answers `ERR <code> <message>` and keeps the connection open, so a
 //! client typo never costs the session.
+//!
+//! The command set is topology-agnostic: in pipeline mode (`--pipeline`)
+//! `GEN` is placed on a pipeline *group*, `SET k_active` retunes every
+//! stage of every group, and `STATS` blocks additionally carry one
+//! `stage i: layers a..b … queued=…` line per stage (queue depth is the
+//! pipeline-bubble indicator).
 
 /// A parsed client command.
 #[derive(Clone, Debug, PartialEq)]

@@ -113,10 +113,14 @@ pub fn serve_with_ready(
 
     let listener = TcpListener::bind(&cfg.bind)?;
     let addr = listener.local_addr()?;
+    let topology = if cfg.pipeline > 1 {
+        format!("{} groups x {} stages (layer-sharded)", router.n_shards(), cfg.pipeline)
+    } else {
+        format!("shards={}", router.n_shards())
+    };
     println!(
-        "swan serving {} on {addr} (shards={} balance={} k_active={} buffer={} mode={} workers/shard={})",
+        "swan serving {} on {addr} ({topology} balance={} k_active={} buffer={} mode={} workers/shard={})",
         cfg.model,
-        router.n_shards(),
         router.policy_name(),
         cfg.k_active,
         cfg.buffer,

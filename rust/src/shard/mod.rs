@@ -19,14 +19,24 @@
 //!   is what makes SWAN's compression knob *fleet-wide* and live: one
 //!   wire command retunes every engine without restarting any of them;
 //! * [`admin`] — the fleet view: per-shard stats gathered concurrently
-//!   plus aggregated totals across all shard metrics.
+//!   plus aggregated totals across all shard metrics;
+//! * [`pipeline`] — layer-sharding: with `--pipeline P` the fleet's
+//!   shard slots form `shards / P` pipeline *groups* of `P` stages, each
+//!   stage owning a contiguous layer range of the (rust-native) model
+//!   with cross-stage activation handoff ([`pipeline::StageCmd::Forward`]).
+//!   A group presents the same [`shard::ShardCmd`] interface an engine
+//!   shard does, so placement, the fleet-wide `SET k_active` broadcast
+//!   and STATS work identically — this is the mode that serves a model
+//!   whose KV working set exceeds any single engine's budget.
 //!
 //! The TCP front-end (`crate::server::tcp`) talks only to the router;
 //! `ServeConfig::shards` / `ServeConfig::balance` size the fleet, and
-//! `ServeConfig::decode_workers` is per shard.
+//! `ServeConfig::decode_workers` is per shard (per *stage* in pipeline
+//! mode).
 
 pub mod admin;
 pub mod balance;
+pub mod pipeline;
 pub mod router;
 pub mod shard;
 

@@ -1,0 +1,781 @@
+//! Pipeline layer-sharding: one *group* of stage threads serves a model
+//! too big for any single engine's memory budget by giving each stage a
+//! contiguous layer range and flowing every sequence through the chain.
+//!
+//! Topology (one group):
+//!
+//! ```text
+//!   coordinator ──Prefill/Forward──▶ stage 0 ──▶ stage 1 ──▶ … ──▶ stage S-1
+//!        ▲                         (embed +      (middle        (final norm
+//!        └────────── GroupEvent ◀── layers a..b)  layers)        + logits)
+//! ```
+//!
+//! * **Stages** own `layers[a..b]` of an `Arc<SwanModel>` plus the
+//!   per-sequence [`SequenceState`] caches for exactly those layers —
+//!   the fleet KV budget a group receives is therefore split across its
+//!   stages *by layer count*, automatically.  Stage 0 embeds sampled
+//!   tokens; the last stage runs final-norm + lm-head.
+//! * **Activation handoff** is the [`StageCmd::Forward`] hop: one message
+//!   per decode iteration carrying the whole ready set's hidden rows, so
+//!   a stage processes its full batch before handing off (no per-sequence
+//!   ping-pong).
+//! * **The coordinator** presents the standard [`ShardCmd`] interface, so
+//!   the router places sequences onto pipeline *groups* exactly like it
+//!   places them onto engine shards, `SET k_active` broadcasts reach
+//!   every stage, and fleet STATS renders per-stage queue depth (the
+//!   bubble indicator) alongside the usual engine metrics.
+//!
+//! Determinism: every stage runs [`SwanModel::decode_step_pipeline`] /
+//! [`SwanModel::prefill_layers`] — the exact functions a single engine
+//! composes over the full range — and sampling shares the engine's
+//! per-request RNG streams, so an S-stage group decodes bit-identically
+//! to a single-shard run of the *native* model on the same seed, for any
+//! S (`tests/pipeline.rs`).  A plain `--shards 1` fleet serves through
+//! the PJRT graphs instead — across that backend boundary outputs agree
+//! to float tolerance, not bit-for-bit.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+use crate::coordinator::engine::{sample, x5wan_seed, DECODE_SLOTS_PER_WORKER};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response};
+use crate::coordinator::scheduler::Scheduler;
+use crate::kvcache::PolicyKind;
+use crate::model::transformer::{SequenceState, StageInput, SwanModel};
+use crate::shard::shard::{ShardCmd, ShardHandle, ShardStatus};
+use crate::swan::batch::WorkerPool;
+use crate::util::Pcg64;
+
+/// Split `n_layers` into `n_stages` contiguous ranges, earliest stages
+/// taking the remainder (so stage loads differ by at most one layer).
+pub fn partition_layers(n_layers: usize, n_stages: usize) -> anyhow::Result<Vec<Range<usize>>> {
+    anyhow::ensure!(n_stages >= 1, "pipeline needs at least one stage");
+    anyhow::ensure!(
+        n_layers >= n_stages,
+        "cannot split {n_layers} layers across {n_stages} stages (every stage needs >= 1 layer)"
+    );
+    let base = n_layers / n_stages;
+    let rem = n_layers % n_stages;
+    let mut out = Vec::with_capacity(n_stages);
+    let mut start = 0;
+    for s in 0..n_stages {
+        let len = base + usize::from(s < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n_layers);
+    Ok(out)
+}
+
+/// Commands a pipeline stage accepts.  `Prefill` and `Forward` travel the
+/// stage chain (each stage transforms and hands off); the rest are
+/// broadcast by the group coordinator.
+pub enum StageCmd {
+    /// Admit one sequence: run this stage's layers over the prompt's
+    /// hidden rows (`[T, d_model]` flat), seed the stage caches, hand the
+    /// transformed rows downstream.  The last stage answers the
+    /// coordinator with the prompt's final logits.
+    Prefill { seq: u64, h: Vec<f32>, k_active: usize },
+    /// One decode iteration for the whole ready set: stage 0 consumes
+    /// `tokens` (one sampled token per sequence), later stages consume
+    /// `h` (one hidden row per sequence).  The last stage answers the
+    /// coordinator with one logits row per sequence.
+    Forward { seqs: Vec<u64>, tokens: Vec<u32>, h: Vec<Vec<f32>> },
+    /// Drop the stage caches of finished sequences.
+    Retire { seqs: Vec<u64> },
+    /// Record the compression level for newly admitted sequences; ack the
+    /// applied (d_head-clamped) value.
+    SetK { k: usize, ack: mpsc::Sender<usize> },
+    /// Render this stage's stats line.
+    Stats { reply: mpsc::Sender<String> },
+    Shutdown,
+}
+
+/// What the stage chain sends back to the group coordinator.  Results
+/// come from the last stage; `StageFailed` can come from ANY stage (via
+/// its [`FailureGuard`]) — without it a dead middle stage would leave
+/// the coordinator blocked forever, since the last stage's live sender
+/// keeps the event channel open.
+pub enum GroupEvent {
+    /// Prompt fully prefilled through every stage.
+    Prefilled { seq: u64, logits: Vec<f32> },
+    /// Decode iteration complete: one logits row per forwarded sequence.
+    Stepped { seqs: Vec<u64>, logits: Vec<Vec<f32>> },
+    /// A stage thread exited abnormally; the chain is unrecoverable.
+    StageFailed { stage: usize },
+}
+
+/// Sends [`GroupEvent::StageFailed`] when a stage thread exits without
+/// being disarmed.  Disarmed only on a clean `Shutdown`; every other
+/// exit — downstream-gone breaks AND panics (drops run during
+/// unwinding) — reports, so the coordinator's event wait always wakes.
+struct FailureGuard {
+    stage: usize,
+    events: mpsc::Sender<GroupEvent>,
+    armed: bool,
+}
+
+impl Drop for FailureGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.events.send(GroupEvent::StageFailed { stage: self.stage });
+        }
+    }
+}
+
+/// Lock-free per-stage load view, rendered into fleet STATS so pipeline
+/// bubbles (a stage with a persistent command backlog) are visible.
+/// Sequence counts and KV bytes are rendered from the stage's own state
+/// in its `Stats` handler — only the cross-thread-read values live here.
+#[derive(Debug, Default)]
+pub struct StageStatus {
+    /// Commands sent to the stage but not yet fully processed.
+    pub queued: AtomicUsize,
+    /// Compression level for newly admitted sequences.
+    pub k_active: AtomicUsize,
+}
+
+/// Where a stage hands its output: the next stage, or (from the last
+/// stage) back to the group coordinator.
+enum Downstream {
+    Stage(mpsc::Sender<StageCmd>, Arc<StageStatus>),
+    Coordinator(mpsc::Sender<GroupEvent>),
+}
+
+/// The group coordinator's handle on one stage.
+struct StageHandle {
+    tx: mpsc::Sender<StageCmd>,
+    status: Arc<StageStatus>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl StageHandle {
+    /// Send with the queue-depth bump the status contract requires.
+    fn send(&self, cmd: StageCmd) -> anyhow::Result<()> {
+        self.status.queued.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(cmd).map_err(|_| anyhow::anyhow!("pipeline stage is gone"))
+    }
+}
+
+fn policy_kind(cfg: &ServeConfig, k_active: usize) -> PolicyKind {
+    if cfg.dense_baseline {
+        PolicyKind::Dense
+    } else {
+        PolicyKind::Swan { k_active, buffer: cfg.buffer, mode: cfg.mode }
+    }
+}
+
+// ----------------------------------------------------------------------
+// stage thread
+// ----------------------------------------------------------------------
+
+struct StageCtx {
+    group: usize,
+    stage: usize,
+    layers: Range<usize>,
+    model: Arc<SwanModel>,
+    cfg: ServeConfig,
+    next: Downstream,
+    status: Arc<StageStatus>,
+    /// Direct line to the coordinator, used only by the [`FailureGuard`]
+    /// (results travel the chain; failure must not).
+    events: mpsc::Sender<GroupEvent>,
+}
+
+fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
+    let StageCtx { group, stage, layers, model, cfg, next, status, events } = ctx;
+    let mut guard = FailureGuard { stage, events, armed: true };
+    let first = layers.start == 0;
+    let mut pool = WorkerPool::new(cfg.decode_workers);
+    let mut seqs: HashMap<u64, SequenceState> = HashMap::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            StageCmd::Prefill { seq, mut h, k_active } => {
+                let pf = model.prefill_layers(&mut h, layers.clone(), &mut pool);
+                let mut st =
+                    SequenceState::for_layers(&model, policy_kind(&cfg, k_active), layers.len());
+                st.load_prefill(&pf);
+                seqs.insert(seq, st);
+                let sent = match &next {
+                    Downstream::Stage(tx, st_next) => {
+                        st_next.queued.fetch_add(1, Ordering::Relaxed);
+                        tx.send(StageCmd::Prefill { seq, h, k_active }).is_ok()
+                    }
+                    Downstream::Coordinator(tx) => {
+                        let logits = model.prefill_logits(&h);
+                        tx.send(GroupEvent::Prefilled { seq, logits }).is_ok()
+                    }
+                };
+                if !sent {
+                    log::error!("pipeline group {group} stage {stage}: downstream gone");
+                    break;
+                }
+            }
+            StageCmd::Forward { seqs: ids, tokens, h } => {
+                // pull the batch's states out in forward order (disjoint
+                // &mut for decode_step_pipeline), then put them back
+                let mut states: Vec<SequenceState> = ids
+                    .iter()
+                    .map(|id| {
+                        seqs.remove(id).unwrap_or_else(|| {
+                            panic!("stage {stage} has no state for sequence {id}")
+                        })
+                    })
+                    .collect();
+                let emit_logits = matches!(next, Downstream::Coordinator(_));
+                let input = if first {
+                    StageInput::Tokens(&tokens)
+                } else {
+                    StageInput::Hidden(h)
+                };
+                let out = model.decode_step_pipeline(
+                    &mut states,
+                    input,
+                    layers.clone(),
+                    emit_logits,
+                    &mut pool,
+                );
+                for (id, st) in ids.iter().zip(states) {
+                    seqs.insert(*id, st);
+                }
+                let sent = match &next {
+                    Downstream::Stage(tx, st_next) => {
+                        st_next.queued.fetch_add(1, Ordering::Relaxed);
+                        tx.send(StageCmd::Forward { seqs: ids, tokens: Vec::new(), h: out })
+                            .is_ok()
+                    }
+                    Downstream::Coordinator(tx) => {
+                        tx.send(GroupEvent::Stepped { seqs: ids, logits: out }).is_ok()
+                    }
+                };
+                if !sent {
+                    log::error!("pipeline group {group} stage {stage}: downstream gone");
+                    break;
+                }
+            }
+            StageCmd::Retire { seqs: ids } => {
+                for id in ids {
+                    seqs.remove(&id);
+                }
+            }
+            StageCmd::SetK { k, ack } => {
+                let applied = k.clamp(1, model.cfg.d_head);
+                status.k_active.store(applied, Ordering::Relaxed);
+                let _ = ack.send(applied);
+            }
+            StageCmd::Stats { reply } => {
+                let kv: usize = seqs.values().map(|s| s.storage_bytes()).sum();
+                let _ = reply.send(format!(
+                    "stage {stage}: layers {}..{} k_active={} queued={} seqs={} kv={}\n",
+                    layers.start,
+                    layers.end,
+                    status.k_active.load(Ordering::Relaxed),
+                    // this Stats command itself is still in flight
+                    status.queued.load(Ordering::Relaxed).saturating_sub(1),
+                    seqs.len(),
+                    crate::sparse::memory::human_bytes(kv),
+                ));
+            }
+            StageCmd::Shutdown => {
+                guard.armed = false;
+                break;
+            }
+        }
+        status.queued.fetch_sub(1, Ordering::Relaxed);
+    }
+    // every other exit (downstream gone, rx disconnect, panic unwind)
+    // leaves the guard armed: its Drop reports StageFailed — harmlessly
+    // a no-op when the coordinator itself is already gone
+}
+
+// ----------------------------------------------------------------------
+// group coordinator
+// ----------------------------------------------------------------------
+
+/// One live sequence from the coordinator's point of view (the stage
+/// caches live on the stages; the coordinator owns sampling + stats).
+struct GroupSeq {
+    req: Request,
+    produced: Vec<u32>,
+    next_token: u32,
+    rng: Pcg64,
+    stats: RequestStats,
+    /// Compression level the sequence was admitted at (fixed for life).
+    k_active: usize,
+    /// Prompt tokens actually prefilled (>= 1; empty prompts use a dummy).
+    prompt_len: usize,
+    finished: bool,
+}
+
+impl GroupSeq {
+    /// Tokens resident in the stage caches right now.
+    fn cached_tokens(&self) -> usize {
+        self.prompt_len + self.stats.decode_steps
+    }
+}
+
+struct Group {
+    id: usize,
+    model: Arc<SwanModel>,
+    cfg: ServeConfig,
+    stages: Vec<StageHandle>,
+    ev_rx: mpsc::Receiver<GroupEvent>,
+    scheduler: Scheduler,
+    metrics: Arc<Metrics>,
+    active: Vec<GroupSeq>,
+    waiters: HashMap<u64, mpsc::Sender<anyhow::Result<Response>>>,
+    /// Compression level for newly admitted sequences.
+    k_now: usize,
+    next_id: u64,
+}
+
+impl Group {
+    /// Per-token KV byte rates `(sparse, dense)` across the whole model
+    /// at compression `k` — the same closed form engine shards use
+    /// ([`crate::sparse::memory::token_byte_rates`]), summed over every
+    /// stage's layer slice.
+    fn token_byte_rates(&self, k: usize) -> (usize, usize) {
+        let mc = &self.model.cfg;
+        crate::sparse::memory::token_byte_rates(
+            mc.n_layers,
+            mc.n_kv_heads,
+            mc.d_head,
+            self.cfg.mode,
+            k,
+        )
+    }
+
+    /// Serving-accounting bytes one sequence holds across all stages.
+    /// Exact (not an estimate): sequences keep their admission-time
+    /// `k_active` for life, and the hybrid cache charges precisely this
+    /// closed form per token (locked down by `prop_hybrid_cache_conserves
+    /// _tokens`), so no stage round trip is needed.
+    fn seq_bytes(&self, seq: &GroupSeq) -> usize {
+        let tokens = seq.cached_tokens();
+        let (sparse_b, dense_b) = self.token_byte_rates(seq.k_active);
+        if self.cfg.dense_baseline {
+            return tokens * dense_b;
+        }
+        let dense_tokens = tokens.min(self.cfg.buffer);
+        dense_tokens * dense_b + (tokens - dense_tokens) * sparse_b
+    }
+
+    fn live_bytes(&self) -> usize {
+        self.active.iter().map(|s| self.seq_bytes(s)).sum()
+    }
+
+    fn dense_equiv_bytes(&self) -> usize {
+        let (_, dense_b) = self.token_byte_rates(0);
+        self.active.iter().map(|s| s.cached_tokens() * dense_b).sum()
+    }
+
+    /// Dense window for admission projections: a dense-baseline sequence
+    /// stores *every* token at the dense rate, not just the buffer.
+    fn projection_buffer(&self) -> usize {
+        if self.cfg.dense_baseline {
+            usize::MAX
+        } else {
+            self.cfg.buffer
+        }
+    }
+
+    /// Projected KV load given already-computed `live` bytes (callers
+    /// hold one `live_bytes()` walk per publish/stats render).
+    fn projected_load_bytes(&self, live: usize) -> usize {
+        let (sparse_b, dense_b) = self.token_byte_rates(self.k_now);
+        let buf = self.projection_buffer();
+        let queued: usize = self
+            .scheduler
+            .queued()
+            .map(|r| {
+                Scheduler::projected_bytes(r.prompt.len(), r.max_new_tokens, sparse_b, dense_b, buf)
+            })
+            .sum();
+        live + queued
+    }
+
+    fn has_work(&self) -> bool {
+        !self.active.is_empty() || self.scheduler.queue_len() > 0
+    }
+
+    fn publish(&self, status: &ShardStatus) {
+        let live = self.live_bytes();
+        status.queued.store(self.scheduler.queue_len(), Ordering::Relaxed);
+        status.active.store(self.active.len(), Ordering::Relaxed);
+        status.live_bytes.store(live, Ordering::Relaxed);
+        status.projected_bytes.store(self.projected_load_bytes(live), Ordering::Relaxed);
+        status.k_active.store(self.k_now, Ordering::Relaxed);
+        self.metrics.cache_bytes.store(live, Ordering::Relaxed);
+        self.metrics.dense_equiv_bytes.store(self.dense_equiv_bytes(), Ordering::Relaxed);
+    }
+
+    /// Broadcast a retune to every stage and gather the acks; returns the
+    /// applied (clamped) level.
+    fn set_k_active(&mut self, k: usize) -> usize {
+        let mut applied = k.clamp(1, self.model.cfg.d_head);
+        let mut pending = Vec::with_capacity(self.stages.len());
+        for s in &self.stages {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            if s.send(StageCmd::SetK { k, ack: ack_tx }).is_ok() {
+                pending.push(ack_rx);
+            }
+        }
+        for rx in pending {
+            if let Ok(a) = rx.recv() {
+                applied = a;
+            }
+        }
+        self.k_now = applied;
+        applied
+    }
+
+    /// Admit every currently-admissible request: push its prompt through
+    /// the stage chain, sample the first token from the returned logits.
+    fn admit(&mut self) -> anyhow::Result<()> {
+        loop {
+            let live = self.live_bytes();
+            let (sparse_b, dense_b) = self.token_byte_rates(self.k_now);
+            let buf = self.projection_buffer();
+            let proj = |req: &Request| {
+                Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
+            };
+            let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
+                break;
+            };
+            let queue_time = pending.enqueued.elapsed();
+            let req = pending.req;
+            let rid = req.id;
+            let t0 = Instant::now();
+            let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
+            let h = self.model.embed_prompt(tokens);
+            self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: self.k_now })?;
+            let logits = loop {
+                match self.ev_rx.recv() {
+                    Ok(GroupEvent::Prefilled { seq, logits }) if seq == rid => break logits,
+                    Ok(GroupEvent::StageFailed { stage }) => {
+                        anyhow::bail!("pipeline group {}: stage {stage} died", self.id)
+                    }
+                    Ok(_) => anyhow::bail!("pipeline group {}: out-of-order prefill event", self.id),
+                    Err(_) => anyhow::bail!("pipeline group {}: stage chain died", self.id),
+                }
+            };
+            let mut stats = RequestStats { queue_time, ..Default::default() };
+            stats.prefill_time = t0.elapsed();
+            self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
+            self.metrics.prefill_tokens.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+            let next_token = sample(&logits, req.temperature, &mut Pcg64::new(rid));
+            self.active.push(GroupSeq {
+                rng: Pcg64::new(rid ^ x5wan_seed()),
+                produced: vec![next_token],
+                next_token,
+                stats,
+                k_active: self.k_now,
+                prompt_len: tokens.len(),
+                finished: false,
+                req,
+            });
+        }
+        Ok(())
+    }
+
+    /// One decode iteration: forward the whole ready set down the chain,
+    /// sample from the last stage's logits, retire finished sequences.
+    fn decode_iteration(&mut self) -> anyhow::Result<()> {
+        // mark sequences that already hit their budget / stop token
+        for seq in &mut self.active {
+            if seq.produced.len() >= seq.req.max_new_tokens {
+                seq.finished = true;
+            }
+            if let Some(stop) = seq.req.stop_token {
+                if seq.next_token == stop {
+                    seq.finished = true;
+                }
+            }
+        }
+
+        let ready: Vec<usize> =
+            (0..self.active.len()).filter(|&i| !self.active[i].finished).collect();
+        if !ready.is_empty() {
+            let ids: Vec<u64> = ready.iter().map(|&i| self.active[i].req.id).collect();
+            let toks: Vec<u32> = ready.iter().map(|&i| self.active[i].next_token).collect();
+            let t0 = Instant::now();
+            self.stages[0].send(StageCmd::Forward { seqs: ids.clone(), tokens: toks, h: Vec::new() })?;
+            let logits = loop {
+                match self.ev_rx.recv() {
+                    Ok(GroupEvent::Stepped { seqs, logits }) => {
+                        anyhow::ensure!(seqs == ids, "pipeline group {}: iteration mismatch", self.id);
+                        break logits;
+                    }
+                    Ok(GroupEvent::StageFailed { stage }) => {
+                        anyhow::bail!("pipeline group {}: stage {stage} died", self.id)
+                    }
+                    Ok(_) => anyhow::bail!("pipeline group {}: out-of-order step event", self.id),
+                    Err(_) => anyhow::bail!("pipeline group {}: stage chain died", self.id),
+                }
+            };
+            // full-chain latency; charged to every sequence of the
+            // iteration (a pipeline shares its step wall-clock)
+            let step_time = t0.elapsed();
+            for (&i, l) in ready.iter().zip(&logits) {
+                let seq = &mut self.active[i];
+                let next = sample(l, seq.req.temperature, &mut seq.rng);
+                seq.next_token = next;
+                seq.produced.push(next);
+                seq.stats.decode_steps += 1;
+                seq.stats.decode_time += step_time;
+                self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
+            }
+            self.metrics.decode_step_ns.record(step_time.as_nanos() as f64);
+            let (_, dense_b) = self.token_byte_rates(0);
+            for &i in &ready {
+                let bytes = self.seq_bytes(&self.active[i]);
+                let seq = &mut self.active[i];
+                seq.stats.peak_cache_bytes = seq.stats.peak_cache_bytes.max(bytes);
+                seq.stats.dense_equiv_bytes = seq.cached_tokens() * dense_b;
+            }
+        }
+
+        // retire finished sequences (submission order preserved)
+        if self.active.iter().any(|s| s.finished) {
+            let mut done_ids = Vec::new();
+            let mut keep = Vec::with_capacity(self.active.len());
+            for seq in self.active.drain(..) {
+                if seq.finished {
+                    done_ids.push(seq.req.id);
+                    self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response {
+                        id: seq.req.id,
+                        text: decode_tokens(&seq.produced),
+                        tokens: seq.produced,
+                        stats: seq.stats,
+                    };
+                    if let Some(tx) = self.waiters.remove(&resp.id) {
+                        let _ = tx.send(Ok(resp));
+                    }
+                } else {
+                    keep.push(seq);
+                }
+            }
+            self.active = keep;
+            for s in &self.stages {
+                let _ = s.send(StageCmd::Retire { seqs: done_ids.clone() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the group's STATS block: header, per-stage lines (queue
+    /// depth = the bubble indicator), engine-style metrics.
+    fn stats_block(&self) -> String {
+        use crate::sparse::memory::human_bytes;
+        let live = self.live_bytes();
+        let mut out = format!(
+            "shard {}: pipeline stages={} k_active={} queued={} active={} kv={} projected={}\n",
+            self.id,
+            self.stages.len(),
+            self.k_now,
+            self.scheduler.queue_len(),
+            self.active.len(),
+            human_bytes(live),
+            human_bytes(self.projected_load_bytes(live)),
+        );
+        let mut pending = Vec::with_capacity(self.stages.len());
+        for s in &self.stages {
+            let (tx, rx) = mpsc::channel();
+            if s.send(StageCmd::Stats { reply: tx }).is_ok() {
+                pending.push(rx);
+            }
+        }
+        for rx in pending {
+            if let Ok(line) = rx.recv() {
+                out.push_str("  ");
+                out.push_str(&line);
+            }
+        }
+        for line in self.metrics.snapshot().lines() {
+            out.push_str("  ");
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
+
+    fn shutdown(&mut self) {
+        for s in &self.stages {
+            let _ = s.send(StageCmd::Shutdown);
+        }
+        for s in &mut self.stages {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// The coordinator thread: the pipeline-group analogue of `shard_loop`.
+fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) {
+    loop {
+        // drain commands (non-blocking while busy, blocking when idle)
+        loop {
+            let cmd = if g.has_work() {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return g.shutdown(),
+                }
+            } else {
+                g.publish(status);
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return g.shutdown(),
+                }
+            };
+            match cmd {
+                ShardCmd::Gen { mut req, reply } => {
+                    if req.id == 0 {
+                        req.id = g.next_id;
+                    }
+                    g.next_id = g.next_id.max(req.id) + 1;
+                    g.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+                    g.waiters.insert(req.id, reply);
+                    g.scheduler.enqueue(req);
+                    g.publish(status);
+                }
+                ShardCmd::SetK { k, ack } => {
+                    let applied = g.set_k_active(k);
+                    status.k_active.store(applied, Ordering::Relaxed);
+                    let _ = ack.send(applied);
+                }
+                ShardCmd::Stats { reply } => {
+                    let _ = reply.send(g.stats_block());
+                }
+                ShardCmd::Shutdown => return g.shutdown(),
+            }
+        }
+        let step = g.admit().and_then(|()| g.decode_iteration());
+        if let Err(e) = step {
+            log::error!("pipeline group {}: {e:#}", g.id);
+            // the stage chain is unrecoverable: fail every waiter and stop
+            for (rid, tx) in g.waiters.drain() {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "request {rid} lost: pipeline group {} failed: {e:#}",
+                    g.id
+                )));
+            }
+            return g.shutdown();
+        }
+        g.publish(status);
+    }
+}
+
+/// Launch one pipeline group of `cfg.pipeline` stages over `model` and
+/// return it as a router-compatible [`ShardHandle`].  `cfg.mem_budget`
+/// must already be this group's slice of the fleet budget; each stage's
+/// share of it follows its layer count by construction (the stage only
+/// holds caches for its own layers).
+pub fn launch_group(
+    id: usize,
+    model: Arc<SwanModel>,
+    cfg: &ServeConfig,
+) -> anyhow::Result<ShardHandle> {
+    let ranges = partition_layers(model.cfg.n_layers, cfg.pipeline.max(1))?;
+    let k_now = cfg.k_active.clamp(1, model.cfg.d_head);
+
+    // build the chain back to front so every stage knows its downstream
+    let (ev_tx, ev_rx) = mpsc::channel();
+    let mut stages: Vec<StageHandle> = Vec::with_capacity(ranges.len());
+    let mut next: Option<(mpsc::Sender<StageCmd>, Arc<StageStatus>)> = None;
+    for (s, layers) in ranges.iter().enumerate().rev() {
+        let (tx, rx) = mpsc::channel();
+        let status = Arc::new(StageStatus::default());
+        status.k_active.store(k_now, Ordering::Relaxed);
+        let downstream = match next.take() {
+            Some((ntx, nst)) => Downstream::Stage(ntx, nst),
+            None => Downstream::Coordinator(ev_tx.clone()),
+        };
+        let ctx = StageCtx {
+            group: id,
+            stage: s,
+            layers: layers.clone(),
+            model: model.clone(),
+            cfg: cfg.clone(),
+            next: downstream,
+            status: status.clone(),
+            events: ev_tx.clone(),
+        };
+        let join = std::thread::Builder::new()
+            .name(format!("swan-stage-{id}-{s}"))
+            .spawn(move || stage_loop(ctx, rx))
+            .expect("spawning pipeline stage thread");
+        next = Some((tx.clone(), status.clone()));
+        stages.push(StageHandle { tx, status, join: Some(join) });
+    }
+    stages.reverse();
+
+    let mut scheduler = Scheduler::new(cfg.max_batch, cfg.mem_budget);
+    scheduler.set_lookahead(cfg.admit_lookahead);
+    if cfg.decode_workers > 0 {
+        scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
+    }
+    let metrics = Arc::new(Metrics::default());
+    let group = Group {
+        id,
+        model,
+        cfg: cfg.clone(),
+        stages,
+        ev_rx,
+        scheduler,
+        metrics: metrics.clone(),
+        active: Vec::new(),
+        waiters: HashMap::new(),
+        k_now,
+        next_id: 1,
+    };
+
+    let status = Arc::new(ShardStatus::default());
+    status.k_active.store(k_now, Ordering::Relaxed);
+    let (tx, rx) = mpsc::channel();
+    let thread_status = status.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("swan-pipegroup-{id}"))
+        .spawn(move || group_loop(group, rx, &thread_status))
+        .expect("spawning pipeline group thread");
+    Ok(ShardHandle::from_parts(id, tx, status, metrics, Some(join)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_contiguously_and_balances() {
+        for (nl, ns) in [(4usize, 1usize), (4, 2), (5, 2), (7, 3), (8, 4), (3, 3)] {
+            let ranges = partition_layers(nl, ns).unwrap();
+            assert_eq!(ranges.len(), ns);
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, nl);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must be contiguous");
+            }
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "stage loads differ by more than one layer: {lens:?}");
+            assert!(lens.iter().all(|&l| l >= 1));
+        }
+    }
+
+    #[test]
+    fn partition_rejects_more_stages_than_layers() {
+        assert!(partition_layers(2, 3).is_err());
+        assert!(partition_layers(4, 0).is_err());
+    }
+
+    // End-to-end pipeline-vs-single-shard bit-identity lives in
+    // rust/tests/pipeline.rs (synthetic model, no artifacts needed).
+}

@@ -29,13 +29,23 @@ pub struct Router {
 }
 
 impl Router {
-    /// Launch `cfg.shards` engines (each on its own thread, each with its
-    /// own scheduler, worker pool, and `mem_budget / shards` slice of the
-    /// KV budget) and front them with the configured balance policy.
-    /// Shard bring-up (artifact load + graph warmup) runs concurrently,
-    /// so fleet startup costs ~one engine launch, not N.
+    /// Launch the fleet and front it with the configured balance policy.
+    ///
+    /// * `cfg.pipeline == 1` (default): `cfg.shards` PJRT engines, each on
+    ///   its own thread with its own scheduler, worker pool and a
+    ///   `mem_budget / shards` KV slice.  Bring-up (artifact load + graph
+    ///   warmup) runs concurrently, so fleet startup costs ~one engine
+    ///   launch, not N.
+    /// * `cfg.pipeline > 1`: layer-sharded mode — the shard slots form
+    ///   `shards / pipeline` pipeline groups of `pipeline` stages each
+    ///   over one shared rust-native model; every group registers as one
+    ///   placeable shard, so balance policies, `SET k_active` broadcast
+    ///   and fleet STATS are mode-agnostic.
     pub fn launch(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Router> {
         anyhow::ensure!(cfg.shards >= 1, "shards must be >= 1, got {}", cfg.shards);
+        if cfg.pipeline > 1 {
+            return Router::launch_pipeline(artifacts_dir, cfg);
+        }
         let policy = policy_from_name(&cfg.balance)?;
         let per_shard_budget =
             if cfg.mem_budget == 0 { 0 } else { (cfg.mem_budget / cfg.shards).max(1) };
@@ -60,6 +70,46 @@ impl Router {
                 .map_err(|_| anyhow::anyhow!("shard {id} launch thread panicked"))?
                 .with_context(|| format!("launching shard {id}"))?;
             shards.push(ShardHandle::spawn(id, engine));
+        }
+        Ok(Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) })
+    }
+
+    /// Pipeline-sharded launch: `shards / pipeline` groups of `pipeline`
+    /// stages each, over one shared rust-native model (the AOT graphs are
+    /// whole-model artifacts, so layer-range execution runs on the native
+    /// path; see `swan::shard::pipeline`).  The fleet KV budget splits
+    /// evenly across groups; within a group each stage's share follows
+    /// its layer count by construction.
+    fn launch_pipeline(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Router> {
+        anyhow::ensure!(
+            cfg.shards % cfg.pipeline == 0,
+            "shards ({}) must be a multiple of pipeline ({}) so stages form whole groups",
+            cfg.shards,
+            cfg.pipeline
+        );
+        // same kernel-pin contract as Engine::new: an explicit choice pins
+        // the process-wide path before any stage builds caches (lane
+        // padding) or dispatches; "auto" leaves an embedder's pin alone
+        if !matches!(cfg.kernels.as_str(), "auto" | "") {
+            crate::simd::init_from_name(&cfg.kernels)?;
+        }
+        let policy = policy_from_name(&cfg.balance)?;
+        let n_groups = cfg.shards / cfg.pipeline;
+        let wf = crate::model::WeightFile::load(
+            &artifacts_dir.join(format!("weights_{}.bin", cfg.model)),
+        )
+        .with_context(|| format!("native weights for {} (run `make artifacts`)", cfg.model))?;
+        let model = std::sync::Arc::new(crate::model::SwanModel::load(
+            &wf,
+            crate::swan::projection::ProjectionVariant::Calibrated,
+            0,
+        )?);
+        let per_group_budget =
+            if cfg.mem_budget == 0 { 0 } else { (cfg.mem_budget / n_groups).max(1) };
+        let group_cfg = ServeConfig { mem_budget: per_group_budget, ..cfg.clone() };
+        let mut shards = Vec::with_capacity(n_groups);
+        for id in 0..n_groups {
+            shards.push(crate::shard::pipeline::launch_group(id, model.clone(), &group_cfg)?);
         }
         Ok(Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) })
     }

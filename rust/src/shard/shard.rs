@@ -88,6 +88,21 @@ impl ShardHandle {
         ShardHandle { id, tx: Mutex::new(tx), status, metrics, join: Some(join) }
     }
 
+    /// Assemble a handle from an externally-built command loop — the
+    /// pipeline-group coordinator ([`crate::shard::pipeline`]) presents
+    /// itself to the router through exactly the [`ShardCmd`] interface an
+    /// engine shard does, so placement policies, the `SET k_active`
+    /// broadcast and fleet STATS work unchanged over mixed fleets.
+    pub(crate) fn from_parts(
+        id: usize,
+        tx: mpsc::Sender<ShardCmd>,
+        status: Arc<ShardStatus>,
+        metrics: Arc<Metrics>,
+        join: Option<JoinHandle<()>>,
+    ) -> ShardHandle {
+        ShardHandle { id, tx: Mutex::new(tx), status, metrics, join }
+    }
+
     /// A handle with no engine behind it: commands sent through it arrive
     /// on the returned receiver.  For router/policy tests and tooling that
     /// script shard behaviour without model artifacts.

@@ -45,6 +45,21 @@ pub fn dense_vector_bytes(d_h: usize) -> usize {
     d_h * 2
 }
 
+/// Per-token whole-model KV byte rates `(sparse, dense)` at compression
+/// level `k` — the single closed form behind engine admission control,
+/// pipeline-group accounting and the router's `MemAware` projection
+/// (k+v per (layer, kv-head): Eq. 1 for the sparse side, f16 dense).
+pub fn token_byte_rates(
+    n_layers: usize,
+    n_kv_heads: usize,
+    d_head: usize,
+    mode: StorageMode,
+    k: usize,
+) -> (usize, usize) {
+    let per_head = 2 * n_layers * n_kv_heads;
+    (per_head * mode.vector_bytes(k.min(d_head)), per_head * dense_vector_bytes(d_head))
+}
+
 /// Compression ratio of the sparse representation vs dense
 /// (Fig. 2a y-axis): `< 1` means the sparse form is smaller.
 pub fn compression_ratio(d_h: usize, k_active: usize, mode: StorageMode) -> f64 {
@@ -135,6 +150,18 @@ mod tests {
         assert_eq!(StorageMode::F16.vector_bytes(64), 194);
         assert_eq!(StorageMode::F8.vector_bytes(64), 130);
         assert_eq!(dense_vector_bytes(128), 256);
+    }
+
+    #[test]
+    fn token_byte_rates_match_eq1_and_clamp() {
+        // 2 layers x 2 kv-heads, d_h 8: per token, k+v per (layer, head)
+        let (sparse, dense) = token_byte_rates(2, 2, 8, StorageMode::F16, 4);
+        assert_eq!(sparse, 2 * 2 * 2 * StorageMode::F16.vector_bytes(4));
+        assert_eq!(dense, 2 * 2 * 2 * dense_vector_bytes(8));
+        // over-range k clamps to d_head (full retention)
+        let (s_clamped, _) = token_byte_rates(2, 2, 8, StorageMode::F16, 500);
+        let (s_full, _) = token_byte_rates(2, 2, 8, StorageMode::F16, 8);
+        assert_eq!(s_clamped, s_full);
     }
 
     #[test]

@@ -54,10 +54,10 @@ pub fn swan_attention_scratch(
     // reconstruction, no per-row pointer chasing), fused with the
     // softmax's running max so the score row is walked once
     let mut m = cache.k_sparse.scores_max_into_with(ks, q_hat, scale, scores);
-    // dense buffer
-    let kb = cache.k_buffer();
-    for t in 0..nb {
-        let s = ks.dot(&kb[t * d..(t + 1) * d], q_hat) * scale;
+    // dense ring buffer: oldest-first two-slice view, walked in place
+    let (kb0, kb1) = cache.k_buffer();
+    for row in kb0.chunks_exact(d).chain(kb1.chunks_exact(d)) {
+        let s = ks.dot(row, q_hat) * scale;
         m = m.max(s);
         scores.push(s);
     }
@@ -70,9 +70,9 @@ pub fn swan_attention_scratch(
 
     out.iter_mut().for_each(|o| *o = 0.0);
     cache.v_sparse.axpy_all_with(ks, &scores[..ns], out);
-    let vb = cache.v_buffer();
-    for t in 0..nb {
-        ks.axpy(scores[ns + t], &vb[t * d..(t + 1) * d], out);
+    let (vb0, vb1) = cache.v_buffer();
+    for (t, row) in vb0.chunks_exact(d).chain(vb1.chunks_exact(d)).enumerate() {
+        ks.axpy(scores[ns + t], row, out);
     }
     ks.axpy(scores[ns + nb], v_hat_cur, out);
 }

@@ -6,6 +6,19 @@
 //! buffer entry, which is magnitude-pruned (separate I_k / I_v index sets)
 //! and moved to the sparse store — compression work happens once per token,
 //! attention never decompresses.
+//!
+//! # Buffer layout
+//!
+//! The dense recency buffer really is a ring: a fixed `[buffer, d_h]`
+//! allocation plus a `head` index pointing at the oldest row.  Eviction
+//! winnows the row under `head` straight out of the ring and advances the
+//! index — no element is ever moved, so steady-state appends cost
+//! O(k log d) for the winnow plus one row copy, never an O(buffer · d_h)
+//! shift.  Readers get the logically-oldest-first contents as a two-slice
+//! view ([`HybridCache::k_buffer`] / [`HybridCache::v_buffer`]): the run
+//! from `head` to the end of the allocation, then the wrapped run from the
+//! start.  Either slice may be empty; their concatenation is always the
+//! FIFO order the attention kernel walks.
 
 use crate::sparse::{SparseStore, StorageMode};
 
@@ -23,9 +36,11 @@ pub struct SwanParams {
     pub buffer: usize,
     /// Value storage precision.
     pub mode: StorageMode,
-    /// Lane multiple the sparse stores pad rows to (defaults to the
-    /// active kernel set's width, so AVX2 hosts get tail-free gather rows
-    /// transparently; results and Eq. 1 accounting are unaffected).
+    /// Lane multiple the sparse stores pad rows to.  `0` (the
+    /// [`SwanParams::new`] default) means "resolve from the active kernel
+    /// set when the cache is built" — deferring the lookup to
+    /// [`HybridCache::new`] keeps params constructed *before* a
+    /// `--kernels`/`SWAN_KERNELS` pin consistent with the final selection.
     pub lanes: usize,
 }
 
@@ -36,7 +51,7 @@ impl SwanParams {
             k_active_vals: k_active,
             buffer,
             mode,
-            lanes: crate::simd::active().lanes(),
+            lanes: 0, // auto: resolved against simd::active() at cache build
         }
     }
 
@@ -44,6 +59,16 @@ impl SwanParams {
     pub fn with_lanes(mut self, lanes: usize) -> SwanParams {
         self.lanes = lanes.max(1);
         self
+    }
+
+    /// The lane padding this params set resolves to right now: the pinned
+    /// value, or the active kernel set's width when left on auto.
+    pub fn resolved_lanes(&self) -> usize {
+        if self.lanes == 0 {
+            crate::simd::active().lanes()
+        } else {
+            self.lanes
+        }
     }
 
     /// Retention ratio (k_active / d_h) for reporting.
@@ -61,21 +86,28 @@ pub struct HybridCache {
     /// EXPERIMENTS.md §Perf for the layout rationale).
     pub k_sparse: SparseStore,
     pub v_sparse: SparseStore,
-    /// Dense recency buffer, oldest first (flat [n, d_h] storage).
+    /// Dense recency ring, fixed `[params.buffer, d_h]` allocation.
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
+    /// Ring slot of the oldest live row (0 when empty).
+    head: usize,
     buf_len: usize,
 }
 
 impl HybridCache {
     pub fn new(d_h: usize, params: SwanParams) -> HybridCache {
+        let mut params = params;
+        // resolve auto lane padding against the *current* kernel selection
+        // (not whenever the params happened to be constructed)
+        params.lanes = params.resolved_lanes();
         HybridCache {
             params,
             d_h,
             k_sparse: SparseStore::with_lanes(params.lanes),
             v_sparse: SparseStore::with_lanes(params.lanes),
-            k_buf: Vec::with_capacity((params.buffer + 1) * d_h),
-            v_buf: Vec::with_capacity((params.buffer + 1) * d_h),
+            k_buf: vec![0.0; params.buffer * d_h],
+            v_buf: vec![0.0; params.buffer * d_h],
+            head: 0,
             buf_len: 0,
         }
     }
@@ -103,13 +135,32 @@ impl HybridCache {
         self.len() == 0
     }
 
-    /// Buffer contents as flat [buffer_len, d_h] slices (oldest first).
-    pub fn k_buffer(&self) -> &[f32] {
-        &self.k_buf[..self.buf_len * self.d_h]
+    /// Oldest-first view of one ring: the run from `head` up, then the
+    /// wrapped run from slot 0.
+    fn ring_view<'a>(&self, buf: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        let d = self.d_h;
+        let cap = self.params.buffer;
+        if self.buf_len == 0 {
+            return (&[], &[]);
+        }
+        let first = (cap - self.head).min(self.buf_len);
+        let wrapped = self.buf_len - first;
+        (
+            &buf[self.head * d..(self.head + first) * d],
+            &buf[..wrapped * d],
+        )
     }
 
-    pub fn v_buffer(&self) -> &[f32] {
-        &self.v_buf[..self.buf_len * self.d_h]
+    /// Buffer keys as an oldest-first two-slice view (`[n0, d_h]` then
+    /// `[n1, d_h]`, either possibly empty); concatenated they are the FIFO
+    /// contents.  Callers iterate both runs without any copy.
+    pub fn k_buffer(&self) -> (&[f32], &[f32]) {
+        self.ring_view(&self.k_buf)
+    }
+
+    /// Buffer values, same two-slice contract as [`HybridCache::k_buffer`].
+    pub fn v_buffer(&self) -> (&[f32], &[f32]) {
+        self.ring_view(&self.v_buf)
     }
 
     /// Change the compression level at runtime (paper §"runtime
@@ -138,41 +189,91 @@ impl HybridCache {
     }
 
     /// Append a rotated (k̂, v̂) pair (Algorithm 1 lines 3-12).  If the
-    /// buffer is over capacity, the oldest entry is winnowed into the
-    /// sparse store.
+    /// buffer is at capacity, the oldest entry is winnowed into the sparse
+    /// store first (FIFO); with a zero-capacity buffer the incoming pair
+    /// is winnowed directly.
     pub fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
         debug_assert_eq!(k_hat.len(), self.d_h);
         debug_assert_eq!(v_hat.len(), self.d_h);
-        self.k_buf.extend_from_slice(k_hat);
-        self.v_buf.extend_from_slice(v_hat);
-        self.buf_len += 1;
-        while self.buf_len > self.params.buffer {
+        let cap = self.params.buffer;
+        if cap == 0 {
+            // bt = 0: every token is winnowed the step it arrives —
+            // identical to passing through a 1-deep staging slot
+            self.k_sparse.push_pruned(k_hat, self.params.k_active_keys, self.params.mode);
+            self.v_sparse.push_pruned(v_hat, self.params.k_active_vals, self.params.mode);
+            return;
+        }
+        if self.buf_len == cap {
             self.evict_oldest();
         }
+        let d = self.d_h;
+        let slot = (self.head + self.buf_len) % cap;
+        self.k_buf[slot * d..(slot + 1) * d].copy_from_slice(k_hat);
+        self.v_buf[slot * d..(slot + 1) * d].copy_from_slice(v_hat);
+        self.buf_len += 1;
     }
 
-    /// Pop the oldest dense pair, winnow it (separate I_k / I_v) and move
-    /// it to the sparse store.
+    /// Winnow the oldest dense pair (separate I_k / I_v) into the sparse
+    /// store and advance the ring head.  No data moves: the row is pruned
+    /// in place and its slot is simply reused by a later append.
     fn evict_oldest(&mut self) {
+        debug_assert!(self.buf_len > 0);
         let d = self.d_h;
-        let k_old: Vec<f32> = self.k_buf.drain(..d).collect();
-        let v_old: Vec<f32> = self.v_buf.drain(..d).collect();
+        let off = self.head * d;
+        self.k_sparse.push_pruned(
+            &self.k_buf[off..off + d],
+            self.params.k_active_keys,
+            self.params.mode,
+        );
+        self.v_sparse.push_pruned(
+            &self.v_buf[off..off + d],
+            self.params.k_active_vals,
+            self.params.mode,
+        );
+        self.head = (self.head + 1) % self.params.buffer;
         self.buf_len -= 1;
-        self.k_sparse.push_pruned(&k_old, self.params.k_active_keys, self.params.mode);
-        self.v_sparse.push_pruned(&v_old, self.params.k_active_vals, self.params.mode);
     }
 
     /// Bulk-load a prefill history: all but the last `buffer` tokens are
-    /// winnowed directly, the tail stays dense.  `k_hats`/`v_hats` are
-    /// [n, d_h] flat (oldest first).
+    /// winnowed straight into the sparse stores (one pass, no per-token
+    /// buffer traffic), the tail is copied into the ring.  `k_hats` /
+    /// `v_hats` are `[n, d_h]` flat (oldest first).  Works on a non-empty
+    /// cache too: existing buffered rows spill first, in FIFO order —
+    /// bit-identical to appending token by token.
     pub fn load_prefill(&mut self, k_hats: &[f32], v_hats: &[f32]) {
-        let n = k_hats.len() / self.d_h;
-        debug_assert_eq!(k_hats.len(), n * self.d_h);
-        for t in 0..n {
-            self.append(
-                &k_hats[t * self.d_h..(t + 1) * self.d_h],
-                &v_hats[t * self.d_h..(t + 1) * self.d_h],
+        let d = self.d_h;
+        let n = k_hats.len() / d;
+        debug_assert_eq!(k_hats.len(), n * d);
+        debug_assert_eq!(v_hats.len(), n * d);
+        let cap = self.params.buffer;
+        let spill = (self.buf_len + n).saturating_sub(cap);
+        // oldest spilled rows come from the existing ring ...
+        let spill_old = spill.min(self.buf_len);
+        for _ in 0..spill_old {
+            self.evict_oldest();
+        }
+        // ... then from the head of the incoming stream, winnowed without
+        // ever touching the buffer
+        let spill_new = spill - spill_old;
+        for t in 0..spill_new {
+            self.k_sparse.push_pruned(
+                &k_hats[t * d..(t + 1) * d],
+                self.params.k_active_keys,
+                self.params.mode,
             );
+            self.v_sparse.push_pruned(
+                &v_hats[t * d..(t + 1) * d],
+                self.params.k_active_vals,
+                self.params.mode,
+            );
+        }
+        // the tail stays dense (cap == 0 never reaches here: everything
+        // spilled, spill_new == n)
+        for t in spill_new..n {
+            let slot = (self.head + self.buf_len) % cap;
+            self.k_buf[slot * d..(slot + 1) * d].copy_from_slice(&k_hats[t * d..(t + 1) * d]);
+            self.v_buf[slot * d..(slot + 1) * d].copy_from_slice(&v_hats[t * d..(t + 1) * d]);
+            self.buf_len += 1;
         }
     }
 
@@ -197,6 +298,13 @@ mod tests {
 
     fn mk(buffer: usize, k: usize) -> HybridCache {
         HybridCache::new(32, SwanParams::new(k, buffer, StorageMode::F16))
+    }
+
+    /// Flatten the two-slice ring view into oldest-first rows.
+    fn flat(view: (&[f32], &[f32])) -> Vec<f32> {
+        let mut v = view.0.to_vec();
+        v.extend_from_slice(view.1);
+        v
     }
 
     #[test]
@@ -280,8 +388,87 @@ mod tests {
         c.load_prefill(&ks, &vs);
         assert_eq!(c.buffer_len(), 3);
         assert_eq!(c.sparse_len(), 7);
-        // buffer holds the *last* 3 tokens
-        let kb = c.k_buffer();
+        // buffer holds the *last* 3 tokens, oldest first
+        let kb = flat(c.k_buffer());
         assert_eq!(&kb[..32], &ks[7 * 32..8 * 32]);
+        assert_eq!(&kb[2 * 32..3 * 32], &ks[9 * 32..10 * 32]);
+    }
+
+    /// The ring view is oldest-first across the wrap point: after more
+    /// appends than capacity, concatenating the two slices must equal the
+    /// last `buffer` appended rows in order.
+    #[test]
+    fn ring_view_is_fifo_across_wraparound() {
+        let d = 32;
+        for buffer in [1usize, 2, 3, 5] {
+            let mut c = mk(buffer, 32);
+            let mut r = Pcg64::new(6);
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            for i in 0..(3 * buffer + 1) {
+                let k = r.normal_vec(d);
+                let v = r.normal_vec(d);
+                c.append(&k, &v);
+                rows.push(k.clone());
+                let (a, b) = c.k_buffer();
+                assert_eq!(a.len() + b.len(), c.buffer_len() * d, "bt={buffer} i={i}");
+                let got = flat(c.k_buffer());
+                let want: Vec<f32> = rows
+                    [rows.len().saturating_sub(buffer)..]
+                    .iter()
+                    .flat_map(|r| r.iter().copied())
+                    .collect();
+                assert_eq!(got, want, "bt={buffer} after {} appends", i + 1);
+            }
+        }
+    }
+
+    /// Bulk load on a partially-filled cache spills the existing rows
+    /// first, exactly like token-by-token appends would.
+    #[test]
+    fn load_prefill_on_nonempty_cache_matches_appends() {
+        let d = 32;
+        let mut r = Pcg64::new(7);
+        let pre: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..2).map(|_| (r.normal_vec(d), r.normal_vec(d))).collect();
+        let n = 6;
+        let ks = r.normal_vec(n * d);
+        let vs = r.normal_vec(n * d);
+
+        let mut bulk = mk(3, 8);
+        let mut serial = mk(3, 8);
+        for (k, v) in &pre {
+            bulk.append(k, v);
+            serial.append(k, v);
+        }
+        bulk.load_prefill(&ks, &vs);
+        for t in 0..n {
+            serial.append(&ks[t * d..(t + 1) * d], &vs[t * d..(t + 1) * d]);
+        }
+        assert_eq!(bulk.sparse_len(), serial.sparse_len());
+        assert_eq!(bulk.buffer_len(), serial.buffer_len());
+        assert_eq!(flat(bulk.k_buffer()), flat(serial.k_buffer()));
+        assert_eq!(flat(bulk.v_buffer()), flat(serial.v_buffer()));
+        for i in 0..bulk.sparse_len() {
+            assert_eq!(
+                bulk.k_sparse.reconstruct(i, d),
+                serial.k_sparse.reconstruct(i, d),
+                "sparse row {i}"
+            );
+        }
+    }
+
+    /// Auto lane params resolve against the kernel selection at *cache*
+    /// construction; pinned params stay pinned.
+    #[test]
+    fn lanes_resolve_at_cache_build() {
+        let auto = SwanParams::new(8, 2, StorageMode::F16);
+        assert_eq!(auto.lanes, 0, "new() must defer lane resolution");
+        let c = HybridCache::new(16, auto);
+        assert_eq!(c.params.lanes, crate::simd::active().lanes());
+        assert_eq!(c.k_sparse.lanes(), crate::simd::active().lanes());
+        let pinned = SwanParams::new(8, 2, StorageMode::F16).with_lanes(4);
+        let c2 = HybridCache::new(16, pinned);
+        assert_eq!(c2.params.lanes, 4);
+        assert_eq!(c2.k_sparse.lanes(), 4);
     }
 }

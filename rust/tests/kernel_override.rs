@@ -39,9 +39,20 @@ fn forced_override_routes_global_dispatch() {
     // every path this host can run, forced by name through the same
     // entry point the CLI flag uses
     for ks in Kernels::available() {
+        // params built BEFORE the pin must still resolve row padding to
+        // the post-pin selection (lane resolution is deferred to
+        // HybridCache::new, not captured at SwanParams::new)
+        let pre_pin_params = SwanParams::new(8, 2, StorageMode::F16);
         let pinned = simd::init_from_name(ks.label()).unwrap();
         assert_eq!(pinned, ks);
         assert_eq!(simd::active(), ks, "global did not follow --kernels {}", ks.label());
+        let cache = HybridCache::new(16, pre_pin_params);
+        assert_eq!(
+            cache.k_sparse.lanes(),
+            ks.lanes(),
+            "pre-pin SwanParams captured stale lanes under --kernels {}",
+            ks.label()
+        );
         let out = attend_under_active(ks.lanes());
         assert!(out.iter().all(|x| x.is_finite()), "kernels {}", ks.label());
     }

@@ -1,0 +1,195 @@
+//! Pipeline layer-sharding, end to end on a synthetic model (no
+//! artifacts): an S-stage pipeline group must decode **bit-identically**
+//! to a single-shard run on the same seed, the `--shards 4 --pipeline 2`
+//! topology (2 groups x 2 stages) must match too, and a live fleet-wide
+//! `SET k_active` must reach every stage of every group.
+
+use std::sync::Arc;
+
+use swan::config::{ModelConfig, ServeConfig};
+use swan::coordinator::engine::sample;
+use swan::coordinator::Request;
+use swan::kvcache::PolicyKind;
+use swan::model::transformer::{SequenceState, SwanModel};
+use swan::shard::pipeline::launch_group;
+use swan::shard::{Router, RoundRobin};
+use swan::sparse::StorageMode;
+use swan::util::Pcg64;
+
+/// Mirror of the engine's per-sequence decode RNG seed
+/// (`coordinator::engine::x5wan_seed`, the "SWAN" constant) — the wire
+/// contract both serving paths derive their sampling streams from.
+const SWAN_SEED: u64 = 0x53_57_41_4e;
+
+fn test_model() -> Arc<SwanModel> {
+    Arc::new(SwanModel::synthetic(
+        ModelConfig {
+            name: "pipe-test".into(),
+            d_model: 32,
+            n_layers: 4, // divisible into 1, 2 and 4 stages
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 96,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        },
+        33,
+    ))
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        k_active: 4,
+        buffer: 3,
+        mode: StorageMode::F16,
+        max_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// The request mix: mostly greedy, one temperature-sampled stream (which
+/// exercises the shared per-request RNG contract).
+fn requests() -> Vec<Request> {
+    let mut reqs: Vec<Request> = (0..5)
+        .map(|i| Request::from_text(i + 1, &format!("the sparse vector {i} maps the "), 10))
+        .collect();
+    reqs.push(Request {
+        temperature: 0.8,
+        ..Request::from_text(6, "the hot cache winnows ", 10)
+    });
+    reqs
+}
+
+/// Serve `reqs` through `n_groups` pipeline groups of `stages` stages
+/// each behind a round-robin router; returns token streams by request id.
+fn run_fleet(stages: usize, n_groups: usize, reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+    let model = test_model();
+    let cfg = ServeConfig { pipeline: stages, ..serve_cfg() };
+    let handles: Vec<_> = (0..n_groups)
+        .map(|id| launch_group(id, model.clone(), &cfg).unwrap())
+        .collect();
+    let router = Router::from_handles(handles, Box::new(RoundRobin::default()));
+    let pending: Vec<_> = reqs
+        .iter()
+        .map(|r| (r.id, router.submit(r.clone()).unwrap()))
+        .collect();
+    let mut out: Vec<(u64, Vec<u32>)> = pending
+        .into_iter()
+        .map(|(id, rx)| {
+            let resp = rx.recv().expect("group alive").expect("generation ok");
+            assert_eq!(resp.id, id);
+            (id, resp.tokens)
+        })
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+/// The single-shard reference, computed directly on the native model with
+/// the engine's sampling/seeding contract — what `--shards 1` produces.
+fn single_shard_reference(reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+    let model = test_model();
+    let cfg = serve_cfg();
+    let kind = PolicyKind::Swan {
+        k_active: cfg.k_active,
+        buffer: cfg.buffer,
+        mode: cfg.mode,
+    };
+    reqs.iter()
+        .map(|req| {
+            let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
+            let pf = model.prefill(tokens);
+            let mut st = SequenceState::new(&model, kind);
+            st.load_prefill(&pf);
+            let mut tok = sample(&pf.logits, req.temperature, &mut Pcg64::new(req.id));
+            let mut rng = Pcg64::new(req.id ^ SWAN_SEED);
+            let mut produced = vec![tok];
+            while produced.len() < req.max_new_tokens {
+                let logits = model.decode_step(&mut st, tok);
+                tok = sample(&logits, req.temperature, &mut rng);
+                produced.push(tok);
+            }
+            (req.id, produced)
+        })
+        .collect()
+}
+
+#[test]
+fn pipeline_stages_decode_bit_identically_to_single_shard() {
+    let reqs = requests();
+    let want = single_shard_reference(&reqs);
+    for stages in [1usize, 2, 4] {
+        let got = run_fleet(stages, 1, &reqs);
+        assert_eq!(got, want, "{stages}-stage pipeline diverged from the single-shard run");
+    }
+}
+
+/// The acceptance topology: `--shards 4 --pipeline 2` = 2 groups x 2
+/// stages, decoding bit-identically to `--shards 1` on the same seed.
+#[test]
+fn two_groups_of_two_stages_match_single_shard() {
+    let reqs = requests();
+    let want = single_shard_reference(&reqs);
+    let got = run_fleet(2, 2, &reqs);
+    assert_eq!(got, want, "2x2 pipeline fleet diverged from the single-shard run");
+}
+
+/// Live fleet retune: `SET k_active` broadcasts through every group to
+/// every stage, acks gather, and STATS shows the new level on all stages.
+#[test]
+fn set_k_active_reaches_every_stage_of_every_group() {
+    let model = test_model();
+    let cfg = ServeConfig { pipeline: 2, ..serve_cfg() };
+    let handles: Vec<_> =
+        (0..2).map(|id| launch_group(id, model.clone(), &cfg).unwrap()).collect();
+    let router = Router::from_handles(handles, Box::new(RoundRobin::default()));
+
+    let applied = router.set_k_active(6).unwrap();
+    assert_eq!(applied, vec![(0, 6), (1, 6)], "every group must ack the retune");
+    // an over-range retune snaps to d_head on every stage (native path
+    // has no compiled buckets; the clamp is the snap)
+    let applied = router.set_k_active(500).unwrap();
+    assert_eq!(applied, vec![(0, 8), (1, 8)]);
+}
+
+/// STATS renders per-stage queue depth and the retuned compression level
+/// on every stage (the bubble-visibility requirement).
+#[test]
+fn fleet_stats_show_per_stage_depth_and_retuned_k() {
+    let model = test_model();
+    let cfg = ServeConfig { pipeline: 2, ..serve_cfg() };
+    let handles: Vec<_> =
+        (0..2).map(|id| launch_group(id, model.clone(), &cfg).unwrap()).collect();
+    let router = Router::from_handles(handles, Box::new(RoundRobin::default()));
+    router.set_k_active(6).unwrap();
+
+    let stats = router.stats();
+    assert!(stats.contains("fleet: shards=2"), "{stats}");
+    for group in 0..2 {
+        assert!(
+            stats.contains(&format!("shard {group}: pipeline stages=2 k_active=6")),
+            "group {group} header missing or stale k: {stats}"
+        );
+    }
+    // two stage lines per group, each carrying the retuned k and a queue
+    // depth (the pipeline-bubble indicator) and its layer range
+    assert_eq!(stats.matches("stage 0: layers 0..2 k_active=6 queued=").count(), 2, "{stats}");
+    assert_eq!(stats.matches("stage 1: layers 2..4 k_active=6 queued=").count(), 2, "{stats}");
+
+    // the fleet still serves after the retune
+    let rx = router.submit(Request::from_text(9, "retuned ", 4)).unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+}
+
+/// Uneven layer counts still pipeline correctly (3 stages over 4 layers:
+/// ranges 0..2, 2..3, 3..4) and stay bit-identical to one stage.
+#[test]
+fn uneven_stage_split_is_still_bit_identical() {
+    let reqs: Vec<Request> = vec![Request::from_text(1, "uneven split ", 8)];
+    let want = single_shard_reference(&reqs);
+    let got = run_fleet(3, 1, &reqs);
+    assert_eq!(got, want);
+}

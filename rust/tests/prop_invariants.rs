@@ -525,6 +525,97 @@ fn prop_kernel_dispatch_parity_csr() {
     });
 }
 
+/// Ring-buffer wraparound parity: the head-index ring must behave
+/// bit-identically to a naive front-drained `Vec<Vec<f32>>` model on
+/// append/evict/attend, across buffer sizes (including 0, 1 and a prime
+/// 17 that never divides the append count) and runtime-mixed `k_active`.
+#[test]
+fn prop_ring_buffer_matches_naive_model() {
+    for &buffer in &[0usize, 1, 4, 17] {
+        check("ring-naive-parity", 60, |r| {
+            let n = 1 + r.below(60) as usize;
+            let k0 = 1 + r.below(16) as usize;
+            let k1 = 1 + r.below(16) as usize;
+            (n, (k0, k1))
+        }, |(n, (k0, k1))| {
+            let d = 16usize;
+            let mut rng = Pcg64::new(71 + buffer as u64);
+            let mut c = HybridCache::new(d, SwanParams::new(*k0, buffer, StorageMode::F16));
+            // naive model: buffered rows in a Vec, evictions winnowed into
+            // a lane-1 store through the same push_pruned entry point
+            let mut nk: Vec<Vec<f32>> = Vec::new();
+            let mut nv: Vec<Vec<f32>> = Vec::new();
+            let mut sk = SparseStore::new();
+            let mut sv = SparseStore::new();
+            for t in 0..*n {
+                // retune mid-stream: old evictions keep k0, new use k1
+                let k_now = if t < n / 2 { *k0 } else { *k1 };
+                if t == n / 2 {
+                    c.set_k_active(*k1, *k1);
+                }
+                let kr = rng.normal_vec(d);
+                let vr = rng.normal_vec(d);
+                c.append(&kr, &vr);
+                nk.push(kr);
+                nv.push(vr);
+                if nk.len() > buffer {
+                    let ko = nk.remove(0);
+                    let vo = nv.remove(0);
+                    sk.push_pruned(&ko, k_now, StorageMode::F16);
+                    sv.push_pruned(&vo, k_now, StorageMode::F16);
+                }
+            }
+            // structural parity
+            if c.buffer_len() != nk.len() {
+                return Err(format!("buf {} != {}", c.buffer_len(), nk.len()));
+            }
+            if c.sparse_len() != sk.len() {
+                return Err(format!("sparse {} != {}", c.sparse_len(), sk.len()));
+            }
+            // buffer content parity, oldest first across the wrap point
+            let (kb0, kb1) = c.k_buffer();
+            let ring: Vec<f32> = kb0.iter().chain(kb1.iter()).copied().collect();
+            let naive: Vec<f32> = nk.iter().flat_map(|r| r.iter().copied()).collect();
+            if ring != naive {
+                return Err(format!("ring contents diverged (bt={buffer} n={n})"));
+            }
+            // sparse content parity (same rows winnowed at the same k)
+            for i in 0..sk.len() {
+                if c.k_sparse.reconstruct(i, d) != sk.reconstruct(i, d)
+                    || c.v_sparse.reconstruct(i, d) != sv.reconstruct(i, d)
+                {
+                    return Err(format!("sparse row {i} diverged"));
+                }
+            }
+            // attend parity: swan attention vs dense attention over the
+            // naive reconstruction (exact because both read identical data)
+            let q = rng.normal_vec(d);
+            let kc = rng.normal_vec(d);
+            let vc = rng.normal_vec(d);
+            let mut got = vec![0.0; d];
+            swan_attention(&q, &c, &kc, &vc, &mut got);
+            let mut kflat = Vec::new();
+            let mut vflat = Vec::new();
+            for i in 0..sk.len() {
+                kflat.extend_from_slice(&sk.reconstruct(i, d));
+                vflat.extend_from_slice(&sv.reconstruct(i, d));
+            }
+            kflat.extend_from_slice(&naive);
+            for row in &nv {
+                vflat.extend_from_slice(row);
+            }
+            let mut want = vec![0.0; d];
+            dense_attention(&q, &kflat, &vflat, &kc, &vc, d, &mut want);
+            for (a, b) in got.iter().zip(&want) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("attend: {a} vs {b} (bt={buffer})"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
 /// Hybrid attention equals dense attention over the reconstructed cache
 /// (the sparse representation is the ONLY approximation).
 #[test]
@@ -555,8 +646,12 @@ fn prop_attention_equals_dense_over_reconstruction() {
         for i in 0..c.v_sparse.len() {
             vrec.extend_from_slice(&c.v_sparse.reconstruct(i, d));
         }
-        krec.extend_from_slice(c.k_buffer());
-        vrec.extend_from_slice(c.v_buffer());
+        let (kb0, kb1) = c.k_buffer();
+        krec.extend_from_slice(kb0);
+        krec.extend_from_slice(kb1);
+        let (vb0, vb1) = c.v_buffer();
+        vrec.extend_from_slice(vb0);
+        vrec.extend_from_slice(vb1);
 
         let q = r2.normal_vec(d);
         let kc = r2.normal_vec(d);

@@ -168,6 +168,67 @@ fn multi_shard_tcp_concurrent_clients_and_fleet_retune() {
     writeln!(stream, "QUIT").unwrap();
 }
 
+/// The acceptance topology over real artifacts: a `--shards 4
+/// --pipeline 2` fleet (2 groups x 2 stages, `Router::launch_pipeline`'s
+/// native-model leg) serves the wire protocol, retunes every stage live,
+/// and its greedy output tracks a plain single-shard (PJRT) run.  The
+/// bit-identity guarantee is native-vs-native (see `tests/pipeline.rs`);
+/// across the PJRT/native backend boundary outputs agree to float
+/// tolerance, checked here on the leading characters.
+#[test]
+fn pipeline_fleet_serves_retunes_and_tracks_single_shard() {
+    let dir = require_artifacts!();
+    let prompt = "fact kernel9 is 300 . recall kernel9 -> ";
+
+    // single-shard (PJRT engine) reference
+    let single = {
+        let mut engine =
+            Engine::new(&dir, ServeConfig { k_active: 48, ..Default::default() }).unwrap();
+        engine.submit_text(prompt, 6);
+        engine.run_to_completion().unwrap().pop().unwrap().text
+    };
+
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let cfg = ServeConfig {
+        bind: "127.0.0.1:0".into(),
+        shards: 4,
+        pipeline: 2,
+        k_active: 48,
+        ..Default::default()
+    };
+    let sdir = dir.clone();
+    std::thread::spawn(move || {
+        let _ = swan::server::tcp::serve_with_ready(&sdir, cfg, move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(240)).expect("server start");
+
+    let mut c = swan::server::client::Client::connect(&addr.to_string()).unwrap();
+    let (text, stats) = c.generate(prompt, 6).unwrap();
+    assert!(text.is_ascii());
+    assert!(stats.tokens <= 6);
+    assert_eq!(
+        single.chars().take(3).collect::<String>(),
+        text.chars().take(3).collect::<String>(),
+        "single-shard '{single}' vs pipeline '{text}'"
+    );
+
+    // live retune reaches every stage of both groups; STATS shows it
+    c.set_k_active(16).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.contains("fleet: shards=2"), "{stats}");
+    for group in 0..2 {
+        assert!(
+            stats.contains(&format!("shard {group}: pipeline stages=2 k_active=16")),
+            "{stats}"
+        );
+    }
+    assert_eq!(stats.matches("stage 0: layers").count(), 2, "{stats}");
+    assert_eq!(stats.matches("stage 1: layers").count(), 2, "{stats}");
+    c.quit();
+}
+
 #[test]
 fn tcp_round_trip() {
     let dir = require_artifacts!();
