@@ -1,11 +1,14 @@
 //! Runtime-tunable compression (the paper's key operational claim): change
-//! `k_active` on a live engine between requests and under a memory budget
+//! `k_active` on a live engine between requests, override it **per
+//! request** through `GenParams::k_active` (requests at different
+//! compression levels co-batch on one engine), and under a memory budget
 //! watch the autotuner move the level.
 //!
 //!   cargo run --release --example runtime_tuning
 
+use swan::api::GenParams;
 use swan::config::ServeConfig;
-use swan::coordinator::Engine;
+use swan::coordinator::{Engine, Request};
 use swan::sparse::StorageMode;
 
 fn main() -> anyhow::Result<()> {
@@ -31,7 +34,30 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 2. autotuned under a memory budget: the tuner tightens compression
+    // 2. per-request override: the SAME engine (left pinned at its
+    //    fleet level) serves one request per level concurrently — each
+    //    sequence owns its own winnowed cache, so admission charges and
+    //    decodes every request at its *own* k
+    println!("\nper-request k override (engine stays at k_active={}):", engine.current_k_active());
+    let ids: Vec<(usize, u64)> = [48usize, 32, 16]
+        .into_iter()
+        .map(|k| {
+            let req = Request::with_params(0, prompt, GenParams::new(8).k_active(k));
+            (k, engine.submit(req))
+        })
+        .collect();
+    let mut responses = engine.run_to_completion()?;
+    responses.sort_by_key(|r| r.id);
+    for ((k, id), r) in ids.iter().zip(&responses) {
+        assert_eq!(*id, r.id);
+        println!(
+            "  k={k:<3} -> {:?}  (kv saving {:.1}%)",
+            r.text.trim(),
+            r.stats.memory_saving() * 100.0
+        );
+    }
+
+    // 3. autotuned under a memory budget: the tuner tightens compression
     //    as live cache bytes approach the budget
     println!("\nautotuner under a 600 KiB KV budget:");
     let mut tuned = Engine::new(

@@ -1,9 +1,12 @@
 //! Bench: end-to-end serving throughput — batched requests through the
 //! full coordinator (prefill graph + hybrid-cache decode + continuous
-//! batching), SWAN vs the dense-baseline serving mode, plus shard
-//! scaling through the front-end router.  Reports request latency,
+//! batching), SWAN vs the dense-baseline serving mode, shard scaling
+//! through the front-end router, plus an `api_mix` section comparing
+//! greedy / top-p / repetition-penalty / streaming / per-request-k-mixed
+//! batches (written to `BENCH_api.json`).  Reports request latency,
 //! decode tok/s and KV memory savings (needs `make artifacts`).
 
+use swan::api::GenParams;
 use swan::config::ServeConfig;
 use swan::coordinator::{Engine, Request};
 use swan::eval::corpus;
@@ -65,8 +68,8 @@ fn drive_router(router: &Router, n_requests: usize, max_new: usize) -> anyhow::R
         pending.push(router.submit(Request::from_text(0, &prompt, max_new))?);
     }
     let mut total_decoded = 0usize;
-    for rx in pending {
-        let resp = rx.recv()??;
+    for handle in pending {
+        let resp = handle.wait()?;
         total_decoded += resp.stats.decode_steps;
     }
     let wall = t0.elapsed();
@@ -86,6 +89,33 @@ fn drive_router(router: &Router, n_requests: usize, max_new: usize) -> anyhow::R
 fn run_shard_batch(cfg: ServeConfig, n_requests: usize, max_new: usize) -> anyhow::Result<(f64, String)> {
     let router = Router::launch(&swan::artifacts_dir(), cfg)?;
     drive_router(&router, n_requests, max_new)
+}
+
+/// Drive one api-mix scenario: `n` concurrent requests whose params come
+/// from `mk(i)`; returns aggregate decode tokens/sec.  Streamed token
+/// events, when a scenario enables them, flow through the same handles
+/// (`wait` drains them), so the row prices the full event path.
+fn drive_params(
+    router: &Router,
+    n: usize,
+    mk: impl Fn(u64) -> GenParams,
+) -> anyhow::Result<f64> {
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        pending.push(router.submit(Request::with_params(0, &prompt, mk(i as u64)))?);
+    }
+    let mut decoded = 0usize;
+    for h in pending {
+        decoded += h.wait()?.stats.decode_steps;
+    }
+    Ok(decoded as f64 / t0.elapsed().as_secs_f64())
 }
 
 /// Pipeline-scaling leg: ONE native pipeline group of `cfg.pipeline`
@@ -218,5 +248,59 @@ fn main() {
     report.set("pipeline_scaling", "max_new", max_new as f64);
     if let Err(e) = report.save() {
         eprintln!("could not write {}: {e}", report.path().display());
+    }
+
+    // api mix: the same fleet serving different request shapes — greedy,
+    // top-p, repetition-penalty, streaming, and a per-request-k mix —
+    // priced as aggregate decode tok/s and tracked in BENCH_api.json
+    println!("# api_mix ({n} requests, {max_new} new tokens each)");
+    let mut api_report = swan::util::stats::BenchReport::open("BENCH_api.json");
+    let cfg = ServeConfig {
+        k_active: 32,
+        mode: StorageMode::F16,
+        max_batch: 8,
+        decode_workers: workers,
+        ..Default::default()
+    };
+    match Router::launch(&dir, cfg) {
+        Err(e) => println!("api_mix FAILED to launch: {e:#}"),
+        Ok(router) => {
+            let scenarios: Vec<(&str, Box<dyn Fn(u64) -> GenParams>)> = vec![
+                ("greedy", Box::new(move |_| GenParams::new(max_new))),
+                (
+                    "top_p",
+                    Box::new(move |i| {
+                        GenParams::new(max_new).temperature(0.8).top_p(0.9).seed(i)
+                    }),
+                ),
+                (
+                    "rep_penalty",
+                    Box::new(move |i| {
+                        GenParams::new(max_new).temperature(0.8).repetition_penalty(1.2).seed(i)
+                    }),
+                ),
+                ("stream", Box::new(move |_| GenParams::new(max_new).stream(true))),
+                (
+                    "mixed_k",
+                    Box::new(move |i| {
+                        GenParams::new(max_new).k_active(if i % 2 == 0 { 16 } else { 48 })
+                    }),
+                ),
+            ];
+            for (label, mk) in scenarios {
+                match drive_params(&router, n, mk) {
+                    Ok(tps) => {
+                        println!("{label:<18} agg decode {tps:>7.1} tok/s");
+                        api_report.set("api_mix", &format!("{label}_decode_tps"), tps);
+                    }
+                    Err(e) => println!("{label:<18} FAILED: {e:#}"),
+                }
+            }
+            api_report.set("api_mix", "requests", n as f64);
+            api_report.set("api_mix", "max_new", max_new as f64);
+            if let Err(e) = api_report.save() {
+                eprintln!("could not write {}: {e}", api_report.path().display());
+            }
+        }
     }
 }

@@ -1,0 +1,308 @@
+//! `swan::api` — the typed request/response layer shared by every serving
+//! path (in-process [`crate::coordinator::Engine`], the shard router, the
+//! pipeline-group coordinator, and the TCP wire protocol).
+//!
+//! * [`GenParams`] — builder-style generation parameters.  Beyond the
+//!   classic sampling knobs it carries `k_active`, a **per-request
+//!   compression override**: SWAN's compression level is runtime-tunable
+//!   per sequence (every sequence owns its own winnowed cache), so a
+//!   latency-tolerant request can ask for `k=8` while a quality-sensitive
+//!   one on the same shard decodes at the fleet default.  Admission
+//!   control and `MemAware` placement project KV bytes from the
+//!   *request's own* k, not the fleet level.
+//! * [`Event`] / [`GenHandle`] — submission returns a handle with a
+//!   token-event channel: [`Event::Token`] per decoded token (when
+//!   `stream` is set), then exactly one terminal [`Event::Done`] or
+//!   [`Event::Error`].
+//! * [`CancelToken`] — cooperative cancellation.  `GenHandle::cancel`
+//!   (or the wire `CANCEL <id>`) flips the flag; the owning engine or
+//!   pipeline group retires the sequence at its next decode iteration,
+//!   answering the handle with a partial [`Response`]
+//!   (`stats.cancelled = true`) and never disturbing co-batched
+//!   sequences.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::request::Response;
+
+/// Typed generation parameters (the v2 replacement for the loose
+/// `max_new_tokens` / `temperature` / `stop_token` fields the request
+/// struct used to carry).  Build with the fluent setters:
+///
+/// ```ignore
+/// let p = GenParams::new(64).temperature(0.8).top_p(0.9).k_active(8).stream(true);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenParams {
+    /// Max new tokens to decode (servers may clamp; the clamp is
+    /// surfaced in [`crate::coordinator::request::RequestStats`], never
+    /// silent).
+    pub max_new: usize,
+    /// Softmax temperature; `<= 0` = greedy.
+    pub temperature: f32,
+    /// Nucleus sampling mass; `>= 1.0` disables (sample the full
+    /// distribution).  Only meaningful with `temperature > 0`.
+    pub top_p: f32,
+    /// CTRL-style repetition penalty over already-generated tokens;
+    /// `1.0` disables.
+    pub repetition_penalty: f32,
+    /// RNG stream seed override; `None` derives the stream from the
+    /// request id (the historical default, so legacy requests keep their
+    /// exact token streams).
+    pub seed: Option<u64>,
+    /// Optional stop token id.
+    pub stop: Option<u32>,
+    /// Per-request compression override: `Some(k)` admits this sequence
+    /// at compression level `k` (snapped to a compiled bucket on the
+    /// PJRT path, clamped to `d_head` on the native path) regardless of
+    /// the fleet-wide `k_active`.
+    pub k_active: Option<usize>,
+    /// Emit [`Event::Token`] per decoded token (otherwise only the
+    /// terminal event is sent).
+    pub stream: bool,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams {
+            max_new: 64,
+            temperature: 0.0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            seed: None,
+            stop: None,
+            k_active: None,
+            stream: false,
+        }
+    }
+}
+
+impl GenParams {
+    pub fn new(max_new: usize) -> GenParams {
+        GenParams { max_new, ..Default::default() }
+    }
+
+    pub fn temperature(mut self, t: f32) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn top_p(mut self, p: f32) -> Self {
+        self.top_p = p;
+        self
+    }
+
+    pub fn repetition_penalty(mut self, p: f32) -> Self {
+        self.repetition_penalty = p;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = Some(s);
+        self
+    }
+
+    pub fn stop(mut self, tok: u32) -> Self {
+        self.stop = Some(tok);
+        self
+    }
+
+    pub fn k_active(mut self, k: usize) -> Self {
+        self.k_active = Some(k);
+        self
+    }
+
+    pub fn stream(mut self, on: bool) -> Self {
+        self.stream = on;
+        self
+    }
+}
+
+/// Shared cooperative-cancellation flag.  Clones observe the same flag;
+/// flipping it is idempotent and thread-safe.  The serving loops poll it
+/// once per decode iteration (and at admission), so a cancelled sequence
+/// retires within one iteration.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One event on a generation's channel.  A generation emits zero or more
+/// `Token`s (only with `GenParams::stream`) followed by exactly one
+/// terminal `Done` or `Error`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// One decoded token, in order.  `index` counts from 0 (the token
+    /// sampled from the prefill logits).
+    Token { id: u64, index: usize, token: u32, text: String },
+    /// The generation finished (including cancelled generations, which
+    /// carry their partial output and `stats.cancelled = true`).
+    Done(Response),
+    /// The generation failed (admission rejection, engine failure);
+    /// no `Done` follows.
+    Error { id: u64, message: String },
+}
+
+impl Event {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Token { id, .. } | Event::Error { id, .. } => *id,
+            Event::Done(r) => r.id,
+        }
+    }
+}
+
+/// The caller's side of one submitted generation: the event channel plus
+/// the cancellation token.  Obtained from `Router::submit` or
+/// `Engine::submit_handle`.
+pub struct GenHandle {
+    id: u64,
+    rx: mpsc::Receiver<Event>,
+    cancel: CancelToken,
+}
+
+impl GenHandle {
+    /// Pair a handle with the event sender its engine will feed.
+    pub fn channel(id: u64, cancel: CancelToken) -> (mpsc::Sender<Event>, GenHandle) {
+        let (tx, rx) = mpsc::channel();
+        (tx, GenHandle { id, rx, cancel })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request cancellation; the sequence retires at its owner's next
+    /// decode iteration and the channel still delivers a terminal event.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clone of the cancellation token (e.g. for a connection-level
+    /// registry that outlives the handle).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Block for the next event.
+    pub fn recv(&self) -> anyhow::Result<Event> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("generation {}: engine gone", self.id))
+    }
+
+    /// Non-blocking poll (for in-process callers driving the engine on
+    /// the same thread).
+    pub fn try_recv(&self) -> Option<Event> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain the channel to the terminal event and return the response
+    /// (token events, if any, are discarded).
+    pub fn wait(self) -> anyhow::Result<Response> {
+        loop {
+            match self.recv()? {
+                Event::Token { .. } => continue,
+                Event::Done(resp) => return Ok(resp),
+                Event::Error { id, message } => {
+                    anyhow::bail!("generation {id} failed: {message}")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::RequestStats;
+
+    #[test]
+    fn builder_sets_fields_over_defaults() {
+        let p = GenParams::new(32)
+            .temperature(0.7)
+            .top_p(0.9)
+            .repetition_penalty(1.2)
+            .seed(42)
+            .stop(5)
+            .k_active(8)
+            .stream(true);
+        assert_eq!(p.max_new, 32);
+        assert_eq!(p.temperature, 0.7);
+        assert_eq!(p.top_p, 0.9);
+        assert_eq!(p.repetition_penalty, 1.2);
+        assert_eq!(p.seed, Some(42));
+        assert_eq!(p.stop, Some(5));
+        assert_eq!(p.k_active, Some(8));
+        assert!(p.stream);
+        let d = GenParams::default();
+        assert_eq!(d.top_p, 1.0);
+        assert_eq!(d.repetition_penalty, 1.0);
+        assert!(!d.stream);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+    }
+
+    #[test]
+    fn handle_streams_tokens_then_done() {
+        let (tx, handle) = GenHandle::channel(7, CancelToken::new());
+        tx.send(Event::Token { id: 7, index: 0, token: 1, text: "a".into() }).unwrap();
+        tx.send(Event::Done(Response {
+            id: 7,
+            tokens: vec![1],
+            text: "a".into(),
+            stats: RequestStats::default(),
+        }))
+        .unwrap();
+        assert_eq!(handle.id(), 7);
+        match handle.recv().unwrap() {
+            Event::Token { index: 0, token: 1, .. } => {}
+            other => panic!("expected first token, got {other:?}"),
+        }
+        let resp = handle.wait().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.text, "a");
+    }
+
+    #[test]
+    fn wait_surfaces_errors() {
+        let (tx, handle) = GenHandle::channel(3, CancelToken::new());
+        tx.send(Event::Error { id: 3, message: "rejected".into() }).unwrap();
+        let err = handle.wait().unwrap_err().to_string();
+        assert!(err.contains("rejected"), "{err}");
+    }
+
+    #[test]
+    fn dropped_sender_is_engine_gone() {
+        let (tx, handle) = GenHandle::channel(9, CancelToken::new());
+        drop(tx);
+        assert!(handle.recv().unwrap_err().to_string().contains("engine gone"));
+    }
+
+    #[test]
+    fn handle_cancel_flips_the_shared_token() {
+        let (_tx, handle) = GenHandle::channel(1, CancelToken::new());
+        let tok = handle.cancel_token();
+        handle.cancel();
+        assert!(tok.is_cancelled());
+    }
+}

@@ -62,6 +62,27 @@ impl Args {
     pub fn get_str(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> anyhow::Result<f32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a float, got '{v}'")),
+        }
+    }
+
+    /// Parse an optional flag: `None` when absent, an error when present
+    /// but unparsable (for per-request overrides like `--seed`/`--k`).
+    pub fn get_opt_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{v}'")),
+        }
+    }
 }
 
 pub const USAGE: &str = "\
@@ -84,6 +105,14 @@ USAGE:
                                        (accepted by every command; default auto)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]
                 [--mode 16|8] [--dense]
+                [--temperature T]      softmax temperature (0 = greedy)
+                [--top-p P]            nucleus sampling mass (1 = off)
+                [--rep-penalty R]      repetition penalty (1 = off)
+                [--seed S]             RNG stream seed override
+                [--k K]                per-request compression override
+                                       (this request only; --k-active sets
+                                       the engine-wide level)
+                [--stream]             print tokens as they decode
   swan eval     [--model M] [--cases N]       run the task battery natively
   swan repro    <fig2a|fig2b|fig3|fig4|fig5|fig6|table1|table2|table3|
                  breakeven|motivation|all> [--cases N]
@@ -121,6 +150,17 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("serve --k-active nope");
         assert!(a.get_usize("k-active", 1).is_err());
+    }
+
+    #[test]
+    fn float_and_optional_flags() {
+        let a = parse("generate hi --temperature 0.8 --seed 42");
+        assert_eq!(a.get_f32("temperature", 0.0).unwrap(), 0.8);
+        assert_eq!(a.get_f32("top-p", 1.0).unwrap(), 1.0);
+        assert_eq!(a.get_opt_u64("seed").unwrap(), Some(42));
+        assert_eq!(a.get_opt_u64("k").unwrap(), None);
+        assert!(parse("generate hi --top-p x").get_f32("top-p", 1.0).is_err());
+        assert!(parse("generate hi --seed x").get_opt_u64("seed").is_err());
     }
 
     #[test]

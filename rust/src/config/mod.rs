@@ -103,6 +103,17 @@ pub struct ServeConfig {
     pub bind: String,
 }
 
+impl ServeConfig {
+    /// Hard per-request ceiling on `max_new`: requests may ask for up to
+    /// 8x the configured default.  Engines clamp at submission and
+    /// record the original ask in `RequestStats::clamped_from`, and the
+    /// TCP front-end surfaces it on the reply line (`clamped=<cap>`) —
+    /// the clamp is enforced, never silent.
+    pub fn max_new_hard_cap(&self) -> usize {
+        self.max_new_tokens.max(1) * 8
+    }
+}
+
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
         ServeConfig {
@@ -140,6 +151,14 @@ mod tests {
         let c = ModelConfig::from_json(&j).unwrap();
         assert_eq!(c.group(), 4);
         assert_eq!(c.d_head, 64);
+    }
+
+    #[test]
+    fn hard_cap_is_8x_default_and_never_zero() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.max_new_hard_cap(), cfg.max_new_tokens * 8);
+        let z = ServeConfig { max_new_tokens: 0, ..Default::default() };
+        assert_eq!(z.max_new_hard_cap(), 8);
     }
 
     #[test]

@@ -8,13 +8,14 @@
 //! short and long requests interleave without head-of-line blocking);
 //! (3) completion — finished sequences are emitted with their stats.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
+use crate::api::{Event, GenHandle, GenParams};
 use crate::config::ServeConfig;
 use crate::coordinator::autotune::AutoTuner;
 use crate::coordinator::metrics::Metrics;
@@ -69,6 +70,11 @@ pub struct Engine {
     /// Ids rejected at admission (prefill failure) — drained by callers
     /// that hold per-request reply channels, so no waiter leaks.
     rejected: VecDeque<u64>,
+    /// Per-request event channels ([`crate::api::Event`]): requests
+    /// submitted with a sink get their token stream (when
+    /// `params.stream`) and terminal `Done`/`Error` delivered here;
+    /// sink-less requests fall back to the `finished`/`rejected` queues.
+    sinks: HashMap<u64, mpsc::Sender<Event>>,
     shape: CacheShape,
     decode_l_buckets: Vec<usize>,
     prefill_buckets: Vec<usize>,
@@ -119,6 +125,7 @@ impl Engine {
             active: Vec::new(),
             finished: VecDeque::new(),
             rejected: VecDeque::new(),
+            sinks: HashMap::new(),
             metrics: Arc::new(Metrics::default()),
             next_id: 1,
             pool: WorkerPool::new(cfg.decode_workers),
@@ -151,20 +158,60 @@ impl Engine {
         self.tuner.current_k()
     }
 
-    /// Submit a request; returns its id.
+    /// Submit a request; returns its id.  `params.max_new` is clamped to
+    /// [`ServeConfig::max_new_hard_cap`] (the original ask is recorded on
+    /// the request and surfaced in the response stats).
     pub fn submit(&mut self, mut req: Request) -> u64 {
         if req.id == 0 {
             req.id = self.next_id;
         }
         self.next_id = self.next_id.max(req.id) + 1;
+        req.clamp_max_new(self.cfg.max_new_hard_cap());
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let id = req.id;
         self.scheduler.enqueue(req);
-        self.next_id - 1
+        id
+    }
+
+    /// Submit with an event sink: the sequence's token events (when
+    /// `params.stream`) and its terminal `Done`/`Error` are delivered on
+    /// `tx` instead of the `pop_finished`/`pop_rejected` queues.  The
+    /// shard loop feeds `ShardCmd::Gen` reply channels through here.
+    pub fn submit_with_sink(&mut self, req: Request, tx: mpsc::Sender<Event>) -> u64 {
+        let id = self.submit(req);
+        self.sinks.insert(id, tx);
+        id
+    }
+
+    /// Submit and get a [`GenHandle`] back (the in-process v2 API): the
+    /// caller drives the engine (`step`) and polls `handle.try_recv()`,
+    /// or drains the handle from another thread while something else
+    /// steps.
+    pub fn submit_handle(&mut self, req: Request) -> GenHandle {
+        let cancel = req.cancel.clone();
+        // reserve the id first so the handle and sink agree on it
+        let id = self.submit(req);
+        let (tx, handle) = GenHandle::channel(id, cancel);
+        self.sinks.insert(id, tx);
+        handle
     }
 
     pub fn submit_text(&mut self, text: &str, max_new: usize) -> u64 {
         let id = self.next_id;
         self.submit(Request::from_text(id, text, max_new))
+    }
+
+    /// Cancel a request by id, wherever it is: queued (the scheduler
+    /// flips its token; it is purged and answered at the next admission
+    /// pass) or actively decoding (the sequence retires at the next
+    /// decode iteration with its partial output).  Unknown ids are a
+    /// no-op.  Returns whether the id was found.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(seq) = self.active.iter().find(|s| s.req.id == id) {
+            seq.req.cancel.cancel();
+            return true;
+        }
+        self.scheduler.cancel(id)
     }
 
     /// Live KV bytes across active sequences.
@@ -192,17 +239,35 @@ impl Engine {
 
     /// Projected total KV load: live bytes of the active set plus the
     /// admission projection ([`Scheduler::projected_bytes`]) of every
-    /// queued request at the current compression level.  The shard
+    /// queued request — each projected at the *request's own*
+    /// compression level (its `params.k_active` override, snapped to a
+    /// compiled bucket) rather than the fleet default.  The shard
     /// router's `MemAware` placement policy balances on this figure.
     pub fn projected_load_bytes(&self) -> usize {
-        let (sparse_b, dense_b) = self.token_byte_rates(self.tuner.current_k());
         let buf = self.shape.buf_cap;
         let queued: usize = self
             .scheduler
             .queued()
-            .map(|r| Scheduler::projected_bytes(r.prompt.len(), r.max_new_tokens, sparse_b, dense_b, buf))
+            .map(|r| {
+                let (sparse_b, dense_b) = self.token_byte_rates(self.request_k(r));
+                Scheduler::projected_bytes(r.prompt.len(), r.params.max_new, sparse_b, dense_b, buf)
+            })
             .sum();
         self.live_cache_bytes() + queued
+    }
+
+    /// Snap a requested compression level to the nearest compiled k
+    /// bucket — the same rule the autotuner's manual pin applies, so a
+    /// per-request `k=<n>` lands on exactly the bucket a fleet-wide
+    /// `SET k_active <n>` would.
+    pub fn snap_k(&self, k: usize) -> usize {
+        snap_to_bucket(&self.tuner.k_buckets, k, self.tuner.current_k())
+    }
+
+    /// Compression level a request will be admitted at: its own
+    /// override when present, the fleet level otherwise.
+    fn request_k(&self, r: &Request) -> usize {
+        r.params.k_active.map(|k| self.snap_k(k)).unwrap_or_else(|| self.tuner.current_k())
     }
 
     pub fn has_work(&self) -> bool {
@@ -260,33 +325,100 @@ impl Engine {
         )
     }
 
+    /// Deliver a terminal `Done`: through the request's event sink when
+    /// one is attached, the `pop_finished` queue otherwise.
+    fn deliver_done(&mut self, resp: Response) {
+        match self.sinks.remove(&resp.id) {
+            Some(tx) => {
+                let _ = tx.send(Event::Done(resp));
+            }
+            None => self.finished.push_back(resp),
+        }
+    }
+
+    /// Deliver a terminal `Error` (sink or `pop_rejected` queue).
+    fn deliver_error(&mut self, id: u64, message: String) {
+        match self.sinks.remove(&id) {
+            Some(tx) => {
+                let _ = tx.send(Event::Error { id, message });
+            }
+            None => self.rejected.push_back(id),
+        }
+    }
+
     fn admit(&mut self) -> anyhow::Result<()> {
+        // cancelled-while-queued requests first: purge them and answer
+        // their waiters with an empty cancelled response — they must not
+        // hold queue slots or inflate the projected load
+        for p in self.scheduler.take_cancelled() {
+            let stats = RequestStats {
+                queue_time: p.enqueued.elapsed(),
+                cancelled: true,
+                clamped_from: p.req.clamped_from,
+                ..Default::default()
+            };
+            self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            let resp =
+                Response { id: p.req.id, tokens: Vec::new(), text: String::new(), stats };
+            self.deliver_done(resp);
+        }
         let k_now = {
             let live = self.live_cache_bytes();
             let t = &mut self.tuner;
             t.observe(live)
         };
-        let (sparse_b, dense_b) = self.token_byte_rates(k_now);
-        let buf = self.shape.buf_cap;
+        // locals for the projection closure (admit_next holds the
+        // scheduler mutably, so the closure must not re-borrow self)
+        let shape = self.shape;
+        let mode = self.cfg.mode;
+        let k_buckets = self.tuner.k_buckets.clone();
+        let snap = move |k: usize| snap_to_bucket(&k_buckets, k, k_now);
+        let buf = shape.buf_cap;
         loop {
             // re-read live bytes per admission: each admitted prefill
             // grows the active set, and a burst gated against one stale
             // snapshot could collectively overshoot the budget
             let live = self.live_cache_bytes();
+            // project each request at its own compression level (the
+            // per-request override, snapped) — a k=8 request must be
+            // charged k=8 bytes, not the fleet default's
             let proj = |req: &Request| {
-                Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
+                let k = req.params.k_active.map(&snap).unwrap_or(k_now);
+                let (sparse_b, dense_b) = crate::sparse::memory::token_byte_rates(
+                    shape.n_layers,
+                    shape.n_kv,
+                    shape.d_head,
+                    mode,
+                    k,
+                );
+                Scheduler::projected_bytes(req.prompt.len(), req.params.max_new, sparse_b, dense_b, buf)
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
                 break;
             };
             let queue_time = pending.enqueued.elapsed();
             let rid = pending.req.id;
-            match self.prefill(pending.req, k_now, queue_time) {
-                Ok(seq) => self.active.push(seq),
+            let k_req = pending.req.params.k_active.map(&snap).unwrap_or(k_now);
+            match self.prefill(pending.req, k_req, queue_time) {
+                Ok(seq) => {
+                    // the first token was sampled from the prefill
+                    // logits — streaming clients see it immediately
+                    if seq.req.params.stream {
+                        if let Some(tx) = self.sinks.get(&rid) {
+                            let _ = tx.send(Event::Token {
+                                id: rid,
+                                index: 0,
+                                token: seq.next_token,
+                                text: decode_tokens(&[seq.next_token]),
+                            });
+                        }
+                    }
+                    self.active.push(seq);
+                }
                 Err(e) => {
                     self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-                    self.rejected.push_back(rid);
                     log::warn!("prefill failed: {e:#}");
+                    self.deliver_error(rid, format!("rejected at admission: {e:#}"));
                 }
             }
         }
@@ -326,7 +458,8 @@ impl Engine {
         let khat = outs[1].as_f32()?;
         let vhat = outs[2].as_f32()?;
 
-        let mut stats = RequestStats { queue_time, ..Default::default() };
+        let mut stats =
+            RequestStats { queue_time, clamped_from: req.clamped_from, ..Default::default() };
         stats.prefill_time = t0.elapsed();
         self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
         self.metrics.prefill_tokens.fetch_add(prompt.len() as u64, Ordering::Relaxed);
@@ -360,9 +493,9 @@ impl Engine {
             SeqBackend::Swan(cache)
         };
 
-        let next_token = sample(&logits, req.temperature, &mut Pcg64::new(req.id));
+        let next_token = sample(&logits, &req.params, &[], &mut Pcg64::new(req.seed_base()));
         Ok(ActiveSeq {
-            rng: Pcg64::new(req.id ^ x5wan_seed()),
+            rng: Pcg64::new(req.seed_base() ^ x5wan_seed()),
             decode_graph: String::new(),
             produced: vec![next_token],
             next_token,
@@ -418,7 +551,13 @@ impl Engine {
                 let out = decode_execute(lm, shape, l_buckets, clone_args, t.seq);
                 if let Ok(Some(outs)) = &out {
                     if let Ok(logits) = outs[0].as_f32() {
-                        t.next = Some(sample(logits, t.seq.req.temperature, &mut t.seq.rng));
+                        // top-p / repetition-penalty live here in the
+                        // parallel phase: the draw depends only on this
+                        // sequence's own state (params, produced
+                        // history, private RNG stream), so serial and
+                        // parallel stepping stay bit-identical
+                        let s = &mut *t.seq;
+                        t.next = Some(sample(logits, &s.req.params, &s.produced, &mut s.rng));
                     }
                 }
                 t.out = Some(out);
@@ -462,6 +601,16 @@ impl Engine {
 
                 seq.next_token = next;
                 seq.produced.push(next);
+                if seq.req.params.stream {
+                    if let Some(tx) = self.sinks.get(&seq.req.id) {
+                        let _ = tx.send(Event::Token {
+                            id: seq.req.id,
+                            index: seq.produced.len() - 1,
+                            token: next,
+                            text: decode_tokens(&[next]),
+                        });
+                    }
+                }
                 seq.stats.decode_steps += 1;
                 let step_time = t.exec + t0.elapsed();
                 seq.stats.decode_time += step_time;
@@ -490,7 +639,16 @@ impl Engine {
             for seq in self.active.drain(..) {
                 if seq.finished {
                     self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
-                    self.finished.push_back(finish(seq));
+                    let resp = finish(seq);
+                    // route through the event sink when one is attached
+                    // (self.active is still mutably borrowed by drain,
+                    // so deliver inline rather than via deliver_done)
+                    match self.sinks.remove(&resp.id) {
+                        Some(tx) => {
+                            let _ = tx.send(Event::Done(resp));
+                        }
+                        None => self.finished.push_back(resp),
+                    }
                 } else {
                     keep.push(seq);
                 }
@@ -525,10 +683,16 @@ fn decode_execute(
     clone_args: bool,
     seq: &mut ActiveSeq,
 ) -> anyhow::Result<Option<Vec<HostTensor>>> {
-    if seq.produced.len() >= seq.req.max_new_tokens {
+    // a flipped cancel token retires the sequence here — checked once
+    // per iteration, so cancellation lands within one decode step and
+    // co-batched sequences are untouched
+    if seq.req.cancel.is_cancelled() {
         return Ok(None);
     }
-    if let Some(stop) = seq.req.stop_token {
+    if seq.produced.len() >= seq.req.params.max_new {
+        return Ok(None);
+    }
+    if let Some(stop) = seq.req.params.stop {
         if seq.next_token == stop {
             return Ok(None);
         }
@@ -614,34 +778,106 @@ fn decode_execute(
     Ok(Some(outs))
 }
 
+/// Nearest compiled bucket to `k` (ties break low via `min_by_key`
+/// order) — the ONE spelling of the per-request/fleet snap rule, shared
+/// by [`Engine::snap_k`], [`AutoTuner::pin`]-equivalent admission, and
+/// the projection closure, so admission can never project at a
+/// different k than the sequence is admitted at.
+fn snap_to_bucket(buckets: &[usize], k: usize, fallback: usize) -> usize {
+    buckets.iter().copied().min_by_key(|b| b.abs_diff(k)).unwrap_or(fallback)
+}
+
 fn finish(seq: ActiveSeq) -> Response {
+    let mut stats = seq.stats;
+    stats.cancelled = seq.req.cancel.is_cancelled();
     Response {
         id: seq.req.id,
         text: decode_tokens(&seq.produced),
         tokens: seq.produced,
-        stats: seq.stats,
+        stats,
     }
 }
 
-/// Sample one token from a logits row: greedy at `temperature <= 0`,
-/// softmax sampling otherwise.  Shared by the PJRT engine and the
-/// pipeline-group coordinator ([`crate::shard::pipeline`]) so both paths
-/// consume identical RNG streams for identical logits — the basis of the
-/// pipeline-vs-single-shard bit-identity guarantee.
-pub fn sample(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> u32 {
-    if temperature <= 0.0 {
-        return argmax(logits) as u32;
+/// Sample one token from a logits row under [`GenParams`]: greedy at
+/// `temperature <= 0`, softmax sampling otherwise, with optional
+/// CTRL-style repetition penalty over `produced` and nucleus (top-p)
+/// filtering.  Shared by the PJRT engine and the pipeline-group
+/// coordinator ([`crate::shard::pipeline`]) so both paths consume
+/// identical RNG streams for identical logits — the basis of the
+/// pipeline-vs-single-shard bit-identity guarantee.  Exactly one RNG
+/// draw is consumed per non-greedy call regardless of top-p/penalty, so
+/// streams are reproducible across worker counts and serving paths.
+pub fn sample(logits: &[f32], params: &GenParams, produced: &[u32], rng: &mut Pcg64) -> u32 {
+    let penalize = params.repetition_penalty != 1.0 && !produced.is_empty();
+    if !penalize && params.top_p >= 1.0 {
+        // fast path — bit-identical to the v1 sampler, which legacy
+        // (temperature-only) request streams are locked to
+        if params.temperature <= 0.0 {
+            return argmax(logits) as u32;
+        }
+        let mut p: Vec<f32> = logits.iter().map(|l| l / params.temperature).collect();
+        softmax_inplace(&mut p);
+        let mut u = rng.next_f32();
+        for (i, &pi) in p.iter().enumerate() {
+            if u < pi {
+                return i as u32;
+            }
+            u -= pi;
+        }
+        return (p.len() - 1) as u32;
     }
-    let mut p: Vec<f32> = logits.iter().map(|l| l / temperature).collect();
+
+    let mut l = logits.to_vec();
+    if penalize {
+        // CTRL: shrink positive logits, amplify negative ones; each
+        // distinct produced token is penalized once
+        let mut seen = vec![false; l.len()];
+        for &t in produced {
+            let t = t as usize;
+            if t < l.len() && !seen[t] {
+                seen[t] = true;
+                l[t] = if l[t] > 0.0 {
+                    l[t] / params.repetition_penalty
+                } else {
+                    l[t] * params.repetition_penalty
+                };
+            }
+        }
+    }
+    if params.temperature <= 0.0 {
+        return argmax(&l) as u32;
+    }
+    let mut p: Vec<f32> = l.iter().map(|x| x / params.temperature).collect();
     softmax_inplace(&mut p);
-    let mut u = rng.next_f32();
-    for (i, &pi) in p.iter().enumerate() {
-        if u < pi {
+    // nucleus: the smallest probability-descending prefix whose mass
+    // reaches top_p (ties break by index, so the order is total and the
+    // draw deterministic)
+    let (kept, mass) = if params.top_p < 1.0 {
+        let mut idx: Vec<usize> = (0..p.len()).collect();
+        idx.sort_by(|&a, &b| {
+            p[b].partial_cmp(&p[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let mut kept = Vec::new();
+        let mut mass = 0.0f32;
+        for &i in &idx {
+            kept.push(i);
+            mass += p[i];
+            if mass >= params.top_p {
+                break;
+            }
+        }
+        (kept, mass)
+    } else {
+        ((0..p.len()).collect(), 1.0)
+    };
+    let mut u = rng.next_f32() * mass;
+    for &i in &kept {
+        if u < p[i] {
             return i as u32;
         }
-        u -= pi;
+        u -= p[i];
     }
-    (p.len() - 1) as u32
+    *kept.last().unwrap_or(&(p.len() - 1)) as u32
 }
 
 /// Seed XOR'd into every sequence's decode RNG stream (shared with the
@@ -656,19 +892,125 @@ pub(crate) fn x5wan_seed() -> u64 {
 mod tests {
     use super::*;
 
+    fn temp(t: f32) -> GenParams {
+        GenParams::new(8).temperature(t)
+    }
+
     #[test]
     fn sample_greedy_and_temperature() {
         let logits = vec![0.0f32, 5.0, 1.0];
         let mut rng = Pcg64::new(0);
-        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+        assert_eq!(sample(&logits, &temp(0.0), &[], &mut rng), 1);
         // high temperature explores
         let mut seen = std::collections::HashSet::new();
         for _ in 0..200 {
-            seen.insert(sample(&logits, 5.0, &mut rng));
+            seen.insert(sample(&logits, &temp(5.0), &[], &mut rng));
         }
         assert!(seen.len() > 1);
     }
 
+    /// The fast path IS the v1 sampler: with top_p=1 / rep=1 the general
+    /// machinery must never engage, so legacy streams are bit-stable.
+    #[test]
+    fn default_params_reproduce_v1_streams() {
+        let mut r = Pcg64::new(11);
+        let logits: Vec<f32> = (0..16).map(|_| r.normal_f32()).collect();
+        // hand-rolled v1 sampler
+        let v1 = |logits: &[f32], t: f32, rng: &mut Pcg64| -> u32 {
+            if t <= 0.0 {
+                return argmax(logits) as u32;
+            }
+            let mut p: Vec<f32> = logits.iter().map(|l| l / t).collect();
+            softmax_inplace(&mut p);
+            let mut u = rng.next_f32();
+            for (i, &pi) in p.iter().enumerate() {
+                if u < pi {
+                    return i as u32;
+                }
+                u -= pi;
+            }
+            (p.len() - 1) as u32
+        };
+        for t in [0.0f32, 0.5, 1.0, 3.0] {
+            let mut a = Pcg64::new(7);
+            let mut b = Pcg64::new(7);
+            for _ in 0..50 {
+                assert_eq!(
+                    sample(&logits, &temp(t), &[9, 9, 2], &mut a),
+                    v1(&logits, t, &mut b),
+                    "t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_to_the_nucleus() {
+        // token 1 holds almost all mass; tight top_p must always pick it
+        let logits = vec![0.0f32, 8.0, 1.0, -2.0];
+        let p = temp(1.0).top_p(0.5);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200 {
+            assert_eq!(sample(&logits, &p, &[], &mut rng), 1);
+        }
+        // wide top_p still explores
+        let p = temp(5.0).top_p(0.99);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(sample(&logits, &p, &[], &mut rng));
+        }
+        assert!(seen.len() > 1, "{seen:?}");
+    }
+
+    #[test]
+    fn repetition_penalty_demotes_produced_tokens() {
+        // tokens 1 and 2 are nearly tied; after producing 1 a strong
+        // penalty must flip even the greedy choice to 2
+        let logits = vec![0.0f32, 2.0, 1.9, -1.0];
+        assert_eq!(sample(&logits, &temp(0.0), &[], &mut Pcg64::new(0)), 1);
+        let pen = temp(0.0).repetition_penalty(1.5);
+        assert_eq!(sample(&logits, &pen, &[1], &mut Pcg64::new(0)), 2);
+        // each distinct token is penalized once, not per occurrence
+        let once = sample(&logits, &pen, &[1], &mut Pcg64::new(0));
+        let thrice = sample(&logits, &pen, &[1, 1, 1], &mut Pcg64::new(0));
+        assert_eq!(once, thrice);
+    }
+
+    #[test]
+    fn sampling_consumes_one_draw_per_call() {
+        // identical RNG positions must follow identical streams no
+        // matter which sampler features are active
+        let logits = vec![0.5f32, 1.0, 0.2, 0.9];
+        let runs: Vec<Vec<u32>> = [
+            temp(0.9),
+            temp(0.9).top_p(0.8),
+            temp(0.9).repetition_penalty(1.3),
+            temp(0.9).top_p(0.8).repetition_penalty(1.3),
+        ]
+        .iter()
+        .map(|p| {
+            let mut rng = Pcg64::new(42);
+            (0..20).map(|_| sample(&logits, p, &[0], &mut rng)).collect()
+        })
+        .collect();
+        // all runs drew 20 times from the same stream: re-running any
+        // config reproduces itself exactly
+        for (i, p) in [
+            temp(0.9),
+            temp(0.9).top_p(0.8),
+            temp(0.9).repetition_penalty(1.3),
+            temp(0.9).top_p(0.8).repetition_penalty(1.3),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut rng = Pcg64::new(42);
+            let again: Vec<u32> = (0..20).map(|_| sample(&logits, p, &[0], &mut rng)).collect();
+            assert_eq!(again, runs[i]);
+        }
+    }
+
     // Engine integration tests (needing artifacts) live in
-    // rust/tests/serve_integration.rs.
+    // rust/tests/serve_integration.rs; cancellation/streaming/mixed-k
+    // coverage that runs without artifacts lives in rust/tests/pipeline.rs.
 }

@@ -1,6 +1,14 @@
 //! Request/response types for the serving engine.
+//!
+//! A [`Request`] carries its generation parameters as a typed
+//! [`GenParams`] (see [`crate::api`]) plus a shared [`CancelToken`];
+//! the loose `max_new_tokens` / `temperature` / `stop_token` fields of
+//! the v1 request live inside `params` now, so every serving path —
+//! engine, shard, pipeline group, wire — consumes one parameter type.
 
 use std::time::Duration;
+
+use crate::api::{CancelToken, GenParams};
 
 /// Character-level tokenizer shared with the python side: ids 0..95 map to
 /// ASCII 32..127.
@@ -29,21 +37,46 @@ pub fn decode_tokens(ids: &[u32]) -> String {
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    /// Softmax temperature; 0 = greedy.
-    pub temperature: f32,
-    /// Optional stop token.
-    pub stop_token: Option<u32>,
+    /// Typed generation parameters (sampling, budget, per-request
+    /// compression override, streaming).
+    pub params: GenParams,
+    /// Cooperative cancellation flag; clones (held by [`crate::api::
+    /// GenHandle`] and connection registries) share it.
+    pub cancel: CancelToken,
+    /// Set by the admitting engine when it clamped `params.max_new`:
+    /// the value originally requested (so stats never lie about it).
+    pub clamped_from: Option<usize>,
 }
 
 impl Request {
     pub fn from_text(id: u64, text: &str, max_new_tokens: usize) -> Request {
+        Request::with_params(id, text, GenParams::new(max_new_tokens))
+    }
+
+    /// Build a request from text with explicit generation parameters.
+    pub fn with_params(id: u64, text: &str, params: GenParams) -> Request {
         Request {
             id,
             prompt: encode_text(text),
-            max_new_tokens,
-            temperature: 0.0,
-            stop_token: None,
+            params,
+            cancel: CancelToken::new(),
+            clamped_from: None,
+        }
+    }
+
+    /// Base seed of this request's RNG streams: the explicit
+    /// `params.seed` when given, the request id otherwise (the
+    /// historical derivation, so legacy requests keep their streams).
+    pub fn seed_base(&self) -> u64 {
+        self.params.seed.unwrap_or(self.id)
+    }
+
+    /// Clamp `params.max_new` to a server cap, recording the original
+    /// request so the clamp is surfaced (reply + stats), never silent.
+    pub fn clamp_max_new(&mut self, cap: usize) {
+        if self.params.max_new > cap {
+            self.clamped_from = Some(self.params.max_new);
+            self.params.max_new = cap;
         }
     }
 }
@@ -59,6 +92,12 @@ pub struct RequestStats {
     pub peak_cache_bytes: usize,
     /// Bytes an uncompressed cache would have used at completion.
     pub dense_equiv_bytes: usize,
+    /// The request was cancelled; `tokens`/`text` hold the partial
+    /// output produced before the sequence retired.
+    pub cancelled: bool,
+    /// `Some(requested)` when the server clamped `max_new` below what
+    /// the request asked for.
+    pub clamped_from: Option<usize>,
 }
 
 impl RequestStats {
@@ -104,6 +143,28 @@ mod tests {
     fn out_of_alphabet_maps_to_space() {
         let ids = encode_text("a\nb");
         assert_eq!(decode_tokens(&ids), "a b");
+    }
+
+    #[test]
+    fn from_text_uses_default_params() {
+        let r = Request::from_text(3, "hi", 12);
+        assert_eq!(r.params.max_new, 12);
+        assert_eq!(r.params.temperature, 0.0);
+        assert_eq!(r.params.k_active, None);
+        assert!(!r.cancel.is_cancelled());
+        assert_eq!(r.seed_base(), 3);
+        let s = Request::with_params(3, "hi", GenParams::new(12).seed(99));
+        assert_eq!(s.seed_base(), 99);
+    }
+
+    #[test]
+    fn clamp_records_the_original_request() {
+        let mut r = Request::from_text(1, "hi", 100);
+        r.clamp_max_new(512);
+        assert_eq!(r.clamped_from, None, "under the cap: untouched");
+        r.clamp_max_new(40);
+        assert_eq!(r.params.max_new, 40);
+        assert_eq!(r.clamped_from, Some(100));
     }
 
     #[test]

@@ -86,6 +86,40 @@ impl Scheduler {
         self.queue.push_back(Pending { req, enqueued: Instant::now() });
     }
 
+    /// Remove every queued request whose [`crate::api::CancelToken`] has
+    /// been flipped, preserving the order of the rest.  The engine calls
+    /// this each admission pass and answers the removed requests'
+    /// waiters with a cancelled (empty) response — a cancelled request
+    /// must neither hold its queue slot nor inflate the shard's
+    /// projected KV load until the admission window happens to reach it.
+    pub fn take_cancelled(&mut self) -> Vec<Pending> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queue.len() {
+            if self.queue[i].req.cancel.is_cancelled() {
+                if let Some(p) = self.queue.remove(i) {
+                    out.push(p);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Flip the cancel token of a queued request by id (the shard-level
+    /// `CANCEL <id>` hop lands here when the request has not been
+    /// admitted yet).  Returns whether the id was found.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.queue.iter().find(|p| p.req.id == id) {
+            Some(p) => {
+                p.req.cancel.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -166,7 +200,13 @@ mod tests {
     use super::*;
 
     fn req(id: u64, prompt: usize) -> Request {
-        Request { id, prompt: vec![0; prompt], max_new_tokens: 8, temperature: 0.0, stop_token: None }
+        Request {
+            id,
+            prompt: vec![0; prompt],
+            params: crate::api::GenParams::new(8),
+            cancel: crate::api::CancelToken::new(),
+            clamped_from: None,
+        }
     }
 
     #[test]
@@ -292,6 +332,23 @@ mod tests {
         s.enqueue(req(2, 1500));
         s.enqueue(req(3, 100));
         assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 3);
+    }
+
+    #[test]
+    fn take_cancelled_purges_in_place_and_preserves_order() {
+        let mut s = Scheduler::new(8, 0);
+        for id in 1..=4 {
+            s.enqueue(req(id, 4));
+        }
+        // cancel 1 and 3 through the queue-side hop
+        assert!(s.cancel(1));
+        assert!(s.cancel(3));
+        assert!(!s.cancel(99), "unknown id is not found");
+        let taken = s.take_cancelled();
+        assert_eq!(taken.iter().map(|p| p.req.id).collect::<Vec<_>>(), vec![1, 3]);
+        let left: Vec<u64> = s.queued().map(|r| r.id).collect();
+        assert_eq!(left, vec![2, 4], "survivors keep FIFO order");
+        assert!(s.take_cancelled().is_empty(), "purge is idempotent");
     }
 
     #[test]

@@ -15,9 +15,15 @@
 //! * [`runtime`] — PJRT execution of the AOT HLO graphs lowered by
 //!   `python/compile/aot.py` (the serving hot path; python never runs at
 //!   request time).
+//! * [`api`] — the typed request layer every serving path shares:
+//!   builder-style [`api::GenParams`] (sampling knobs, a per-request
+//!   compression override, streaming), token-event delivery via
+//!   [`api::GenHandle`], and cooperative cancellation
+//!   ([`api::CancelToken`]).
 //! * [`coordinator`] / [`server`] — continuous batcher, prefill/decode
 //!   scheduler, admission control and the runtime-tunable compression
-//!   controller, plus the TCP front-end.
+//!   controller, plus the TCP front-end (wire protocol v2: keyword
+//!   `GEN`, `TOK` streaming lines, `CANCEL`).
 //! * [`shard`] — multi-shard serving: N engines on their own threads
 //!   behind a request router with pluggable balance policies and
 //!   fleet-wide live compression retuning; `--pipeline P` switches the
@@ -49,6 +55,7 @@
     clippy::ptr_arg
 )]
 
+pub mod api;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

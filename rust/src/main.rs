@@ -76,19 +76,60 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let cfg = serve_config(args)?;
             let mut engine = Engine::new(&artifacts, cfg)?;
             let max_new = args.get_usize("max-new", 48)?;
-            engine.submit_text(&prompt, max_new);
-            let responses = engine.run_to_completion()?;
-            for r in responses {
-                println!("{}", r.text);
-                println!(
-                    "[prefill {:.1} ms | {} tokens in {:.1} ms = {:.1} tok/s | kv saving {:.1}%]",
-                    r.stats.prefill_time.as_secs_f64() * 1e3,
-                    r.stats.decode_steps,
-                    r.stats.decode_time.as_secs_f64() * 1e3,
-                    r.stats.decode_tps(),
-                    r.stats.memory_saving() * 100.0
-                );
+            let mut params = swan::api::GenParams::new(max_new)
+                .temperature(args.get_f32("temperature", 0.0)?)
+                .top_p(args.get_f32("top-p", 1.0)?)
+                .repetition_penalty(args.get_f32("rep-penalty", 1.0)?)
+                .stream(args.has("stream"));
+            if let Some(seed) = args.get_opt_u64("seed")? {
+                params = params.seed(seed);
             }
+            if let Some(k) = args.get_opt_u64("k")? {
+                // per-request compression override (snapped to a
+                // compiled bucket at admission)
+                params = params.k_active(k as usize);
+            }
+            let streaming = params.stream;
+            let handle =
+                engine.submit_handle(swan::coordinator::Request::with_params(0, &prompt, params));
+            // drive the engine on this thread; drain events as they land
+            let resp = loop {
+                engine.step()?;
+                let mut done = None;
+                while let Some(ev) = handle.try_recv() {
+                    match ev {
+                        swan::api::Event::Token { text, .. } => {
+                            if streaming {
+                                print!("{text}");
+                                use std::io::Write;
+                                let _ = std::io::stdout().flush();
+                            }
+                        }
+                        swan::api::Event::Done(r) => done = Some(r),
+                        swan::api::Event::Error { message, .. } => {
+                            anyhow::bail!("generation failed: {message}")
+                        }
+                    }
+                }
+                if let Some(r) = done {
+                    break r;
+                }
+                anyhow::ensure!(engine.has_work(), "engine idle before the generation finished");
+            };
+            if streaming {
+                println!();
+            } else {
+                println!("{}", resp.text);
+            }
+            let r = resp;
+            println!(
+                "[prefill {:.1} ms | {} tokens in {:.1} ms = {:.1} tok/s | kv saving {:.1}%]",
+                r.stats.prefill_time.as_secs_f64() * 1e3,
+                r.stats.decode_steps,
+                r.stats.decode_time.as_secs_f64() * 1e3,
+                r.stats.decode_tps(),
+                r.stats.memory_saving() * 100.0
+            );
             Ok(())
         }
         "eval" => {

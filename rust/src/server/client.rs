@@ -1,10 +1,15 @@
 //! Blocking client for the TCP protocol (used by examples, benches and
-//! integration tests; doubles as the reference protocol implementation).
+//! integration tests; doubles as the reference protocol-v2
+//! implementation: keyword `GEN` via [`crate::server::proto::encode_gen`],
+//! `TOK` streaming lines, `CANCEL`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use anyhow::Context;
+
+use crate::api::GenParams;
+use crate::server::proto::encode_gen;
 
 /// Parsed per-request stats from the server's STAT line.
 #[derive(Clone, Debug, Default)]
@@ -14,6 +19,23 @@ pub struct GenStats {
     pub tokens: usize,
     pub tps: f64,
     pub mem_saving_pct: f64,
+    /// `Some(n)`: the server clamped `max_new`; `n` is what was
+    /// originally requested (`requested=` on the STAT line).
+    pub requested: Option<usize>,
+    /// The generation was cancelled (`cancelled=1` on the STAT line);
+    /// the text is the partial output.
+    pub cancelled: bool,
+}
+
+/// One finished generation as the server reported it.
+#[derive(Clone, Debug, Default)]
+pub struct Gen {
+    pub id: u64,
+    pub text: String,
+    pub stats: GenStats,
+    /// `Some(cap)` when the server clamped `max_new` to `cap`
+    /// (`clamped=<cap>` on the OK line).
+    pub clamped_to: Option<usize>,
 }
 
 pub struct Client {
@@ -57,6 +79,15 @@ impl Client {
         Ok(())
     }
 
+    /// Cancel a generation by id; the pending `GEN` still answers (with
+    /// its partial output and `cancelled=1`).
+    pub fn cancel(&mut self, id: u64) -> anyhow::Result<()> {
+        writeln!(self.writer, "CANCEL {id}")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == "OK", "unexpected reply '{l}'");
+        Ok(())
+    }
+
     pub fn stats(&mut self) -> anyhow::Result<String> {
         writeln!(self.writer, "STATS")?;
         let mut out = String::new();
@@ -70,18 +101,63 @@ impl Client {
         }
     }
 
-    /// Generate; returns (text, stats).
+    /// Legacy-spelled generation; returns (text, stats).
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> anyhow::Result<(String, GenStats)> {
         anyhow::ensure!(!prompt.contains('\n'), "prompt must be single-line");
         writeln!(self.writer, "GEN {max_new} {prompt}")?;
-        let l = self.line()?;
-        let rest = l
+        let g = self.read_generation(|_, _| {})?;
+        Ok((g.text, g.stats))
+    }
+
+    /// Keyword-spelled generation with typed [`GenParams`].  For
+    /// streaming params, prefer [`Client::generate_stream`] (this method
+    /// silently drains the `TOK` lines).
+    pub fn generate_with(&mut self, prompt: &str, params: &GenParams) -> anyhow::Result<Gen> {
+        self.generate_stream(prompt, params, |_, _| {})
+    }
+
+    /// Keyword-spelled generation invoking `on_token(id, text)` per
+    /// streamed token (the first call reveals the request id, so a
+    /// caller can `CANCEL` from another connection mid-stream).
+    pub fn generate_stream(
+        &mut self,
+        prompt: &str,
+        params: &GenParams,
+        on_token: impl FnMut(u64, &str),
+    ) -> anyhow::Result<Gen> {
+        anyhow::ensure!(!prompt.contains('\n'), "prompt must be single-line");
+        let line = encode_gen(params, prompt);
+        writeln!(self.writer, "{line}")?;
+        self.read_generation(on_token)
+    }
+
+    /// Consume one generation's replies: any number of `TOK` lines, the
+    /// `OK` line, then the STAT line.
+    fn read_generation(&mut self, mut on_token: impl FnMut(u64, &str)) -> anyhow::Result<Gen> {
+        let ok = loop {
+            let l = self.line()?;
+            if let Some(rest) = l.strip_prefix("TOK ") {
+                let (id, text) = rest.split_once(' ').unwrap_or((rest, ""));
+                on_token(id.parse().unwrap_or(0), text);
+                continue;
+            }
+            break l;
+        };
+        let rest = ok
             .strip_prefix("OK ")
-            .ok_or_else(|| anyhow::anyhow!("generation failed: {l}"))?;
-        let text = rest.split_once(' ').map(|(_, t)| t.to_string()).unwrap_or_default();
+            .ok_or_else(|| anyhow::anyhow!("generation failed: {ok}"))?;
+        let (id_str, mut rest) = rest.split_once(' ').unwrap_or((rest, ""));
+        let id = id_str.parse().unwrap_or(0);
+        let mut clamped_to = None;
+        if let Some(tail) = rest.strip_prefix("clamped=") {
+            let (n, t) = tail.split_once(' ').unwrap_or((tail, ""));
+            clamped_to = n.parse().ok();
+            rest = t;
+        }
+        let text = rest.to_string();
         let stat_line = self.line()?;
         let stats = parse_stat_line(&stat_line).unwrap_or_default();
-        Ok((text, stats))
+        Ok(Gen { id, text, stats, clamped_to })
     }
 
     pub fn quit(mut self) {
@@ -101,6 +177,8 @@ fn parse_stat_line(line: &str) -> Option<GenStats> {
             "tokens" => s.tokens = v.parse().ok()?,
             "tps" => s.tps = v.parse().ok()?,
             "mem_saving" => s.mem_saving_pct = v.parse().ok()?,
+            "requested" => s.requested = v.parse().ok(),
+            "cancelled" => s.cancelled = v == "1",
             _ => {}
         }
     }
@@ -120,6 +198,19 @@ mod tests {
         assert_eq!(s.tokens, 16);
         assert!((s.prefill_ms - 12.5).abs() < 1e-9);
         assert!((s.mem_saving_pct - 42.3).abs() < 1e-9);
+        assert_eq!(s.requested, None);
+        assert!(!s.cancelled);
+    }
+
+    #[test]
+    fn stat_line_parses_clamp_and_cancel_markers() {
+        let s = parse_stat_line(
+            "STAT prefill_ms=1.00 decode_ms=2.00 tokens=4 tps=9.0 mem_saving=10.0% \
+             requested=9000 cancelled=1",
+        )
+        .unwrap();
+        assert_eq!(s.requested, Some(9000));
+        assert!(s.cancelled);
     }
 
     #[test]

@@ -1,13 +1,22 @@
 //! TCP front-end: a line-oriented protocol over the shard router.
 //!
-//! Protocol (one command per line):
-//!   GEN <max_new_tokens> <prompt text...>   -> "OK <id> <text>" + stats line
+//! Protocol v2 (one command per line):
+//!   GEN <max_new> <prompt...>               -> "OK <id> <text>" + STAT line (legacy spelling)
+//!   GEN key=value... <prompt...>            -> typed params: max_new= temp= top_p= rep=
+//!                                              seed= stop= k= (per-request compression
+//!                                              override) stream= — with stream=1 the reply
+//!                                              is "TOK <id> <text>" per token, then OK+STAT
+//!   CANCEL <id>                             -> "OK"; the generation retires within one
+//!                                              decode iteration (partial output, cancelled=1)
 //!   SET k_active <n>                        -> "OK" (fleet-wide: every shard)
 //!   SET balance <policy>                    -> "OK" (swap placement live)
 //!   STATS                                   -> fleet + per-shard view, "." line
 //!   PING                                    -> "PONG"
 //!   QUIT                                    -> closes the connection
 //! Malformed lines answer `ERR <code> <message>` and keep the connection.
+//! A clamped `max_new` is surfaced as `clamped=<cap>` on the OK line and
+//! `requested=<n>` on the STAT line; client disconnects cancel the
+//! connection's in-flight generations.
 //!
 //! Each shard's engine runs on its own thread behind
 //! [`crate::shard::Router`]; connection threads place `GEN` through the

@@ -1,4 +1,25 @@
-//! Wire protocol parsing for the TCP front-end.
+//! Wire protocol parsing for the TCP front-end (protocol v2).
+//!
+//! `GEN` comes in two spellings, both supported forever:
+//!
+//! * **legacy** — `GEN <max_new> <prompt…>`: the first token is a bare
+//!   number.  Parses to exactly the request it always did (default
+//!   [`GenParams`] with that `max_new`).
+//! * **keyword** — `GEN key=value… [--] <prompt…>`: leading `key=value`
+//!   tokens set typed [`GenParams`] fields; the prompt starts at the
+//!   first token that is not a recognized `key=value` (so prompts may
+//!   freely contain `=`), or explicitly after a standalone `--`
+//!   terminator — which is how a prompt whose *first word* happens to
+//!   look like a recognized parameter (`k=2 plus k=3 …`) is sent
+//!   unambiguously ([`encode_gen`] emits the `--` automatically).
+//!   Keys: `max_new`, `temp`, `top_p`, `rep`, `seed`, `stop`, `k`
+//!   (per-request compression override) and `stream`
+//!   (`1`/`0`/`true`/`false`).  A *recognized* key with an unparsable
+//!   value is a `bad-args` error rather than silently becoming prompt
+//!   text.
+//!
+//! Streaming generations answer `TOK <id> <text>` per token before the
+//! final `OK <id> …` line, and `CANCEL <id>` retires a running request.
 //!
 //! Malformed lines parse to a structured [`ProtoError`] (stable machine
 //! code + human message) rather than a bare string; the connection loop
@@ -11,11 +32,15 @@
 //! `stage i: layers a..b … queued=…` line per stage (queue depth is the
 //! pipeline-bubble indicator).
 
+use crate::api::GenParams;
+
 /// A parsed client command.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Command {
-    /// GEN <max_new> <prompt...>
-    Gen { max_new: usize, prompt: String },
+    /// `GEN <max_new> <prompt…>` or `GEN key=value… <prompt…>`.
+    Gen { params: GenParams, prompt: String },
+    /// `CANCEL <id>` — retire a queued or mid-decode generation.
+    Cancel(u64),
     /// SET k_active <n> — fleet-wide live compression retune.
     SetKActive(usize),
     /// SET balance <policy> — swap the router's placement policy live.
@@ -61,6 +86,161 @@ impl std::fmt::Display for ProtoError {
 
 impl std::error::Error for ProtoError {}
 
+/// The recognized keyword-GEN keys (the prompt starts at the first
+/// token that is not one of these followed by `=`).
+pub const GEN_KEYS: &[&str] =
+    &["max_new", "temp", "top_p", "rep", "seed", "stop", "k", "stream"];
+
+fn bad_gen(expected: &'static str, got: &str) -> ProtoError {
+    ProtoError::BadArgs { verb: "GEN", expected, got: got.to_string() }
+}
+
+/// Apply one recognized `key=value` to the params; `Ok(false)` when the
+/// key is not recognized (i.e. the token belongs to the prompt).
+fn apply_gen_kv(params: &mut GenParams, key: &str, val: &str) -> Result<bool, ProtoError> {
+    if !GEN_KEYS.contains(&key) {
+        return Ok(false);
+    }
+    match key {
+        "max_new" => {
+            params.max_new =
+                val.parse().map_err(|_| bad_gen("max_new=<tokens>", val))?;
+        }
+        "temp" => {
+            params.temperature =
+                val.parse().map_err(|_| bad_gen("temp=<float>", val))?;
+        }
+        "top_p" => {
+            params.top_p = val.parse().map_err(|_| bad_gen("top_p=<float>", val))?;
+        }
+        "rep" => {
+            params.repetition_penalty =
+                val.parse().map_err(|_| bad_gen("rep=<float>", val))?;
+        }
+        "seed" => {
+            params.seed =
+                Some(val.parse().map_err(|_| bad_gen("seed=<u64>", val))?);
+        }
+        "stop" => {
+            params.stop =
+                Some(val.parse().map_err(|_| bad_gen("stop=<token id>", val))?);
+        }
+        "k" => {
+            params.k_active =
+                Some(val.parse().map_err(|_| bad_gen("k=<level>", val))?);
+        }
+        "stream" => {
+            params.stream = match val {
+                "1" | "true" => true,
+                "0" | "false" => false,
+                _ => return Err(bad_gen("stream=0|1", val)),
+            };
+        }
+        _ => unreachable!("key checked against GEN_KEYS"),
+    }
+    Ok(true)
+}
+
+/// Parse the argument tail of a `GEN` line (everything after the verb).
+fn parse_gen(rest: &str) -> Result<Command, ProtoError> {
+    let first = rest.split(' ').next().unwrap_or("");
+    // legacy spelling: a bare leading number is max_new
+    if let Ok(max_new) = first.parse::<usize>() {
+        let prompt = rest.split_once(' ').map(|(_, p)| p).unwrap_or("");
+        if prompt.is_empty() {
+            return Err(bad_gen("a non-empty prompt after <max_new_tokens>", rest));
+        }
+        return Ok(Command::Gen { params: GenParams::new(max_new), prompt: prompt.to_string() });
+    }
+    // keyword spelling: consume leading key=value tokens, the remainder
+    // (internal spacing preserved) is the prompt; a standalone `--`
+    // ends the parameters explicitly
+    let mut params = GenParams::default();
+    let mut any = false;
+    let mut cur = rest;
+    loop {
+        let (word, tail) = cur.split_once(' ').unwrap_or((cur, ""));
+        if word == "--" {
+            any = true;
+            cur = tail;
+            break;
+        }
+        let Some((key, val)) = word.split_once('=') else { break };
+        if !apply_gen_kv(&mut params, key, val)? {
+            break;
+        }
+        any = true;
+        cur = tail;
+    }
+    if !any {
+        return Err(bad_gen(
+            "'<max_new_tokens> <prompt>' or 'key=value… [--] <prompt>'",
+            rest,
+        ));
+    }
+    if cur.is_empty() {
+        return Err(bad_gen("a non-empty prompt after the parameters", rest));
+    }
+    Ok(Command::Gen { params, prompt: cur.to_string() })
+}
+
+/// Whether `word` would be consumed as a parameter (or `--` terminator)
+/// by the keyword-GEN parser — i.e. a prompt beginning with it needs an
+/// explicit `--` so the boundary stays unambiguous.
+fn consumed_as_param(word: &str) -> bool {
+    if word == "--" {
+        return true;
+    }
+    matches!(word.split_once('='), Some((key, _)) if GEN_KEYS.contains(&key))
+}
+
+/// Encode a `GEN` line for `(params, prompt)` — the inverse of
+/// [`parse_line`] (the reference client writes requests through this, and
+/// the round-trip is property-tested, including prompts whose first word
+/// looks like a parameter: those get an explicit `--` terminator).
+/// Default-valued fields are omitted; an all-default request still emits
+/// `max_new=` so the line stays unambiguous.
+pub fn encode_gen(params: &GenParams, prompt: &str) -> String {
+    let d = GenParams::default();
+    let mut out = String::from("GEN");
+    let mut push = |s: String| {
+        out.push(' ');
+        out.push_str(&s);
+    };
+    push(format!("max_new={}", params.max_new));
+    if params.temperature != d.temperature {
+        push(format!("temp={}", params.temperature));
+    }
+    if params.top_p != d.top_p {
+        push(format!("top_p={}", params.top_p));
+    }
+    if params.repetition_penalty != d.repetition_penalty {
+        push(format!("rep={}", params.repetition_penalty));
+    }
+    if let Some(s) = params.seed {
+        push(format!("seed={s}"));
+    }
+    if let Some(s) = params.stop {
+        push(format!("stop={s}"));
+    }
+    if let Some(k) = params.k_active {
+        push(format!("k={k}"));
+    }
+    if params.stream {
+        push("stream=1".to_string());
+    }
+    // a prompt whose first word would itself parse as a parameter needs
+    // the explicit terminator, otherwise encode∘parse would not be the
+    // identity on it
+    let first_word = prompt.split(' ').next().unwrap_or("");
+    if consumed_as_param(first_word) {
+        push("--".to_string());
+    }
+    out.push(' ');
+    out.push_str(prompt);
+    out
+}
+
 /// Parse one protocol line.
 pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
     let line = line.trim_end_matches(['\r', '\n']);
@@ -70,24 +250,14 @@ pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
     let rest = parts.next().unwrap_or("");
     match verb.as_str() {
         "" => Err(ProtoError::Empty),
-        "GEN" => {
-            let mut p = rest.splitn(2, ' ');
-            let max_new: usize = p.next().unwrap_or("").parse().map_err(|_| {
-                ProtoError::BadArgs {
-                    verb: "GEN",
-                    expected: "'<max_new_tokens> <prompt>'",
-                    got: rest.to_string(),
-                }
-            })?;
-            let prompt = p.next().unwrap_or("").to_string();
-            if prompt.is_empty() {
-                return Err(ProtoError::BadArgs {
-                    verb: "GEN",
-                    expected: "a non-empty prompt after <max_new_tokens>",
-                    got: rest.to_string(),
-                });
-            }
-            Ok(Command::Gen { max_new, prompt })
+        "GEN" => parse_gen(rest),
+        "CANCEL" => {
+            let id = rest.trim();
+            id.parse().map(Command::Cancel).map_err(|_| ProtoError::BadArgs {
+                verb: "CANCEL",
+                expected: "a request id",
+                got: id.to_string(),
+            })
         }
         "SET" => {
             let mut p = rest.split_whitespace();
@@ -119,11 +289,98 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parses_gen() {
+    fn parses_legacy_gen() {
         assert_eq!(
             parse_line("GEN 32 the passkey is\n").unwrap(),
-            Command::Gen { max_new: 32, prompt: "the passkey is".into() }
+            Command::Gen { params: GenParams::new(32), prompt: "the passkey is".into() }
         );
+    }
+
+    #[test]
+    fn parses_keyword_gen() {
+        let got = parse_line("GEN max_new=64 temp=0.8 top_p=0.9 k=8 stream=1 the prompt").unwrap();
+        let want = GenParams::new(64).temperature(0.8).top_p(0.9).k_active(8).stream(true);
+        assert_eq!(got, Command::Gen { params: want, prompt: "the prompt".into() });
+    }
+
+    #[test]
+    fn prompt_starts_at_first_unrecognized_token() {
+        // "x=3" is not a recognized key, so it belongs to the prompt
+        let got = parse_line("GEN max_new=8 x=3 equals what").unwrap();
+        assert_eq!(
+            got,
+            Command::Gen { params: GenParams::new(8), prompt: "x=3 equals what".into() }
+        );
+        // internal double spaces in the prompt survive
+        let got = parse_line("GEN max_new=8 two  spaces").unwrap();
+        assert_eq!(got, Command::Gen { params: GenParams::new(8), prompt: "two  spaces".into() });
+    }
+
+    #[test]
+    fn terminator_ends_the_parameters_explicitly() {
+        // after `--` everything is prompt, even recognized key=value
+        assert_eq!(
+            parse_line("GEN max_new=8 -- k=2 plus k=3 equals").unwrap(),
+            Command::Gen { params: GenParams::new(8), prompt: "k=2 plus k=3 equals".into() }
+        );
+        // `--` alone enters keyword mode with pure defaults
+        assert_eq!(
+            parse_line("GEN -- hello there").unwrap(),
+            Command::Gen { params: GenParams::default(), prompt: "hello there".into() }
+        );
+        // the encoder emits the terminator exactly when needed
+        let p = GenParams::new(8);
+        assert_eq!(encode_gen(&p, "k=2 plus k=3 equals "), "GEN max_new=8 -- k=2 plus k=3 equals ");
+        assert_eq!(encode_gen(&p, "-- leading dashes"), "GEN max_new=8 -- -- leading dashes");
+        assert_eq!(encode_gen(&p, "plain prompt"), "GEN max_new=8 plain prompt");
+        for prompt in ["k=2 plus k=3 equals ", "-- leading dashes", "temp=x is not a param"] {
+            assert_eq!(
+                parse_line(&encode_gen(&p, prompt)).unwrap(),
+                Command::Gen { params: p.clone(), prompt: prompt.into() },
+                "{prompt:?} must round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn recognized_key_with_bad_value_is_an_error() {
+        assert_eq!(parse_line("GEN max_new=lots hi").unwrap_err().code(), "bad-args");
+        assert_eq!(parse_line("GEN max_new=8 stream=maybe hi").unwrap_err().code(), "bad-args");
+    }
+
+    #[test]
+    fn gen_requires_count_or_keywords_and_a_prompt() {
+        assert!(parse_line("GEN").is_err());
+        assert!(parse_line("GEN just a prompt").is_err());
+        assert!(parse_line("GEN max_new=8").is_err());
+        assert!(parse_line("GEN 5 ").is_err());
+    }
+
+    #[test]
+    fn parses_cancel() {
+        assert_eq!(parse_line("CANCEL 17").unwrap(), Command::Cancel(17));
+        assert_eq!(parse_line("cancel 17\r\n").unwrap(), Command::Cancel(17));
+        assert_eq!(parse_line("CANCEL x").unwrap_err().code(), "bad-args");
+    }
+
+    #[test]
+    fn encode_gen_round_trips() {
+        let p = GenParams::new(48)
+            .temperature(0.75)
+            .top_p(0.92)
+            .repetition_penalty(1.1)
+            .seed(7)
+            .stop(5)
+            .k_active(16)
+            .stream(true);
+        let line = encode_gen(&p, "hello world");
+        assert_eq!(
+            parse_line(&line).unwrap(),
+            Command::Gen { params: p, prompt: "hello world".into() }
+        );
+        // defaults collapse to just max_new
+        let line = encode_gen(&GenParams::new(8), "hi");
+        assert_eq!(line, "GEN max_new=8 hi");
     }
 
     #[test]

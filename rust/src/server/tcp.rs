@@ -1,29 +1,120 @@
-//! TCP serving loop over the shard router.
+//! TCP serving loop over the shard router (protocol v2).
 //!
 //! [`crate::shard::Router`] owns `cfg.shards` engines, each on its own
 //! thread; connection threads translate protocol lines into router calls.
 //! `GEN` is *placed* on one shard by the configured balance policy, while
 //! `SET k_active` and `STATS` fan out to every shard (broadcast + gather)
-//! — one wire command retunes or inspects the whole fleet.  Generation is
-//! synchronous per connection (each shard still interleaves decode across
-//! its sequences — iteration-level batching happens inside the engine).
+//! — one wire command retunes or inspects the whole fleet.
+//!
+//! Each `GEN` is pumped by its own reply thread: the connection's reader
+//! loop keeps consuming lines while a generation runs, so `CANCEL <id>`
+//! works mid-stream on the same connection and — crucially — a client
+//! disconnect is *observed* (the reader hits EOF/error) instead of
+//! leaving the connection thread parked on a reply channel while the
+//! abandoned sequence decodes to completion.  On disconnect every
+//! in-flight generation of the connection is cancelled, freeing its
+//! decode slot within one iteration.  Streaming requests (`stream=1`)
+//! get `TOK <id> <text>` per token before the final `OK` line; replies
+//! are written line-atomically under a shared writer lock.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::api::{CancelToken, Event, GenHandle};
 use crate::config::ServeConfig;
-use crate::coordinator::request::Request;
+use crate::coordinator::request::{Request, Response};
 use crate::server::proto::{parse_line, Command};
 use crate::shard::balance::policy_from_name;
 use crate::shard::Router;
 
+/// In-flight generations of one connection: id → cancel token.  Entries
+/// are removed by the pump thread at terminal events; anything left when
+/// the reader loop exits belongs to an abandoned request and is
+/// cancelled.
+type Inflight = Arc<Mutex<HashMap<u64, CancelToken>>>;
+
+/// Render the final reply for one finished generation: the `OK` line
+/// (with the `clamped=<cap>` marker when the server clamped `max_new`)
+/// plus the STAT line.
+fn write_done(
+    writer: &Mutex<TcpStream>,
+    resp: &Response,
+    max_new_cap: usize,
+) -> std::io::Result<()> {
+    let mut w = writer.lock().unwrap();
+    if resp.stats.clamped_from.is_some() {
+        writeln!(w, "OK {} clamped={} {}", resp.id, max_new_cap, resp.text)?;
+    } else {
+        writeln!(w, "OK {} {}", resp.id, resp.text)?;
+    }
+    let mut stat = format!(
+        "STAT prefill_ms={:.2} decode_ms={:.2} tokens={} tps={:.1} mem_saving={:.1}%",
+        resp.stats.prefill_time.as_secs_f64() * 1e3,
+        resp.stats.decode_time.as_secs_f64() * 1e3,
+        resp.stats.decode_steps,
+        resp.stats.decode_tps(),
+        resp.stats.memory_saving() * 100.0
+    );
+    if let Some(requested) = resp.stats.clamped_from {
+        stat.push_str(&format!(" requested={requested}"));
+    }
+    if resp.stats.cancelled {
+        stat.push_str(" cancelled=1");
+    }
+    writeln!(w, "{stat}")
+}
+
+/// Pump one generation's events to the connection: `TOK` lines for
+/// streamed tokens, then the final `OK`/`ERR`.  Runs on its own thread so
+/// the reader loop stays responsive (CANCEL, disconnect detection).  A
+/// write failure means the client is gone — cancel the generation so it
+/// stops burning a decode slot.
+fn pump_generation(
+    handle: GenHandle,
+    writer: Arc<Mutex<TcpStream>>,
+    inflight: Inflight,
+    max_new_cap: usize,
+) {
+    let id = handle.id();
+    loop {
+        let ev = match handle.recv() {
+            Ok(ev) => ev,
+            Err(_) => {
+                let _ = writeln!(writer.lock().unwrap(), "ERR unavailable shard gone");
+                break;
+            }
+        };
+        let write_res = match &ev {
+            Event::Token { id, text, .. } => {
+                writeln!(writer.lock().unwrap(), "TOK {id} {text}")
+            }
+            Event::Done(resp) => write_done(&writer, resp, max_new_cap),
+            Event::Error { message, .. } => {
+                writeln!(writer.lock().unwrap(), "ERR generation {message}")
+            }
+        };
+        let terminal = !matches!(ev, Event::Token { .. });
+        if write_res.is_err() {
+            // broken pipe: nobody is reading — stop the sequence
+            handle.cancel();
+            break;
+        }
+        if terminal {
+            break;
+        }
+    }
+    inflight.lock().unwrap().remove(&id);
+}
+
 fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
+    let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
@@ -33,65 +124,75 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
         match parse_line(&line) {
             Ok(Command::Quit) => break,
             Ok(Command::Ping) => {
-                let _ = writeln!(writer, "PONG");
+                let _ = writeln!(writer.lock().unwrap(), "PONG");
             }
             Ok(Command::Stats) => {
-                let _ = write!(writer, "{}", router.stats());
-                let _ = writeln!(writer, ".");
+                let s = router.stats();
+                let mut w = writer.lock().unwrap();
+                let _ = write!(w, "{s}");
+                let _ = writeln!(w, ".");
             }
-            Ok(Command::SetKActive(k)) => match router.set_k_active(k) {
-                Ok(_) => {
-                    let _ = writeln!(writer, "OK");
-                }
-                Err(e) => {
-                    let _ = writeln!(writer, "ERR unavailable {e}");
-                }
-            },
+            Ok(Command::SetKActive(k)) => {
+                let reply = match router.set_k_active(k) {
+                    Ok(_) => "OK".to_string(),
+                    Err(e) => format!("ERR unavailable {e}"),
+                };
+                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+            }
             Ok(Command::SetBalance(name)) => match policy_from_name(&name) {
                 Ok(policy) => {
                     router.set_policy(policy);
-                    let _ = writeln!(writer, "OK");
+                    let _ = writeln!(writer.lock().unwrap(), "OK");
                 }
                 Err(e) => {
-                    let _ = writeln!(writer, "ERR bad-args {e}");
+                    let _ = writeln!(writer.lock().unwrap(), "ERR bad-args {e}");
                 }
             },
-            Ok(Command::Gen { max_new, prompt }) => {
-                let req = Request::from_text(0, &prompt, max_new.min(max_new_cap));
-                let reply = match router.submit(req) {
-                    Ok(rx) => rx.recv(),
+            Ok(Command::Gen { params, prompt }) => {
+                let req = Request::with_params(0, &prompt, params);
+                match router.submit(req) {
+                    Ok(handle) => {
+                        inflight.lock().unwrap().insert(handle.id(), handle.cancel_token());
+                        let writer = writer.clone();
+                        let inflight = inflight.clone();
+                        std::thread::spawn(move || {
+                            pump_generation(handle, writer, inflight, max_new_cap)
+                        });
+                    }
                     Err(e) => {
-                        let _ = writeln!(writer, "ERR unavailable {e}");
-                        continue;
-                    }
-                };
-                match reply {
-                    Ok(Ok(resp)) => {
-                        let _ = writeln!(writer, "OK {} {}", resp.id, resp.text);
-                        let _ = writeln!(
-                            writer,
-                            "STAT prefill_ms={:.2} decode_ms={:.2} tokens={} tps={:.1} mem_saving={:.1}%",
-                            resp.stats.prefill_time.as_secs_f64() * 1e3,
-                            resp.stats.decode_time.as_secs_f64() * 1e3,
-                            resp.stats.decode_steps,
-                            resp.stats.decode_tps(),
-                            resp.stats.memory_saving() * 100.0
-                        );
-                    }
-                    Ok(Err(e)) => {
-                        let _ = writeln!(writer, "ERR generation {e}");
-                    }
-                    Err(_) => {
-                        let _ = writeln!(writer, "ERR unavailable shard gone");
-                        break;
+                        let _ = writeln!(writer.lock().unwrap(), "ERR unavailable {e}");
                     }
                 }
+            }
+            Ok(Command::Cancel(id)) => {
+                // a generation of this connection cancels directly via
+                // its token; other ids go through the router broadcast
+                // (unknown ids no-op on every shard)
+                let local = inflight.lock().unwrap().get(&id).cloned();
+                let ok = match local {
+                    Some(tok) => {
+                        tok.cancel();
+                        Ok(())
+                    }
+                    None => router.cancel(id),
+                };
+                let reply = match ok {
+                    Ok(()) => "OK".to_string(),
+                    Err(e) => format!("ERR unavailable {e}"),
+                };
+                let _ = writeln!(writer.lock().unwrap(), "{reply}");
             }
             Err(e) => {
                 // structured reply; the connection stays open
-                let _ = writeln!(writer, "ERR {} {e}", e.code());
+                let _ = writeln!(writer.lock().unwrap(), "ERR {} {e}", e.code());
             }
         }
+    }
+    // reader gone (QUIT, EOF or socket error): whatever is still
+    // in-flight belongs to a client that will never read the reply —
+    // cancel it so abandoned requests stop burning decode slots
+    for tok in inflight.lock().unwrap().values() {
+        tok.cancel();
     }
     log::info!("connection {peer} closed");
 }
@@ -108,7 +209,7 @@ pub fn serve_with_ready(
     cfg: ServeConfig,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
-    let max_new_cap = cfg.max_new_tokens.max(1) * 8;
+    let max_new_cap = cfg.max_new_hard_cap();
     let router = Arc::new(Router::launch(artifacts_dir, cfg.clone())?);
 
     let listener = TcpListener::bind(&cfg.bind)?;

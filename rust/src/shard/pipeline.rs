@@ -41,6 +41,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::api::Event;
 use crate::config::ServeConfig;
 use crate::coordinator::engine::{sample, x5wan_seed, DECODE_SLOTS_PER_WORKER};
 use crate::coordinator::metrics::Metrics;
@@ -87,7 +88,11 @@ pub enum StageCmd {
     /// `h` (one hidden row per sequence).  The last stage answers the
     /// coordinator with one logits row per sequence.
     Forward { seqs: Vec<u64>, tokens: Vec<u32>, h: Vec<Vec<f32>> },
-    /// Drop the stage caches of finished sequences.
+    /// Drop the stage caches of retired sequences — both naturally
+    /// finished ones and cancellations (`CANCEL <id>` / client
+    /// disconnect): the group coordinator marks a cancelled sequence
+    /// finished at its next iteration and this hop reclaims its KV on
+    /// every stage.
     Retire { seqs: Vec<u64> },
     /// Record the compression level for newly admitted sequences; ack the
     /// applied (d_head-clamped) value.
@@ -161,6 +166,16 @@ impl StageHandle {
         self.status.queued.fetch_add(1, Ordering::Relaxed);
         self.tx.send(cmd).map_err(|_| anyhow::anyhow!("pipeline stage is gone"))
     }
+}
+
+/// Compression level a request is admitted at on the native path: its
+/// own `k_active` override, d_head-clamped exactly like the fleet
+/// retune clamps, else the group's current level.  The ONE spelling of
+/// the rule — `Group::request_k` (admission + live accounting) and the
+/// admission projection closure both call it, so the projected bytes
+/// can never drift from the admitted level.
+fn request_k_for(req: &Request, d_head: usize, k_now: usize) -> usize {
+    req.params.k_active.map(|k| k.clamp(1, d_head)).unwrap_or(k_now)
 }
 
 fn policy_kind(cfg: &ServeConfig, k_active: usize) -> PolicyKind {
@@ -329,7 +344,10 @@ struct Group {
     scheduler: Scheduler,
     metrics: Arc<Metrics>,
     active: Vec<GroupSeq>,
-    waiters: HashMap<u64, mpsc::Sender<anyhow::Result<Response>>>,
+    /// Per-request event channels: token stream (when `params.stream`)
+    /// plus the terminal `Done`/`Error` — the group-side mirror of the
+    /// engine's sink map.
+    sinks: HashMap<u64, mpsc::Sender<Event>>,
     /// Compression level for newly admitted sequences.
     k_now: usize,
     next_id: u64,
@@ -385,16 +403,23 @@ impl Group {
         }
     }
 
+    /// Compression level a request will be admitted at (see
+    /// [`request_k_for`]).
+    fn request_k(&self, r: &Request) -> usize {
+        request_k_for(r, self.model.cfg.d_head, self.k_now)
+    }
+
     /// Projected KV load given already-computed `live` bytes (callers
-    /// hold one `live_bytes()` walk per publish/stats render).
+    /// hold one `live_bytes()` walk per publish/stats render).  Each
+    /// queued request projects at its *own* compression level.
     fn projected_load_bytes(&self, live: usize) -> usize {
-        let (sparse_b, dense_b) = self.token_byte_rates(self.k_now);
         let buf = self.projection_buffer();
         let queued: usize = self
             .scheduler
             .queued()
             .map(|r| {
-                Scheduler::projected_bytes(r.prompt.len(), r.max_new_tokens, sparse_b, dense_b, buf)
+                let (sparse_b, dense_b) = self.token_byte_rates(self.request_k(r));
+                Scheduler::projected_bytes(r.prompt.len(), r.params.max_new, sparse_b, dense_b, buf)
             })
             .sum();
         live + queued
@@ -438,12 +463,41 @@ impl Group {
     /// Admit every currently-admissible request: push its prompt through
     /// the stage chain, sample the first token from the returned logits.
     fn admit(&mut self) -> anyhow::Result<()> {
+        // cancelled-while-queued requests: purge and answer immediately
+        for p in self.scheduler.take_cancelled() {
+            let stats = RequestStats {
+                queue_time: p.enqueued.elapsed(),
+                cancelled: true,
+                clamped_from: p.req.clamped_from,
+                ..Default::default()
+            };
+            self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(tx) = self.sinks.remove(&p.req.id) {
+                let _ = tx.send(Event::Done(Response {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    text: String::new(),
+                    stats,
+                }));
+            }
+        }
         loop {
             let live = self.live_bytes();
-            let (sparse_b, dense_b) = self.token_byte_rates(self.k_now);
             let buf = self.projection_buffer();
+            // projection locals (the closure must not re-borrow self
+            // while admit_next holds the scheduler mutably); each
+            // request projects at its own (d_head-clamped) k
+            let (nl, nkv, dh) = {
+                let mc = &self.model.cfg;
+                (mc.n_layers, mc.n_kv_heads, mc.d_head)
+            };
+            let mode = self.cfg.mode;
+            let k_now = self.k_now;
             let proj = |req: &Request| {
-                Scheduler::projected_bytes(req.prompt.len(), req.max_new_tokens, sparse_b, dense_b, buf)
+                let k = request_k_for(req, dh, k_now);
+                let (sparse_b, dense_b) =
+                    crate::sparse::memory::token_byte_rates(nl, nkv, dh, mode, k);
+                Scheduler::projected_bytes(req.prompt.len(), req.params.max_new, sparse_b, dense_b, buf)
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
                 break;
@@ -451,10 +505,11 @@ impl Group {
             let queue_time = pending.enqueued.elapsed();
             let req = pending.req;
             let rid = req.id;
+            let k_seq = self.request_k(&req);
             let t0 = Instant::now();
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
             let h = self.model.embed_prompt(tokens);
-            self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: self.k_now })?;
+            self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: k_seq })?;
             let logits = loop {
                 match self.ev_rx.recv() {
                     Ok(GroupEvent::Prefilled { seq, logits }) if seq == rid => break logits,
@@ -465,17 +520,29 @@ impl Group {
                     Err(_) => anyhow::bail!("pipeline group {}: stage chain died", self.id),
                 }
             };
-            let mut stats = RequestStats { queue_time, ..Default::default() };
+            let mut stats =
+                RequestStats { queue_time, clamped_from: req.clamped_from, ..Default::default() };
             stats.prefill_time = t0.elapsed();
             self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
             self.metrics.prefill_tokens.fetch_add(tokens.len() as u64, Ordering::Relaxed);
-            let next_token = sample(&logits, req.temperature, &mut Pcg64::new(rid));
+            let next_token =
+                sample(&logits, &req.params, &[], &mut Pcg64::new(req.seed_base()));
+            if req.params.stream {
+                if let Some(tx) = self.sinks.get(&rid) {
+                    let _ = tx.send(Event::Token {
+                        id: rid,
+                        index: 0,
+                        token: next_token,
+                        text: decode_tokens(&[next_token]),
+                    });
+                }
+            }
             self.active.push(GroupSeq {
-                rng: Pcg64::new(rid ^ x5wan_seed()),
+                rng: Pcg64::new(req.seed_base() ^ x5wan_seed()),
                 produced: vec![next_token],
                 next_token,
                 stats,
-                k_active: self.k_now,
+                k_active: k_seq,
                 prompt_len: tokens.len(),
                 finished: false,
                 req,
@@ -487,12 +554,18 @@ impl Group {
     /// One decode iteration: forward the whole ready set down the chain,
     /// sample from the last stage's logits, retire finished sequences.
     fn decode_iteration(&mut self) -> anyhow::Result<()> {
-        // mark sequences that already hit their budget / stop token
+        // mark sequences that already hit their budget / stop token /
+        // cancel flag — a flipped token retires the sequence this
+        // iteration (the stage caches drop via the Retire hop below)
+        // without touching its co-batched neighbours
         for seq in &mut self.active {
-            if seq.produced.len() >= seq.req.max_new_tokens {
+            if seq.req.cancel.is_cancelled() {
                 seq.finished = true;
             }
-            if let Some(stop) = seq.req.stop_token {
+            if seq.produced.len() >= seq.req.params.max_new {
+                seq.finished = true;
+            }
+            if let Some(stop) = seq.req.params.stop {
                 if seq.next_token == stop {
                     seq.finished = true;
                 }
@@ -524,9 +597,19 @@ impl Group {
             let step_time = t0.elapsed();
             for (&i, l) in ready.iter().zip(&logits) {
                 let seq = &mut self.active[i];
-                let next = sample(l, seq.req.temperature, &mut seq.rng);
+                let next = sample(l, &seq.req.params, &seq.produced, &mut seq.rng);
                 seq.next_token = next;
                 seq.produced.push(next);
+                if seq.req.params.stream {
+                    if let Some(tx) = self.sinks.get(&seq.req.id) {
+                        let _ = tx.send(Event::Token {
+                            id: seq.req.id,
+                            index: seq.produced.len() - 1,
+                            token: next,
+                            text: decode_tokens(&[next]),
+                        });
+                    }
+                }
                 seq.stats.decode_steps += 1;
                 seq.stats.decode_time += step_time;
                 self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
@@ -549,14 +632,16 @@ impl Group {
                 if seq.finished {
                     done_ids.push(seq.req.id);
                     self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    let mut stats = seq.stats;
+                    stats.cancelled = seq.req.cancel.is_cancelled();
                     let resp = Response {
                         id: seq.req.id,
                         text: decode_tokens(&seq.produced),
                         tokens: seq.produced,
-                        stats: seq.stats,
+                        stats,
                     };
-                    if let Some(tx) = self.waiters.remove(&resp.id) {
-                        let _ = tx.send(Ok(resp));
+                    if let Some(tx) = self.sinks.remove(&resp.id) {
+                        let _ = tx.send(Event::Done(resp));
                     }
                 } else {
                     keep.push(seq);
@@ -642,10 +727,20 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
                         req.id = g.next_id;
                     }
                     g.next_id = g.next_id.max(req.id) + 1;
+                    // same hard cap the engine shards enforce, equally
+                    // surfaced (never silent)
+                    req.clamp_max_new(g.cfg.max_new_hard_cap());
                     g.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
-                    g.waiters.insert(req.id, reply);
+                    g.sinks.insert(req.id, reply);
                     g.scheduler.enqueue(req);
                     g.publish(status);
+                }
+                ShardCmd::Cancel { id } => {
+                    if let Some(seq) = g.active.iter().find(|s| s.req.id == id) {
+                        seq.req.cancel.cancel();
+                    } else {
+                        g.scheduler.cancel(id);
+                    }
                 }
                 ShardCmd::SetK { k, ack } => {
                     let applied = g.set_k_active(k);
@@ -662,11 +757,11 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
         if let Err(e) = step {
             log::error!("pipeline group {}: {e:#}", g.id);
             // the stage chain is unrecoverable: fail every waiter and stop
-            for (rid, tx) in g.waiters.drain() {
-                let _ = tx.send(Err(anyhow::anyhow!(
-                    "request {rid} lost: pipeline group {} failed: {e:#}",
-                    g.id
-                )));
+            for (rid, tx) in g.sinks.drain() {
+                let _ = tx.send(Event::Error {
+                    id: rid,
+                    message: format!("request lost: pipeline group {} failed: {e:#}", g.id),
+                });
             }
             return g.shutdown();
         }
@@ -733,7 +828,7 @@ pub fn launch_group(
         scheduler,
         metrics: metrics.clone(),
         active: Vec::new(),
-        waiters: HashMap::new(),
+        sinks: HashMap::new(),
         k_now,
         next_id: 1,
     };

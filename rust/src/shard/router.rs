@@ -12,9 +12,10 @@ use std::sync::{mpsc, Mutex};
 
 use anyhow::Context;
 
+use crate::api::GenHandle;
 use crate::config::ServeConfig;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::Request;
 use crate::shard::admin;
 use crate::shard::balance::{policy_from_name, BalancePolicy};
 use crate::shard::shard::{ShardCmd, ShardHandle};
@@ -149,20 +150,35 @@ impl Router {
         pick.min(self.shards.len() - 1)
     }
 
-    /// Place and submit one request; the returned receiver yields the
-    /// response when the sequence completes on its shard.
-    pub fn submit(&self, mut req: Request) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
+    /// Place and submit one request; the returned [`GenHandle`] carries
+    /// the event channel (per-token events for streaming requests, then
+    /// the terminal `Done`/`Error`) and the cancellation token.
+    pub fn submit(&self, mut req: Request) -> anyhow::Result<GenHandle> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
+        let id = req.id;
+        let cancel = req.cancel.clone();
         let idx = self.place();
-        let (tx, rx) = mpsc::channel();
+        let (tx, handle) = GenHandle::channel(id, cancel);
         let shard = &self.shards[idx];
         // optimistic bump so back-to-back placements see this request
         // before the shard thread next publishes authoritative counts
         shard.status.queued.fetch_add(1, Ordering::Relaxed);
         shard.send(ShardCmd::Gen { req, reply: tx })?;
-        Ok(rx)
+        Ok(handle)
+    }
+
+    /// Cancel a request by id, fleet-wide: the router does not track
+    /// placement, so the hop is broadcast — unknown ids no-op on every
+    /// shard that doesn't own the sequence.  (Callers holding the
+    /// request's [`GenHandle`] can cancel without the round trip; this
+    /// path serves the wire `CANCEL <id>` and cross-connection cancels.)
+    pub fn cancel(&self, id: u64) -> anyhow::Result<()> {
+        for s in &self.shards {
+            s.send(ShardCmd::Cancel { id })?;
+        }
+        Ok(())
     }
 
     /// Fleet-wide live compression retune: broadcast `SET k_active` to

@@ -7,22 +7,32 @@
 //! subsystem replaces, and additionally publishes a lock-free
 //! [`ShardStatus`] after every iteration so the router can place requests
 //! without a round trip into the shard.
+//!
+//! Since api v2 the `Gen` reply channel carries [`crate::api::Event`]s
+//! (token stream + terminal `Done`/`Error`) and the engine owns the
+//! id→sink map, so the shard loop no longer tracks waiters; `Cancel`
+//! is the by-id hop of the cancellation path (the router broadcasts it,
+//! each engine flips the matching request's token).
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::api::Event;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::Request;
 use crate::shard::ShardSnapshot;
 
 /// Commands a shard thread accepts.
 pub enum ShardCmd {
-    /// Place one generation; the response is sent on `reply` when the
-    /// sequence completes.
-    Gen { req: Request, reply: mpsc::Sender<anyhow::Result<Response>> },
+    /// Place one generation; `reply` receives its [`Event`] stream —
+    /// per-token events when the request streams, then one terminal
+    /// `Done` (or `Error`).
+    Gen { req: Request, reply: mpsc::Sender<Event> },
+    /// Cancel a request by id (queued or decoding); unknown ids no-op,
+    /// so the router can broadcast without tracking placement.
+    Cancel { id: u64 },
     /// Retune compression; the applied (bucket-snapped) `k` is acked.
     SetK { k: usize, ack: mpsc::Sender<usize> },
     /// Render this shard's stats block.
@@ -168,7 +178,6 @@ fn shard_loop(
     rx: mpsc::Receiver<ShardCmd>,
     status: &ShardStatus,
 ) {
-    let mut waiters: HashMap<u64, mpsc::Sender<anyhow::Result<Response>>> = HashMap::new();
     loop {
         // drain commands (non-blocking when busy, blocking when idle)
         loop {
@@ -187,9 +196,14 @@ fn shard_loop(
             };
             match cmd {
                 ShardCmd::Gen { req, reply } => {
-                    let rid = engine.submit(req);
-                    waiters.insert(rid, reply);
+                    // the engine owns the id→sink map and answers the
+                    // channel itself (tokens, Done, Error) — no waiter
+                    // bookkeeping on the shard thread
+                    engine.submit_with_sink(req, reply);
                     status.publish(&engine);
+                }
+                ShardCmd::Cancel { id: rid } => {
+                    engine.cancel(rid);
                 }
                 ShardCmd::SetK { k, ack } => {
                     engine.set_k_active(k);
@@ -206,20 +220,11 @@ fn shard_loop(
         if let Err(e) = engine.step() {
             log::error!("shard {id}: engine step failed: {e:#}");
         }
-        while let Some(resp) = engine.pop_finished() {
-            if let Some(tx) = waiters.remove(&resp.id) {
-                let _ = tx.send(Ok(resp));
-            }
-        }
-        // admission-rejected requests never produce a Response — answer
-        // their waiters with an error instead of leaving them blocked
-        while let Some(rid) = engine.pop_rejected() {
-            if let Some(tx) = waiters.remove(&rid) {
-                let _ = tx.send(Err(anyhow::anyhow!(
-                    "request {rid} rejected at admission on shard {id}"
-                )));
-            }
-        }
+        // sink-attached requests were answered inside the engine; these
+        // drains only catch sink-less submissions (none on this path,
+        // kept so nothing can accumulate unbounded)
+        while engine.pop_finished().is_some() {}
+        while engine.pop_rejected().is_some() {}
         status.publish(&engine);
     }
 }

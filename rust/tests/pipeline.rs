@@ -1,11 +1,20 @@
-//! Pipeline layer-sharding, end to end on a synthetic model (no
+//! Pipeline layer-sharding + api v2, end to end on a synthetic model (no
 //! artifacts): an S-stage pipeline group must decode **bit-identically**
 //! to a single-shard run on the same seed, the `--shards 4 --pipeline 2`
 //! topology (2 groups x 2 stages) must match too, and a live fleet-wide
 //! `SET k_active` must reach every stage of every group.
+//!
+//! The api-v2 acceptance coverage also lives here (it needs no
+//! artifacts): a request with a per-request `k_active` override decodes
+//! bit-identically to the same request under a fleet-wide retune, two
+//! concurrent requests with different k on one shard each match their
+//! solo references, top-p / repetition-penalty streams are identical
+//! across worker counts, and `cancel()` retires a mid-decode sequence
+//! within an iteration without disturbing co-batched sequences.
 
 use std::sync::Arc;
 
+use swan::api::{Event, GenParams};
 use swan::config::{ModelConfig, ServeConfig};
 use swan::coordinator::engine::sample;
 use swan::coordinator::Request;
@@ -13,7 +22,6 @@ use swan::kvcache::PolicyKind;
 use swan::model::transformer::{SequenceState, SwanModel};
 use swan::shard::pipeline::launch_group;
 use swan::shard::{Router, RoundRobin};
-use swan::sparse::StorageMode;
 use swan::util::Pcg64;
 
 /// Mirror of the engine's per-sequence decode RNG seed
@@ -43,10 +51,15 @@ fn serve_cfg() -> ServeConfig {
     ServeConfig {
         k_active: 4,
         buffer: 3,
-        mode: StorageMode::F16,
+        mode: swan::sparse::StorageMode::F16,
         max_batch: 8,
         ..Default::default()
     }
+}
+
+fn one_group_router(cfg: &ServeConfig) -> Router {
+    let handle = launch_group(0, test_model(), cfg).unwrap();
+    Router::from_handles(vec![handle], Box::new(RoundRobin::default()))
 }
 
 /// The request mix: mostly greedy, one temperature-sampled stream (which
@@ -55,18 +68,24 @@ fn requests() -> Vec<Request> {
     let mut reqs: Vec<Request> = (0..5)
         .map(|i| Request::from_text(i + 1, &format!("the sparse vector {i} maps the "), 10))
         .collect();
-    reqs.push(Request {
-        temperature: 0.8,
-        ..Request::from_text(6, "the hot cache winnows ", 10)
-    });
+    reqs.push(Request::with_params(
+        6,
+        "the hot cache winnows ",
+        GenParams::new(10).temperature(0.8),
+    ));
     reqs
 }
 
 /// Serve `reqs` through `n_groups` pipeline groups of `stages` stages
 /// each behind a round-robin router; returns token streams by request id.
-fn run_fleet(stages: usize, n_groups: usize, reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+fn run_fleet_with(
+    stages: usize,
+    n_groups: usize,
+    decode_workers: usize,
+    reqs: &[Request],
+) -> Vec<(u64, Vec<u32>)> {
     let model = test_model();
-    let cfg = ServeConfig { pipeline: stages, ..serve_cfg() };
+    let cfg = ServeConfig { pipeline: stages, decode_workers, ..serve_cfg() };
     let handles: Vec<_> = (0..n_groups)
         .map(|id| launch_group(id, model.clone(), &cfg).unwrap())
         .collect();
@@ -77,8 +96,8 @@ fn run_fleet(stages: usize, n_groups: usize, reqs: &[Request]) -> Vec<(u64, Vec<
         .collect();
     let mut out: Vec<(u64, Vec<u32>)> = pending
         .into_iter()
-        .map(|(id, rx)| {
-            let resp = rx.recv().expect("group alive").expect("generation ok");
+        .map(|(id, handle)| {
+            let resp = handle.wait().expect("generation ok");
             assert_eq!(resp.id, id);
             (id, resp.tokens)
         })
@@ -87,28 +106,36 @@ fn run_fleet(stages: usize, n_groups: usize, reqs: &[Request]) -> Vec<(u64, Vec<
     out
 }
 
+fn run_fleet(stages: usize, n_groups: usize, reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+    run_fleet_with(stages, n_groups, 0, reqs)
+}
+
 /// The single-shard reference, computed directly on the native model with
 /// the engine's sampling/seeding contract — what `--shards 1` produces.
+/// Each request runs at its *own* compression level (`params.k_active`
+/// d_head-clamped, exactly as the group coordinator admits it).
 fn single_shard_reference(reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
     let model = test_model();
     let cfg = serve_cfg();
-    let kind = PolicyKind::Swan {
-        k_active: cfg.k_active,
-        buffer: cfg.buffer,
-        mode: cfg.mode,
-    };
     reqs.iter()
         .map(|req| {
+            let k = req
+                .params
+                .k_active
+                .map(|k| k.clamp(1, model.cfg.d_head))
+                .unwrap_or(cfg.k_active);
+            let kind = PolicyKind::Swan { k_active: k, buffer: cfg.buffer, mode: cfg.mode };
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
             let pf = model.prefill(tokens);
             let mut st = SequenceState::new(&model, kind);
             st.load_prefill(&pf);
-            let mut tok = sample(&pf.logits, req.temperature, &mut Pcg64::new(req.id));
-            let mut rng = Pcg64::new(req.id ^ SWAN_SEED);
+            let base = req.params.seed.unwrap_or(req.id);
+            let mut tok = sample(&pf.logits, &req.params, &[], &mut Pcg64::new(base));
+            let mut rng = Pcg64::new(base ^ SWAN_SEED);
             let mut produced = vec![tok];
-            while produced.len() < req.max_new_tokens {
+            while produced.len() < req.params.max_new {
                 let logits = model.decode_step(&mut st, tok);
-                tok = sample(&logits, req.temperature, &mut rng);
+                tok = sample(&logits, &req.params, &produced, &mut rng);
                 produced.push(tok);
             }
             (req.id, produced)
@@ -179,8 +206,8 @@ fn fleet_stats_show_per_stage_depth_and_retuned_k() {
     assert_eq!(stats.matches("stage 1: layers 2..4 k_active=6 queued=").count(), 2, "{stats}");
 
     // the fleet still serves after the retune
-    let rx = router.submit(Request::from_text(9, "retuned ", 4)).unwrap();
-    let resp = rx.recv().unwrap().unwrap();
+    let handle = router.submit(Request::from_text(9, "retuned ", 4)).unwrap();
+    let resp = handle.wait().unwrap();
     assert_eq!(resp.tokens.len(), 4);
 }
 
@@ -192,4 +219,205 @@ fn uneven_stage_split_is_still_bit_identical() {
     let want = single_shard_reference(&reqs);
     let got = run_fleet(3, 1, &reqs);
     assert_eq!(got, want);
+}
+
+// ----------------------------------------------------------------------
+// api v2: per-request compression, cancellation, streaming, samplers
+// ----------------------------------------------------------------------
+
+/// Acceptance: a request with `k=<n>` decodes bit-identically to the
+/// same seed/prompt under a fleet-wide `SET k_active <n>`.
+#[test]
+fn per_request_k_override_matches_fleet_retune() {
+    for k in [2usize, 6] {
+        let cfg = ServeConfig { pipeline: 2, ..serve_cfg() };
+        // fleet-wide retune, then a plain request
+        let fleet_router = one_group_router(&cfg);
+        fleet_router.set_k_active(k).unwrap();
+        let fleet = fleet_router
+            .submit(Request::from_text(3, "override parity ", 10))
+            .unwrap()
+            .wait()
+            .unwrap();
+        // fresh fleet left at the default level; the request carries k=
+        let over_router = one_group_router(&cfg);
+        let over = over_router
+            .submit(Request::with_params(3, "override parity ", GenParams::new(10).k_active(k)))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(over.tokens, fleet.tokens, "k={k} override diverged from fleet retune");
+    }
+}
+
+/// Acceptance: two concurrent requests with different k on ONE shard
+/// co-batch and each still matches its single-request reference.
+#[test]
+fn mixed_k_requests_on_one_shard_match_their_solo_references() {
+    let cfg = ServeConfig { pipeline: 2, ..serve_cfg() };
+    let reqs = vec![
+        Request::with_params(1, "mixed low ", GenParams::new(10).k_active(2)),
+        Request::with_params(2, "mixed high ", GenParams::new(10).k_active(6)),
+    ];
+    // solo runs: one request per fresh fleet
+    let mut want = Vec::new();
+    for r in &reqs {
+        let router = one_group_router(&cfg);
+        let resp = router.submit(r.clone()).unwrap().wait().unwrap();
+        want.push((resp.id, resp.tokens));
+    }
+    // both concurrently on ONE group
+    let router = one_group_router(&cfg);
+    let handles: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    let mut got: Vec<(u64, Vec<u32>)> = handles
+        .into_iter()
+        .map(|h| {
+            let r = h.wait().unwrap();
+            (r.id, r.tokens)
+        })
+        .collect();
+    got.sort_by_key(|(id, _)| *id);
+    assert_eq!(got, want, "co-batched mixed-k runs diverged from solo runs");
+    // and the direct native reference agrees per-request
+    assert_eq!(got, single_shard_reference(&reqs));
+}
+
+/// Acceptance: `cancel()` retires a mid-decode sequence within an
+/// iteration; the co-batched sequence decodes exactly as if alone.
+#[test]
+fn cancel_retires_mid_decode_without_disturbing_batchmates() {
+    // a huge max_new default keeps A's budget unreachable, so the test
+    // can never lose the race between its cancel and A's natural finish
+    let cfg = ServeConfig { pipeline: 2, max_new_tokens: 100_000, ..serve_cfg() };
+    let router = one_group_router(&cfg);
+    // A: effectively unbounded + streaming, so the test observes
+    // progress before cancelling (if cancellation ever breaks, this
+    // fails on the token-count assert rather than flaking)
+    let a = router
+        .submit(Request::with_params(1, "the long one ", GenParams::new(100_000).stream(true)))
+        .unwrap();
+    let b = router.submit(Request::from_text(2, "the bystander ", 12)).unwrap();
+    let mut seen = 0;
+    while seen < 2 {
+        match a.recv().unwrap() {
+            Event::Token { .. } => seen += 1,
+            Event::Done(_) => panic!("A finished before it could be cancelled"),
+            Event::Error { message, .. } => panic!("{message}"),
+        }
+    }
+    a.cancel();
+    let a_resp = a.wait().unwrap();
+    assert!(a_resp.stats.cancelled, "cancel flag must be surfaced in stats");
+    assert!(a_resp.tokens.len() >= 2, "partial output is preserved");
+    assert!(a_resp.tokens.len() < 100_000, "cancel must beat the budget");
+    // the bystander is bit-identical to decoding alone
+    let b_resp = b.wait().unwrap();
+    assert!(!b_resp.stats.cancelled);
+    let want = single_shard_reference(&[Request::from_text(2, "the bystander ", 12)]);
+    assert_eq!(vec![(b_resp.id, b_resp.tokens)], want, "co-batched sequence was disturbed");
+}
+
+/// A cancel that lands while the request is still queued answers the
+/// waiter immediately with an empty cancelled response (and the id-hop
+/// through `Router::cancel` / `ShardCmd::Cancel` finds the queue).
+#[test]
+fn queued_cancel_answers_with_empty_cancelled_response() {
+    // A's budget is unreachable (see the mid-decode cancel test), so B
+    // provably stays queued until its cancel is processed
+    let cfg =
+        ServeConfig { pipeline: 1, max_batch: 1, max_new_tokens: 100_000, ..serve_cfg() };
+    let router = one_group_router(&cfg);
+    let a = router
+        .submit(Request::with_params(1, "hold the slot ", GenParams::new(100_000).stream(true)))
+        .unwrap();
+    // A holds the only batch slot once its first token streams back
+    loop {
+        match a.recv().unwrap() {
+            Event::Token { .. } => break,
+            Event::Done(_) => panic!("A finished prematurely"),
+            Event::Error { message, .. } => panic!("{message}"),
+        }
+    }
+    let b = router.submit(Request::from_text(2, "stuck in queue ", 8)).unwrap();
+    router.cancel(2).unwrap();
+    let b_resp = b.wait().unwrap();
+    assert!(b_resp.stats.cancelled);
+    assert!(b_resp.tokens.is_empty(), "queued cancel produces no tokens");
+    a.cancel();
+    assert!(a.wait().unwrap().stats.cancelled);
+}
+
+/// Top-p and repetition-penalty run inside the parallel execute phase;
+/// their streams must be bit-identical for any stage worker count (and
+/// equal to the direct native reference).
+#[test]
+fn topp_and_rep_penalty_streams_match_across_worker_counts() {
+    let reqs: Vec<Request> = (0..4u64)
+        .map(|i| {
+            Request::with_params(
+                i + 1,
+                &format!("sampled stream {i} "),
+                GenParams::new(12)
+                    .temperature(0.9)
+                    .top_p(0.8)
+                    .repetition_penalty(1.2)
+                    .seed(100 + i),
+            )
+        })
+        .collect();
+    let want = single_shard_reference(&reqs);
+    for workers in [0usize, 3] {
+        for stages in [1usize, 2] {
+            let got = run_fleet_with(stages, 1, workers, &reqs);
+            assert_eq!(got, want, "stages={stages} workers={workers} diverged");
+        }
+    }
+}
+
+/// `stream=1` delivers every token as an in-order event whose
+/// concatenation is exactly the final response.
+#[test]
+fn streamed_tokens_reassemble_the_final_response() {
+    let cfg = ServeConfig { pipeline: 2, ..serve_cfg() };
+    let router = one_group_router(&cfg);
+    let handle = router
+        .submit(Request::with_params(
+            5,
+            "stream me ",
+            GenParams::new(9).temperature(0.7).seed(3).stream(true),
+        ))
+        .unwrap();
+    let mut toks: Vec<u32> = Vec::new();
+    let resp = loop {
+        match handle.recv().unwrap() {
+            Event::Token { id, index, token, text } => {
+                assert_eq!(id, 5);
+                assert_eq!(index, toks.len(), "token events must arrive in order");
+                assert_eq!(text.len(), 1, "char-level tokenizer streams one char per token");
+                toks.push(token);
+            }
+            Event::Done(r) => break r,
+            Event::Error { message, .. } => panic!("{message}"),
+        }
+    };
+    assert_eq!(toks, resp.tokens, "streamed tokens must reassemble the response");
+    assert_eq!(resp.tokens.len(), 9);
+}
+
+/// The `max_new` hard cap is enforced on the pipeline path and surfaced
+/// in stats; requests under the cap are untouched.
+#[test]
+fn max_new_clamp_is_enforced_and_surfaced() {
+    let model = test_model();
+    let cfg = ServeConfig { pipeline: 1, max_new_tokens: 4, ..serve_cfg() };
+    let h = launch_group(0, model.clone(), &cfg).unwrap();
+    let router = Router::from_handles(vec![h], Box::new(RoundRobin::default()));
+    let resp = router.submit(Request::from_text(1, "clamp me ", 100)).unwrap().wait().unwrap();
+    assert_eq!(resp.tokens.len(), 32, "hard cap = 8 x max_new_tokens");
+    assert_eq!(resp.stats.clamped_from, Some(100));
+    let h = launch_group(1, model, &cfg).unwrap();
+    let router = Router::from_handles(vec![h], Box::new(RoundRobin::default()));
+    let resp = router.submit(Request::from_text(1, "clamp me ", 8)).unwrap().wait().unwrap();
+    assert_eq!(resp.tokens.len(), 8);
+    assert_eq!(resp.stats.clamped_from, None);
 }

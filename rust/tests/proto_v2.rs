@@ -1,0 +1,157 @@
+//! Protocol-v2 back-compat + round-trip property suite (no artifacts;
+//! runs in the default `cargo test` pass and is pinned as an explicit CI
+//! step).
+//!
+//! Two invariants protect existing clients across the api redesign:
+//! 1. **legacy identity** — every v1 line (`GEN <n> <prompt>`, `SET …`,
+//!    `STATS`, `PING`, `QUIT`) parses to exactly the command it always
+//!    did: a legacy `GEN` yields *default* [`GenParams`] with only
+//!    `max_new` set, so its sampling, seeding and admission behaviour is
+//!    bit-identical to v1;
+//! 2. **round-trip** — any keyword line the reference encoder
+//!    ([`encode_gen`]) emits parses back to the same `(params, prompt)`.
+
+use swan::api::GenParams;
+use swan::server::proto::{encode_gen, parse_line, Command, GEN_KEYS};
+use swan::util::Pcg64;
+
+/// Random single-line prompt over the serving alphabet (ASCII 32..127).
+/// No leading space (the prompt boundary would be ambiguous); anything
+/// else goes — prompts whose first word looks like a `key=value` or
+/// `--` round-trip via the encoder's explicit terminator.
+fn random_prompt(rng: &mut Pcg64, max_len: usize) -> String {
+    let len = 1 + rng.below(max_len as u64) as usize;
+    let mut s: String = (0..len)
+        .map(|_| (32 + rng.below(95) as u8) as char)
+        .collect();
+    while s.starts_with(' ') {
+        s.remove(0);
+        s.push('x');
+    }
+    s
+}
+
+fn random_params(rng: &mut Pcg64) -> GenParams {
+    let mut p = GenParams::new(1 + rng.below(512) as usize);
+    if rng.below(2) == 0 {
+        // one-decimal temperatures/top-p print exactly and round-trip
+        p = p.temperature(rng.below(30) as f32 / 10.0);
+    }
+    if rng.below(2) == 0 {
+        p = p.top_p(rng.below(10) as f32 / 10.0);
+    }
+    if rng.below(2) == 0 {
+        p = p.repetition_penalty(1.0 + rng.below(20) as f32 / 10.0);
+    }
+    if rng.below(2) == 0 {
+        p = p.seed(rng.next_u64() >> 1);
+    }
+    if rng.below(2) == 0 {
+        p = p.stop(rng.below(96) as u32);
+    }
+    if rng.below(2) == 0 {
+        p = p.k_active(1 + rng.below(128) as usize);
+    }
+    if rng.below(2) == 0 {
+        p = p.stream(true);
+    }
+    p
+}
+
+#[test]
+fn every_legacy_gen_line_parses_identically() {
+    let mut rng = Pcg64::new(0x9e_02);
+    for _ in 0..500 {
+        let max_new = 1 + rng.below(999) as usize;
+        let prompt = random_prompt(&mut rng, 60);
+        let line = format!("GEN {max_new} {prompt}");
+        let got = parse_line(&line).unwrap();
+        // v1 parsing contract: max_new + the raw prompt, nothing else —
+        // params must be pure defaults so behaviour is unchanged
+        assert_eq!(
+            got,
+            Command::Gen { params: GenParams::new(max_new), prompt: prompt.clone() },
+            "line {line:?}"
+        );
+        let Command::Gen { params, .. } = got else { unreachable!() };
+        assert_eq!(params.temperature, 0.0);
+        assert_eq!(params.top_p, 1.0);
+        assert_eq!(params.repetition_penalty, 1.0);
+        assert_eq!(params.seed, None);
+        assert_eq!(params.stop, None);
+        assert_eq!(params.k_active, None);
+        assert!(!params.stream);
+    }
+}
+
+#[test]
+fn legacy_admin_lines_parse_identically() {
+    assert_eq!(parse_line("SET k_active 16").unwrap(), Command::SetKActive(16));
+    assert_eq!(parse_line("SET balance mem-aware").unwrap(), Command::SetBalance("mem-aware".into()));
+    assert_eq!(parse_line("STATS").unwrap(), Command::Stats);
+    assert_eq!(parse_line("PING").unwrap(), Command::Ping);
+    assert_eq!(parse_line("QUIT").unwrap(), Command::Quit);
+    // malformed lines still produce the same structured codes
+    assert_eq!(parse_line("").unwrap_err().code(), "empty");
+    assert_eq!(parse_line("NOPE").unwrap_err().code(), "unknown-command");
+    assert_eq!(parse_line("GEN").unwrap_err().code(), "bad-args");
+    assert_eq!(parse_line("SET foo 3").unwrap_err().code(), "bad-args");
+}
+
+#[test]
+fn keyword_lines_survive_encode_then_parse() {
+    let mut rng = Pcg64::new(0x9e_03);
+    for i in 0..500 {
+        let params = random_params(&mut rng);
+        // every 4th prompt is adversarial: starts with a recognized
+        // key=value or the terminator itself — the encoder must emit
+        // an explicit `--` so these round-trip too
+        let prompt = match i % 4 {
+            0 => format!("k=2 {}", random_prompt(&mut rng, 30)),
+            1 if i % 8 == 1 => format!("-- {}", random_prompt(&mut rng, 30)),
+            _ => random_prompt(&mut rng, 40),
+        };
+        let line = encode_gen(&params, &prompt);
+        match parse_line(&line) {
+            Ok(Command::Gen { params: got_p, prompt: got_prompt }) => {
+                assert_eq!(got_p, params, "iter {i}: line {line:?}");
+                assert_eq!(got_prompt, prompt, "iter {i}: line {line:?}");
+            }
+            other => panic!("iter {i}: line {line:?} parsed to {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn issue_spelling_parses() {
+    // the exact spelling the protocol doc advertises
+    let got = parse_line("GEN max_new=64 temp=0.8 top_p=0.9 k=8 stream=1 the quick cache").unwrap();
+    assert_eq!(
+        got,
+        Command::Gen {
+            params: GenParams::new(64).temperature(0.8).top_p(0.9).k_active(8).stream(true),
+            prompt: "the quick cache".into()
+        }
+    );
+    assert_eq!(parse_line("CANCEL 12").unwrap(), Command::Cancel(12));
+}
+
+#[test]
+fn prompts_led_by_keyword_lookalikes_stay_prompts() {
+    let mut rng = Pcg64::new(0x9e_04);
+    for _ in 0..200 {
+        // "<unknown>=<junk>" must start the prompt, never error
+        let prompt = format!("zz{}=what is this", rng.below(10));
+        let line = format!("GEN max_new=4 {prompt}");
+        assert_eq!(
+            parse_line(&line).unwrap(),
+            Command::Gen { params: GenParams::new(4), prompt: prompt.clone() },
+            "{line}"
+        );
+    }
+    // every recognized key with a garbage value is an error, not prompt
+    for key in GEN_KEYS {
+        let line = format!("GEN {key}=@@garbage@@ hi");
+        assert_eq!(parse_line(&line).unwrap_err().code(), "bad-args", "{line}");
+    }
+}

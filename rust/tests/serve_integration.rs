@@ -3,6 +3,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 
+use swan::api::GenParams;
 use swan::config::ServeConfig;
 use swan::coordinator::Engine;
 use swan::sparse::StorageMode;
@@ -226,6 +227,97 @@ fn pipeline_fleet_serves_retunes_and_tracks_single_shard() {
     }
     assert_eq!(stats.matches("stage 0: layers").count(), 2, "{stats}");
     assert_eq!(stats.matches("stage 1: layers").count(), 2, "{stats}");
+    c.quit();
+}
+
+/// Protocol v2 over real artifacts: keyword `GEN` (per-request k,
+/// sampling params), the surfaced `max_new` clamp, `TOK` streaming,
+/// `CANCEL` from a second connection, and disconnect-cancel leaving the
+/// server healthy.
+#[test]
+fn protocol_v2_streaming_cancel_and_per_request_k() {
+    let dir = require_artifacts!();
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let cfg = ServeConfig { bind: "127.0.0.1:0".into(), ..Default::default() };
+    std::thread::spawn(move || {
+        let _ = swan::server::tcp::serve_with_ready(&dir, cfg, move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv_timeout(std::time::Duration::from_secs(240)).expect("server start");
+    let mut c = swan::server::client::Client::connect(&addr.to_string()).unwrap();
+
+    // keyword GEN: per-request compression override + typed sampling
+    let g = c
+        .generate_with(
+            "the quick cache stores the ",
+            &GenParams::new(8).k_active(16).temperature(0.7).seed(9),
+        )
+        .unwrap();
+    assert!(g.id > 0);
+    assert!(g.text.is_ascii());
+    assert!(g.stats.tokens <= 8);
+    assert_eq!(g.clamped_to, None);
+    assert!(!g.stats.cancelled);
+
+    // two requests with different k on the same fleet both answer
+    let lo = c.generate_with("fact kernel9 is 300 . recall kernel9 -> ", &GenParams::new(6).k_active(16)).unwrap();
+    let hi = c.generate_with("fact kernel9 is 300 . recall kernel9 -> ", &GenParams::new(6).k_active(48)).unwrap();
+    assert!(lo.text.is_ascii() && hi.text.is_ascii());
+
+    // streaming: TOK lines reassemble the final text
+    let mut streamed = String::new();
+    let g = c
+        .generate_stream("stream the value ", &GenParams::new(8).stream(true), |_, t| {
+            streamed.push_str(t)
+        })
+        .unwrap();
+    assert_eq!(streamed, g.text, "TOK lines must reassemble the OK text");
+
+    // oversized max_new is clamped AND surfaced (reply + stats)
+    let g = c.generate_with("clamped ", &GenParams::new(5000).stop(0)).unwrap();
+    assert_eq!(g.clamped_to, Some(ServeConfig::default().max_new_hard_cap()));
+    assert_eq!(g.stats.requested, Some(5000));
+
+    // CANCEL from a second connection retires a mid-decode stream
+    let mut s1 = std::net::TcpStream::connect(addr).unwrap();
+    let mut r1 = BufReader::new(s1.try_clone().unwrap());
+    writeln!(s1, "GEN max_new=512 stream=1 the long running prompt ").unwrap();
+    let mut line = String::new();
+    r1.read_line(&mut line).unwrap();
+    assert!(line.starts_with("TOK "), "{line}");
+    let id: u64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    c.cancel(id).unwrap();
+    let ok_line = loop {
+        line.clear();
+        r1.read_line(&mut line).unwrap();
+        if line.starts_with("OK ") {
+            break line.clone();
+        }
+        assert!(line.starts_with("TOK "), "{line}");
+    };
+    assert!(ok_line.starts_with(&format!("OK {id}")), "{ok_line}");
+    line.clear();
+    r1.read_line(&mut line).unwrap();
+    assert!(line.starts_with("STAT "), "{line}");
+    assert!(line.contains("cancelled=1"), "cancel must be surfaced: {line}");
+    writeln!(s1, "QUIT").unwrap();
+
+    // disconnect mid-GEN: drop the socket without reading the reply;
+    // the reader loop observes EOF and cancels the abandoned sequence,
+    // and the server keeps serving
+    {
+        let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(s2, "GEN max_new=512 stream=1 abandoned request ").unwrap();
+        // read one TOK so the request is provably decoding, then vanish
+        let mut r2 = BufReader::new(s2.try_clone().unwrap());
+        let mut l = String::new();
+        r2.read_line(&mut l).unwrap();
+        assert!(l.starts_with("TOK "), "{l}");
+    }
+    c.ping().unwrap();
+    let (text, _) = c.generate("still serving after the disconnect ", 4).unwrap();
+    assert!(text.is_ascii());
     c.quit();
 }
 

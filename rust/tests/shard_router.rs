@@ -120,6 +120,38 @@ fn set_k_active_broadcast_reaches_every_shard() {
 }
 
 #[test]
+fn cancel_broadcast_reaches_every_shard() {
+    let (shards, rxs) = stub_fleet(3);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    router.cancel(42).unwrap();
+    for rx in &rxs {
+        match rx.try_recv().unwrap() {
+            ShardCmd::Cancel { id } => assert_eq!(id, 42),
+            _ => panic!("expected Cancel on every shard"),
+        }
+    }
+}
+
+#[test]
+fn submit_returns_a_handle_wired_to_the_request() {
+    let (shards, rxs) = stub_fleet(1);
+    let router = Router::from_handles(shards, Box::new(RoundRobin::default()));
+    let handle = router.submit(Request::from_text(0, "hello", 4)).unwrap();
+    assert_eq!(handle.id(), 1, "fleet ids start at 1");
+    // the shard sees the same id, and the handle's cancel token IS the
+    // request's token (flipping one flips the other)
+    match rxs[0].try_recv().unwrap() {
+        ShardCmd::Gen { req, .. } => {
+            assert_eq!(req.id, handle.id());
+            assert!(!req.cancel.is_cancelled());
+            handle.cancel();
+            assert!(req.cancel.is_cancelled(), "handle.cancel() must reach the request");
+        }
+        _ => panic!("expected Gen"),
+    }
+}
+
+#[test]
 fn live_policy_swap_changes_placement() {
     let (shards, rxs) = stub_fleet(2);
     shards[1].status.projected_bytes.store(0, Ordering::Relaxed);
