@@ -140,6 +140,66 @@ fn run_pipeline_batch(
     drive_router(&router, n_requests, max_new)
 }
 
+/// Pull the `frag=<pct>%` figure out of a fleet stats render (present
+/// only while a pool-mode group has live sequences).
+fn parse_frag(stats: &str) -> Option<f64> {
+    let rest = &stats[stats.find("frag=")? + 5..];
+    rest[..rest.find('%')?].parse().ok()
+}
+
+/// Pool-mode leg: one native pipeline group serving out of the paged
+/// block pool.  Also samples mid-flight fragmentation from STATS and
+/// reads the preemption counter after the batch drains.
+fn run_pool_batch(
+    cfg: ServeConfig,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(f64, Option<f64>, u64, String)> {
+    use swan::model::{SwanModel, WeightFile};
+    use swan::shard::pipeline::launch_group;
+    use swan::swan::projection::ProjectionVariant;
+
+    let dir = swan::artifacts_dir();
+    let wf = WeightFile::load(&dir.join(format!("weights_{}.bin", cfg.model)))?;
+    let model = std::sync::Arc::new(SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?);
+    let handle = launch_group(0, model, &cfg)?;
+    let router = Router::from_handles(vec![handle], swan::shard::policy_from_name("round-robin")?);
+
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        pending.push(router.submit(Request::from_text(0, &prompt, max_new))?);
+    }
+    // sample fragmentation while the batch is in flight (the pool line
+    // renders live rows vs leased-block row capacity)
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let frag = parse_frag(&router.stats());
+    let mut decoded = 0usize;
+    for h in pending {
+        decoded += h.wait()?.stats.decode_steps;
+    }
+    let wall = t0.elapsed();
+    let tps = decoded as f64 / wall.as_secs_f64();
+    let preempted: u64 = router
+        .shards()
+        .iter()
+        .map(|s| s.metrics.requests_preempted.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    let row = format!(
+        "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s | preempted {preempted}",
+        n_requests,
+        wall.as_secs_f64(),
+        tps,
+    );
+    Ok((tps, frag, preempted, row))
+}
+
 fn main() {
     let dir = swan::artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -248,6 +308,67 @@ fn main() {
     report.set("pipeline_scaling", "max_new", max_new as f64);
     if let Err(e) = report.save() {
         eprintln!("could not write {}: {e}", report.path().display());
+    }
+
+    // pool scaling: paged block pool vs per-sequence caches on the same
+    // native pipeline path at batch {4,16,64} (both legs run through
+    // `pipeline::launch_group`, so the sweep varies ONLY the storage
+    // backend), plus a budget-bound leg that forces block-granular
+    // preemption; rows land in BENCH_pool.json
+    println!("# pool_scaling ({max_new} new tokens each, ~180-char prompts)");
+    let mut pool_report = swan::util::stats::BenchReport::open("BENCH_pool.json");
+    for batch in [4usize, 16, 64] {
+        let base = ServeConfig {
+            k_active: 32,
+            mode: StorageMode::F16,
+            max_batch: batch,
+            decode_workers: workers,
+            ..Default::default()
+        };
+        let label = format!("perseq batch={batch}");
+        match run_pipeline_batch(base.clone(), batch, max_new) {
+            Ok((tps, row)) => {
+                println!("{label:<18} {row}");
+                pool_report.set("pool_scaling", &format!("perseq_batch{batch}_decode_tps"), tps);
+            }
+            Err(e) => println!("{label:<18} FAILED: {e:#}"),
+        }
+        let label = format!("pool   batch={batch}");
+        match run_pool_batch(ServeConfig { pool: true, block_tokens: 16, ..base }, batch, max_new)
+        {
+            Ok((tps, frag, _, row)) => {
+                println!("{label:<18} {row}");
+                pool_report.set("pool_scaling", &format!("pool_batch{batch}_decode_tps"), tps);
+                if let Some(f) = frag {
+                    pool_report.set("pool_scaling", &format!("pool_batch{batch}_frag_pct"), f);
+                }
+            }
+            Err(e) => println!("{label:<18} FAILED: {e:#}"),
+        }
+    }
+    // budget-bound leg: a tight block budget preempts mid-decode; the
+    // victims requeue and replay, so every request still completes
+    let tight = ServeConfig {
+        pool: true,
+        block_tokens: 16,
+        mem_budget: 8 << 20,
+        k_active: 32,
+        mode: StorageMode::F16,
+        max_batch: 16,
+        decode_workers: workers,
+        ..Default::default()
+    };
+    match run_pool_batch(tight, 16, max_new) {
+        Ok((tps, _, preempted, row)) => {
+            println!("{:<18} {row}", "pool   tight-mem");
+            pool_report.set("pool_scaling", "tight_decode_tps", tps);
+            pool_report.set("pool_scaling", "tight_preempted", preempted as f64);
+        }
+        Err(e) => println!("{:<18} FAILED: {e:#}", "pool   tight-mem"),
+    }
+    pool_report.set("pool_scaling", "max_new", max_new as f64);
+    if let Err(e) = pool_report.save() {
+        eprintln!("could not write {}: {e}", pool_report.path().display());
     }
 
     // api mix: the same fleet serving different request shapes — greedy,

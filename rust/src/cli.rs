@@ -101,6 +101,10 @@ USAGE:
                 [--decode-workers N]   decode threads per shard (0 = serial)
                 [--admit-lookahead W]  admission scans the first W queued
                                        requests under memory pressure (default 4)
+                [--pool]               paged KV block pool: block-accounted
+                                       admission + block-granular preemption
+                                       (native pipeline path; output identical)
+                [--block-tokens N]     rows per pool block (default 16)
                 [--kernels K]          compute kernels: auto|scalar|avx2
                                        (accepted by every command; default auto)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]

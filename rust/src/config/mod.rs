@@ -101,6 +101,17 @@ pub struct ServeConfig {
     pub kernels: String,
     /// TCP bind address for `swan serve`.
     pub bind: String,
+    /// Serve KV storage out of a paged block pool (`crate::pool`): the
+    /// native pipeline path stores every sequence's winnowed rows and
+    /// ring tail in fixed-size leased blocks, admission counts blocks
+    /// instead of raw bytes, and over-budget decode growth preempts the
+    /// youngest sequence block-granularly instead of rejecting.  The
+    /// PJRT engine path keeps per-sequence caches but rounds admission
+    /// projections to whole allocation granules.  Decode output is
+    /// bit-identical with the pool on or off.
+    pub pool: bool,
+    /// Rows (tokens) per pool block, >= 1.
+    pub block_tokens: usize,
 }
 
 impl ServeConfig {
@@ -132,6 +143,8 @@ impl Default for ServeConfig {
             balance: "round-robin".into(),
             kernels: "auto".into(),
             bind: "127.0.0.1:7877".into(),
+            pool: false,
+            block_tokens: 16,
         }
     }
 }

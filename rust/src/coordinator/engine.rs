@@ -250,7 +250,13 @@ impl Engine {
             .queued()
             .map(|r| {
                 let (sparse_b, dense_b) = self.token_byte_rates(self.request_k(r));
-                Scheduler::projected_bytes(r.prompt.len(), r.params.max_new, sparse_b, dense_b, buf)
+                Scheduler::projected_bytes(
+                    projected_prompt_tokens(r.prompt.len(), &self.prefill_buckets),
+                    r.params.max_new,
+                    sparse_b,
+                    dense_b,
+                    buf,
+                )
             })
             .sum();
         self.live_cache_bytes() + queued
@@ -357,6 +363,10 @@ impl Engine {
                 clamped_from: p.req.clamped_from,
                 ..Default::default()
             };
+            // a queued purge is a cancellation AND a completion: every
+            // submitted request resolves exactly once, and the cancel
+            // counter records how it resolved
+            self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
             self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
             let resp =
                 Response { id: p.req.id, tokens: Vec::new(), text: String::new(), stats };
@@ -374,6 +384,8 @@ impl Engine {
         let k_buckets = self.tuner.k_buckets.clone();
         let snap = move |k: usize| snap_to_bucket(&k_buckets, k, k_now);
         let buf = shape.buf_cap;
+        let prefill_buckets = self.prefill_buckets.clone();
+        let pool_bt = if self.cfg.pool { self.cfg.block_tokens } else { 0 };
         loop {
             // re-read live bytes per admission: each admitted prefill
             // grows the active set, and a burst gated against one stale
@@ -381,7 +393,8 @@ impl Engine {
             let live = self.live_cache_bytes();
             // project each request at its own compression level (the
             // per-request override, snapped) — a k=8 request must be
-            // charged k=8 bytes, not the fleet default's
+            // charged k=8 bytes, not the fleet default's — and from the
+            // bucket-truncated prompt length it will actually cache
             let proj = |req: &Request| {
                 let k = req.params.k_active.map(&snap).unwrap_or(k_now);
                 let (sparse_b, dense_b) = crate::sparse::memory::token_byte_rates(
@@ -391,7 +404,26 @@ impl Engine {
                     mode,
                     k,
                 );
-                Scheduler::projected_bytes(req.prompt.len(), req.params.max_new, sparse_b, dense_b, buf)
+                let bytes = Scheduler::projected_bytes(
+                    projected_prompt_tokens(req.prompt.len(), &prefill_buckets),
+                    req.params.max_new,
+                    sparse_b,
+                    dense_b,
+                    buf,
+                );
+                if pool_bt > 0 {
+                    // block-accounted admission: a sequence acquires
+                    // storage a whole block per stream at a time (all
+                    // 2 * n_layers * n_kv streams grow in lockstep), so
+                    // charge whole allocation granules
+                    let granule = 2
+                        * shape.n_layers
+                        * shape.n_kv
+                        * crate::pool::block_bytes(pool_bt, shape.d_head, mode, k);
+                    crate::pool::block_ceil_bytes(bytes, granule)
+                } else {
+                    bytes
+                }
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
                 break;
@@ -460,6 +492,11 @@ impl Engine {
 
         let mut stats =
             RequestStats { queue_time, clamped_from: req.clamped_from, ..Default::default() };
+        // surface bucket truncation the way max_new clamping is surfaced:
+        // the response records the originally requested prompt length
+        if full.len() > cap {
+            stats.truncated_prompt_from = Some(full.len());
+        }
         stats.prefill_time = t0.elapsed();
         self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
         self.metrics.prefill_tokens.fetch_add(prompt.len() as u64, Ordering::Relaxed);
@@ -638,6 +675,9 @@ impl Engine {
             let mut keep = Vec::with_capacity(self.active.len());
             for seq in self.active.drain(..) {
                 if seq.finished {
+                    if seq.req.cancel.is_cancelled() {
+                        self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
                     self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
                     let resp = finish(seq);
                     // route through the event sink when one is attached
@@ -785,6 +825,27 @@ fn decode_execute(
 /// different k than the sequence is admitted at.
 fn snap_to_bucket(buckets: &[usize], k: usize, fallback: usize) -> usize {
     buckets.iter().copied().min_by_key(|b| b.abs_diff(k)).unwrap_or(fallback)
+}
+
+/// Prompt tokens that will actually be cached after prefill.  Prompts
+/// longer than the largest compiled prefill bucket are suffix-truncated
+/// by [`Engine::prefill`], so admission must project KV bytes from the
+/// truncated length — charging the full prompt makes a single over-bucket
+/// request over-project (sometimes past the whole budget) and starve
+/// admissible batchmates behind it.  Empty prompts prefill one dummy
+/// token.  The ONE spelling of the truncation rule, shared by admission
+/// projection, `projected_load_bytes`, and `prefill` itself.
+pub(crate) fn projected_prompt_tokens(prompt_len: usize, prefill_buckets: &[usize]) -> usize {
+    let full = prompt_len.max(1);
+    match prefill_buckets
+        .iter()
+        .copied()
+        .find(|&t| t >= full)
+        .or(prefill_buckets.last().copied())
+    {
+        Some(cap) => full.min(cap),
+        None => full,
+    }
 }
 
 fn finish(seq: ActiveSeq) -> Response {
@@ -1008,6 +1069,29 @@ mod tests {
             let again: Vec<u32> = (0..20).map(|_| sample(&logits, p, &[0], &mut rng)).collect();
             assert_eq!(again, runs[i]);
         }
+    }
+
+    /// Regression: admission must project KV bytes from the prompt
+    /// length prefill will actually cache — prompts past the largest
+    /// compiled bucket are suffix-truncated there, and charging the full
+    /// length over-projects (a 10k-token prompt against a 128-bucket
+    /// model used to project ~78x its real footprint and starve
+    /// admissible batchmates).
+    #[test]
+    fn projection_caps_prompt_at_largest_prefill_bucket() {
+        let buckets = [32usize, 128];
+        // under every bucket: the real length projects
+        assert_eq!(projected_prompt_tokens(20, &buckets), 20);
+        // between buckets: still the real length (prefill pads, the
+        // cache only ever holds the prompt's own rows)
+        assert_eq!(projected_prompt_tokens(100, &buckets), 100);
+        // at the cap, and past it: truncated to the largest bucket
+        assert_eq!(projected_prompt_tokens(128, &buckets), 128);
+        assert_eq!(projected_prompt_tokens(10_000, &buckets), 128);
+        // empty prompts prefill one dummy token
+        assert_eq!(projected_prompt_tokens(0, &buckets), 1);
+        // no compiled buckets (native path): full length, untruncated
+        assert_eq!(projected_prompt_tokens(10_000, &[]), 10_000);
     }
 
     // Engine integration tests (needing artifacts) live in

@@ -38,10 +38,21 @@ pub struct Metrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Requests that ended by cancellation (queued purge or mid-decode).
+    /// Cancels also count as completed — every submitted request resolves
+    /// exactly once — so `cancelled <= completed`.
+    pub requests_cancelled: AtomicU64,
+    /// Times a sequence was preempted (blocks reclaimed, requeued) to fit
+    /// the pool budget.  Preemption is not terminal: the sequence resumes
+    /// later, so this can exceed the request count under churn.
+    pub requests_preempted: AtomicU64,
     pub prefill_tokens: AtomicU64,
     pub decode_tokens: AtomicU64,
     pub cache_bytes: AtomicUsize,
     pub dense_equiv_bytes: AtomicUsize,
+    /// Block-pool gauges (0/0 when the paged pool is off).
+    pub pool_blocks_total: AtomicUsize,
+    pub pool_blocks_leased: AtomicUsize,
     pub prefill_ns: Reservoir,
     pub decode_step_ns: Reservoir,
 }
@@ -52,10 +63,14 @@ impl Default for Metrics {
             requests_submitted: AtomicU64::new(0),
             requests_completed: AtomicU64::new(0),
             requests_rejected: AtomicU64::new(0),
+            requests_cancelled: AtomicU64::new(0),
+            requests_preempted: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             decode_tokens: AtomicU64::new(0),
             cache_bytes: AtomicUsize::new(0),
             dense_equiv_bytes: AtomicUsize::new(0),
+            pool_blocks_total: AtomicUsize::new(0),
+            pool_blocks_leased: AtomicUsize::new(0),
             prefill_ns: Reservoir::new(1024),
             decode_step_ns: Reservoir::new(4096),
         }
@@ -66,10 +81,12 @@ impl Metrics {
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests: submitted={} completed={} rejected={}\n",
+            "requests: submitted={} completed={} rejected={} cancelled={} preempted={}\n",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_rejected.load(Ordering::Relaxed),
+            self.requests_cancelled.load(Ordering::Relaxed),
+            self.requests_preempted.load(Ordering::Relaxed),
         ));
         out.push_str(&format!(
             "tokens: prefill={} decode={}\n",
@@ -84,6 +101,16 @@ impl Metrics {
             crate::sparse::memory::human_bytes(used),
             crate::sparse::memory::human_bytes(dense),
         ));
+        let pool_total = self.pool_blocks_total.load(Ordering::Relaxed);
+        if pool_total > 0 {
+            let leased = self.pool_blocks_leased.load(Ordering::Relaxed);
+            let total = if pool_total == usize::MAX {
+                "unbounded".to_string()
+            } else {
+                pool_total.to_string()
+            };
+            out.push_str(&format!("pool: blocks leased={leased} target={total}\n"));
+        }
         if let Some(s) = self.prefill_ns.summary() {
             out.push_str(&format!("prefill:     {}\n", s.row("")));
         }
@@ -117,6 +144,11 @@ mod tests {
         m.dense_equiv_bytes.store(1024, Ordering::Relaxed);
         let s = m.snapshot();
         assert!(s.contains("submitted=5"));
+        assert!(s.contains("cancelled=0 preempted=0"));
         assert!(s.contains("saving 50.0%"));
+        assert!(!s.contains("pool:"), "pool line hidden when pool is off");
+        m.pool_blocks_total.store(64, Ordering::Relaxed);
+        m.pool_blocks_leased.store(7, Ordering::Relaxed);
+        assert!(m.snapshot().contains("pool: blocks leased=7 target=64"));
     }
 }

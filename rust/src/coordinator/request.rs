@@ -98,6 +98,10 @@ pub struct RequestStats {
     /// `Some(requested)` when the server clamped `max_new` below what
     /// the request asked for.
     pub clamped_from: Option<usize>,
+    /// `Some(original prompt length)` when prefill suffix-truncated the
+    /// prompt to the largest compiled bucket — surfaced exactly like the
+    /// `max_new` clamp so truncation is never silent.
+    pub truncated_prompt_from: Option<usize>,
 }
 
 impl RequestStats {

@@ -49,6 +49,13 @@ pub struct Scheduler {
     /// Times the current head has been skipped over by the lookahead;
     /// at [`MAX_HEAD_SKIPS`] the head turns sticky (see the module doc).
     head_skips: usize,
+    /// Which request id `head_skips` is aging.  The counter is a
+    /// property of one specific head *request*, not of the front
+    /// position: purging a cancelled head (or requeueing a preempted
+    /// sequence ahead of it) changes who the head IS, and the new head
+    /// must start with its full skip allowance rather than inherit the
+    /// old head's aging.
+    skipped_head: Option<u64>,
 }
 
 /// Default admission lookahead window (see [`Scheduler::lookahead`]).
@@ -68,7 +75,13 @@ impl Scheduler {
             decode_slots: 0,
             lookahead: DEFAULT_LOOKAHEAD,
             head_skips: 0,
+            skipped_head: None,
         }
+    }
+
+    fn reset_skips(&mut self) {
+        self.head_skips = 0;
+        self.skipped_head = None;
     }
 
     /// Cap concurrent decodes to the worker pool's capacity (0 disables).
@@ -84,6 +97,13 @@ impl Scheduler {
 
     pub fn enqueue(&mut self, req: Request) {
         self.queue.push_back(Pending { req, enqueued: Instant::now() });
+    }
+
+    /// Put a preempted request back at the very front of the queue so it
+    /// is the next admission candidate once blocks free (preemption
+    /// resumes newest-victim-first).
+    pub fn requeue_front(&mut self, req: Request) {
+        self.queue.push_front(Pending { req, enqueued: Instant::now() });
     }
 
     /// Remove every queued request whose [`crate::api::CancelToken`] has
@@ -170,8 +190,16 @@ impl Scheduler {
         // unlimited memory, or an idle engine (always admit when idle so
         // we cannot deadlock): strict FIFO
         if self.mem_budget == 0 || active == 0 {
-            self.head_skips = 0;
+            self.reset_skips();
             return self.queue.pop_front();
+        }
+        // the skip counter ages one specific head request: if a
+        // cancellation purge or a preemption requeue changed who the
+        // head is, the new head starts with its full allowance
+        if self.skipped_head.is_some()
+            && self.skipped_head != self.queue.front().map(|p| p.req.id)
+        {
+            self.reset_skips();
         }
         // a head that has been skipped too often is sticky: collapse to
         // head-only so the active set drains and the idle escape above
@@ -182,9 +210,10 @@ impl Scheduler {
             let projected = project(&self.queue[i].req);
             if live_bytes + projected <= self.mem_budget {
                 if i == 0 {
-                    self.head_skips = 0;
+                    self.reset_skips();
                 } else {
                     self.head_skips += 1;
+                    self.skipped_head = self.queue.front().map(|p| p.req.id);
                 }
                 // remove(i) preserves the relative order of the rest
                 return self.queue.remove(i);
@@ -332,6 +361,49 @@ mod tests {
         s.enqueue(req(2, 1500));
         s.enqueue(req(3, 100));
         assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 3);
+    }
+
+    /// Regression: the skip counter must age one specific head request.
+    /// Cancelling a part-aged head used to leave its skip count behind
+    /// for whichever request became the head next, making it sticky (or
+    /// near-sticky) before it was ever skipped once.
+    #[test]
+    fn cancelling_a_skipped_head_resets_the_aging_counter() {
+        let mut s = Scheduler::new(64, 1000);
+        s.set_lookahead(4);
+        let proj = |r: &Request| r.prompt.len();
+        s.enqueue(req(1, 1500)); // giant head, accrues skip-overs
+        for i in 0..(MAX_HEAD_SKIPS as u64 - 1) {
+            s.enqueue(req(100 + i, 100));
+            assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 100 + i);
+        }
+        // head 1 is one skip from sticky; cancel it out of the queue
+        assert!(s.cancel(1));
+        assert_eq!(s.take_cancelled().len(), 1);
+        // a NEW giant head gets the full MAX_HEAD_SKIPS allowance — it
+        // must not inherit the cancelled head's aging
+        s.enqueue(req(2, 1500));
+        for i in 0..MAX_HEAD_SKIPS as u64 {
+            s.enqueue(req(200 + i, 100));
+            assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 200 + i, "skip {i}");
+        }
+        // only now does it turn sticky
+        s.enqueue(req(999, 100));
+        assert!(s.admit_next(1, 500, proj).is_none());
+    }
+
+    /// A preempted request requeued at the front is the next admission
+    /// candidate, ahead of everything that was already waiting.
+    #[test]
+    fn requeue_front_resumes_before_waiting_queue() {
+        let mut s = Scheduler::new(8, 0);
+        s.enqueue(req(1, 4));
+        s.enqueue(req(2, 4));
+        let p = s.admit_next(0, 0, |_| 0).unwrap();
+        assert_eq!(p.req.id, 1);
+        s.requeue_front(p.req);
+        assert_eq!(s.admit_next(0, 0, |_| 0).unwrap().req.id, 1);
+        assert_eq!(s.admit_next(0, 0, |_| 0).unwrap().req.id, 2);
     }
 
     #[test]

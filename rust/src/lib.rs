@@ -62,6 +62,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
 pub mod model;
+pub mod pool;
 pub mod repro;
 pub mod runtime;
 pub mod server;

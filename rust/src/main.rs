@@ -55,6 +55,13 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.kernels = args.get_str("kernels", &cfg.kernels);
     cfg.mode = parse_mode(args)?;
     cfg.dense_baseline = args.has("dense");
+    cfg.pool = args.has("pool");
+    cfg.block_tokens = args.get_usize("block-tokens", cfg.block_tokens)?;
+    anyhow::ensure!(cfg.block_tokens >= 1, "--block-tokens must be >= 1");
+    anyhow::ensure!(
+        !(cfg.pool && cfg.dense_baseline),
+        "--pool serves SWAN hybrid caches; it cannot combine with --dense"
+    );
     cfg.bind = args.get_str("bind", &cfg.bind);
     Ok(cfg)
 }

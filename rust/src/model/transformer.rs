@@ -103,6 +103,20 @@ impl SequenceState {
         SequenceState { caches, pos: 0, n_kv: cfg.n_kv_heads }
     }
 
+    /// [`SequenceState::for_layers`] with a caller-supplied cache
+    /// factory, for policies [`PolicyKind`] cannot describe — the paged
+    /// pool path builds [`crate::pool::PagedSwanCache`]s here, each
+    /// closure call leasing from the stage's shared block pool.
+    pub fn for_layers_with(
+        model: &SwanModel,
+        n_layers: usize,
+        mut factory: impl FnMut() -> Box<dyn CachePolicy>,
+    ) -> SequenceState {
+        let cfg = &model.cfg;
+        let caches = (0..n_layers * cfg.n_kv_heads).map(|_| factory()).collect();
+        SequenceState { caches, pos: 0, n_kv: cfg.n_kv_heads }
+    }
+
     /// Seed the caches from an exact prefill.
     pub fn load_prefill(&mut self, pf: &Prefill) {
         let d = if pf.khat.is_empty() || pf.khat[0].is_empty() || pf.len == 0 {

@@ -1,0 +1,172 @@
+//! Free-list block allocator: block ids, refcounts, double-free checks.
+//!
+//! The allocator manages *identities*, not storage — [`super::BlockPool`]
+//! pairs each live id with an owned [`super::BlockBuf`].  Refcounts are
+//! always 1 under today's serving paths; `retain` exists as the
+//! copy-on-write hook prefix sharing will build on (see ROADMAP).
+
+/// Fixed-universe id allocator with a LIFO free list and per-id
+/// refcounts.  Ids are dense `0..capacity`; [`BlockAllocator::grow_one`]
+/// extends the universe when an elastic pool leases past its initial
+/// sizing.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    /// `refcounts[id] == 0` exactly when `id` is on the free list.
+    refcounts: Vec<u32>,
+    /// Free ids, most-recently-freed on top (LIFO reuses warm buffers).
+    free: Vec<u32>,
+}
+
+impl BlockAllocator {
+    /// An allocator over ids `0..n_blocks`, all free.  The free list is
+    /// stacked so that id 0 is handed out first.
+    pub fn new(n_blocks: usize) -> BlockAllocator {
+        BlockAllocator {
+            refcounts: vec![0; n_blocks],
+            free: (0..n_blocks as u32).rev().collect(),
+        }
+    }
+
+    /// Total ids in the universe (free + live).
+    pub fn capacity(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    /// Ids currently leased (refcount >= 1).
+    pub fn live(&self) -> usize {
+        self.refcounts.len() - self.free.len()
+    }
+
+    /// Pop a free id at refcount 1, or `None` when the universe is
+    /// exhausted.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcounts[id as usize], 0, "free-list id {id} had a refcount");
+        self.refcounts[id as usize] = 1;
+        Some(id)
+    }
+
+    /// [`BlockAllocator::alloc`], extending the universe by one id when
+    /// the free list is empty (elastic pools never fail a lease; the
+    /// budget is enforced analytically by the serving coordinator).
+    pub fn alloc_grow(&mut self) -> u32 {
+        if let Some(id) = self.alloc() {
+            return id;
+        }
+        let id = self.refcounts.len() as u32;
+        self.refcounts.push(1);
+        id
+    }
+
+    /// Current refcount of `id`.
+    pub fn refcount(&self, id: u32) -> u32 {
+        self.refcounts[id as usize]
+    }
+
+    /// Add one reference (the copy-on-write sharing hook).  Panics on a
+    /// free id — sharing a block nobody holds is always a caller bug.
+    pub fn retain(&mut self, id: u32) {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "retain of free block {id}");
+        *rc += 1;
+    }
+
+    /// Drop one reference; returns `true` when the block became free and
+    /// went back on the free list.  Panics on a free id (double-free).
+    pub fn release(&mut self, id: u32) -> bool {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "double-free of block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Structural invariants, first violation as an error: ids on the
+    /// free list are in range, unique, and at refcount 0; every
+    /// refcount-0 id is on the free list (conservation — no id is ever
+    /// lost or duplicated).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let cap = self.refcounts.len();
+        let mut on_free = vec![false; cap];
+        for &id in &self.free {
+            let i = id as usize;
+            if i >= cap {
+                return Err(format!("free id {id} out of range (capacity {cap})"));
+            }
+            if on_free[i] {
+                return Err(format!("free list holds id {id} twice"));
+            }
+            on_free[i] = true;
+            if self.refcounts[i] != 0 {
+                return Err(format!("free id {id} has refcount {}", self.refcounts[i]));
+            }
+        }
+        for (i, &rc) in self.refcounts.iter().enumerate() {
+            if rc == 0 && !on_free[i] {
+                return Err(format!("id {i} has refcount 0 but is not on the free list"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_conserves_ids() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.capacity(), 4);
+        assert_eq!(a.live(), 0);
+        let ids: Vec<u32> = (0..4).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(a.live(), 4);
+        assert!(a.alloc().is_none());
+        assert!(a.release(2));
+        assert_eq!(a.alloc(), Some(2)); // LIFO reuse
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refcounts_gate_freeing() {
+        let mut a = BlockAllocator::new(1);
+        let id = a.alloc().unwrap();
+        a.retain(id);
+        assert_eq!(a.refcount(id), 2);
+        assert!(!a.release(id)); // still shared
+        assert!(a.release(id)); // now free
+        assert_eq!(a.live(), 0);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_extends_universe() {
+        let mut a = BlockAllocator::new(0);
+        assert_eq!(a.alloc_grow(), 0);
+        assert_eq!(a.alloc_grow(), 1);
+        assert_eq!(a.capacity(), 2);
+        assert_eq!(a.live(), 2);
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double-free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(1);
+        let id = a.alloc().unwrap();
+        a.release(id);
+        a.release(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free block")]
+    fn retain_of_free_panics() {
+        let mut a = BlockAllocator::new(1);
+        a.retain(0);
+    }
+}

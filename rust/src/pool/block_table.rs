@@ -1,0 +1,227 @@
+//! Block geometry, budget/accounting helpers, and the per-stream
+//! [`BlockTable`] mapping a sequence's rows onto pool blocks.
+
+use std::sync::Arc;
+
+use crate::sparse::memory::dense_vector_bytes;
+use crate::sparse::StorageMode;
+
+use super::{BlockBuf, BlockPool};
+
+/// Fixed block shape every cache stream of one pool shares.
+///
+/// A block holds `block_tokens` rows of ONE stream — either winnowed CSR
+/// rows of one (layer, kv-head) key/value store, or dense recency-ring
+/// rows.  Sparse rows are lane-padded exactly like
+/// [`crate::sparse::SparseStore::with_lanes`] pads them, so a block's
+/// float capacity is `block_tokens` multiples of the padded row stride —
+/// the lane-multiple constraint that keeps the per-block CSR walks
+/// tail-free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockGeometry {
+    /// Rows (tokens) per block, >= 1.
+    pub block_tokens: usize,
+    /// Head dimension of the streams this pool serves.
+    pub d_head: usize,
+    /// Lane multiple sparse rows are padded to, >= 1.
+    pub lanes: usize,
+}
+
+impl BlockGeometry {
+    pub fn new(block_tokens: usize, d_head: usize, lanes: usize) -> BlockGeometry {
+        BlockGeometry { block_tokens: block_tokens.max(1), d_head, lanes: lanes.max(1) }
+    }
+
+    /// Worst-case padded width of one sparse row (`k <= d_head` padded up
+    /// to the lane multiple).
+    pub fn slot_stride(&self) -> usize {
+        self.d_head.div_ceil(self.lanes) * self.lanes
+    }
+
+    /// Worst-case float capacity of a sparse block.
+    pub fn sparse_float_capacity(&self) -> usize {
+        self.block_tokens * self.slot_stride()
+    }
+
+    /// Float count of a dense-ring block (whole `d_head` rows).
+    pub fn dense_floats(&self) -> usize {
+        self.block_tokens * self.d_head
+    }
+}
+
+/// Budget-model bytes of one block: `block_tokens` rows at the larger of
+/// the Eq. 1 sparse-vector rate at compression `k` and the dense f16 row
+/// rate (a block is either sparse or ring; admission sizes for the
+/// worse).  The *accounted* bytes of a leased block charge per-row real
+/// nnz (see [`super::paged_cache::PagedRows`]) and are therefore `<=`
+/// this bound.
+pub fn block_bytes(block_tokens: usize, d_head: usize, mode: StorageMode, k: usize) -> usize {
+    block_tokens.max(1) * mode.vector_bytes(k.min(d_head)).max(dense_vector_bytes(d_head))
+}
+
+/// Round a projected byte load up to a whole number of blocks — the
+/// block-accounted admission charge on the byte-denominated (PJRT
+/// engine) path: a sequence cannot hold a fraction of a block.
+pub fn block_ceil_bytes(bytes: usize, block_b: usize) -> usize {
+    if block_b == 0 {
+        return bytes;
+    }
+    bytes.div_ceil(block_b) * block_b
+}
+
+/// Pool sizing: blocks a `mem_budget` buys at the model-wide worst-case
+/// block rate (compression `k`, storage `mode`).  `mem_budget == 0`
+/// means unbounded and maps to `usize::MAX`; a non-zero budget always
+/// yields at least one block (the scheduler's "single over-budget
+/// sequence still runs" elasticity).
+pub fn pool_blocks_for_budget(
+    mem_budget: usize,
+    block_tokens: usize,
+    d_head: usize,
+    mode: StorageMode,
+    k: usize,
+) -> usize {
+    if mem_budget == 0 {
+        return usize::MAX;
+    }
+    (mem_budget / block_bytes(block_tokens, d_head, mode, k)).max(1)
+}
+
+/// Blocks a sequence with `tokens` cached tokens holds across the whole
+/// model — the analytic admission/accounting rate.  Exact, not an
+/// estimate: every (layer, kv-head) stream of a sequence evicts in
+/// lockstep, each holds `ceil(buffer / bt)` ring blocks (leased up front
+/// at construction) plus `ceil(max(tokens - buffer, 0) / bt)` sparse
+/// blocks, and there are `2 * n_layers * n_kv_heads` streams (keys and
+/// values).
+pub fn seq_blocks(
+    tokens: usize,
+    buffer: usize,
+    block_tokens: usize,
+    n_layers: usize,
+    n_kv_heads: usize,
+) -> usize {
+    let bt = block_tokens.max(1);
+    let ring = buffer.div_ceil(bt);
+    let sparse = tokens.saturating_sub(buffer).div_ceil(bt);
+    2 * n_layers * n_kv_heads * (ring + sparse)
+}
+
+/// One stream's leased blocks, in row order: the storage-owning half of
+/// the paged cache.  Dropping the table gives every block back to its
+/// pool (buffers recycle; the pool's lease gauge falls).
+pub struct BlockTable {
+    pool: Arc<BlockPool>,
+    blocks: Vec<BlockBuf>,
+}
+
+impl BlockTable {
+    pub fn new(pool: Arc<BlockPool>) -> BlockTable {
+        BlockTable { pool, blocks: Vec::new() }
+    }
+
+    /// Lease one more block from the pool and return it for filling.
+    pub fn push_block(&mut self) -> &mut BlockBuf {
+        let b = self.pool.lease();
+        self.blocks.push(b);
+        self.blocks.last_mut().unwrap()
+    }
+
+    pub fn blocks(&self) -> &[BlockBuf] {
+        &self.blocks
+    }
+
+    pub fn last_mut(&mut self) -> Option<&mut BlockBuf> {
+        self.blocks.last_mut()
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut BlockBuf {
+        &mut self.blocks[i]
+    }
+
+    /// Leased block count.
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// The sequence's block-table row: pool block ids in stream order.
+    pub fn block_ids(&self) -> Vec<u32> {
+        self.blocks.iter().map(|b| b.id).collect()
+    }
+
+    /// Accounted (Eq. 1) bytes across all blocks.
+    pub fn total_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+}
+
+impl Drop for BlockTable {
+    fn drop(&mut self) {
+        for b in self.blocks.drain(..) {
+            self.pool.give_back(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_lane_multiple() {
+        let g = BlockGeometry::new(16, 12, 8);
+        assert_eq!(g.slot_stride(), 16); // 12 padded to 8-lane multiple
+        assert_eq!(g.sparse_float_capacity(), 16 * 16);
+        assert_eq!(g.dense_floats(), 16 * 12);
+        assert_eq!(BlockGeometry::new(0, 4, 0).block_tokens, 1);
+        assert_eq!(BlockGeometry::new(4, 4, 0).lanes, 1);
+    }
+
+    #[test]
+    fn block_bytes_takes_worse_of_sparse_and_dense() {
+        // d_head 8, f16: dense row = 16 B; k=2 sparse vector = 2*3+2 = 8 B
+        assert_eq!(block_bytes(4, 8, StorageMode::F16, 2), 4 * 16);
+        // k=8 sparse vector = 8*3+2 = 26 B > dense 16 B
+        assert_eq!(block_bytes(4, 8, StorageMode::F16, 8), 4 * 26);
+        // k clamps to d_head
+        assert_eq!(
+            block_bytes(4, 8, StorageMode::F16, 99),
+            block_bytes(4, 8, StorageMode::F16, 8)
+        );
+    }
+
+    #[test]
+    fn block_ceil_rounds_up_to_whole_blocks() {
+        assert_eq!(block_ceil_bytes(0, 64), 0);
+        assert_eq!(block_ceil_bytes(1, 64), 64);
+        assert_eq!(block_ceil_bytes(64, 64), 64);
+        assert_eq!(block_ceil_bytes(65, 64), 128);
+        assert_eq!(block_ceil_bytes(100, 0), 100); // degenerate guard
+    }
+
+    #[test]
+    fn budget_sizing() {
+        assert_eq!(pool_blocks_for_budget(0, 16, 8, StorageMode::F16, 4), usize::MAX);
+        let bb = block_bytes(16, 8, StorageMode::F16, 4);
+        assert_eq!(pool_blocks_for_budget(10 * bb + 1, 16, 8, StorageMode::F16, 4), 10);
+        // a budget smaller than one block still buys one (elastic floor)
+        assert_eq!(pool_blocks_for_budget(1, 16, 8, StorageMode::F16, 4), 1);
+    }
+
+    #[test]
+    fn seq_blocks_counts_ring_and_sparse_streams() {
+        // buffer 3, bt 2 -> 2 ring blocks per stream; 7 tokens -> 4
+        // sparse rows -> 2 sparse blocks per stream; 2 layers x 1 kv head
+        // x 2 (k+v) = 4 streams
+        assert_eq!(seq_blocks(7, 3, 2, 2, 1), 4 * (2 + 2));
+        // all-dense phase: no sparse blocks yet
+        assert_eq!(seq_blocks(3, 3, 2, 2, 1), 4 * 2);
+        // zero-buffer config: everything sparse, no ring blocks
+        assert_eq!(seq_blocks(5, 0, 2, 1, 1), 2 * 3);
+        assert_eq!(seq_blocks(0, 0, 2, 1, 1), 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Paged KV block pool: fixed-size blocks, per-sequence block tables,
+//! and the pool-backed hybrid cache.
+//!
+//! Per-sequence `HybridCache`s grow as they go; at serving scale that
+//! fragments memory and makes preemption all-or-nothing.  This module
+//! rebuilds SWAN storage as a block pool:
+//!
+//! * [`BlockPool`] — a process-level (per pipeline stage) recycler of
+//!   owned [`BlockBuf`] storage with a free-list [`BlockAllocator`]
+//!   tracking block ids and refcounts.  Leases hand blocks out **by
+//!   value**, so the decode hot path touches no lock — the mutex is hit
+//!   only when a sequence grows past a block boundary (every
+//!   `block_tokens` tokens) or retires.
+//! * [`BlockTable`] — one stream's leased blocks in row order (the
+//!   per-sequence block table); [`BlockGeometry`] fixes the shared block
+//!   shape, lane-multiple aware so the per-block CSR walks stay
+//!   tail-free.
+//! * [`PagedHybridCache`] / [`PagedSwanCache`] — Algorithm 1 over paged
+//!   storage, bit-identical to the contiguous
+//!   [`crate::swan::HybridCache`] (`tests/pool.rs` locks it down), with
+//!   per-block real-nnz accounting so Eq. 1 bytes stay exact under
+//!   mixed per-request k.
+//!
+//! # Elasticity and the budget
+//!
+//! A lease never fails: the pool grows past its target when asked (the
+//! allocator extends its id universe).  Bounding is *analytic* — the
+//! serving coordinator computes every sequence's block count in closed
+//! form ([`seq_blocks`]) from its token count, admits only when the sum
+//! fits the target, and preempts block-granularly when decode growth
+//! overruns it.  That keeps admission race-free without any async
+//! reservation protocol between coordinator and stage threads.
+//!
+//! Naming note: `coordinator::pool` is the unrelated byte-array lease
+//! pool for PJRT execution buffers; this crate-root module is the KV
+//! *block* pool.
+
+pub mod allocator;
+pub mod block_table;
+pub mod paged_cache;
+
+pub use allocator::BlockAllocator;
+pub use block_table::{
+    block_bytes, block_ceil_bytes, pool_blocks_for_budget, seq_blocks, BlockGeometry, BlockTable,
+};
+pub use paged_cache::{PagedHybridCache, PagedSwanCache};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One owned block of cache storage, leased from a [`BlockPool`].
+///
+/// Sparse streams use the full CSR-per-block layout: `block_tokens` (or
+/// fewer, in the still-filling tail block) rows in `vals`/`idx`, padded
+/// row boundaries in `offsets` (`rows + 1`, starting at 0), real nnz per
+/// row in `nnz`, and `bytes` accumulating the Eq. 1 charge of the rows
+/// actually written — per-block *real-nnz* accounting, so mixed
+/// per-request k stays exact.  Dense-ring blocks use `vals` only
+/// (`block_tokens * d_head` floats) and leave the CSR fields at their
+/// reset state with `bytes == 0` (ring bytes are charged analytically by
+/// the cache, matching `HybridCache::storage_bytes`).
+#[derive(Debug)]
+pub struct BlockBuf {
+    /// Pool block id (the block-table entry value).
+    pub id: u32,
+    pub vals: Vec<f32>,
+    pub idx: Vec<u16>,
+    /// Padded row boundaries within this block; `offsets.len() == rows + 1`.
+    pub offsets: Vec<u32>,
+    /// Real (unpadded) nnz per row.
+    pub nnz: Vec<u32>,
+    /// Eq. 1 bytes of the rows written into this block.
+    pub bytes: usize,
+}
+
+impl BlockBuf {
+    fn fresh(id: u32) -> BlockBuf {
+        BlockBuf { id, vals: Vec::new(), idx: Vec::new(), offsets: vec![0], nnz: Vec::new(), bytes: 0 }
+    }
+
+    /// Rows currently written (sparse blocks; 0 for dense-ring blocks).
+    pub fn rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Clear contents for reuse under a new lease, keeping allocations.
+    fn reset(&mut self, id: u32) {
+        self.id = id;
+        self.vals.clear();
+        self.idx.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.nnz.clear();
+        self.bytes = 0;
+    }
+}
+
+struct PoolInner {
+    alloc: BlockAllocator,
+    /// Returned buffers awaiting re-lease (allocations kept warm).
+    spare: Vec<BlockBuf>,
+}
+
+/// Shared block pool for one serving scope (one pipeline stage, or one
+/// test harness).  See the module docs for the lease-by-value /
+/// analytic-budget design.
+pub struct BlockPool {
+    inner: Mutex<PoolInner>,
+    /// Blocks the memory budget sized this pool for (`usize::MAX` =
+    /// unbounded).  Advisory: leases are elastic; the coordinator
+    /// enforces the target analytically.
+    target_blocks: usize,
+    /// Lock-free lease gauge for STATS rendering.
+    leased: AtomicUsize,
+}
+
+impl BlockPool {
+    pub fn new(target_blocks: usize) -> BlockPool {
+        BlockPool {
+            inner: Mutex::new(PoolInner { alloc: BlockAllocator::new(0), spare: Vec::new() }),
+            target_blocks,
+            leased: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lease one block (never fails — see module docs).  The returned
+    /// buffer is owned by the caller until [`BlockPool::give_back`].
+    pub fn lease(&self) -> BlockBuf {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.alloc.alloc_grow();
+        let buf = match g.spare.pop() {
+            Some(mut b) => {
+                b.reset(id);
+                b
+            }
+            None => BlockBuf::fresh(id),
+        };
+        drop(g);
+        self.leased.fetch_add(1, Ordering::Relaxed);
+        buf
+    }
+
+    /// Return a leased block; its id frees and its storage recycles.
+    pub fn give_back(&self, buf: BlockBuf) {
+        let mut g = self.inner.lock().unwrap();
+        if g.alloc.release(buf.id) {
+            g.spare.push(buf);
+        }
+        drop(g);
+        self.leased.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Blocks currently leased out.
+    pub fn leased(&self) -> usize {
+        self.leased.load(Ordering::Relaxed)
+    }
+
+    /// The budget-derived sizing target (`usize::MAX` = unbounded).
+    pub fn target_blocks(&self) -> usize {
+        self.target_blocks
+    }
+
+    /// Allocator invariants plus gauge consistency (tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let g = self.inner.lock().unwrap();
+        g.alloc.check_invariants()?;
+        if g.alloc.live() != self.leased.load(Ordering::Relaxed) {
+            return Err(format!(
+                "lease gauge {} != allocator live {}",
+                self.leased.load(Ordering::Relaxed),
+                g.alloc.live()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_recycles_buffers_and_tracks_gauge() {
+        let pool = BlockPool::new(8);
+        assert_eq!(pool.target_blocks(), 8);
+        let mut a = pool.lease();
+        a.vals.extend_from_slice(&[1.0, 2.0]);
+        a.offsets.push(2);
+        a.nnz.push(2);
+        a.bytes = 8;
+        let cap = a.vals.capacity();
+        assert_eq!(pool.leased(), 1);
+        pool.give_back(a);
+        assert_eq!(pool.leased(), 0);
+        let b = pool.lease();
+        // recycled: contents reset, allocation kept
+        assert!(b.vals.is_empty());
+        assert_eq!(b.offsets, vec![0]);
+        assert_eq!(b.bytes, 0);
+        assert_eq!(b.rows(), 0);
+        assert!(b.vals.capacity() >= cap);
+        pool.check_invariants().unwrap();
+        pool.give_back(b);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn leases_are_elastic_past_target() {
+        let pool = BlockPool::new(1);
+        let a = pool.lease();
+        let b = pool.lease(); // past target: still succeeds
+        assert_eq!(pool.leased(), 2);
+        assert_ne!(a.id, b.id);
+        pool.give_back(a);
+        pool.give_back(b);
+        assert_eq!(pool.leased(), 0);
+        pool.check_invariants().unwrap();
+    }
+}

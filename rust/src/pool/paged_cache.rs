@@ -1,0 +1,608 @@
+//! Algorithm 1 storage over pool blocks: paged sparse rows, paged dense
+//! ring, and the [`PagedHybridCache`] / [`PagedSwanCache`] drop-ins.
+//!
+//! Bit-identity contract: every row lands in the same order, through the
+//! same winnow ([`crate::sparse::winnow_into`]) and the same kernels, as
+//! the contiguous [`HybridCache`](crate::swan::HybridCache) path.  The
+//! per-block score walk folds per-block running maxima with `max` (exact
+//! and order-insensitive), and the per-block scatter-add visits rows in
+//! the same global order — so attention outputs match the contiguous
+//! layout to the bit (`tests/pool.rs`).
+
+use std::sync::Arc;
+
+use crate::kvcache::CachePolicy;
+use crate::simd::Kernels;
+use crate::sparse::{winnow_into, StorageMode};
+use crate::swan::attention::{swan_attend, SwanAttendable};
+use crate::swan::batch::AttentionScratch;
+use crate::swan::hybrid_cache::SwanParams;
+
+use super::{BlockGeometry, BlockPool, BlockTable};
+
+/// One sparse stream (the paged analogue of
+/// [`crate::sparse::SparseStore`]): winnowed CSR rows packed
+/// `block_tokens` to a block, appended through the shared
+/// [`winnow_into`] so quantization and lane padding are identical to the
+/// contiguous store.  `bytes` accounting charges per-row *real* nnz
+/// (Eq. 1), accumulated block by block.
+pub struct PagedRows {
+    table: BlockTable,
+    geo: BlockGeometry,
+    rows: usize,
+}
+
+impl PagedRows {
+    pub fn new(pool: Arc<BlockPool>, geo: BlockGeometry) -> PagedRows {
+        PagedRows { table: BlockTable::new(pool), geo, rows: 0 }
+    }
+
+    /// Winnow one dense row into the tail block (leasing a fresh block at
+    /// every `block_tokens` boundary).
+    pub fn push_pruned(&mut self, dense: &[f32], k: usize, mode: StorageMode) {
+        let bt = self.geo.block_tokens;
+        if self.rows % bt == 0 {
+            let cap = self.geo.sparse_float_capacity();
+            let b = self.table.push_block();
+            b.vals.reserve(cap);
+            b.idx.reserve(cap);
+            b.offsets.reserve(bt);
+            b.nnz.reserve(bt);
+        }
+        let b = self.table.last_mut().unwrap();
+        let nnz = winnow_into(dense, k, mode, self.geo.lanes, &mut b.vals, &mut b.idx);
+        b.offsets.push(b.vals.len() as u32);
+        b.nnz.push(nnz as u32);
+        b.bytes += mode.vector_bytes(nnz);
+        self.rows += 1;
+    }
+
+    /// Rows stored across all blocks.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Real (unpadded) nnz of row `r`.
+    pub fn nnz(&self, r: usize) -> usize {
+        let bt = self.geo.block_tokens;
+        self.table.blocks()[r / bt].nnz[r % bt] as usize
+    }
+
+    /// Live `(vals, idx)` entries of row `r` (padding excluded), for
+    /// tests and reconstruction.
+    pub fn row(&self, r: usize) -> (&[f32], &[u16]) {
+        let bt = self.geo.block_tokens;
+        let b = &self.table.blocks()[r / bt];
+        let local = r % bt;
+        let start = b.offsets[local] as usize;
+        let live = b.nnz[local] as usize;
+        (&b.vals[start..start + live], &b.idx[start..start + live])
+    }
+
+    /// Accounted (Eq. 1) bytes — per-block real-nnz sums.
+    pub fn storage_bytes(&self) -> usize {
+        self.table.total_bytes()
+    }
+
+    /// The stream's block-table row (pool block ids in order).
+    pub fn block_ids(&self) -> Vec<u32> {
+        self.table.block_ids()
+    }
+
+    /// Blocks currently leased by this stream.
+    pub fn block_count(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Fused CSR scores + running max across all blocks, oldest row
+    /// first; one score pushed per row.  Per-block maxima fold with
+    /// `max`, which equals the contiguous store's single-pass max.
+    pub fn scores_max_into_with(
+        &self,
+        ks: Kernels,
+        q: &[f32],
+        scale: f32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for b in self.table.blocks() {
+            let mb = ks.csr_scores_max_into(&b.vals, &b.idx, &b.offsets, scale, q, out);
+            m = m.max(mb);
+        }
+        m
+    }
+
+    /// Weighted scatter-add of every row (`out += Σ w[r] * row_r`),
+    /// slicing `w` block by block in global row order.
+    pub fn axpy_all_with(&self, ks: Kernels, w: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(w.len(), self.rows);
+        let mut r = 0;
+        for b in self.table.blocks() {
+            let n = b.rows();
+            ks.csr_axpy_all(&b.vals, &b.idx, &b.offsets, &w[r..r + n], out);
+            r += n;
+        }
+    }
+}
+
+/// The dense recency ring's slot array, paged: `ceil(cap / block_tokens)`
+/// blocks leased up front, each holding `block_tokens` rows of `d_head`
+/// floats in `vals`.  Pure storage — FIFO state (`head`, `buf_len`) lives
+/// on [`PagedHybridCache`], shared by the key and value rings exactly as
+/// in the contiguous cache.
+pub struct PagedRing {
+    table: BlockTable,
+    geo: BlockGeometry,
+}
+
+impl PagedRing {
+    pub fn new(pool: Arc<BlockPool>, geo: BlockGeometry, cap: usize) -> PagedRing {
+        let mut table = BlockTable::new(pool);
+        let floats = geo.dense_floats();
+        for _ in 0..cap.div_ceil(geo.block_tokens) {
+            let b = table.push_block();
+            b.vals.resize(floats, 0.0);
+        }
+        PagedRing { table, geo }
+    }
+
+    pub fn row(&self, slot: usize) -> &[f32] {
+        let bt = self.geo.block_tokens;
+        let d = self.geo.d_head;
+        let off = (slot % bt) * d;
+        &self.table.blocks()[slot / bt].vals[off..off + d]
+    }
+
+    pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
+        let bt = self.geo.block_tokens;
+        let d = self.geo.d_head;
+        let off = (slot % bt) * d;
+        &mut self.table.get_mut(slot / bt).vals[off..off + d]
+    }
+
+    pub fn block_count(&self) -> usize {
+        self.table.len()
+    }
+}
+
+/// The hybrid cache of Algorithm 1 over pool blocks — same FIFO
+/// semantics, same winnow, same accounting as
+/// [`crate::swan::HybridCache`], but every byte lives in fixed-size
+/// leased blocks so sequences can be preempted and admitted at block
+/// granularity.  One instance serves one (layer, kv-head) pair of one
+/// sequence; all four streams (k/v × sparse/ring) lease from the same
+/// pool.
+pub struct PagedHybridCache {
+    pub params: SwanParams,
+    d_h: usize,
+    pub k_sparse: PagedRows,
+    pub v_sparse: PagedRows,
+    k_ring: PagedRing,
+    v_ring: PagedRing,
+    /// Ring slot of the oldest live row (0 when empty).
+    head: usize,
+    buf_len: usize,
+}
+
+impl PagedHybridCache {
+    pub fn new(
+        d_h: usize,
+        params: SwanParams,
+        block_tokens: usize,
+        pool: Arc<BlockPool>,
+    ) -> PagedHybridCache {
+        let mut params = params;
+        params.lanes = params.resolved_lanes();
+        let geo = BlockGeometry::new(block_tokens, d_h, params.lanes);
+        PagedHybridCache {
+            params,
+            d_h,
+            k_sparse: PagedRows::new(pool.clone(), geo),
+            v_sparse: PagedRows::new(pool.clone(), geo),
+            k_ring: PagedRing::new(pool.clone(), geo, params.buffer),
+            v_ring: PagedRing::new(pool, geo, params.buffer),
+            head: 0,
+            buf_len: 0,
+        }
+    }
+
+    pub fn d_h(&self) -> usize {
+        self.d_h
+    }
+
+    pub fn buffer_len(&self) -> usize {
+        self.buf_len
+    }
+
+    pub fn sparse_len(&self) -> usize {
+        self.k_sparse.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf_len + self.k_sparse.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocks this cache currently leases (all four streams).
+    pub fn leased_blocks(&self) -> usize {
+        self.k_sparse.block_count()
+            + self.v_sparse.block_count()
+            + self.k_ring.block_count()
+            + self.v_ring.block_count()
+    }
+
+    pub fn set_k_active(&mut self, k_keys: usize, k_vals: usize) {
+        self.params.k_active_keys = k_keys.min(self.d_h);
+        self.params.k_active_vals = k_vals.min(self.d_h);
+    }
+
+    /// Mirror of [`crate::swan::HybridCache::append`]: fill the ring,
+    /// winnow the oldest row out on overflow.
+    pub fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        debug_assert_eq!(k_hat.len(), self.d_h);
+        debug_assert_eq!(v_hat.len(), self.d_h);
+        let cap = self.params.buffer;
+        if cap == 0 {
+            self.k_sparse.push_pruned(k_hat, self.params.k_active_keys, self.params.mode);
+            self.v_sparse.push_pruned(v_hat, self.params.k_active_vals, self.params.mode);
+            return;
+        }
+        if self.buf_len == cap {
+            self.evict_oldest();
+        }
+        let slot = (self.head + self.buf_len) % cap;
+        self.k_ring.row_mut(slot).copy_from_slice(k_hat);
+        self.v_ring.row_mut(slot).copy_from_slice(v_hat);
+        self.buf_len += 1;
+    }
+
+    fn evict_oldest(&mut self) {
+        debug_assert!(self.buf_len > 0);
+        self.k_sparse.push_pruned(
+            self.k_ring.row(self.head),
+            self.params.k_active_keys,
+            self.params.mode,
+        );
+        self.v_sparse.push_pruned(
+            self.v_ring.row(self.head),
+            self.params.k_active_vals,
+            self.params.mode,
+        );
+        self.head = (self.head + 1) % self.params.buffer;
+        self.buf_len -= 1;
+    }
+
+    /// Mirror of [`crate::swan::HybridCache::load_prefill`]: spill
+    /// existing ring rows FIFO, winnow the incoming head straight to
+    /// sparse, copy the tail into ring slots.
+    pub fn load_prefill(&mut self, k_hats: &[f32], v_hats: &[f32]) {
+        let d = self.d_h;
+        let n = k_hats.len() / d;
+        debug_assert_eq!(k_hats.len(), n * d);
+        debug_assert_eq!(v_hats.len(), n * d);
+        let cap = self.params.buffer;
+        let spill = (self.buf_len + n).saturating_sub(cap);
+        let spill_old = spill.min(self.buf_len);
+        for _ in 0..spill_old {
+            self.evict_oldest();
+        }
+        let spill_new = spill - spill_old;
+        for t in 0..spill_new {
+            self.k_sparse.push_pruned(
+                &k_hats[t * d..(t + 1) * d],
+                self.params.k_active_keys,
+                self.params.mode,
+            );
+            self.v_sparse.push_pruned(
+                &v_hats[t * d..(t + 1) * d],
+                self.params.k_active_vals,
+                self.params.mode,
+            );
+        }
+        for t in spill_new..n {
+            let slot = (self.head + self.buf_len) % cap;
+            self.k_ring.row_mut(slot).copy_from_slice(&k_hats[t * d..(t + 1) * d]);
+            self.v_ring.row_mut(slot).copy_from_slice(&v_hats[t * d..(t + 1) * d]);
+            self.buf_len += 1;
+        }
+    }
+
+    /// Serving-accounting bytes: per-block real-nnz Eq. 1 sums for the
+    /// sparse streams, the f16 convention for live ring rows — the same
+    /// total the contiguous cache reports.
+    pub fn storage_bytes(&self) -> usize {
+        let sparse = self.k_sparse.storage_bytes() + self.v_sparse.storage_bytes();
+        let dense = 2 * self.buf_len * self.d_h * 2; // k+v, f16
+        sparse + dense
+    }
+
+    pub fn dense_equiv_bytes(&self) -> usize {
+        2 * self.len() * self.d_h * 2
+    }
+
+    /// Read-only attention via the shared generic walk.
+    pub fn attend(
+        &self,
+        q_hat: &[f32],
+        k_hat_cur: &[f32],
+        v_hat_cur: &[f32],
+        scores: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        swan_attend(q_hat, self, k_hat_cur, v_hat_cur, scores, out);
+    }
+}
+
+impl SwanAttendable for PagedHybridCache {
+    fn d_h(&self) -> usize {
+        PagedHybridCache::d_h(self)
+    }
+
+    fn sparse_len(&self) -> usize {
+        PagedHybridCache::sparse_len(self)
+    }
+
+    fn buffer_len(&self) -> usize {
+        PagedHybridCache::buffer_len(self)
+    }
+
+    fn k_scores_max_into(&self, ks: Kernels, q: &[f32], scale: f32, out: &mut Vec<f32>) -> f32 {
+        self.k_sparse.scores_max_into_with(ks, q, scale, out)
+    }
+
+    fn for_each_ring_k(&self, mut f: impl FnMut(&[f32])) {
+        let cap = self.params.buffer;
+        for t in 0..self.buf_len {
+            f(self.k_ring.row((self.head + t) % cap));
+        }
+    }
+
+    fn v_axpy_all(&self, ks: Kernels, w: &[f32], out: &mut [f32]) {
+        self.v_sparse.axpy_all_with(ks, w, out);
+    }
+
+    fn for_each_ring_v(&self, mut f: impl FnMut(&[f32])) {
+        let cap = self.params.buffer;
+        for t in 0..self.buf_len {
+            f(self.v_ring.row((self.head + t) % cap));
+        }
+    }
+}
+
+/// SWAN as a [`CachePolicy`] over the paged cache — the pool-mode
+/// counterpart of [`crate::kvcache::SwanCache`], result-identical to it
+/// token for token.
+pub struct PagedSwanCache {
+    cache: PagedHybridCache,
+    seen: usize,
+}
+
+impl PagedSwanCache {
+    pub fn new(
+        d_h: usize,
+        params: SwanParams,
+        block_tokens: usize,
+        pool: Arc<BlockPool>,
+    ) -> PagedSwanCache {
+        PagedSwanCache { cache: PagedHybridCache::new(d_h, params, block_tokens, pool), seen: 0 }
+    }
+
+    pub fn set_k_active(&mut self, k_keys: usize, k_vals: usize) {
+        self.cache.set_k_active(k_keys, k_vals);
+    }
+
+    pub fn inner(&self) -> &PagedHybridCache {
+        &self.cache
+    }
+}
+
+impl CachePolicy for PagedSwanCache {
+    fn append(&mut self, k_hat: &[f32], v_hat: &[f32]) {
+        self.cache.append(k_hat, v_hat);
+        self.seen += 1;
+    }
+
+    fn attend(&mut self, q_hat: &[f32], k_cur: &[f32], v_cur: &[f32], out: &mut [f32]) {
+        let mut scores = Vec::with_capacity(self.cache.len() + 1);
+        self.cache.attend(q_hat, k_cur, v_cur, &mut scores, out);
+    }
+
+    fn attend_with(
+        &mut self,
+        q_hat: &[f32],
+        k_cur: &[f32],
+        v_cur: &[f32],
+        scratch: &mut AttentionScratch,
+        out: &mut [f32],
+    ) {
+        self.cache.attend(q_hat, k_cur, v_cur, &mut scratch.scores, out);
+    }
+
+    fn load_history(&mut self, k_flat: &[f32], v_flat: &[f32], d: usize, _mass: Option<&[f32]>) {
+        if d == 0 {
+            return;
+        }
+        self.cache.load_prefill(k_flat, v_flat);
+        self.seen += k_flat.len() / d;
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.cache.storage_bytes()
+    }
+
+    fn retained_tokens(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn seen_tokens(&self) -> usize {
+        self.seen
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "swan-paged-{} k={}/{} bt={} blk={}",
+            self.cache.params.mode.label(),
+            self.cache.params.k_active_keys,
+            self.cache.params.k_active_vals,
+            self.cache.params.buffer,
+            self.cache.k_sparse.geo.block_tokens
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::swan::HybridCache;
+    use crate::util::Pcg64;
+
+    fn pool() -> Arc<BlockPool> {
+        Arc::new(BlockPool::new(usize::MAX))
+    }
+
+    /// Paged and contiguous caches stay bit-identical through appends —
+    /// counts, Eq. 1 bytes, and attention outputs — including a runtime
+    /// k change partway through.
+    #[test]
+    fn paged_matches_contiguous_through_appends() {
+        let d = 32;
+        let p = pool();
+        let params = SwanParams::new(8, 3, crate::sparse::StorageMode::F16);
+        let mut paged = PagedHybridCache::new(d, params, 4, p.clone());
+        let mut flat = HybridCache::new(d, params);
+        let mut r = Pcg64::new(9);
+        for i in 0..25 {
+            if i == 12 {
+                paged.set_k_active(5, 3);
+                flat.set_k_active(5, 3);
+            }
+            let k = r.normal_vec(d);
+            let v = r.normal_vec(d);
+            paged.append(&k, &v);
+            flat.append(&k, &v);
+            assert_eq!(paged.len(), flat.len());
+            assert_eq!(paged.sparse_len(), flat.sparse_len());
+            assert_eq!(paged.buffer_len(), flat.buffer_len());
+            assert_eq!(paged.storage_bytes(), flat.storage_bytes(), "step {i}");
+
+            let q = r.normal_vec(d);
+            let kc = r.normal_vec(d);
+            let vc = r.normal_vec(d);
+            let mut a = vec![0.0; d];
+            let mut b = vec![0.0; d];
+            let mut s = Vec::new();
+            paged.attend(&q, &kc, &vc, &mut s, &mut a);
+            crate::swan::swan_attention(&q, &flat, &kc, &vc, &mut b);
+            assert_eq!(a, b, "attention diverged at step {i}");
+        }
+        // sparse rows match entry-for-entry
+        for rix in 0..paged.sparse_len() {
+            let (vals, idx) = paged.k_sparse.row(rix);
+            assert_eq!(vals, flat.k_sparse.row(rix).0, "row {rix}");
+            assert_eq!(idx, flat.k_sparse.row(rix).1, "row {rix}");
+            assert_eq!(paged.k_sparse.nnz(rix), flat.k_sparse.nnz(rix));
+        }
+        drop(paged);
+        assert_eq!(p.leased(), 0, "drop must give every block back");
+        p.check_invariants().unwrap();
+    }
+
+    /// Bulk prefill load matches the contiguous bulk path (which itself
+    /// matches per-token appends).
+    #[test]
+    fn paged_load_prefill_matches_contiguous() {
+        let d = 16;
+        let p = pool();
+        let params = SwanParams::new(6, 4, crate::sparse::StorageMode::F8);
+        let mut paged = PagedHybridCache::new(d, params, 3, p.clone());
+        let mut flat = HybridCache::new(d, params);
+        let mut r = Pcg64::new(10);
+        // non-empty start, then a bulk load that spills both old and new
+        for _ in 0..2 {
+            let k = r.normal_vec(d);
+            let v = r.normal_vec(d);
+            paged.append(&k, &v);
+            flat.append(&k, &v);
+        }
+        let n = 11;
+        let ks = r.normal_vec(n * d);
+        let vs = r.normal_vec(n * d);
+        paged.load_prefill(&ks, &vs);
+        flat.load_prefill(&ks, &vs);
+        assert_eq!(paged.len(), flat.len());
+        assert_eq!(paged.storage_bytes(), flat.storage_bytes());
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        let mut s = Vec::new();
+        paged.attend(&q, &kc, &vc, &mut s, &mut a);
+        crate::swan::swan_attention(&q, &flat, &kc, &vc, &mut b);
+        assert_eq!(a, b);
+    }
+
+    /// Block math: ring blocks lease up front, sparse blocks lease one
+    /// per `block_tokens` evictions, and the analytic `seq_blocks` rate
+    /// predicts the lease count exactly.
+    #[test]
+    fn lease_counts_follow_seq_blocks() {
+        let d = 8;
+        let bt = 2;
+        let buffer = 3;
+        let p = pool();
+        let params = SwanParams::new(4, buffer, crate::sparse::StorageMode::F16);
+        let mut c = PagedHybridCache::new(d, params, bt, p.clone());
+        // ring: ceil(3/2) = 2 blocks per stream, 2 ring streams
+        assert_eq!(p.leased(), 2 * 2);
+        let mut r = Pcg64::new(11);
+        for t in 1..=9 {
+            c.append(&r.normal_vec(d), &r.normal_vec(d));
+            // one (layer, head) pair = 1 "layer" x 1 "kv head" stream set
+            assert_eq!(
+                c.leased_blocks(),
+                super::super::seq_blocks(t, buffer, bt, 1, 1) / 2,
+                "token {t}"
+            );
+            assert_eq!(p.leased(), c.leased_blocks());
+        }
+        drop(c);
+        assert_eq!(p.leased(), 0);
+    }
+
+    /// The policy adapter is result-identical to the contiguous SwanCache.
+    #[test]
+    fn paged_policy_matches_swan_cache() {
+        let d = 16;
+        let p = pool();
+        let params = SwanParams::new(5, 2, crate::sparse::StorageMode::F16);
+        let mut paged = PagedSwanCache::new(d, params, 4, p);
+        let mut flat = crate::kvcache::SwanCache::new(d, params);
+        let mut r = Pcg64::new(12);
+        for _ in 0..20 {
+            let k = r.normal_vec(d);
+            let v = r.normal_vec(d);
+            paged.append(&k, &v);
+            flat.append(&k, &v);
+        }
+        assert_eq!(paged.seen_tokens(), flat.seen_tokens());
+        assert_eq!(paged.retained_tokens(), flat.retained_tokens());
+        assert_eq!(paged.storage_bytes(), flat.storage_bytes());
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        paged.attend(&q, &kc, &vc, &mut a);
+        flat.attend(&q, &kc, &vc, &mut b);
+        assert_eq!(a, b);
+        assert!(paged.label().contains("paged"));
+    }
+}

@@ -60,6 +60,9 @@ fn write_done(
     if let Some(requested) = resp.stats.clamped_from {
         stat.push_str(&format!(" requested={requested}"));
     }
+    if let Some(requested) = resp.stats.truncated_prompt_from {
+        stat.push_str(&format!(" requested_prompt={requested}"));
+    }
     if resp.stats.cancelled {
         stat.push_str(" cancelled=1");
     }

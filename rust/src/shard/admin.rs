@@ -43,25 +43,44 @@ pub fn fleet_stats(shards: &[ShardHandle], policy: &str) -> String {
 /// Sum every shard's counters into the fleet totals block.
 pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> String {
     let (mut submitted, mut completed, mut rejected) = (0u64, 0u64, 0u64);
+    let (mut cancelled, mut preempted) = (0u64, 0u64);
     let (mut prefill, mut decode) = (0u64, 0u64);
     let (mut cache, mut dense) = (0usize, 0usize);
+    let (mut pool_total, mut pool_leased) = (0usize, 0usize);
+    let mut pool_unbounded = false;
     for m in metrics {
         submitted += m.requests_submitted.load(Ordering::Relaxed);
         completed += m.requests_completed.load(Ordering::Relaxed);
         rejected += m.requests_rejected.load(Ordering::Relaxed);
+        cancelled += m.requests_cancelled.load(Ordering::Relaxed);
+        preempted += m.requests_preempted.load(Ordering::Relaxed);
         prefill += m.prefill_tokens.load(Ordering::Relaxed);
         decode += m.decode_tokens.load(Ordering::Relaxed);
         cache += m.cache_bytes.load(Ordering::Relaxed);
         dense += m.dense_equiv_bytes.load(Ordering::Relaxed);
+        let pt = m.pool_blocks_total.load(Ordering::Relaxed);
+        if pt == usize::MAX {
+            pool_unbounded = true;
+        } else {
+            pool_total += pt;
+        }
+        pool_leased += m.pool_blocks_leased.load(Ordering::Relaxed);
     }
     let saving = if dense > 0 { 100.0 * (1.0 - cache as f64 / dense as f64) } else { 0.0 };
-    format!(
-        "fleet requests: submitted={submitted} completed={completed} rejected={rejected}\n\
+    let mut out = format!(
+        "fleet requests: submitted={submitted} completed={completed} rejected={rejected} \
+         cancelled={cancelled} preempted={preempted}\n\
          fleet tokens: prefill={prefill} decode={decode}\n\
          fleet kv-cache: {} live (dense-equiv {}, saving {saving:.1}%)\n",
         human_bytes(cache),
         human_bytes(dense),
-    )
+    );
+    if pool_total > 0 || pool_unbounded {
+        let target =
+            if pool_unbounded { "unbounded".to_string() } else { pool_total.to_string() };
+        out.push_str(&format!("fleet pool: blocks leased={pool_leased} target={target}\n"));
+    }
+    out
 }
 
 #[cfg(test)]

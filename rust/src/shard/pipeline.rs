@@ -34,7 +34,7 @@
 //! the PJRT graphs instead — across that backend boundary outputs agree
 //! to float tolerance, not bit-for-bit.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -49,6 +49,7 @@ use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response
 use crate::coordinator::scheduler::Scheduler;
 use crate::kvcache::PolicyKind;
 use crate::model::transformer::{SequenceState, StageInput, SwanModel};
+use crate::pool::{pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache};
 use crate::shard::shard::{ShardCmd, ShardHandle, ShardStatus};
 use crate::swan::batch::WorkerPool;
 use crate::util::Pcg64;
@@ -201,10 +202,13 @@ struct StageCtx {
     /// Direct line to the coordinator, used only by the [`FailureGuard`]
     /// (results travel the chain; failure must not).
     events: mpsc::Sender<GroupEvent>,
+    /// This stage's block pool (`--pool`): every sequence cache this
+    /// stage builds leases its storage here instead of owning it.
+    block_pool: Option<Arc<BlockPool>>,
 }
 
 fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
-    let StageCtx { group, stage, layers, model, cfg, next, status, events } = ctx;
+    let StageCtx { group, stage, layers, model, cfg, next, status, events, block_pool } = ctx;
     let mut guard = FailureGuard { stage, events, armed: true };
     let first = layers.start == 0;
     let mut pool = WorkerPool::new(cfg.decode_workers);
@@ -213,8 +217,25 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
         match cmd {
             StageCmd::Prefill { seq, mut h, k_active } => {
                 let pf = model.prefill_layers(&mut h, layers.clone(), &mut pool);
-                let mut st =
-                    SequenceState::for_layers(&model, policy_kind(&cfg, k_active), layers.len());
+                let mut st = match &block_pool {
+                    // paged path: same SWAN policy, storage leased from
+                    // the stage pool block by block (bit-identical to
+                    // the contiguous caches; see `crate::pool`)
+                    Some(bp) => {
+                        let params = crate::swan::hybrid_cache::SwanParams::new(
+                            k_active, cfg.buffer, cfg.mode,
+                        );
+                        let (d_h, bt) = (model.cfg.d_head, cfg.block_tokens);
+                        SequenceState::for_layers_with(&model, layers.len(), || {
+                            Box::new(PagedSwanCache::new(d_h, params, bt, bp.clone()))
+                        })
+                    }
+                    None => SequenceState::for_layers(
+                        &model,
+                        policy_kind(&cfg, k_active),
+                        layers.len(),
+                    ),
+                };
                 st.load_prefill(&pf);
                 seqs.insert(seq, st);
                 let sent = match &next {
@@ -286,8 +307,13 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
             }
             StageCmd::Stats { reply } => {
                 let kv: usize = seqs.values().map(|s| s.storage_bytes()).sum();
+                // appended last so existing line-prefix matchers hold
+                let blocks = match &block_pool {
+                    Some(bp) => format!(" blocks={}", bp.leased()),
+                    None => String::new(),
+                };
                 let _ = reply.send(format!(
-                    "stage {stage}: layers {}..{} k_active={} queued={} seqs={} kv={}\n",
+                    "stage {stage}: layers {}..{} k_active={} queued={} seqs={} kv={}{blocks}\n",
                     layers.start,
                     layers.end,
                     status.k_active.load(Ordering::Relaxed),
@@ -325,14 +351,38 @@ struct GroupSeq {
     k_active: usize,
     /// Prompt tokens actually prefilled (>= 1; empty prompts use a dummy).
     prompt_len: usize,
+    /// Replay-resume queue of a preemption-resumed sequence: tokens it
+    /// already produced, re-inserted by forced decode steps (no rng
+    /// draw, no emission, no stats) until the cache state catches up to
+    /// where preemption interrupted it.  Empty for normal sequences.
+    replay: VecDeque<u32>,
     finished: bool,
 }
 
 impl GroupSeq {
-    /// Tokens resident in the stage caches right now.
+    /// Tokens resident in the stage caches right now: the prompt plus
+    /// one token per decode forward that has run.  Every produced token
+    /// except the pending `next_token` has been forwarded — minus the
+    /// replay backlog, whose tokens exist in `produced` but have not
+    /// been re-inserted yet after a preemption.
     fn cached_tokens(&self) -> usize {
-        self.prompt_len + self.stats.decode_steps
+        self.prompt_len + self.produced.len() - 1 - self.replay.len()
     }
+}
+
+/// Coordinator-side state carried across a preemption: everything needed
+/// to resume the sequence bit-identically once its request (requeued at
+/// the scheduler front) is re-admitted.  The stage caches are NOT
+/// carried — they are rebuilt by re-prefilling the prompt and replaying
+/// `produced` as forced decode steps, which reconstructs the exact
+/// winnowed state an uninterrupted run would hold.
+struct Carry {
+    produced: Vec<u32>,
+    rng: Pcg64,
+    stats: RequestStats,
+    /// Admission-time compression level — resume must reuse it, not the
+    /// group's current level, or the rebuilt cache would diverge.
+    k_active: usize,
 }
 
 struct Group {
@@ -351,6 +401,17 @@ struct Group {
     /// Compression level for newly admitted sequences.
     k_now: usize,
     next_id: u64,
+    /// Per-stage block pools (`--pool`; empty otherwise).  Leases are
+    /// elastic — the *group* block budget is enforced analytically via
+    /// [`seq_blocks`], the pools just provide recycled storage and the
+    /// leased-block gauges.
+    stage_pools: Vec<Arc<BlockPool>>,
+    /// Group-wide pool block budget (`usize::MAX` = unbounded).
+    total_blocks: usize,
+    /// Preempted sequences parked between eviction and re-admission,
+    /// keyed by request id (the request itself waits at the scheduler
+    /// front; the sink stays in `sinks`).
+    preempted: HashMap<u64, Carry>,
 }
 
 impl Group {
@@ -386,6 +447,29 @@ impl Group {
 
     fn live_bytes(&self) -> usize {
         self.active.iter().map(|s| self.seq_bytes(s)).sum()
+    }
+
+    /// Whether this group serves out of the paged block pool.
+    fn pool_on(&self) -> bool {
+        !self.stage_pools.is_empty()
+    }
+
+    /// Pool blocks a sequence of `tokens` cached tokens accounts for
+    /// across every stage (the analytic [`seq_blocks`] rate — exact, see
+    /// `tests/pool.rs`).
+    fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        let mc = &self.model.cfg;
+        seq_blocks(tokens, self.cfg.buffer, self.cfg.block_tokens, mc.n_layers, mc.n_kv_heads)
+    }
+
+    /// Block-accounted live load (pool mode's admission unit).
+    fn live_blocks(&self) -> usize {
+        self.active.iter().map(|s| self.blocks_for_tokens(s.cached_tokens())).sum()
+    }
+
+    /// Blocks physically leased right now, across every stage pool.
+    fn leased_blocks(&self) -> usize {
+        self.stage_pools.iter().map(|p| p.leased()).sum()
     }
 
     fn dense_equiv_bytes(&self) -> usize {
@@ -438,6 +522,10 @@ impl Group {
         status.k_active.store(self.k_now, Ordering::Relaxed);
         self.metrics.cache_bytes.store(live, Ordering::Relaxed);
         self.metrics.dense_equiv_bytes.store(self.dense_equiv_bytes(), Ordering::Relaxed);
+        if self.pool_on() {
+            self.metrics.pool_blocks_total.store(self.total_blocks, Ordering::Relaxed);
+            self.metrics.pool_blocks_leased.store(self.leased_blocks(), Ordering::Relaxed);
+        }
     }
 
     /// Broadcast a retune to every stage and gather the acks; returns the
@@ -463,26 +551,36 @@ impl Group {
     /// Admit every currently-admissible request: push its prompt through
     /// the stage chain, sample the first token from the returned logits.
     fn admit(&mut self) -> anyhow::Result<()> {
-        // cancelled-while-queued requests: purge and answer immediately
+        // cancelled-while-queued requests: purge and answer immediately.
+        // A preempted sequence cancelled while waiting to resume answers
+        // with everything it produced before preemption.
         for p in self.scheduler.take_cancelled() {
-            let stats = RequestStats {
-                queue_time: p.enqueued.elapsed(),
-                cancelled: true,
-                clamped_from: p.req.clamped_from,
-                ..Default::default()
+            let (tokens, mut stats) = match self.preempted.remove(&p.req.id) {
+                Some(c) => (c.produced, c.stats),
+                None => (Vec::new(), RequestStats::default()),
             };
+            stats.queue_time += p.enqueued.elapsed();
+            stats.cancelled = true;
+            stats.clamped_from = p.req.clamped_from;
+            // a queued purge is a cancellation AND a completion (every
+            // submitted request resolves exactly once)
+            self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
             self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
             if let Some(tx) = self.sinks.remove(&p.req.id) {
                 let _ = tx.send(Event::Done(Response {
                     id: p.req.id,
-                    tokens: Vec::new(),
-                    text: String::new(),
+                    text: decode_tokens(&tokens),
+                    tokens,
                     stats,
                 }));
             }
         }
         loop {
-            let live = self.live_bytes();
+            let pool_on = self.pool_on();
+            // pool mode admits in BLOCK units against the block budget
+            // (the scheduler's `mem_budget` was constructed in blocks);
+            // the classic path projects bytes exactly as before
+            let live = if pool_on { self.live_blocks() } else { self.live_bytes() };
             let buf = self.projection_buffer();
             // projection locals (the closure must not re-borrow self
             // while admit_next holds the scheduler mutably); each
@@ -493,11 +591,26 @@ impl Group {
             };
             let mode = self.cfg.mode;
             let k_now = self.k_now;
+            let (bt, buffer) = (self.cfg.block_tokens, self.cfg.buffer);
             let proj = |req: &Request| {
-                let k = request_k_for(req, dh, k_now);
-                let (sparse_b, dense_b) =
-                    crate::sparse::memory::token_byte_rates(nl, nkv, dh, mode, k);
-                Scheduler::projected_bytes(req.prompt.len(), req.params.max_new, sparse_b, dense_b, buf)
+                if pool_on {
+                    // whole allocation granules for the full lifetime
+                    // (prompt + requested output); k does not change the
+                    // block count, only how full each sparse block is
+                    let tokens = req.prompt.len().max(1) + req.params.max_new;
+                    seq_blocks(tokens, buffer, bt, nl, nkv)
+                } else {
+                    let k = request_k_for(req, dh, k_now);
+                    let (sparse_b, dense_b) =
+                        crate::sparse::memory::token_byte_rates(nl, nkv, dh, mode, k);
+                    Scheduler::projected_bytes(
+                        req.prompt.len(),
+                        req.params.max_new,
+                        sparse_b,
+                        dense_b,
+                        buf,
+                    )
+                }
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
                 break;
@@ -505,7 +618,14 @@ impl Group {
             let queue_time = pending.enqueued.elapsed();
             let req = pending.req;
             let rid = req.id;
-            let k_seq = self.request_k(&req);
+            // a preempted sequence resumes at its admission-time k (a
+            // retune between preemption and resume must not change the
+            // rebuilt cache), fresh requests at the current level
+            let carry = self.preempted.remove(&rid);
+            let k_seq = match &carry {
+                Some(c) => c.k_active,
+                None => self.request_k(&req),
+            };
             let t0 = Instant::now();
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
             let h = self.model.embed_prompt(tokens);
@@ -520,6 +640,33 @@ impl Group {
                     Err(_) => anyhow::bail!("pipeline group {}: stage chain died", self.id),
                 }
             };
+            if let Some(mut c) = carry {
+                // replay-resume: the prompt is back in the stage caches;
+                // the tokens produced before preemption re-insert via
+                // forced decode steps (see `decode_iteration`).  The
+                // prefill-sampled first token was drawn (and delivered)
+                // in the original pass — do not re-sample or re-emit.
+                c.stats.queue_time += queue_time;
+                let re_prefill = t0.elapsed();
+                c.stats.prefill_time += re_prefill;
+                self.metrics.prefill_ns.record(re_prefill.as_nanos() as f64);
+                self.metrics.prefill_tokens.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+                let mut replay: VecDeque<u32> = c.produced.iter().copied().collect();
+                let next_token =
+                    replay.pop_front().expect("a preempted sequence produced >= 1 token");
+                self.active.push(GroupSeq {
+                    rng: c.rng,
+                    produced: c.produced,
+                    next_token,
+                    replay,
+                    stats: c.stats,
+                    k_active: k_seq,
+                    prompt_len: tokens.len(),
+                    finished: false,
+                    req,
+                });
+                continue;
+            }
             let mut stats =
                 RequestStats { queue_time, clamped_from: req.clamped_from, ..Default::default() };
             stats.prefill_time = t0.elapsed();
@@ -544,10 +691,34 @@ impl Group {
                 stats,
                 k_active: k_seq,
                 prompt_len: tokens.len(),
+                replay: VecDeque::new(),
                 finished: false,
                 req,
             });
         }
+        Ok(())
+    }
+
+    /// Preempt one running sequence to free its pool blocks: carry its
+    /// coordinator state aside, drop its stage caches (the Retire hop
+    /// releases every leased block), requeue its request at the
+    /// scheduler front, keep its sink.  On re-admission the carried
+    /// tokens replay as forced decode steps, so a resumed sequence's
+    /// output is bit-identical to an uninterrupted run.  Safe even for a
+    /// sequence that was itself mid-replay: `produced` and `rng` are
+    /// not touched while replaying, so the carry is always consistent.
+    fn preempt(&mut self, idx: usize) -> anyhow::Result<()> {
+        let seq = self.active.remove(idx);
+        let id = seq.req.id;
+        for s in &self.stages {
+            s.send(StageCmd::Retire { seqs: vec![id] })?;
+        }
+        self.metrics.requests_preempted.fetch_add(1, Ordering::Relaxed);
+        self.preempted.insert(
+            id,
+            Carry { produced: seq.produced, rng: seq.rng, stats: seq.stats, k_active: seq.k_active },
+        );
+        self.scheduler.requeue_front(seq.req);
         Ok(())
     }
 
@@ -569,6 +740,36 @@ impl Group {
                 if seq.next_token == stop {
                     seq.finished = true;
                 }
+            }
+        }
+
+        // pool mode: this iteration's appends grow every running
+        // sequence by one token — if that projects past the group's
+        // block budget, preempt the youngest running sequence(s) and
+        // requeue them instead of failing.  One running sequence is
+        // always allowed through, however large: with nothing else to
+        // evict, progress beats the budget (the same liveness call the
+        // admission-side idle escape makes), so preemption can at worst
+        // serialize the batch, never wedge it.
+        if self.pool_on() && self.total_blocks != usize::MAX {
+            loop {
+                let running: Vec<usize> =
+                    (0..self.active.len()).filter(|&i| !self.active[i].finished).collect();
+                if running.len() <= 1 {
+                    break;
+                }
+                let after: usize = self
+                    .active
+                    .iter()
+                    .map(|s| {
+                        let grow = usize::from(!s.finished);
+                        self.blocks_for_tokens(s.cached_tokens() + grow)
+                    })
+                    .sum();
+                if after <= self.total_blocks {
+                    break;
+                }
+                self.preempt(*running.last().unwrap())?;
             }
         }
 
@@ -597,6 +798,16 @@ impl Group {
             let step_time = t0.elapsed();
             for (&i, l) in ready.iter().zip(&logits) {
                 let seq = &mut self.active[i];
+                if let Some(tok) = seq.replay.pop_front() {
+                    // replay-resume: this forward re-inserted an
+                    // already-produced token, and the following token
+                    // was sampled before preemption too — take it from
+                    // the replay queue.  No rng draw, no produced push,
+                    // no emission, no stats: the original pass already
+                    // did all of that.
+                    seq.next_token = tok;
+                    continue;
+                }
                 let next = sample(l, &seq.req.params, &seq.produced, &mut seq.rng);
                 seq.next_token = next;
                 seq.produced.push(next);
@@ -631,6 +842,11 @@ impl Group {
             for seq in self.active.drain(..) {
                 if seq.finished {
                     done_ids.push(seq.req.id);
+                    if seq.req.cancel.is_cancelled() {
+                        // a mid-decode cancel is a cancellation AND a
+                        // completion, mirroring the queued-purge path
+                        self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
                     self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
                     let mut stats = seq.stats;
                     stats.cancelled = seq.req.cancel.is_cancelled();
@@ -670,6 +886,31 @@ impl Group {
             human_bytes(live),
             human_bytes(self.projected_load_bytes(live)),
         );
+        if self.pool_on() {
+            // internal fragmentation: rows the active set actually holds
+            // vs the row capacity of every leased block (ring blocks
+            // lease whole up front; sparse tail blocks fill gradually)
+            let leased = self.leased_blocks();
+            let mc = &self.model.cfg;
+            let used_rows: usize = self
+                .active
+                .iter()
+                .map(|s| 2 * mc.n_layers * mc.n_kv_heads * s.cached_tokens())
+                .sum();
+            let cap_rows = leased.saturating_mul(self.cfg.block_tokens);
+            let frag =
+                if cap_rows > 0 { 100.0 * (1.0 - used_rows as f64 / cap_rows as f64) } else { 0.0 };
+            let budget = if self.total_blocks == usize::MAX {
+                "unbounded".to_string()
+            } else {
+                self.total_blocks.to_string()
+            };
+            out.push_str(&format!(
+                "  pool: blocks leased={leased}/{budget} bt={} frag={frag:.1}% preempted_live={}\n",
+                self.cfg.block_tokens,
+                self.preempted.len(),
+            ));
+        }
         let mut pending = Vec::with_capacity(self.stages.len());
         for s in &self.stages {
             let (tx, rx) = mpsc::channel();
@@ -782,6 +1023,33 @@ pub fn launch_group(
     let ranges = partition_layers(model.cfg.n_layers, cfg.pipeline.max(1))?;
     let k_now = cfg.k_active.clamp(1, model.cfg.d_head);
 
+    // paged pool mode: size the group's block budget from its byte
+    // budget at the configured compression (Eq. 1 worst-of sparse/dense
+    // per block row), then give each stage its own pool with a target
+    // proportional to its layer count.  Targets are gauges — leases are
+    // elastic, and the budget is enforced analytically by the group
+    // coordinator in block units.
+    let pool_on = cfg.pool && !cfg.dense_baseline;
+    let (stage_pools, total_blocks) = if pool_on {
+        let mc = &model.cfg;
+        let total =
+            pool_blocks_for_budget(cfg.mem_budget, cfg.block_tokens, mc.d_head, cfg.mode, k_now);
+        let pools: Vec<Arc<BlockPool>> = ranges
+            .iter()
+            .map(|r| {
+                let target = if total == usize::MAX {
+                    usize::MAX
+                } else {
+                    (total / mc.n_layers).saturating_mul(r.len()).max(1)
+                };
+                Arc::new(BlockPool::new(target))
+            })
+            .collect();
+        (pools, total)
+    } else {
+        (Vec::new(), usize::MAX)
+    };
+
     // build the chain back to front so every stage knows its downstream
     let (ev_tx, ev_rx) = mpsc::channel();
     let mut stages: Vec<StageHandle> = Vec::with_capacity(ranges.len());
@@ -803,6 +1071,7 @@ pub fn launch_group(
             next: downstream,
             status: status.clone(),
             events: ev_tx.clone(),
+            block_pool: stage_pools.get(s).cloned(),
         };
         let join = std::thread::Builder::new()
             .name(format!("swan-stage-{id}-{s}"))
@@ -813,7 +1082,13 @@ pub fn launch_group(
     }
     stages.reverse();
 
-    let mut scheduler = Scheduler::new(cfg.max_batch, cfg.mem_budget);
+    // pool mode admits in BLOCK units (0 = unbounded either way)
+    let sched_budget = if pool_on {
+        if total_blocks == usize::MAX { 0 } else { total_blocks }
+    } else {
+        cfg.mem_budget
+    };
+    let mut scheduler = Scheduler::new(cfg.max_batch, sched_budget);
     scheduler.set_lookahead(cfg.admit_lookahead);
     if cfg.decode_workers > 0 {
         scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
@@ -831,6 +1106,9 @@ pub fn launch_group(
         sinks: HashMap::new(),
         k_now,
         next_id: 1,
+        stage_pools,
+        total_blocks,
+        preempted: HashMap::new(),
     };
 
     let status = Arc::new(ShardStatus::default());

@@ -7,6 +7,6 @@ pub mod topk;
 pub mod vector;
 
 pub use memory::{MemoryModel, StorageMode};
-pub use store::SparseStore;
+pub use store::{winnow_into, SparseStore};
 pub use topk::{topk_indices, topk_prune};
 pub use vector::SparseVec;

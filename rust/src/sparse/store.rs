@@ -29,6 +29,41 @@ use crate::sparse::memory::StorageMode;
 use crate::sparse::topk::topk_indices_select;
 use crate::util::fp::{quantize_f16, quantize_fp8};
 
+/// Winnow `dense` to its top-`k` dims and append the quantized
+/// (value, index) pairs — zero-padded to a multiple of `lane` — onto
+/// `vals`/`idx`.  Returns the *real* (unpadded) nnz written.
+///
+/// This is the ONE spelling of the winnow-quantize-pad step:
+/// [`SparseStore::push_pruned`] (contiguous CSR) and the block-pool's
+/// paged rows ([`crate::pool::paged_cache`]) both append through it, so a
+/// pool-backed row is bit-identical to the per-sequence store's row by
+/// construction.
+pub fn winnow_into(
+    dense: &[f32],
+    k: usize,
+    mode: StorageMode,
+    lane: usize,
+    vals: &mut Vec<f32>,
+    idx: &mut Vec<u16>,
+) -> usize {
+    let ki = topk_indices_select(dense, k);
+    for &i in &ki {
+        let v = dense[i as usize];
+        vals.push(match mode {
+            StorageMode::F16 => quantize_f16(v),
+            StorageMode::F8 => quantize_fp8(v),
+            StorageMode::F32 => v,
+        });
+        idx.push(i);
+    }
+    let pad = (lane - ki.len() % lane) % lane;
+    for _ in 0..pad {
+        vals.push(0.0);
+        idx.push(0);
+    }
+    ki.len()
+}
+
 /// Flat CSR store of winnowed rows, append-only.
 #[derive(Clone, Debug)]
 pub struct SparseStore {
@@ -102,24 +137,10 @@ impl SparseStore {
     /// Winnow `dense` to its top-`k` dims and append as a new row
     /// (zero-padded to the store's lane multiple).
     pub fn push_pruned(&mut self, dense: &[f32], k: usize, mode: StorageMode) {
-        let ki = topk_indices_select(dense, k);
-        for &i in &ki {
-            let v = dense[i as usize];
-            self.vals.push(match mode {
-                StorageMode::F16 => quantize_f16(v),
-                StorageMode::F8 => quantize_fp8(v),
-                StorageMode::F32 => v,
-            });
-            self.idx.push(i);
-        }
-        let pad = (self.lane - ki.len() % self.lane) % self.lane;
-        for _ in 0..pad {
-            self.vals.push(0.0);
-            self.idx.push(0);
-        }
+        let nnz = winnow_into(dense, k, mode, self.lane, &mut self.vals, &mut self.idx);
         self.offsets.push(self.vals.len() as u32);
-        self.nnz.push(ki.len() as u32);
-        self.bytes += mode.vector_bytes(ki.len());
+        self.nnz.push(nnz as u32);
+        self.bytes += mode.vector_bytes(nnz);
     }
 
     /// Row accessor: (values, indices) of the *live* entries (padding

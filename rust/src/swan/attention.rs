@@ -2,7 +2,76 @@
 //! 13-17) — the rust-native mirror of the L1 Pallas kernel, used by the
 //! experiment harness and as the reference the PJRT path is tested against.
 
+use crate::simd::Kernels;
 use crate::swan::hybrid_cache::HybridCache;
+
+/// A cache layout the decompression-free attention walk can run over.
+///
+/// Two implementations exist: the contiguous per-sequence
+/// [`HybridCache`] and the block-pool-backed
+/// [`crate::pool::PagedHybridCache`].  The generic [`swan_attend`] is the
+/// ONE spelling of Algorithm 1 lines 13-17; because every per-row
+/// operation (CSR score, ring dot, scatter-add) is independent and both
+/// layouts present rows in the same oldest-first order, the two layouts
+/// produce bit-identical outputs (locked by `tests/pool.rs`).
+///
+/// Not object-safe (the ring visitors take `impl FnMut`) — used via
+/// generics only.
+pub trait SwanAttendable {
+    fn d_h(&self) -> usize;
+    /// Rows in the winnowed (sparse) half, oldest first.
+    fn sparse_len(&self) -> usize;
+    /// Rows in the dense recency ring.
+    fn buffer_len(&self) -> usize;
+    /// Fused CSR scores + running max over the key store: push one score
+    /// per sparse row onto `out`, return the max pushed score
+    /// (`NEG_INFINITY` when there are no rows).
+    fn k_scores_max_into(&self, ks: Kernels, q: &[f32], scale: f32, out: &mut Vec<f32>) -> f32;
+    /// Visit every dense-ring key row, oldest first.
+    fn for_each_ring_k(&self, f: impl FnMut(&[f32]));
+    /// Weighted scatter-add of all sparse value rows: `out += Σ w[r] * row_r`.
+    fn v_axpy_all(&self, ks: Kernels, w: &[f32], out: &mut [f32]);
+    /// Visit every dense-ring value row, oldest first.
+    fn for_each_ring_v(&self, f: impl FnMut(&[f32]));
+}
+
+impl SwanAttendable for HybridCache {
+    fn d_h(&self) -> usize {
+        HybridCache::d_h(self)
+    }
+
+    fn sparse_len(&self) -> usize {
+        HybridCache::sparse_len(self)
+    }
+
+    fn buffer_len(&self) -> usize {
+        HybridCache::buffer_len(self)
+    }
+
+    fn k_scores_max_into(&self, ks: Kernels, q: &[f32], scale: f32, out: &mut Vec<f32>) -> f32 {
+        self.k_sparse.scores_max_into_with(ks, q, scale, out)
+    }
+
+    fn for_each_ring_k(&self, mut f: impl FnMut(&[f32])) {
+        let d = HybridCache::d_h(self);
+        let (b0, b1) = self.k_buffer();
+        for row in b0.chunks_exact(d).chain(b1.chunks_exact(d)) {
+            f(row);
+        }
+    }
+
+    fn v_axpy_all(&self, ks: Kernels, w: &[f32], out: &mut [f32]) {
+        self.v_sparse.axpy_all_with(ks, w, out);
+    }
+
+    fn for_each_ring_v(&self, mut f: impl FnMut(&[f32])) {
+        let d = HybridCache::d_h(self);
+        let (b0, b1) = self.v_buffer();
+        for row in b0.chunks_exact(d).chain(b1.chunks_exact(d)) {
+            f(row);
+        }
+    }
+}
 
 /// Compute one head's attention output for query `q_hat` over `cache`
 /// plus the current token's `(k_hat_cur, v_hat_cur)` (which Algorithm 1
@@ -39,6 +108,24 @@ pub fn swan_attention_scratch(
     scores: &mut Vec<f32>,
     out: &mut [f32],
 ) {
+    swan_attend(q_hat, cache, k_hat_cur, v_hat_cur, scores, out);
+}
+
+/// The generic decompression-free walk over any [`SwanAttendable`]
+/// layout: sparse scores fused with the running max, dense-ring dots,
+/// the current token, one max-free softmax, then the value accumulation
+/// (CSR scatter-add + ring axpys).  The exact operation sequence the
+/// contiguous path has always run — kernel calls, accumulation order and
+/// all — so any layout whose rows match the contiguous store's produces
+/// bit-identical outputs.
+pub fn swan_attend<C: SwanAttendable>(
+    q_hat: &[f32],
+    cache: &C,
+    k_hat_cur: &[f32],
+    v_hat_cur: &[f32],
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
     let ks = crate::simd::active();
     let d = cache.d_h();
     debug_assert_eq!(q_hat.len(), d);
@@ -50,17 +137,16 @@ pub fn swan_attention_scratch(
     scores.clear();
     scores.reserve(ns + nb + 1);
 
-    // sparse-dense mat-vec over the contiguous CSR store (no
-    // reconstruction, no per-row pointer chasing), fused with the
-    // softmax's running max so the score row is walked once
-    let mut m = cache.k_sparse.scores_max_into_with(ks, q_hat, scale, scores);
-    // dense ring buffer: oldest-first two-slice view, walked in place
-    let (kb0, kb1) = cache.k_buffer();
-    for row in kb0.chunks_exact(d).chain(kb1.chunks_exact(d)) {
+    // sparse-dense mat-vec over the CSR rows (no reconstruction, no
+    // per-row pointer chasing), fused with the softmax's running max so
+    // the score row is walked once
+    let mut m = cache.k_scores_max_into(ks, q_hat, scale, scores);
+    // dense ring buffer: oldest-first rows, walked in place
+    cache.for_each_ring_k(|row| {
         let s = ks.dot(row, q_hat) * scale;
         m = m.max(s);
         scores.push(s);
-    }
+    });
     // current token
     let s = ks.dot(k_hat_cur, q_hat) * scale;
     m = m.max(s);
@@ -69,11 +155,12 @@ pub fn swan_attention_scratch(
     ks.softmax_inplace_with_max(scores, m);
 
     out.iter_mut().for_each(|o| *o = 0.0);
-    cache.v_sparse.axpy_all_with(ks, &scores[..ns], out);
-    let (vb0, vb1) = cache.v_buffer();
-    for (t, row) in vb0.chunks_exact(d).chain(vb1.chunks_exact(d)).enumerate() {
+    cache.v_axpy_all(ks, &scores[..ns], out);
+    let mut t = 0;
+    cache.for_each_ring_v(|row| {
         ks.axpy(scores[ns + t], row, out);
-    }
+        t += 1;
+    });
     ks.axpy(scores[ns + nb], v_hat_cur, out);
 }
 

@@ -33,7 +33,7 @@ pub mod breakeven;
 pub mod hybrid_cache;
 pub mod projection;
 
-pub use attention::{swan_attention, swan_attention_scratch};
+pub use attention::{swan_attend, swan_attention, swan_attention_scratch, SwanAttendable};
 pub use batch::{AttentionScratch, WorkerPool};
 pub use breakeven::{breakeven_length, flops_std, flops_swan};
 pub use hybrid_cache::{HybridCache, SwanParams};

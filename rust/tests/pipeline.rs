@@ -315,6 +315,13 @@ fn cancel_retires_mid_decode_without_disturbing_batchmates() {
     assert!(!b_resp.stats.cancelled);
     let want = single_shard_reference(&[Request::from_text(2, "the bystander ", 12)]);
     assert_eq!(vec![(b_resp.id, b_resp.tokens)], want, "co-batched sequence was disturbed");
+    // the mid-decode cancel is counted (and the bystander is not)
+    let cancelled: u64 = router
+        .shards()
+        .iter()
+        .map(|s| s.metrics.requests_cancelled.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(cancelled, 1, "mid-decode cancel must increment requests_cancelled");
 }
 
 /// A cancel that lands while the request is still queued answers the
@@ -345,6 +352,13 @@ fn queued_cancel_answers_with_empty_cancelled_response() {
     assert!(b_resp.tokens.is_empty(), "queued cancel produces no tokens");
     a.cancel();
     assert!(a.wait().unwrap().stats.cancelled);
+    // both paths count: B through the queued purge, A mid-decode
+    let cancelled: u64 = router
+        .shards()
+        .iter()
+        .map(|s| s.metrics.requests_cancelled.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert_eq!(cancelled, 2, "queued purge and mid-decode cancels must both count");
 }
 
 /// Top-p and repetition-penalty run inside the parallel execute phase;

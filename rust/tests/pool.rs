@@ -1,0 +1,348 @@
+//! Paged KV block pool, end to end on a synthetic model (no artifacts).
+//!
+//! The contract under test: `--pool` serving is **bit-identical** to the
+//! per-sequence contiguous path for every topology (stages x workers x
+//! block size), block accounting is Eq. 1-exact (the analytic
+//! `seq_blocks` rate equals the physical lease count, and the paged
+//! `storage_bytes` equals the closed-form per-row sum), and a
+//! budget-bounded pool preempts block-granularly — requeued sequences
+//! resume by replay and still produce the same tokens.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use swan::api::GenParams;
+use swan::config::{ModelConfig, ServeConfig};
+use swan::coordinator::engine::sample;
+use swan::coordinator::Request;
+use swan::kvcache::{CachePolicy, PolicyKind};
+use swan::model::transformer::{SequenceState, SwanModel};
+use swan::pool::{pool_blocks_for_budget, seq_blocks, BlockAllocator, BlockPool, PagedSwanCache};
+use swan::shard::pipeline::launch_group;
+use swan::shard::{RoundRobin, Router};
+use swan::sparse::StorageMode;
+use swan::swan::{HybridCache, SwanParams};
+use swan::util::Pcg64;
+
+/// Mirror of the engine's per-sequence decode RNG seed (see
+/// `tests/pipeline.rs`) — the wire contract both paths derive from.
+const SWAN_SEED: u64 = 0x53_57_41_4e;
+
+fn test_model() -> Arc<SwanModel> {
+    Arc::new(SwanModel::synthetic(
+        ModelConfig {
+            name: "pool-test".into(),
+            d_model: 32,
+            n_layers: 4,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 96,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        },
+        33,
+    ))
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        k_active: 4,
+        buffer: 3,
+        mode: StorageMode::F16,
+        max_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// The request mix: greedy, temperature-sampled, and mixed per-request k
+/// (different k => different per-row nnz => different block fill).
+fn requests() -> Vec<Request> {
+    let mut reqs: Vec<Request> = (0..4)
+        .map(|i| Request::from_text(i + 1, &format!("the pooled vector {i} maps the "), 10))
+        .collect();
+    reqs.push(Request::with_params(
+        5,
+        "the hot cache winnows ",
+        GenParams::new(10).temperature(0.8),
+    ));
+    reqs.push(Request::with_params(6, "mixed low ", GenParams::new(10).k_active(2)));
+    reqs.push(Request::with_params(7, "mixed high ", GenParams::new(10).k_active(6)));
+    reqs
+}
+
+/// Serve `reqs` through one pipeline group with the given topology and
+/// pool settings; returns `(streams by id, preempted, completed)`.
+fn run_pool_fleet(
+    stages: usize,
+    decode_workers: usize,
+    block_tokens: usize,
+    mem_budget: usize,
+    reqs: &[Request],
+) -> (Vec<(u64, Vec<u32>)>, u64, u64) {
+    let model = test_model();
+    let cfg = ServeConfig {
+        pipeline: stages,
+        decode_workers,
+        pool: true,
+        block_tokens,
+        mem_budget,
+        ..serve_cfg()
+    };
+    let handle = launch_group(0, model, &cfg).unwrap();
+    let router = Router::from_handles(vec![handle], Box::new(RoundRobin::default()));
+    let pending: Vec<_> =
+        reqs.iter().map(|r| (r.id, router.submit(r.clone()).unwrap())).collect();
+    let mut out: Vec<(u64, Vec<u32>)> = pending
+        .into_iter()
+        .map(|(id, h)| {
+            let resp = h.wait().expect("generation ok");
+            assert_eq!(resp.id, id);
+            (id, resp.tokens)
+        })
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    let (mut preempted, mut completed) = (0u64, 0u64);
+    for s in router.shards() {
+        preempted += s.metrics.requests_preempted.load(Ordering::Relaxed);
+        completed += s.metrics.requests_completed.load(Ordering::Relaxed);
+    }
+    (out, preempted, completed)
+}
+
+/// Direct native reference (the engine's sampling/seeding contract),
+/// each request at its own d_head-clamped compression level.
+fn single_shard_reference(reqs: &[Request]) -> Vec<(u64, Vec<u32>)> {
+    let model = test_model();
+    let cfg = serve_cfg();
+    reqs.iter()
+        .map(|req| {
+            let k = req
+                .params
+                .k_active
+                .map(|k| k.clamp(1, model.cfg.d_head))
+                .unwrap_or(cfg.k_active);
+            let kind = PolicyKind::Swan { k_active: k, buffer: cfg.buffer, mode: cfg.mode };
+            let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
+            let pf = model.prefill(tokens);
+            let mut st = SequenceState::new(&model, kind);
+            st.load_prefill(&pf);
+            let base = req.params.seed.unwrap_or(req.id);
+            let mut tok = sample(&pf.logits, &req.params, &[], &mut Pcg64::new(base));
+            let mut rng = Pcg64::new(base ^ SWAN_SEED);
+            let mut produced = vec![tok];
+            while produced.len() < req.params.max_new {
+                let logits = model.decode_step(&mut st, tok);
+                tok = sample(&logits, &req.params, &produced, &mut rng);
+                produced.push(tok);
+            }
+            (req.id, produced)
+        })
+        .collect()
+}
+
+/// The tentpole acceptance sweep: pool-backed decode is bit-identical to
+/// the per-sequence reference for every (stages, workers, block size)
+/// combination, including temperature sampling and mixed per-request k.
+#[test]
+fn pool_decode_is_bit_identical_across_topologies() {
+    let reqs = requests();
+    let want = single_shard_reference(&reqs);
+    for stages in [1usize, 2] {
+        for workers in [0usize, 3] {
+            for bt in [1usize, 5, 16] {
+                let (got, preempted, _) = run_pool_fleet(stages, workers, bt, 0, &reqs);
+                assert_eq!(
+                    got, want,
+                    "pool fleet diverged: stages={stages} workers={workers} block_tokens={bt}"
+                );
+                assert_eq!(preempted, 0, "an unbounded pool must never preempt");
+            }
+        }
+    }
+}
+
+/// A tight block budget forces preemption mid-decode; the preempted
+/// sequence resumes by replay and the final streams still match the
+/// unbounded reference, with `requests_preempted` counting the event.
+#[test]
+fn bounded_pool_preempts_and_resumes_bit_exactly() {
+    let reqs = vec![
+        Request::from_text(1, "the long one ", 12),
+        Request::from_text(2, "the bystander ", 12),
+    ];
+    let want = single_shard_reference(&reqs);
+    // block_tokens=1 for fine granularity: each stream set (2 streams x
+    // 4 layers x 2 kv heads = 16 tables) leases one block per retained
+    // row.  700 blocks admit both sequences early but run out before
+    // either finishes, so the coordinator must preempt the youngest.
+    let budget = 700 * swan::pool::block_bytes(1, 8, StorageMode::F16, 4);
+    assert_eq!(pool_blocks_for_budget(budget, 1, 8, StorageMode::F16, 4), 700);
+    let (got, preempted, completed) = run_pool_fleet(1, 0, 1, budget, &reqs);
+    assert_eq!(got, want, "preemption/replay changed the decoded streams");
+    assert!(preempted >= 1, "the tight budget must preempt at least once");
+    assert_eq!(completed, 2, "every request still completes");
+}
+
+/// Preemption under a worker pool and a 2-stage pipeline stays bit-exact
+/// (the carry/replay path crosses stage channels).
+#[test]
+fn bounded_pool_preemption_is_bit_exact_with_stages_and_workers() {
+    let reqs = vec![
+        Request::from_text(1, "the long one ", 12),
+        Request::from_text(2, "the bystander ", 12),
+        Request::from_text(3, "the third seat ", 12),
+    ];
+    let want = single_shard_reference(&reqs);
+    let budget = 900 * swan::pool::block_bytes(1, 8, StorageMode::F16, 4);
+    for (stages, workers) in [(2usize, 0usize), (1, 3)] {
+        let (got, preempted, completed) = run_pool_fleet(stages, workers, 1, budget, &reqs);
+        assert_eq!(got, want, "stages={stages} workers={workers} diverged under preemption");
+        assert!(preempted >= 1, "stages={stages} workers={workers}: no preemption observed");
+        assert_eq!(completed, 3);
+    }
+}
+
+/// STATS surfaces the pool: per-stage `blocks=` gauges drain to zero once
+/// every sequence retires (Retire is FIFO-ordered before the stats
+/// request in each stage channel), and the fleet aggregate renders the
+/// pool line.
+#[test]
+fn stats_show_pool_blocks_and_drain_to_zero() {
+    let model = test_model();
+    let cfg = ServeConfig {
+        pipeline: 2,
+        pool: true,
+        block_tokens: 4,
+        ..serve_cfg()
+    };
+    let handle = launch_group(0, model, &cfg).unwrap();
+    let router = Router::from_handles(vec![handle], Box::new(RoundRobin::default()));
+    for r in requests() {
+        router.submit(r).unwrap().wait().unwrap();
+    }
+    let stats = router.stats();
+    // every stage line carries a drained blocks gauge: the Retire hop is
+    // FIFO-ordered before the stats request in each stage channel, so a
+    // completed fleet deterministically shows zero leased blocks per
+    // stage (the coordinator-side gauges are published asynchronously —
+    // only their presence is asserted)
+    assert_eq!(stats.matches(" blocks=0").count(), 2, "{stats}");
+    assert!(stats.contains("/unbounded bt=4 frag="), "{stats}");
+    assert!(stats.contains("fleet pool: blocks leased="), "{stats}");
+    assert!(stats.contains("target=unbounded"), "{stats}");
+}
+
+/// The analytic admission rate (`seq_blocks`) equals the physical lease
+/// count: one full stream set (n_layers x n_kv_heads paged caches, each
+/// holding k+v sparse and k+v ring tables) on one pool, token by token.
+#[test]
+fn seq_blocks_predicts_physical_leases() {
+    let (d_h, nl, nkv) = (8usize, 3usize, 2usize);
+    for bt in [1usize, 2, 4] {
+        for buffer in [0usize, 1, 3, 7] {
+            let pool = Arc::new(BlockPool::new(usize::MAX));
+            let params = SwanParams::new(4, buffer, StorageMode::F16);
+            let mut caches: Vec<PagedSwanCache> = (0..nl * nkv)
+                .map(|_| PagedSwanCache::new(d_h, params, bt, pool.clone()))
+                .collect();
+            let mut rng = Pcg64::new(21);
+            for t in 1..=17 {
+                let k = rng.normal_vec(d_h);
+                let v = rng.normal_vec(d_h);
+                for c in &mut caches {
+                    c.append(&k, &v);
+                }
+                assert_eq!(
+                    pool.leased(),
+                    seq_blocks(t, buffer, bt, nl, nkv),
+                    "bt={bt} buffer={buffer} token {t}"
+                );
+            }
+            drop(caches);
+            assert_eq!(pool.leased(), 0, "bt={bt} buffer={buffer}: blocks leaked");
+            pool.check_invariants().unwrap();
+        }
+    }
+}
+
+/// Eq. 1 exactness: the paged cache's accounted bytes equal both the
+/// contiguous cache's total and the closed-form per-row sum
+/// `sum_r vector_bytes(nnz_r)` (+ the f16 ring convention), across
+/// storage modes and block sizes that straddle row boundaries.
+#[test]
+fn block_accounting_matches_eq1_closed_form() {
+    let d_h = 16usize;
+    for mode in [StorageMode::F16, StorageMode::F8] {
+        for bt in [1usize, 3, 8] {
+            let pool = Arc::new(BlockPool::new(usize::MAX));
+            let params = SwanParams::new(6, 2, mode);
+            let mut paged = PagedSwanCache::new(d_h, params, bt, pool.clone());
+            let mut flat = HybridCache::new(d_h, params);
+            let mut rng = Pcg64::new(33);
+            for _ in 0..23 {
+                let k = rng.normal_vec(d_h);
+                let v = rng.normal_vec(d_h);
+                paged.append(&k, &v);
+                flat.append(&k, &v);
+            }
+            assert_eq!(paged.storage_bytes(), flat.storage_bytes(), "mode={mode:?} bt={bt}");
+            let inner = paged.inner();
+            let mut want = 2 * inner.buffer_len() * d_h * 2; // live ring rows, k+v, f16
+            for r in 0..inner.sparse_len() {
+                want += mode.vector_bytes(inner.k_sparse.nnz(r));
+                want += mode.vector_bytes(inner.v_sparse.nnz(r));
+            }
+            assert_eq!(
+                paged.storage_bytes(),
+                want,
+                "mode={mode:?} bt={bt}: Eq. 1 closed form diverged"
+            );
+        }
+    }
+}
+
+/// Pool/allocator invariants under adversarial churn: interleaved
+/// lease/give_back keeps `leased()` exact, recycles ids, and never
+/// corrupts the free list; the refcounted allocator enforces its
+/// retain/release discipline.
+#[test]
+fn pool_and_allocator_survive_churn() {
+    let pool = BlockPool::new(64);
+    let mut held = Vec::new();
+    let mut rng = Pcg64::new(7);
+    for step in 0..500 {
+        if held.is_empty() || rng.next_u64() % 3 != 0 {
+            held.push(pool.lease());
+        } else {
+            let i = (rng.next_u64() as usize) % held.len();
+            pool.give_back(held.swap_remove(i));
+        }
+        assert_eq!(pool.leased(), held.len(), "step {step}");
+        pool.check_invariants().unwrap();
+    }
+    // ids are recycled: drain, then re-lease and watch an old id return
+    let seen: Vec<u32> = held.iter().map(|b| b.id).collect();
+    for b in held.drain(..) {
+        pool.give_back(b);
+    }
+    assert_eq!(pool.leased(), 0);
+    let again = pool.lease();
+    assert!(seen.contains(&again.id), "freed ids must be recycled");
+    pool.give_back(again);
+    pool.check_invariants().unwrap();
+
+    // the refcounted allocator: retain keeps a block alive across one
+    // release; the second release frees it for reuse
+    let mut alloc = BlockAllocator::new(8);
+    let b = alloc.alloc().unwrap();
+    alloc.retain(b);
+    assert!(!alloc.release(b), "retained block must stay live");
+    assert_eq!(alloc.refcount(b), 1);
+    assert!(alloc.release(b), "final release must free the block");
+    assert_eq!(alloc.refcount(b), 0);
+    assert_eq!(alloc.live(), 0);
+    assert_eq!(alloc.capacity(), 8);
+    alloc.check_invariants().unwrap();
+}
