@@ -189,7 +189,7 @@ fn run_pool_batch(
     let preempted: u64 = router
         .shards()
         .iter()
-        .map(|s| s.metrics.requests_preempted.load(std::sync::atomic::Ordering::Relaxed))
+        .map(|s| s.metrics.requests_preempted.get())
         .sum();
     let row = format!(
         "requests {:>3} | wall {:>7.2}s | agg decode {:>7.1} tok/s | preempted {preempted}",
@@ -198,6 +198,51 @@ fn run_pool_batch(
         tps,
     );
     Ok((tps, frag, preempted, row))
+}
+
+/// Open-loop SLO leg: staggered request arrivals (instead of one burst)
+/// against a native pipeline group, so queue wait and TTFT spread the
+/// way a live fleet's do.  The percentiles are read from the same
+/// lock-free obs histograms the `METRICS` verb exports — no bench-side
+/// timing — merged across shards with the exact bucket-wise merge.
+fn run_latency_slo(
+    cfg: ServeConfig,
+    n_requests: usize,
+    max_new: usize,
+    stagger: std::time::Duration,
+) -> anyhow::Result<(swan::obs::HistSnapshot, swan::obs::HistSnapshot)> {
+    use swan::model::{SwanModel, WeightFile};
+    use swan::shard::pipeline::launch_group;
+    use swan::swan::projection::ProjectionVariant;
+
+    let dir = swan::artifacts_dir();
+    let wf = WeightFile::load(&dir.join(format!("weights_{}.bin", cfg.model)))?;
+    let model = std::sync::Arc::new(SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?);
+    let handle = launch_group(0, model, &cfg)?;
+    let router = Router::from_handles(vec![handle], swan::shard::policy_from_name("round-robin")?);
+    let mut rng = Pcg64::new(42);
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        pending.push(router.submit(Request::from_text(0, &prompt, max_new))?);
+        std::thread::sleep(stagger);
+    }
+    for h in pending {
+        h.wait()?;
+    }
+    let mut shards = router.shards().iter();
+    let first = shards.next().expect("router has at least one shard");
+    let mut ttft = first.metrics.ttft_seconds.snapshot();
+    let mut itl = first.metrics.itl_seconds.snapshot();
+    for s in shards {
+        ttft.merge(&s.metrics.ttft_seconds.snapshot());
+        itl.merge(&s.metrics.itl_seconds.snapshot());
+    }
+    Ok((ttft, itl))
 }
 
 fn main() {
@@ -369,6 +414,46 @@ fn main() {
     pool_report.set("pool_scaling", "max_new", max_new as f64);
     if let Err(e) = pool_report.save() {
         eprintln!("could not write {}: {e}", pool_report.path().display());
+    }
+
+    // latency SLO: open-loop staggered arrivals; TTFT / inter-token-gap
+    // percentiles come straight from the fleet's obs histograms (the
+    // series METRICS exports), land in BENCH_obs.json
+    let slo_requests = 16usize;
+    println!("# latency_slo ({slo_requests} requests, {max_new} new tokens each, 5 ms stagger)");
+    let slo_cfg = ServeConfig {
+        k_active: 32,
+        mode: StorageMode::F16,
+        max_batch: 4,
+        decode_workers: workers,
+        ..Default::default()
+    };
+    match run_latency_slo(slo_cfg, slo_requests, max_new, std::time::Duration::from_millis(5)) {
+        Ok((ttft, itl)) => {
+            let mut obs_report = swan::util::stats::BenchReport::open("BENCH_obs.json");
+            for (name, snap) in [("ttft", &ttft), ("itl", &itl)] {
+                println!(
+                    "{name:<18} p50={} p95={} p99={} (n={})",
+                    swan::util::stats::Summary::fmt_time(snap.quantile_ns(0.50)),
+                    swan::util::stats::Summary::fmt_time(snap.quantile_ns(0.95)),
+                    swan::util::stats::Summary::fmt_time(snap.quantile_ns(0.99)),
+                    snap.count(),
+                );
+                for (q, frac) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+                    obs_report.set(
+                        "latency_slo",
+                        &format!("{name}_{q}_ms"),
+                        snap.quantile_ns(frac) / 1e6,
+                    );
+                }
+            }
+            obs_report.set("latency_slo", "requests", slo_requests as f64);
+            obs_report.set("latency_slo", "max_new", max_new as f64);
+            if let Err(e) = obs_report.save() {
+                eprintln!("could not write {}: {e}", obs_report.path().display());
+            }
+        }
+        Err(e) => println!("{:<18} FAILED: {e:#}", "latency_slo"),
     }
 
     // api mix: the same fleet serving different request shapes — greedy,

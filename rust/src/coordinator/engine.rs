@@ -9,7 +9,6 @@
 //! (3) completion — finished sequences are emitted with their stats.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -20,8 +19,9 @@ use crate::config::ServeConfig;
 use crate::coordinator::autotune::AutoTuner;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response};
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::scheduler::{Scheduler, SchedulerObs};
 use crate::coordinator::sequence::{CacheShape, SeqCache};
+use crate::obs::trace::{TraceKind, TraceRing, TRACE_RING_CAP};
 use crate::runtime::engine::{ArgView, HostTensor, LoadedModel};
 use crate::swan::batch::WorkerPool;
 
@@ -50,6 +50,9 @@ struct ActiveSeq {
     stats: RequestStats,
     rng: Pcg64,
     decode_graph: String,
+    /// Instant of the last committed token (prefill's first token to
+    /// start): each decode commit measures its inter-token gap from it.
+    last_token: Instant,
     /// Set by the commit phase; the sequence is retired at iteration end.
     finished: bool,
 }
@@ -80,6 +83,8 @@ pub struct Engine {
     prefill_buckets: Vec<usize>,
     next_id: u64,
     pool: WorkerPool,
+    /// Retired request traces, bounded; served by the `TRACE <id>` verb.
+    traces: TraceRing,
 }
 
 impl Engine {
@@ -116,6 +121,9 @@ impl Engine {
         if cfg.decode_workers > 0 {
             scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
         }
+        let metrics = Arc::new(Metrics::default());
+        scheduler.set_obs(SchedulerObs::register(&metrics.registry));
+        metrics.k_active.set(tuner.current_k() as u64);
         Ok(Engine {
             shape,
             decode_l_buckets,
@@ -126,9 +134,10 @@ impl Engine {
             finished: VecDeque::new(),
             rejected: VecDeque::new(),
             sinks: HashMap::new(),
-            metrics: Arc::new(Metrics::default()),
+            metrics,
             next_id: 1,
             pool: WorkerPool::new(cfg.decode_workers),
+            traces: TraceRing::new(TRACE_RING_CAP),
             lm,
             cfg,
         })
@@ -152,6 +161,7 @@ impl Engine {
     /// Change the compression level for newly admitted sequences.
     pub fn set_k_active(&mut self, k: usize) {
         self.tuner.pin(k);
+        self.metrics.k_active.set(self.tuner.current_k() as u64);
     }
 
     pub fn current_k_active(&self) -> usize {
@@ -167,8 +177,9 @@ impl Engine {
         }
         self.next_id = self.next_id.max(req.id) + 1;
         req.clamp_max_new(self.cfg.max_new_hard_cap());
-        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests_submitted.inc();
         let id = req.id;
+        req.trace.begin(id);
         self.scheduler.enqueue(req);
         id
     }
@@ -212,6 +223,17 @@ impl Engine {
             return true;
         }
         self.scheduler.cancel(id)
+    }
+
+    /// JSONL lifecycle timeline for request `id`: retired traces come
+    /// from the bounded ring; live requests (active or still queued)
+    /// render their in-progress trace. `None` once a retired trace has
+    /// aged out of the ring (or the id was never seen).
+    pub fn trace_jsonl(&self, id: u64) -> Option<String> {
+        self.traces
+            .jsonl(id)
+            .or_else(|| self.active.iter().find(|s| s.req.id == id).map(|s| s.req.trace.jsonl()))
+            .or_else(|| self.scheduler.queued().find(|r| r.id == id).map(|r| r.trace.jsonl()))
     }
 
     /// Live KV bytes across active sequences.
@@ -356,7 +378,7 @@ impl Engine {
         // cancelled-while-queued requests first: purge them and answer
         // their waiters with an empty cancelled response — they must not
         // hold queue slots or inflate the projected load
-        for p in self.scheduler.take_cancelled() {
+        for mut p in self.scheduler.take_cancelled() {
             let stats = RequestStats {
                 queue_time: p.enqueued.elapsed(),
                 cancelled: true,
@@ -366,10 +388,12 @@ impl Engine {
             // a queued purge is a cancellation AND a completion: every
             // submitted request resolves exactly once, and the cancel
             // counter records how it resolved
-            self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
-            self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.requests_cancelled.inc();
+            self.metrics.requests_completed.inc();
             let resp =
                 Response { id: p.req.id, tokens: Vec::new(), text: String::new(), stats };
+            p.req.trace.record(TraceKind::Retire);
+            self.traces.push(p.req.trace);
             self.deliver_done(resp);
         }
         let k_now = {
@@ -377,6 +401,7 @@ impl Engine {
             let t = &mut self.tuner;
             t.observe(live)
         };
+        self.metrics.k_active.set(k_now as u64);
         // locals for the projection closure (admit_next holds the
         // scheduler mutably, so the closure must not re-borrow self)
         let shape = self.shape;
@@ -429,9 +454,12 @@ impl Engine {
                 break;
             };
             let queue_time = pending.enqueued.elapsed();
-            let rid = pending.req.id;
-            let k_req = pending.req.params.k_active.map(&snap).unwrap_or(k_now);
-            match self.prefill(pending.req, k_req, queue_time) {
+            self.metrics.queue_wait_seconds.record(queue_time);
+            let mut req = pending.req;
+            let rid = req.id;
+            let k_req = req.params.k_active.map(&snap).unwrap_or(k_now);
+            req.trace.record(TraceKind::Admit);
+            match self.prefill(req, k_req, queue_time) {
                 Ok(seq) => {
                     // the first token was sampled from the prefill
                     // logits — streaming clients see it immediately
@@ -448,7 +476,7 @@ impl Engine {
                     self.active.push(seq);
                 }
                 Err(e) => {
-                    self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.requests_rejected.inc();
                     log::warn!("prefill failed: {e:#}");
                     self.deliver_error(rid, format!("rejected at admission: {e:#}"));
                 }
@@ -457,7 +485,7 @@ impl Engine {
         Ok(())
     }
 
-    fn prefill(&mut self, req: Request, k_active: usize, queue_time: std::time::Duration) -> anyhow::Result<ActiveSeq> {
+    fn prefill(&mut self, mut req: Request, k_active: usize, queue_time: std::time::Duration) -> anyhow::Result<ActiveSeq> {
         let t0 = Instant::now();
         // one pass, no copies: borrow the request's prompt (or a static
         // dummy token for empty prompts) and slice the suffix in place —
@@ -499,7 +527,8 @@ impl Engine {
         }
         stats.prefill_time = t0.elapsed();
         self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
-        self.metrics.prefill_tokens.fetch_add(prompt.len() as u64, Ordering::Relaxed);
+        self.metrics.prefill_seconds.record(stats.prefill_time);
+        self.metrics.prefill_tokens.add(prompt.len() as u64);
 
         let backend = if self.cfg.dense_baseline {
             let dense_cap = 512; // decode_dense_l512 bucket
@@ -531,6 +560,12 @@ impl Engine {
         };
 
         let next_token = sample(&logits, &req.params, &[], &mut Pcg64::new(req.seed_base()));
+        // TTFT: the first token is sampled from the prefill logits, so
+        // time-to-first-token is the queue wait plus the prefill pass.
+        stats.ttft_ns = (queue_time + stats.prefill_time).as_nanos() as u64;
+        self.metrics.ttft_seconds.record_ns(stats.ttft_ns);
+        req.trace.record(TraceKind::PrefillDone);
+        req.trace.record(TraceKind::FirstToken);
         Ok(ActiveSeq {
             rng: Pcg64::new(req.seed_base() ^ x5wan_seed()),
             decode_graph: String::new(),
@@ -539,6 +574,7 @@ impl Engine {
             stats,
             backend,
             req,
+            last_token: Instant::now(),
             finished: false,
         })
     }
@@ -651,6 +687,17 @@ impl Engine {
                 seq.stats.decode_steps += 1;
                 let step_time = t.exec + t0.elapsed();
                 seq.stats.decode_time += step_time;
+                // inter-token gap: committed-token to committed-token
+                // wall time, the user-observed stream cadence. Recording
+                // is lock-free (trace push is a plain Vec push on this
+                // coordinator-owned struct; histograms are atomics).
+                let gap_ns = seq.last_token.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                seq.last_token = Instant::now();
+                seq.stats.itl_sum_ns += gap_ns;
+                seq.stats.itl_max_ns = seq.stats.itl_max_ns.max(gap_ns);
+                seq.req.trace.record(TraceKind::Decode);
+                self.metrics.itl_seconds.record_ns(gap_ns);
+                self.metrics.decode_step_seconds.record(step_time);
                 let bytes = match &seq.backend {
                     SeqBackend::Swan(c) => c.storage_bytes(),
                     SeqBackend::Dense { len, .. } => {
@@ -665,7 +712,7 @@ impl Engine {
                     }
                 };
                 self.metrics.decode_step_ns.record(step_time.as_nanos() as f64);
-                self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
+                self.metrics.decode_tokens.inc();
             }
         }
 
@@ -673,12 +720,16 @@ impl Engine {
         // rebuild entirely on the common nothing-finished iteration)
         if self.active.iter().any(|s| s.finished) {
             let mut keep = Vec::with_capacity(self.active.len());
-            for seq in self.active.drain(..) {
+            for mut seq in self.active.drain(..) {
                 if seq.finished {
                     if seq.req.cancel.is_cancelled() {
-                        self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.requests_cancelled.inc();
                     }
-                    self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.requests_completed.inc();
+                    // retain the finished lifecycle for `TRACE <id>` —
+                    // once per request, off the per-token path
+                    seq.req.trace.record(TraceKind::Retire);
+                    self.traces.push(seq.req.trace.clone());
                     let resp = finish(seq);
                     // route through the event sink when one is attached
                     // (self.active is still mutably borrowed by drain,
@@ -697,7 +748,7 @@ impl Engine {
         }
 
         // metrics snapshot of live cache
-        self.metrics.cache_bytes.store(self.live_cache_bytes(), Ordering::Relaxed);
+        self.metrics.cache_bytes.set(self.live_cache_bytes() as u64);
         let dense_equiv: usize = self
             .active
             .iter()
@@ -708,7 +759,7 @@ impl Engine {
                 }
             })
             .sum();
-        self.metrics.dense_equiv_bytes.store(dense_equiv, Ordering::Relaxed);
+        self.metrics.dense_equiv_bytes.set(dense_equiv as u64);
         Ok(())
     }
 }

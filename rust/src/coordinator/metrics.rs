@@ -1,78 +1,127 @@
-//! Engine-level metrics: counters and latency reservoirs, shared across
-//! scheduler threads.
+//! Engine-level metrics, re-based on the `swan::obs` registry.
+//!
+//! Every counter/gauge below is an `Arc` handle registered in
+//! `self.registry`, so the human-readable `snapshot()` (the `STATS`
+//! verb) and the Prometheus exposition (the `METRICS` verb) read the
+//! exact same atomics and can never disagree. The two `Reservoir`s are
+//! a display-only extra: they keep the last-N exact samples behind the
+//! `prefill:`/`decode-step:` Summary rows (min/max/std need raw
+//! samples, which log2 histogram buckets cannot reconstruct).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-/// Fixed-size latency reservoir (keeps the most recent N samples).
+use crate::obs::histogram::Histogram;
+use crate::obs::registry::{Counter, Gauge, Registry};
+use crate::util::stats::Summary;
+
+/// Fixed-size latency reservoir keeping the most recent N samples in a
+/// ring: when full, the oldest sample is overwritten in place — O(1),
+/// no `Vec::remove(0)` memmove on the decode path.
 pub struct Reservoir {
-    samples: Mutex<Vec<f64>>,
+    inner: Mutex<Ring>,
     cap: usize,
+}
+
+struct Ring {
+    buf: Vec<f64>,
+    /// Index of the oldest sample once the buffer is full; the next
+    /// overwrite lands here.
+    head: usize,
 }
 
 impl Reservoir {
     pub fn new(cap: usize) -> Reservoir {
-        Reservoir { samples: Mutex::new(Vec::with_capacity(cap)), cap }
+        let cap = cap.max(1);
+        Reservoir { inner: Mutex::new(Ring { buf: Vec::with_capacity(cap), head: 0 }), cap }
     }
 
     pub fn record(&self, ns: f64) {
-        let mut s = self.samples.lock().unwrap();
-        if s.len() == self.cap {
-            s.remove(0);
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() < self.cap {
+            r.buf.push(ns);
+        } else {
+            let h = r.head;
+            r.buf[h] = ns;
+            r.head = (h + 1) % self.cap;
         }
-        s.push(ns);
     }
 
-    pub fn summary(&self) -> Option<crate::util::stats::Summary> {
-        let s = self.samples.lock().unwrap();
-        if s.is_empty() {
+    /// Summary over the retained (most recent N) samples. Order within
+    /// the ring is irrelevant: `Summary::from_ns` sorts.
+    pub fn summary(&self) -> Option<Summary> {
+        let r = self.inner.lock().unwrap();
+        if r.buf.is_empty() {
             None
         } else {
-            Some(crate::util::stats::Summary::from_ns(s.clone()))
+            Some(Summary::from_ns(r.buf.clone()))
         }
     }
 }
 
-/// Serving metrics.
+/// Serving metrics: registry-backed handles shared across scheduler
+/// threads. Field names are stable; only the handle types changed when
+/// the registry landed (`.inc()`/`.add()`/`.get()` for counters,
+/// `.set()`/`.get()` for gauges).
 pub struct Metrics {
-    pub requests_submitted: AtomicU64,
-    pub requests_completed: AtomicU64,
-    pub requests_rejected: AtomicU64,
+    /// The registry all handles below live in; `METRICS` renders it.
+    pub registry: Arc<Registry>,
+    pub requests_submitted: Arc<Counter>,
+    pub requests_completed: Arc<Counter>,
+    pub requests_rejected: Arc<Counter>,
     /// Requests that ended by cancellation (queued purge or mid-decode).
     /// Cancels also count as completed — every submitted request resolves
-    /// exactly once — so `cancelled <= completed`.
-    pub requests_cancelled: AtomicU64,
+    /// exactly once — so `cancelled <= completed` (and the exposition's
+    /// `outcome="cancelled"` is a subset of `outcome="completed"`).
+    pub requests_cancelled: Arc<Counter>,
     /// Times a sequence was preempted (blocks reclaimed, requeued) to fit
     /// the pool budget.  Preemption is not terminal: the sequence resumes
     /// later, so this can exceed the request count under churn.
-    pub requests_preempted: AtomicU64,
-    pub prefill_tokens: AtomicU64,
-    pub decode_tokens: AtomicU64,
-    pub cache_bytes: AtomicUsize,
-    pub dense_equiv_bytes: AtomicUsize,
-    /// Block-pool gauges (0/0 when the paged pool is off).
-    pub pool_blocks_total: AtomicUsize,
-    pub pool_blocks_leased: AtomicUsize,
+    pub requests_preempted: Arc<Counter>,
+    pub prefill_tokens: Arc<Counter>,
+    pub decode_tokens: Arc<Counter>,
+    pub cache_bytes: Arc<Gauge>,
+    pub dense_equiv_bytes: Arc<Gauge>,
+    /// Block-pool gauges (0/0 when the paged pool is off; target is
+    /// `u64::MAX` when the pool is unbounded).
+    pub pool_blocks_total: Arc<Gauge>,
+    pub pool_blocks_leased: Arc<Gauge>,
+    /// Current fleet-tuned compression level on this engine/group.
+    pub k_active: Arc<Gauge>,
+    /// SLO histograms (lock-free; safe on the per-token commit path).
+    pub queue_wait_seconds: Arc<Histogram>,
+    pub ttft_seconds: Arc<Histogram>,
+    pub itl_seconds: Arc<Histogram>,
+    pub prefill_seconds: Arc<Histogram>,
+    pub decode_step_seconds: Arc<Histogram>,
+    /// Display-only exact-sample reservoirs (see module docs).
     pub prefill_ns: Reservoir,
     pub decode_step_ns: Reservoir,
 }
 
 impl Default for Metrics {
     fn default() -> Metrics {
+        let registry = Arc::new(Registry::new());
         Metrics {
-            requests_submitted: AtomicU64::new(0),
-            requests_completed: AtomicU64::new(0),
-            requests_rejected: AtomicU64::new(0),
-            requests_cancelled: AtomicU64::new(0),
-            requests_preempted: AtomicU64::new(0),
-            prefill_tokens: AtomicU64::new(0),
-            decode_tokens: AtomicU64::new(0),
-            cache_bytes: AtomicUsize::new(0),
-            dense_equiv_bytes: AtomicUsize::new(0),
-            pool_blocks_total: AtomicUsize::new(0),
-            pool_blocks_leased: AtomicUsize::new(0),
+            requests_submitted: registry.counter("swan_requests_submitted_total", &[]),
+            requests_completed: registry.counter("swan_requests_total", &[("outcome", "completed")]),
+            requests_rejected: registry.counter("swan_requests_total", &[("outcome", "rejected")]),
+            requests_cancelled: registry.counter("swan_requests_total", &[("outcome", "cancelled")]),
+            requests_preempted: registry.counter("swan_preemptions_total", &[]),
+            prefill_tokens: registry.counter("swan_tokens_total", &[("phase", "prefill")]),
+            decode_tokens: registry.counter("swan_tokens_total", &[("phase", "decode")]),
+            cache_bytes: registry.gauge("swan_kv_bytes", &[]),
+            dense_equiv_bytes: registry.gauge("swan_kv_dense_equiv_bytes", &[]),
+            pool_blocks_total: registry.gauge("swan_pool_blocks_target", &[]),
+            pool_blocks_leased: registry.gauge("swan_pool_blocks_leased", &[]),
+            k_active: registry.gauge("swan_k_active", &[]),
+            queue_wait_seconds: registry.histogram("swan_queue_wait_seconds", &[]),
+            ttft_seconds: registry.histogram("swan_ttft_seconds", &[]),
+            itl_seconds: registry.histogram("swan_itl_seconds", &[]),
+            prefill_seconds: registry.histogram("swan_prefill_seconds", &[]),
+            decode_step_seconds: registry.histogram("swan_decode_step_seconds", &[]),
             prefill_ns: Reservoir::new(1024),
             decode_step_ns: Reservoir::new(4096),
+            registry,
         }
     }
 }
@@ -82,29 +131,29 @@ impl Metrics {
         let mut out = String::new();
         out.push_str(&format!(
             "requests: submitted={} completed={} rejected={} cancelled={} preempted={}\n",
-            self.requests_submitted.load(Ordering::Relaxed),
-            self.requests_completed.load(Ordering::Relaxed),
-            self.requests_rejected.load(Ordering::Relaxed),
-            self.requests_cancelled.load(Ordering::Relaxed),
-            self.requests_preempted.load(Ordering::Relaxed),
+            self.requests_submitted.get(),
+            self.requests_completed.get(),
+            self.requests_rejected.get(),
+            self.requests_cancelled.get(),
+            self.requests_preempted.get(),
         ));
         out.push_str(&format!(
             "tokens: prefill={} decode={}\n",
-            self.prefill_tokens.load(Ordering::Relaxed),
-            self.decode_tokens.load(Ordering::Relaxed),
+            self.prefill_tokens.get(),
+            self.decode_tokens.get(),
         ));
-        let used = self.cache_bytes.load(Ordering::Relaxed);
-        let dense = self.dense_equiv_bytes.load(Ordering::Relaxed);
+        let used = self.cache_bytes.get() as usize;
+        let dense = self.dense_equiv_bytes.get() as usize;
         let saving = if dense > 0 { 100.0 * (1.0 - used as f64 / dense as f64) } else { 0.0 };
         out.push_str(&format!(
             "kv-cache: {} live (dense-equiv {}, saving {saving:.1}%)\n",
             crate::sparse::memory::human_bytes(used),
             crate::sparse::memory::human_bytes(dense),
         ));
-        let pool_total = self.pool_blocks_total.load(Ordering::Relaxed);
+        let pool_total = self.pool_blocks_total.get();
         if pool_total > 0 {
-            let leased = self.pool_blocks_leased.load(Ordering::Relaxed);
-            let total = if pool_total == usize::MAX {
+            let leased = self.pool_blocks_leased.get();
+            let total = if pool_total == u64::MAX {
                 "unbounded".to_string()
             } else {
                 pool_total.to_string()
@@ -116,6 +165,18 @@ impl Metrics {
         }
         if let Some(s) = self.decode_step_ns.summary() {
             out.push_str(&format!("decode-step: {}\n", s.row("")));
+        }
+        for (name, h) in [("ttft", &self.ttft_seconds), ("itl ", &self.itl_seconds)] {
+            let snap = h.snapshot();
+            if snap.count() > 0 {
+                out.push_str(&format!(
+                    "{name}:        p50={} p95={} p99={} (n={})\n",
+                    Summary::fmt_time(snap.quantile_ns(0.50)),
+                    Summary::fmt_time(snap.quantile_ns(0.95)),
+                    Summary::fmt_time(snap.quantile_ns(0.99)),
+                    snap.count(),
+                ));
+            }
         }
         out
     }
@@ -137,18 +198,56 @@ mod tests {
     }
 
     #[test]
+    fn reservoir_ring_keeps_most_recent_without_shift() {
+        // cap 4, samples 1..=10: survivors must be exactly {7, 8, 9, 10}.
+        let r = Reservoir::new(4);
+        for i in 1..=10 {
+            r.record(i as f64);
+        }
+        let s = r.summary().unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min_ns, 7.0);
+        assert_eq!(s.max_ns, 10.0);
+        assert_eq!(s.mean_ns, 8.5);
+        // Below-cap behavior unchanged: everything retained.
+        let r = Reservoir::new(8);
+        for i in 1..=5 {
+            r.record(i as f64);
+        }
+        let s = r.summary().unwrap();
+        assert_eq!((s.n, s.min_ns, s.max_ns), (5, 1.0, 5.0));
+    }
+
+    #[test]
     fn snapshot_renders() {
         let m = Metrics::default();
-        m.requests_submitted.store(5, Ordering::Relaxed);
-        m.cache_bytes.store(512, Ordering::Relaxed);
-        m.dense_equiv_bytes.store(1024, Ordering::Relaxed);
+        m.requests_submitted.add(5);
+        m.cache_bytes.set(512);
+        m.dense_equiv_bytes.set(1024);
         let s = m.snapshot();
         assert!(s.contains("submitted=5"));
         assert!(s.contains("cancelled=0 preempted=0"));
         assert!(s.contains("saving 50.0%"));
         assert!(!s.contains("pool:"), "pool line hidden when pool is off");
-        m.pool_blocks_total.store(64, Ordering::Relaxed);
-        m.pool_blocks_leased.store(7, Ordering::Relaxed);
+        m.pool_blocks_total.set(64);
+        m.pool_blocks_leased.set(7);
         assert!(m.snapshot().contains("pool: blocks leased=7 target=64"));
+    }
+
+    #[test]
+    fn snapshot_and_exposition_read_the_same_atomics() {
+        let m = Metrics::default();
+        m.requests_submitted.add(3);
+        m.requests_completed.add(2);
+        m.k_active.set(8);
+        m.ttft_seconds.record_ns(5_000_000);
+        let stats = m.snapshot();
+        let text = crate::obs::export::render_one(&m.registry);
+        assert!(stats.contains("submitted=3 completed=2"));
+        assert!(text.contains("swan_requests_submitted_total 3\n"), "{text}");
+        assert!(text.contains("swan_requests_total{outcome=\"completed\"} 2\n"), "{text}");
+        assert!(text.contains("swan_k_active 8\n"));
+        assert!(text.contains("swan_ttft_seconds_count 1\n"));
+        assert!(stats.contains("ttft:"), "SLO row rendered once samples exist: {stats}");
     }
 }

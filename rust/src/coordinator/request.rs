@@ -9,6 +9,7 @@
 use std::time::Duration;
 
 use crate::api::{CancelToken, GenParams};
+use crate::obs::trace::Trace;
 
 /// Character-level tokenizer shared with the python side: ids 0..95 map to
 /// ASCII 32..127.
@@ -46,6 +47,10 @@ pub struct Request {
     /// Set by the admitting engine when it clamped `params.max_new`:
     /// the value originally requested (so stats never lie about it).
     pub clamped_from: Option<usize>,
+    /// Lifecycle timeline (submit→admit→…→retire), recorded by the one
+    /// coordinator thread driving this request — plain pushes, no lock.
+    /// Dumpable post-retire via the `TRACE <id>` wire verb.
+    pub trace: Trace,
 }
 
 impl Request {
@@ -61,6 +66,7 @@ impl Request {
             params,
             cancel: CancelToken::new(),
             clamped_from: None,
+            trace: Trace::new(),
         }
     }
 
@@ -102,6 +108,15 @@ pub struct RequestStats {
     /// prompt to the largest compiled bucket — surfaced exactly like the
     /// `max_new` clamp so truncation is never silent.
     pub truncated_prompt_from: Option<usize>,
+    /// Time to first token: queue wait + prefill (the first token is
+    /// sampled from the prefill logits on every serving path).
+    pub ttft_ns: u64,
+    /// Inter-token latency accounting over decode commits: the sum and
+    /// max of commit-to-commit gaps. One gap per decode step, so the
+    /// mean is `itl_sum_ns / decode_steps`. Gaps span preemptions —
+    /// the first post-resume token charges the full user-observed stall.
+    pub itl_sum_ns: u64,
+    pub itl_max_ns: u64,
 }
 
 impl RequestStats {
@@ -111,6 +126,15 @@ impl RequestStats {
             0.0
         } else {
             self.decode_steps as f64 / self.decode_time.as_secs_f64()
+        }
+    }
+
+    /// Mean inter-token gap in ns (0 when no decode steps ran).
+    pub fn itl_mean_ns(&self) -> u64 {
+        if self.decode_steps == 0 {
+            0
+        } else {
+            self.itl_sum_ns / self.decode_steps as u64
         }
     }
 
@@ -178,9 +202,13 @@ mod tests {
             decode_steps: 100,
             peak_cache_bytes: 250,
             dense_equiv_bytes: 1000,
+            itl_sum_ns: 1000,
+            itl_max_ns: 40,
             ..Default::default()
         };
         assert_eq!(st.decode_tps(), 50.0);
         assert_eq!(st.memory_saving(), 0.75);
+        assert_eq!(st.itl_mean_ns(), 10);
+        assert_eq!(RequestStats::default().itl_mean_ns(), 0);
     }
 }

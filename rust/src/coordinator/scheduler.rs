@@ -23,14 +23,45 @@
 //! gate provided.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::request::Request;
+use crate::obs::registry::{Counter, Registry};
 
 /// Pending queue entry.
 pub struct Pending {
     pub req: Request,
     pub enqueued: Instant,
+}
+
+/// Scheduler-side observability: admission deferrals by reason plus
+/// head-skip/aging events, as registry counters. All increments are
+/// single relaxed atomics, so admission stays lock-free past the one
+/// registration at engine startup.
+pub struct SchedulerObs {
+    /// Deferred because the active set hit `max_batch`.
+    pub defer_batch: Arc<Counter>,
+    /// Deferred because the decode worker pool is saturated.
+    pub defer_slots: Arc<Counter>,
+    /// Deferred because every windowed request over-projects the budget.
+    pub defer_mem: Arc<Counter>,
+    /// Times the lookahead admitted a follower over the queue head.
+    pub head_skips: Arc<Counter>,
+    /// Times a head aged into sticky (window collapsed to head-only).
+    pub sticky_heads: Arc<Counter>,
+}
+
+impl SchedulerObs {
+    pub fn register(registry: &Registry) -> SchedulerObs {
+        SchedulerObs {
+            defer_batch: registry.counter("swan_admit_defer_total", &[("reason", "batch")]),
+            defer_slots: registry.counter("swan_admit_defer_total", &[("reason", "slots")]),
+            defer_mem: registry.counter("swan_admit_defer_total", &[("reason", "mem")]),
+            head_skips: registry.counter("swan_admit_head_skips_total", &[]),
+            sticky_heads: registry.counter("swan_admit_sticky_heads_total", &[]),
+        }
+    }
 }
 
 /// FIFO queue + admission control.
@@ -56,6 +87,8 @@ pub struct Scheduler {
     /// must start with its full skip allowance rather than inherit the
     /// old head's aging.
     skipped_head: Option<u64>,
+    /// Deferral/skip counters (None until the engine wires a registry).
+    obs: Option<SchedulerObs>,
 }
 
 /// Default admission lookahead window (see [`Scheduler::lookahead`]).
@@ -76,7 +109,13 @@ impl Scheduler {
             lookahead: DEFAULT_LOOKAHEAD,
             head_skips: 0,
             skipped_head: None,
+            obs: None,
         }
+    }
+
+    /// Attach admission observability counters (engine startup).
+    pub fn set_obs(&mut self, obs: SchedulerObs) {
+        self.obs = Some(obs);
     }
 
     fn reset_skips(&mut self) {
@@ -176,7 +215,13 @@ impl Scheduler {
         live_bytes: usize,
         project: impl Fn(&Request) -> usize,
     ) -> Option<Pending> {
+        // deferral counters only tick when work is actually waiting — an
+        // idle saturated engine polling an empty queue is not a deferral
+        let waiting = !self.queue.is_empty();
         if active >= self.max_batch {
+            if let Some(obs) = self.obs.as_ref().filter(|_| waiting) {
+                obs.defer_batch.inc();
+            }
             return None;
         }
         // pool-aware admission: the worker pool is saturated — admitting
@@ -184,6 +229,9 @@ impl Scheduler {
         // throughput (decode_slots >= 1 implies active >= 1 here, so the
         // no-deadlock invariant of the memory check below still holds).
         if self.decode_slots > 0 && active >= self.decode_slots {
+            if let Some(obs) = self.obs.as_ref().filter(|_| waiting) {
+                obs.defer_slots.inc();
+            }
             return None;
         }
         self.queue.front()?;
@@ -214,12 +262,21 @@ impl Scheduler {
                 } else {
                     self.head_skips += 1;
                     self.skipped_head = self.queue.front().map(|p| p.req.id);
+                    if let Some(obs) = &self.obs {
+                        obs.head_skips.inc();
+                        if self.head_skips == MAX_HEAD_SKIPS {
+                            obs.sticky_heads.inc();
+                        }
+                    }
                 }
                 // remove(i) preserves the relative order of the rest
                 return self.queue.remove(i);
             }
         }
         // every windowed request over-projects: defer until memory frees
+        if let Some(obs) = &self.obs {
+            obs.defer_mem.inc();
+        }
         None
     }
 }
@@ -235,6 +292,7 @@ mod tests {
             params: crate::api::GenParams::new(8),
             cancel: crate::api::CancelToken::new(),
             clamped_from: None,
+            trace: crate::obs::trace::Trace::new(),
         }
     }
 
@@ -430,6 +488,40 @@ mod tests {
         s.enqueue(req(8, 4));
         let ids: Vec<u64> = s.queued().map(|r| r.id).collect();
         assert_eq!(ids, vec![7, 8]);
+    }
+
+    /// Deferral/skip counters tick by reason, and never on an empty
+    /// queue (a saturated idle engine is not "deferring" anything).
+    #[test]
+    fn obs_counters_track_deferral_reasons() {
+        let registry = crate::obs::Registry::new();
+        let obs = SchedulerObs::register(&registry);
+        let (batch, slots, mem, skips) = (
+            obs.defer_batch.clone(),
+            obs.defer_slots.clone(),
+            obs.defer_mem.clone(),
+            obs.head_skips.clone(),
+        );
+        let mut s = Scheduler::new(2, 1000);
+        s.set_obs(obs);
+        // empty queue: a full batch is not a deferral
+        assert!(s.admit_next(2, 0, |_| 0).is_none());
+        assert_eq!(batch.get(), 0);
+        s.enqueue(req(1, 900));
+        assert!(s.admit_next(2, 0, |_| 0).is_none());
+        assert_eq!(batch.get(), 1);
+        s.set_decode_slots(1);
+        assert!(s.admit_next(1, 0, |_| 0).is_none());
+        assert_eq!(slots.get(), 1);
+        s.set_decode_slots(0);
+        // busy + over budget everywhere in the window -> mem deferral
+        let proj = |r: &Request| r.prompt.len();
+        assert!(s.admit_next(1, 500, proj).is_none());
+        assert_eq!(mem.get(), 1);
+        // an admissible follower skips the head -> head_skips ticks
+        s.enqueue(req(2, 100));
+        assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 2);
+        assert_eq!(skips.get(), 1);
     }
 
     #[test]

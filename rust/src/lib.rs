@@ -30,6 +30,10 @@
 //!   fleet to layer-sharded pipeline groups (contiguous layer ranges per
 //!   stage, batched cross-stage activation handoff) for models whose KV
 //!   working set exceeds any single engine's budget.
+//! * [`obs`] — dependency-free observability: an atomic counter/gauge
+//!   registry with lock-free log2 latency histograms, per-request
+//!   lifecycle traces, and the Prometheus text exposition behind the
+//!   `METRICS` / `TRACE <id>` wire verbs.
 //! * [`simd`] — runtime-dispatched kernel layer (scalar / AVX2+FMA,
 //!   selected once at startup) behind every dense primitive and the
 //!   sparse CSR walks; `--kernels auto|scalar|avx2` pins the path.
@@ -62,6 +66,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
 pub mod model;
+pub mod obs;
 pub mod pool;
 pub mod repro;
 pub mod runtime;

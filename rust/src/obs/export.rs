@@ -1,0 +1,201 @@
+//! Prometheus text exposition (format 0.0.4) over one or more
+//! registries.
+//!
+//! Fleet merge rules, chosen to match how each metric class is read:
+//!
+//! * **counters** — summed across sources that registered the same
+//!   `(name, labels)` series (a fleet-total `swan_requests_total` is
+//!   what a rate() query wants);
+//! * **gauges** — emitted per source, with the source's identity label
+//!   (e.g. `shard="1"`) injected, since point-in-time values like
+//!   `swan_kv_bytes` or `swan_k_active` are meaningless summed across
+//!   heterogeneous shards;
+//! * **histograms** — bucket-wise merged (exact — see
+//!   `Histogram::merge_from`), so fleet `swan_ttft_seconds_bucket{le=..}`
+//!   quantiles reflect every request wherever it ran.
+
+use std::collections::BTreeMap;
+
+use super::histogram::{bucket_le_ns, HistSnapshot, N_BUCKETS};
+use super::registry::{Registry, SnapValue};
+
+/// One registry to export, with an optional identity label injected
+/// into its gauges (`("shard", "0")`); `None` for server-level series.
+pub struct Source<'a> {
+    pub label: Option<(String, String)>,
+    pub registry: &'a Registry,
+}
+
+impl<'a> Source<'a> {
+    pub fn new(registry: &'a Registry) -> Source<'a> {
+        Source { label: None, registry }
+    }
+
+    pub fn shard(id: u64, registry: &'a Registry) -> Source<'a> {
+        Source { label: Some(("shard".to_string(), id.to_string())), registry }
+    }
+}
+
+/// Escape a label value per the exposition format.
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a label set as `{k="v",...}` (empty string if none).
+fn label_block(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape(v))).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Nanoseconds → seconds, rendered as a plain decimal float (Rust's
+/// f64 Display never uses exponent notation, so every value parses).
+fn secs(ns: u64) -> String {
+    format!("{}", ns as f64 / 1e9)
+}
+
+enum Merged {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistSnapshot),
+}
+
+impl Merged {
+    fn kind(&self) -> &'static str {
+        match self {
+            Merged::Counter(_) => "counter",
+            Merged::Gauge(_) => "gauge",
+            Merged::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Render the fleet exposition over `sources`. Series are grouped by
+/// metric name (one `# TYPE` line each), merged per the module rules,
+/// and emitted in sorted order so output is stable for golden tests.
+pub fn render(sources: &[Source]) -> String {
+    // name -> (kind, label-block -> merged value)
+    let mut families: BTreeMap<String, (&'static str, BTreeMap<String, Merged>)> = BTreeMap::new();
+    for src in sources {
+        for s in src.registry.snapshot() {
+            let mut labels = s.labels.clone();
+            if let SnapValue::Gauge(_) = s.value {
+                if let Some((k, v)) = &src.label {
+                    labels.push((k.clone(), v.clone()));
+                }
+            }
+            labels.sort();
+            let key = label_block(&labels);
+            let new = match s.value {
+                SnapValue::Counter(v) => Merged::Counter(v),
+                SnapValue::Gauge(v) => Merged::Gauge(v),
+                SnapValue::Histogram(h) => Merged::Histogram(h),
+            };
+            let fam =
+                families.entry(s.name.clone()).or_insert_with(|| (new.kind(), BTreeMap::new()));
+            if fam.0 != new.kind() {
+                // Kind conflict across sources: first registration wins;
+                // the mismatched series is dropped rather than emitting
+                // an invalid exposition.
+                debug_assert!(
+                    false,
+                    "metric {} registered as {} and {}",
+                    s.name,
+                    fam.0,
+                    new.kind()
+                );
+                continue;
+            }
+            match fam.1.entry(key) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(new);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => match (e.get_mut(), new) {
+                    (Merged::Counter(a), Merged::Counter(b)) => *a += b,
+                    (Merged::Histogram(a), Merged::Histogram(b)) => a.merge(&b),
+                    // Gauges carry per-source labels, so a key collision
+                    // means two identically-labeled sources: last wins.
+                    (Merged::Gauge(a), Merged::Gauge(b)) => *a = b,
+                    _ => {}
+                },
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (name, (kind, series)) in &families {
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        for (key, value) in series {
+            match value {
+                Merged::Counter(v) | Merged::Gauge(v) => {
+                    out.push_str(&format!("{name}{key} {v}\n"));
+                }
+                Merged::Histogram(h) => render_histogram(&mut out, name, key, h),
+            }
+        }
+    }
+    out
+}
+
+/// Emit cumulative `_bucket{le=...}` lines plus `_sum` / `_count`,
+/// with `le` bounds converted from ns to seconds.
+fn render_histogram(out: &mut String, name: &str, key: &str, h: &HistSnapshot) {
+    // Splice `le` into an existing label block or open a fresh one.
+    let with_le = |le: &str| {
+        if key.is_empty() {
+            format!("{{le=\"{le}\"}}")
+        } else {
+            format!("{},le=\"{le}\"}}", &key[..key.len() - 1])
+        }
+    };
+    let mut cum = 0u64;
+    for (i, &n) in h.buckets.iter().enumerate().take(N_BUCKETS - 1) {
+        cum += n;
+        let le = secs(bucket_le_ns(i).expect("non-overflow bucket has a bound"));
+        out.push_str(&format!("{name}_bucket{} {cum}\n", with_le(&le)));
+    }
+    cum += h.buckets[N_BUCKETS - 1];
+    out.push_str(&format!("{name}_bucket{} {cum}\n", with_le("+Inf")));
+    out.push_str(&format!("{name}_sum{key} {}\n", secs(h.sum)));
+    out.push_str(&format!("{name}_count{key} {cum}\n"));
+}
+
+/// Convenience: render one registry with no identity label.
+pub fn render_one(registry: &Registry) -> String {
+    render(&[Source::new(registry)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_sum_and_gauges_split_across_sources() {
+        let (a, b) = (Registry::new(), Registry::new());
+        a.counter("swan_requests_total", &[("outcome", "completed")]).add(3);
+        b.counter("swan_requests_total", &[("outcome", "completed")]).add(4);
+        a.gauge("swan_k_active", &[]).set(8);
+        b.gauge("swan_k_active", &[]).set(4);
+        let text = render(&[Source::shard(0, &a), Source::shard(1, &b)]);
+        assert!(text.contains("swan_requests_total{outcome=\"completed\"} 7\n"), "{text}");
+        assert!(text.contains("swan_k_active{shard=\"0\"} 8\n"), "{text}");
+        assert!(text.contains("swan_k_active{shard=\"1\"} 4\n"), "{text}");
+        assert!(text.contains("# TYPE swan_k_active gauge\n"));
+    }
+
+    #[test]
+    fn histogram_lines_are_cumulative_with_inf() {
+        let r = Registry::new();
+        let h = r.histogram("swan_ttft_seconds", &[]);
+        h.record_ns(1_000);
+        h.record_ns(2_000_000);
+        let text = render_one(&r);
+        assert!(text.contains("# TYPE swan_ttft_seconds histogram\n"));
+        assert!(text.contains("swan_ttft_seconds_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("swan_ttft_seconds_count 2\n"));
+        assert!(text.contains("swan_ttft_seconds_sum 0.002001\n"), "{text}");
+    }
+}

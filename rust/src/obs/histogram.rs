@@ -1,0 +1,232 @@
+//! Lock-free fixed-bucket log2 histogram.
+//!
+//! The decode hot path records one sample per committed token, so the
+//! recording primitive must be wait-free: `record_ns` is exactly two
+//! `fetch_add(Relaxed)` operations on pre-sized atomic buckets — no
+//! Mutex, no allocation, no branch on contention. Bucket `i` covers the
+//! half-open power-of-two range `(2^(i-1), 2^i]` nanoseconds (bucket 0
+//! holds `0..=1`), which gives ~2x relative-error quantiles over twelve
+//! decades — from 1 ns to ~9 minutes — in 40 u64 slots. The last bucket
+//! is the overflow (`+Inf`) bucket.
+//!
+//! Fleet aggregation is bucket-wise addition (`merge_from`), which is
+//! exact: merging N shard histograms is indistinguishable from having
+//! recorded every sample into one histogram (associativity is locked by
+//! `tests/obs.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bucket count: upper bounds `2^0 .. 2^38` ns plus one overflow bucket.
+/// `2^38` ns is ~275 s, comfortably above any per-request latency here.
+pub const N_BUCKETS: usize = 40;
+
+/// Index of the bucket a value lands in: the bit length of `v - 1`,
+/// clamped to the overflow bucket. This places `v` in the first bucket
+/// whose upper bound `2^i` satisfies `v <= 2^i`.
+#[inline]
+pub fn bucket_for(v: u64) -> usize {
+    let bits = (64 - v.saturating_sub(1).leading_zeros()) as usize;
+    bits.min(N_BUCKETS - 1)
+}
+
+/// Upper bound (inclusive) of bucket `i` in nanoseconds; `None` for the
+/// overflow bucket.
+#[inline]
+pub fn bucket_le_ns(i: usize) -> Option<u64> {
+    if i + 1 < N_BUCKETS {
+        Some(1u64 << i)
+    } else {
+        None
+    }
+}
+
+/// A lock-free log2-bucketed histogram of nanosecond (or unitless)
+/// samples. All methods take `&self`; recording never blocks.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    /// Record one sample. Two relaxed `fetch_add`s — safe on the
+    /// per-token decode path.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_for(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration (saturating at `u64::MAX` ns).
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record a unitless value (counts, tokens, blocks) into the same
+    /// log2 buckets; exported quantiles then read as values, not time.
+    #[inline]
+    pub fn record_value(&self, v: u64) {
+        self.record_ns(v);
+    }
+
+    /// Total samples recorded (sum over buckets). Export-path only.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded values, in the recorded unit.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Bucket-wise add `other` into `self` (fleet merge). Exact: the
+    /// result equals recording both sample streams into one histogram.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy for export and quantiles.
+    /// (Concurrent recording may skew `sum` vs buckets by in-flight
+    /// samples; fine for monitoring.)
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Approximate quantile in nanoseconds (see `HistSnapshot::quantile_ns`).
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        self.snapshot().quantile_ns(q)
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(f, "Histogram {{ count: {}, sum: {} }}", s.count(), s.sum)
+    }
+}
+
+/// Plain-data snapshot of a [`Histogram`]: the export surface.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; N_BUCKETS],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise add (fleet merge on snapshots).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (mine, theirs) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *mine += theirs;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Approximate quantile `q` in [0, 1], linearly interpolated within
+    /// the bucket holding the target rank. Relative error is bounded by
+    /// the 2x bucket width. Returns 0.0 for an empty histogram.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let next = seen + n;
+            if (next as f64) >= rank {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = match bucket_le_ns(i) {
+                    Some(le) => le as f64,
+                    // Overflow bucket: no upper bound; report its floor.
+                    None => return lo,
+                };
+                let frac = ((rank - seen as f64) / n as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            seen = next;
+        }
+        // Unreachable in practice (rank <= total); report the top bound.
+        (1u64 << (N_BUCKETS - 2)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_half_open_powers_of_two() {
+        assert_eq!(bucket_for(0), 0);
+        assert_eq!(bucket_for(1), 0);
+        assert_eq!(bucket_for(2), 1);
+        assert_eq!(bucket_for(3), 2);
+        assert_eq!(bucket_for(4), 2);
+        assert_eq!(bucket_for(5), 3);
+        assert_eq!(bucket_for(1 << 20), 20);
+        assert_eq!(bucket_for((1 << 20) + 1), 21);
+        assert_eq!(bucket_for(u64::MAX), N_BUCKETS - 1);
+        // Every value lands in a bucket whose le bound covers it.
+        for v in [0u64, 1, 7, 1000, 123_456_789] {
+            let le = bucket_le_ns(bucket_for(v)).unwrap();
+            assert!(v <= le, "{v} > le {le}");
+            if v > 1 {
+                assert!(v > le / 2, "{v} not in ({}, {le}]", le / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn record_count_sum_quantile() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record_ns(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1100);
+        let p50 = h.quantile_ns(0.5);
+        // Median sample is 30, bucket (16, 32]: interpolation stays in range.
+        assert!(p50 > 16.0 && p50 <= 32.0, "p50 = {p50}");
+        let p100 = h.quantile_ns(1.0);
+        assert!(p100 > 512.0 && p100 <= 1024.0, "p100 = {p100}");
+        assert_eq!(Histogram::new().quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let (a, b, one) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for v in 1..100u64 {
+            let target = if v % 2 == 0 { &a } else { &b };
+            target.record_ns(v * 17);
+            one.record_ns(v * 17);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.snapshot(), one.snapshot());
+    }
+}

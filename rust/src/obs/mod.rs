@@ -1,0 +1,29 @@
+//! `swan::obs` — dependency-free observability for the serving fleet.
+//!
+//! Three pieces, threaded through every serving layer:
+//!
+//! 1. **Registry** ([`registry`]) — named atomic [`Counter`]s /
+//!    [`Gauge`]s plus lock-free log2 [`Histogram`]s ([`histogram`]).
+//!    Registration locks once per series at startup; recording is pure
+//!    relaxed atomics, so nothing here may stall the per-token decode
+//!    loop. Per-shard/per-stage dimensions are label sets
+//!    (`{stage="1"}`), and fleet aggregation is exact bucket-wise merge.
+//! 2. **Tracing** ([`trace`]) — each request carries a [`Trace`] that
+//!    timestamps submit → admit → prefill → first token → every decode
+//!    commit → preempt/resume → retire. Retired traces land in a
+//!    bounded per-engine [`TraceRing`]; the `TRACE <id>` wire verb dumps
+//!    one as a JSONL timeline.
+//! 3. **Export** ([`export`]) — the `METRICS` wire verb renders all
+//!    registries as Prometheus text exposition; `STATS` reads the same
+//!    handles (see `coordinator::metrics`), so the two surfaces cannot
+//!    disagree.
+
+pub mod export;
+pub mod histogram;
+pub mod registry;
+pub mod trace;
+
+pub use export::{render, render_one, Source};
+pub use histogram::{HistSnapshot, Histogram, N_BUCKETS};
+pub use registry::{Counter, Gauge, Registry};
+pub use trace::{Trace, TraceKind, TraceRing, TRACE_RING_CAP};

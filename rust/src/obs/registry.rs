@@ -1,0 +1,242 @@
+//! Named metric registry: atomic counters, gauges, and histograms.
+//!
+//! Registration (get-or-create by name + label set) takes a Mutex once
+//! per series at startup; the returned `Arc` handles are then recorded
+//! through with plain atomics — the registry lock is never touched on
+//! the hot path. `with_registration_locked` makes that claim testable:
+//! it runs a closure while the registry's only lock is held, so any
+//! recording call that secretly needed it would self-deadlock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::{HistSnapshot, Histogram};
+
+/// Monotone atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins atomic gauge (u64 value space; `u64::MAX` is used by
+/// callers as an "unbounded" sentinel where that semantic exists).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The live handle a series points at.
+#[derive(Clone, Debug)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One registered time series: a metric name, a (possibly empty) label
+/// set, and the live handle.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub metric: Metric,
+}
+
+/// Point-in-time value of a series, for export.
+#[derive(Clone, Debug)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistSnapshot),
+}
+
+/// Snapshot of one series.
+#[derive(Clone, Debug)]
+pub struct SeriesSnapshot {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: SnapValue,
+}
+
+/// A registry of named series. Cheap to share (`Arc<Registry>`); one
+/// per engine/group, plus one server-level registry on the router.
+#[derive(Debug, Default)]
+pub struct Registry {
+    series: Mutex<Vec<Series>>,
+}
+
+fn labels_of(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register a counter under `name` + `labels`. Repeated calls
+    /// with the same identity return the same handle.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let labels = labels_of(labels);
+        let mut series = self.series.lock().unwrap();
+        for s in series.iter() {
+            if s.name == name && s.labels == labels {
+                if let Metric::Counter(c) = &s.metric {
+                    return c.clone();
+                }
+            }
+        }
+        let c = Arc::new(Counter::new());
+        series.push(Series {
+            name: name.to_string(),
+            labels,
+            metric: Metric::Counter(c.clone()),
+        });
+        c
+    }
+
+    /// Get-or-register a gauge under `name` + `labels`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let labels = labels_of(labels);
+        let mut series = self.series.lock().unwrap();
+        for s in series.iter() {
+            if s.name == name && s.labels == labels {
+                if let Metric::Gauge(g) = &s.metric {
+                    return g.clone();
+                }
+            }
+        }
+        let g = Arc::new(Gauge::new());
+        series.push(Series { name: name.to_string(), labels, metric: Metric::Gauge(g.clone()) });
+        g
+    }
+
+    /// Get-or-register a histogram under `name` + `labels`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let labels = labels_of(labels);
+        let mut series = self.series.lock().unwrap();
+        for s in series.iter() {
+            if s.name == name && s.labels == labels {
+                if let Metric::Histogram(h) = &s.metric {
+                    return h.clone();
+                }
+            }
+        }
+        let h = Arc::new(Histogram::new());
+        series.push(Series {
+            name: name.to_string(),
+            labels,
+            metric: Metric::Histogram(h.clone()),
+        });
+        h
+    }
+
+    /// Snapshot every registered series (export path).
+    pub fn snapshot(&self) -> Vec<SeriesSnapshot> {
+        let series = self.series.lock().unwrap();
+        series
+            .iter()
+            .map(|s| SeriesSnapshot {
+                name: s.name.clone(),
+                labels: s.labels.clone(),
+                value: match &s.metric {
+                    Metric::Counter(c) => SnapValue::Counter(c.get()),
+                    Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                    Metric::Histogram(h) => SnapValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect()
+    }
+
+    /// Test hook: run `f` while the registry's registration lock is
+    /// held by this thread. Any metric-recording call inside `f` that
+    /// touched this lock would self-deadlock (std Mutex is not
+    /// reentrant), so a completing closure proves recording is
+    /// registry-lock-free. See `tests/obs.rs`.
+    pub fn with_registration_locked(&self, f: impl FnOnce()) {
+        let _guard = self.series.lock().unwrap();
+        f();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_register_returns_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("swan_x_total", &[("outcome", "ok")]);
+        let b = r.counter("swan_x_total", &[("outcome", "ok")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        // Different label set is a different series.
+        let c = r.counter("swan_x_total", &[("outcome", "err")]);
+        assert_eq!(c.get(), 0);
+        assert_eq!(r.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn gauge_set_and_sentinel() {
+        let r = Registry::new();
+        let g = r.gauge("swan_pool_blocks_target", &[]);
+        g.set(u64::MAX);
+        assert_eq!(g.get(), u64::MAX);
+        g.set(64);
+        g.add(3);
+        g.sub(1);
+        assert_eq!(g.get(), 66);
+    }
+}

@@ -1,0 +1,217 @@
+//! Request-lifecycle tracing.
+//!
+//! A [`Trace`] rides inside each `Request` and is owned by the one
+//! coordinator thread that drives that request, so recording an event
+//! is a plain `Vec::push` — no lock, no atomics, nothing shared. Only
+//! at retire (or cancel-purge) does the finished trace get pushed into
+//! the engine's bounded [`TraceRing`], which *is* mutex-guarded but is
+//! touched once per request lifetime, never per token.
+//!
+//! The `TRACE <id>` wire verb renders a retained trace as JSONL — one
+//! event object per line — for offline timeline reconstruction.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Cap on events per trace: a preempted long generation records one
+/// `Decode` event per committed token, so bound the vector and count
+/// drops instead of growing without limit.
+pub const MAX_TRACE_EVENTS: usize = 4096;
+
+/// Default retired-trace retention per engine/group.
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Lifecycle event kinds, in the order a healthy request emits them.
+/// `Preempt`/`Resume` pairs may repeat; `Decode` repeats per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Request accepted by submit(): id assigned, queued.
+    Submit,
+    /// Popped from the scheduler queue into the active batch.
+    Admit,
+    /// Prompt prefill finished (also re-prefill on preemption resume).
+    PrefillDone,
+    /// First generated token committed (TTFT point).
+    FirstToken,
+    /// One decode-iteration token committed.
+    Decode,
+    /// Evicted mid-flight (blocks reclaimed, requeued at front).
+    Preempt,
+    /// Re-admitted after preemption; replay rebuild starts.
+    Resume,
+    /// Final: completed, cancelled, or purged.
+    Retire,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Submit => "submit",
+            TraceKind::Admit => "admit",
+            TraceKind::PrefillDone => "prefill_done",
+            TraceKind::FirstToken => "first_token",
+            TraceKind::Decode => "decode",
+            TraceKind::Preempt => "preempt",
+            TraceKind::Resume => "resume",
+            TraceKind::Retire => "retire",
+        }
+    }
+}
+
+/// One timestamped lifecycle event, offset from the trace origin.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub t_ns: u64,
+    pub kind: TraceKind,
+}
+
+/// Per-request event timeline. Cloneable plain data (the origin is a
+/// monotonic `Instant`); single-owner, so recording never synchronizes.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    /// Request id; 0 until `begin` stamps it at submit time.
+    pub id: u64,
+    start: Instant,
+    events: Vec<TraceEvent>,
+    /// Events discarded past `MAX_TRACE_EVENTS`.
+    dropped: u64,
+}
+
+impl Default for Trace {
+    fn default() -> Trace {
+        Trace::new()
+    }
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace { id: 0, start: Instant::now(), events: Vec::new(), dropped: 0 }
+    }
+
+    /// Stamp the assigned request id and record the `Submit` event.
+    /// Re-anchors the origin so `t_ns` offsets start at submission.
+    pub fn begin(&mut self, id: u64) {
+        self.id = id;
+        self.start = Instant::now();
+        self.record(TraceKind::Submit);
+    }
+
+    /// Record one event at "now". Bounded: past `MAX_TRACE_EVENTS` the
+    /// event is counted in `dropped` instead (the terminal `Retire` is
+    /// always kept so lifecycles stay complete).
+    #[inline]
+    pub fn record(&mut self, kind: TraceKind) {
+        if self.events.len() >= MAX_TRACE_EVENTS && kind != TraceKind::Retire {
+            self.dropped += 1;
+            return;
+        }
+        let t_ns = self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.events.push(TraceEvent { t_ns, kind });
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Offset of the most recent event of `kind`, if any.
+    pub fn last_ns(&self, kind: TraceKind) -> Option<u64> {
+        self.events.iter().rev().find(|e| e.kind == kind).map(|e| e.t_ns)
+    }
+
+    /// Render as JSONL: one `{"id":..,"event":..,"t_ns":..}` object per
+    /// line, in recording order; a final `{"id":..,"dropped":N}` line
+    /// appears only when events were discarded.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::with_capacity(self.events.len() * 48);
+        for e in &self.events {
+            out.push_str(&format!(
+                "{{\"id\":{},\"event\":\"{}\",\"t_ns\":{}}}\n",
+                self.id,
+                e.kind.name(),
+                e.t_ns
+            ));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("{{\"id\":{},\"dropped\":{}}}\n", self.id, self.dropped));
+        }
+        out
+    }
+}
+
+/// Bounded ring of retired traces, newest-kept. Mutex-guarded, but only
+/// touched at request retire/lookup — never on the per-token path.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<VecDeque<Trace>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap: cap.max(1), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Retain `trace`, evicting the oldest retained trace when full.
+    pub fn push(&self, trace: Trace) {
+        let mut ring = self.inner.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(trace);
+    }
+
+    /// JSONL timeline for request `id`, if still retained.
+    pub fn jsonl(&self, id: u64) -> Option<String> {
+        let ring = self.inner.lock().unwrap();
+        ring.iter().rev().find(|t| t.id == id).map(|t| t.jsonl())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_caps_and_serves_newest() {
+        let ring = TraceRing::new(2);
+        for id in 1..=3u64 {
+            let mut t = Trace::new();
+            t.begin(id);
+            t.record(TraceKind::Retire);
+            ring.push(t);
+        }
+        assert_eq!(ring.len(), 2);
+        assert!(ring.jsonl(1).is_none(), "oldest evicted");
+        let j = ring.jsonl(3).expect("newest retained");
+        assert!(j.contains("\"event\":\"submit\""));
+        assert!(j.contains("\"event\":\"retire\""));
+        assert!(j.lines().all(|l| l.starts_with('{') && l.ends_with('}')));
+    }
+
+    #[test]
+    fn event_cap_keeps_retire() {
+        let mut t = Trace::new();
+        t.begin(9);
+        for _ in 0..(MAX_TRACE_EVENTS + 10) {
+            t.record(TraceKind::Decode);
+        }
+        t.record(TraceKind::Retire);
+        assert_eq!(t.events().len(), MAX_TRACE_EVENTS + 1);
+        assert_eq!(t.events().last().unwrap().kind, TraceKind::Retire);
+        assert!(t.dropped() > 0);
+        assert!(t.jsonl().contains("\"dropped\""));
+    }
+}

@@ -46,7 +46,33 @@ pub use block_table::{
 pub use paged_cache::{PagedHybridCache, PagedSwanCache};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs::histogram::Histogram;
+use crate::obs::registry::Registry;
+
+/// Optional pool-latency instruments: how long `lease` / `give_back`
+/// spend inside the pool (lock wait + free-list work).  Recording is a
+/// lock-free histogram append and happens AFTER the pool mutex drops,
+/// so instrumented pools serialize exactly like bare ones.
+#[derive(Clone)]
+pub struct PoolObs {
+    pub lease_seconds: Arc<Histogram>,
+    pub give_back_seconds: Arc<Histogram>,
+}
+
+impl PoolObs {
+    /// Register the pool instruments under a stage label (pipeline
+    /// groups run one pool per stage).
+    pub fn register(registry: &Registry, stage: usize) -> PoolObs {
+        let s = stage.to_string();
+        PoolObs {
+            lease_seconds: registry.histogram("swan_pool_lease_seconds", &[("stage", &s)]),
+            give_back_seconds: registry.histogram("swan_pool_give_back_seconds", &[("stage", &s)]),
+        }
+    }
+}
 
 /// One owned block of cache storage, leased from a [`BlockPool`].
 ///
@@ -112,6 +138,8 @@ pub struct BlockPool {
     target_blocks: usize,
     /// Lock-free lease gauge for STATS rendering.
     leased: AtomicUsize,
+    /// Latency instruments (None for bare pools).
+    obs: Option<PoolObs>,
 }
 
 impl BlockPool {
@@ -120,12 +148,19 @@ impl BlockPool {
             inner: Mutex::new(PoolInner { alloc: BlockAllocator::new(0), spare: Vec::new() }),
             target_blocks,
             leased: AtomicUsize::new(0),
+            obs: None,
         }
+    }
+
+    /// A pool whose lease/give-back latencies record into `obs`.
+    pub fn with_obs(target_blocks: usize, obs: PoolObs) -> BlockPool {
+        BlockPool { obs: Some(obs), ..BlockPool::new(target_blocks) }
     }
 
     /// Lease one block (never fails — see module docs).  The returned
     /// buffer is owned by the caller until [`BlockPool::give_back`].
     pub fn lease(&self) -> BlockBuf {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
         let mut g = self.inner.lock().unwrap();
         let id = g.alloc.alloc_grow();
         let buf = match g.spare.pop() {
@@ -137,17 +172,24 @@ impl BlockPool {
         };
         drop(g);
         self.leased.fetch_add(1, Ordering::Relaxed);
+        if let (Some(obs), Some(t0)) = (&self.obs, t0) {
+            obs.lease_seconds.record(t0.elapsed());
+        }
         buf
     }
 
     /// Return a leased block; its id frees and its storage recycles.
     pub fn give_back(&self, buf: BlockBuf) {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
         let mut g = self.inner.lock().unwrap();
         if g.alloc.release(buf.id) {
             g.spare.push(buf);
         }
         drop(g);
         self.leased.fetch_sub(1, Ordering::Relaxed);
+        if let (Some(obs), Some(t0)) = (&self.obs, t0) {
+            obs.give_back_seconds.record(t0.elapsed());
+        }
     }
 
     /// Blocks currently leased out.
@@ -201,6 +243,20 @@ mod tests {
         assert!(b.vals.capacity() >= cap);
         pool.check_invariants().unwrap();
         pool.give_back(b);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn instrumented_pool_records_latencies() {
+        let reg = Registry::new();
+        let obs = PoolObs::register(&reg, 2);
+        let pool = BlockPool::with_obs(4, obs.clone());
+        let a = pool.lease();
+        let b = pool.lease();
+        pool.give_back(a);
+        pool.give_back(b);
+        assert_eq!(obs.lease_seconds.snapshot().count(), 2);
+        assert_eq!(obs.give_back_seconds.snapshot().count(), 2);
         pool.check_invariants().unwrap();
     }
 

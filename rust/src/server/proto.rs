@@ -46,6 +46,12 @@ pub enum Command {
     /// SET balance <policy> — swap the router's placement policy live.
     SetBalance(String),
     Stats,
+    /// `METRICS` — Prometheus text exposition of the fleet registries,
+    /// terminated by a `# EOF` line.
+    Metrics,
+    /// `TRACE <id>` — one request's lifecycle timeline as JSONL,
+    /// terminated by a lone `.` line (`ERR not-found …` if unknown).
+    Trace(u64),
     Ping,
     Quit,
 }
@@ -278,6 +284,15 @@ pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
             }
         }
         "STATS" => Ok(Command::Stats),
+        "METRICS" => Ok(Command::Metrics),
+        "TRACE" => {
+            let id = rest.trim();
+            id.parse().map(Command::Trace).map_err(|_| ProtoError::BadArgs {
+                verb: "TRACE",
+                expected: "a request id",
+                got: id.to_string(),
+            })
+        }
         "PING" => Ok(Command::Ping),
         "QUIT" => Ok(Command::Quit),
         _ => Err(ProtoError::UnknownCommand(verb_raw.to_string())),
@@ -393,6 +408,16 @@ mod tests {
         assert_eq!(parse_line("stats").unwrap(), Command::Stats);
         assert_eq!(parse_line("PING").unwrap(), Command::Ping);
         assert_eq!(parse_line("QUIT\r\n").unwrap(), Command::Quit);
+    }
+
+    #[test]
+    fn parses_metrics_and_trace() {
+        assert_eq!(parse_line("METRICS").unwrap(), Command::Metrics);
+        assert_eq!(parse_line("metrics\r\n").unwrap(), Command::Metrics);
+        assert_eq!(parse_line("TRACE 42").unwrap(), Command::Trace(42));
+        assert_eq!(parse_line("trace 7\n").unwrap(), Command::Trace(7));
+        assert_eq!(parse_line("TRACE").unwrap_err().code(), "bad-args");
+        assert_eq!(parse_line("TRACE abc").unwrap_err().code(), "bad-args");
     }
 
     #[test]

@@ -57,6 +57,14 @@ fn write_done(
         resp.stats.decode_tps(),
         resp.stats.memory_saving() * 100.0
     );
+    // SLO fields: TTFT (queue + prefill) and the inter-token gap stats.
+    // Appended after the historical fields so line-prefix matchers hold.
+    stat.push_str(&format!(
+        " ttft_ms={:.2} itl_mean_ms={:.2} itl_max_ms={:.2}",
+        resp.stats.ttft_ns as f64 / 1e6,
+        resp.stats.itl_mean_ns() as f64 / 1e6,
+        resp.stats.itl_max_ns as f64 / 1e6,
+    ));
     if let Some(requested) = resp.stats.clamped_from {
         stat.push_str(&format!(" requested={requested}"));
     }
@@ -117,6 +125,12 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(_) => return,
     };
+    // per-connection wire counters, in the router's server registry so
+    // the METRICS exposition carries them next to the shard series
+    let obs = router.server_registry();
+    let wire_lines = obs.counter("swan_wire_lines_total", &[]);
+    let proto_errors = obs.counter("swan_wire_errors_total", &[("kind", "proto")]);
+    obs.counter("swan_connections_total", &[]).inc();
     let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -124,6 +138,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
         if line.trim().is_empty() {
             continue;
         }
+        wire_lines.inc();
         match parse_line(&line) {
             Ok(Command::Quit) => break,
             Ok(Command::Ping) => {
@@ -135,6 +150,27 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                 let _ = write!(w, "{s}");
                 let _ = writeln!(w, ".");
             }
+            Ok(Command::Metrics) => {
+                // Prometheus text exposition; `# EOF` terminates the
+                // response (a comment line, so scrapers parse it away)
+                let m = router.metrics_text();
+                let mut w = writer.lock().unwrap();
+                let _ = write!(w, "{m}");
+                let _ = writeln!(w, "# EOF");
+            }
+            Ok(Command::Trace(id)) => match router.trace_jsonl(id) {
+                Some(j) => {
+                    let mut w = writer.lock().unwrap();
+                    let _ = write!(w, "{j}");
+                    let _ = writeln!(w, ".");
+                }
+                None => {
+                    let _ = writeln!(
+                        writer.lock().unwrap(),
+                        "ERR not-found no trace retained for request {id}"
+                    );
+                }
+            },
             Ok(Command::SetKActive(k)) => {
                 let reply = match router.set_k_active(k) {
                     Ok(_) => "OK".to_string(),
@@ -187,6 +223,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
             }
             Err(e) => {
                 // structured reply; the connection stays open
+                proto_errors.inc();
                 let _ = writeln!(writer.lock().unwrap(), "ERR {} {e}", e.code());
             }
         }

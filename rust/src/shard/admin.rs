@@ -5,18 +5,25 @@
 //! concurrently), gathers the replies, and appends totals aggregated
 //! straight from the shards' shared [`Metrics`] — the aggregate never
 //! blocks on a shard thread, so a wedged shard degrades to a "timed out"
-//! line instead of hanging the whole view.
+//! line instead of hanging the whole view.  `METRICS` and `TRACE <id>`
+//! are fleet operations the same way: the exposition merges every
+//! shard's registry ([`fleet_metrics`]), and trace lookup broadcasts
+//! because the router does not track placement ([`fleet_trace`]).
 
-use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
+use crate::obs::export::{render, Source};
+use crate::obs::registry::Registry;
 use crate::shard::shard::{ShardCmd, ShardHandle};
 use crate::sparse::memory::human_bytes;
 
 /// How long the gather waits on any one shard's stats block.
 const STATS_GATHER_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// How long the gather waits on any one shard's trace lookup.
+const TRACE_GATHER_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Render the fleet view: header, per-shard blocks, aggregate totals.
 pub fn fleet_stats(shards: &[ShardHandle], policy: &str) -> String {
@@ -45,26 +52,26 @@ pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> Strin
     let (mut submitted, mut completed, mut rejected) = (0u64, 0u64, 0u64);
     let (mut cancelled, mut preempted) = (0u64, 0u64);
     let (mut prefill, mut decode) = (0u64, 0u64);
-    let (mut cache, mut dense) = (0usize, 0usize);
-    let (mut pool_total, mut pool_leased) = (0usize, 0usize);
+    let (mut cache, mut dense) = (0u64, 0u64);
+    let (mut pool_total, mut pool_leased) = (0u64, 0u64);
     let mut pool_unbounded = false;
     for m in metrics {
-        submitted += m.requests_submitted.load(Ordering::Relaxed);
-        completed += m.requests_completed.load(Ordering::Relaxed);
-        rejected += m.requests_rejected.load(Ordering::Relaxed);
-        cancelled += m.requests_cancelled.load(Ordering::Relaxed);
-        preempted += m.requests_preempted.load(Ordering::Relaxed);
-        prefill += m.prefill_tokens.load(Ordering::Relaxed);
-        decode += m.decode_tokens.load(Ordering::Relaxed);
-        cache += m.cache_bytes.load(Ordering::Relaxed);
-        dense += m.dense_equiv_bytes.load(Ordering::Relaxed);
-        let pt = m.pool_blocks_total.load(Ordering::Relaxed);
-        if pt == usize::MAX {
+        submitted += m.requests_submitted.get();
+        completed += m.requests_completed.get();
+        rejected += m.requests_rejected.get();
+        cancelled += m.requests_cancelled.get();
+        preempted += m.requests_preempted.get();
+        prefill += m.prefill_tokens.get();
+        decode += m.decode_tokens.get();
+        cache += m.cache_bytes.get();
+        dense += m.dense_equiv_bytes.get();
+        let pt = m.pool_blocks_total.get();
+        if pt == u64::MAX {
             pool_unbounded = true;
         } else {
             pool_total += pt;
         }
-        pool_leased += m.pool_blocks_leased.load(Ordering::Relaxed);
+        pool_leased += m.pool_blocks_leased.get();
     }
     let saving = if dense > 0 { 100.0 * (1.0 - cache as f64 / dense as f64) } else { 0.0 };
     let mut out = format!(
@@ -72,8 +79,8 @@ pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> Strin
          cancelled={cancelled} preempted={preempted}\n\
          fleet tokens: prefill={prefill} decode={decode}\n\
          fleet kv-cache: {} live (dense-equiv {}, saving {saving:.1}%)\n",
-        human_bytes(cache),
-        human_bytes(dense),
+        human_bytes(cache as usize),
+        human_bytes(dense as usize),
     );
     if pool_total > 0 || pool_unbounded {
         let target =
@@ -81,6 +88,33 @@ pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> Strin
         out.push_str(&format!("fleet pool: blocks leased={pool_leased} target={target}\n"));
     }
     out
+}
+
+/// The fleet `METRICS` exposition: the server's own registry
+/// (connection counters, no identity label) plus every shard's registry
+/// as a `shard="i"`-labelled source, merged per the
+/// [`crate::obs::export`] rules.
+pub fn fleet_metrics(shards: &[ShardHandle], server: &Registry) -> String {
+    let mut sources = vec![Source::new(server)];
+    for s in shards {
+        sources.push(Source::shard(s.id as u64, &s.metrics.registry));
+    }
+    render(&sources)
+}
+
+/// `TRACE <id>` fleet-wide: the router does not track placement, so the
+/// lookup broadcasts and the first shard that knows the id answers.
+/// `None` when no shard retains it (never submitted, or evicted from
+/// the retired-trace ring).
+pub fn fleet_trace(shards: &[ShardHandle], id: u64) -> Option<String> {
+    let mut pending = Vec::with_capacity(shards.len());
+    for s in shards {
+        let (tx, rx) = mpsc::channel();
+        if s.send(ShardCmd::Trace { id, reply: tx }).is_ok() {
+            pending.push(rx);
+        }
+    }
+    pending.into_iter().find_map(|rx| rx.recv_timeout(TRACE_GATHER_TIMEOUT).ok().flatten())
 }
 
 #[cfg(test)]
@@ -91,18 +125,58 @@ mod tests {
     fn aggregate_sums_across_shards() {
         let a = Metrics::default();
         let b = Metrics::default();
-        a.requests_submitted.store(3, Ordering::Relaxed);
-        b.requests_submitted.store(4, Ordering::Relaxed);
-        a.decode_tokens.store(10, Ordering::Relaxed);
-        b.decode_tokens.store(30, Ordering::Relaxed);
-        a.cache_bytes.store(256, Ordering::Relaxed);
-        b.cache_bytes.store(256, Ordering::Relaxed);
-        a.dense_equiv_bytes.store(1024, Ordering::Relaxed);
-        b.dense_equiv_bytes.store(1024, Ordering::Relaxed);
+        a.requests_submitted.add(3);
+        b.requests_submitted.add(4);
+        a.decode_tokens.add(10);
+        b.decode_tokens.add(30);
+        a.cache_bytes.set(256);
+        b.cache_bytes.set(256);
+        a.dense_equiv_bytes.set(1024);
+        b.dense_equiv_bytes.set(1024);
         let s = aggregate_totals([&a, &b].into_iter());
         assert!(s.contains("submitted=7"), "{s}");
         assert!(s.contains("decode=40"), "{s}");
         assert!(s.contains("saving 75.0%"), "{s}");
+    }
+
+    #[test]
+    fn fleet_metrics_merges_server_and_shard_sources() {
+        let (h0, _rx0) = ShardHandle::stub(0);
+        let (h1, _rx1) = ShardHandle::stub(1);
+        h0.metrics.requests_completed.add(2);
+        h1.metrics.requests_completed.add(5);
+        h0.metrics.k_active.set(16);
+        h1.metrics.k_active.set(8);
+        let server = Registry::new();
+        server.counter("swan_connections_total", &[]).add(3);
+        let shards = vec![h0, h1];
+        let text = fleet_metrics(&shards, &server);
+        assert!(text.contains("swan_requests_total{outcome=\"completed\"} 7\n"), "{text}");
+        assert!(text.contains("swan_k_active{shard=\"0\"} 16\n"), "{text}");
+        assert!(text.contains("swan_k_active{shard=\"1\"} 8\n"), "{text}");
+        assert!(text.contains("swan_connections_total 3\n"), "{text}");
+    }
+
+    #[test]
+    fn fleet_trace_takes_first_owning_shard() {
+        let (h0, rx0) = ShardHandle::stub(0);
+        let (h1, rx1) = ShardHandle::stub(1);
+        let responders: Vec<_> = [(rx0, None), (rx1, Some("{\"id\":7}\n".to_string()))]
+            .into_iter()
+            .map(|(rx, answer)| {
+                std::thread::spawn(move || {
+                    if let Ok(ShardCmd::Trace { id, reply }) = rx.recv() {
+                        assert_eq!(id, 7);
+                        let _ = reply.send(answer);
+                    }
+                })
+            })
+            .collect();
+        let shards = vec![h0, h1];
+        assert_eq!(fleet_trace(&shards, 7).as_deref(), Some("{\"id\":7}\n"));
+        for r in responders {
+            r.join().unwrap();
+        }
     }
 
     #[test]

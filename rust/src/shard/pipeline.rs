@@ -49,7 +49,10 @@ use crate::coordinator::request::{decode_tokens, Request, RequestStats, Response
 use crate::coordinator::scheduler::Scheduler;
 use crate::kvcache::PolicyKind;
 use crate::model::transformer::{SequenceState, StageInput, SwanModel};
-use crate::pool::{pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache};
+use crate::obs::histogram::Histogram;
+use crate::obs::registry::{Gauge, Registry};
+use crate::obs::trace::{TraceKind, TraceRing, TRACE_RING_CAP};
+use crate::pool::{pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache, PoolObs};
 use crate::shard::shard::{ShardCmd, ShardHandle, ShardStatus};
 use crate::swan::batch::WorkerPool;
 use crate::util::Pcg64;
@@ -87,8 +90,10 @@ pub enum StageCmd {
     /// One decode iteration for the whole ready set: stage 0 consumes
     /// `tokens` (one sampled token per sequence), later stages consume
     /// `h` (one hidden row per sequence).  The last stage answers the
-    /// coordinator with one logits row per sequence.
-    Forward { seqs: Vec<u64>, tokens: Vec<u32>, h: Vec<Vec<f32>> },
+    /// coordinator with one logits row per sequence.  `compute_ns`
+    /// accumulates each stage's model time as the hop travels, so the
+    /// coordinator can split its wall wait into compute vs bubble.
+    Forward { seqs: Vec<u64>, tokens: Vec<u32>, h: Vec<Vec<f32>>, compute_ns: u64 },
     /// Drop the stage caches of retired sequences — both naturally
     /// finished ones and cancellations (`CANCEL <id>` / client
     /// disconnect): the group coordinator marks a cancelled sequence
@@ -111,8 +116,10 @@ pub enum StageCmd {
 pub enum GroupEvent {
     /// Prompt fully prefilled through every stage.
     Prefilled { seq: u64, logits: Vec<f32> },
-    /// Decode iteration complete: one logits row per forwarded sequence.
-    Stepped { seqs: Vec<u64>, logits: Vec<Vec<f32>> },
+    /// Decode iteration complete: one logits row per forwarded sequence,
+    /// plus the chain's summed per-stage compute time (see
+    /// [`StageCmd::Forward`]).
+    Stepped { seqs: Vec<u64>, logits: Vec<Vec<f32>>, compute_ns: u64 },
     /// A stage thread exited abnormally; the chain is unrecoverable.
     StageFailed { stage: usize },
 }
@@ -253,7 +260,7 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                     break;
                 }
             }
-            StageCmd::Forward { seqs: ids, tokens, h } => {
+            StageCmd::Forward { seqs: ids, tokens, h, compute_ns } => {
                 // pull the batch's states out in forward order (disjoint
                 // &mut for decode_step_pipeline), then put them back
                 let mut states: Vec<SequenceState> = ids
@@ -270,6 +277,7 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                 } else {
                     StageInput::Hidden(h)
                 };
+                let t0 = Instant::now();
                 let out = model.decode_step_pipeline(
                     &mut states,
                     input,
@@ -277,17 +285,23 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                     emit_logits,
                     &mut pool,
                 );
+                let compute_ns = compute_ns + t0.elapsed().as_nanos() as u64;
                 for (id, st) in ids.iter().zip(states) {
                     seqs.insert(*id, st);
                 }
                 let sent = match &next {
                     Downstream::Stage(tx, st_next) => {
                         st_next.queued.fetch_add(1, Ordering::Relaxed);
-                        tx.send(StageCmd::Forward { seqs: ids, tokens: Vec::new(), h: out })
-                            .is_ok()
+                        tx.send(StageCmd::Forward {
+                            seqs: ids,
+                            tokens: Vec::new(),
+                            h: out,
+                            compute_ns,
+                        })
+                        .is_ok()
                     }
                     Downstream::Coordinator(tx) => {
-                        tx.send(GroupEvent::Stepped { seqs: ids, logits: out }).is_ok()
+                        tx.send(GroupEvent::Stepped { seqs: ids, logits: out, compute_ns }).is_ok()
                     }
                 };
                 if !sent {
@@ -356,6 +370,10 @@ struct GroupSeq {
     /// draw, no emission, no stats) until the cache state catches up to
     /// where preemption interrupted it.  Empty for normal sequences.
     replay: VecDeque<u32>,
+    /// When the previous token committed — the ITL clock.  Carried
+    /// across preemptions, so the first post-resume token charges the
+    /// full user-observed stall.
+    last_token: Instant,
     finished: bool,
 }
 
@@ -383,6 +401,46 @@ struct Carry {
     /// Admission-time compression level — resume must reuse it, not the
     /// group's current level, or the rebuilt cache would diverge.
     k_active: usize,
+    /// When the eviction happened (feeds `swan_preempt_wait_seconds`).
+    preempted_at: Instant,
+    /// ITL clock carried through the preemption (see [`GroupSeq`]).
+    last_token: Instant,
+}
+
+/// Pipeline-only instruments, registered in the group's shared
+/// [`Metrics`] registry so the `METRICS` exposition renders them next
+/// to the engine-style series.
+struct GroupObs {
+    /// Per-iteration bubble: coordinator wall wait minus the chain's
+    /// summed stage compute ([`GroupEvent::Stepped`]'s `compute_ns`) —
+    /// the handoff/queueing overhead the pipeline adds.
+    stage_bubble_seconds: Arc<Histogram>,
+    /// Eviction-to-resume wall time per preemption.
+    preempt_wait_seconds: Arc<Histogram>,
+    /// Forced decode steps per resume (the cache-rebuild cost).
+    replay_tokens: Arc<Histogram>,
+    /// Per-stage live command-queue depth (the bubble indicator).
+    stage_depth: Vec<Arc<Gauge>>,
+    /// Per-stage leased pool blocks (empty when the pool is off).
+    stage_leased: Vec<Arc<Gauge>>,
+    /// Pool internal fragmentation, whole percent.
+    frag_percent: Arc<Gauge>,
+}
+
+impl GroupObs {
+    fn register(registry: &Registry, n_stages: usize, pool_on: bool) -> GroupObs {
+        let per_stage = |name: &'static str| -> Vec<Arc<Gauge>> {
+            (0..n_stages).map(|i| registry.gauge(name, &[("stage", &i.to_string())])).collect()
+        };
+        GroupObs {
+            stage_bubble_seconds: registry.histogram("swan_stage_bubble_seconds", &[]),
+            preempt_wait_seconds: registry.histogram("swan_preempt_wait_seconds", &[]),
+            replay_tokens: registry.histogram("swan_replay_tokens", &[]),
+            stage_depth: per_stage("swan_stage_queue_depth"),
+            stage_leased: if pool_on { per_stage("swan_pool_blocks_leased") } else { Vec::new() },
+            frag_percent: registry.gauge("swan_pool_frag_percent", &[]),
+        }
+    }
 }
 
 struct Group {
@@ -393,6 +451,9 @@ struct Group {
     ev_rx: mpsc::Receiver<GroupEvent>,
     scheduler: Scheduler,
     metrics: Arc<Metrics>,
+    obs: GroupObs,
+    /// Retired-request traces, bounded; live traces ride the requests.
+    traces: TraceRing,
     active: Vec<GroupSeq>,
     /// Per-request event channels: token stream (when `params.stream`)
     /// plus the terminal `Done`/`Error` — the group-side mirror of the
@@ -513,6 +574,25 @@ impl Group {
         !self.active.is_empty() || self.scheduler.queue_len() > 0
     }
 
+    /// Pool internal fragmentation in percent: rows the active set
+    /// actually holds vs the row capacity of every leased block (ring
+    /// blocks lease whole up front; sparse tail blocks fill gradually).
+    fn frag_percent(&self) -> f64 {
+        let leased = self.leased_blocks();
+        let mc = &self.model.cfg;
+        let used_rows: usize = self
+            .active
+            .iter()
+            .map(|s| 2 * mc.n_layers * mc.n_kv_heads * s.cached_tokens())
+            .sum();
+        let cap_rows = leased.saturating_mul(self.cfg.block_tokens);
+        if cap_rows > 0 {
+            100.0 * (1.0 - used_rows as f64 / cap_rows as f64)
+        } else {
+            0.0
+        }
+    }
+
     fn publish(&self, status: &ShardStatus) {
         let live = self.live_bytes();
         status.queued.store(self.scheduler.queue_len(), Ordering::Relaxed);
@@ -520,11 +600,18 @@ impl Group {
         status.live_bytes.store(live, Ordering::Relaxed);
         status.projected_bytes.store(self.projected_load_bytes(live), Ordering::Relaxed);
         status.k_active.store(self.k_now, Ordering::Relaxed);
-        self.metrics.cache_bytes.store(live, Ordering::Relaxed);
-        self.metrics.dense_equiv_bytes.store(self.dense_equiv_bytes(), Ordering::Relaxed);
+        self.metrics.cache_bytes.set(live as u64);
+        self.metrics.dense_equiv_bytes.set(self.dense_equiv_bytes() as u64);
+        for (s, g) in self.stages.iter().zip(&self.obs.stage_depth) {
+            g.set(s.status.queued.load(Ordering::Relaxed) as u64);
+        }
         if self.pool_on() {
-            self.metrics.pool_blocks_total.store(self.total_blocks, Ordering::Relaxed);
-            self.metrics.pool_blocks_leased.store(self.leased_blocks(), Ordering::Relaxed);
+            self.metrics.pool_blocks_total.set(self.total_blocks as u64);
+            self.metrics.pool_blocks_leased.set(self.leased_blocks() as u64);
+            for (p, g) in self.stage_pools.iter().zip(&self.obs.stage_leased) {
+                g.set(p.leased() as u64);
+            }
+            self.obs.frag_percent.set(self.frag_percent() as u64);
         }
     }
 
@@ -545,7 +632,17 @@ impl Group {
             }
         }
         self.k_now = applied;
+        self.metrics.k_active.set(applied as u64);
         applied
+    }
+
+    /// `TRACE <id>` lookup: retired ring first (newest wins), then the
+    /// active set, then still-queued requests.
+    fn trace_jsonl(&self, id: u64) -> Option<String> {
+        self.traces
+            .jsonl(id)
+            .or_else(|| self.active.iter().find(|s| s.req.id == id).map(|s| s.req.trace.jsonl()))
+            .or_else(|| self.scheduler.queued().find(|r| r.id == id).map(|r| r.trace.jsonl()))
     }
 
     /// Admit every currently-admissible request: push its prompt through
@@ -554,7 +651,7 @@ impl Group {
         // cancelled-while-queued requests: purge and answer immediately.
         // A preempted sequence cancelled while waiting to resume answers
         // with everything it produced before preemption.
-        for p in self.scheduler.take_cancelled() {
+        for mut p in self.scheduler.take_cancelled() {
             let (tokens, mut stats) = match self.preempted.remove(&p.req.id) {
                 Some(c) => (c.produced, c.stats),
                 None => (Vec::new(), RequestStats::default()),
@@ -564,8 +661,8 @@ impl Group {
             stats.clamped_from = p.req.clamped_from;
             // a queued purge is a cancellation AND a completion (every
             // submitted request resolves exactly once)
-            self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
-            self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+            self.metrics.requests_cancelled.inc();
+            self.metrics.requests_completed.inc();
             if let Some(tx) = self.sinks.remove(&p.req.id) {
                 let _ = tx.send(Event::Done(Response {
                     id: p.req.id,
@@ -574,6 +671,8 @@ impl Group {
                     stats,
                 }));
             }
+            p.req.trace.record(TraceKind::Retire);
+            self.traces.push(p.req.trace);
         }
         loop {
             let pool_on = self.pool_on();
@@ -616,8 +715,9 @@ impl Group {
                 break;
             };
             let queue_time = pending.enqueued.elapsed();
-            let req = pending.req;
+            let mut req = pending.req;
             let rid = req.id;
+            self.metrics.queue_wait_seconds.record(queue_time);
             // a preempted sequence resumes at its admission-time k (a
             // retune between preemption and resume must not change the
             // rebuilt cache), fresh requests at the current level
@@ -626,6 +726,7 @@ impl Group {
                 Some(c) => c.k_active,
                 None => self.request_k(&req),
             };
+            req.trace.record(if carry.is_some() { TraceKind::Resume } else { TraceKind::Admit });
             let t0 = Instant::now();
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
             let h = self.model.embed_prompt(tokens);
@@ -645,15 +746,19 @@ impl Group {
                 // the tokens produced before preemption re-insert via
                 // forced decode steps (see `decode_iteration`).  The
                 // prefill-sampled first token was drawn (and delivered)
-                // in the original pass — do not re-sample or re-emit.
+                // in the original pass — do not re-sample or re-emit, and
+                // do not record a second TTFT.
                 c.stats.queue_time += queue_time;
                 let re_prefill = t0.elapsed();
                 c.stats.prefill_time += re_prefill;
                 self.metrics.prefill_ns.record(re_prefill.as_nanos() as f64);
-                self.metrics.prefill_tokens.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+                self.metrics.prefill_seconds.record(re_prefill);
+                self.metrics.prefill_tokens.add(tokens.len() as u64);
+                self.obs.preempt_wait_seconds.record(c.preempted_at.elapsed());
                 let mut replay: VecDeque<u32> = c.produced.iter().copied().collect();
                 let next_token =
                     replay.pop_front().expect("a preempted sequence produced >= 1 token");
+                self.obs.replay_tokens.record_value(replay.len() as u64);
                 self.active.push(GroupSeq {
                     rng: c.rng,
                     produced: c.produced,
@@ -662,6 +767,7 @@ impl Group {
                     stats: c.stats,
                     k_active: k_seq,
                     prompt_len: tokens.len(),
+                    last_token: c.last_token,
                     finished: false,
                     req,
                 });
@@ -671,9 +777,16 @@ impl Group {
                 RequestStats { queue_time, clamped_from: req.clamped_from, ..Default::default() };
             stats.prefill_time = t0.elapsed();
             self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
-            self.metrics.prefill_tokens.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+            self.metrics.prefill_seconds.record(stats.prefill_time);
+            self.metrics.prefill_tokens.add(tokens.len() as u64);
+            // first token samples from the prefill logits on this path
+            // too, so TTFT = queue wait + prefill
+            stats.ttft_ns = (queue_time + stats.prefill_time).as_nanos() as u64;
+            self.metrics.ttft_seconds.record_ns(stats.ttft_ns);
+            req.trace.record(TraceKind::PrefillDone);
             let next_token =
                 sample(&logits, &req.params, &[], &mut Pcg64::new(req.seed_base()));
+            req.trace.record(TraceKind::FirstToken);
             if req.params.stream {
                 if let Some(tx) = self.sinks.get(&rid) {
                     let _ = tx.send(Event::Token {
@@ -692,6 +805,7 @@ impl Group {
                 k_active: k_seq,
                 prompt_len: tokens.len(),
                 replay: VecDeque::new(),
+                last_token: Instant::now(),
                 finished: false,
                 req,
             });
@@ -708,15 +822,23 @@ impl Group {
     /// sequence that was itself mid-replay: `produced` and `rng` are
     /// not touched while replaying, so the carry is always consistent.
     fn preempt(&mut self, idx: usize) -> anyhow::Result<()> {
-        let seq = self.active.remove(idx);
+        let mut seq = self.active.remove(idx);
         let id = seq.req.id;
         for s in &self.stages {
             s.send(StageCmd::Retire { seqs: vec![id] })?;
         }
-        self.metrics.requests_preempted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests_preempted.inc();
+        seq.req.trace.record(TraceKind::Preempt);
         self.preempted.insert(
             id,
-            Carry { produced: seq.produced, rng: seq.rng, stats: seq.stats, k_active: seq.k_active },
+            Carry {
+                produced: seq.produced,
+                rng: seq.rng,
+                stats: seq.stats,
+                k_active: seq.k_active,
+                preempted_at: Instant::now(),
+                last_token: seq.last_token,
+            },
         );
         self.scheduler.requeue_front(seq.req);
         Ok(())
@@ -779,12 +901,17 @@ impl Group {
             let ids: Vec<u64> = ready.iter().map(|&i| self.active[i].req.id).collect();
             let toks: Vec<u32> = ready.iter().map(|&i| self.active[i].next_token).collect();
             let t0 = Instant::now();
-            self.stages[0].send(StageCmd::Forward { seqs: ids.clone(), tokens: toks, h: Vec::new() })?;
-            let logits = loop {
+            self.stages[0].send(StageCmd::Forward {
+                seqs: ids.clone(),
+                tokens: toks,
+                h: Vec::new(),
+                compute_ns: 0,
+            })?;
+            let (logits, compute_ns) = loop {
                 match self.ev_rx.recv() {
-                    Ok(GroupEvent::Stepped { seqs, logits }) => {
+                    Ok(GroupEvent::Stepped { seqs, logits, compute_ns }) => {
                         anyhow::ensure!(seqs == ids, "pipeline group {}: iteration mismatch", self.id);
-                        break logits;
+                        break (logits, compute_ns);
                     }
                     Ok(GroupEvent::StageFailed { stage }) => {
                         anyhow::bail!("pipeline group {}: stage {stage} died", self.id)
@@ -794,8 +921,12 @@ impl Group {
                 }
             };
             // full-chain latency; charged to every sequence of the
-            // iteration (a pipeline shares its step wall-clock)
+            // iteration (a pipeline shares its step wall-clock).  The
+            // wall wait minus the chain's summed compute is this
+            // iteration's bubble — handoff + stage-queue overhead.
             let step_time = t0.elapsed();
+            let bubble_ns = (step_time.as_nanos() as u64).saturating_sub(compute_ns);
+            self.obs.stage_bubble_seconds.record_ns(bubble_ns);
             for (&i, l) in ready.iter().zip(&logits) {
                 let seq = &mut self.active[i];
                 if let Some(tok) = seq.replay.pop_front() {
@@ -821,11 +952,20 @@ impl Group {
                         });
                     }
                 }
+                // ITL commit accounting: the gap since the previous
+                // committed token (spans preemptions), all lock-free
+                let gap_ns = seq.last_token.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                seq.last_token = Instant::now();
                 seq.stats.decode_steps += 1;
                 seq.stats.decode_time += step_time;
-                self.metrics.decode_tokens.fetch_add(1, Ordering::Relaxed);
+                seq.stats.itl_sum_ns += gap_ns;
+                seq.stats.itl_max_ns = seq.stats.itl_max_ns.max(gap_ns);
+                seq.req.trace.record(TraceKind::Decode);
+                self.metrics.itl_seconds.record_ns(gap_ns);
+                self.metrics.decode_tokens.inc();
             }
             self.metrics.decode_step_ns.record(step_time.as_nanos() as f64);
+            self.metrics.decode_step_seconds.record(step_time);
             let (_, dense_b) = self.token_byte_rates(0);
             for &i in &ready {
                 let bytes = self.seq_bytes(&self.active[i]);
@@ -839,15 +979,17 @@ impl Group {
         if self.active.iter().any(|s| s.finished) {
             let mut done_ids = Vec::new();
             let mut keep = Vec::with_capacity(self.active.len());
-            for seq in self.active.drain(..) {
+            for mut seq in self.active.drain(..) {
                 if seq.finished {
                     done_ids.push(seq.req.id);
                     if seq.req.cancel.is_cancelled() {
                         // a mid-decode cancel is a cancellation AND a
                         // completion, mirroring the queued-purge path
-                        self.metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.requests_cancelled.inc();
                     }
-                    self.metrics.requests_completed.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.requests_completed.inc();
+                    seq.req.trace.record(TraceKind::Retire);
+                    self.traces.push(seq.req.trace.clone());
                     let mut stats = seq.stats;
                     stats.cancelled = seq.req.cancel.is_cancelled();
                     let resp = Response {
@@ -887,19 +1029,8 @@ impl Group {
             human_bytes(self.projected_load_bytes(live)),
         );
         if self.pool_on() {
-            // internal fragmentation: rows the active set actually holds
-            // vs the row capacity of every leased block (ring blocks
-            // lease whole up front; sparse tail blocks fill gradually)
             let leased = self.leased_blocks();
-            let mc = &self.model.cfg;
-            let used_rows: usize = self
-                .active
-                .iter()
-                .map(|s| 2 * mc.n_layers * mc.n_kv_heads * s.cached_tokens())
-                .sum();
-            let cap_rows = leased.saturating_mul(self.cfg.block_tokens);
-            let frag =
-                if cap_rows > 0 { 100.0 * (1.0 - used_rows as f64 / cap_rows as f64) } else { 0.0 };
+            let frag = self.frag_percent();
             let budget = if self.total_blocks == usize::MAX {
                 "unbounded".to_string()
             } else {
@@ -971,7 +1102,8 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
                     // same hard cap the engine shards enforce, equally
                     // surfaced (never silent)
                     req.clamp_max_new(g.cfg.max_new_hard_cap());
-                    g.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+                    g.metrics.requests_submitted.inc();
+                    req.trace.begin(req.id);
                     g.sinks.insert(req.id, reply);
                     g.scheduler.enqueue(req);
                     g.publish(status);
@@ -990,6 +1122,9 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
                 }
                 ShardCmd::Stats { reply } => {
                     let _ = reply.send(g.stats_block());
+                }
+                ShardCmd::Trace { id, reply } => {
+                    let _ = reply.send(g.trace_jsonl(id));
                 }
                 ShardCmd::Shutdown => return g.shutdown(),
             }
@@ -1023,6 +1158,11 @@ pub fn launch_group(
     let ranges = partition_layers(model.cfg.n_layers, cfg.pipeline.max(1))?;
     let k_now = cfg.k_active.clamp(1, model.cfg.d_head);
 
+    // metrics come first: the stage pools register their latency
+    // instruments in the same registry the METRICS verb renders
+    let metrics = Arc::new(Metrics::default());
+    metrics.k_active.set(k_now as u64);
+
     // paged pool mode: size the group's block budget from its byte
     // budget at the configured compression (Eq. 1 worst-of sparse/dense
     // per block row), then give each stage its own pool with a target
@@ -1036,13 +1176,14 @@ pub fn launch_group(
             pool_blocks_for_budget(cfg.mem_budget, cfg.block_tokens, mc.d_head, cfg.mode, k_now);
         let pools: Vec<Arc<BlockPool>> = ranges
             .iter()
-            .map(|r| {
+            .enumerate()
+            .map(|(s, r)| {
                 let target = if total == usize::MAX {
                     usize::MAX
                 } else {
                     (total / mc.n_layers).saturating_mul(r.len()).max(1)
                 };
-                Arc::new(BlockPool::new(target))
+                Arc::new(BlockPool::with_obs(target, PoolObs::register(&metrics.registry, s)))
             })
             .collect();
         (pools, total)
@@ -1093,7 +1234,7 @@ pub fn launch_group(
     if cfg.decode_workers > 0 {
         scheduler.set_decode_slots(cfg.decode_workers * DECODE_SLOTS_PER_WORKER);
     }
-    let metrics = Arc::new(Metrics::default());
+    let obs = GroupObs::register(&metrics.registry, ranges.len(), pool_on);
     let group = Group {
         id,
         model,
@@ -1102,6 +1243,8 @@ pub fn launch_group(
         ev_rx,
         scheduler,
         metrics: metrics.clone(),
+        obs,
+        traces: TraceRing::new(TRACE_RING_CAP),
         active: Vec::new(),
         sinks: HashMap::new(),
         k_now,

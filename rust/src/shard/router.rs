@@ -8,7 +8,7 @@
 //! serializing on the shards themselves.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::Context;
 
@@ -16,6 +16,7 @@ use crate::api::GenHandle;
 use crate::config::ServeConfig;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::Request;
+use crate::obs::registry::Registry;
 use crate::shard::admin;
 use crate::shard::balance::{policy_from_name, BalancePolicy};
 use crate::shard::shard::{ShardCmd, ShardHandle};
@@ -27,6 +28,10 @@ pub struct Router {
     /// Fleet-global request ids (per-shard engines would otherwise hand
     /// out colliding ids on the wire).
     next_id: AtomicU64,
+    /// Server-level obs series (per-connection counters, protocol
+    /// errors) — rendered into the `METRICS` exposition alongside every
+    /// shard's registry, with no shard identity label.
+    server_registry: Arc<Registry>,
 }
 
 impl Router {
@@ -72,7 +77,12 @@ impl Router {
                 .with_context(|| format!("launching shard {id}"))?;
             shards.push(ShardHandle::spawn(id, engine));
         }
-        Ok(Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) })
+        Ok(Router {
+            shards,
+            policy: Mutex::new(policy),
+            next_id: AtomicU64::new(1),
+            server_registry: Arc::new(Registry::new()),
+        })
     }
 
     /// Pipeline-sharded launch: `shards / pipeline` groups of `pipeline`
@@ -112,13 +122,23 @@ impl Router {
         for id in 0..n_groups {
             shards.push(crate::shard::pipeline::launch_group(id, model.clone(), &group_cfg)?);
         }
-        Ok(Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) })
+        Ok(Router {
+            shards,
+            policy: Mutex::new(policy),
+            next_id: AtomicU64::new(1),
+            server_registry: Arc::new(Registry::new()),
+        })
     }
 
     /// Assemble a router from pre-built handles (tests, embedders).
     pub fn from_handles(shards: Vec<ShardHandle>, policy: Box<dyn BalancePolicy>) -> Router {
         assert!(!shards.is_empty(), "router needs at least one shard");
-        Router { shards, policy: Mutex::new(policy), next_id: AtomicU64::new(1) }
+        Router {
+            shards,
+            policy: Mutex::new(policy),
+            next_id: AtomicU64::new(1),
+            server_registry: Arc::new(Registry::new()),
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -206,6 +226,23 @@ impl Router {
     /// The fleet STATS view: per-shard blocks + aggregate totals.
     pub fn stats(&self) -> String {
         admin::fleet_stats(&self.shards, self.policy_name())
+    }
+
+    /// The registry server-level series (connection counters) register
+    /// in; the TCP front-end holds a clone per listener.
+    pub fn server_registry(&self) -> Arc<Registry> {
+        self.server_registry.clone()
+    }
+
+    /// The fleet `METRICS` exposition (Prometheus text format 0.0.4).
+    pub fn metrics_text(&self) -> String {
+        admin::fleet_metrics(&self.shards, &self.server_registry)
+    }
+
+    /// `TRACE <id>`: the first shard retaining the request's lifecycle
+    /// trace answers with its JSONL timeline.
+    pub fn trace_jsonl(&self, id: u64) -> Option<String> {
+        admin::fleet_trace(&self.shards, id)
     }
 }
 

@@ -37,6 +37,11 @@ pub enum ShardCmd {
     SetK { k: usize, ack: mpsc::Sender<usize> },
     /// Render this shard's stats block.
     Stats { reply: mpsc::Sender<String> },
+    /// Dump one request's lifecycle trace as JSONL (`TRACE <id>` wire
+    /// verb): retired traces come from the shard's bounded ring, live
+    /// ones from the active/queued sets.  `None` when the id is unknown
+    /// here — the router tries every shard and takes the first hit.
+    Trace { id: u64, reply: mpsc::Sender<Option<String>> },
     /// Stop the shard thread (in-flight sequences are abandoned).
     Shutdown,
 }
@@ -213,6 +218,9 @@ fn shard_loop(
                 }
                 ShardCmd::Stats { reply } => {
                     let _ = reply.send(shard_stats(id, &engine));
+                }
+                ShardCmd::Trace { id: rid, reply } => {
+                    let _ = reply.send(engine.trace_jsonl(rid));
                 }
                 ShardCmd::Shutdown => return,
             }

@@ -1,0 +1,392 @@
+//! `swan::obs` end to end: exposition validity, exact fleet merge,
+//! lifecycle tracing, and the lock-freedom contract of the decode path.
+//!
+//! The integration half drives a real pipeline group on a synthetic
+//! model with a tight block budget (the `tests/pool.rs` topology), so a
+//! request is genuinely preempted and resumed — then asserts the
+//! retained `TRACE` timeline is complete and ordered, and that the
+//! `METRICS` exposition and `STATS` text agree because they read the
+//! same registry handles.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use swan::config::{ModelConfig, ServeConfig};
+use swan::coordinator::{Metrics, Request};
+use swan::model::transformer::SwanModel;
+use swan::obs::{render, render_one, HistSnapshot, Histogram, Registry, Source, Trace, TraceKind};
+use swan::shard::pipeline::launch_group;
+use swan::shard::{RoundRobin, Router};
+use swan::sparse::StorageMode;
+
+// ---------------------------------------------------------------------------
+// exposition format
+
+/// Split a sample line into its series key (`name{labels}`) and value.
+fn split_sample(line: &str) -> (&str, f64) {
+    let (key, val) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value in {line:?}"));
+    let v = if val == "+Inf" {
+        f64::INFINITY
+    } else {
+        val.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"))
+    };
+    (key, v)
+}
+
+/// Series key -> (family name, label block without braces).
+fn split_key(key: &str) -> (String, String) {
+    match key.split_once('{') {
+        Some((name, rest)) => {
+            let labels = rest.strip_suffix('}').unwrap_or_else(|| panic!("unbalanced {key:?}"));
+            (name.to_string(), labels.to_string())
+        }
+        None => (key.to_string(), String::new()),
+    }
+}
+
+/// Validate an exposition end to end: every line is a `# TYPE` comment
+/// or a parseable sample; every histogram family's `_bucket` series is
+/// cumulative and monotone in `le`, ends at `+Inf`, and `+Inf` equals
+/// the family `_count`.
+fn check_exposition(text: &str) {
+    let mut kinds: HashMap<String, String> = HashMap::new();
+    // (family, labels-without-le) -> cumulative bucket counts in order
+    let mut buckets: HashMap<(String, String), Vec<(f64, u64)>> = HashMap::new();
+    let mut counts: HashMap<(String, String), u64> = HashMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let (name, kind) = (it.next().unwrap(), it.next().unwrap());
+            assert!(it.next().is_none(), "trailing tokens in {line:?}");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown kind in {line:?}"
+            );
+            assert!(
+                kinds.insert(name.to_string(), kind.to_string()).is_none(),
+                "duplicate # TYPE for {name}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment {line:?}");
+        let (key, value) = split_sample(line);
+        let (name, labels) = split_key(key);
+        if let Some(fam) = name.strip_suffix("_bucket") {
+            let mut le = None;
+            let rest: Vec<&str> = labels
+                .split(',')
+                .filter(|part| match part.strip_prefix("le=\"") {
+                    Some(v) => {
+                        let v = v.strip_suffix('"').expect("closing quote on le");
+                        le = Some(if v == "+Inf" {
+                            f64::INFINITY
+                        } else {
+                            v.parse::<f64>().expect("numeric le")
+                        });
+                        false
+                    }
+                    None => true,
+                })
+                .collect();
+            let le = le.unwrap_or_else(|| panic!("bucket line without le: {line:?}"));
+            buckets
+                .entry((fam.to_string(), rest.join(",")))
+                .or_default()
+                .push((le, value as u64));
+        } else if let Some(fam) = name.strip_suffix("_count") {
+            counts.insert((fam.to_string(), labels), value as u64);
+        }
+    }
+    assert!(!kinds.is_empty(), "no # TYPE lines in exposition");
+    for ((fam, labels), series) in &buckets {
+        assert_eq!(
+            kinds.get(fam).map(String::as_str),
+            Some("histogram"),
+            "{fam} has buckets but is not typed histogram"
+        );
+        for pair in series.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "{fam}: le bounds not increasing");
+            assert!(pair[0].1 <= pair[1].1, "{fam}: cumulative counts decreased");
+        }
+        let (last_le, last_cum) = *series.last().unwrap();
+        assert!(last_le.is_infinite(), "{fam}: bucket series must end at +Inf");
+        let count = counts
+            .get(&(fam.clone(), labels.clone()))
+            .unwrap_or_else(|| panic!("{fam}: missing _count for labels {labels:?}"));
+        assert_eq!(*count, last_cum, "{fam}: +Inf bucket != _count");
+    }
+}
+
+/// Golden exposition over a hand-populated registry: exact lines for
+/// each metric class, then the structural validity sweep.
+#[test]
+fn exposition_golden_and_valid() {
+    let r = Registry::new();
+    r.counter("swan_requests_total", &[("outcome", "completed")]).add(7);
+    r.gauge("swan_k_active", &[]).set(8);
+    let h = r.histogram("swan_ttft_seconds", &[]);
+    h.record_ns(1_000); // -> bucket le = 1024 ns
+    h.record_ns(2_000_000); // -> bucket le = 2^21 ns
+    let text = render(&[Source::shard(0, &r)]);
+    assert!(text.contains("# TYPE swan_requests_total counter\n"), "{text}");
+    assert!(text.contains("swan_requests_total{outcome=\"completed\"} 7\n"), "{text}");
+    assert!(text.contains("swan_k_active{shard=\"0\"} 8\n"), "{text}");
+    assert!(text.contains("swan_ttft_seconds_bucket{le=\"0.000001024\"} 1\n"), "{text}");
+    assert!(text.contains("swan_ttft_seconds_bucket{le=\"+Inf\"} 2\n"), "{text}");
+    assert!(text.contains("swan_ttft_seconds_sum 0.002001\n"), "{text}");
+    assert!(text.contains("swan_ttft_seconds_count 2\n"), "{text}");
+    check_exposition(&text);
+    // identity labels only decorate gauges: the counter key is unlabeled
+    // by shard so fleet sources sum into one series
+    assert!(!text.contains("swan_requests_total{outcome=\"completed\",shard"), "{text}");
+}
+
+// ---------------------------------------------------------------------------
+// merge exactness
+
+#[test]
+fn snapshot_merge_is_associative_and_exact() {
+    let (a, b, c, one) = (Histogram::new(), Histogram::new(), Histogram::new(), Histogram::new());
+    for v in 1..200u64 {
+        let target = match v % 3 {
+            0 => &a,
+            1 => &b,
+            _ => &c,
+        };
+        target.record_ns(v * v * 31);
+        one.record_ns(v * v * 31);
+    }
+    let (sa, sb, sc) = (a.snapshot(), b.snapshot(), c.snapshot());
+    let mut left: HistSnapshot = sa.clone();
+    left.merge(&sb);
+    left.merge(&sc);
+    let mut bc = sb.clone();
+    bc.merge(&sc);
+    let mut right = sa.clone();
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+    assert_eq!(left, one.snapshot(), "merged shards must equal one recording stream");
+    assert_eq!(left.count(), 199);
+    // quantiles of the merge are quantiles of the union
+    assert!((left.quantile_ns(0.5) - one.snapshot().quantile_ns(0.5)).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// tracing
+
+#[test]
+fn trace_lifecycle_is_ordered() {
+    let mut t = Trace::new();
+    t.begin(42);
+    t.record(TraceKind::Admit);
+    t.record(TraceKind::PrefillDone);
+    t.record(TraceKind::FirstToken);
+    for _ in 0..3 {
+        t.record(TraceKind::Decode);
+    }
+    t.record(TraceKind::Preempt);
+    t.record(TraceKind::Resume);
+    t.record(TraceKind::Decode);
+    t.record(TraceKind::Retire);
+    let at = |k: TraceKind| t.last_ns(k).unwrap_or_else(|| panic!("missing {:?}", k));
+    assert!(at(TraceKind::Submit) <= at(TraceKind::Admit));
+    assert!(at(TraceKind::Admit) <= at(TraceKind::PrefillDone));
+    assert!(at(TraceKind::PrefillDone) <= at(TraceKind::FirstToken));
+    assert!(at(TraceKind::FirstToken) <= at(TraceKind::Preempt));
+    assert!(at(TraceKind::Preempt) <= at(TraceKind::Resume));
+    assert!(at(TraceKind::Resume) <= at(TraceKind::Retire));
+    let j = t.jsonl();
+    let lines: Vec<&str> = j.lines().collect();
+    assert_eq!(lines.len(), t.events().len());
+    assert!(lines[0].contains("\"event\":\"submit\""), "{j}");
+    assert!(lines.last().unwrap().contains("\"event\":\"retire\""), "{j}");
+    assert!(lines.iter().all(|l| l.contains("\"id\":42")), "{j}");
+}
+
+// ---------------------------------------------------------------------------
+// concurrency and lock-freedom
+
+/// N threads x M samples with zero coordination: the lock-free recording
+/// path must not lose a single sample (relaxed atomics still guarantee
+/// every fetch_add lands).
+#[test]
+fn concurrent_recording_loses_no_samples() {
+    const THREADS: usize = 8;
+    const SAMPLES: u64 = 10_000;
+    let r = Arc::new(Registry::new());
+    let h = r.histogram("swan_itl_seconds", &[]);
+    let c = r.counter("swan_tokens_total", &[("phase", "decode")]);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|i| {
+            let (h, c) = (h.clone(), c.clone());
+            std::thread::spawn(move || {
+                for s in 0..SAMPLES {
+                    h.record_ns((i as u64 + 1) * 1000 + s);
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for t in handles {
+        t.join().unwrap();
+    }
+    let want = THREADS as u64 * SAMPLES;
+    assert_eq!(h.snapshot().count(), want, "histogram lost samples");
+    assert_eq!(c.get(), want, "counter lost increments");
+}
+
+/// The acceptance contract: recording through the handles the decode
+/// path holds must never touch the registry Mutex. We prove it by
+/// recording *while this thread holds that Mutex* — a recording call
+/// that secretly locked it would self-deadlock (std Mutex is not
+/// reentrant), so mere completion is the assertion. The handles are the
+/// real per-token ones from `coordinator::Metrics`.
+#[test]
+fn decode_path_recording_is_registry_lock_free() {
+    let m = Metrics::default();
+    m.registry.with_registration_locked(|| {
+        m.itl_seconds.record_ns(1_000);
+        m.ttft_seconds.record_ns(2_000);
+        m.queue_wait_seconds.record(std::time::Duration::from_micros(5));
+        m.decode_tokens.inc();
+        m.k_active.set(16);
+    });
+    assert_eq!(m.itl_seconds.snapshot().count(), 1);
+    assert_eq!(m.decode_tokens.get(), 1);
+    // same property for a bare registry histogram handle
+    let r = Registry::new();
+    let h = r.histogram("swan_stage_bubble_seconds", &[]);
+    r.with_registration_locked(|| h.record_ns(7));
+    assert_eq!(h.snapshot().count(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// integration: a real preempted-and-resumed request
+
+fn test_model() -> Arc<SwanModel> {
+    Arc::new(SwanModel::synthetic(
+        ModelConfig {
+            name: "obs-test".into(),
+            d_model: 32,
+            n_layers: 4,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 96,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        },
+        33,
+    ))
+}
+
+fn first_idx(lines: &[&str], ev: &str) -> usize {
+    let needle = format!("\"event\":\"{ev}\"");
+    lines
+        .iter()
+        .position(|l| l.contains(&needle))
+        .unwrap_or_else(|| panic!("missing event {ev} in trace:\n{}", lines.join("\n")))
+}
+
+/// Drive the `tests/pool.rs` preemption topology (block_tokens=1, a
+/// 700-block budget, two 12-token requests) and assert the observability
+/// surfaces: the preempted request's retained `TRACE` timeline is a
+/// complete ordered lifecycle, `METRICS` is a valid exposition carrying
+/// the preemption/SLO series, and `STATS` agrees with it because both
+/// read the same registry.
+#[test]
+fn preempted_request_yields_full_trace_and_metrics() {
+    let reqs = vec![
+        Request::from_text(1, "the long one ", 12),
+        Request::from_text(2, "the bystander ", 12),
+    ];
+    let budget = 700 * swan::pool::block_bytes(1, 8, StorageMode::F16, 4);
+    let cfg = ServeConfig {
+        k_active: 4,
+        buffer: 3,
+        mode: StorageMode::F16,
+        max_batch: 8,
+        pipeline: 1,
+        pool: true,
+        block_tokens: 1,
+        mem_budget: budget,
+        ..Default::default()
+    };
+    let handle = launch_group(0, test_model(), &cfg).unwrap();
+    let router = Router::from_handles(vec![handle], Box::new(RoundRobin::default()));
+    let pending: Vec<_> = reqs.iter().map(|r| router.submit(r.clone()).unwrap()).collect();
+    for h in pending {
+        h.wait().expect("generation ok");
+    }
+    let preempted: u64 = router.shards().iter().map(|s| s.metrics.requests_preempted.get()).sum();
+    assert!(preempted >= 1, "the tight budget must preempt at least once");
+
+    // --- TRACE: some request was preempted; its retained timeline must
+    // hold the full ordered lifecycle including the preempt/resume pair.
+    let traced = [1u64, 2]
+        .into_iter()
+        .filter_map(|id| router.trace_jsonl(id))
+        .find(|j| j.contains("\"event\":\"preempt\""))
+        .expect("a preempted request's trace is retained");
+    let lines: Vec<&str> = traced.lines().collect();
+    assert_eq!(first_idx(&lines, "submit"), 0, "timeline starts at submit");
+    let admit = first_idx(&lines, "admit");
+    let prefill = first_idx(&lines, "prefill_done");
+    let first_token = first_idx(&lines, "first_token");
+    let preempt = first_idx(&lines, "preempt");
+    let resume = first_idx(&lines, "resume");
+    let retire = first_idx(&lines, "retire");
+    assert!(admit < prefill && prefill < first_token, "admission ordering broken");
+    assert!(first_token < preempt && preempt < resume, "preemption ordering broken");
+    assert!(resume < retire, "resume must precede retire");
+    assert_eq!(retire, lines.len() - 1, "retire terminates the timeline");
+    // both lifecycles are retained; unknown ids are a clean miss
+    assert!(router.trace_jsonl(1).is_some() && router.trace_jsonl(2).is_some());
+    assert!(router.trace_jsonl(999).is_none());
+
+    // --- METRICS: valid exposition carrying the serving series.
+    let text = router.metrics_text();
+    check_exposition(&text);
+    for needle in [
+        "# TYPE swan_ttft_seconds histogram\n",
+        "swan_requests_total{outcome=\"completed\"} 2\n",
+        "swan_ttft_seconds_count 2\n",
+        "swan_k_active{shard=\"0\"} 4\n",
+        "swan_pool_blocks_leased{shard=\"0\",stage=\"0\"}",
+        "# TYPE swan_preempt_wait_seconds histogram\n",
+        "# TYPE swan_stage_bubble_seconds histogram\n",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    let preempt_line = text
+        .lines()
+        .find(|l| l.starts_with("swan_preemptions_total"))
+        .expect("preemption counter exported");
+    assert_eq!(split_sample(preempt_line).1 as u64, preempted, "exposition disagrees");
+    let itl_count = text
+        .lines()
+        .find(|l| l.starts_with("swan_itl_seconds_count"))
+        .map(split_sample)
+        .expect("ITL histogram exported")
+        .1;
+    assert!(itl_count >= 1.0, "decode commits must record inter-token gaps");
+    let lease_count = text
+        .lines()
+        .find(|l| l.starts_with("swan_pool_lease_seconds_count"))
+        .map(split_sample)
+        .expect("pool lease histogram exported")
+        .1;
+    assert!(lease_count >= 1.0, "pool leases must be timed");
+
+    // --- STATS reads the same handles, so the two surfaces agree.
+    let stats = router.stats();
+    assert!(stats.contains("completed=2"), "{stats}");
+    assert!(stats.contains(&format!("preempted={preempted}")), "{stats}");
+    assert!(stats.contains("ttft"), "STATS must surface the SLO rows: {stats}");
+
+    // single-registry sanity: the exposition really is the shard
+    // registry rendered (no hidden second bookkeeping surface)
+    let direct = render_one(&router.shards()[0].metrics.registry);
+    assert!(direct.contains("swan_requests_total{outcome=\"completed\"} 2\n"), "{direct}");
+}

@@ -319,7 +319,7 @@ fn cancel_retires_mid_decode_without_disturbing_batchmates() {
     let cancelled: u64 = router
         .shards()
         .iter()
-        .map(|s| s.metrics.requests_cancelled.load(std::sync::atomic::Ordering::Relaxed))
+        .map(|s| s.metrics.requests_cancelled.get())
         .sum();
     assert_eq!(cancelled, 1, "mid-decode cancel must increment requests_cancelled");
 }
@@ -356,7 +356,7 @@ fn queued_cancel_answers_with_empty_cancelled_response() {
     let cancelled: u64 = router
         .shards()
         .iter()
-        .map(|s| s.metrics.requests_cancelled.load(std::sync::atomic::Ordering::Relaxed))
+        .map(|s| s.metrics.requests_cancelled.get())
         .sum();
     assert_eq!(cancelled, 2, "queued purge and mid-decode cancels must both count");
 }

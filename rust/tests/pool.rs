@@ -8,7 +8,6 @@
 //! budget-bounded pool preempts block-granularly — requeued sequences
 //! resume by replay and still produce the same tokens.
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use swan::api::GenParams;
@@ -105,8 +104,8 @@ fn run_pool_fleet(
     out.sort_by_key(|(id, _)| *id);
     let (mut preempted, mut completed) = (0u64, 0u64);
     for s in router.shards() {
-        preempted += s.metrics.requests_preempted.load(Ordering::Relaxed);
-        completed += s.metrics.requests_completed.load(Ordering::Relaxed);
+        preempted += s.metrics.requests_preempted.get();
+        completed += s.metrics.requests_completed.get();
     }
     (out, preempted, completed)
 }
