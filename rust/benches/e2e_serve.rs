@@ -200,16 +200,18 @@ fn run_pool_batch(
     Ok((tps, frag, preempted, row))
 }
 
-/// Open-loop SLO leg: staggered request arrivals (instead of one burst)
-/// against a native pipeline group, so queue wait and TTFT spread the
-/// way a live fleet's do.  The percentiles are read from the same
-/// lock-free obs histograms the `METRICS` verb exports — no bench-side
-/// timing — merged across shards with the exact bucket-wise merge.
+/// Open-loop SLO leg: Poisson request arrivals (exponential interarrival
+/// gaps, `dt = -ln(U) * mean`, seeded) against a native pipeline group,
+/// so queue wait and TTFT spread the way a live fleet's do — bursts and
+/// lulls included, which a fixed stagger never produces.  The
+/// percentiles are read from the same lock-free obs histograms the
+/// `METRICS` verb exports — no bench-side timing — merged across shards
+/// with the exact bucket-wise merge.
 fn run_latency_slo(
     cfg: ServeConfig,
     n_requests: usize,
     max_new: usize,
-    stagger: std::time::Duration,
+    mean_interarrival: std::time::Duration,
 ) -> anyhow::Result<(swan::obs::HistSnapshot, swan::obs::HistSnapshot)> {
     use swan::model::{SwanModel, WeightFile};
     use swan::shard::pipeline::launch_group;
@@ -221,6 +223,7 @@ fn run_latency_slo(
     let handle = launch_group(0, model, &cfg)?;
     let router = Router::from_handles(vec![handle], swan::shard::policy_from_name("round-robin")?);
     let mut rng = Pcg64::new(42);
+    let mut arrivals = Pcg64::new(7); // separate stream: prompts stay fixed
     let mut pending = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         let prompt = format!(
@@ -229,20 +232,95 @@ fn run_latency_slo(
             corpus::NOUNS[i % corpus::NOUNS.len()]
         );
         pending.push(router.submit(Request::from_text(0, &prompt, max_new))?);
-        std::thread::sleep(stagger);
+        // exponential gap: U in [0,1) => use 1-U in (0,1] so ln is finite
+        let dt = mean_interarrival.mul_f64(-(1.0 - arrivals.next_f64()).ln());
+        std::thread::sleep(dt);
     }
     for h in pending {
         h.wait()?;
     }
-    let mut shards = router.shards().iter();
-    let first = shards.next().expect("router has at least one shard");
+    let shards = router.shards();
+    let mut it = shards.iter();
+    let first = it.next().expect("router has at least one shard");
     let mut ttft = first.metrics.ttft_seconds.snapshot();
     let mut itl = first.metrics.itl_seconds.snapshot();
-    for s in shards {
+    for s in it {
         ttft.merge(&s.metrics.ttft_seconds.snapshot());
         itl.merge(&s.metrics.itl_seconds.snapshot());
     }
     Ok((ttft, itl))
+}
+
+/// Sum of every exposition sample named exactly `name` in a METRICS
+/// render (counters merge unlabeled; shard-labeled gauges sum).
+fn metric_sum(text: &str, name: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter_map(|l| {
+            let rest = l.strip_prefix(name)?;
+            if !(rest.starts_with(' ') || rest.starts_with('{')) {
+                return None;
+            }
+            l.rsplit(' ').next()?.parse::<f64>().ok()
+        })
+        .sum()
+}
+
+/// Fault-recovery leg: a supervised 2-shard native fleet serving `n`
+/// streaming requests, optionally with a scripted coordinator kill.
+/// Streams are collected on their own threads so the worst inter-token
+/// gap is real wall-clock stall — for the chaos run that gap IS the
+/// recovery latency (die → re-place → re-prefill → replay → next
+/// token).  Returns (agg decode tok/s, worst gap ms, router).
+fn run_fault_fleet(
+    model: std::sync::Arc<swan::model::SwanModel>,
+    cfg: &ServeConfig,
+    plans: Vec<Option<std::sync::Arc<swan::shard::FaultPlan>>>,
+    n_requests: usize,
+    max_new: usize,
+) -> anyhow::Result<(f64, f64, Router)> {
+    let router = Router::launch_pipeline_from_model(model, cfg, plans)?;
+    let mut rng = Pcg64::new(42);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let prompt = format!(
+            "{} the {} ",
+            corpus::mixed_text(&mut rng.fork(i as u64), 180),
+            corpus::NOUNS[i % corpus::NOUNS.len()]
+        );
+        let params = GenParams::new(max_new).stream(true);
+        pending.push(router.submit(Request::with_params(0, &prompt, params))?);
+    }
+    let collectors: Vec<_> = pending
+        .into_iter()
+        .map(|h| {
+            std::thread::spawn(move || -> anyhow::Result<(usize, f64)> {
+                let mut last = std::time::Instant::now();
+                let mut worst_gap = 0f64;
+                loop {
+                    match h.recv()? {
+                        swan::api::Event::Token { .. } => {
+                            worst_gap = worst_gap.max(last.elapsed().as_secs_f64());
+                            last = std::time::Instant::now();
+                        }
+                        swan::api::Event::Done(r) => return Ok((r.stats.decode_steps, worst_gap)),
+                        swan::api::Event::Error { message, .. } => {
+                            anyhow::bail!("request lost: {message}")
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let (mut decoded, mut worst_gap) = (0usize, 0f64);
+    for c in collectors {
+        let (steps, gap) = c.join().expect("collector thread panicked")?;
+        decoded += steps;
+        worst_gap = worst_gap.max(gap);
+    }
+    let tps = decoded as f64 / t0.elapsed().as_secs_f64();
+    Ok((tps, worst_gap * 1e3, router))
 }
 
 fn main() {
@@ -416,11 +494,14 @@ fn main() {
         eprintln!("could not write {}: {e}", pool_report.path().display());
     }
 
-    // latency SLO: open-loop staggered arrivals; TTFT / inter-token-gap
+    // latency SLO: open-loop Poisson arrivals; TTFT / inter-token-gap
     // percentiles come straight from the fleet's obs histograms (the
     // series METRICS exports), land in BENCH_obs.json
     let slo_requests = 16usize;
-    println!("# latency_slo ({slo_requests} requests, {max_new} new tokens each, 5 ms stagger)");
+    println!(
+        "# latency_slo ({slo_requests} requests, {max_new} new tokens each, \
+         Poisson arrivals, 5 ms mean)"
+    );
     let slo_cfg = ServeConfig {
         k_active: 32,
         mode: StorageMode::F16,
@@ -454,6 +535,62 @@ fn main() {
             }
         }
         Err(e) => println!("{:<18} FAILED: {e:#}", "latency_slo"),
+    }
+
+    // fault recovery: the same supervised 2-shard native fleet serving
+    // streaming requests, undisturbed vs with a scripted mid-decode
+    // coordinator kill.  The chaos run's worst inter-token gap is the
+    // end-to-end recovery latency (die → re-place → re-prefill → replay
+    // committed tokens → next live token); replay-token overhead comes
+    // from the fleet's own counters.  Rows land in BENCH_obs.json next
+    // to the SLO percentiles.
+    println!("# fault_recovery ({n} streaming requests, {max_new} new tokens each)");
+    let fault = (|| -> anyhow::Result<()> {
+        use swan::model::{SwanModel, WeightFile};
+        use swan::swan::projection::ProjectionVariant;
+        let fleet_cfg = ServeConfig {
+            shards: 2,
+            k_active: 32,
+            mode: StorageMode::F16,
+            max_batch: 8,
+            decode_workers: (workers / 2).max(1),
+            ..Default::default()
+        };
+        let wf = WeightFile::load(&dir.join(format!("weights_{}.bin", fleet_cfg.model)))?;
+        let model = std::sync::Arc::new(SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?);
+        let (base_tps, base_gap, _baseline) =
+            run_fault_fleet(model.clone(), &fleet_cfg, vec![], n, max_new)?;
+        println!(
+            "{:<18} agg decode {base_tps:>7.1} tok/s | worst gap {base_gap:>8.2} ms",
+            "undisturbed"
+        );
+        let plans = vec![Some(swan::shard::FaultPlan::kill_at(20)), None];
+        let (chaos_tps, chaos_gap, router) =
+            run_fault_fleet(model, &fleet_cfg, plans, n, max_new)?;
+        let m = router.metrics_text();
+        let deaths = metric_sum(&m, "swan_shard_deaths");
+        let recovered = metric_sum(&m, "swan_requests_recovered");
+        let replayed = metric_sum(&m, "swan_replay_tokens");
+        println!(
+            "{:<18} agg decode {chaos_tps:>7.1} tok/s | worst gap {chaos_gap:>8.2} ms | \
+             deaths {deaths:.0} | recovered {recovered:.0} | replayed {replayed:.0} tokens",
+            "kill mid-decode"
+        );
+        let mut fault_report = swan::util::stats::BenchReport::open("BENCH_obs.json");
+        fault_report.set("fault_recovery", "baseline_decode_tps", base_tps);
+        fault_report.set("fault_recovery", "baseline_worst_gap_ms", base_gap);
+        fault_report.set("fault_recovery", "chaos_decode_tps", chaos_tps);
+        fault_report.set("fault_recovery", "chaos_worst_gap_ms", chaos_gap);
+        fault_report.set("fault_recovery", "shard_deaths", deaths);
+        fault_report.set("fault_recovery", "requests_recovered", recovered);
+        fault_report.set("fault_recovery", "replay_tokens", replayed);
+        fault_report.set("fault_recovery", "requests", n as f64);
+        fault_report.set("fault_recovery", "max_new", max_new as f64);
+        fault_report.save()?;
+        Ok(())
+    })();
+    if let Err(e) = fault {
+        println!("{:<18} FAILED: {e:#}", "fault_recovery");
     }
 
     // api mix: the same fleet serving different request shapes — greedy,

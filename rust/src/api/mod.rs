@@ -20,6 +20,15 @@
 //!   answering the handle with a partial [`Response`]
 //!   (`stats.cancelled = true`) and never disturbing co-batched
 //!   sequences.
+//!
+//! The handle survives fleet churn: when the shard serving a request
+//! dies or drains, the supervisor re-places the request — carrying this
+//! same event channel — on a healthy shard, which re-prefills and
+//! replays the committed tokens as forced steps.  SWAN decode is
+//! deterministic, so the stream resumes bit-identically (no gap, no
+//! duplicate, same tokens); the caller observes at most a latency blip.
+//! Only when no healthy shard remains does the handle receive a terminal
+//! [`Event::Error`] with a `shard_lost:` message.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};

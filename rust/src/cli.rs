@@ -105,6 +105,10 @@ USAGE:
                                        admission + block-granular preemption
                                        (native pipeline path; output identical)
                 [--block-tokens N]     rows per pool block (default 16)
+                [--drain-timeout MS]   how long a draining shard (DRAIN /
+                                       SET shards scale-down) waits for
+                                       in-flight work before migrating it
+                                       to healthy shards (default 5000)
                 [--kernels K]          compute kernels: auto|scalar|avx2
                                        (accepted by every command; default auto)
   swan generate <prompt...> [--model M] [--max-new N] [--k-active K]

@@ -112,6 +112,10 @@ pub struct ServeConfig {
     pub pool: bool,
     /// Rows (tokens) per pool block, >= 1.
     pub block_tokens: usize,
+    /// How long a draining shard (`DRAIN <id>` / `SET shards <n>`
+    /// scale-down) waits for in-flight work to finish before migrating
+    /// the stragglers to healthy shards through the exact-recovery path.
+    pub drain_timeout_ms: u64,
 }
 
 impl ServeConfig {
@@ -145,6 +149,7 @@ impl Default for ServeConfig {
             bind: "127.0.0.1:7877".into(),
             pool: false,
             block_tokens: 16,
+            drain_timeout_ms: 5000,
         }
     }
 }

@@ -23,6 +23,7 @@ use crate::coordinator::scheduler::{Scheduler, SchedulerObs};
 use crate::coordinator::sequence::{CacheShape, SeqCache};
 use crate::obs::trace::{TraceKind, TraceRing, TRACE_RING_CAP};
 use crate::runtime::engine::{ArgView, HostTensor, LoadedModel};
+use crate::shard::supervisor::RecoveredReq;
 use crate::swan::batch::WorkerPool;
 
 use crate::tensor::ops::{argmax, softmax_inplace};
@@ -53,8 +54,24 @@ struct ActiveSeq {
     /// Instant of the last committed token (prefill's first token to
     /// start): each decode commit measures its inter-token gap from it.
     last_token: Instant,
+    /// Tokens to replay as forced decode steps (cross-shard recovery:
+    /// `produced[1..]` of the sequence as committed on the dead shard).
+    /// A forced step rebuilds KV but draws no RNG, emits nothing, and
+    /// accounts nothing — once drained, decode resumes sampling at
+    /// exactly the stream position an uninterrupted run would be at.
+    replay: VecDeque<u32>,
     /// Set by the commit phase; the sequence is retired at iteration end.
     finished: bool,
+}
+
+/// State carried for a recovered request between [`Engine::recover`]
+/// (which requeues it at the queue front) and its re-admission (which
+/// restores it onto the fresh [`ActiveSeq`]).
+struct RecoverCarry {
+    produced: Vec<u32>,
+    rng: Pcg64,
+    stats: RequestStats,
+    k_active: usize,
 }
 
 /// The serving engine (single-threaded stepper; wrap in a thread for the
@@ -78,6 +95,10 @@ pub struct Engine {
     /// `params.stream`) and terminal `Done`/`Error` delivered here;
     /// sink-less requests fall back to the `finished`/`rejected` queues.
     sinks: HashMap<u64, mpsc::Sender<Event>>,
+    /// Recovery carries keyed by request id: inserted by
+    /// [`Engine::recover`], consumed when admission re-prefills the
+    /// request (see [`RecoverCarry`]).
+    recovering: HashMap<u64, RecoverCarry>,
     shape: CacheShape,
     decode_l_buckets: Vec<usize>,
     prefill_buckets: Vec<usize>,
@@ -134,6 +155,7 @@ impl Engine {
             finished: VecDeque::new(),
             rejected: VecDeque::new(),
             sinks: HashMap::new(),
+            recovering: HashMap::new(),
             metrics,
             next_id: 1,
             pool: WorkerPool::new(cfg.decode_workers),
@@ -302,6 +324,83 @@ impl Engine {
         !self.active.is_empty() || self.scheduler.queue_len() > 0
     }
 
+    /// Retarget the KV memory budget (live `SET shards` rebalance: the
+    /// fleet total re-split over the new member count).
+    pub fn set_mem_budget(&mut self, bytes: usize) {
+        self.scheduler.set_mem_budget(bytes);
+    }
+
+    /// Extract every in-flight and queued request as recovery payloads
+    /// (shard death / drain-timeout migration).  Active sequences carry
+    /// their committed tokens and RNG position; queued ones are fresh
+    /// re-submissions — unless they were themselves awaiting a replay
+    /// resume, in which case their carry travels on.  Records a `Die`
+    /// trace event on each; the receiving shard records `Recover`.
+    pub fn take_work(&mut self) -> Vec<RecoveredReq> {
+        let mut out = Vec::new();
+        for mut seq in self.active.drain(..) {
+            seq.req.trace.record(TraceKind::Die);
+            let sink = self.sinks.remove(&seq.req.id);
+            let k = match &seq.backend {
+                SeqBackend::Swan(c) => c.k_active,
+                SeqBackend::Dense { .. } => 0,
+            };
+            out.push(RecoveredReq {
+                req: seq.req,
+                produced: seq.produced,
+                rng: seq.rng,
+                stats: seq.stats,
+                k_active: k,
+                sink,
+            });
+        }
+        for mut req in self.scheduler.take_all() {
+            req.trace.record(TraceKind::Die);
+            let sink = self.sinks.remove(&req.id);
+            match self.recovering.remove(&req.id) {
+                Some(c) => out.push(RecoveredReq {
+                    req,
+                    produced: c.produced,
+                    rng: c.rng,
+                    stats: c.stats,
+                    k_active: c.k_active,
+                    sink,
+                }),
+                None => out.push(RecoveredReq::fresh(req, sink)),
+            }
+        }
+        out
+    }
+
+    /// Accept a request recovered from a dead or draining shard:
+    /// re-prefill at the original compression level, replay its
+    /// committed tokens as forced decode steps (no RNG draw, no
+    /// re-emission), then continue its RNG stream — the continued output
+    /// is bit-identical to an uninterrupted run.  Recovered requests go
+    /// to the queue *front*, like same-shard preemption resumes.
+    pub fn recover(&mut self, rec: RecoveredReq) {
+        let RecoveredReq { mut req, produced, rng, mut stats, k_active, sink } = rec;
+        self.next_id = self.next_id.max(req.id) + 1;
+        req.trace.record(TraceKind::Recover);
+        self.metrics.requests_recovered.inc();
+        if let Some(tx) = sink {
+            self.sinks.insert(req.id, tx);
+        }
+        if produced.is_empty() {
+            // never prefilled on the dead shard: a plain re-run
+            self.scheduler.enqueue(req);
+            return;
+        }
+        stats.recoveries += 1;
+        if k_active > 0 {
+            // pin re-admission to the level the dead shard ran at —
+            // replay is bit-exact only over an identical cache shape
+            req.params.k_active = Some(k_active);
+        }
+        self.recovering.insert(req.id, RecoverCarry { produced, rng, stats, k_active });
+        self.scheduler.requeue_front(req);
+    }
+
     pub fn pop_finished(&mut self) -> Option<Response> {
         self.finished.pop_front()
     }
@@ -460,10 +559,24 @@ impl Engine {
             let k_req = req.params.k_active.map(&snap).unwrap_or(k_now);
             req.trace.record(TraceKind::Admit);
             match self.prefill(req, k_req, queue_time) {
-                Ok(seq) => {
-                    // the first token was sampled from the prefill
-                    // logits — streaming clients see it immediately
-                    if seq.req.params.stream {
+                Ok(mut seq) => {
+                    if let Some(c) = self.recovering.remove(&rid) {
+                        // cross-shard resume: restore the committed
+                        // tokens, RNG position and carried stats; queue
+                        // the tail for forced replay.  Nothing is
+                        // re-emitted — the client already holds every
+                        // committed token, including the first.
+                        let fresh = seq.stats.clone();
+                        seq.stats = c.stats;
+                        seq.stats.queue_time += fresh.queue_time;
+                        seq.stats.prefill_time += fresh.prefill_time;
+                        seq.rng = c.rng;
+                        seq.next_token = c.produced[0];
+                        seq.replay = c.produced[1..].iter().copied().collect();
+                        seq.produced = c.produced;
+                    } else if seq.req.params.stream {
+                        // the first token was sampled from the prefill
+                        // logits — streaming clients see it immediately
                         if let Some(tx) = self.sinks.get(&rid) {
                             let _ = tx.send(Event::Token {
                                 id: rid,
@@ -476,6 +589,9 @@ impl Engine {
                     self.active.push(seq);
                 }
                 Err(e) => {
+                    // a failed re-prefill of a recovered request is
+                    // terminal too — drop its carry with it
+                    self.recovering.remove(&rid);
                     self.metrics.requests_rejected.inc();
                     log::warn!("prefill failed: {e:#}");
                     self.deliver_error(rid, format!("rejected at admission: {e:#}"));
@@ -575,6 +691,7 @@ impl Engine {
             backend,
             req,
             last_token: Instant::now(),
+            replay: VecDeque::new(),
             finished: false,
         })
     }
@@ -607,6 +724,9 @@ impl Engine {
             /// Token sampled in the execute phase (None when the sequence
             /// finished, errored, or produced non-f32 logits).
             next: Option<u32>,
+            /// This step replayed a recovered token: commit appends KV
+            /// and advances the cursor but emits and accounts nothing.
+            replayed: bool,
             exec: Duration,
         }
 
@@ -617,20 +737,35 @@ impl Engine {
             let mut tasks: Vec<StepTask> = self
                 .active
                 .iter_mut()
-                .map(|seq| StepTask { seq, out: None, next: None, exec: Duration::ZERO })
+                .map(|seq| StepTask {
+                    seq,
+                    out: None,
+                    next: None,
+                    replayed: false,
+                    exec: Duration::ZERO,
+                })
                 .collect();
             self.pool.for_each_mut(&mut tasks, |_scratch, t| {
                 let t0 = Instant::now();
                 let out = decode_execute(lm, shape, l_buckets, clone_args, t.seq);
                 if let Ok(Some(outs)) = &out {
                     if let Ok(logits) = outs[0].as_f32() {
-                        // top-p / repetition-penalty live here in the
-                        // parallel phase: the draw depends only on this
-                        // sequence's own state (params, produced
-                        // history, private RNG stream), so serial and
-                        // parallel stepping stay bit-identical
                         let s = &mut *t.seq;
-                        t.next = Some(sample(logits, &s.req.params, &s.produced, &mut s.rng));
+                        if let Some(forced) = s.replay.pop_front() {
+                            // forced replay step (cross-shard recovery):
+                            // the token is already committed — rebuild
+                            // KV, draw nothing from the RNG stream
+                            t.next = Some(forced);
+                            t.replayed = true;
+                        } else {
+                            // top-p / repetition-penalty live here in the
+                            // parallel phase: the draw depends only on this
+                            // sequence's own state (params, produced
+                            // history, private RNG stream), so serial and
+                            // parallel stepping stay bit-identical
+                            t.next =
+                                Some(sample(logits, &s.req.params, &s.produced, &mut s.rng));
+                        }
                     }
                 }
                 t.out = Some(out);
@@ -670,6 +805,15 @@ impl Engine {
                         }
                         *len += 1;
                     }
+                }
+
+                if t.replayed {
+                    // forced replay commit: the token was committed (and
+                    // for streams, emitted) before the shard died — KV
+                    // is rebuilt, the cursor advances, nothing else
+                    seq.next_token = next;
+                    self.metrics.replay_tokens.inc();
+                    continue;
                 }
 
                 seq.next_token = next;

@@ -77,6 +77,13 @@ pub struct Metrics {
     /// the pool budget.  Preemption is not terminal: the sequence resumes
     /// later, so this can exceed the request count under churn.
     pub requests_preempted: Arc<Counter>,
+    /// Recovered requests this engine/group accepted with committed
+    /// tokens to replay (cross-shard resume after a death or drain).
+    pub requests_recovered: Arc<Counter>,
+    /// Tokens rebuilt as forced replay steps (no RNG draw, no emission)
+    /// while resuming recovered or preempted sequences — the KV-rebuild
+    /// overhead of exact recovery.
+    pub replay_tokens: Arc<Counter>,
     pub prefill_tokens: Arc<Counter>,
     pub decode_tokens: Arc<Counter>,
     pub cache_bytes: Arc<Gauge>,
@@ -107,6 +114,8 @@ impl Default for Metrics {
             requests_rejected: registry.counter("swan_requests_total", &[("outcome", "rejected")]),
             requests_cancelled: registry.counter("swan_requests_total", &[("outcome", "cancelled")]),
             requests_preempted: registry.counter("swan_preemptions_total", &[]),
+            requests_recovered: registry.counter("swan_requests_recovered", &[]),
+            replay_tokens: registry.counter("swan_replay_tokens", &[]),
             prefill_tokens: registry.counter("swan_tokens_total", &[("phase", "prefill")]),
             decode_tokens: registry.counter("swan_tokens_total", &[("phase", "decode")]),
             cache_bytes: registry.gauge("swan_kv_bytes", &[]),
@@ -130,12 +139,13 @@ impl Metrics {
     pub fn snapshot(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "requests: submitted={} completed={} rejected={} cancelled={} preempted={}\n",
+            "requests: submitted={} completed={} rejected={} cancelled={} preempted={} recovered={}\n",
             self.requests_submitted.get(),
             self.requests_completed.get(),
             self.requests_rejected.get(),
             self.requests_cancelled.get(),
             self.requests_preempted.get(),
+            self.requests_recovered.get(),
         ));
         out.push_str(&format!(
             "tokens: prefill={} decode={}\n",

@@ -117,6 +117,13 @@ pub struct RequestStats {
     /// the first post-resume token charges the full user-observed stall.
     pub itl_sum_ns: u64,
     pub itl_max_ns: u64,
+    /// Times this request was preempted (pool-budget eviction).  Capped
+    /// by the coordinator's per-request preemption limit, after which
+    /// the sequence becomes non-evictable (fairness under overload).
+    pub preemptions: u32,
+    /// Times this request survived a shard death or drain migration
+    /// (each recovery re-prefilled and replayed bit-exactly).
+    pub recoveries: u32,
 }
 
 impl RequestStats {

@@ -166,6 +166,21 @@ impl Scheduler {
         out
     }
 
+    /// Drain the whole queue in FIFO order (shard death / drain-timeout
+    /// hand-back: every queued request is extracted for recovery on a
+    /// healthy shard).  Resets the head-aging state — the next head this
+    /// scheduler sees, if any, is a brand-new request.
+    pub fn take_all(&mut self) -> Vec<Request> {
+        self.reset_skips();
+        self.queue.drain(..).map(|p| p.req).collect()
+    }
+
+    /// Retarget the KV memory budget (live `SET shards` rebalance: the
+    /// fleet total is re-split over the new member count).
+    pub fn set_mem_budget(&mut self, bytes: usize) {
+        self.mem_budget = bytes;
+    }
+
     /// Flip the cancel token of a queued request by id (the shard-level
     /// `CANCEL <id>` hop lands here when the request has not been
     /// admitted yet).  Returns whether the id was found.
@@ -462,6 +477,22 @@ mod tests {
         s.requeue_front(p.req);
         assert_eq!(s.admit_next(0, 0, |_| 0).unwrap().req.id, 1);
         assert_eq!(s.admit_next(0, 0, |_| 0).unwrap().req.id, 2);
+    }
+
+    /// Death/drain hand-back empties the queue in FIFO order and resets
+    /// the head-aging state for whatever is enqueued next.
+    #[test]
+    fn take_all_drains_fifo_and_resets_aging() {
+        let mut s = Scheduler::new(8, 1000);
+        let proj = |r: &Request| r.prompt.len();
+        s.enqueue(req(1, 1500)); // giant head, accrues a skip
+        s.enqueue(req(2, 100));
+        assert_eq!(s.admit_next(1, 500, proj).unwrap().req.id, 2);
+        s.enqueue(req(3, 100));
+        let taken = s.take_all();
+        assert_eq!(taken.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(s.queue_len(), 0);
+        assert!(s.take_all().is_empty(), "drain is idempotent");
     }
 
     #[test]

@@ -58,6 +58,8 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     cfg.pool = args.has("pool");
     cfg.block_tokens = args.get_usize("block-tokens", cfg.block_tokens)?;
     anyhow::ensure!(cfg.block_tokens >= 1, "--block-tokens must be >= 1");
+    cfg.drain_timeout_ms =
+        args.get_usize("drain-timeout", cfg.drain_timeout_ms as usize)? as u64;
     anyhow::ensure!(
         !(cfg.pool && cfg.dense_baseline),
         "--pool serves SWAN hybrid caches; it cannot combine with --dense"

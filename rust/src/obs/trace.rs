@@ -24,6 +24,9 @@ pub const TRACE_RING_CAP: usize = 256;
 
 /// Lifecycle event kinds, in the order a healthy request emits them.
 /// `Preempt`/`Resume` pairs may repeat; `Decode` repeats per token.
+/// `Die`/`Recover` bracket a shard death: the request's shard died with
+/// the sequence in flight, and a healthy shard picked it up (the
+/// cross-shard generalization of the preempt→resume arc).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceKind {
     /// Request accepted by submit(): id assigned, queued.
@@ -40,6 +43,12 @@ pub enum TraceKind {
     Preempt,
     /// Re-admitted after preemption; replay rebuild starts.
     Resume,
+    /// The owning shard died (panic / stage failure / drain migration);
+    /// the request was extracted for recovery.
+    Die,
+    /// Handed to a healthy shard; re-prefill + replay follow (the
+    /// resumed stream is bit-identical to an uninterrupted run).
+    Recover,
     /// Final: completed, cancelled, or purged.
     Retire,
 }
@@ -54,6 +63,8 @@ impl TraceKind {
             TraceKind::Decode => "decode",
             TraceKind::Preempt => "preempt",
             TraceKind::Resume => "resume",
+            TraceKind::Die => "die",
+            TraceKind::Recover => "recover",
             TraceKind::Retire => "retire",
         }
     }

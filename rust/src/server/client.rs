@@ -79,6 +79,24 @@ impl Client {
         Ok(())
     }
 
+    /// Scale the fleet to `n` placeable shards live (`SET shards <n>`).
+    pub fn set_shards(&mut self, n: usize) -> anyhow::Result<()> {
+        writeln!(self.writer, "SET shards {n}")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == format!("OK shards={n}"), "unexpected reply '{l}'");
+        Ok(())
+    }
+
+    /// Drain shard `id`: placement stops immediately, in-flight work
+    /// finishes (or migrates after the server's drain timeout), then the
+    /// shard retires (`DRAIN <id>`).
+    pub fn drain(&mut self, id: usize) -> anyhow::Result<()> {
+        writeln!(self.writer, "DRAIN {id}")?;
+        let l = self.line()?;
+        anyhow::ensure!(l == "OK", "unexpected reply '{l}'");
+        Ok(())
+    }
+
     /// Cancel a generation by id; the pending `GEN` still answers (with
     /// its partial output and `cancelled=1`).
     pub fn cancel(&mut self, id: u64) -> anyhow::Result<()> {

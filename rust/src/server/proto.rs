@@ -45,6 +45,13 @@ pub enum Command {
     SetKActive(usize),
     /// SET balance <policy> — swap the router's placement policy live.
     SetBalance(String),
+    /// `SET shards <n>` — elastic membership: scale the fleet to `n`
+    /// placeable shards live (scale-up launches supervised members,
+    /// scale-down drains the youngest; KV budget rebalances either way).
+    SetShards(usize),
+    /// `DRAIN <id>` — stop placing on shard `id`, let its in-flight
+    /// work finish (or migrate after the drain timeout), then retire it.
+    Drain(usize),
     Stats,
     /// `METRICS` — Prometheus text exposition of the fleet registries,
     /// terminated by a `# EOF` line.
@@ -276,9 +283,16 @@ pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
                     })
                 }
                 (Some("balance"), Some(policy)) => Ok(Command::SetBalance(policy.to_string())),
+                (Some("shards"), Some(n)) => {
+                    n.parse().map(Command::SetShards).map_err(|_| ProtoError::BadArgs {
+                        verb: "SET shards",
+                        expected: "a number",
+                        got: n.to_string(),
+                    })
+                }
                 _ => Err(ProtoError::BadArgs {
                     verb: "SET",
-                    expected: "'k_active <n>' or 'balance <policy>'",
+                    expected: "'k_active <n>', 'balance <policy>' or 'shards <n>'",
                     got: rest.to_string(),
                 }),
             }
@@ -290,6 +304,14 @@ pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
             id.parse().map(Command::Trace).map_err(|_| ProtoError::BadArgs {
                 verb: "TRACE",
                 expected: "a request id",
+                got: id.to_string(),
+            })
+        }
+        "DRAIN" => {
+            let id = rest.trim();
+            id.parse().map(Command::Drain).map_err(|_| ProtoError::BadArgs {
+                verb: "DRAIN",
+                expected: "a shard id",
                 got: id.to_string(),
             })
         }
@@ -408,6 +430,20 @@ mod tests {
         assert_eq!(parse_line("stats").unwrap(), Command::Stats);
         assert_eq!(parse_line("PING").unwrap(), Command::Ping);
         assert_eq!(parse_line("QUIT\r\n").unwrap(), Command::Quit);
+    }
+
+    #[test]
+    fn parses_fleet_lifecycle_verbs() {
+        assert_eq!(parse_line("SET shards 4").unwrap(), Command::SetShards(4));
+        assert_eq!(parse_line("set shards 1\r\n").unwrap(), Command::SetShards(1));
+        assert_eq!(parse_line("SET shards many").unwrap_err().code(), "bad-args");
+        assert_eq!(parse_line("DRAIN 2").unwrap(), Command::Drain(2));
+        assert_eq!(parse_line("drain 0\n").unwrap(), Command::Drain(0));
+        assert_eq!(parse_line("DRAIN").unwrap_err().code(), "bad-args");
+        assert_eq!(parse_line("DRAIN x").unwrap_err().code(), "bad-args");
+        // the SET usage string names all three subcommands
+        let e = parse_line("SET foo 3").unwrap_err();
+        assert!(e.to_string().contains("'shards <n>'"), "{e}");
     }
 
     #[test]

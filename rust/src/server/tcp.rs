@@ -27,7 +27,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::request::{Request, Response};
 use crate::server::proto::{parse_line, Command};
 use crate::shard::balance::policy_from_name;
-use crate::shard::Router;
+use crate::shard::{Router, ShardLostError};
 
 /// In-flight generations of one connection: id → cancel token.  Entries
 /// are removed by the pump thread at terminal events; anything left when
@@ -103,7 +103,12 @@ fn pump_generation(
             }
             Event::Done(resp) => write_done(&writer, resp, max_new_cap),
             Event::Error { message, .. } => {
-                writeln!(writer.lock().unwrap(), "ERR generation {message}")
+                // a recovery that found no healthy shard is a fleet
+                // condition, not a generation bug — distinct ERR code
+                match message.strip_prefix("shard_lost: ") {
+                    Some(rest) => writeln!(writer.lock().unwrap(), "ERR shard_lost {rest}"),
+                    None => writeln!(writer.lock().unwrap(), "ERR generation {message}"),
+                }
             }
         };
         let terminal = !matches!(ev, Event::Token { .. });
@@ -199,9 +204,29 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                         });
                     }
                     Err(e) => {
-                        let _ = writeln!(writer.lock().unwrap(), "ERR unavailable {e}");
+                        // placement exhaustion is structured: ERR shard_lost
+                        let code = if e.downcast_ref::<ShardLostError>().is_some() {
+                            "shard_lost"
+                        } else {
+                            "unavailable"
+                        };
+                        let _ = writeln!(writer.lock().unwrap(), "ERR {code} {e}");
                     }
                 }
+            }
+            Ok(Command::SetShards(n)) => {
+                let reply = match router.set_shards(n) {
+                    Ok(n) => format!("OK shards={n}"),
+                    Err(e) => format!("ERR bad-args {e}"),
+                };
+                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+            }
+            Ok(Command::Drain(id)) => {
+                let reply = match router.drain(id) {
+                    Ok(()) => "OK".to_string(),
+                    Err(e) => format!("ERR bad-args {e}"),
+                };
+                let _ = writeln!(writer.lock().unwrap(), "{reply}");
             }
             Ok(Command::Cancel(id)) => {
                 // a generation of this connection cancels directly via
@@ -249,9 +274,19 @@ pub fn serve_with_ready(
     cfg: ServeConfig,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
-    let max_new_cap = cfg.max_new_hard_cap();
     let router = Arc::new(Router::launch(artifacts_dir, cfg.clone())?);
+    serve_router(router, &cfg, on_ready)
+}
 
+/// Serve an already-built router (chaos/e2e tests drive artifact-free
+/// synthetic fleets over real TCP through this; `swan serve` goes through
+/// [`serve_with_ready`], which launches the fleet from artifacts first).
+pub fn serve_router(
+    router: Arc<Router>,
+    cfg: &ServeConfig,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let max_new_cap = cfg.max_new_hard_cap();
     let listener = TcpListener::bind(&cfg.bind)?;
     let addr = listener.local_addr()?;
     let topology = if cfg.pipeline > 1 {

@@ -10,7 +10,7 @@
 //! shard's registry ([`fleet_metrics`]), and trace lookup broadcasts
 //! because the router does not track placement ([`fleet_trace`]).
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
@@ -26,11 +26,16 @@ const STATS_GATHER_TIMEOUT: Duration = Duration::from_secs(30);
 const TRACE_GATHER_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Render the fleet view: header, per-shard blocks, aggregate totals.
-pub fn fleet_stats(shards: &[ShardHandle], policy: &str) -> String {
+/// (Handles arrive as `Arc`s: membership is elastic, so the router hands
+/// out point-in-time clones of the shard list, not slice borrows.)
+pub fn fleet_stats(shards: &[Arc<ShardHandle>], policy: &str) -> String {
     let mut out = format!("fleet: shards={} balance={policy}\n", shards.len());
     // broadcast first, then gather — shards render in parallel
     let mut pending = Vec::with_capacity(shards.len());
     for s in shards {
+        if s.status.state() != crate::shard::ShardState::Healthy {
+            out.push_str(&format!("shard {}: {}\n", s.id, s.status.state().name()));
+        }
         let (tx, rx) = mpsc::channel();
         match s.send(ShardCmd::Stats { reply: tx }) {
             Ok(()) => pending.push((s.id, rx)),
@@ -94,7 +99,7 @@ pub fn aggregate_totals<'a>(metrics: impl Iterator<Item = &'a Metrics>) -> Strin
 /// (connection counters, no identity label) plus every shard's registry
 /// as a `shard="i"`-labelled source, merged per the
 /// [`crate::obs::export`] rules.
-pub fn fleet_metrics(shards: &[ShardHandle], server: &Registry) -> String {
+pub fn fleet_metrics(shards: &[Arc<ShardHandle>], server: &Registry) -> String {
     let mut sources = vec![Source::new(server)];
     for s in shards {
         sources.push(Source::shard(s.id as u64, &s.metrics.registry));
@@ -106,7 +111,7 @@ pub fn fleet_metrics(shards: &[ShardHandle], server: &Registry) -> String {
 /// lookup broadcasts and the first shard that knows the id answers.
 /// `None` when no shard retains it (never submitted, or evicted from
 /// the retired-trace ring).
-pub fn fleet_trace(shards: &[ShardHandle], id: u64) -> Option<String> {
+pub fn fleet_trace(shards: &[Arc<ShardHandle>], id: u64) -> Option<String> {
     let mut pending = Vec::with_capacity(shards.len());
     for s in shards {
         let (tx, rx) = mpsc::channel();
@@ -149,7 +154,7 @@ mod tests {
         h1.metrics.k_active.set(8);
         let server = Registry::new();
         server.counter("swan_connections_total", &[]).add(3);
-        let shards = vec![h0, h1];
+        let shards = vec![Arc::new(h0), Arc::new(h1)];
         let text = fleet_metrics(&shards, &server);
         assert!(text.contains("swan_requests_total{outcome=\"completed\"} 7\n"), "{text}");
         assert!(text.contains("swan_k_active{shard=\"0\"} 16\n"), "{text}");
@@ -172,7 +177,7 @@ mod tests {
                 })
             })
             .collect();
-        let shards = vec![h0, h1];
+        let shards = vec![Arc::new(h0), Arc::new(h1)];
         assert_eq!(fleet_trace(&shards, 7).as_deref(), Some("{\"id\":7}\n"));
         for r in responders {
             r.join().unwrap();
@@ -195,7 +200,7 @@ mod tests {
                 })
             })
             .collect();
-        let shards = vec![h0, h1];
+        let shards = vec![Arc::new(h0), Arc::new(h1)];
         let s = fleet_stats(&shards, "round-robin");
         for r in responders {
             r.join().unwrap();

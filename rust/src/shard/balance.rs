@@ -13,6 +13,11 @@ use crate::shard::ShardSnapshot;
 /// position) and returns the index of the shard to place the next request
 /// on.  Policies may keep state (`&mut self`) — e.g. the round-robin
 /// cursor — which the router guards with its own lock.
+///
+/// Lifecycle is not a policy concern: the router filters the snapshot
+/// list to `Healthy` members *before* calling `pick` (draining and dead
+/// shards are never candidates), so policies stay state-oblivious and
+/// the scripted-snapshot determinism above survives fleet churn.
 pub trait BalancePolicy: Send {
     /// Stable policy name (the `--balance` / `SET balance` spelling).
     fn name(&self) -> &'static str;

@@ -39,10 +39,47 @@ pub mod balance;
 pub mod pipeline;
 pub mod router;
 pub mod shard;
+pub mod supervisor;
 
 pub use balance::{policy_from_name, BalancePolicy, LeastQueued, MemAware, RoundRobin};
 pub use router::Router;
 pub use shard::{ShardCmd, ShardHandle, ShardStatus};
+pub use supervisor::{FaultPlan, FleetEvent, RecoveredReq, ShardHooks, ShardLostError};
+
+/// Lifecycle state of a shard, published in its [`ShardSnapshot`].
+///
+/// The router filters placement to `Healthy` shards before any
+/// [`BalancePolicy`] sees the snapshot list, so policies stay
+/// state-oblivious.  `Draining` shards finish (or migrate) their
+/// in-flight work and are then retired; `Dead` shards are awaiting
+/// removal by the supervisor after their work was handed back.
+#[repr(u8)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardState {
+    #[default]
+    Healthy = 0,
+    Draining = 1,
+    Dead = 2,
+}
+
+impl ShardState {
+    /// Decode from the `AtomicU8` a `ShardStatus` stores.
+    pub fn from_u8(v: u8) -> ShardState {
+        match v {
+            1 => ShardState::Draining,
+            2 => ShardState::Dead,
+            _ => ShardState::Healthy,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardState::Healthy => "healthy",
+            ShardState::Draining => "draining",
+            ShardState::Dead => "dead",
+        }
+    }
+}
 
 /// Point-in-time load view of one shard, consumed by placement policies.
 ///
@@ -65,6 +102,8 @@ pub struct ShardSnapshot {
     pub projected_bytes: usize,
     /// The shard's current compression level.
     pub k_active: usize,
+    /// Lifecycle state; the router places only on `Healthy` shards.
+    pub state: ShardState,
 }
 
 impl ShardSnapshot {

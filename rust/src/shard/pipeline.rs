@@ -36,6 +36,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -53,7 +54,9 @@ use crate::obs::histogram::Histogram;
 use crate::obs::registry::{Gauge, Registry};
 use crate::obs::trace::{TraceKind, TraceRing, TRACE_RING_CAP};
 use crate::pool::{pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache, PoolObs};
-use crate::shard::shard::{ShardCmd, ShardHandle, ShardStatus};
+use crate::shard::shard::{panic_reason, ShardCmd, ShardHandle, ShardStatus};
+use crate::shard::supervisor::{FleetEvent, RecoveredReq, ShardHooks, StageFaults};
+use crate::shard::ShardState;
 use crate::swan::batch::WorkerPool;
 use crate::util::Pcg64;
 
@@ -186,6 +189,16 @@ fn request_k_for(req: &Request, d_head: usize, k_now: usize) -> usize {
     req.params.k_active.map(|k| k.clamp(1, d_head)).unwrap_or(k_now)
 }
 
+/// Preemption-fairness cap: after this many evictions a sequence becomes
+/// non-evictable and the pool-budget loop picks the next-youngest victim
+/// instead.  Without it, sustained overload preempts the same youngest
+/// sequence every iteration — it replays its whole history, gets evicted
+/// again before committing a fresh token, and starves (thrash).  The cap
+/// bounds each sequence's replay overhead at `MAX_PREEMPTIONS` rebuilds
+/// while keeping the youngest-first heuristic (oldest sequences are
+/// closest to finishing and have the most replay state).
+pub const MAX_PREEMPTIONS: u32 = 3;
+
 fn policy_kind(cfg: &ServeConfig, k_active: usize) -> PolicyKind {
     if cfg.dense_baseline {
         PolicyKind::Dense
@@ -212,10 +225,14 @@ struct StageCtx {
     /// This stage's block pool (`--pool`): every sequence cache this
     /// stage builds leases its storage here instead of owning it.
     block_pool: Option<Arc<BlockPool>>,
+    /// Chaos fault injection (no-op outside chaos tests): counts this
+    /// stage's prefills/forwards against the group's [`FaultPlan`].
+    faults: StageFaults,
 }
 
 fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
-    let StageCtx { group, stage, layers, model, cfg, next, status, events, block_pool } = ctx;
+    let StageCtx { group, stage, layers, model, cfg, next, status, events, block_pool, faults } =
+        ctx;
     let mut guard = FailureGuard { stage, events, armed: true };
     let first = layers.start == 0;
     let mut pool = WorkerPool::new(cfg.decode_workers);
@@ -223,6 +240,7 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
     while let Ok(cmd) = rx.recv() {
         match cmd {
             StageCmd::Prefill { seq, mut h, k_active } => {
+                faults.on_prefill(stage);
                 let pf = model.prefill_layers(&mut h, layers.clone(), &mut pool);
                 let mut st = match &block_pool {
                     // paged path: same SWAN policy, storage leased from
@@ -261,6 +279,12 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                 }
             }
             StageCmd::Forward { seqs: ids, tokens, h, compute_ns } => {
+                if faults.on_forward(stage) {
+                    // injected stage drop: exit without disarming the
+                    // guard, so the coordinator sees StageFailed — the
+                    // disconnect flavor of stage death
+                    break;
+                }
                 // pull the batch's states out in forward order (disjoint
                 // &mut for decode_step_pipeline), then put them back
                 let mut states: Vec<SequenceState> = ids
@@ -417,7 +441,11 @@ struct GroupObs {
     stage_bubble_seconds: Arc<Histogram>,
     /// Eviction-to-resume wall time per preemption.
     preempt_wait_seconds: Arc<Histogram>,
-    /// Forced decode steps per resume (the cache-rebuild cost).
+    /// Forced decode steps per resume — the per-event distribution of
+    /// the cache-rebuild cost.  The running total lives in the shared
+    /// `swan_replay_tokens` counter ([`Metrics::replay_tokens`]); the
+    /// two series must keep distinct names (same registry, and the
+    /// exporter drops kind-conflicting series).
     replay_tokens: Arc<Histogram>,
     /// Per-stage live command-queue depth (the bubble indicator).
     stage_depth: Vec<Arc<Gauge>>,
@@ -435,7 +463,7 @@ impl GroupObs {
         GroupObs {
             stage_bubble_seconds: registry.histogram("swan_stage_bubble_seconds", &[]),
             preempt_wait_seconds: registry.histogram("swan_preempt_wait_seconds", &[]),
-            replay_tokens: registry.histogram("swan_replay_tokens", &[]),
+            replay_tokens: registry.histogram("swan_replay_tokens_per_resume", &[]),
             stage_depth: per_stage("swan_stage_queue_depth"),
             stage_leased: if pool_on { per_stage("swan_pool_blocks_leased") } else { Vec::new() },
             frag_percent: registry.gauge("swan_pool_frag_percent", &[]),
@@ -730,15 +758,48 @@ impl Group {
             let t0 = Instant::now();
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
             let h = self.model.embed_prompt(tokens);
-            self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: k_seq })?;
-            let logits = loop {
-                match self.ev_rx.recv() {
-                    Ok(GroupEvent::Prefilled { seq, logits }) if seq == rid => break logits,
-                    Ok(GroupEvent::StageFailed { stage }) => {
-                        anyhow::bail!("pipeline group {}: stage {stage} died", self.id)
+            let prefilled: anyhow::Result<Vec<f32>> =
+                match self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: k_seq }) {
+                    Err(e) => Err(e),
+                    Ok(()) => loop {
+                        match self.ev_rx.recv() {
+                            Ok(GroupEvent::Prefilled { seq, logits }) if seq == rid => {
+                                break Ok(logits);
+                            }
+                            Ok(GroupEvent::StageFailed { stage }) => {
+                                break Err(anyhow::anyhow!(
+                                    "pipeline group {}: stage {stage} died",
+                                    self.id
+                                ));
+                            }
+                            Ok(_) => {
+                                break Err(anyhow::anyhow!(
+                                    "pipeline group {}: out-of-order prefill event",
+                                    self.id
+                                ));
+                            }
+                            Err(_) => {
+                                break Err(anyhow::anyhow!(
+                                    "pipeline group {}: stage chain died",
+                                    self.id
+                                ));
+                            }
+                        }
+                    },
+                };
+            let logits = match prefilled {
+                Ok(l) => l,
+                Err(e) => {
+                    // hand the request (and its carry) back before
+                    // surfacing the failure: a supervised death extracts
+                    // recovery payloads from the queue and the carry map,
+                    // so the admission hop dying must not strand the one
+                    // request it was admitting
+                    if let Some(c) = carry {
+                        self.preempted.insert(rid, c);
                     }
-                    Ok(_) => anyhow::bail!("pipeline group {}: out-of-order prefill event", self.id),
-                    Err(_) => anyhow::bail!("pipeline group {}: stage chain died", self.id),
+                    self.scheduler.requeue_front(req);
+                    return Err(e);
                 }
             };
             if let Some(mut c) = carry {
@@ -824,10 +885,8 @@ impl Group {
     fn preempt(&mut self, idx: usize) -> anyhow::Result<()> {
         let mut seq = self.active.remove(idx);
         let id = seq.req.id;
-        for s in &self.stages {
-            s.send(StageCmd::Retire { seqs: vec![id] })?;
-        }
         self.metrics.requests_preempted.inc();
+        seq.stats.preemptions += 1;
         seq.req.trace.record(TraceKind::Preempt);
         self.preempted.insert(
             id,
@@ -841,7 +900,132 @@ impl Group {
             },
         );
         self.scheduler.requeue_front(seq.req);
+        // the Retire hop runs AFTER the hand-back: if a stage is already
+        // dead this surfaces the error with the sequence safely parked in
+        // the queue + carry map, where a supervised death will extract it
+        for s in &self.stages {
+            s.send(StageCmd::Retire { seqs: vec![id] })?;
+        }
         Ok(())
+    }
+
+    /// Supervised-death / drain-timeout extraction: every in-flight,
+    /// preempted and queued request leaves as a recovery payload the
+    /// supervisor re-places on a healthy shard.  Called only at
+    /// iteration boundaries or after a failed step — both consistent
+    /// points (no sequence is mid-commit), so `produced`/`rng` describe
+    /// exactly the tokens the client has seen and the payload resumes
+    /// bit-identically elsewhere.
+    fn extract_work(&mut self) -> Vec<RecoveredReq> {
+        let mut out = Vec::new();
+        for mut seq in self.active.drain(..) {
+            seq.req.trace.record(TraceKind::Die);
+            let sink = self.sinks.remove(&seq.req.id);
+            out.push(RecoveredReq {
+                produced: seq.produced,
+                rng: seq.rng,
+                stats: seq.stats,
+                k_active: seq.k_active,
+                sink,
+                req: seq.req,
+            });
+        }
+        // queued requests: preempted carries resume where they left off,
+        // never-prefilled ones are plain re-submissions
+        for mut req in self.scheduler.take_all() {
+            req.trace.record(TraceKind::Die);
+            let sink = self.sinks.remove(&req.id);
+            out.push(match self.preempted.remove(&req.id) {
+                Some(c) => RecoveredReq {
+                    produced: c.produced,
+                    rng: c.rng,
+                    stats: c.stats,
+                    k_active: c.k_active,
+                    sink,
+                    req,
+                },
+                None => RecoveredReq::fresh(req, sink),
+            });
+        }
+        out
+    }
+
+    /// Accept a recovery payload from the supervisor (a request pulled
+    /// off a dead or draining shard): park it as a carry and requeue at
+    /// the scheduler front, so re-admission runs the preemption-resume
+    /// machinery — re-prefill, then forced replay of the committed
+    /// tokens — generalized cross-shard.
+    fn recover(&mut self, rec: RecoveredReq) {
+        let RecoveredReq { mut req, produced, rng, mut stats, k_active, sink } = rec;
+        self.next_id = self.next_id.max(req.id) + 1;
+        req.trace.record(TraceKind::Recover);
+        self.metrics.requests_recovered.inc();
+        if let Some(tx) = sink {
+            self.sinks.insert(req.id, tx);
+        }
+        if produced.is_empty() {
+            // never prefilled on the dead shard: a plain re-run
+            self.scheduler.enqueue(req);
+            return;
+        }
+        stats.recoveries += 1;
+        // resume at the admission-time compression level of the original
+        // shard (0 = engine didn't pin one; derive from the request), or
+        // the rebuilt cache would diverge from the one that died
+        let k = if k_active > 0 {
+            k_active.clamp(1, self.model.cfg.d_head)
+        } else {
+            self.request_k(&req)
+        };
+        self.preempted.insert(
+            req.id,
+            Carry {
+                produced,
+                rng,
+                stats,
+                k_active: k,
+                preempted_at: Instant::now(),
+                last_token: Instant::now(),
+            },
+        );
+        self.scheduler.requeue_front(req);
+    }
+
+    /// Supervised death: mark Dead, extract all work, hand it to the
+    /// supervisor for re-placement on healthy shards.
+    fn die(&mut self, status: &ShardStatus, fleet: &mpsc::Sender<FleetEvent>, reason: String) {
+        status.set_state(ShardState::Dead);
+        let recovered = self.extract_work();
+        log::error!(
+            "pipeline group {} died ({reason}); handing {} request(s) to the supervisor",
+            self.id,
+            recovered.len()
+        );
+        self.publish(status);
+        let _ = fleet.send(FleetEvent::ShardDead { id: self.id, reason, recovered });
+    }
+
+    /// Live budget retune (elastic scale events rebalance the fleet
+    /// budget across the surviving shards): classic mode takes bytes
+    /// straight; pool mode re-derives the group block budget at the
+    /// current compression level.  Stage pool *targets* stay as
+    /// launched — they are gauges, leases are elastic, and the budget
+    /// is enforced analytically by the coordinator.
+    fn set_mem_budget(&mut self, bytes: usize) {
+        if self.pool_on() {
+            let mc = &self.model.cfg;
+            let total = pool_blocks_for_budget(
+                bytes,
+                self.cfg.block_tokens,
+                mc.d_head,
+                self.cfg.mode,
+                self.k_now,
+            );
+            self.total_blocks = total;
+            self.scheduler.set_mem_budget(if total == usize::MAX { 0 } else { total });
+        } else {
+            self.scheduler.set_mem_budget(bytes);
+        }
     }
 
     /// One decode iteration: forward the whole ready set down the chain,
@@ -891,7 +1075,18 @@ impl Group {
                 if after <= self.total_blocks {
                     break;
                 }
-                self.preempt(*running.last().unwrap())?;
+                // youngest evictable victim: skip sequences that already
+                // burned their MAX_PREEMPTIONS budget (fairness — see the
+                // constant's docs), falling back to the absolute youngest
+                // when every runner has hit the cap (liveness beats the
+                // cap: the loop must still converge on a batch that fits)
+                let victim = running
+                    .iter()
+                    .rev()
+                    .copied()
+                    .find(|&i| self.active[i].stats.preemptions < MAX_PREEMPTIONS)
+                    .unwrap_or(*running.last().unwrap());
+                self.preempt(victim)?;
             }
         }
 
@@ -937,6 +1132,7 @@ impl Group {
                     // no emission, no stats: the original pass already
                     // did all of that.
                     seq.next_token = tok;
+                    self.metrics.replay_tokens.inc();
                     continue;
                 }
                 let next = sample(l, &seq.req.params, &seq.produced, &mut seq.rng);
@@ -1076,8 +1272,30 @@ impl Group {
 }
 
 /// The coordinator thread: the pipeline-group analogue of `shard_loop`.
-fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) {
+/// With a fleet hook, every abnormal exit — stage death, coordinator
+/// panic, injected fault, drain timeout — extracts the group's work and
+/// hands it to the supervisor instead of failing the waiters.
+fn group_loop(
+    mut g: Group,
+    rx: mpsc::Receiver<ShardCmd>,
+    status: &ShardStatus,
+    hooks: ShardHooks,
+) {
+    let mut iter: u64 = 0;
+    let mut drain_deadline: Option<Instant> = None;
     loop {
+        // chaos: scripted or externally-triggered coordinator kill,
+        // checked at the iteration boundary — a consistent point (no
+        // sequence is mid-commit), so the extracted payloads are exact
+        if let Some(plan) = hooks.plan.as_deref() {
+            if plan.coordinator_dies(iter) {
+                if let Some(fleet) = &hooks.fleet {
+                    g.die(status, fleet, "chaos: injected coordinator kill".to_string());
+                }
+                return g.shutdown();
+            }
+        }
+        iter += 1;
         // drain commands (non-blocking while busy, blocking when idle)
         loop {
             let cmd = if g.has_work() {
@@ -1086,6 +1304,9 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => return g.shutdown(),
                 }
+            } else if drain_deadline.is_some() {
+                // draining and idle: fall through to the completion check
+                break;
             } else {
                 g.publish(status);
                 match rx.recv() {
@@ -1126,20 +1347,77 @@ fn group_loop(mut g: Group, rx: mpsc::Receiver<ShardCmd>, status: &ShardStatus) 
                 ShardCmd::Trace { id, reply } => {
                     let _ = reply.send(g.trace_jsonl(id));
                 }
+                ShardCmd::Recover(rec) => {
+                    g.recover(*rec);
+                    g.publish(status);
+                }
+                ShardCmd::Drain { timeout } => {
+                    status.set_state(ShardState::Draining);
+                    drain_deadline = Some(Instant::now() + timeout);
+                    g.publish(status);
+                }
+                ShardCmd::SetMemBudget(bytes) => {
+                    g.set_mem_budget(bytes);
+                    g.publish(status);
+                }
+                ShardCmd::Crash => {
+                    if let Some(fleet) = &hooks.fleet {
+                        g.die(status, fleet, "crash command".to_string());
+                    }
+                    return g.shutdown();
+                }
                 ShardCmd::Shutdown => return g.shutdown(),
             }
         }
-        let step = g.admit().and_then(|()| g.decode_iteration());
-        if let Err(e) = step {
-            log::error!("pipeline group {}: {e:#}", g.id);
-            // the stage chain is unrecoverable: fail every waiter and stop
-            for (rid, tx) in g.sinks.drain() {
-                let _ = tx.send(Event::Error {
-                    id: rid,
-                    message: format!("request lost: pipeline group {} failed: {e:#}", g.id),
-                });
+        if let Some(deadline) = drain_deadline {
+            if !g.has_work() {
+                // drained clean: every in-flight request finished locally
+                status.set_state(ShardState::Dead);
+                g.publish(status);
+                if let Some(fleet) = &hooks.fleet {
+                    let _ =
+                        fleet.send(FleetEvent::ShardDrained { id: g.id, migrated: Vec::new() });
+                }
+                return g.shutdown();
             }
-            return g.shutdown();
+            if Instant::now() >= deadline {
+                // drain timeout: migrate the stragglers via the recovery
+                // path — they resume bit-identically on healthy shards
+                status.set_state(ShardState::Dead);
+                let migrated = g.extract_work();
+                g.publish(status);
+                if let Some(fleet) = &hooks.fleet {
+                    let _ = fleet.send(FleetEvent::ShardDrained { id: g.id, migrated });
+                }
+                return g.shutdown();
+            }
+        }
+        let step = catch_unwind(AssertUnwindSafe(|| g.admit().and_then(|()| g.decode_iteration())));
+        match step {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                if let Some(fleet) = &hooks.fleet {
+                    g.die(status, fleet, format!("{e:#}"));
+                    return g.shutdown();
+                }
+                log::error!("pipeline group {}: {e:#}", g.id);
+                // unsupervised: the stage chain is unrecoverable — fail
+                // every waiter and stop (the pre-fleet behavior)
+                for (rid, tx) in g.sinks.drain() {
+                    let _ = tx.send(Event::Error {
+                        id: rid,
+                        message: format!("request lost: pipeline group {} failed: {e:#}", g.id),
+                    });
+                }
+                return g.shutdown();
+            }
+            Err(payload) => {
+                if let Some(fleet) = &hooks.fleet {
+                    g.die(status, fleet, panic_reason(payload.as_ref()));
+                    return g.shutdown();
+                }
+                std::panic::resume_unwind(payload);
+            }
         }
         g.publish(status);
     }
@@ -1154,6 +1432,18 @@ pub fn launch_group(
     id: usize,
     model: Arc<SwanModel>,
     cfg: &ServeConfig,
+) -> anyhow::Result<ShardHandle> {
+    launch_group_with(id, model, cfg, ShardHooks::default())
+}
+
+/// [`launch_group`] with supervision wiring: a fleet-event hook (the
+/// router's supervisor re-places extracted work on death/drain) and an
+/// optional chaos [`crate::shard::FaultPlan`].
+pub fn launch_group_with(
+    id: usize,
+    model: Arc<SwanModel>,
+    cfg: &ServeConfig,
+    hooks: ShardHooks,
 ) -> anyhow::Result<ShardHandle> {
     let ranges = partition_layers(model.cfg.n_layers, cfg.pipeline.max(1))?;
     let k_now = cfg.k_active.clamp(1, model.cfg.d_head);
@@ -1213,6 +1503,7 @@ pub fn launch_group(
             status: status.clone(),
             events: ev_tx.clone(),
             block_pool: stage_pools.get(s).cloned(),
+            faults: StageFaults::new(hooks.plan.clone()),
         };
         let join = std::thread::Builder::new()
             .name(format!("swan-stage-{id}-{s}"))
@@ -1260,7 +1551,7 @@ pub fn launch_group(
     let thread_status = status.clone();
     let join = std::thread::Builder::new()
         .name(format!("swan-pipegroup-{id}"))
-        .spawn(move || group_loop(group, rx, &thread_status))
+        .spawn(move || group_loop(group, rx, &thread_status, hooks))
         .expect("spawning pipeline group thread");
     Ok(ShardHandle::from_parts(id, tx, status, metrics, Some(join)))
 }

@@ -1,37 +1,223 @@
 //! The front-end router: places `GEN` on one shard, fans admin commands
-//! out to all of them.
+//! out to all of them, and supervises the fleet's lifecycle.
 //!
 //! The router is the only object connection threads touch.  It is shared
-//! as `Arc<Router>`; interior mutability is confined to the policy lock
-//! (placement state such as the round-robin cursor) and each handle's
-//! sender lock, so concurrent connections place and submit without
-//! serializing on the shards themselves.
+//! as `Arc<Router>`; interior mutability is confined to the membership
+//! lock (the shard list is elastic since `SET shards <n>`), the policy
+//! lock (placement state such as the round-robin cursor) and each
+//! handle's sender lock, so concurrent connections place and submit
+//! without serializing on the shards themselves.
+//!
+//! Fleet lifecycle (see [`crate::shard::supervisor`]):
+//!
+//! * every launched shard/group runs **supervised**: its coordinator
+//!   catches panics, stage deaths and step errors, extracts all
+//!   in-flight and queued work, and reports a [`FleetEvent`] instead of
+//!   leaving a hung or silently-degraded member;
+//! * the router's **supervisor thread** consumes those events: it
+//!   retires the dead handle, bumps `swan_shard_deaths`, and re-places
+//!   every recovered request on a healthy shard via
+//!   [`ShardCmd::Recover`] — the receiving shard re-prefills and
+//!   replays the emitted tokens, so recovered output is bit-identical
+//!   to an uninterrupted run (SWAN decode is deterministic);
+//! * **placement filters to healthy shards** before any
+//!   [`BalancePolicy`] sees a snapshot, so policies stay
+//!   state-oblivious; `submit` retries with jittered backoff across
+//!   healthy members and fails with a structured [`ShardLostError`]
+//!   only when none exists;
+//! * `SET shards <n>` / `DRAIN <id>` drive **elastic membership**:
+//!   scale-up launches supervised members live (and rebalances the KV
+//!   budget), scale-down and drains stop placement, let in-flight work
+//!   finish, and migrate stragglers through the recovery path after the
+//!   drain timeout.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock, Weak};
+use std::time::Duration;
 
 use anyhow::Context;
 
-use crate::api::GenHandle;
+use crate::api::{Event, GenHandle};
 use crate::config::ServeConfig;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::request::Request;
-use crate::obs::registry::Registry;
+use crate::model::transformer::SwanModel;
+use crate::obs::registry::{Counter, Registry};
 use crate::shard::admin;
 use crate::shard::balance::{policy_from_name, BalancePolicy};
 use crate::shard::shard::{ShardCmd, ShardHandle};
-use crate::shard::ShardSnapshot;
+use crate::shard::supervisor::{FaultPlan, FleetEvent, RecoveredReq, ShardHooks, ShardLostError};
+use crate::shard::{ShardSnapshot, ShardState};
+use crate::util::Pcg64;
 
-pub struct Router {
-    shards: Vec<ShardHandle>,
+/// Bounded placement retry: how many distinct healthy shards `submit`
+/// (and the supervisor's recovery re-placement) tries before giving up
+/// with a [`ShardLostError`].
+const SUBMIT_ATTEMPTS: usize = 3;
+
+/// How a fleet launches one more member (live scale-up).  Holds the
+/// *fleet-level* config; the per-shard KV budget slice is computed at
+/// launch time from the membership target.
+enum Launcher {
+    /// PJRT engine shards (`--pipeline 1`).
+    Engine { artifacts: std::path::PathBuf, cfg: ServeConfig },
+    /// Pipeline groups over one shared native model: `SET shards <n>`
+    /// counts placeable *groups* (each of `cfg.pipeline` stages).
+    Pipeline { model: Arc<SwanModel>, cfg: ServeConfig },
+}
+
+impl Launcher {
+    fn launch(
+        &self,
+        id: usize,
+        mem_budget: usize,
+        hooks: ShardHooks,
+    ) -> anyhow::Result<ShardHandle> {
+        match self {
+            Launcher::Engine { artifacts, cfg } => {
+                let shard_cfg = ServeConfig { mem_budget, ..cfg.clone() };
+                let engine = Engine::new(artifacts, shard_cfg)
+                    .with_context(|| format!("launching shard {id}"))?;
+                engine.warmup()?;
+                Ok(ShardHandle::spawn_with(id, engine, hooks))
+            }
+            Launcher::Pipeline { model, cfg } => {
+                let group_cfg = ServeConfig { mem_budget, ..cfg.clone() };
+                crate::shard::pipeline::launch_group_with(id, model.clone(), &group_cfg, hooks)
+            }
+        }
+    }
+}
+
+struct RouterInner {
+    /// Elastic membership; handles leave when the supervisor retires a
+    /// dead/drained shard and join on live scale-up.
+    shards: RwLock<Vec<Arc<ShardHandle>>>,
     policy: Mutex<Box<dyn BalancePolicy>>,
     /// Fleet-global request ids (per-shard engines would otherwise hand
     /// out colliding ids on the wire).
     next_id: AtomicU64,
+    /// Monotonic shard ids — never reused, so METRICS shard labels and
+    /// TRACE output stay unambiguous across deaths and scale events.
+    next_shard_id: AtomicUsize,
     /// Server-level obs series (per-connection counters, protocol
-    /// errors) — rendered into the `METRICS` exposition alongside every
-    /// shard's registry, with no shard identity label.
+    /// errors, shard deaths) — rendered into the `METRICS` exposition
+    /// alongside every shard's registry, with no shard identity label.
     server_registry: Arc<Registry>,
+    /// `swan_shard_deaths`: fleet-level (server registry — shard
+    /// registries die with their shard, and counters there would be
+    /// summed and then lost on retirement).
+    shard_deaths: Arc<Counter>,
+    /// Where supervised shards report death/drain; kept here so live
+    /// scale-up can wire new members into the same supervisor.
+    fleet_tx: mpsc::Sender<FleetEvent>,
+    /// `None` for fleets assembled from pre-built handles — they can
+    /// drain/shrink but not scale up.
+    launcher: Option<Launcher>,
+    /// The fleet-level KV budget (`0` = unbounded), re-split across the
+    /// healthy membership on every scale event.
+    fleet_budget: usize,
+    /// How long a draining shard waits for in-flight work before
+    /// migrating it through the recovery path.
+    drain_timeout: Duration,
+}
+
+impl RouterInner {
+    /// Pick a healthy shard for placement, or `None` when the fleet has
+    /// no healthy member.  Policies only ever see healthy snapshots, so
+    /// they stay lifecycle-oblivious (see `balance`).
+    fn place_healthy(&self) -> Option<Arc<ShardHandle>> {
+        let shards = self.shards.read().unwrap();
+        let healthy: Vec<&Arc<ShardHandle>> =
+            shards.iter().filter(|s| s.status.state() == ShardState::Healthy).collect();
+        if healthy.is_empty() {
+            return None;
+        }
+        let snaps: Vec<ShardSnapshot> = healthy.iter().map(|s| s.snapshot()).collect();
+        let pick = self.policy.lock().unwrap().pick(&snaps);
+        Some(healthy[pick.min(healthy.len() - 1)].clone())
+    }
+
+    /// Retire a handle from the membership (its thread has already
+    /// exited).  The drop — which joins the thread — runs after the
+    /// write lock is released.
+    fn remove_shard(&self, id: usize) {
+        let removed = {
+            let mut shards = self.shards.write().unwrap();
+            shards.iter().position(|s| s.id == id).map(|pos| shards.remove(pos))
+        };
+        drop(removed);
+    }
+
+    /// Re-place one recovered request on a healthy shard.  A shard that
+    /// rejects the hop (its channel closed between snapshot and send) is
+    /// marked dead and the next healthy one is tried; with no healthy
+    /// shard left the request fails terminally with a `shard_lost`
+    /// error on its own event stream.
+    fn recover_one(&self, rec: RecoveredReq) {
+        let mut rec = rec;
+        for _ in 0..SUBMIT_ATTEMPTS {
+            let Some(shard) = self.place_healthy() else { break };
+            shard.status.queued.fetch_add(1, Ordering::Relaxed);
+            match shard.try_send(ShardCmd::Recover(Box::new(rec))) {
+                Ok(()) => return,
+                Err(cmd) => {
+                    shard.status.queued.fetch_sub(1, Ordering::Relaxed);
+                    shard.status.set_state(ShardState::Dead);
+                    match cmd {
+                        ShardCmd::Recover(back) => rec = *back,
+                        // try_send hands back exactly what it was given
+                        _ => unreachable!("try_send returned a different command"),
+                    }
+                }
+            }
+        }
+        log::error!("fleet: request {} lost — no healthy shard to recover onto", rec.req.id);
+        if let Some(tx) = rec.sink {
+            let _ = tx.send(Event::Error {
+                id: rec.req.id,
+                message: format!(
+                    "shard_lost: no healthy shard to recover request {}",
+                    rec.req.id
+                ),
+            });
+        }
+    }
+}
+
+/// The supervisor thread: consumes [`FleetEvent`]s from every supervised
+/// shard, retires dead handles, and re-places recovered work.  Holds
+/// only a `Weak` to the router while blocked, so dropping the router
+/// tears the whole fleet down cleanly (shards drop their event senders
+/// and the receive loop ends).
+fn supervisor_loop(inner: Weak<RouterInner>, rx: mpsc::Receiver<FleetEvent>) {
+    while let Ok(ev) = rx.recv() {
+        let Some(inner) = inner.upgrade() else { return };
+        match ev {
+            FleetEvent::ShardDead { id, reason, recovered } => {
+                inner.shard_deaths.inc();
+                log::warn!(
+                    "fleet: shard {id} died ({reason}); recovering {} request(s)",
+                    recovered.len()
+                );
+                inner.remove_shard(id);
+                for rec in recovered {
+                    inner.recover_one(rec);
+                }
+            }
+            FleetEvent::ShardDrained { id, migrated } => {
+                log::info!("fleet: shard {id} drained ({} migrated)", migrated.len());
+                inner.remove_shard(id);
+                for rec in migrated {
+                    inner.recover_one(rec);
+                }
+            }
+        }
+    }
+}
+
+pub struct Router {
+    inner: Arc<RouterInner>,
 }
 
 impl Router {
@@ -47,12 +233,16 @@ impl Router {
     ///   over one shared rust-native model; every group registers as one
     ///   placeable shard, so balance policies, `SET k_active` broadcast
     ///   and fleet STATS are mode-agnostic.
+    ///
+    /// Every member launches supervised: deaths recover, `DRAIN <id>`
+    /// and `SET shards <n>` work live.
     pub fn launch(artifacts_dir: &std::path::Path, cfg: ServeConfig) -> anyhow::Result<Router> {
         anyhow::ensure!(cfg.shards >= 1, "shards must be >= 1, got {}", cfg.shards);
         if cfg.pipeline > 1 {
             return Router::launch_pipeline(artifacts_dir, cfg);
         }
         let policy = policy_from_name(&cfg.balance)?;
+        let (fleet_tx, fleet_rx) = mpsc::channel();
         let per_shard_budget =
             if cfg.mem_budget == 0 { 0 } else { (cfg.mem_budget / cfg.shards).max(1) };
         let launchers: Vec<_> = (0..cfg.shards)
@@ -75,14 +265,12 @@ impl Router {
                 .join()
                 .map_err(|_| anyhow::anyhow!("shard {id} launch thread panicked"))?
                 .with_context(|| format!("launching shard {id}"))?;
-            shards.push(ShardHandle::spawn(id, engine));
+            let hooks = ShardHooks::supervised(fleet_tx.clone());
+            shards.push(Arc::new(ShardHandle::spawn_with(id, engine, hooks)));
         }
-        Ok(Router {
-            shards,
-            policy: Mutex::new(policy),
-            next_id: AtomicU64::new(1),
-            server_registry: Arc::new(Registry::new()),
-        })
+        let launcher =
+            Launcher::Engine { artifacts: artifacts_dir.to_path_buf(), cfg: cfg.clone() };
+        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, &cfg))
     }
 
     /// Pipeline-sharded launch: `shards / pipeline` groups of `pipeline`
@@ -104,8 +292,6 @@ impl Router {
         if !matches!(cfg.kernels.as_str(), "auto" | "") {
             crate::simd::init_from_name(&cfg.kernels)?;
         }
-        let policy = policy_from_name(&cfg.balance)?;
-        let n_groups = cfg.shards / cfg.pipeline;
         let wf = crate::model::WeightFile::load(
             &artifacts_dir.join(format!("weights_{}.bin", cfg.model)),
         )
@@ -115,134 +301,299 @@ impl Router {
             crate::swan::projection::ProjectionVariant::Calibrated,
             0,
         )?);
+        Router::launch_pipeline_from_model(model, &cfg, Vec::new())
+    }
+
+    /// Launch a supervised pipeline fleet over an already-built model —
+    /// the chaos/test entry point (synthetic models need no artifacts).
+    /// `plans[g]` optionally injects a deterministic [`FaultPlan`] into
+    /// group `g`; missing entries run fault-free.  `SET shards <n>` on
+    /// the returned router launches further (plan-free) groups live.
+    pub fn launch_pipeline_from_model(
+        model: Arc<SwanModel>,
+        cfg: &ServeConfig,
+        plans: Vec<Option<Arc<FaultPlan>>>,
+    ) -> anyhow::Result<Router> {
+        anyhow::ensure!(cfg.shards >= 1, "shards must be >= 1, got {}", cfg.shards);
+        let pipeline = cfg.pipeline.max(1);
+        anyhow::ensure!(
+            cfg.shards % pipeline == 0,
+            "shards ({}) must be a multiple of pipeline ({}) so stages form whole groups",
+            cfg.shards,
+            pipeline
+        );
+        let policy = policy_from_name(&cfg.balance)?;
+        let (fleet_tx, fleet_rx) = mpsc::channel();
+        let n_groups = cfg.shards / pipeline;
         let per_group_budget =
             if cfg.mem_budget == 0 { 0 } else { (cfg.mem_budget / n_groups).max(1) };
         let group_cfg = ServeConfig { mem_budget: per_group_budget, ..cfg.clone() };
         let mut shards = Vec::with_capacity(n_groups);
         for id in 0..n_groups {
-            shards.push(crate::shard::pipeline::launch_group(id, model.clone(), &group_cfg)?);
+            let hooks = ShardHooks {
+                fleet: Some(fleet_tx.clone()),
+                plan: plans.get(id).cloned().flatten(),
+            };
+            shards.push(Arc::new(crate::shard::pipeline::launch_group_with(
+                id,
+                model.clone(),
+                &group_cfg,
+                hooks,
+            )?));
         }
-        Ok(Router {
-            shards,
-            policy: Mutex::new(policy),
-            next_id: AtomicU64::new(1),
-            server_registry: Arc::new(Registry::new()),
-        })
+        let launcher = Launcher::Pipeline { model, cfg: cfg.clone() };
+        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, cfg))
     }
 
     /// Assemble a router from pre-built handles (tests, embedders).
+    /// Handles spawned without supervision hooks keep the pre-fleet
+    /// failure behavior (a dying shard fails its own waiters); the
+    /// fleet can drain/shrink but not scale up.
     pub fn from_handles(shards: Vec<ShardHandle>, policy: Box<dyn BalancePolicy>) -> Router {
         assert!(!shards.is_empty(), "router needs at least one shard");
-        Router {
-            shards,
+        let (fleet_tx, fleet_rx) = mpsc::channel();
+        let shards: Vec<Arc<ShardHandle>> = shards.into_iter().map(Arc::new).collect();
+        Router::assemble(shards, policy, None, fleet_tx, fleet_rx, &ServeConfig::default())
+    }
+
+    fn assemble(
+        shards: Vec<Arc<ShardHandle>>,
+        policy: Box<dyn BalancePolicy>,
+        launcher: Option<Launcher>,
+        fleet_tx: mpsc::Sender<FleetEvent>,
+        fleet_rx: mpsc::Receiver<FleetEvent>,
+        cfg: &ServeConfig,
+    ) -> Router {
+        let server_registry = Arc::new(Registry::new());
+        let shard_deaths = server_registry.counter("swan_shard_deaths", &[]);
+        let next_shard_id = shards.iter().map(|s| s.id + 1).max().unwrap_or(0);
+        let inner = Arc::new(RouterInner {
+            shards: RwLock::new(shards),
             policy: Mutex::new(policy),
             next_id: AtomicU64::new(1),
-            server_registry: Arc::new(Registry::new()),
-        }
+            next_shard_id: AtomicUsize::new(next_shard_id),
+            server_registry,
+            shard_deaths,
+            fleet_tx,
+            launcher,
+            fleet_budget: cfg.mem_budget,
+            drain_timeout: Duration::from_millis(cfg.drain_timeout_ms),
+        });
+        let weak = Arc::downgrade(&inner);
+        std::thread::Builder::new()
+            .name("swan-fleet-supervisor".to_string())
+            .spawn(move || supervisor_loop(weak, fleet_rx))
+            .expect("spawning fleet supervisor thread");
+        Router { inner }
     }
 
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.inner.shards.read().unwrap().len()
     }
 
-    pub fn shards(&self) -> &[ShardHandle] {
-        &self.shards
+    /// A point-in-time clone of the membership (handles are `Arc`s; the
+    /// list itself is elastic, so no slice borrow can be handed out).
+    pub fn shards(&self) -> Vec<Arc<ShardHandle>> {
+        self.inner.shards.read().unwrap().clone()
     }
 
     pub fn snapshots(&self) -> Vec<ShardSnapshot> {
-        self.shards.iter().map(|s| s.snapshot()).collect()
+        self.inner.shards.read().unwrap().iter().map(|s| s.snapshot()).collect()
     }
 
     /// Swap the placement policy live (`SET balance <name>`).
     pub fn set_policy(&self, policy: Box<dyn BalancePolicy>) {
-        *self.policy.lock().unwrap() = policy;
+        *self.inner.policy.lock().unwrap() = policy;
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.policy.lock().unwrap().name()
+        self.inner.policy.lock().unwrap().name()
     }
 
-    /// Pick the shard the next request should land on (placement only).
+    /// Pick the shard the next request should land on (placement only;
+    /// kept for tooling/tests — `submit` itself filters to healthy
+    /// members and retries).
     pub fn place(&self) -> usize {
         let snaps = self.snapshots();
-        let pick = self.policy.lock().unwrap().pick(&snaps);
+        let pick = self.inner.policy.lock().unwrap().pick(&snaps);
         // a misbehaving policy must not take the fleet down
-        pick.min(self.shards.len() - 1)
+        pick.min(snaps.len().saturating_sub(1))
     }
 
     /// Place and submit one request; the returned [`GenHandle`] carries
     /// the event channel (per-token events for streaming requests, then
     /// the terminal `Done`/`Error`) and the cancellation token.
+    ///
+    /// Placement is edge-resilient: only healthy shards are candidates,
+    /// a shard whose channel closed mid-submit is marked dead and the
+    /// hop retries on the next healthy member (jittered backoff), and
+    /// the terminal failure is a structured [`ShardLostError`] — never
+    /// a hang, never a silent drop.
     pub fn submit(&self, mut req: Request) -> anyhow::Result<GenHandle> {
         if req.id == 0 {
-            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            req.id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
         }
         let id = req.id;
         let cancel = req.cancel.clone();
-        let idx = self.place();
         let (tx, handle) = GenHandle::channel(id, cancel);
-        let shard = &self.shards[idx];
-        // optimistic bump so back-to-back placements see this request
-        // before the shard thread next publishes authoritative counts
-        shard.status.queued.fetch_add(1, Ordering::Relaxed);
-        shard.send(ShardCmd::Gen { req, reply: tx })?;
-        Ok(handle)
+        let mut cmd = ShardCmd::Gen { req, reply: tx };
+        // deterministic per-request jitter (no global RNG state)
+        let mut jitter = Pcg64::new(id ^ 0x524f_5554_4552);
+        let mut attempts = 0;
+        while attempts < SUBMIT_ATTEMPTS {
+            let Some(shard) = self.inner.place_healthy() else { break };
+            attempts += 1;
+            // optimistic bump so back-to-back placements see this request
+            // before the shard thread next publishes authoritative counts
+            shard.status.queued.fetch_add(1, Ordering::Relaxed);
+            match shard.try_send(cmd) {
+                Ok(()) => return Ok(handle),
+                Err(back) => {
+                    // closed channel = the coordinator is gone; mark it so
+                    // placement skips it (the supervisor retires it when
+                    // its death event lands)
+                    shard.status.queued.fetch_sub(1, Ordering::Relaxed);
+                    shard.status.set_state(ShardState::Dead);
+                    cmd = back;
+                    if attempts < SUBMIT_ATTEMPTS {
+                        let ns = 200_000 + jitter.below(1_800_000);
+                        std::thread::sleep(Duration::from_nanos(ns));
+                    }
+                }
+            }
+        }
+        Err(ShardLostError { attempts, detail: "no healthy shard" }.into())
     }
 
     /// Cancel a request by id, fleet-wide: the router does not track
     /// placement, so the hop is broadcast — unknown ids no-op on every
-    /// shard that doesn't own the sequence.  (Callers holding the
-    /// request's [`GenHandle`] can cancel without the round trip; this
-    /// path serves the wire `CANCEL <id>` and cross-connection cancels.)
+    /// shard that doesn't own the sequence.  Unreachable (dying) shards
+    /// are skipped: their in-flight work re-lands on a healthy shard
+    /// with the cancel token intact, so the cancel still takes effect.
     pub fn cancel(&self, id: u64) -> anyhow::Result<()> {
-        for s in &self.shards {
-            s.send(ShardCmd::Cancel { id })?;
+        for s in self.inner.shards.read().unwrap().iter() {
+            let _ = s.send(ShardCmd::Cancel { id });
         }
         Ok(())
     }
 
     /// Fleet-wide live compression retune: broadcast `SET k_active` to
     /// every shard, then gather the acks.  Returns `(shard id, applied
-    /// k)` per shard — "applied" because each engine snaps to its nearest
-    /// compiled bucket.  No engine restarts; newly admitted sequences on
-    /// every shard use the new level.
+    /// k)` per responsive shard — "applied" because each engine snaps to
+    /// its nearest compiled bucket.  Dying shards drop out of the gather
+    /// instead of failing it (their successors launch at the fleet cfg).
     pub fn set_k_active(&self, k: usize) -> anyhow::Result<Vec<(usize, usize)>> {
-        let mut pending = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
+        let shards = self.shards();
+        let mut pending = Vec::with_capacity(shards.len());
+        for s in &shards {
             let (ack_tx, ack_rx) = mpsc::channel();
-            s.send(ShardCmd::SetK { k, ack: ack_tx })?;
-            pending.push((s.id, ack_rx));
+            if s.send(ShardCmd::SetK { k, ack: ack_tx }).is_ok() {
+                pending.push((s.id, ack_rx));
+            }
         }
+        anyhow::ensure!(!pending.is_empty(), "no shard accepted the retune");
         let mut applied = Vec::with_capacity(pending.len());
         for (id, rx) in pending {
-            let got = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("shard {id} dropped its SET k_active ack"))?;
-            applied.push((id, got));
+            if let Ok(got) = rx.recv() {
+                applied.push((id, got));
+            }
         }
         Ok(applied)
     }
 
+    /// `DRAIN <id>`: stop placing on the shard immediately, let its
+    /// in-flight and queued work finish (or migrate, after the drain
+    /// timeout), then retire it.  Draining the last healthy shard is
+    /// refused — the fleet must always be able to serve.
+    pub fn drain(&self, id: usize) -> anyhow::Result<()> {
+        let shards = self.inner.shards.read().unwrap();
+        let healthy = shards.iter().filter(|s| s.status.state() == ShardState::Healthy).count();
+        let shard = shards
+            .iter()
+            .find(|s| s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("unknown shard {id}"))?;
+        if shard.status.state() == ShardState::Healthy && healthy <= 1 {
+            anyhow::bail!("cannot drain the last healthy shard");
+        }
+        // flip the published state before the command lands, so the next
+        // placement already skips this shard
+        shard.status.set_state(ShardState::Draining);
+        shard.send(ShardCmd::Drain { timeout: self.inner.drain_timeout })
+    }
+
+    /// `SET shards <n>`: elastic membership.  Scale-up launches new
+    /// supervised members live (placeable as soon as each is up);
+    /// scale-down drains the youngest healthy members (their in-flight
+    /// work finishes or migrates — nothing is dropped).  Either way the
+    /// fleet KV budget is re-split over the target membership.  Returns
+    /// the target count.
+    pub fn set_shards(&self, n: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(n >= 1, "shards must be >= 1, got {n}");
+        let inner = &self.inner;
+        let per_shard =
+            if inner.fleet_budget == 0 { 0 } else { (inner.fleet_budget / n).max(1) };
+        let healthy: Vec<usize> = {
+            let shards = inner.shards.read().unwrap();
+            shards
+                .iter()
+                .filter(|s| s.status.state() == ShardState::Healthy)
+                .map(|s| s.id)
+                .collect()
+        };
+        if healthy.len() < n {
+            let Some(launcher) = inner.launcher.as_ref() else {
+                anyhow::bail!(
+                    "this fleet was assembled from pre-built handles and cannot scale up"
+                );
+            };
+            for _ in healthy.len()..n {
+                let id = inner.next_shard_id.fetch_add(1, Ordering::Relaxed);
+                let hooks = ShardHooks::supervised(inner.fleet_tx.clone());
+                let handle = launcher.launch(id, per_shard, hooks)?;
+                inner.shards.write().unwrap().push(Arc::new(handle));
+            }
+        } else {
+            // drain the youngest healthy members down to the target
+            for id in healthy.iter().rev().take(healthy.len() - n) {
+                self.drain(*id)?;
+            }
+        }
+        if inner.fleet_budget > 0 {
+            // rebalance the surviving members' KV slices to total/n
+            for s in inner.shards.read().unwrap().iter() {
+                if s.status.state() == ShardState::Healthy {
+                    let _ = s.send(ShardCmd::SetMemBudget(per_shard));
+                }
+            }
+        }
+        Ok(n)
+    }
+
     /// The fleet STATS view: per-shard blocks + aggregate totals.
     pub fn stats(&self) -> String {
-        admin::fleet_stats(&self.shards, self.policy_name())
+        let mut out = admin::fleet_stats(&self.shards(), self.policy_name());
+        let deaths = self.inner.shard_deaths.get();
+        if deaths > 0 {
+            out.push_str(&format!("fleet lifecycle: shard_deaths={deaths}\n"));
+        }
+        out
     }
 
     /// The registry server-level series (connection counters) register
     /// in; the TCP front-end holds a clone per listener.
     pub fn server_registry(&self) -> Arc<Registry> {
-        self.server_registry.clone()
+        self.inner.server_registry.clone()
     }
 
     /// The fleet `METRICS` exposition (Prometheus text format 0.0.4).
     pub fn metrics_text(&self) -> String {
-        admin::fleet_metrics(&self.shards, &self.server_registry)
+        admin::fleet_metrics(&self.shards(), &self.inner.server_registry)
     }
 
     /// `TRACE <id>`: the first shard retaining the request's lifecycle
     /// trace answers with its JSONL timeline.
     pub fn trace_jsonl(&self, id: u64) -> Option<String> {
-        admin::fleet_trace(&self.shards, id)
+        admin::fleet_trace(&self.shards(), id)
     }
 }
 
@@ -274,5 +625,78 @@ mod tests {
         assert_eq!(router.policy_name(), "round-robin");
         router.set_policy(policy_from_name("mem-aware").unwrap());
         assert_eq!(router.policy_name(), "mem-aware");
+    }
+
+    #[test]
+    fn submit_skips_unhealthy_shards() {
+        let (h0, _rx0) = ShardHandle::stub(0);
+        let (h1, rx1) = ShardHandle::stub(1);
+        h0.status.set_state(ShardState::Draining);
+        let router = Router::from_handles(vec![h0, h1], Box::new(RoundRobin::default()));
+        for _ in 0..3 {
+            let _ = router.submit(Request::from_text(0, "hi", 4)).unwrap();
+        }
+        // every placement must have landed on the sole healthy shard
+        let mut landed = 0;
+        while let Ok(cmd) = rx1.try_recv() {
+            assert!(matches!(cmd, ShardCmd::Gen { .. }));
+            landed += 1;
+        }
+        assert_eq!(landed, 3);
+    }
+
+    #[test]
+    fn submit_with_no_healthy_shard_is_a_structured_error() {
+        let (h, _rx) = ShardHandle::stub(0);
+        h.status.set_state(ShardState::Dead);
+        let router = Router::from_handles(vec![h], Box::new(RoundRobin::default()));
+        let err = router.submit(Request::from_text(0, "hi", 4)).unwrap_err();
+        let lost = err.downcast_ref::<ShardLostError>().expect("ShardLostError");
+        assert_eq!(lost.attempts, 0);
+        assert!(err.to_string().contains("no healthy shard"));
+    }
+
+    #[test]
+    fn submit_retries_onto_a_live_shard_when_one_dies_mid_submit() {
+        let (h0, rx0) = ShardHandle::stub(0);
+        let (h1, rx1) = ShardHandle::stub(1);
+        drop(rx0); // shard 0's coordinator is gone, but still marked healthy
+        let router = Router::from_handles(vec![h0, h1], Box::new(RoundRobin::default()));
+        let _ = router.submit(Request::from_text(0, "hi", 4)).unwrap();
+        let _ = router.submit(Request::from_text(0, "hi", 4)).unwrap();
+        let mut landed = 0;
+        while let Ok(cmd) = rx1.try_recv() {
+            assert!(matches!(cmd, ShardCmd::Gen { .. }));
+            landed += 1;
+        }
+        assert_eq!(landed, 2, "both submits must land on the live shard");
+        // the dead shard is now marked so placement never retries it
+        assert_eq!(router.snapshots().iter().find(|s| s.id == 0).unwrap().state, ShardState::Dead);
+    }
+
+    #[test]
+    fn drain_refuses_the_last_healthy_shard() {
+        let (h0, _rx0) = ShardHandle::stub(0);
+        let (h1, _rx1) = ShardHandle::stub(1);
+        let router = Router::from_handles(vec![h0, h1], Box::new(RoundRobin::default()));
+        router.drain(1).unwrap();
+        let err = router.drain(0).unwrap_err();
+        assert!(err.to_string().contains("last healthy shard"), "{err}");
+        assert!(router.drain(99).unwrap_err().to_string().contains("unknown shard"));
+    }
+
+    #[test]
+    fn from_handles_fleet_cannot_scale_up_but_can_shrink() {
+        let (h0, _rx0) = ShardHandle::stub(0);
+        let (h1, _rx1) = ShardHandle::stub(1);
+        let router = Router::from_handles(vec![h0, h1], Box::new(RoundRobin::default()));
+        let err = router.set_shards(4).unwrap_err();
+        assert!(err.to_string().contains("cannot scale up"), "{err}");
+        router.set_shards(1).unwrap();
+        // the youngest healthy shard is draining; membership shrinks once
+        // its (stub, unsupervised) thread would report drained
+        let snap = router.snapshots();
+        assert_eq!(snap.iter().filter(|s| s.state == ShardState::Healthy).count(), 1);
+        assert_eq!(snap.iter().find(|s| s.id == 1).unwrap().state, ShardState::Draining);
     }
 }

@@ -14,15 +14,18 @@
 //! is the by-id hop of the cancellation path (the router broadcasts it,
 //! each engine flips the matching request's token).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::api::Event;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Request;
-use crate::shard::ShardSnapshot;
+use crate::shard::supervisor::{FleetEvent, RecoveredReq, ShardHooks};
+use crate::shard::{ShardSnapshot, ShardState};
 
 /// Commands a shard thread accepts.
 pub enum ShardCmd {
@@ -42,6 +45,22 @@ pub enum ShardCmd {
     /// ones from the active/queued sets.  `None` when the id is unknown
     /// here — the router tries every shard and takes the first hit.
     Trace { id: u64, reply: mpsc::Sender<Option<String>> },
+    /// Resume a request recovered from a dead or draining shard:
+    /// re-prefill, replay its emitted tokens as forced decode steps,
+    /// then continue its RNG stream — output stays bit-identical to an
+    /// uninterrupted run (boxed: the payload dwarfs the other variants).
+    Recover(Box<RecoveredReq>),
+    /// Stop placing on this shard, let in-flight work finish (or hand
+    /// it back for migration once `timeout` passes), then retire.
+    Drain { timeout: Duration },
+    /// Retarget this shard's KV memory budget (live `SET shards <n>`
+    /// rebalance: the fleet total re-split over the new member count).
+    SetMemBudget(usize),
+    /// Chaos-test fault injection: die exactly as an unexpected panic
+    /// would — hand all work back to the supervisor (or abandon it when
+    /// unsupervised).  Processed at an iteration boundary, so the
+    /// extracted state is consistent and the death is deterministic.
+    Crash,
     /// Stop the shard thread (in-flight sequences are abandoned).
     Shutdown,
 }
@@ -55,9 +74,20 @@ pub struct ShardStatus {
     pub live_bytes: AtomicUsize,
     pub projected_bytes: AtomicUsize,
     pub k_active: AtomicUsize,
+    /// Lifecycle state ([`ShardState`] as its `repr(u8)` value); the
+    /// router reads it to filter placement to healthy shards.
+    pub state: AtomicU8,
 }
 
 impl ShardStatus {
+    pub fn state(&self) -> ShardState {
+        ShardState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    pub fn set_state(&self, s: ShardState) {
+        self.state.store(s as u8, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self, id: usize) -> ShardSnapshot {
         ShardSnapshot {
             id,
@@ -66,6 +96,7 @@ impl ShardStatus {
             live_bytes: self.live_bytes.load(Ordering::Relaxed),
             projected_bytes: self.projected_bytes.load(Ordering::Relaxed),
             k_active: self.k_active.load(Ordering::Relaxed),
+            state: self.state(),
         }
     }
 
@@ -91,6 +122,14 @@ pub struct ShardHandle {
 impl ShardHandle {
     /// Move `engine` onto a dedicated shard thread and return its handle.
     pub fn spawn(id: usize, engine: Engine) -> ShardHandle {
+        ShardHandle::spawn_with(id, engine, ShardHooks::default())
+    }
+
+    /// [`ShardHandle::spawn`] with supervision wiring: the shard loop
+    /// catches coordinator panics and hands every in-flight and queued
+    /// request back through `hooks.fleet` instead of abandoning them,
+    /// and honours the fault-injection plan (chaos tests).
+    pub fn spawn_with(id: usize, engine: Engine, hooks: ShardHooks) -> ShardHandle {
         let status = Arc::new(ShardStatus::default());
         status.k_active.store(engine.current_k_active(), Ordering::Relaxed);
         let metrics = engine.metrics.clone();
@@ -98,7 +137,7 @@ impl ShardHandle {
         let thread_status = status.clone();
         let join = std::thread::Builder::new()
             .name(format!("swan-shard-{id}"))
-            .spawn(move || shard_loop(id, engine, rx, &thread_status))
+            .spawn(move || shard_loop(id, engine, rx, &thread_status, hooks))
             .expect("spawning shard thread");
         ShardHandle { id, tx: Mutex::new(tx), status, metrics, join: Some(join) }
     }
@@ -134,12 +173,25 @@ impl ShardHandle {
     }
 
     /// Send a command to the shard thread.
+    ///
+    /// A poisoned sender lock (some thread panicked while holding it) is
+    /// recovered rather than propagated: the `Sender` inside is plain
+    /// data that cannot be left in a torn state, so poisoning here must
+    /// not cascade one shard's panic into every later caller.
     pub fn send(&self, cmd: ShardCmd) -> anyhow::Result<()> {
-        self.tx
-            .lock()
-            .unwrap()
-            .send(cmd)
+        self.try_send(cmd)
             .map_err(|_| anyhow::anyhow!("shard {} is gone", self.id))
+    }
+
+    /// Like [`ShardHandle::send`], but hands the command back on failure
+    /// so the caller can retry it on another shard without cloning the
+    /// payload (the router's bounded-retry submit path).
+    pub fn try_send(&self, cmd: ShardCmd) -> Result<(), ShardCmd> {
+        let tx = match self.tx.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        tx.send(cmd).map_err(|mpsc::SendError(c)| c)
     }
 
     pub fn snapshot(&self) -> ShardSnapshot {
@@ -149,7 +201,15 @@ impl ShardHandle {
 
 impl Drop for ShardHandle {
     fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(ShardCmd::Shutdown);
+        // same poison recovery as `send`: shutdown must reach the shard
+        // thread even after some sender panicked holding the lock
+        {
+            let tx = match self.tx.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let _ = tx.send(ShardCmd::Shutdown);
+        }
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -175,16 +235,61 @@ fn shard_stats(id: usize, engine: &Engine) -> String {
     out
 }
 
+/// Render a panic payload as a one-line reason string.
+pub(crate) fn panic_reason(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+/// Terminal supervised death: mark the shard `Dead`, extract every
+/// in-flight and queued request, and hand them to the supervisor for
+/// re-placement.  Called only when a fleet hook exists.
+fn die(
+    id: usize,
+    reason: String,
+    engine: &mut Engine,
+    status: &ShardStatus,
+    fleet: &mpsc::Sender<FleetEvent>,
+) {
+    status.set_state(ShardState::Dead);
+    let recovered = engine.take_work();
+    log::error!("shard {id} died ({reason}); handing {} request(s) to supervisor", recovered.len());
+    status.publish(engine);
+    let _ = fleet.send(FleetEvent::ShardDead { id, reason, recovered });
+}
+
 /// The shard thread: drain commands, step the engine, route completions,
-/// publish status.
+/// publish status.  With a fleet hook the engine step runs supervised —
+/// a panic or step error becomes a shard death that hands all work back
+/// instead of a hung or silently degraded shard.
 fn shard_loop(
     id: usize,
     mut engine: Engine,
     rx: mpsc::Receiver<ShardCmd>,
     status: &ShardStatus,
+    hooks: ShardHooks,
 ) {
+    let mut iter: u64 = 0;
+    let mut drain_deadline: Option<Instant> = None;
     loop {
-        // drain commands (non-blocking when busy, blocking when idle)
+        // scripted fault injection (chaos tests): die at an iteration
+        // boundary, exactly like an unexpected panic would
+        if let Some(plan) = hooks.plan.as_deref() {
+            if plan.coordinator_dies(iter) {
+                if let Some(fleet) = &hooks.fleet {
+                    die(id, "chaos: injected coordinator kill".into(), &mut engine, status, fleet);
+                }
+                return;
+            }
+        }
+        iter += 1;
+        // drain commands (non-blocking when busy or draining, blocking
+        // when idle — a draining shard must keep observing its deadline)
         loop {
             let cmd = if engine.has_work() {
                 match rx.try_recv() {
@@ -192,6 +297,9 @@ fn shard_loop(
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => return,
                 }
+            } else if drain_deadline.is_some() {
+                // idle + draining: fall through to the completion check
+                break;
             } else {
                 status.publish(&engine);
                 match rx.recv() {
@@ -222,11 +330,65 @@ fn shard_loop(
                 ShardCmd::Trace { id: rid, reply } => {
                     let _ = reply.send(engine.trace_jsonl(rid));
                 }
+                ShardCmd::Recover(rec) => {
+                    engine.recover(*rec);
+                    status.publish(&engine);
+                }
+                ShardCmd::Drain { timeout } => {
+                    status.set_state(ShardState::Draining);
+                    drain_deadline = Some(Instant::now() + timeout);
+                }
+                ShardCmd::SetMemBudget(bytes) => {
+                    engine.set_mem_budget(bytes);
+                }
+                ShardCmd::Crash => {
+                    if let Some(fleet) = &hooks.fleet {
+                        die(id, "chaos: crash command".into(), &mut engine, status, fleet);
+                    }
+                    return;
+                }
                 ShardCmd::Shutdown => return,
             }
         }
-        if let Err(e) = engine.step() {
-            log::error!("shard {id}: engine step failed: {e:#}");
+        // drain lifecycle: retire once idle, or migrate on timeout
+        if let Some(deadline) = drain_deadline {
+            if !engine.has_work() {
+                status.set_state(ShardState::Dead);
+                status.publish(&engine);
+                if let Some(fleet) = &hooks.fleet {
+                    let _ = fleet.send(FleetEvent::ShardDrained { id, migrated: Vec::new() });
+                }
+                return;
+            }
+            if Instant::now() >= deadline {
+                status.set_state(ShardState::Dead);
+                let migrated = engine.take_work();
+                status.publish(&engine);
+                if let Some(fleet) = &hooks.fleet {
+                    let _ = fleet.send(FleetEvent::ShardDrained { id, migrated });
+                }
+                return;
+            }
+        }
+        // supervised engine step: panics and step errors become a shard
+        // death (work handed back) instead of a dead-but-listed fleet
+        // member; without a fleet hook, preserve the historical behavior
+        match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => match &hooks.fleet {
+                Some(fleet) => {
+                    die(id, format!("engine step failed: {e:#}"), &mut engine, status, fleet);
+                    return;
+                }
+                None => log::error!("shard {id}: engine step failed: {e:#}"),
+            },
+            Err(payload) => match &hooks.fleet {
+                Some(fleet) => {
+                    die(id, panic_reason(payload.as_ref()), &mut engine, status, fleet);
+                    return;
+                }
+                None => std::panic::resume_unwind(payload),
+            },
         }
         // sink-attached requests were answered inside the engine; these
         // drains only catch sink-less submissions (none on this path,
@@ -254,6 +416,51 @@ mod tests {
             _ => panic!("expected SetK"),
         }
         assert_eq!(ack_rx.recv().unwrap(), 16);
+    }
+
+    #[test]
+    fn poisoned_sender_lock_recovers() {
+        let (handle, rx) = ShardHandle::stub(7);
+        let h = &handle;
+        // poison the sender mutex: panic while holding the guard
+        std::thread::scope(|s| {
+            let _ = s
+                .spawn(move || {
+                    let _guard = h.tx.lock().unwrap();
+                    panic!("poison the shard sender lock");
+                })
+                .join();
+        });
+        assert!(handle.tx.lock().is_err(), "lock must actually be poisoned");
+        // sends recover the lock instead of cascading the panic
+        handle.send(ShardCmd::Cancel { id: 1 }).expect("send after poison");
+        match rx.recv().unwrap() {
+            ShardCmd::Cancel { id } => assert_eq!(id, 1),
+            _ => panic!("expected Cancel"),
+        }
+        // once the shard is really gone, the error is structured — not a panic
+        drop(rx);
+        let err = handle.send(ShardCmd::Cancel { id: 2 }).unwrap_err();
+        assert!(err.to_string().contains("shard 7 is gone"));
+        // try_send hands the command back for retry elsewhere
+        match handle.try_send(ShardCmd::Cancel { id: 3 }) {
+            Err(ShardCmd::Cancel { id }) => assert_eq!(id, 3),
+            _ => panic!("expected the command back"),
+        }
+        // Drop (sends Shutdown) must also survive the poisoned lock
+        drop(handle);
+    }
+
+    #[test]
+    fn snapshot_carries_lifecycle_state() {
+        let (handle, _rx) = ShardHandle::stub(2);
+        assert_eq!(handle.snapshot().state, ShardState::Healthy);
+        handle.status.set_state(ShardState::Draining);
+        assert_eq!(handle.status.state(), ShardState::Draining);
+        assert_eq!(handle.snapshot().state, ShardState::Draining);
+        assert_eq!(ShardState::from_u8(2), ShardState::Dead);
+        assert_eq!(ShardState::from_u8(9), ShardState::Healthy, "unknown maps to healthy");
+        assert_eq!(ShardState::Dead.name(), "dead");
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Fleet lifecycle: shard supervision, dead-shard recovery, drain
+//! migration, and chaos-test fault injection.
+//!
+//! SWAN's decode is fully deterministic (fixed offline rotation, one RNG
+//! draw per non-greedy sampled token), so a request interrupted by a
+//! shard death is recoverable *bit-exactly*: re-prefill the retained
+//! prompt on a healthy shard and replay the already-emitted tokens as
+//! forced decode steps — the same mechanism pool-budget preemption uses
+//! within a shard, generalized across shards.  This module holds the
+//! types that travel that path:
+//!
+//! * [`RecoveredReq`] — everything needed to resume a request elsewhere:
+//!   the request itself (prompt, params, cancel token, trace), the
+//!   emitted tokens, the RNG stream at its exact position, accumulated
+//!   stats, and the event sink the client is still reading;
+//! * [`FleetEvent`] — what a dying or draining shard reports to the
+//!   router's supervisor thread ([`FleetEvent::ShardDead`] /
+//!   [`FleetEvent::ShardDrained`]), carrying every in-flight and queued
+//!   request back for re-placement;
+//! * [`ShardHooks`] — the supervision wiring a launched shard carries: a
+//!   fleet-event sender (absent on unsupervised test fleets, which keep
+//!   the old fail-the-sinks behavior) and an optional [`FaultPlan`];
+//! * [`FaultPlan`] — deterministic chaos: kill the coordinator at
+//!   iteration N, poison a stage after its Nth forward/prefill, drop a
+//!   stage channel, or trigger an external kill (`kill_now`, for soak
+//!   tests).  Each one-shot trigger fires exactly once;
+//! * [`ShardLostError`] — the structured terminal error
+//!   (`ERR shard_lost` on the wire) when placement/recovery is
+//!   impossible: no healthy shard exists or every submit attempt failed.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::api::Event;
+use crate::coordinator::request::{Request, RequestStats};
+use crate::util::Pcg64;
+
+/// Recovery payload for one request pulled off a dead or draining shard.
+///
+/// `produced` empty means the request never prefilled (it was still
+/// queued): recovery is a plain re-submission.  Non-empty, the receiving
+/// shard re-prefills and replays `produced[1..]` as forced decode steps
+/// (no RNG draw, no re-emission), then resumes sampling with `rng` —
+/// which sits at exactly the stream position an uninterrupted run would
+/// have — so the continued output is bit-identical.
+pub struct RecoveredReq {
+    pub req: Request,
+    /// Tokens already committed (and, for streaming requests, already
+    /// delivered to the client), first token included.
+    pub produced: Vec<u32>,
+    /// The request's decode RNG stream at its exact position (one draw
+    /// consumed per non-greedy committed token).
+    pub rng: Pcg64,
+    /// Stats accumulated so far; the recovering shard adds its own
+    /// queue/prefill/decode time on top.
+    pub stats: RequestStats,
+    /// Compression level the sequence was admitted at (0 = let the
+    /// receiving shard derive it from the request params).
+    pub k_active: usize,
+    /// The client's event channel, carried across so the same stream
+    /// resumes — token indexes continue without a gap or duplicate.
+    pub sink: Option<mpsc::Sender<Event>>,
+}
+
+impl RecoveredReq {
+    /// A queued (never-prefilled) request: recovery is a fresh re-run.
+    pub fn fresh(req: Request, sink: Option<mpsc::Sender<Event>>) -> RecoveredReq {
+        RecoveredReq {
+            req,
+            produced: Vec::new(),
+            rng: Pcg64::new(0),
+            stats: RequestStats::default(),
+            k_active: 0,
+            sink,
+        }
+    }
+}
+
+/// What a shard reports to the router's supervisor thread.
+pub enum FleetEvent {
+    /// The shard's coordinator died (panic, stage failure, injected
+    /// fault).  `recovered` holds every in-flight and queued request,
+    /// extracted for re-placement on healthy shards.
+    ShardDead { id: usize, reason: String, recovered: Vec<RecoveredReq> },
+    /// A drain finished: in-flight work completed locally, or —
+    /// after the drain timeout — was extracted into `migrated` for the
+    /// recovery path.  The supervisor retires the shard's handle.
+    ShardDrained { id: usize, migrated: Vec<RecoveredReq> },
+}
+
+/// Supervision wiring a launched shard/group carries.
+#[derive(Clone, Default)]
+pub struct ShardHooks {
+    /// Where death/drain events go.  `None` = unsupervised (stub and
+    /// test fleets): a dying coordinator fails its sinks instead of
+    /// handing work back, exactly the pre-fleet behavior.
+    pub fleet: Option<mpsc::Sender<FleetEvent>>,
+    /// Deterministic fault injection (chaos tests only).
+    pub plan: Option<Arc<FaultPlan>>,
+}
+
+impl ShardHooks {
+    /// Hooks that report to `fleet` with no fault injection.
+    pub fn supervised(fleet: mpsc::Sender<FleetEvent>) -> ShardHooks {
+        ShardHooks { fleet: Some(fleet), plan: None }
+    }
+}
+
+/// Deterministic fault-injection plan for one shard (chaos harness).
+///
+/// Every trigger fires exactly once; a `FaultPlan::default()` never
+/// fires.  Counters are compared against per-thread event counts, so a
+/// scripted plan plus a fixed request set reproduces the same death at
+/// the same point on every run.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Kill the group/shard coordinator at the start of iteration N
+    /// (0 = before the first admission — "mid-prefill" from the
+    /// client's point of view).
+    pub kill_coordinator_at: Option<u64>,
+    /// Panic stage `stage` when it has seen `n` Forward commands.
+    pub poison_stage: Option<(usize, u64)>,
+    /// Panic stage `stage` when it receives its `n`-th Prefill command
+    /// (counted from 1) — a death inside the admission hop.
+    pub poison_prefill: Option<(usize, u64)>,
+    /// Stage `stage` exits (drops its channels) after `n` Forwards —
+    /// the disconnect flavor of stage death.
+    pub drop_stage_at: Option<(usize, u64)>,
+    /// Externally-triggered coordinator kill (soak tests flip this at
+    /// arbitrary times); consumed by the next iteration-boundary check.
+    pub kill_now: AtomicBool,
+    /// One-shot latch for `kill_coordinator_at`.
+    fired: AtomicBool,
+}
+
+impl FaultPlan {
+    /// Kill the coordinator at iteration `n`.
+    pub fn kill_at(n: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan { kill_coordinator_at: Some(n), ..Default::default() })
+    }
+
+    /// Panic stage `stage` after `n` Forward hops.
+    pub fn poison_stage_after(stage: usize, n: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan { poison_stage: Some((stage, n)), ..Default::default() })
+    }
+
+    /// Should the coordinator die at iteration `iter`?  One-shot: the
+    /// scheduled kill and the external `kill_now` latch each fire once.
+    pub fn coordinator_dies(&self, iter: u64) -> bool {
+        if self.kill_now.swap(false, Ordering::Relaxed) {
+            return true;
+        }
+        if self.kill_coordinator_at == Some(iter) && !self.fired.swap(true, Ordering::Relaxed) {
+            return true;
+        }
+        false
+    }
+}
+
+/// Per-stage view of a [`FaultPlan`], holding the local event counters
+/// the stage thread advances (forwards seen, prefills seen).
+#[derive(Default)]
+pub struct StageFaults {
+    pub plan: Option<Arc<FaultPlan>>,
+    forwards: AtomicU64,
+    prefills: AtomicU64,
+}
+
+impl StageFaults {
+    pub fn new(plan: Option<Arc<FaultPlan>>) -> StageFaults {
+        StageFaults { plan, forwards: AtomicU64::new(0), prefills: AtomicU64::new(0) }
+    }
+
+    /// Called per Forward command; panics (poison) or returns `true`
+    /// (drop the stage) when the plan says so.
+    pub fn on_forward(&self, stage: usize) -> bool {
+        let n = self.forwards.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(plan) = &self.plan {
+            if plan.poison_stage == Some((stage, n)) {
+                panic!("chaos: injected stage {stage} poison at forward {n}");
+            }
+            if plan.drop_stage_at == Some((stage, n)) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Called per Prefill command; panics when the plan poisons it.
+    pub fn on_prefill(&self, stage: usize) {
+        let n = self.prefills.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(plan) = &self.plan {
+            if plan.poison_prefill == Some((stage, n)) {
+                panic!("chaos: injected stage {stage} poison at prefill {n}");
+            }
+        }
+    }
+}
+
+/// Terminal placement failure: every healthy shard was tried (or none
+/// exists) and the request cannot be served.  Rendered on the wire as
+/// `ERR shard_lost <detail>`; [`crate::shard::Router::submit`] returns
+/// it only after its bounded retry is exhausted, and the supervisor
+/// emits it (as an [`Event::Error`] with a `shard_lost:` prefix) when a
+/// recovered request has no healthy shard left to land on.
+#[derive(Debug)]
+pub struct ShardLostError {
+    pub attempts: usize,
+    pub detail: &'static str,
+}
+
+impl std::fmt::Display for ShardLostError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} after {} placement attempt{}",
+            self.detail,
+            self.attempts,
+            if self.attempts == 1 { "" } else { "s" }
+        )
+    }
+}
+
+impl std::error::Error for ShardLostError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_never_fires() {
+        let p = FaultPlan::default();
+        for i in 0..32 {
+            assert!(!p.coordinator_dies(i));
+        }
+        let sf = StageFaults::new(None);
+        for _ in 0..8 {
+            assert!(!sf.on_forward(0));
+            sf.on_prefill(0);
+        }
+    }
+
+    #[test]
+    fn scheduled_kill_fires_exactly_once() {
+        let p = FaultPlan::kill_at(3);
+        assert!(!p.coordinator_dies(0));
+        assert!(!p.coordinator_dies(2));
+        assert!(p.coordinator_dies(3));
+        // relaunched coordinators re-see the same iteration numbers;
+        // the latch keeps the plan from killing them again
+        assert!(!p.coordinator_dies(3));
+        assert!(!p.coordinator_dies(4));
+    }
+
+    #[test]
+    fn kill_now_is_a_one_shot_latch() {
+        let p = FaultPlan::default();
+        p.kill_now.store(true, Ordering::Relaxed);
+        assert!(p.coordinator_dies(7));
+        assert!(!p.coordinator_dies(8));
+    }
+
+    #[test]
+    fn stage_drop_triggers_on_the_nth_forward() {
+        let plan = Arc::new(FaultPlan { drop_stage_at: Some((1, 2)), ..Default::default() });
+        let sf = StageFaults::new(Some(plan));
+        assert!(!sf.on_forward(1));
+        assert!(sf.on_forward(1), "second forward on stage 1 drops");
+        // other stages never trigger
+        let plan = Arc::new(FaultPlan { drop_stage_at: Some((1, 1)), ..Default::default() });
+        let sf = StageFaults::new(Some(plan));
+        assert!(!sf.on_forward(0));
+    }
+
+    #[test]
+    fn stage_poison_panics() {
+        let plan = Arc::new(FaultPlan { poison_stage: Some((0, 1)), ..Default::default() });
+        let sf = StageFaults::new(Some(plan));
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sf.on_forward(0)));
+        assert!(err.is_err(), "poisoned forward must panic");
+    }
+
+    #[test]
+    fn shard_lost_error_renders_and_downcasts() {
+        let e = ShardLostError { attempts: 3, detail: "no healthy shard" };
+        assert_eq!(e.to_string(), "no healthy shard after 3 placement attempts");
+        let any: anyhow::Error = e.into();
+        assert!(any.downcast_ref::<ShardLostError>().is_some());
+    }
+
+    #[test]
+    fn fresh_recovery_payload_is_a_resubmission() {
+        let r = RecoveredReq::fresh(Request::from_text(9, "hi", 4), None);
+        assert!(r.produced.is_empty());
+        assert_eq!(r.req.id, 9);
+        assert!(r.sink.is_none());
+    }
+}
