@@ -1,0 +1,277 @@
+//! Name-based call graph over the model — deliberately approximate
+//! (no type inference), biased so approximation errors *add* edges
+//! rather than drop them, except for a blocklist of ubiquitous std
+//! method names whose name-match edges would be pure noise
+//! (`.len()` resolving to `TraceRing::len`, and so on).
+
+use std::collections::HashMap;
+
+use crate::model::Model;
+
+/// Method names so common in std that a `.name(` call is almost never
+/// a call into this crate; resolving them by bare name would wire the
+/// whole graph together.  Calls spelled with an explicit
+/// `Type::name(...)` path still resolve precisely.
+pub const UBIQUITOUS_METHODS: &[&str] = &[
+    "abs", "all", "any", "and_then", "as_bytes", "as_mut", "as_ref", "as_slice", "as_str",
+    "chars", "chunks", "chunks_mut", "clear", "clone", "cloned", "cmp", "collect", "contains",
+    "contains_key", "copied", "count", "dedup", "drain", "entry", "enumerate", "eq", "extend",
+    "fill", "filter", "filter_map", "find", "first", "flat_map", "flatten", "flush", "fmt",
+    "fold", "for_each", "get", "get_mut", "get_or_insert_with", "hash", "insert", "into_iter",
+    "is_empty", "is_none", "is_ok", "is_some", "iter", "iter_mut", "join", "keys", "last",
+    "len", "map", "map_err", "max", "min", "next", "parse", "partial_cmp", "pop", "position",
+    "push", "push_str", "remove", "reserve", "resize", "retain", "rev", "skip", "sort",
+    "sort_by", "sort_by_key", "sort_unstable", "splice", "split", "split_whitespace", "starts_with",
+    "sum", "swap", "take", "to_owned", "to_string", "to_vec", "trim", "truncate", "unwrap_or",
+    "unwrap_or_default", "unwrap_or_else", "values", "windows", "zip",
+    // atomics and channels: `.load(`, `.store(`, `.send(`, `.recv(` are
+    // pervasive std calls whose names collide with crate methods
+    // (Model::load, ShardHandle::send, ...)
+    "load", "store", "send", "recv", "try_recv", "recv_timeout",
+    // pointer arithmetic (`ptr.add(i)` in simd/) collides with
+    // Counter::add; every in-crate `snapshot` is atomics-only, and the
+    // name-match edges between them fabricate lock cycles
+    "add", "sub", "snapshot",
+];
+
+/// Rust keywords that can directly precede `(` in expression position.
+const CALLABLE_KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "fn", "in", "as", "move", "unsafe",
+    "let", "else", "break", "continue", "where", "impl", "dyn", "ref", "mut", "box", "await",
+];
+
+/// The poison-recovery primitives: modeled as lock *acquisitions* by
+/// the lock rule, never as call edges (their bodies acquire a generic
+/// parameter lock that would pollute every caller's summary).
+pub const RECOVER_PRIMITIVES: &[&str] =
+    &["lock_recover", "read_recover", "write_recover", "wait_recover"];
+
+pub struct CallGraph {
+    /// node id -> (file index, fn index) in the model.
+    pub nodes: Vec<(usize, usize)>,
+    /// node id -> callee node ids.
+    pub edges: Vec<Vec<usize>>,
+    index: HashMap<(usize, usize), usize>,
+    by_name: HashMap<String, Vec<usize>>,
+}
+
+impl CallGraph {
+    pub fn build(model: &Model) -> CallGraph {
+        let mut nodes = Vec::new();
+        let mut index = HashMap::new();
+        let mut by_name: HashMap<String, Vec<usize>> = HashMap::new();
+        for (fi, f) in model.files.iter().enumerate() {
+            for (di, d) in f.fns.iter().enumerate() {
+                let id = nodes.len();
+                nodes.push((fi, di));
+                index.insert((fi, di), id);
+                if !d.in_test {
+                    by_name.entry(d.name.clone()).or_default().push(id);
+                }
+            }
+        }
+        let mut g = CallGraph { nodes, edges: Vec::new(), index, by_name };
+        let mut edges = vec![Vec::new(); g.nodes.len()];
+        for id in 0..g.nodes.len() {
+            let (fi, di) = g.nodes[id];
+            let d = &model.files[fi].fns[di];
+            if d.in_test {
+                continue;
+            }
+            let (a, b) = d.body;
+            let mut out = Vec::new();
+            for i in a..b {
+                out.extend(g.resolve_call_from(model, fi, i, Some(id)));
+            }
+            out.sort_unstable();
+            out.dedup();
+            edges[id] = out;
+        }
+        g.edges = edges;
+        g
+    }
+
+    pub fn node(&self, fi: usize, di: usize) -> Option<usize> {
+        self.index.get(&(fi, di)).copied()
+    }
+
+    /// Node ids of every non-test fn whose name is in `names`.
+    pub fn roots_named(&self, names: &[&str]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for n in names {
+            if let Some(ids) = self.by_name.get(*n) {
+                out.extend_from_slice(ids);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Callee node ids when `toks[i]` of file `fi` heads a call
+    /// expression; empty otherwise.
+    pub fn resolve_call(&self, model: &Model, fi: usize, i: usize) -> Vec<usize> {
+        self.resolve_call_from(model, fi, i, None)
+    }
+
+    /// Like [`CallGraph::resolve_call`], excluding `caller` itself from
+    /// method-call candidates: `h.snapshot()` inside
+    /// `Registry::snapshot` must not resolve back to the caller (the
+    /// commonest false self-edge of name-based resolution).
+    pub fn resolve_call_from(
+        &self,
+        model: &Model,
+        fi: usize,
+        i: usize,
+        caller: Option<usize>,
+    ) -> Vec<usize> {
+        let f = &model.files[fi];
+        let t = &f.toks;
+        let Some(name) = t[i].ident() else { return Vec::new() };
+        if i + 1 >= t.len() || t[i + 1].punct() != Some('(') {
+            return Vec::new();
+        }
+        if CALLABLE_KEYWORDS.contains(&name) || RECOVER_PRIMITIVES.contains(&name) {
+            return Vec::new();
+        }
+        let prev = i.checked_sub(1).map(|p| &t[p]);
+        let prev_punct = prev.and_then(|p| p.punct());
+        let prev_is_fn_kw = prev.map(|p| p.is_ident("fn")).unwrap_or(false);
+        if prev_is_fn_kw {
+            return Vec::new();
+        }
+        let candidates = |pred: &dyn Fn(&crate::model::FnDef) -> bool| -> Vec<usize> {
+            self.by_name
+                .get(name)
+                .map(|ids| {
+                    ids.iter()
+                        .copied()
+                        .filter(|&id| {
+                            let (cfi, cdi) = self.nodes[id];
+                            pred(&model.files[cfi].fns[cdi])
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        if prev_punct == Some('.') {
+            // method call: blocklisted std names resolve to nothing
+            if UBIQUITOUS_METHODS.contains(&name) {
+                return Vec::new();
+            }
+            let mut out = candidates(&|d| d.impl_ty.is_some());
+            if let Some(caller) = caller {
+                out.retain(|&id| id != caller);
+            }
+            // locality preference: if any candidate lives in the same
+            // file as the call site, the cross-file homonyms are noise
+            // (`ring.row(..)` in paged_cache.rs means the ring's `row`,
+            // not `util/stats::row`)
+            if out.iter().any(|&id| self.nodes[id].0 == fi) {
+                out.retain(|&id| self.nodes[id].0 == fi);
+            }
+            return out;
+        }
+        if prev_punct == Some(':') && i >= 2 && t[i - 2].punct() == Some(':') {
+            // path call `Qual::name(...)`
+            let qual = i.checked_sub(3).and_then(|q| t[q].ident());
+            let Some(qual) = qual else { return Vec::new() };
+            if qual == "Self" || qual == "self" {
+                return candidates(&|d| d.impl_ty.is_some());
+            }
+            let typed = candidates(&|d| d.impl_ty.as_deref() == Some(qual));
+            if !typed.is_empty() {
+                return typed;
+            }
+            if qual.chars().next().is_some_and(|c| c.is_lowercase()) {
+                // module path — resolve by bare name
+                return candidates(&|_| true);
+            }
+            return Vec::new(); // external type (Vec::new, Box::new, ...)
+        }
+        // bare call `name(...)` — free functions only
+        candidates(&|d| d.impl_ty.is_none())
+    }
+
+    /// `reachable[id]` for every node reachable from `roots` (roots
+    /// included).
+    pub fn reachable(&self, roots: &[usize]) -> Vec<bool> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack: Vec<usize> = roots.to_vec();
+        while let Some(id) = stack.pop() {
+            if seen[id] {
+                continue;
+            }
+            seen[id] = true;
+            stack.extend(self.edges[id].iter().copied().filter(|&c| !seen[c]));
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(src: &str) -> Model {
+        Model::from_sources(&[("a.rs", src)])
+    }
+
+    #[test]
+    fn free_and_method_calls_resolve() {
+        let m = model(
+            "fn root() { helper(); thing.work(); }\n\
+             fn helper() {}\n\
+             struct W; impl W { fn work(&self) { leaf(); } }\n\
+             fn leaf() {}",
+        );
+        let g = CallGraph::build(&m);
+        let roots = g.roots_named(&["root"]);
+        let seen = g.reachable(&roots);
+        let names: Vec<&str> = seen
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(id, _)| m.files[g.nodes[id].0].fns[g.nodes[id].1].name.as_str())
+            .collect();
+        assert!(names.contains(&"helper"));
+        assert!(names.contains(&"work"));
+        assert!(names.contains(&"leaf"));
+    }
+
+    #[test]
+    fn ubiquitous_method_names_do_not_resolve() {
+        let m = model(
+            "fn root(v: Vec<u8>) { v.len(); }\n\
+             struct R; impl R { fn len(&self) { secret(); } }\n\
+             fn secret() {}",
+        );
+        let g = CallGraph::build(&m);
+        let seen = g.reachable(&g.roots_named(&["root"]));
+        let hit_secret = seen
+            .iter()
+            .enumerate()
+            .any(|(id, &s)| s && m.files[g.nodes[id].0].fns[g.nodes[id].1].name == "secret");
+        assert!(!hit_secret);
+    }
+
+    #[test]
+    fn typed_path_calls_resolve_precisely() {
+        let m = model(
+            "struct A; impl A { fn go() { x(); } }\n\
+             struct B; impl B { fn go() { y(); } }\n\
+             fn x() {}\nfn y() {}\n\
+             fn root() { A::go(); Vec::new(); }",
+        );
+        let g = CallGraph::build(&m);
+        let seen = g.reachable(&g.roots_named(&["root"]));
+        let names: Vec<&str> = seen
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(id, _)| m.files[g.nodes[id].0].fns[g.nodes[id].1].name.as_str())
+            .collect();
+        assert!(names.contains(&"x"));
+        assert!(!names.contains(&"y"));
+    }
+}

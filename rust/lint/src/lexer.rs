@@ -1,0 +1,352 @@
+//! A lightweight Rust lexer — just enough fidelity for the swan-lint
+//! rules: identifiers, punctuation, string/char literals (content
+//! dropped except for plain strings, whose unquoted text the wire rule
+//! reads), numbers, and line comments (retained separately so the
+//! annotation scanner can see `// lint: allow(...)` lines).
+//!
+//! Deliberate simplifications, safe for this codebase:
+//! * lifetimes are recognised heuristically (after `'`, one char then a
+//!   closing `'` means a char literal, anything else is a lifetime and
+//!   is skipped entirely);
+//! * numeric literals swallow an optional fraction and suffix but stop
+//!   before `..` so range tokens survive;
+//! * block comments nest (real Rust semantics) and are discarded.
+
+/// Token kind. `Str` carries the *unquoted* content of plain `"…"` and
+/// raw `r"…"` literals; byte strings and char literals carry empty
+/// content (no rule reads them).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident(String),
+    Punct(char),
+    Str(String),
+    Num,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(i) if i == s)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn punct(&self) -> Option<char> {
+        match self.kind {
+            TokKind::Punct(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn str_content(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// One retained `//` comment (block comments are discarded — the
+/// annotation grammar is line-comment only).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// Text after the `//`, untrimmed.
+    pub text: String,
+    pub line: u32,
+}
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Tokenize `src`. Never fails: unrecognised bytes become `Punct`.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let n = b.len();
+
+    // Count newlines in b[start..end) into `line`.
+    macro_rules! bump_lines {
+        ($start:expr, $end:expr) => {
+            line += b[$start..$end].iter().filter(|&&ch| ch == '\n').count() as u32;
+        };
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == '/' && i + 1 < n {
+            if b[i + 1] == '/' {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != '\n' {
+                    j += 1;
+                }
+                comments.push(Comment { text: b[start..j].iter().collect(), line });
+                i = j;
+                continue;
+            }
+            if b[i + 1] == '*' {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+        }
+        // raw / byte strings: r"…", r#"…"#, b"…", br#"…"#, and raw
+        // idents r#ident
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            // byte string: lex like a plain string, drop content
+            let (end, _) = scan_plain_str(&b, i + 2);
+            bump_lines!(i, end);
+            toks.push(Tok { kind: TokKind::Str(String::new()), line });
+            i = end;
+            continue;
+        }
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            // j: index just past the 'r'
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            let hash_start = j;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            let hashes = j - hash_start;
+            if j < n && b[j] == '"' {
+                let content_start = j + 1;
+                let mut p = content_start;
+                let mut matched = None;
+                while p < n {
+                    if b[p] == '"' {
+                        let mut q = p + 1;
+                        let mut h = 0usize;
+                        while q < n && b[q] == '#' && h < hashes {
+                            q += 1;
+                            h += 1;
+                        }
+                        if h == hashes {
+                            matched = Some((p, q));
+                            break;
+                        }
+                        p = q;
+                    } else {
+                        p += 1;
+                    }
+                }
+                let (content_end, end) = matched.unwrap_or((n, n));
+                let content: String = b[content_start..content_end].iter().collect();
+                let start_line = line;
+                bump_lines!(i, end);
+                toks.push(Tok {
+                    kind: TokKind::Str(if c == 'b' { String::new() } else { content }),
+                    line: start_line,
+                });
+                i = end;
+                continue;
+            }
+            if c == 'r' && hashes > 0 {
+                // raw ident r#ident
+                let mut q = j;
+                while q < n && (b[q].is_alphanumeric() || b[q] == '_') {
+                    q += 1;
+                }
+                if q > j {
+                    toks.push(Tok { kind: TokKind::Ident(b[j..q].iter().collect()), line });
+                    i = q;
+                    continue;
+                }
+            }
+            // plain ident starting with 'r'/'b': fall through to the
+            // identifier arm below
+        }
+        // plain string
+        if c == '"' {
+            let (end, _) = scan_plain_str(&b, i + 1);
+            let content: String = b[i + 1..end.saturating_sub(1).max(i + 1)].iter().collect();
+            let start_line = line;
+            bump_lines!(i, end);
+            toks.push(Tok { kind: TokKind::Str(content), line: start_line });
+            i = end;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // char escape: skip to closing quote
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Tok { kind: TokKind::Str(String::new()), line });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                toks.push(Tok { kind: TokKind::Str(String::new()), line });
+                i += 3;
+                continue;
+            }
+            // lifetime: skip the ident, emit nothing
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            i = j.max(i + 1);
+            continue;
+        }
+        // identifier / keyword
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident(b[i..j].iter().collect()), line });
+            i = j;
+            continue;
+        }
+        // number (stop before `..` so ranges survive)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            if j < n && b[j] == '.' && !(j + 1 < n && b[j + 1] == '.') {
+                j += 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == '_') {
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: TokKind::Num, line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct(c), line });
+        i += 1;
+    }
+    Lexed { toks, comments }
+}
+
+/// Scan a plain (escaped) string starting *after* the opening quote;
+/// returns (index one past the closing quote, newline count).
+fn scan_plain_str(b: &[char], mut j: usize) -> (usize, usize) {
+    let n = b.len();
+    let mut nl = 0usize;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => return (j + 1, nl),
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (n, nl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        let l = lex("fn foo(x: usize) -> u32 { x[0] + 1.5 }");
+        assert!(l.toks.iter().any(|t| t.is_ident("foo")));
+        assert!(l.toks.iter().any(|t| t.punct() == Some('[')));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Num));
+    }
+
+    #[test]
+    fn comments_retained_with_lines() {
+        let l = lex("let a = 1;\n// lint: allow(panic, \"x\")\nlet b = 2;");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 2);
+        assert!(l.comments[0].text.contains("lint: allow"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_vanish() {
+        let l = lex("a /* x /* y */ z */ b");
+        let ids = idents("a /* x /* y */ z */ b");
+        assert_eq!(ids, vec!["a", "b"]);
+        assert!(l.comments.is_empty());
+    }
+
+    #[test]
+    fn strings_keep_content_rawness_handled() {
+        let l = lex(r####"let s = "GEN"; let r = r#"TRACE {id}"#;"####);
+        let strs: Vec<&str> = l.toks.iter().filter_map(|t| t.str_content()).collect();
+        assert_eq!(strs, vec!["GEN", "TRACE {id}"]);
+    }
+
+    #[test]
+    fn escaped_quotes_and_multiline_strings() {
+        let l = lex("let s = \"a\\\"b\";\nlet t = \"x\ny\";\nfin");
+        let last = l.toks.last().unwrap();
+        assert!(last.is_ident("fin"));
+        assert_eq!(last.line, 3);
+    }
+
+    #[test]
+    fn lifetimes_are_skipped_char_literals_are_not() {
+        let ids = idents("fn f<'a>(x: &'a str) { let c = 'q'; let esc = '\\n'; }");
+        assert!(!ids.contains(&"a".to_string()));
+        let l = lex("let c = 'q';");
+        assert!(l.toks.iter().any(|t| matches!(t.kind, TokKind::Str(_))));
+    }
+
+    #[test]
+    fn raw_idents_and_ranges() {
+        let ids = idents("let r#fn = 1; for i in 0..10 {}");
+        assert!(ids.contains(&"fn".to_string()));
+        let l = lex("0..10");
+        let dots = l.toks.iter().filter(|t| t.punct() == Some('.')).count();
+        assert_eq!(dots, 2);
+    }
+}

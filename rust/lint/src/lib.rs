@@ -1,0 +1,64 @@
+//! swan-lint: a dependency-free static analyzer for the swan serving
+//! stack, run as a tier-1 test (`rust/tests/lint_clean.rs`).
+//!
+//! It lexes `rust/src` with a lightweight Rust lexer, builds a
+//! module/function model plus a name-based call graph, and enforces
+//! five invariants the compiler cannot:
+//!
+//! 1. **panic-path audit** — no unjustified `.unwrap()` / `.expect()` /
+//!    `panic!` / direct indexing inside the supervised shard scope;
+//! 2. **lock order** — no cycles in the cross-function lock graph, no
+//!    registration-mutex acquisition on the decode hot path, and no
+//!    `.lock().unwrap()` now that `util::sync` recovers from poisoning;
+//! 3. **atomic orderings** — fields keep one ordering discipline, and
+//!    declared handoff fields are never Relaxed-stored;
+//! 4. **hot-path allocation** — no `Vec::new` / `.to_vec()` /
+//!    `.clone()` / `format!` / `Box::new` reachable from the decode
+//!    roots;
+//! 5. **wire drift** — server parser, reference client and README
+//!    protocol table agree on the protocol-v2 verb set.
+//!
+//! Deviations are justified in-tree with
+//! `// lint: allow(<key>, "<why>")`; a malformed or justification-free
+//! annotation is itself a finding (`allow_grammar`).
+
+pub mod callgraph;
+pub mod lexer;
+pub mod model;
+pub mod rules;
+
+use std::io;
+use std::path::Path;
+
+pub use model::{Finding, Model};
+
+/// Run every rule over `model` (and the README text, when given for
+/// the wire rule).  Findings come back deduplicated and sorted by
+/// (file, line, rule).
+pub fn analyze(model: &Model, readme: Option<&str>) -> Vec<Finding> {
+    let cg = callgraph::CallGraph::build(model);
+    let mut out = Vec::new();
+    out.extend(rules::annotation_grammar(model));
+    out.extend(rules::panics::check(model));
+    out.extend(rules::locks::check(model, &cg));
+    out.extend(rules::atomics::check(model));
+    out.extend(rules::hot_alloc::check(model, &cg));
+    out.extend(rules::wire::check(model, readme));
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.msg.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.msg.as_str()))
+    });
+    out.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule && a.msg == b.msg);
+    out
+}
+
+/// Load every `.rs` under `src_root` (plus the README for the wire
+/// rule) and analyze.
+pub fn analyze_tree(src_root: &Path, readme: Option<&Path>) -> io::Result<Vec<Finding>> {
+    let model = Model::load(src_root)?;
+    let readme_text = match readme {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => None,
+    };
+    Ok(analyze(&model, readme_text.as_deref()))
+}

@@ -1,0 +1,35 @@
+//! Standalone runner: `swan-lint <src-root> [readme]`.
+//!
+//! Prints one line per finding and exits non-zero when any exist —
+//! the same contract `rust/tests/lint_clean.rs` enforces under
+//! `cargo test`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let Some(src) = args.next().map(PathBuf::from) else {
+        eprintln!("usage: swan-lint <src-root> [readme]");
+        return ExitCode::from(2);
+    };
+    let readme = args.next().map(PathBuf::from);
+    match swan_lint::analyze_tree(&src, readme.as_deref()) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                eprintln!("swan-lint: clean");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("swan-lint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("swan-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! Source model the rules run over: per-file token streams plus the
+//! structure the lexer alone does not give — function bodies, `impl`
+//! contexts, `#[cfg(test)]` / `#[test]` regions, and parsed
+//! `// lint: allow(...)` annotations.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::lexer::{lex, Comment, Tok, TokKind};
+
+/// One analyzer finding. `rule` is the annotation key that would
+/// silence it (`panic`, `indexing`, `lock_order`, ...).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A parsed `// lint: allow(<key>, "<justification>")` annotation.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub key: String,
+    pub line: u32,
+    /// The annotation sits before the file's first token, so it covers
+    /// the whole file for `key`.
+    pub module_level: bool,
+}
+
+/// One `fn` with a body (trait-method signatures are not recorded).
+#[derive(Clone, Debug)]
+pub struct FnDef {
+    pub name: String,
+    /// `Some(Type)` when defined inside `impl Type` / `impl Tr for Type`.
+    pub impl_ty: Option<String>,
+    /// Token-index range of the body *including* both braces.
+    pub body: (usize, usize),
+    pub line: u32,
+    /// Inside a `#[cfg(test)]` region or under `#[test]`.
+    pub in_test: bool,
+}
+
+pub struct File {
+    /// Path relative to the analyzed root, `/`-separated.
+    pub path: String,
+    /// File stem (`mod.rs` keeps the stem `mod`; rules qualify by path).
+    pub stem: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// Token-index ranges under test-only attributes.
+    pub test_ranges: Vec<(usize, usize)>,
+    pub fns: Vec<FnDef>,
+    pub allows: Vec<Allow>,
+    /// Malformed `lint:` comments: (line, problem).
+    pub bad_annotations: Vec<(u32, String)>,
+}
+
+impl File {
+    pub fn parse(path: &str, src: &str) -> File {
+        let lexed = lex(src);
+        let stem = Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(path)
+            .to_string();
+        let mut f = File {
+            path: path.to_string(),
+            stem,
+            toks: lexed.toks,
+            comments: lexed.comments,
+            test_ranges: Vec::new(),
+            fns: Vec::new(),
+            allows: Vec::new(),
+            bad_annotations: Vec::new(),
+        };
+        f.scan_annotations();
+        f.scan_test_ranges();
+        f.scan_fns();
+        f
+    }
+
+    /// Is token index `i` inside a test-only region?
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| i >= a && i <= b)
+    }
+
+    /// Is `key` allowed at source line `line`?  A line annotation covers
+    /// its own line (trailing comment) and the line below (comment
+    /// above); a module-level annotation covers the whole file.
+    pub fn allowed(&self, key: &str, line: u32) -> bool {
+        self.allows.iter().any(|a| {
+            a.key == key && (a.module_level || a.line == line || a.line + 1 == line)
+        })
+    }
+
+    /// The innermost function whose body contains token index `i`.
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnDef> {
+        self.fns
+            .iter()
+            .filter(|f| i > f.body.0 && i < f.body.1)
+            .min_by_key(|f| f.body.1 - f.body.0)
+    }
+
+    fn scan_annotations(&mut self) {
+        let first_tok_line = self.toks.first().map(|t| t.line).unwrap_or(u32::MAX);
+        for c in &self.comments {
+            let text = c.text.trim();
+            // `//! lint:`-style doc text never parses here: doc comments
+            // keep their leading `!`/`/` in `text` only when the source
+            // had `//!`/`///`, which the trim below filters out.
+            let Some(rest) = text.strip_prefix("lint:") else { continue };
+            let rest = rest.trim();
+            let parsed = (|| -> Result<String, String> {
+                let body = rest
+                    .strip_prefix("allow(")
+                    .ok_or_else(|| "expected `allow(<key>, \"<justification>\")`".to_string())?;
+                let body = body
+                    .strip_suffix(')')
+                    .ok_or_else(|| "missing closing `)`".to_string())?;
+                let (key, just) = body
+                    .split_once(',')
+                    .ok_or_else(|| "missing `, \"<justification>\"`".to_string())?;
+                let key = key.trim();
+                if key.is_empty() || !key.chars().all(|ch| ch.is_ascii_lowercase() || ch == '_') {
+                    return Err(format!("bad key '{key}'"));
+                }
+                let just = just.trim();
+                let inner = just
+                    .strip_prefix('"')
+                    .and_then(|s| s.strip_suffix('"'))
+                    .ok_or_else(|| "justification must be a quoted string".to_string())?;
+                if inner.trim().is_empty() {
+                    return Err("empty justification — say why the pattern is sound".to_string());
+                }
+                Ok(key.to_string())
+            })();
+            match parsed {
+                Ok(key) => self.allows.push(Allow {
+                    key,
+                    line: c.line,
+                    module_level: c.line < first_tok_line,
+                }),
+                Err(why) => self.bad_annotations.push((c.line, why)),
+            }
+        }
+    }
+
+    /// Mark brace-delimited regions under attributes that mention
+    /// `test` (`#[test]`, `#[cfg(test)]`, `#[cfg(all(test, ...))]`).
+    fn scan_test_ranges(&mut self) {
+        let t = &self.toks;
+        let mut i = 0;
+        while i + 1 < t.len() {
+            if t[i].punct() == Some('#') && t[i + 1].punct() == Some('[') {
+                let close = match match_open(t, i + 1, '[', ']') {
+                    Some(c) => c,
+                    None => break,
+                };
+                let mentions_test = t[i + 2..close].iter().any(|x| x.is_ident("test"));
+                if mentions_test {
+                    // the attached item: next `{` before a `;` at depth 0
+                    let mut j = close + 1;
+                    let mut depth = 0i32;
+                    while j < t.len() {
+                        match t[j].punct() {
+                            Some('(') | Some('[') => depth += 1,
+                            Some(')') | Some(']') => depth -= 1,
+                            Some(';') if depth == 0 => break,
+                            Some('{') if depth == 0 => {
+                                if let Some(end) = match_open(t, j, '{', '}') {
+                                    self.test_ranges.push((i, end));
+                                    i = end; // skip the whole region
+                                }
+                                break;
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                }
+                i = close + 1;
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    fn scan_fns(&mut self) {
+        let t = &self.toks;
+        // impl contexts: (body_open, body_close, type name)
+        let mut impls: Vec<(usize, usize, String)> = Vec::new();
+        let mut i = 0;
+        while i < t.len() {
+            if t[i].is_ident("impl") {
+                if let Some((open, ty)) = impl_header(t, i) {
+                    if let Some(close) = match_open(t, open, '{', '}') {
+                        impls.push((open, close, ty));
+                    }
+                }
+            }
+            i += 1;
+        }
+
+        let mut fns = Vec::new();
+        let mut i = 0;
+        while i + 1 < t.len() {
+            if t[i].is_ident("fn") {
+                if let Some(name) = t[i + 1].ident() {
+                    // body: first `;` or `{` at bracket-depth 0 past the name
+                    let mut j = i + 2;
+                    let mut depth = 0i32;
+                    let mut body = None;
+                    while j < t.len() {
+                        match t[j].punct() {
+                            Some('(') | Some('[') => depth += 1,
+                            Some(')') | Some(']') => depth -= 1,
+                            Some(';') if depth <= 0 => break,
+                            Some('{') if depth <= 0 => {
+                                body = match_open(t, j, '{', '}').map(|c| (j, c));
+                                break;
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    if let Some(body) = body {
+                        let impl_ty = impls
+                            .iter()
+                            .filter(|&&(o, c, _)| i > o && i < c)
+                            .min_by_key(|&&(o, c, _)| c - o)
+                            .map(|(_, _, ty)| ty.clone());
+                        fns.push(FnDef {
+                            name: name.to_string(),
+                            impl_ty,
+                            body,
+                            line: t[i].line,
+                            in_test: self.in_test(i),
+                        });
+                    }
+                }
+            }
+            i += 1;
+        }
+        self.fns = fns;
+    }
+}
+
+/// Given `toks[open]` == the opening delimiter, return the index of its
+/// matching closer.
+pub fn match_open(toks: &[Tok], open: usize, o: char, c: char) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.punct() {
+            Some(p) if p == o => depth += 1,
+            Some(p) if p == c => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse an `impl` header starting at `toks[at] == "impl"`: returns the
+/// index of the body's `{` and the implemented type's name (generics
+/// skipped; `impl Tr for Ty` resolves to `Ty`; stops at `where`).
+fn impl_header(t: &[Tok], at: usize) -> Option<(usize, String)> {
+    let mut angle = 0i32;
+    let mut last_ident: Option<String> = None;
+    let mut in_where = false;
+    let mut j = at + 1;
+    while j < t.len() {
+        match &t[j].kind {
+            TokKind::Punct('<') => angle += 1,
+            TokKind::Punct('>') => angle -= 1,
+            TokKind::Punct('{') if angle <= 0 => return Some((j, last_ident?)),
+            TokKind::Punct(';') if angle <= 0 => return None,
+            TokKind::Ident(id) if angle <= 0 && !in_where => {
+                if id == "for" {
+                    last_ident = None; // names after `for` win
+                } else if id == "where" {
+                    in_where = true;
+                } else if id != "dyn" && id != "mut" && id != "const" {
+                    last_ident = Some(id.clone());
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+pub struct Model {
+    pub files: Vec<File>,
+}
+
+impl Model {
+    /// Build a model from in-memory sources (fixture tests).
+    pub fn from_sources(sources: &[(&str, &str)]) -> Model {
+        Model {
+            files: sources.iter().map(|(p, s)| File::parse(p, s)).collect(),
+        }
+    }
+
+    /// Build a model from every `.rs` file under `root`, recursively,
+    /// in sorted order (deterministic findings).
+    pub fn load(root: &Path) -> io::Result<Model> {
+        let mut paths = Vec::new();
+        walk(root, root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        for rel in paths {
+            let src = fs::read_to_string(root.join(&rel))?;
+            files.push(File::parse(&rel, &src));
+        }
+        Ok(Model { files })
+    }
+
+    /// All non-test functions named `name` (for call-graph edges).
+    pub fn fns_named<'a>(&'a self, name: &str) -> Vec<(&'a File, &'a FnDef)> {
+        let mut out = Vec::new();
+        for f in &self.files {
+            for d in &f.fns {
+                if d.name == name && !d.in_test {
+                    out.push((f, d));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk(root, &p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_bodies_and_impl_types() {
+        let f = File::parse(
+            "x.rs",
+            "struct S; impl S { fn a(&self) { b(); } }\n\
+             impl Clone for S { fn clone(&self) -> S { S } }\n\
+             fn free(x: [u8; 2]) {}\n\
+             trait T { fn sig(&self); }",
+        );
+        let names: Vec<(&str, Option<&str>)> = f
+            .fns
+            .iter()
+            .map(|d| (d.name.as_str(), d.impl_ty.as_deref()))
+            .collect();
+        assert_eq!(
+            names,
+            vec![("a", Some("S")), ("clone", Some("S")), ("free", None)]
+        );
+    }
+
+    #[test]
+    fn generic_impl_header() {
+        let f = File::parse(
+            "x.rs",
+            "impl<T: Send> Wrapper<T> { fn go(&self) {} }\n\
+             impl<T> From<T> for Sink<T> where T: Sized { fn from(_: T) -> Sink<T> { todo!() } }",
+        );
+        assert_eq!(f.fns[0].impl_ty.as_deref(), Some("Wrapper"));
+        assert_eq!(f.fns[1].impl_ty.as_deref(), Some("Sink"));
+    }
+
+    #[test]
+    fn test_regions_cover_mods_and_fns() {
+        let f = File::parse(
+            "x.rs",
+            "fn prod() { x.unwrap(); }\n\
+             #[cfg(test)]\nmod tests { fn helper() {} #[test] fn t() {} }",
+        );
+        assert!(!f.fns[0].in_test);
+        assert!(f.fns.iter().filter(|d| d.in_test).count() >= 2);
+    }
+
+    #[test]
+    fn cfg_test_on_use_marks_nothing() {
+        let f = File::parse("x.rs", "#[cfg(test)]\nuse std::sync::Mutex;\nfn prod() {}");
+        assert!(f.test_ranges.is_empty());
+        assert!(!f.fns[0].in_test);
+    }
+
+    #[test]
+    fn allow_parsing_line_and_module() {
+        let f = File::parse(
+            "x.rs",
+            "//! docs\n\
+             // lint: allow(indexing, \"whole file is index-checked\")\n\
+             fn a() {\n\
+                 // lint: allow(panic, \"bring-up only\")\n\
+                 x.unwrap();\n\
+             }",
+        );
+        assert_eq!(f.allows.len(), 2);
+        assert!(f.allows[0].module_level);
+        assert!(f.allowed("indexing", 5));
+        assert!(f.allowed("panic", 5)); // line above
+        assert!(f.allowed("panic", 4)); // trailing
+        assert!(!f.allowed("panic", 6));
+        assert!(f.bad_annotations.is_empty());
+    }
+
+    #[test]
+    fn malformed_allows_are_reported() {
+        let f = File::parse(
+            "x.rs",
+            "// lint: allow(panic)\n// lint: allow(panic, \"\")\n\
+             // lint: silence everything\nfn a() {}",
+        );
+        assert_eq!(f.bad_annotations.len(), 3);
+        assert!(f.allows.is_empty());
+    }
+
+    #[test]
+    fn enclosing_fn_picks_innermost() {
+        let f = File::parse("x.rs", "fn outer() { fn inner() { q(); } }");
+        let qi = f.toks.iter().position(|t| t.is_ident("q")).unwrap();
+        assert_eq!(f.enclosing_fn(qi).unwrap().name, "inner");
+    }
+}

@@ -1,0 +1,131 @@
+//! Rule 3 — atomic-ordering audit.
+//!
+//! Two checks per (file, atomic field):
+//!
+//! 1. **Mixed orderings.**  All uses of one field should agree on an
+//!    ordering discipline; a field touched with both `Relaxed` and
+//!    `SeqCst` (say) is either over- or under-synchronized and needs a
+//!    `lint: allow(atomic, "...")` explaining the split.
+//! 2. **Handoff stores.**  A field documented as a cross-thread
+//!    handoff — a comment anywhere in the file saying
+//!    `ordering: handoff(<field>)` — must not be *stored* with
+//!    `Relaxed`: a Relaxed store publishes the flag but not the data
+//!    it guards.  (The swan tree today uses atomics only as
+//!    monotonic counters/gauges, where Relaxed is the documented
+//!    discipline, so it carries no handoff markers.)
+
+use std::collections::BTreeMap;
+
+use crate::model::{Finding, Model};
+
+const ATOMIC_METHODS: &[&str] = &[
+    "store", "load", "swap", "fetch_add", "fetch_sub", "fetch_or", "fetch_and", "fetch_xor",
+    "fetch_max", "fetch_min", "compare_exchange", "compare_exchange_weak", "fetch_update",
+];
+
+#[derive(Clone, Debug)]
+struct Use {
+    ordering: String,
+    method: String,
+    line: u32,
+}
+
+pub fn check(model: &Model) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &model.files {
+        // handoff markers: `ordering: handoff(field)` in comments
+        let mut handoff: Vec<String> = Vec::new();
+        for c in &f.comments {
+            if let Some(rest) = c.text.trim().strip_prefix("ordering: handoff(") {
+                if let Some(field) = rest.strip_suffix(')') {
+                    handoff.push(field.trim().to_string());
+                }
+            }
+        }
+
+        let mut uses: BTreeMap<String, Vec<Use>> = BTreeMap::new();
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if f.in_test(i) {
+                continue;
+            }
+            // ... Ordering :: <ord> ...
+            if !t[i].is_ident("Ordering")
+                || t.get(i + 1).and_then(|x| x.punct()) != Some(':')
+                || t.get(i + 2).and_then(|x| x.punct()) != Some(':')
+            {
+                continue;
+            }
+            let Some(ord) = t.get(i + 3).and_then(|x| x.ident()) else { continue };
+            // walk back for the atomic method this ordering parameterizes
+            let lo = i.saturating_sub(14);
+            let found = (lo..i).rev().find_map(|j| {
+                t[j].ident()
+                    .filter(|m| ATOMIC_METHODS.contains(m))
+                    .map(|m| (j, m.to_string()))
+            });
+            let Some((j, method)) = found else { continue };
+            // field: ident before the `.` preceding the method
+            let field = (j >= 2
+                && t[j - 1].punct() == Some('.')
+                && t[j - 2].ident().is_some())
+            .then(|| t[j - 2].ident().unwrap_or_default().to_string());
+            let Some(field) = field else { continue };
+            uses.entry(field).or_default().push(Use {
+                ordering: ord.to_string(),
+                method,
+                line: t[i + 3].line,
+            });
+        }
+
+        for (field, us) in &uses {
+            // mixed orderings on one field
+            let mut seen: Vec<&str> = Vec::new();
+            for u in us {
+                if !seen.contains(&u.ordering.as_str()) {
+                    seen.push(&u.ordering);
+                    if seen.len() == 2 && !f.allowed("atomic", u.line) {
+                        out.push(Finding {
+                            rule: "atomic",
+                            file: f.path.clone(),
+                            line: u.line,
+                            msg: format!(
+                                "field '{field}' is used with mixed orderings ({}) — \
+                                 pick one discipline or justify with lint: allow(atomic, \"...\")",
+                                {
+                                    let mut all: Vec<&str> =
+                                        us.iter().map(|u| u.ordering.as_str()).collect();
+                                    all.sort_unstable();
+                                    all.dedup();
+                                    all.join(", ")
+                                }
+                            ),
+                        });
+                    }
+                }
+            }
+            // Relaxed store to a declared handoff field
+            if handoff.iter().any(|h| h == field) {
+                for u in us {
+                    let publishes = u.method == "store"
+                        || u.method == "swap"
+                        || u.method.starts_with("fetch_")
+                        || u.method.starts_with("compare_exchange");
+                    if publishes && u.ordering == "Relaxed" && !f.allowed("atomic", u.line) {
+                        out.push(Finding {
+                            rule: "atomic",
+                            file: f.path.clone(),
+                            line: u.line,
+                            msg: format!(
+                                "Relaxed {} to '{field}', which is documented as a \
+                                 cross-thread handoff — use Release (or justify)",
+                                u.method
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,74 @@
+//! Rule 4 — allocation in the decode hot path.
+//!
+//! The per-token decode loop (`decode_step_batch` →
+//! `decode_step_pipeline` → the CSR attention kernels) is the latency
+//! budget of the whole serving stack; SWAN's decompression-free design
+//! exists so this loop touches no scratch allocations beyond the
+//! pre-sized `AttentionScratch`.  This rule flags the unmistakable
+//! allocator calls — `Vec::new`, `.to_vec()`, `.clone()`, `format!`,
+//! `Box::new` — in any function reachable from the decode roots.
+//! Amortized growth (`vec![...]`, `with_capacity`, `collect`) is NOT
+//! flagged: the loop's own buffers legitimately grow once and are
+//! reused.  A deliberate allocation (one-off setup inside a function
+//! that also serves the hot path) carries
+//! `lint: allow(hot_alloc, "...")`.
+
+use crate::callgraph::CallGraph;
+use crate::model::{Finding, Model};
+use crate::rules::locks::DECODE_ROOTS;
+
+pub fn check(model: &Model, cg: &CallGraph) -> Vec<Finding> {
+    let roots = cg.roots_named(DECODE_ROOTS);
+    let seen = cg.reachable(&roots);
+    let mut out = Vec::new();
+    for (id, &(fi, di)) in cg.nodes.iter().enumerate() {
+        if !seen[id] {
+            continue;
+        }
+        let f = &model.files[fi];
+        let d = &f.fns[di];
+        if d.in_test {
+            continue;
+        }
+        let t = &f.toks;
+        for i in d.body.0..d.body.1 {
+            let Some(name) = t[i].ident() else { continue };
+            let next = t.get(i + 1).and_then(|x| x.punct());
+            let construct = match name {
+                // Vec::new( / Box::new(
+                "new" if next == Some('(')
+                    && i >= 3
+                    && t[i - 1].punct() == Some(':')
+                    && t[i - 2].punct() == Some(':')
+                    && t[i - 3].ident().is_some_and(|q| q == "Vec" || q == "Box") =>
+                {
+                    Some(format!("{}::new", t[i - 3].ident().unwrap_or_default()))
+                }
+                // .to_vec( / .clone(
+                "to_vec" | "clone"
+                    if next == Some('(') && i >= 1 && t[i - 1].punct() == Some('.') =>
+                {
+                    Some(format!(".{name}()"))
+                }
+                // format!(
+                "format" if next == Some('!') => Some("format!".to_string()),
+                _ => None,
+            };
+            if let Some(construct) = construct {
+                if !f.allowed("hot_alloc", t[i].line) {
+                    out.push(Finding {
+                        rule: "hot_alloc",
+                        file: f.path.clone(),
+                        line: t[i].line,
+                        msg: format!(
+                            "{construct} in '{}', reachable from the decode hot path — \
+                             reuse scratch or justify with lint: allow(hot_alloc, \"...\")",
+                            d.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}

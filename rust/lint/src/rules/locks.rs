@@ -1,0 +1,350 @@
+//! Rule 2 — lock-order analysis, plus the `.lock().unwrap()` sweep.
+//!
+//! Per function, the rule extracts mutex/rwlock acquisitions — both
+//! the raw `x.lock()` / `x.read()` / `x.write()` spellings and the
+//! poison-recovering `lock_recover(&x)` family — and a conservative
+//! guard-liveness range (a `let`-bound guard lives to the end of its
+//! enclosing block or an explicit `drop(guard)`; an unbound temporary
+//! lives to the end of its statement).  Acquiring lock B while lock A
+//! is live adds edge A → B; calls made while A is live add A → every
+//! lock in the callee's transitive acquisition summary.  Any cycle in
+//! the resulting graph (self-edges included — a re-entrant
+//! `Mutex::lock` self-deadlocks) is a finding, as is any decode-hot-
+//! path function that can reach the metrics *registration* mutex
+//! (`registry::series` — registration is allowed at setup, never per
+//! token).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::callgraph::CallGraph;
+use crate::lexer::Tok;
+use crate::model::{match_open, File, Finding, Model};
+
+/// Functions on the per-token decode path; anything they reach is
+/// "hot" for the registration-mutex check (shared with the hot-alloc
+/// rule's root set).
+pub const DECODE_ROOTS: &[&str] = &[
+    "decode_step_batch",
+    "decode_step_pipeline",
+    "swan_attention_scratch",
+    "dense_attention_scratch",
+    "attend_with",
+    "scores_into_with",
+    "scores_max_into_with",
+    "axpy_all_with",
+];
+
+/// The registration mutex's lock id (see `obs/registry.rs`).
+const REGISTRATION_LOCK: &str = "registry::series";
+
+#[derive(Clone, Debug)]
+struct Acq {
+    lock: String,
+    tok: usize,
+    line: u32,
+    /// Token index the guard is conservatively live until (exclusive).
+    end: usize,
+}
+
+pub fn check(model: &Model, cg: &CallGraph) -> Vec<Finding> {
+    let mut out = lock_unwrap_sweep(model);
+
+    // per-node acquisitions and direct lock-id sets
+    let mut acqs: Vec<Vec<Acq>> = Vec::with_capacity(cg.nodes.len());
+    let mut direct: Vec<BTreeSet<String>> = Vec::with_capacity(cg.nodes.len());
+    for &(fi, di) in &cg.nodes {
+        let f = &model.files[fi];
+        let d = &f.fns[di];
+        let a = if d.in_test { Vec::new() } else { acquisitions(f, d.body) };
+        direct.push(a.iter().map(|x| x.lock.clone()).collect());
+        acqs.push(a);
+    }
+
+    // transitive acquisition summaries (fixpoint over the call graph)
+    let mut summary = direct.clone();
+    loop {
+        let mut changed = false;
+        for id in 0..cg.nodes.len() {
+            for &c in &cg.edges[id] {
+                if c == id {
+                    continue;
+                }
+                let add: Vec<String> =
+                    summary[c].difference(&summary[id]).cloned().collect();
+                if !add.is_empty() {
+                    summary[id].extend(add);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // lock-order edges with provenance: (from, to) -> (file, line)
+    let mut edges: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for (id, &(fi, _di)) in cg.nodes.iter().enumerate() {
+        let f = &model.files[fi];
+        for a in &acqs[id] {
+            // later acquisitions while `a` is live
+            for b in &acqs[id] {
+                if b.tok > a.tok && b.tok < a.end && !f.allowed("lock_order", b.line) {
+                    edges
+                        .entry((a.lock.clone(), b.lock.clone()))
+                        .or_insert((f.path.clone(), b.line));
+                }
+            }
+            // calls made while `a` is live pull in callee summaries
+            for j in a.tok + 1..a.end.min(f.toks.len()) {
+                for c in cg.resolve_call_from(model, fi, j, Some(id)) {
+                    for l in &summary[c] {
+                        if !f.allowed("lock_order", f.toks[j].line) {
+                            edges
+                                .entry((a.lock.clone(), l.clone()))
+                                .or_insert((f.path.clone(), f.toks[j].line));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    out.extend(cycles(&edges));
+    out.extend(hot_path_registration(model, cg, &direct));
+    out
+}
+
+/// `.lock().unwrap()` (and read/write + unwrap/expect) anywhere in the
+/// tree: the poison-recovery helpers exist precisely so no site needs
+/// this spelling.
+fn lock_unwrap_sweep(model: &Model) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &model.files {
+        if f.path == "util/sync.rs" {
+            continue; // the helpers' own docs/tests show the anti-pattern
+        }
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if f.in_test(i) {
+                continue;
+            }
+            let Some(m) = t[i].ident() else { continue };
+            if !matches!(m, "lock" | "read" | "write") {
+                continue;
+            }
+            let shape = i >= 1
+                && t[i - 1].punct() == Some('.')
+                && t.get(i + 1).and_then(|x| x.punct()) == Some('(')
+                && t.get(i + 2).and_then(|x| x.punct()) == Some(')')
+                && t.get(i + 3).and_then(|x| x.punct()) == Some('.')
+                && t.get(i + 4)
+                    .and_then(|x| x.ident())
+                    .is_some_and(|n| n == "unwrap" || n == "expect");
+            if shape && !f.allowed("lock_unwrap", t[i].line) {
+                out.push(Finding {
+                    rule: "lock_unwrap",
+                    file: f.path.clone(),
+                    line: t[i].line,
+                    msg: format!(
+                        ".{m}().unwrap() propagates poisoning into a secondary panic — \
+                         use util::sync::{m}_recover"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Extract lock acquisitions (with liveness) from one fn body.
+fn acquisitions(f: &File, body: (usize, usize)) -> Vec<Acq> {
+    let t = &f.toks;
+    let mut out = Vec::new();
+    for i in body.0..body.1 {
+        let Some(name) = t[i].ident() else { continue };
+        let acq = if matches!(name, "lock_recover" | "read_recover" | "write_recover")
+            && t.get(i + 1).and_then(|x| x.punct()) == Some('(')
+        {
+            // lock_recover(&self.shared.state) -> "state"
+            match_open(t, i + 1, '(', ')').and_then(|close| {
+                t[i + 2..close]
+                    .iter()
+                    .rev()
+                    .find_map(|x| x.ident())
+                    .map(|n| (n.to_string(), i))
+            })
+        } else if matches!(name, "lock" | "read" | "write")
+            && i >= 2
+            && t[i - 1].punct() == Some('.')
+            && t.get(i + 1).and_then(|x| x.punct()) == Some('(')
+            && t.get(i + 2).and_then(|x| x.punct()) == Some(')')
+        {
+            // self.inner.shards.read() -> "shards"
+            t[i - 2].ident().map(|n| (n.to_string(), i))
+        } else {
+            None
+        };
+        let Some((lock_name, at)) = acq else { continue };
+        let lock = format!("{}::{}", f.stem, lock_name);
+        let end = liveness_end(t, at, body.1);
+        out.push(Acq { lock, tok: at, line: t[at].line, end });
+    }
+    out
+}
+
+/// Conservative guard liveness: a `let`-bound guard lives to the end
+/// of its enclosing block (or `drop(name)`); an unbound temporary to
+/// the end of its statement.
+fn liveness_end(t: &[Tok], at: usize, body_end: usize) -> usize {
+    let bound = binding_name(t, at);
+    let mut depth = 0i32;
+    let mut j = at;
+    while j < body_end {
+        match t[j].punct() {
+            Some('{') | Some('(') | Some('[') => depth += 1,
+            Some('}') | Some(')') | Some(']') => {
+                depth -= 1;
+                if depth < 0 && (bound.is_none() || t[j].punct() == Some('}')) {
+                    // enclosing delimiter closed: a temporary dies with
+                    // its expression, a bound guard with its block
+                    return j;
+                }
+            }
+            // statement/arm boundary ends an unbound temporary
+            Some(';') | Some(',') if bound.is_none() && depth <= 0 => return j,
+            _ => {}
+        }
+        if let Some(name) = &bound {
+            // drop(name) ends the guard early
+            if t[j].is_ident("drop")
+                && t.get(j + 1).and_then(|x| x.punct()) == Some('(')
+                && t.get(j + 2).map(|x| x.is_ident(name)).unwrap_or(false)
+                && t.get(j + 3).and_then(|x| x.punct()) == Some(')')
+            {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    body_end
+}
+
+/// If the statement containing `at` starts `let [mut] NAME =`, the
+/// guard's binding name.
+fn binding_name(t: &[Tok], at: usize) -> Option<String> {
+    let lo = at.saturating_sub(12);
+    for j in (lo..at).rev() {
+        match t[j].punct() {
+            Some(';') | Some('{') | Some('}') => return None,
+            _ => {}
+        }
+        if t[j].is_ident("let") {
+            return t[j + 1..at].iter().find_map(|x| {
+                x.ident().filter(|&n| n != "mut").map(|n| n.to_string())
+            });
+        }
+    }
+    None
+}
+
+/// DFS cycle detection over the lock graph; one finding per back edge.
+fn cycles(edges: &BTreeMap<(String, String), (String, u32)>) -> Vec<Finding> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in edges.keys() {
+        adj.entry(from).or_default().push(to);
+    }
+    let mut out = Vec::new();
+    // self-edges first: unconditional deadlocks
+    for ((from, to), (file, line)) in edges {
+        if from == to {
+            out.push(Finding {
+                rule: "lock_order",
+                file: file.clone(),
+                line: *line,
+                msg: format!("lock {from} re-acquired while already held (self-deadlock)"),
+            });
+        }
+    }
+    // cross-lock cycles
+    let mut state: BTreeMap<&str, u8> = BTreeMap::new(); // 1=open, 2=done
+    let mut stack: Vec<&str> = Vec::new();
+    let starts: Vec<&str> = adj.keys().copied().collect();
+    for start in starts {
+        if state.get(start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        dfs(start, &adj, &mut state, &mut stack, edges, &mut out);
+    }
+    out
+}
+
+fn dfs<'a>(
+    n: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a str>>,
+    state: &mut BTreeMap<&'a str, u8>,
+    stack: &mut Vec<&'a str>,
+    edges: &BTreeMap<(String, String), (String, u32)>,
+    out: &mut Vec<Finding>,
+) {
+    state.insert(n, 1);
+    stack.push(n);
+    for &m in adj.get(n).into_iter().flatten() {
+        if m == n {
+            continue; // self-edges reported separately
+        }
+        match state.get(m).copied().unwrap_or(0) {
+            0 => dfs(m, adj, state, stack, edges, out),
+            1 => {
+                let pos = stack.iter().position(|&x| x == m).unwrap_or(0);
+                let mut path: Vec<&str> = stack[pos..].to_vec();
+                path.push(m);
+                let (file, line) = edges
+                    .get(&(n.to_string(), m.to_string()))
+                    .cloned()
+                    .unwrap_or_default();
+                out.push(Finding {
+                    rule: "lock_order",
+                    file,
+                    line,
+                    msg: format!("lock-order cycle: {}", path.join(" -> ")),
+                });
+            }
+            _ => {}
+        }
+    }
+    stack.pop();
+    state.insert(n, 2);
+}
+
+/// Decode-hot-path functions must never reach the registration mutex.
+fn hot_path_registration(
+    model: &Model,
+    cg: &CallGraph,
+    direct: &[BTreeSet<String>],
+) -> Vec<Finding> {
+    let roots = cg.roots_named(DECODE_ROOTS);
+    let seen = cg.reachable(&roots);
+    let mut out = Vec::new();
+    for (id, &(fi, di)) in cg.nodes.iter().enumerate() {
+        if !seen[id] || !direct[id].contains(REGISTRATION_LOCK) {
+            continue;
+        }
+        let f = &model.files[fi];
+        let d = &f.fns[di];
+        if f.allowed("lock_order", d.line) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "lock_order",
+            file: f.path.clone(),
+            line: d.line,
+            msg: format!(
+                "{} acquires the metrics registration mutex ({REGISTRATION_LOCK}) and is \
+                 reachable from the decode hot path — register handles at setup instead",
+                d.name
+            ),
+        });
+    }
+    out
+}

@@ -1,0 +1,35 @@
+//! The five swan-lint rules plus the annotation-grammar check.
+//!
+//! Every rule returns `Vec<Finding>`; a finding's `rule` field is the
+//! `lint: allow(<key>, "...")` key that silences it.  The
+//! annotation-grammar check closes the loop: a `lint:` comment that
+//! does not parse (wrong shape, unknown form, *empty justification*)
+//! is itself a finding, so an allow can never silently rot into a
+//! no-op.
+
+pub mod atomics;
+pub mod hot_alloc;
+pub mod locks;
+pub mod panics;
+pub mod wire;
+
+use crate::model::{Finding, Model};
+
+/// Malformed `lint:` annotations (collected at parse time).
+pub fn annotation_grammar(model: &Model) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &model.files {
+        for (line, why) in &f.bad_annotations {
+            out.push(Finding {
+                rule: "allow_grammar",
+                file: f.path.clone(),
+                line: *line,
+                msg: format!(
+                    "malformed lint annotation ({why}); expected \
+                     lint: allow(<key>, \"<justification>\")"
+                ),
+            });
+        }
+    }
+    out
+}

@@ -1,0 +1,108 @@
+//! Rule 1 — panic-path audit over the *supervised* scope.
+//!
+//! Inside code a shard supervisor owns (`shard/`, `pool/`, and the
+//! decode worker pool `swan/batch.rs`), a panic is a recovery event:
+//! the supervisor converts it into shard-death plus exact replay.
+//! That makes every panic site a deliberate design decision, so each
+//! one must either not exist or carry a
+//! `// lint: allow(panic|indexing, "<why>")` justification.
+//!
+//! Flagged: `.unwrap()` / `.expect(...)`, `panic!(...)`, and direct
+//! indexing `x[i]` (a hidden bounds panic).  Not flagged:
+//! `unreachable!` / `assert!` (spelled invariants), `unwrap_or*`
+//! (non-panicking), and range slicing `&x[a..b]` — a documented
+//! limitation: slice bounds still panic, but ranges are pervasive in
+//! the kernel code and their bounds are the kernels' own loop bounds.
+
+use crate::model::{match_open, Finding, Model};
+
+/// Is `path` (root-relative, `/`-separated) in the supervised scope?
+pub fn supervised(path: &str) -> bool {
+    path.starts_with("shard/") || path.starts_with("pool/") || path == "swan/batch.rs"
+}
+
+pub fn check(model: &Model) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &model.files {
+        if !supervised(&f.path) {
+            continue;
+        }
+        let t = &f.toks;
+        for i in 0..t.len() {
+            if f.in_test(i) {
+                continue;
+            }
+            // `.unwrap(` / `.expect(`
+            if let Some(name) = t[i].ident() {
+                if (name == "unwrap" || name == "expect")
+                    && i >= 1
+                    && t[i - 1].punct() == Some('.')
+                    && t.get(i + 1).and_then(|x| x.punct()) == Some('(')
+                    && !f.allowed("panic", t[i].line)
+                {
+                    out.push(Finding {
+                        rule: "panic",
+                        file: f.path.clone(),
+                        line: t[i].line,
+                        msg: format!(
+                            ".{name}() in supervised scope — make the failure a recovery \
+                             event or justify with lint: allow(panic, \"...\")"
+                        ),
+                    });
+                }
+                // `panic!(` — unreachable!/assert! stay legal
+                if name == "panic"
+                    && t.get(i + 1).and_then(|x| x.punct()) == Some('!')
+                    && !f.allowed("panic", t[i].line)
+                {
+                    out.push(Finding {
+                        rule: "panic",
+                        file: f.path.clone(),
+                        line: t[i].line,
+                        msg: "panic! in supervised scope — justify with \
+                              lint: allow(panic, \"...\")"
+                            .to_string(),
+                    });
+                }
+            }
+            // direct indexing `x[i]`
+            if t[i].punct() == Some('[') && i >= 1 {
+                let prev = &t[i - 1];
+                let indexable_recv = match prev.punct() {
+                    Some(')') | Some(']') => true,
+                    Some(_) => false,
+                    None => prev.ident().is_some_and(|id| id != "mut"),
+                };
+                if indexable_recv && !is_range_index(t, i) && !f.allowed("indexing", t[i].line) {
+                    out.push(Finding {
+                        rule: "indexing",
+                        file: f.path.clone(),
+                        line: t[i].line,
+                        msg: "direct indexing in supervised scope — a hidden bounds panic; \
+                              use get()/get_mut() or justify with lint: allow(indexing, \"...\")"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Does the bracket pair opening at `open` contain a `..` at its own
+/// depth (range slicing, excluded from the indexing rule)?
+fn is_range_index(t: &[crate::lexer::Tok], open: usize) -> bool {
+    let Some(close) = match_open(t, open, '[', ']') else { return false };
+    let mut depth = 0i32;
+    for j in open..close {
+        match t[j].punct() {
+            Some('[') | Some('(') => depth += 1,
+            Some(']') | Some(')') => depth -= 1,
+            Some('.') if depth == 1 && t.get(j + 1).and_then(|x| x.punct()) == Some('.') => {
+                return true;
+            }
+            _ => {}
+        }
+    }
+    false
+}

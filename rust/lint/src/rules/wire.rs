@@ -1,0 +1,188 @@
+//! Rule 5 — wire-protocol drift.
+//!
+//! Three independent statements of protocol v2 must agree on the verb
+//! set (and `SET` subcommands):
+//!
+//! * the server parser (`server/proto.rs`, match arms of `parse_line`),
+//! * the reference client (`server/client.rs`, first word of every
+//!   `writeln!` request literal),
+//! * the README's fenced protocol table (first fence after the
+//!   `## Protocol v2` heading).
+//!
+//! Every pairwise gap is a finding: a verb the server parses that the
+//! client cannot speak, a documented verb the server rejects, and so
+//! on.  This is the drift class PR 7/8 kept hitting by hand (METRICS
+//! and TRACE landed server-side first).
+
+use std::collections::BTreeSet;
+
+use crate::model::{Finding, Model};
+
+#[derive(Debug, Default, PartialEq)]
+pub struct VerbSet {
+    pub verbs: BTreeSet<String>,
+    pub set_subs: BTreeSet<String>,
+}
+
+fn is_verb(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_uppercase() || c == '_')
+}
+
+/// Verbs the server parses: string match arms (`"GEN" => ...`) inside
+/// `parse_line`, plus `Some("sub")` patterns for `SET`.
+pub fn proto_verbs(model: &Model) -> Option<VerbSet> {
+    let f = model.files.iter().find(|f| f.path.ends_with("proto.rs"))?;
+    let d = f.fns.iter().find(|d| d.name == "parse_line")?;
+    let mut out = VerbSet::default();
+    let t = &f.toks;
+    for i in d.body.0..d.body.1 {
+        if let Some(s) = t[i].str_content() {
+            // `"VERB" =>`
+            if is_verb(s)
+                && t.get(i + 1).and_then(|x| x.punct()) == Some('=')
+                && t.get(i + 2).and_then(|x| x.punct()) == Some('>')
+            {
+                out.verbs.insert(s.to_string());
+            }
+            // `Some("sub")`
+            if i >= 2
+                && t[i - 2].is_ident("Some")
+                && t[i - 1].punct() == Some('(')
+                && t.get(i + 1).and_then(|x| x.punct()) == Some(')')
+                && !s.is_empty()
+                && s.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+            {
+                out.set_subs.insert(s.to_string());
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Verbs the reference client can speak: the first word of the first
+/// string literal of each `writeln!` call (template lines like
+/// `"{line}"` are skipped; the keyword-GEN path goes through
+/// `encode_gen`, whose legacy twin `"GEN {max_new} {prompt}"` keeps
+/// GEN visible here).
+pub fn client_verbs(model: &Model) -> Option<VerbSet> {
+    let f = model.files.iter().find(|f| f.path.ends_with("client.rs"))?;
+    let mut out = VerbSet::default();
+    let t = &f.toks;
+    for i in 0..t.len() {
+        if f.in_test(i) {
+            continue;
+        }
+        if !t[i].is_ident("writeln") || t.get(i + 1).and_then(|x| x.punct()) != Some('!') {
+            continue;
+        }
+        let Some(close) = crate::model::match_open(t, i + 2, '(', ')') else { continue };
+        let Some(lit) = t[i + 2..close].iter().find_map(|x| x.str_content()) else { continue };
+        let mut words = lit.split_whitespace();
+        let Some(first) = words.next() else { continue };
+        if !is_verb(first) {
+            continue; // "{line}" template and similar
+        }
+        out.verbs.insert(first.to_string());
+        if first == "SET" {
+            if let Some(sub) = words.next() {
+                if !sub.starts_with('{') {
+                    out.set_subs.insert(sub.to_string());
+                }
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Verbs the README documents: the first fenced code block after the
+/// `## Protocol v2` heading, one request form per line (`|`-separated
+/// alternatives; indented lines are continuations).
+pub fn readme_verbs(readme: &str) -> Option<VerbSet> {
+    let mut out = VerbSet::default();
+    let mut lines = readme.lines();
+    lines.find(|l| {
+        l.starts_with('#') && l.trim_start_matches('#').trim().starts_with("Protocol v2")
+    })?;
+    let mut in_fence = false;
+    let mut saw_fence = false;
+    for l in lines.by_ref() {
+        if l.trim_start().starts_with("```") {
+            if in_fence {
+                break;
+            }
+            in_fence = true;
+            saw_fence = true;
+            continue;
+        }
+        if !in_fence {
+            continue;
+        }
+        if l.starts_with(char::is_whitespace) {
+            continue; // continuation line
+        }
+        let request = l.split("->").next().unwrap_or(l);
+        for alt in request.split('|') {
+            let mut words = alt.split_whitespace();
+            let Some(first) = words.next() else { continue };
+            if !is_verb(first) {
+                continue;
+            }
+            out.verbs.insert(first.to_string());
+            if first == "SET" {
+                if let Some(sub) = words.next() {
+                    if !sub.starts_with('<') && !sub.starts_with('{') {
+                        out.set_subs.insert(sub.to_string());
+                    }
+                }
+            }
+        }
+    }
+    saw_fence.then_some(out)
+}
+
+pub fn check(model: &Model, readme: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let proto = proto_verbs(model);
+    let client = client_verbs(model);
+    let doc = readme.and_then(readme_verbs);
+    let mut sources: Vec<(&str, &VerbSet)> = Vec::new();
+    if let Some(p) = proto.as_ref() {
+        sources.push(("server parser (proto.rs)", p));
+    }
+    if let Some(c) = client.as_ref() {
+        sources.push(("reference client (client.rs)", c));
+    }
+    if let Some(d) = doc.as_ref() {
+        sources.push(("README protocol table", d));
+    }
+    // fewer than two statements of the protocol -> nothing to compare
+    // (fixture models without these files stay silent)
+    if sources.len() < 2 {
+        return out;
+    }
+    for (ai, (aname, a)) in sources.iter().enumerate() {
+        for (bname, b) in sources.iter().skip(ai + 1) {
+            for v in a.verbs.difference(&b.verbs) {
+                out.push(drift(format!("verb {v} is in the {aname} but missing from the {bname}")));
+            }
+            for v in b.verbs.difference(&a.verbs) {
+                out.push(drift(format!("verb {v} is in the {bname} but missing from the {aname}")));
+            }
+            for s in a.set_subs.difference(&b.set_subs) {
+                out.push(drift(format!(
+                    "SET subcommand '{s}' is in the {aname} but missing from the {bname}"
+                )));
+            }
+            for s in b.set_subs.difference(&a.set_subs) {
+                out.push(drift(format!(
+                    "SET subcommand '{s}' is in the {bname} but missing from the {aname}"
+                )));
+            }
+        }
+    }
+    out
+}
+
+fn drift(msg: String) -> Finding {
+    Finding { rule: "wire", file: "server/proto.rs".to_string(), line: 0, msg }
+}

@@ -1,0 +1,341 @@
+//! Fixture self-tests: at least one true-positive and one
+//! true-negative per rule, plus the annotation grammar.  Each fixture
+//! is a tiny in-memory source tree fed through the same
+//! `analyze` entry point `rust/tests/lint_clean.rs` uses, so these
+//! tests pin the analyzer's sensitivity *and* its precision.
+
+use swan_lint::{analyze, Finding, Model};
+
+fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+    analyze(&Model::from_sources(files), None)
+}
+
+fn run_with_readme(files: &[(&str, &str)], readme: &str) -> Vec<Finding> {
+    analyze(&Model::from_sources(files), Some(readme))
+}
+
+fn rules(fs: &[Finding]) -> Vec<&str> {
+    fs.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- rule 1
+
+#[test]
+fn panic_in_supervised_scope_is_flagged() {
+    let fs = run(&[(
+        "shard/worker.rs",
+        "pub fn go(x: Option<u32>) -> u32 { x.unwrap() }",
+    )]);
+    assert_eq!(rules(&fs), ["panic"], "{fs:?}");
+}
+
+#[test]
+fn panic_outside_supervised_scope_is_not_flagged() {
+    let fs = run(&[(
+        "util/worker.rs",
+        "pub fn go(x: Option<u32>) -> u32 { x.unwrap() }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn annotated_panic_is_allowed() {
+    let fs = run(&[(
+        "shard/worker.rs",
+        "pub fn go(x: Option<u32>) -> u32 {\n\
+         // lint: allow(panic, \"fixture: input is pre-validated\")\n\
+         x.unwrap()\n\
+         }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn direct_indexing_in_supervised_scope_is_flagged() {
+    let fs = run(&[(
+        "pool/table.rs",
+        "pub fn head(a: &[u32]) -> u32 { a[0] }",
+    )]);
+    assert_eq!(rules(&fs), ["indexing"], "{fs:?}");
+}
+
+#[test]
+fn range_slicing_is_not_flagged() {
+    let fs = run(&[(
+        "pool/table.rs",
+        "pub fn mid(a: &[u32]) -> &[u32] { &a[1..3] }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+// ---------------------------------------------------------------- rule 2
+
+#[test]
+fn lock_order_cycle_is_flagged() {
+    let fs = run(&[(
+        "sync/pair.rs",
+        "pub struct S { a: std::sync::Mutex<u32>, b: std::sync::Mutex<u32> }\n\
+         impl S {\n\
+         pub fn ab(&self) { let ga = lock_recover(&self.a); \
+         let gb = lock_recover(&self.b); drop(gb); drop(ga); }\n\
+         pub fn ba(&self) { let gb = lock_recover(&self.b); \
+         let ga = lock_recover(&self.a); drop(ga); drop(gb); }\n\
+         }",
+    )]);
+    assert_eq!(rules(&fs), ["lock_order"], "{fs:?}");
+    assert!(fs[0].msg.contains("cycle"), "{fs:?}");
+}
+
+#[test]
+fn consistent_lock_order_is_not_flagged() {
+    let fs = run(&[(
+        "sync/pair.rs",
+        "pub struct S { a: std::sync::Mutex<u32>, b: std::sync::Mutex<u32> }\n\
+         impl S {\n\
+         pub fn ab(&self) { let ga = lock_recover(&self.a); \
+         let gb = lock_recover(&self.b); drop(gb); drop(ga); }\n\
+         pub fn ab2(&self) { let ga = lock_recover(&self.a); \
+         let gb = lock_recover(&self.b); drop(gb); drop(ga); }\n\
+         }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn reentrant_acquisition_is_a_self_deadlock() {
+    let fs = run(&[(
+        "sync/reent.rs",
+        "pub struct S { a: std::sync::Mutex<u32> }\n\
+         impl S {\n\
+         pub fn twice(&self) { let g1 = lock_recover(&self.a); \
+         let g2 = lock_recover(&self.a); drop(g2); drop(g1); }\n\
+         }",
+    )]);
+    assert_eq!(rules(&fs), ["lock_order"], "{fs:?}");
+    assert!(fs[0].msg.contains("self-deadlock"), "{fs:?}");
+}
+
+#[test]
+fn lock_unwrap_is_flagged_anywhere() {
+    let fs = run(&[(
+        "net/conn.rs",
+        "pub fn peek(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }",
+    )]);
+    assert_eq!(rules(&fs), ["lock_unwrap"], "{fs:?}");
+}
+
+#[test]
+fn lock_recover_spelling_is_not_flagged() {
+    let fs = run(&[(
+        "net/conn.rs",
+        "pub fn peek(m: &std::sync::Mutex<u32>) -> u32 { *lock_recover(m) }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn decode_path_reaching_registration_mutex_is_flagged() {
+    let fs = run(&[
+        (
+            "obs/registry.rs",
+            "pub struct Registry { series: std::sync::Mutex<u32> }\n\
+             impl Registry {\n\
+             pub fn register(&self) -> u32 { let g = lock_recover(&self.series); *g }\n\
+             }",
+        ),
+        (
+            "model/transformer.rs",
+            "pub fn decode_step_batch(r: &Registry) { r.register(); }",
+        ),
+    ]);
+    assert_eq!(rules(&fs), ["lock_order"], "{fs:?}");
+    assert!(fs[0].msg.contains("registration mutex"), "{fs:?}");
+}
+
+// ---------------------------------------------------------------- rule 3
+
+#[test]
+fn mixed_atomic_orderings_on_one_field_are_flagged() {
+    let fs = run(&[(
+        "obs/counter.rs",
+        "use std::sync::atomic::{AtomicUsize, Ordering};\n\
+         pub struct S { head: AtomicUsize }\n\
+         impl S {\n\
+         pub fn put(&self) { self.head.store(1, Ordering::Release); }\n\
+         pub fn get(&self) -> usize { self.head.load(Ordering::Relaxed) }\n\
+         }",
+    )]);
+    assert_eq!(rules(&fs), ["atomic"], "{fs:?}");
+    assert!(fs[0].msg.contains("mixed orderings"), "{fs:?}");
+}
+
+#[test]
+fn uniform_atomic_orderings_are_not_flagged() {
+    let fs = run(&[(
+        "obs/counter.rs",
+        "use std::sync::atomic::{AtomicUsize, Ordering};\n\
+         pub struct S { head: AtomicUsize }\n\
+         impl S {\n\
+         pub fn put(&self) { self.head.store(1, Ordering::Relaxed); }\n\
+         pub fn get(&self) -> usize { self.head.load(Ordering::Relaxed) }\n\
+         }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn relaxed_store_to_declared_handoff_field_is_flagged() {
+    let fs = run(&[(
+        "obs/flag.rs",
+        "// ordering: handoff(ready)\n\
+         use std::sync::atomic::{AtomicBool, Ordering};\n\
+         pub struct S { ready: AtomicBool }\n\
+         impl S {\n\
+         pub fn publish(&self) { self.ready.store(true, Ordering::Relaxed); }\n\
+         }",
+    )]);
+    assert_eq!(rules(&fs), ["atomic"], "{fs:?}");
+    assert!(fs[0].msg.contains("handoff"), "{fs:?}");
+}
+
+#[test]
+fn release_store_to_handoff_field_is_not_flagged() {
+    let fs = run(&[(
+        "obs/flag.rs",
+        "// ordering: handoff(ready)\n\
+         use std::sync::atomic::{AtomicBool, Ordering};\n\
+         pub struct S { ready: AtomicBool }\n\
+         impl S {\n\
+         pub fn publish(&self) { self.ready.store(true, Ordering::Release); }\n\
+         }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+// ---------------------------------------------------------------- rule 4
+
+#[test]
+fn allocation_reachable_from_decode_root_is_flagged() {
+    let fs = run(&[(
+        "model/step.rs",
+        "pub fn decode_step_batch() -> Vec<u32> { helper() }\n\
+         fn helper() -> Vec<u32> { Vec::new() }",
+    )]);
+    assert_eq!(rules(&fs), ["hot_alloc"], "{fs:?}");
+}
+
+#[test]
+fn allocation_off_the_decode_path_is_not_flagged() {
+    let fs = run(&[(
+        "model/step.rs",
+        "pub fn setup() -> Vec<u32> { Vec::new() }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn annotated_hot_allocation_is_allowed() {
+    let fs = run(&[(
+        "model/step.rs",
+        "pub fn decode_step_batch() -> Vec<u32> {\n\
+         // lint: allow(hot_alloc, \"fixture: empty Vec::new() does not allocate\")\n\
+         Vec::new()\n\
+         }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+// ---------------------------------------------------------------- rule 5
+
+const PROTO_GEN_PING: &str = "pub fn parse_line(line: &str) -> u32 {\n\
+     match line {\n\
+     \"GEN\" => 1,\n\
+     \"PING\" => 2,\n\
+     _ => 0,\n\
+     }\n\
+     }";
+
+#[test]
+fn wire_verb_missing_from_client_is_flagged() {
+    let fs = run(&[
+        ("server/proto.rs", PROTO_GEN_PING),
+        (
+            "server/client.rs",
+            "use std::io::Write;\n\
+             pub fn send(w: &mut std::net::TcpStream) { writeln!(w, \"GEN 8 hi\").ok(); }",
+        ),
+    ]);
+    assert_eq!(rules(&fs), ["wire"], "{fs:?}");
+    assert!(fs[0].msg.contains("PING"), "{fs:?}");
+}
+
+#[test]
+fn agreeing_wire_statements_are_not_flagged() {
+    let fs = run(&[
+        ("server/proto.rs", PROTO_GEN_PING),
+        (
+            "server/client.rs",
+            "use std::io::Write;\n\
+             pub fn send(w: &mut std::net::TcpStream) {\n\
+             writeln!(w, \"GEN 8 hi\").ok();\n\
+             writeln!(w, \"PING\").ok();\n\
+             }",
+        ),
+    ]);
+    assert!(fs.is_empty(), "{fs:?}");
+}
+
+#[test]
+fn readme_drift_is_flagged_against_both_code_statements() {
+    let readme = "# swan\n\n## Protocol v2 (wire)\n\n```\nGEN <max_new> <prompt> -> STREAM\n```\n";
+    let fs = run_with_readme(
+        &[
+            ("server/proto.rs", PROTO_GEN_PING),
+            (
+                "server/client.rs",
+                "use std::io::Write;\n\
+                 pub fn send(w: &mut std::net::TcpStream) {\n\
+                 writeln!(w, \"GEN 8 hi\").ok();\n\
+                 writeln!(w, \"PING\").ok();\n\
+                 }",
+            ),
+        ],
+        readme,
+    );
+    // PING is missing from the README vs both the parser and the client
+    assert_eq!(rules(&fs), ["wire", "wire"], "{fs:?}");
+    assert!(fs.iter().all(|f| f.msg.contains("PING") && f.msg.contains("README")), "{fs:?}");
+}
+
+// ------------------------------------------------------- annotation grammar
+
+#[test]
+fn annotation_without_justification_is_a_finding() {
+    let fs = run(&[(
+        "util/x.rs",
+        "// lint: allow(panic)\n\
+         pub fn f() {}",
+    )]);
+    assert_eq!(rules(&fs), ["allow_grammar"], "{fs:?}");
+}
+
+#[test]
+fn annotation_with_empty_justification_is_a_finding() {
+    let fs = run(&[(
+        "util/x.rs",
+        "// lint: allow(panic, \"  \")\n\
+         pub fn f() {}",
+    )]);
+    assert_eq!(rules(&fs), ["allow_grammar"], "{fs:?}");
+}
+
+#[test]
+fn module_level_annotation_covers_the_whole_file() {
+    let fs = run(&[(
+        "shard/worker.rs",
+        "// lint: allow(panic, \"fixture: whole-file waiver\")\n\
+         pub fn a(x: Option<u32>) -> u32 { x.unwrap() }\n\
+         pub fn b(x: Option<u32>) -> u32 { x.unwrap() }",
+    )]);
+    assert!(fs.is_empty(), "{fs:?}");
+}

@@ -13,6 +13,7 @@ use std::sync::{Arc, Mutex};
 use crate::obs::histogram::Histogram;
 use crate::obs::registry::{Counter, Gauge, Registry};
 use crate::util::stats::Summary;
+use crate::util::sync::lock_recover;
 
 /// Fixed-size latency reservoir keeping the most recent N samples in a
 /// ring: when full, the oldest sample is overwritten in place — O(1),
@@ -36,7 +37,7 @@ impl Reservoir {
     }
 
     pub fn record(&self, ns: f64) {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         if r.buf.len() < self.cap {
             r.buf.push(ns);
         } else {
@@ -49,7 +50,7 @@ impl Reservoir {
     /// Summary over the retained (most recent N) samples. Order within
     /// the ring is irrelevant: `Summary::from_ns` sorts.
     pub fn summary(&self) -> Option<Summary> {
-        let r = self.inner.lock().unwrap();
+        let r = lock_recover(&self.inner);
         if r.buf.is_empty() {
             None
         } else {

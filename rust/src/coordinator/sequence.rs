@@ -153,7 +153,9 @@ impl SeqCache {
             for l in 0..nl {
                 for h in 0..nkv {
                     let b0 = self.buf_off(l, h, 0);
+                    // lint: allow(hot_alloc, "one d_h-row copy per eviction (not per token); copy_within below needs the source unborrowed")
                     let k_old: Vec<f32> = self.kbuf[b0..b0 + dh].to_vec();
+                    // lint: allow(hot_alloc, "see k_old above — paired eviction copy")
                     let v_old: Vec<f32> = self.vbuf[b0..b0 + dh].to_vec();
                     self.write_sparse(l, h, t, &k_old, &v_old);
                     // shift the ring left one slot

@@ -521,6 +521,7 @@ impl SwanModel {
                 assert_eq!(states.len(), tokens.len(), "one token per sequence");
                 tokens
                     .iter()
+                    // lint: allow(hot_alloc, "the embedding row is copied once per token to seed the owned hidden state that flows through DecodeWork")
                     .map(|&tok| self.embed[tok as usize * d..(tok as usize + 1) * d].to_vec())
                     .collect()
             }
@@ -549,6 +550,7 @@ impl SwanModel {
             })
             .collect();
 
+        // lint: allow(hot_alloc, "Range<usize>::clone is two usizes on the stack, not a heap allocation")
         for (li, l) in layers.clone().enumerate() {
             let lw = &self.layers[l];
             // 1. per-sequence projections into rotated q̂/k̂/v̂

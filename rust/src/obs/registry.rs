@@ -11,6 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::histogram::{HistSnapshot, Histogram};
+use crate::util::sync::lock_recover;
 
 /// Monotone atomic counter.
 #[derive(Debug, Default)]
@@ -129,7 +130,7 @@ impl Registry {
     /// with the same identity return the same handle.
     pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
         let labels = labels_of(labels);
-        let mut series = self.series.lock().unwrap();
+        let mut series = lock_recover(&self.series);
         for s in series.iter() {
             if s.name == name && s.labels == labels {
                 if let Metric::Counter(c) = &s.metric {
@@ -149,7 +150,7 @@ impl Registry {
     /// Get-or-register a gauge under `name` + `labels`.
     pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
         let labels = labels_of(labels);
-        let mut series = self.series.lock().unwrap();
+        let mut series = lock_recover(&self.series);
         for s in series.iter() {
             if s.name == name && s.labels == labels {
                 if let Metric::Gauge(g) = &s.metric {
@@ -165,7 +166,7 @@ impl Registry {
     /// Get-or-register a histogram under `name` + `labels`.
     pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
         let labels = labels_of(labels);
-        let mut series = self.series.lock().unwrap();
+        let mut series = lock_recover(&self.series);
         for s in series.iter() {
             if s.name == name && s.labels == labels {
                 if let Metric::Histogram(h) = &s.metric {
@@ -184,7 +185,7 @@ impl Registry {
 
     /// Snapshot every registered series (export path).
     pub fn snapshot(&self) -> Vec<SeriesSnapshot> {
-        let series = self.series.lock().unwrap();
+        let series = lock_recover(&self.series);
         series
             .iter()
             .map(|s| SeriesSnapshot {
@@ -205,7 +206,7 @@ impl Registry {
     /// reentrant), so a completing closure proves recording is
     /// registry-lock-free. See `tests/obs.rs`.
     pub fn with_registration_locked(&self, f: impl FnOnce()) {
-        let _guard = self.series.lock().unwrap();
+        let _guard = lock_recover(&self.series);
         f();
     }
 }

@@ -14,6 +14,8 @@ use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::sync::lock_recover;
+
 /// Cap on events per trace: a preempted long generation records one
 /// `Decode` event per committed token, so bound the vector and count
 /// drops instead of growing without limit.
@@ -169,7 +171,7 @@ impl TraceRing {
 
     /// Retain `trace`, evicting the oldest retained trace when full.
     pub fn push(&self, trace: Trace) {
-        let mut ring = self.inner.lock().unwrap();
+        let mut ring = lock_recover(&self.inner);
         if ring.len() == self.cap {
             ring.pop_front();
         }
@@ -178,12 +180,12 @@ impl TraceRing {
 
     /// JSONL timeline for request `id`, if still retained.
     pub fn jsonl(&self, id: u64) -> Option<String> {
-        let ring = self.inner.lock().unwrap();
+        let ring = lock_recover(&self.inner);
         ring.iter().rev().find(|t| t.id == id).map(|t| t.jsonl())
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        lock_recover(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {

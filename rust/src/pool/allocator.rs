@@ -5,6 +5,8 @@
 //! always 1 under today's serving paths; `retain` exists as the
 //! copy-on-write hook prefix sharing will build on (see ROADMAP).
 
+// lint: allow(indexing, "every index is an allocator-issued id into the self-owned refcounts vec, dense 0..capacity by construction; check_invariants locks the correspondence and tests/prop_invariants.rs exercises it")
+
 /// Fixed-universe id allocator with a LIFO free list and per-id
 /// refcounts.  Ids are dense `0..capacity`; [`BlockAllocator::grow_one`]
 /// extends the universe when an elastic pool leases past its initial

@@ -124,6 +124,7 @@ impl BlockTable {
     pub fn push_block(&mut self) -> &mut BlockBuf {
         let b = self.pool.lease();
         self.blocks.push(b);
+        // lint: allow(panic, "last_mut() of a vec pushed to on the previous line is always Some")
         self.blocks.last_mut().unwrap()
     }
 
@@ -136,6 +137,7 @@ impl BlockTable {
     }
 
     pub fn get_mut(&mut self, i: usize) -> &mut BlockBuf {
+        // lint: allow(indexing, "callers derive i from rows/block_tokens over this table's own row count; tests/pool.rs locks the geometry")
         &mut self.blocks[i]
     }
 

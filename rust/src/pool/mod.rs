@@ -51,6 +51,7 @@ use std::time::Instant;
 
 use crate::obs::histogram::Histogram;
 use crate::obs::registry::Registry;
+use crate::util::sync::lock_recover;
 
 /// Optional pool-latency instruments: how long `lease` / `give_back`
 /// spend inside the pool (lock wait + free-list work).  Recording is a
@@ -101,6 +102,7 @@ pub struct BlockBuf {
 
 impl BlockBuf {
     fn fresh(id: u32) -> BlockBuf {
+        // lint: allow(hot_alloc, "empty Vec::new() does not allocate; block setup is amortized over block_rows tokens")
         BlockBuf { id, vals: Vec::new(), idx: Vec::new(), offsets: vec![0], nnz: Vec::new(), bytes: 0 }
     }
 
@@ -161,7 +163,7 @@ impl BlockPool {
     /// buffer is owned by the caller until [`BlockPool::give_back`].
     pub fn lease(&self) -> BlockBuf {
         let t0 = self.obs.as_ref().map(|_| Instant::now());
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let id = g.alloc.alloc_grow();
         let buf = match g.spare.pop() {
             Some(mut b) => {
@@ -181,7 +183,7 @@ impl BlockPool {
     /// Return a leased block; its id frees and its storage recycles.
     pub fn give_back(&self, buf: BlockBuf) {
         let t0 = self.obs.as_ref().map(|_| Instant::now());
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         if g.alloc.release(buf.id) {
             g.spare.push(buf);
         }
@@ -204,7 +206,7 @@ impl BlockPool {
 
     /// Allocator invariants plus gauge consistency (tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         g.alloc.check_invariants()?;
         if g.alloc.live() != self.leased.load(Ordering::Relaxed) {
             return Err(format!(

@@ -16,6 +16,7 @@ use anyhow::Context;
 
 use crate::model::weights::{TensorData, WeightFile};
 use crate::runtime::artifacts::{ArtifactStore, GraphMeta};
+use crate::util::sync::lock_recover;
 
 /// A host-side tensor fed to / read from a graph.
 #[derive(Clone, Debug, PartialEq)]
@@ -132,7 +133,7 @@ impl Runtime {
         wf: &WeightFile,
         param_names: &[String],
     ) -> anyhow::Result<()> {
-        let mut guard = self.weights.lock().unwrap();
+        let mut guard = lock_recover(&self.weights);
         if guard.contains_key(model) {
             return Ok(());
         }
@@ -155,7 +156,7 @@ impl Runtime {
 
     fn compile(&self, model: &str, graph: &str, meta: &GraphMeta) -> anyhow::Result<std::sync::Arc<CompiledGraph>> {
         {
-            let guard = self.compiled.lock().unwrap();
+            let guard = lock_recover(&self.compiled);
             if let Some(c) = guard.get(&(model.to_string(), graph.to_string())) {
                 return Ok(c.clone());
             }
@@ -166,9 +167,7 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {graph}: {e:?}"))?;
         let compiled = std::sync::Arc::new(CompiledGraph { exe, n_params: meta.param_names.len() });
-        self.compiled
-            .lock()
-            .unwrap()
+        lock_recover(&self.compiled)
             .insert((model.to_string(), graph.to_string()), compiled.clone());
         Ok(compiled)
     }
@@ -180,7 +179,7 @@ impl Runtime {
 
     /// Number of compiled graphs currently cached.
     pub fn compiled_count(&self) -> usize {
-        self.compiled.lock().unwrap().len()
+        lock_recover(&self.compiled).len()
     }
 
     /// Execute `graph` of `model`: weight buffers (if the graph takes
@@ -232,7 +231,7 @@ impl Runtime {
             });
         }
         let out = if compiled.n_params > 0 {
-            let wguard = self.weights.lock().unwrap();
+            let wguard = lock_recover(&self.weights);
             let weights = wguard
                 .get(model)
                 .ok_or_else(|| anyhow::anyhow!("weights for '{model}' not uploaded"))?

@@ -119,6 +119,41 @@ impl Client {
         }
     }
 
+    /// Fetch the Prometheus text exposition (`METRICS`); the server
+    /// terminates the block with a `# EOF` comment line, which is not
+    /// included in the returned text.
+    pub fn metrics(&mut self) -> anyhow::Result<String> {
+        writeln!(self.writer, "METRICS")?;
+        let mut out = String::new();
+        loop {
+            let l = self.line()?;
+            if l == "# EOF" {
+                return Ok(out);
+            }
+            out.push_str(&l);
+            out.push('\n');
+        }
+    }
+
+    /// Fetch a retained request trace as JSONL (`TRACE <id>`);
+    /// `Ok(None)` when the server no longer holds the id.
+    pub fn trace(&mut self, id: u64) -> anyhow::Result<Option<String>> {
+        writeln!(self.writer, "TRACE {id}")?;
+        let mut l = self.line()?;
+        if l.starts_with("ERR ") {
+            return Ok(None);
+        }
+        let mut out = String::new();
+        loop {
+            if l == "." {
+                return Ok(Some(out));
+            }
+            out.push_str(&l);
+            out.push('\n');
+            l = self.line()?;
+        }
+    }
+
     /// Legacy-spelled generation; returns (text, stats).
     pub fn generate(&mut self, prompt: &str, max_new: usize) -> anyhow::Result<(String, GenStats)> {
         anyhow::ensure!(!prompt.contains('\n'), "prompt must be single-line");

@@ -28,6 +28,7 @@ use crate::coordinator::request::{Request, Response};
 use crate::server::proto::{parse_line, Command};
 use crate::shard::balance::policy_from_name;
 use crate::shard::{Router, ShardLostError};
+use crate::util::sync::lock_recover;
 
 /// In-flight generations of one connection: id → cancel token.  Entries
 /// are removed by the pump thread at terminal events; anything left when
@@ -43,7 +44,7 @@ fn write_done(
     resp: &Response,
     max_new_cap: usize,
 ) -> std::io::Result<()> {
-    let mut w = writer.lock().unwrap();
+    let mut w = lock_recover(writer);
     if resp.stats.clamped_from.is_some() {
         writeln!(w, "OK {} clamped={} {}", resp.id, max_new_cap, resp.text)?;
     } else {
@@ -93,21 +94,21 @@ fn pump_generation(
         let ev = match handle.recv() {
             Ok(ev) => ev,
             Err(_) => {
-                let _ = writeln!(writer.lock().unwrap(), "ERR unavailable shard gone");
+                let _ = writeln!(lock_recover(&writer), "ERR unavailable shard gone");
                 break;
             }
         };
         let write_res = match &ev {
             Event::Token { id, text, .. } => {
-                writeln!(writer.lock().unwrap(), "TOK {id} {text}")
+                writeln!(lock_recover(&writer), "TOK {id} {text}")
             }
             Event::Done(resp) => write_done(&writer, resp, max_new_cap),
             Event::Error { message, .. } => {
                 // a recovery that found no healthy shard is a fleet
                 // condition, not a generation bug — distinct ERR code
                 match message.strip_prefix("shard_lost: ") {
-                    Some(rest) => writeln!(writer.lock().unwrap(), "ERR shard_lost {rest}"),
-                    None => writeln!(writer.lock().unwrap(), "ERR generation {message}"),
+                    Some(rest) => writeln!(lock_recover(&writer), "ERR shard_lost {rest}"),
+                    None => writeln!(lock_recover(&writer), "ERR generation {message}"),
                 }
             }
         };
@@ -121,7 +122,7 @@ fn pump_generation(
             break;
         }
     }
-    inflight.lock().unwrap().remove(&id);
+    lock_recover(&inflight).remove(&id);
 }
 
 fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
@@ -147,11 +148,11 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
         match parse_line(&line) {
             Ok(Command::Quit) => break,
             Ok(Command::Ping) => {
-                let _ = writeln!(writer.lock().unwrap(), "PONG");
+                let _ = writeln!(lock_recover(&writer), "PONG");
             }
             Ok(Command::Stats) => {
                 let s = router.stats();
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_recover(&writer);
                 let _ = write!(w, "{s}");
                 let _ = writeln!(w, ".");
             }
@@ -159,19 +160,19 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                 // Prometheus text exposition; `# EOF` terminates the
                 // response (a comment line, so scrapers parse it away)
                 let m = router.metrics_text();
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_recover(&writer);
                 let _ = write!(w, "{m}");
                 let _ = writeln!(w, "# EOF");
             }
             Ok(Command::Trace(id)) => match router.trace_jsonl(id) {
                 Some(j) => {
-                    let mut w = writer.lock().unwrap();
+                    let mut w = lock_recover(&writer);
                     let _ = write!(w, "{j}");
                     let _ = writeln!(w, ".");
                 }
                 None => {
                     let _ = writeln!(
-                        writer.lock().unwrap(),
+                        lock_recover(&writer),
                         "ERR not-found no trace retained for request {id}"
                     );
                 }
@@ -181,22 +182,22 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                     Ok(_) => "OK".to_string(),
                     Err(e) => format!("ERR unavailable {e}"),
                 };
-                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+                let _ = writeln!(lock_recover(&writer), "{reply}");
             }
             Ok(Command::SetBalance(name)) => match policy_from_name(&name) {
                 Ok(policy) => {
                     router.set_policy(policy);
-                    let _ = writeln!(writer.lock().unwrap(), "OK");
+                    let _ = writeln!(lock_recover(&writer), "OK");
                 }
                 Err(e) => {
-                    let _ = writeln!(writer.lock().unwrap(), "ERR bad-args {e}");
+                    let _ = writeln!(lock_recover(&writer), "ERR bad-args {e}");
                 }
             },
             Ok(Command::Gen { params, prompt }) => {
                 let req = Request::with_params(0, &prompt, params);
                 match router.submit(req) {
                     Ok(handle) => {
-                        inflight.lock().unwrap().insert(handle.id(), handle.cancel_token());
+                        lock_recover(&inflight).insert(handle.id(), handle.cancel_token());
                         let writer = writer.clone();
                         let inflight = inflight.clone();
                         std::thread::spawn(move || {
@@ -210,7 +211,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                         } else {
                             "unavailable"
                         };
-                        let _ = writeln!(writer.lock().unwrap(), "ERR {code} {e}");
+                        let _ = writeln!(lock_recover(&writer), "ERR {code} {e}");
                     }
                 }
             }
@@ -219,20 +220,20 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                     Ok(n) => format!("OK shards={n}"),
                     Err(e) => format!("ERR bad-args {e}"),
                 };
-                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+                let _ = writeln!(lock_recover(&writer), "{reply}");
             }
             Ok(Command::Drain(id)) => {
                 let reply = match router.drain(id) {
                     Ok(()) => "OK".to_string(),
                     Err(e) => format!("ERR bad-args {e}"),
                 };
-                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+                let _ = writeln!(lock_recover(&writer), "{reply}");
             }
             Ok(Command::Cancel(id)) => {
                 // a generation of this connection cancels directly via
                 // its token; other ids go through the router broadcast
                 // (unknown ids no-op on every shard)
-                let local = inflight.lock().unwrap().get(&id).cloned();
+                let local = lock_recover(&inflight).get(&id).cloned();
                 let ok = match local {
                     Some(tok) => {
                         tok.cancel();
@@ -244,19 +245,19 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                     Ok(()) => "OK".to_string(),
                     Err(e) => format!("ERR unavailable {e}"),
                 };
-                let _ = writeln!(writer.lock().unwrap(), "{reply}");
+                let _ = writeln!(lock_recover(&writer), "{reply}");
             }
             Err(e) => {
                 // structured reply; the connection stays open
                 proto_errors.inc();
-                let _ = writeln!(writer.lock().unwrap(), "ERR {} {e}", e.code());
+                let _ = writeln!(lock_recover(&writer), "ERR {} {e}", e.code());
             }
         }
     }
     // reader gone (QUIT, EOF or socket error): whatever is still
     // in-flight belongs to a client that will never read the reply —
     // cancel it so abandoned requests stop burning decode slots
-    for tok in inflight.lock().unwrap().values() {
+    for tok in lock_recover(&inflight).values() {
         tok.cancel();
     }
     log::info!("connection {peer} closed");

@@ -34,6 +34,8 @@
 //! the PJRT graphs instead — across that backend boundary outputs agree
 //! to float tolerance, not bit-for-bit.
 
+// lint: allow(indexing, "stage/sequence indices here come from membership scans computed lines above (running/ready sets over self.active, stages[0] of a non-empty chain); a bad index is a coordinator bug the supervised group converts into shard-death + recovery")
+
 use std::collections::{HashMap, VecDeque};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -291,6 +293,7 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                     .iter()
                     .map(|id| {
                         seqs.remove(id).unwrap_or_else(|| {
+                            // lint: allow(panic, "stage-protocol invariant (coordinator forwards only prefilled ids); the supervised stage turns this panic into StageFailed -> shard-death + recovery instead of silent corruption")
                             panic!("stage {stage} has no state for sequence {id}")
                         })
                     })
@@ -818,7 +821,8 @@ impl Group {
                 self.obs.preempt_wait_seconds.record(c.preempted_at.elapsed());
                 let mut replay: VecDeque<u32> = c.produced.iter().copied().collect();
                 let next_token =
-                    replay.pop_front().expect("a preempted sequence produced >= 1 token");
+                    // lint: allow(panic, "preemption only evicts running sequences, which hold >= 1 produced token by the admission contract; a violation is coordinator state corruption the supervisor recovers from")
+                replay.pop_front().expect("a preempted sequence produced >= 1 token");
                 self.obs.replay_tokens.record_value(replay.len() as u64);
                 self.active.push(GroupSeq {
                     rng: c.rng,
@@ -1085,6 +1089,7 @@ impl Group {
                     .rev()
                     .copied()
                     .find(|&i| self.active[i].stats.preemptions < MAX_PREEMPTIONS)
+                    // lint: allow(panic, "running.len() > 1 is guaranteed by the break two lines up, so last() is always Some")
                     .unwrap_or(*running.last().unwrap());
                 self.preempt(victim)?;
             }
@@ -1508,6 +1513,7 @@ pub fn launch_group_with(
         let join = std::thread::Builder::new()
             .name(format!("swan-stage-{id}-{s}"))
             .spawn(move || stage_loop(ctx, rx))
+            // lint: allow(panic, "group bring-up, before the handle joins the fleet: no request has been placed on a group whose stages never spawned")
             .expect("spawning pipeline stage thread");
         next = Some((tx.clone(), status.clone()));
         stages.push(StageHandle { tx, status, join: Some(join) });
@@ -1552,6 +1558,7 @@ pub fn launch_group_with(
     let join = std::thread::Builder::new()
         .name(format!("swan-pipegroup-{id}"))
         .spawn(move || group_loop(group, rx, &thread_status, hooks))
+        // lint: allow(panic, "group bring-up, before the handle joins the fleet: no request has been placed on a group whose coordinator never spawned")
         .expect("spawning pipeline group thread");
     Ok(ShardHandle::from_parts(id, tx, status, metrics, Some(join)))
 }

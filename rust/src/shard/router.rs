@@ -48,6 +48,7 @@ use crate::shard::balance::{policy_from_name, BalancePolicy};
 use crate::shard::shard::{ShardCmd, ShardHandle};
 use crate::shard::supervisor::{FaultPlan, FleetEvent, RecoveredReq, ShardHooks, ShardLostError};
 use crate::shard::{ShardSnapshot, ShardState};
+use crate::util::sync::{lock_recover, read_recover, write_recover};
 use crate::util::Pcg64;
 
 /// Bounded placement retry: how many distinct healthy shards `submit`
@@ -127,14 +128,15 @@ impl RouterInner {
     /// no healthy member.  Policies only ever see healthy snapshots, so
     /// they stay lifecycle-oblivious (see `balance`).
     fn place_healthy(&self) -> Option<Arc<ShardHandle>> {
-        let shards = self.shards.read().unwrap();
+        let shards = read_recover(&self.shards);
         let healthy: Vec<&Arc<ShardHandle>> =
             shards.iter().filter(|s| s.status.state() == ShardState::Healthy).collect();
         if healthy.is_empty() {
             return None;
         }
         let snaps: Vec<ShardSnapshot> = healthy.iter().map(|s| s.snapshot()).collect();
-        let pick = self.policy.lock().unwrap().pick(&snaps);
+        let pick = lock_recover(&self.policy).pick(&snaps);
+        // lint: allow(indexing, "clamped to len-1 after the non-empty check above; a rogue policy pick cannot go out of bounds")
         Some(healthy[pick.min(healthy.len() - 1)].clone())
     }
 
@@ -143,7 +145,7 @@ impl RouterInner {
     /// write lock is released.
     fn remove_shard(&self, id: usize) {
         let removed = {
-            let mut shards = self.shards.write().unwrap();
+            let mut shards = write_recover(&self.shards);
             shards.iter().position(|s| s.id == id).map(|pos| shards.remove(pos))
         };
         drop(removed);
@@ -256,6 +258,7 @@ impl Router {
                         engine.warmup()?;
                         Ok(engine)
                     })
+                    // lint: allow(panic, "fleet bring-up, before any request is admitted: a host that cannot spawn threads cannot launch the fleet")
                     .expect("spawning shard launch thread")
             })
             .collect();
@@ -383,31 +386,32 @@ impl Router {
         std::thread::Builder::new()
             .name("swan-fleet-supervisor".to_string())
             .spawn(move || supervisor_loop(weak, fleet_rx))
+            // lint: allow(panic, "router construction, before the fleet serves: without a supervisor thread no recovery contract can hold, so failing loudly here is the safe outcome")
             .expect("spawning fleet supervisor thread");
         Router { inner }
     }
 
     pub fn n_shards(&self) -> usize {
-        self.inner.shards.read().unwrap().len()
+        read_recover(&self.inner.shards).len()
     }
 
     /// A point-in-time clone of the membership (handles are `Arc`s; the
     /// list itself is elastic, so no slice borrow can be handed out).
     pub fn shards(&self) -> Vec<Arc<ShardHandle>> {
-        self.inner.shards.read().unwrap().clone()
+        read_recover(&self.inner.shards).clone()
     }
 
     pub fn snapshots(&self) -> Vec<ShardSnapshot> {
-        self.inner.shards.read().unwrap().iter().map(|s| s.snapshot()).collect()
+        read_recover(&self.inner.shards).iter().map(|s| s.snapshot()).collect()
     }
 
     /// Swap the placement policy live (`SET balance <name>`).
     pub fn set_policy(&self, policy: Box<dyn BalancePolicy>) {
-        *self.inner.policy.lock().unwrap() = policy;
+        *lock_recover(&self.inner.policy) = policy;
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.inner.policy.lock().unwrap().name()
+        lock_recover(&self.inner.policy).name()
     }
 
     /// Pick the shard the next request should land on (placement only;
@@ -415,7 +419,7 @@ impl Router {
     /// members and retries).
     pub fn place(&self) -> usize {
         let snaps = self.snapshots();
-        let pick = self.inner.policy.lock().unwrap().pick(&snaps);
+        let pick = lock_recover(&self.inner.policy).pick(&snaps);
         // a misbehaving policy must not take the fleet down
         pick.min(snaps.len().saturating_sub(1))
     }
@@ -471,7 +475,7 @@ impl Router {
     /// are skipped: their in-flight work re-lands on a healthy shard
     /// with the cancel token intact, so the cancel still takes effect.
     pub fn cancel(&self, id: u64) -> anyhow::Result<()> {
-        for s in self.inner.shards.read().unwrap().iter() {
+        for s in read_recover(&self.inner.shards).iter() {
             let _ = s.send(ShardCmd::Cancel { id });
         }
         Ok(())
@@ -506,7 +510,7 @@ impl Router {
     /// timeout), then retire it.  Draining the last healthy shard is
     /// refused — the fleet must always be able to serve.
     pub fn drain(&self, id: usize) -> anyhow::Result<()> {
-        let shards = self.inner.shards.read().unwrap();
+        let shards = read_recover(&self.inner.shards);
         let healthy = shards.iter().filter(|s| s.status.state() == ShardState::Healthy).count();
         let shard = shards
             .iter()
@@ -533,7 +537,7 @@ impl Router {
         let per_shard =
             if inner.fleet_budget == 0 { 0 } else { (inner.fleet_budget / n).max(1) };
         let healthy: Vec<usize> = {
-            let shards = inner.shards.read().unwrap();
+            let shards = read_recover(&inner.shards);
             shards
                 .iter()
                 .filter(|s| s.status.state() == ShardState::Healthy)
@@ -550,7 +554,7 @@ impl Router {
                 let id = inner.next_shard_id.fetch_add(1, Ordering::Relaxed);
                 let hooks = ShardHooks::supervised(inner.fleet_tx.clone());
                 let handle = launcher.launch(id, per_shard, hooks)?;
-                inner.shards.write().unwrap().push(Arc::new(handle));
+                write_recover(&inner.shards).push(Arc::new(handle));
             }
         } else {
             // drain the youngest healthy members down to the target
@@ -560,7 +564,7 @@ impl Router {
         }
         if inner.fleet_budget > 0 {
             // rebalance the surviving members' KV slices to total/n
-            for s in inner.shards.read().unwrap().iter() {
+            for s in read_recover(&inner.shards).iter() {
                 if s.status.state() == ShardState::Healthy {
                     let _ = s.send(ShardCmd::SetMemBudget(per_shard));
                 }

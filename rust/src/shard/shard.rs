@@ -26,6 +26,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::Request;
 use crate::shard::supervisor::{FleetEvent, RecoveredReq, ShardHooks};
 use crate::shard::{ShardSnapshot, ShardState};
+use crate::util::sync::lock_recover;
 
 /// Commands a shard thread accepts.
 pub enum ShardCmd {
@@ -138,6 +139,7 @@ impl ShardHandle {
         let join = std::thread::Builder::new()
             .name(format!("swan-shard-{id}"))
             .spawn(move || shard_loop(id, engine, rx, &thread_status, hooks))
+            // lint: allow(panic, "shard bring-up, before the handle joins the fleet: a host that cannot spawn threads cannot add a shard, and no request has been placed yet")
             .expect("spawning shard thread");
         ShardHandle { id, tx: Mutex::new(tx), status, metrics, join: Some(join) }
     }
@@ -177,7 +179,9 @@ impl ShardHandle {
     /// A poisoned sender lock (some thread panicked while holding it) is
     /// recovered rather than propagated: the `Sender` inside is plain
     /// data that cannot be left in a torn state, so poisoning here must
-    /// not cascade one shard's panic into every later caller.
+    /// not cascade one shard's panic into every later caller.  (This was
+    /// the original one-off recovery site; `util::sync` generalizes it
+    /// fleet-wide.)
     pub fn send(&self, cmd: ShardCmd) -> anyhow::Result<()> {
         self.try_send(cmd)
             .map_err(|_| anyhow::anyhow!("shard {} is gone", self.id))
@@ -187,11 +191,7 @@ impl ShardHandle {
     /// so the caller can retry it on another shard without cloning the
     /// payload (the router's bounded-retry submit path).
     pub fn try_send(&self, cmd: ShardCmd) -> Result<(), ShardCmd> {
-        let tx = match self.tx.lock() {
-            Ok(guard) => guard,
-            Err(poisoned) => poisoned.into_inner(),
-        };
-        tx.send(cmd).map_err(|mpsc::SendError(c)| c)
+        lock_recover(&self.tx).send(cmd).map_err(|mpsc::SendError(c)| c)
     }
 
     pub fn snapshot(&self) -> ShardSnapshot {
@@ -203,13 +203,7 @@ impl Drop for ShardHandle {
     fn drop(&mut self) {
         // same poison recovery as `send`: shutdown must reach the shard
         // thread even after some sender panicked holding the lock
-        {
-            let tx = match self.tx.lock() {
-                Ok(guard) => guard,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            let _ = tx.send(ShardCmd::Shutdown);
-        }
+        let _ = lock_recover(&self.tx).send(ShardCmd::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }

@@ -177,6 +177,7 @@ impl StageFaults {
         let n = self.forwards.fetch_add(1, Ordering::Relaxed) + 1;
         if let Some(plan) = &self.plan {
             if plan.poison_stage == Some((stage, n)) {
+                // lint: allow(panic, "deliberate chaos-test fault injection: this panic IS the fault the recovery contract is tested against")
                 panic!("chaos: injected stage {stage} poison at forward {n}");
             }
             if plan.drop_stage_at == Some((stage, n)) {
@@ -191,6 +192,7 @@ impl StageFaults {
         let n = self.prefills.fetch_add(1, Ordering::Relaxed) + 1;
         if let Some(plan) = &self.plan {
             if plan.poison_prefill == Some((stage, n)) {
+                // lint: allow(panic, "deliberate chaos-test fault injection: this panic IS the fault the recovery contract is tested against")
                 panic!("chaos: injected stage {stage} poison at prefill {n}");
             }
         }

@@ -23,6 +23,8 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::{lock_recover, wait_recover};
+
 /// Reusable per-worker buffer for the attention walk: `scores` backs the
 /// softmax row (sparse + buffer + current slots) and `tmp` backs whatever
 /// per-task working set a fan-out needs (the parallel prefill packs its
@@ -99,6 +101,7 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("swan-decode-{i}"))
                     .spawn(move || worker_loop(&shared))
+                    // lint: allow(panic, "pool construction, before any request is admitted: a host that cannot spawn threads cannot serve, and no in-flight work exists to recover")
                     .expect("spawning decode worker")
             })
             .collect();
@@ -154,18 +157,19 @@ impl WorkerPool {
         }
         let n = jobs.len();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.pending += n;
             st.jobs.extend(jobs);
         }
         self.shared.work_cv.notify_all();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_recover(&self.shared.state);
         while st.pending > 0 {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = wait_recover(&self.shared.done_cv, st);
         }
         if st.panicked {
             st.panicked = false;
             drop(st);
+            // lint: allow(panic, "deliberate re-raise of a caught worker panic on the submitting thread; the shard supervisor converts it into shard-death + exact-replay recovery")
             panic!("a decode worker task panicked");
         }
     }
@@ -195,6 +199,7 @@ impl WorkerPool {
         let chunk = tasks.len().div_ceil(self.threads * 4).max(1);
         let f = &f;
         let jobs = tasks.chunks_mut(chunk).map(|c| {
+            // lint: allow(hot_alloc, "one boxed closure per worker chunk (threads*4 per step), amortized over the chunk's sequences")
             Box::new(move |scratch: &mut AttentionScratch| {
                 for t in c {
                     f(scratch, t);
@@ -210,7 +215,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -224,7 +229,7 @@ fn worker_loop(shared: &PoolShared) {
     let mut scratch = AttentionScratch::new();
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             loop {
                 if let Some(j) = st.jobs.pop_front() {
                     break j;
@@ -232,14 +237,14 @@ fn worker_loop(shared: &PoolShared) {
                 if st.shutdown {
                     return;
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                st = wait_recover(&shared.work_cv, st);
             }
         };
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             job(&mut scratch);
         }))
         .is_ok();
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_recover(&shared.state);
         st.pending -= 1;
         if !ok {
             st.panicked = true;

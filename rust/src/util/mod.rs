@@ -5,7 +5,9 @@ pub mod fp;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use fp::{f16_bits_to_f32, f32_to_f16_bits, f32_to_fp8_e4m3, fp8_e4m3_to_f32};
 pub use rng::Pcg64;
 pub use stats::Summary;
+pub use sync::{lock_recover, read_recover, wait_recover, write_recover};

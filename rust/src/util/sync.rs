@@ -1,0 +1,130 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! Since PR 8 every shard runs supervised: a panic on a shard thread is
+//! caught, converted into a [`crate::shard::FleetEvent::ShardDead`] event,
+//! and the shard's work is recovered by exact replay.  That contract makes
+//! mutex poisoning *pure noise*: the panic that poisoned the lock has
+//! already been handled by the supervisor, and the data under the lock is
+//! either (a) fleet bookkeeping that the recovery path re-derives (router
+//! shard lists, balance policy state, obs series, pool free lists) or
+//! (b) per-connection plumbing whose owner is about to observe the failure
+//! through its channel anyway.  Propagating the `PoisonError` as a second
+//! panic would cascade one shard death into the death of every thread that
+//! shares fleet state with it — exactly what the supervisor exists to
+//! prevent.
+//!
+//! These helpers therefore take the other branch: recover the guard via
+//! [`std::sync::PoisonError::into_inner`] and carry on.  They generalize
+//! the one-off fix PR 8 landed in `ShardHandle::send`, and the
+//! `swan-lint` `lock_unwrap` rule (see `rust/lint`) keeps the tree free of
+//! new `.lock().unwrap()` sites so the recovery discipline cannot rot.
+//!
+//! Every call site must still be written so the invariants of the guarded
+//! data hold at each `unlock` — recovery is sound only because critical
+//! sections in this codebase restore invariants before any early return
+//! and never unwind mid-update with the structure torn (the chaos suite
+//! exercises exactly this: kills mid-flight, then keeps serving).
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Read-lock `l`, recovering the guard if a previous writer panicked.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Write-lock `l`, recovering the guard if a previous writer panicked.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Block on `cv`, recovering the re-acquired guard if the mutex was
+/// poisoned while this thread slept.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    fn poison_mutex(m: &Arc<Mutex<i32>>) {
+        let m = Arc::clone(m);
+        let _ = std::thread::spawn(move || {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7));
+        poison_mutex(&m);
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_poison() {
+        let l = Arc::new(RwLock::new(3));
+        {
+            let l = Arc::clone(&l);
+            let _ = std::thread::spawn(move || {
+                let _g = l.write().unwrap();
+                panic!("poison it");
+            })
+            .join();
+        }
+        assert_eq!(*read_recover(&l), 3);
+        *write_recover(&l) = 4;
+        assert_eq!(*read_recover(&l), 4);
+    }
+
+    #[test]
+    fn wait_recover_wakes_after_poisoning_holder() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let waiter = {
+            let pair = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                let (m, cv) = (&pair.0, &pair.1);
+                let mut done = lock_recover(m);
+                while !*done {
+                    done = wait_recover(cv, done);
+                }
+            })
+        };
+        // Poison the mutex, then still complete the handshake: set the
+        // flag through the recovering lock and wake the waiter.
+        {
+            let pair = Arc::clone(&pair);
+            let _ = std::thread::spawn(move || {
+                let _g = pair.0.lock().unwrap();
+                panic!("poison it");
+            })
+            .join();
+        }
+        *lock_recover(&pair.0) = true;
+        pair.1.notify_all();
+        waiter.join().unwrap();
+    }
+}

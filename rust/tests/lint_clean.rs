@@ -1,0 +1,28 @@
+//! Tier-1 gate: `swan-lint` must report zero findings on the tree.
+//!
+//! Every rule (panic-path audit, lock-order analysis, atomic-ordering
+//! audit, hot-path allocation audit, wire-protocol drift) runs against
+//! `rust/src` plus the README protocol table.  A finding here means
+//! either new code broke an invariant or it needs a justified
+//! `// lint: allow(<rule>, "<why>")` annotation — see README
+//! §Static analysis.
+
+use std::path::Path;
+
+#[test]
+fn swan_lint_reports_zero_findings() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = manifest.join("src");
+    let readme = manifest.join("../README.md");
+    let findings = swan_lint::analyze_tree(&src, Some(&readme)).expect("lint walk failed");
+    assert!(
+        findings.is_empty(),
+        "swan-lint found {} issue(s):\n{}",
+        findings.len(),
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
