@@ -646,4 +646,94 @@ fn main() {
             }
         }
     }
+
+    // prefix reuse: one native pipeline group with --prefix-cache on; a
+    // cold pass admits n prompts sharing a long preamble, then a warm
+    // pass re-submits the identical prompts — every warm admission
+    // attaches the cached full-block prefix copy-on-write and prefills
+    // only the suffix.  TTFT (queue + prefill) comes from each
+    // response's own stats; hit rate and prompt tokens saved from the
+    // fleet counters.  Rows land in BENCH_prefix.json.  Seeds are
+    // pinned so the warm pass reproduces the cold streams bit-exactly
+    // (both passes run under prefix mode).
+    println!(
+        "# prefix_reuse ({n} requests x 2 passes, shared ~180-char preamble, {max_new} new tokens each)"
+    );
+    let prefix_leg = (|| -> anyhow::Result<()> {
+        use swan::model::{SwanModel, WeightFile};
+        use swan::shard::pipeline::launch_group;
+        use swan::swan::projection::ProjectionVariant;
+        let cfg = ServeConfig {
+            prefix: true,
+            block_tokens: 16,
+            k_active: 32,
+            mode: StorageMode::F16,
+            max_batch: 8,
+            decode_workers: workers,
+            ..Default::default()
+        };
+        let wf = WeightFile::load(&dir.join(format!("weights_{}.bin", cfg.model)))?;
+        let model = std::sync::Arc::new(SwanModel::load(&wf, ProjectionVariant::Calibrated, 0)?);
+        let handle = launch_group(0, model, &cfg)?;
+        let router =
+            Router::from_handles(vec![handle], swan::shard::policy_from_name("round-robin")?);
+        let mut rng = Pcg64::new(42);
+        let preamble = corpus::mixed_text(&mut rng, 180);
+        let prompts: Vec<String> = (0..n)
+            .map(|i| format!("{preamble} the {} ", corpus::NOUNS[i % corpus::NOUNS.len()]))
+            .collect();
+        let run_pass = |label: &str| -> anyhow::Result<(f64, f64)> {
+            let pending: Vec<_> = prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    router.submit(Request::with_params(
+                        0,
+                        p,
+                        GenParams::new(max_new).seed(i as u64),
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let mut ttft_ms: Vec<f64> = Vec::with_capacity(pending.len());
+            for h in pending {
+                let r = h.wait()?;
+                ttft_ms.push((r.stats.queue_time + r.stats.prefill_time).as_secs_f64() * 1e3);
+            }
+            ttft_ms.sort_by(|a, b| a.total_cmp(b));
+            let q = |f: f64| ttft_ms[((ttft_ms.len() - 1) as f64 * f).round() as usize];
+            let (p50, p95) = (q(0.50), q(0.95));
+            println!("{label:<18} ttft p50 {p50:>7.2} ms | p95 {p95:>7.2} ms");
+            Ok((p50, p95))
+        };
+        let (cold_p50, cold_p95) = run_pass("cold pass")?;
+        let (warm_p50, warm_p95) = run_pass("warm pass")?;
+        let (mut hits, mut misses, mut saved) = (0u64, 0u64, 0u64);
+        for s in router.shards() {
+            hits += s.metrics.prefix_hits.get();
+            misses += s.metrics.prefix_misses.get();
+            saved += s.metrics.prefix_tokens_saved.get();
+        }
+        let admissions = hits + misses;
+        let hit_rate =
+            if admissions > 0 { 100.0 * hits as f64 / admissions as f64 } else { 0.0 };
+        println!(
+            "{:<18} hits {hits}/{admissions} admissions ({hit_rate:.1}%) | \
+             {saved} prompt tokens saved",
+            "reuse"
+        );
+        let mut report = swan::util::stats::BenchReport::open("BENCH_prefix.json");
+        report.set("prefix_reuse", "cold_ttft_p50_ms", cold_p50);
+        report.set("prefix_reuse", "cold_ttft_p95_ms", cold_p95);
+        report.set("prefix_reuse", "warm_ttft_p50_ms", warm_p50);
+        report.set("prefix_reuse", "warm_ttft_p95_ms", warm_p95);
+        report.set("prefix_reuse", "hit_rate_pct", hit_rate);
+        report.set("prefix_reuse", "tokens_saved", saved as f64);
+        report.set("prefix_reuse", "requests_per_pass", n as f64);
+        report.set("prefix_reuse", "max_new", max_new as f64);
+        report.save()?;
+        Ok(())
+    })();
+    if let Err(e) = prefix_leg {
+        println!("{:<18} FAILED: {e:#}", "prefix_reuse");
+    }
 }

@@ -105,6 +105,12 @@ USAGE:
                                        admission + block-granular preemption
                                        (native pipeline path; output identical)
                 [--block-tokens N]     rows per pool block (default 16)
+                [--prefix-cache]       cross-request KV prefix reuse: cache
+                                       retired prompts' full-block prefixes
+                                       and attach them copy-on-write to later
+                                       prompts sharing the prefix (pipeline
+                                       path; implies --pool; SET prefix
+                                       on|off toggles it live)
                 [--drain-timeout MS]   how long a draining shard (DRAIN /
                                        SET shards scale-down) waits for
                                        in-flight work before migrating it

@@ -112,6 +112,14 @@ pub struct ServeConfig {
     pub pool: bool,
     /// Rows (tokens) per pool block, >= 1.
     pub block_tokens: usize,
+    /// Cross-request prefix caching (`--prefix-cache` / `SET prefix
+    /// on|off`): pipeline groups index retired prompts' full-block
+    /// prefixes in a per-group [`crate::prefix::PrefixTree`] and serve
+    /// later prompts that share a prefix by attaching the cached blocks
+    /// copy-on-write, running prefill only over the uncached suffix.
+    /// Implies the block pool on the pipeline path; ignored (with a
+    /// warning) under `--dense-baseline`.
+    pub prefix: bool,
     /// How long a draining shard (`DRAIN <id>` / `SET shards <n>`
     /// scale-down) waits for in-flight work to finish before migrating
     /// the stragglers to healthy shards through the exact-recovery path.
@@ -149,6 +157,7 @@ impl Default for ServeConfig {
             bind: "127.0.0.1:7877".into(),
             pool: false,
             block_tokens: 16,
+            prefix: false,
             drain_timeout_ms: 5000,
         }
     }

@@ -330,6 +330,32 @@ impl Engine {
         self.scheduler.set_mem_budget(bytes);
     }
 
+    /// Block-granular budget view for the router's placement policies:
+    /// `(total, free)` allocation granules under this engine's byte
+    /// budget, sized at the fleet compression level.  Both zero when
+    /// block-accounted admission is off (`--pool` unset) or the budget
+    /// is unbounded — `MemAware` then falls back to projected bytes.
+    pub fn block_budget(&self) -> (usize, usize) {
+        if !self.cfg.pool || self.scheduler.mem_budget == 0 {
+            return (0, 0);
+        }
+        let granule = 2
+            * self.shape.n_layers
+            * self.shape.n_kv
+            * crate::pool::block_bytes(
+                self.cfg.block_tokens,
+                self.shape.d_head,
+                self.cfg.mode,
+                self.tuner.current_k(),
+            );
+        if granule == 0 {
+            return (0, 0);
+        }
+        let total = self.scheduler.mem_budget / granule;
+        let used = self.live_cache_bytes().div_ceil(granule);
+        (total, total.saturating_sub(used))
+    }
+
     /// Extract every in-flight and queued request as recovery payloads
     /// (shard death / drain-timeout migration).  Active sequences carry
     /// their committed tokens and RNG position; queued ones are fresh

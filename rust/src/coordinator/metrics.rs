@@ -93,6 +93,15 @@ pub struct Metrics {
     /// `u64::MAX` when the pool is unbounded).
     pub pool_blocks_total: Arc<Gauge>,
     pub pool_blocks_leased: Arc<Gauge>,
+    /// Prefix-cache counters (all zero unless prefix serving is on).
+    /// A hit attaches the longest cached prefix; `tokens_saved` sums the
+    /// attach depths (prompt tokens that skipped prefill), and
+    /// `blocks_shared` the pool blocks attached copy-on-write.
+    pub prefix_hits: Arc<Counter>,
+    pub prefix_misses: Arc<Counter>,
+    pub prefix_evictions: Arc<Counter>,
+    pub prefix_blocks_shared: Arc<Counter>,
+    pub prefix_tokens_saved: Arc<Counter>,
     /// Current fleet-tuned compression level on this engine/group.
     pub k_active: Arc<Gauge>,
     /// SLO histograms (lock-free; safe on the per-token commit path).
@@ -123,6 +132,11 @@ impl Default for Metrics {
             dense_equiv_bytes: registry.gauge("swan_kv_dense_equiv_bytes", &[]),
             pool_blocks_total: registry.gauge("swan_pool_blocks_target", &[]),
             pool_blocks_leased: registry.gauge("swan_pool_blocks_leased", &[]),
+            prefix_hits: registry.counter("swan_prefix_hits", &[]),
+            prefix_misses: registry.counter("swan_prefix_misses", &[]),
+            prefix_evictions: registry.counter("swan_prefix_evictions", &[]),
+            prefix_blocks_shared: registry.counter("swan_prefix_blocks_shared", &[]),
+            prefix_tokens_saved: registry.counter("swan_prefix_tokens_saved", &[]),
             k_active: registry.gauge("swan_k_active", &[]),
             queue_wait_seconds: registry.histogram("swan_queue_wait_seconds", &[]),
             ttft_seconds: registry.histogram("swan_ttft_seconds", &[]),
@@ -170,6 +184,16 @@ impl Metrics {
                 pool_total.to_string()
             };
             out.push_str(&format!("pool: blocks leased={leased} target={total}\n"));
+        }
+        let (hits, misses) = (self.prefix_hits.get(), self.prefix_misses.get());
+        if hits + misses > 0 {
+            let rate = 100.0 * hits as f64 / (hits + misses) as f64;
+            out.push_str(&format!(
+                "prefix: hits={hits} misses={misses} hit_rate={rate:.1}% tokens_saved={} blocks_shared={} evictions={}\n",
+                self.prefix_tokens_saved.get(),
+                self.prefix_blocks_shared.get(),
+                self.prefix_evictions.get(),
+            ));
         }
         if let Some(s) = self.prefill_ns.summary() {
             out.push_str(&format!("prefill:     {}\n", s.row("")));
@@ -243,6 +267,12 @@ mod tests {
         m.pool_blocks_total.set(64);
         m.pool_blocks_leased.set(7);
         assert!(m.snapshot().contains("pool: blocks leased=7 target=64"));
+        assert!(!s.contains("prefix:"), "prefix line hidden before any lookup");
+        m.prefix_hits.add(3);
+        m.prefix_misses.add(1);
+        m.prefix_tokens_saved.add(96);
+        let s = m.snapshot();
+        assert!(s.contains("prefix: hits=3 misses=1 hit_rate=75.0% tokens_saved=96"), "{s}");
     }
 
     #[test]

@@ -80,6 +80,13 @@ pub trait CachePolicy: Send {
     /// Tokens ever appended.
     fn seen_tokens(&self) -> usize;
 
+    /// Downcast hook to the pool-backed cache — the prefix subsystem
+    /// attaches/extracts shared blocks through it.  `None` for every
+    /// non-paged policy.
+    fn as_paged(&mut self) -> Option<&mut crate::pool::PagedSwanCache> {
+        None
+    }
+
     fn label(&self) -> String;
 }
 

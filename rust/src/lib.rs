@@ -68,6 +68,7 @@ pub mod kvcache;
 pub mod model;
 pub mod obs;
 pub mod pool;
+pub mod prefix;
 pub mod repro;
 pub mod runtime;
 pub mod server;

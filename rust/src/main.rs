@@ -60,9 +60,14 @@ fn serve_config(args: &Args) -> anyhow::Result<ServeConfig> {
     anyhow::ensure!(cfg.block_tokens >= 1, "--block-tokens must be >= 1");
     cfg.drain_timeout_ms =
         args.get_usize("drain-timeout", cfg.drain_timeout_ms as usize)? as u64;
+    cfg.prefix = args.has("prefix-cache");
     anyhow::ensure!(
         !(cfg.pool && cfg.dense_baseline),
         "--pool serves SWAN hybrid caches; it cannot combine with --dense"
+    );
+    anyhow::ensure!(
+        !(cfg.prefix && cfg.dense_baseline),
+        "--prefix-cache reuses SWAN winnowed blocks; it cannot combine with --dense"
     );
     cfg.bind = args.get_str("bind", &cfg.bind);
     Ok(cfg)

@@ -35,6 +35,9 @@ pub enum TraceKind {
     Submit,
     /// Popped from the scheduler queue into the active batch.
     Admit,
+    /// Admission matched a cached prompt prefix: its blocks attach
+    /// copy-on-write and prefill covers only the uncached suffix.
+    PrefixHit,
     /// Prompt prefill finished (also re-prefill on preemption resume).
     PrefillDone,
     /// First generated token committed (TTFT point).
@@ -60,6 +63,7 @@ impl TraceKind {
         match self {
             TraceKind::Submit => "submit",
             TraceKind::Admit => "admit",
+            TraceKind::PrefixHit => "prefix_hit",
             TraceKind::PrefillDone => "prefill_done",
             TraceKind::FirstToken => "first_token",
             TraceKind::Decode => "decode",

@@ -107,64 +107,148 @@ pub fn seq_blocks(
     2 * n_layers * n_kv_heads * (ring + sparse)
 }
 
-/// One stream's leased blocks, in row order: the storage-owning half of
-/// the paged cache.  Dropping the table gives every block back to its
-/// pool (buffers recycle; the pool's lease gauge falls).
+/// One block-table slot: a block this table owns outright, or a
+/// refcounted view of a block shared with a prefix-store entry and/or
+/// other sequences.  Sharing is copy-on-write by construction — shared
+/// blocks are never mutated: appends only ever target the last slot,
+/// the still-filling tail is always `Owned` (a table that attaches a
+/// partial prefix tail copies it into a fresh lease — the mandatory
+/// tail fork), and full blocks are immutable once written.
+pub enum Slot {
+    Owned(BlockBuf),
+    Shared(Arc<BlockBuf>),
+}
+
+impl Slot {
+    /// Read access, uniform across ownership.
+    pub fn buf(&self) -> &BlockBuf {
+        match self {
+            Slot::Owned(b) => b,
+            Slot::Shared(b) => b,
+        }
+    }
+}
+
+/// One stream's blocks, in row order: the storage-owning half of the
+/// paged cache.  Dropping the table gives every owned block back to its
+/// pool and drops one reference per shared block (the pool's lease
+/// gauge falls only when a block's last holder lets go).
 pub struct BlockTable {
     pool: Arc<BlockPool>,
-    blocks: Vec<BlockBuf>,
+    slots: Vec<Slot>,
+    /// Cached block-id row, maintained on every push, so hot-path
+    /// readers borrow it instead of collecting a fresh vec per call.
+    ids: Vec<u32>,
 }
 
 impl BlockTable {
     pub fn new(pool: Arc<BlockPool>) -> BlockTable {
-        BlockTable { pool, blocks: Vec::new() }
+        BlockTable { pool, slots: Vec::new(), ids: Vec::new() }
     }
 
-    /// Lease one more block from the pool and return it for filling.
+    /// Lease one more owned block from the pool and return it for
+    /// filling.
     pub fn push_block(&mut self) -> &mut BlockBuf {
         let b = self.pool.lease();
-        self.blocks.push(b);
-        // lint: allow(panic, "last_mut() of a vec pushed to on the previous line is always Some")
-        self.blocks.last_mut().unwrap()
+        self.ids.push(b.id);
+        self.slots.push(Slot::Owned(b));
+        match self.slots.last_mut() {
+            Some(Slot::Owned(b)) => b,
+            // lint: allow(panic, "the slot pushed on the previous line is always Some(Owned)")
+            _ => panic!("push_block: freshly pushed owned slot missing"),
+        }
     }
 
-    pub fn blocks(&self) -> &[BlockBuf] {
-        &self.blocks
+    /// Attach a shared (prefix-cached) block: takes one pool reference
+    /// for this table and appends the block read-only.
+    pub fn push_shared(&mut self, b: Arc<BlockBuf>) {
+        self.pool.share(b.id);
+        self.ids.push(b.id);
+        self.slots.push(Slot::Shared(b));
     }
 
+    /// Convert block `i` to shared form in place and hand out a clone
+    /// holding its own pool reference (the prefix-store side).  The
+    /// table keeps reading the block exactly as before; it just loses
+    /// the right to mutate it — callers only share full, immutable
+    /// blocks.
+    pub fn share_block(&mut self, i: usize) -> Arc<BlockBuf> {
+        // lint: allow(indexing, "callers derive i from rows/block_tokens over this table's own row count")
+        let slot = &mut self.slots[i];
+        let arc = match slot {
+            Slot::Shared(a) => a.clone(),
+            Slot::Owned(buf) => {
+                let id = buf.id;
+                let owned = std::mem::replace(buf, BlockBuf::fresh(id));
+                let a = Arc::new(owned);
+                *slot = Slot::Shared(a.clone());
+                a
+            }
+        };
+        self.pool.share(arc.id);
+        arc
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    /// Read access to block `i`, uniform across ownership.
+    pub fn buf(&self, i: usize) -> &BlockBuf {
+        // lint: allow(indexing, "callers derive i from rows/block_tokens over this table's own row count; tests/pool.rs locks the geometry")
+        self.slots[i].buf()
+    }
+
+    /// Mutable access to the tail block — `None` when the table is
+    /// empty or the tail is shared (callers then fork by pushing a
+    /// fresh owned block instead of mutating).
     pub fn last_mut(&mut self) -> Option<&mut BlockBuf> {
-        self.blocks.last_mut()
+        match self.slots.last_mut() {
+            Some(Slot::Owned(b)) => Some(b),
+            _ => None,
+        }
     }
 
+    /// Mutable access to block `i` — ring tables only, which are
+    /// all-Owned by construction (sharing extracts only retired sparse
+    /// prefixes; ring rows copy instead).
     pub fn get_mut(&mut self, i: usize) -> &mut BlockBuf {
         // lint: allow(indexing, "callers derive i from rows/block_tokens over this table's own row count; tests/pool.rs locks the geometry")
-        &mut self.blocks[i]
+        match &mut self.slots[i] {
+            Slot::Owned(b) => b,
+            // lint: allow(panic, "ring tables never hold shared slots (attach copies ring rows into owned leases); a violation is a logic bug worth dying loudly for under the supervisor")
+            Slot::Shared(_) => panic!("get_mut on a shared block"),
+        }
     }
 
-    /// Leased block count.
+    /// Block count.
     pub fn len(&self) -> usize {
-        self.blocks.len()
+        self.slots.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
+        self.slots.is_empty()
     }
 
-    /// The sequence's block-table row: pool block ids in stream order.
-    pub fn block_ids(&self) -> Vec<u32> {
-        self.blocks.iter().map(|b| b.id).collect()
+    /// The sequence's block-table row: pool block ids in stream order
+    /// (borrowed — no per-call allocation).
+    pub fn block_ids(&self) -> &[u32] {
+        &self.ids
     }
 
     /// Accounted (Eq. 1) bytes across all blocks.
     pub fn total_bytes(&self) -> usize {
-        self.blocks.iter().map(|b| b.bytes).sum()
+        self.slots.iter().map(|s| s.buf().bytes).sum()
     }
 }
 
 impl Drop for BlockTable {
     fn drop(&mut self) {
-        for b in self.blocks.drain(..) {
-            self.pool.give_back(b);
+        for s in self.slots.drain(..) {
+            match s {
+                Slot::Owned(b) => self.pool.give_back(b),
+                Slot::Shared(a) => self.pool.release_shared(a),
+            }
         }
     }
 }

@@ -42,6 +42,7 @@ pub mod paged_cache;
 pub use allocator::BlockAllocator;
 pub use block_table::{
     block_bytes, block_ceil_bytes, pool_blocks_for_budget, seq_blocks, BlockGeometry, BlockTable,
+    Slot,
 };
 pub use paged_cache::{PagedHybridCache, PagedSwanCache};
 
@@ -180,15 +181,55 @@ impl BlockPool {
         buf
     }
 
-    /// Return a leased block; its id frees and its storage recycles.
+    /// Return a leased block.  When this was the last reference the id
+    /// frees, the lease gauge falls, and the storage recycles; a block
+    /// still shared with a prefix-store entry (see [`BlockPool::share`])
+    /// merely drops one reference.
     pub fn give_back(&self, buf: BlockBuf) {
         let t0 = self.obs.as_ref().map(|_| Instant::now());
         let mut g = lock_recover(&self.inner);
-        if g.alloc.release(buf.id) {
+        let freed = g.alloc.release(buf.id);
+        if freed {
             g.spare.push(buf);
         }
         drop(g);
-        self.leased.fetch_sub(1, Ordering::Relaxed);
+        if freed {
+            self.leased.fetch_sub(1, Ordering::Relaxed);
+        }
+        if let (Some(obs), Some(t0)) = (&self.obs, t0) {
+            obs.give_back_seconds.record(t0.elapsed());
+        }
+    }
+
+    /// Add one reference to a live block — the copy-on-write hook used
+    /// by prefix sharing.  The caller now holds `id` alongside its
+    /// existing holder(s) and must balance with
+    /// [`BlockPool::release_shared`] (or [`BlockPool::give_back`] for
+    /// the original by-value lease).  The lease gauge counts *unique*
+    /// live ids, so sharing does not move it; shared blocks are never
+    /// mutated (appends always target an owned tail block).
+    pub fn share(&self, id: u32) {
+        let mut g = lock_recover(&self.inner);
+        g.alloc.retain(id);
+    }
+
+    /// Drop one shared (`Arc`-held) reference.  When it was the last,
+    /// the id frees, the gauge falls, and — since the refcount
+    /// discipline ties one allocator reference to each `Arc` clone —
+    /// the unwrap succeeds and the buffer recycles.
+    pub fn release_shared(&self, arc: Arc<BlockBuf>) {
+        let t0 = self.obs.as_ref().map(|_| Instant::now());
+        let mut g = lock_recover(&self.inner);
+        let freed = g.alloc.release(arc.id);
+        if freed {
+            if let Ok(buf) = Arc::try_unwrap(arc) {
+                g.spare.push(buf);
+            }
+        }
+        drop(g);
+        if freed {
+            self.leased.fetch_sub(1, Ordering::Relaxed);
+        }
         if let (Some(obs), Some(t0)) = (&self.obs, t0) {
             obs.give_back_seconds.record(t0.elapsed());
         }
@@ -259,6 +300,30 @@ mod tests {
         pool.give_back(b);
         assert_eq!(obs.lease_seconds.snapshot().count(), 2);
         assert_eq!(obs.give_back_seconds.snapshot().count(), 2);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_blocks_free_only_on_last_release() {
+        let pool = BlockPool::new(4);
+        let b = pool.lease();
+        let id = b.id;
+        pool.share(id); // a prefix-store entry takes a reference
+        pool.share(id); // a second sequence attaches
+        let arc = Arc::new(b);
+        let arc2 = arc.clone();
+        let arc3 = arc.clone();
+        assert_eq!(pool.leased(), 1); // gauge counts unique live ids
+        pool.release_shared(arc2);
+        assert_eq!(pool.leased(), 1);
+        pool.release_shared(arc3);
+        assert_eq!(pool.leased(), 1);
+        pool.release_shared(arc); // last holder: id frees, storage recycles
+        assert_eq!(pool.leased(), 0);
+        pool.check_invariants().unwrap();
+        let c = pool.lease();
+        assert_eq!(c.rows(), 0);
+        pool.give_back(c);
         pool.check_invariants().unwrap();
     }
 

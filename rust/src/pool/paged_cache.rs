@@ -14,13 +14,14 @@
 use std::sync::Arc;
 
 use crate::kvcache::CachePolicy;
+use crate::prefix::{EntryStream, TailRows};
 use crate::simd::Kernels;
 use crate::sparse::{winnow_into, StorageMode};
 use crate::swan::attention::{swan_attend, SwanAttendable};
 use crate::swan::batch::AttentionScratch;
 use crate::swan::hybrid_cache::SwanParams;
 
-use super::{BlockGeometry, BlockPool, BlockTable};
+use super::{BlockBuf, BlockGeometry, BlockPool, BlockTable};
 
 /// One sparse stream (the paged analogue of
 /// [`crate::sparse::SparseStore`]): winnowed CSR rows packed
@@ -72,14 +73,14 @@ impl PagedRows {
     /// Real (unpadded) nnz of row `r`.
     pub fn nnz(&self, r: usize) -> usize {
         let bt = self.geo.block_tokens;
-        self.table.blocks()[r / bt].nnz[r % bt] as usize
+        self.table.buf(r / bt).nnz[r % bt] as usize
     }
 
     /// Live `(vals, idx)` entries of row `r` (padding excluded), for
     /// tests and reconstruction.
     pub fn row(&self, r: usize) -> (&[f32], &[u16]) {
         let bt = self.geo.block_tokens;
-        let b = &self.table.blocks()[r / bt];
+        let b = self.table.buf(r / bt);
         let local = r % bt;
         let start = b.offsets[local] as usize;
         let live = b.nnz[local] as usize;
@@ -91,9 +92,77 @@ impl PagedRows {
         self.table.total_bytes()
     }
 
-    /// The stream's block-table row (pool block ids in order).
-    pub fn block_ids(&self) -> Vec<u32> {
+    /// The stream's block-table row (pool block ids in order), borrowed
+    /// — the hot-path reader allocates nothing.
+    pub fn block_ids(&self) -> &[u32] {
         self.table.block_ids()
+    }
+
+    /// Attach one full shared block (prefix reuse).  Only legal at a
+    /// block boundary with a completely filled donor block; the block
+    /// is read-only from here on (appends fork to a fresh owned tail).
+    pub fn attach_shared(&mut self, b: &Arc<BlockBuf>) {
+        debug_assert_eq!(self.rows % self.geo.block_tokens, 0);
+        debug_assert_eq!(b.rows(), self.geo.block_tokens);
+        self.rows += b.rows();
+        self.table.push_shared(b.clone());
+    }
+
+    /// Copy a partial prefix tail into a freshly leased owned block —
+    /// the mandatory tail fork: the donor's tail keeps growing under
+    /// its own sequence, so the entry holds an immutable row copy and
+    /// every attacher re-materializes it as private storage it can
+    /// append into.  Bit-exact: the copied CSR rows are identical to
+    /// what a cold run would have written.
+    pub fn attach_tail(&mut self, tail: &TailRows) {
+        debug_assert_eq!(self.rows % self.geo.block_tokens, 0);
+        let cap = self.geo.sparse_float_capacity();
+        let b = self.table.push_block();
+        b.vals.reserve(cap);
+        b.idx.reserve(cap);
+        b.vals.extend_from_slice(&tail.vals);
+        b.idx.extend_from_slice(&tail.idx);
+        b.offsets.clear();
+        b.offsets.extend_from_slice(&tail.offsets);
+        b.nnz.extend_from_slice(&tail.nnz);
+        b.bytes = tail.bytes;
+        self.rows += tail.row_count();
+    }
+
+    /// Extract the first `rows` rows of this stream for a prefix-store
+    /// entry: full blocks convert to refcounted shared form in place
+    /// (zero copy — the sequence keeps reading them as before), the
+    /// partial tail block's written rows copy out as [`TailRows`].
+    /// Called at retire only; sparse rows are immutable once written,
+    /// so the extracted prefix is exact regardless of how far past
+    /// `rows` the stream has grown since.
+    pub fn share_prefix(
+        &mut self,
+        rows: usize,
+        mode: StorageMode,
+    ) -> (Vec<Arc<BlockBuf>>, Option<TailRows>) {
+        debug_assert!(rows <= self.rows);
+        let bt = self.geo.block_tokens;
+        let full = rows / bt;
+        let mut shared = Vec::with_capacity(full);
+        for i in 0..full {
+            shared.push(self.table.share_block(i));
+        }
+        let rem = rows % bt;
+        let tail = if rem == 0 {
+            None
+        } else {
+            let b = self.table.buf(full);
+            let end = b.offsets[rem] as usize;
+            Some(TailRows {
+                vals: b.vals[..end].to_vec(),
+                idx: b.idx[..end].to_vec(),
+                offsets: b.offsets[..=rem].to_vec(),
+                nnz: b.nnz[..rem].to_vec(),
+                bytes: b.nnz[..rem].iter().map(|&n| mode.vector_bytes(n as usize)).sum(),
+            })
+        };
+        (shared, tail)
     }
 
     /// Blocks currently leased by this stream.
@@ -112,7 +181,8 @@ impl PagedRows {
         out: &mut Vec<f32>,
     ) -> f32 {
         let mut m = f32::NEG_INFINITY;
-        for b in self.table.blocks() {
+        for s in self.table.slots() {
+            let b = s.buf();
             let mb = ks.csr_scores_max_into(&b.vals, &b.idx, &b.offsets, scale, q, out);
             m = m.max(mb);
         }
@@ -124,7 +194,8 @@ impl PagedRows {
     pub fn axpy_all_with(&self, ks: Kernels, w: &[f32], out: &mut [f32]) {
         debug_assert_eq!(w.len(), self.rows);
         let mut r = 0;
-        for b in self.table.blocks() {
+        for s in self.table.slots() {
+            let b = s.buf();
             let n = b.rows();
             ks.csr_axpy_all(&b.vals, &b.idx, &b.offsets, &w[r..r + n], out);
             r += n;
@@ -157,7 +228,7 @@ impl PagedRing {
         let bt = self.geo.block_tokens;
         let d = self.geo.d_head;
         let off = (slot % bt) * d;
-        &self.table.blocks()[slot / bt].vals[off..off + d]
+        &self.table.buf(slot / bt).vals[off..off + d]
     }
 
     pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
@@ -330,6 +401,75 @@ impl PagedHybridCache {
         2 * self.len() * self.d_h * 2
     }
 
+    /// Plain copies of the live ring rows, oldest first — the
+    /// order-normalized dense state a prefix-store entry keeps (ring
+    /// storage is mutated in place as decode wraps, so entries copy it
+    /// instead of sharing; it must be captured at the moment the cache
+    /// holds exactly the prefix depth).
+    pub fn ring_snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        let cap = self.params.buffer;
+        let mut k = Vec::with_capacity(self.buf_len * self.d_h);
+        let mut v = Vec::with_capacity(self.buf_len * self.d_h);
+        for t in 0..self.buf_len {
+            let slot = (self.head + t) % cap;
+            k.extend_from_slice(self.k_ring.row(slot));
+            v.extend_from_slice(self.v_ring.row(slot));
+        }
+        (k, v)
+    }
+
+    /// Seed an empty cache from a prefix-store stream: full sparse
+    /// blocks attach copy-on-write (refcount-pinned, read-only), the
+    /// partial sparse tail and the ring rows copy into freshly leased
+    /// owned storage.  The result is bit-identical to a cold cache that
+    /// appended the same `depth` tokens — the reuse contract: winnowed
+    /// state is a pure function of tokens x compression config.  (The
+    /// attached ring lands at `head == 0` in oldest-first order; the
+    /// physical slot phase differs from the donor's, but every reader
+    /// and writer goes through the same logical FIFO indexing, so the
+    /// states are observationally — hence bitwise — equivalent.)
+    pub fn attach_prefix(&mut self, s: &EntryStream, depth: usize) {
+        debug_assert!(self.is_empty());
+        for b in &s.full_k {
+            self.k_sparse.attach_shared(b);
+        }
+        if let Some(t) = &s.tail_k {
+            self.k_sparse.attach_tail(t);
+        }
+        for b in &s.full_v {
+            self.v_sparse.attach_shared(b);
+        }
+        if let Some(t) = &s.tail_v {
+            self.v_sparse.attach_tail(t);
+        }
+        let d = self.d_h;
+        let ring_rows = if d == 0 { 0 } else { s.ring_k.len() / d };
+        for t in 0..ring_rows {
+            self.k_ring.row_mut(t).copy_from_slice(&s.ring_k[t * d..(t + 1) * d]);
+            self.v_ring.row_mut(t).copy_from_slice(&s.ring_v[t * d..(t + 1) * d]);
+        }
+        self.head = 0;
+        self.buf_len = ring_rows;
+        debug_assert_eq!(self.len(), depth);
+    }
+
+    /// Extract the first `depth` tokens as a prefix-store entry.  The
+    /// caller supplies the ring snapshot captured when the cache held
+    /// exactly `depth` tokens (later winnowing destroys that state)
+    /// plus the pool the entry pins its shared blocks against.
+    pub fn share_prefix(
+        &mut self,
+        depth: usize,
+        rings: (Vec<f32>, Vec<f32>),
+        pool: Arc<BlockPool>,
+    ) -> EntryStream {
+        let sparse_rows = depth.saturating_sub(self.params.buffer);
+        let mode = self.params.mode;
+        let (full_k, tail_k) = self.k_sparse.share_prefix(sparse_rows, mode);
+        let (full_v, tail_v) = self.v_sparse.share_prefix(sparse_rows, mode);
+        EntryStream { pool, full_k, full_v, tail_k, tail_v, ring_k: rings.0, ring_v: rings.1 }
+    }
+
     /// Read-only attention via the shared generic walk.
     pub fn attend(
         &self,
@@ -404,6 +544,28 @@ impl PagedSwanCache {
     pub fn inner(&self) -> &PagedHybridCache {
         &self.cache
     }
+
+    /// See [`PagedHybridCache::ring_snapshot`].
+    pub fn ring_snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        self.cache.ring_snapshot()
+    }
+
+    /// See [`PagedHybridCache::attach_prefix`]; also fast-forwards the
+    /// seen-token count to the attached depth.
+    pub fn attach_prefix(&mut self, s: &EntryStream, depth: usize) {
+        self.cache.attach_prefix(s, depth);
+        self.seen = depth;
+    }
+
+    /// See [`PagedHybridCache::share_prefix`].
+    pub fn share_prefix(
+        &mut self,
+        depth: usize,
+        rings: (Vec<f32>, Vec<f32>),
+        pool: Arc<BlockPool>,
+    ) -> EntryStream {
+        self.cache.share_prefix(depth, rings, pool)
+    }
 }
 
 impl CachePolicy for PagedSwanCache {
@@ -446,6 +608,10 @@ impl CachePolicy for PagedSwanCache {
 
     fn seen_tokens(&self) -> usize {
         self.seen
+    }
+
+    fn as_paged(&mut self) -> Option<&mut PagedSwanCache> {
+        Some(self)
     }
 
     fn label(&self) -> String {
@@ -578,6 +744,75 @@ mod tests {
         }
         drop(c);
         assert_eq!(p.leased(), 0);
+    }
+
+    /// COW prefix round trip: an entry extracted at depth m re-attaches
+    /// into an empty cache whose subsequent appends are bit-identical
+    /// to a cold cache fed the same rows, the donor keeps decoding past
+    /// the share unaffected (tail fork), and every block frees once the
+    /// last holder lets go.
+    #[test]
+    fn prefix_attach_matches_cold_and_frees_blocks() {
+        let d = 16;
+        let p = pool();
+        let params = SwanParams::new(5, 3, crate::sparse::StorageMode::F16);
+        let bt = 4;
+        let mut r = Pcg64::new(13);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..23).map(|_| (r.normal_vec(d), r.normal_vec(d))).collect();
+        let depth = 17; // sparse 14 rows = 3 full blocks + 2 tail rows
+
+        // donor: append depth rows, snapshot the ring, keep decoding
+        let mut donor = PagedHybridCache::new(d, params, bt, p.clone());
+        for (k, v) in &rows[..depth] {
+            donor.append(k, v);
+        }
+        let rings = donor.ring_snapshot();
+        for (k, v) in &rows[depth..] {
+            donor.append(k, v);
+        }
+        let entry = donor.share_prefix(depth, rings, p.clone());
+
+        // warm: attach the entry, then append the remaining rows
+        let mut warm = PagedHybridCache::new(d, params, bt, p.clone());
+        warm.attach_prefix(&entry, depth);
+        assert_eq!(warm.len(), depth);
+        for (k, v) in &rows[depth..] {
+            warm.append(k, v);
+        }
+
+        // cold reference over the full row set
+        let mut cold = PagedHybridCache::new(d, params, bt, p.clone());
+        for (k, v) in &rows {
+            cold.append(k, v);
+        }
+
+        assert_eq!(warm.len(), cold.len());
+        assert_eq!(warm.storage_bytes(), cold.storage_bytes());
+        for rix in 0..cold.sparse_len() {
+            assert_eq!(warm.k_sparse.row(rix), cold.k_sparse.row(rix), "k row {rix}");
+            assert_eq!(warm.v_sparse.row(rix), cold.v_sparse.row(rix), "v row {rix}");
+            // ...and the donor's own early rows were never mutated
+            assert_eq!(donor.k_sparse.row(rix), cold.k_sparse.row(rix), "donor k row {rix}");
+        }
+        let q = r.normal_vec(d);
+        let kc = r.normal_vec(d);
+        let vc = r.normal_vec(d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        warm.attend(&q, &kc, &vc, &mut s1, &mut a);
+        cold.attend(&q, &kc, &vc, &mut s2, &mut b);
+        assert_eq!(a, b, "warm attention must match cold bit for bit");
+
+        drop(donor);
+        drop(warm);
+        drop(cold);
+        assert!(p.leased() > 0, "entry still pins its shared blocks");
+        drop(entry);
+        assert_eq!(p.leased(), 0, "releasing the entry frees the last references");
+        p.check_invariants().unwrap();
     }
 
     /// The policy adapter is result-identical to the contiguous SwanCache.

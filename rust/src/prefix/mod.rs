@@ -1,0 +1,547 @@
+//! swan::prefix — cross-request KV reuse over the block pool.
+//!
+//! Real traffic is dominated by shared prefixes (system prompts,
+//! few-shot headers, multi-turn history).  SWAN's rotation is a fixed
+//! offline matrix, so the winnowed, lane-padded state computed for a
+//! prompt prefix is a *pure function of tokens × compression config* —
+//! reusable verbatim across requests at the same `(k, mode, lanes,
+//! buffer, block_tokens)`, no recompute, no decompression.  This module
+//! holds the pieces shared between the serving coordinator and the
+//! pipeline stages:
+//!
+//! * [`PrefixTree`] — the coordinator-side index: a hash tree over
+//!   prompt token-blocks (`block_tokens` granularity).  Entries are
+//!   keyed by the rolling token-block hash chain mixed with the
+//!   compression-config hash ([`entry_key`]), verified against the
+//!   exact stored token prefix on every match (hash collisions can
+//!   never cause wrong reuse), and aged by a logical LRU clock so the
+//!   sweeper sheds cold entries under pool pressure *before* any
+//!   running sequence is preempted.
+//! * [`EntryStream`] / [`StageEntry`] — the stage-side payload: per
+//!   (layer, kv-head) stream, the full winnowed blocks pinned via pool
+//!   refcounts ([`crate::pool::BlockPool::share`] — the copy-on-write
+//!   hook), plus owned copies of the partial tail rows and the dense
+//!   recency ring captured at exactly the entry's depth.  Full blocks
+//!   are shared zero-copy and never mutated; tails and rings
+//!   re-materialize into fresh leases on attach (the mandatory fork).
+//! * [`PrefixPrefill`] / [`PendingInsert`] — the stage-protocol
+//!   sidecar: what to attach, where the suffix starts, and what to
+//!   capture for insertion when the sequence retires.
+//!
+//! Reuse contract: under prefix serving every prompt runs through the
+//! same cache-consistent per-token prefill, so a warm hit (attach L
+//! tokens, run P−L) produces bit-identical state and output to a cold
+//! miss (attach 0, run P) — locked down by `tests/prefix.rs`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::pool::{BlockBuf, BlockPool};
+use crate::sparse::StorageMode;
+use crate::swan::hybrid_cache::SwanParams;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_u64(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hash of the compression config a cached prefix is only valid under.
+/// Any knob that changes winnowed bytes participates: per-request k
+/// (keys and values), ring capacity, value precision, lane padding, and
+/// the block granularity itself.
+pub fn cfg_key(params: &SwanParams, block_tokens: usize) -> u64 {
+    let mode_tag: u64 = match params.mode {
+        StorageMode::F16 => 1,
+        StorageMode::F8 => 2,
+        StorageMode::F32 => 3,
+    };
+    let mut h = FNV_OFFSET;
+    for x in [
+        params.k_active_keys as u64,
+        params.k_active_vals as u64,
+        params.buffer as u64,
+        mode_tag,
+        params.resolved_lanes() as u64,
+        block_tokens.max(1) as u64,
+    ] {
+        h = fnv_u64(h, x);
+    }
+    h
+}
+
+/// Rolling hash chain over token blocks: one value per *complete*
+/// block, where the i-th value covers `tokens[..(i + 1) * bt]`.  A
+/// chain value at depth d therefore commits to the entire prefix up to
+/// d, which is what makes a flat hash map behave like a radix tree.
+pub fn chain_hashes(tokens: &[u32], bt: usize) -> Vec<u64> {
+    let bt = bt.max(1);
+    let mut out = Vec::with_capacity(tokens.len() / bt);
+    let mut h = FNV_OFFSET;
+    for (i, &t) in tokens.iter().enumerate() {
+        h = fnv_u64(h, t as u64);
+        if (i + 1) % bt == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Tree key of one (prefix, config) pair: the chain hash mixed with the
+/// config hash through an avalanche so nearby chains spread across the
+/// compact fingerprint sets shards publish for affinity routing.
+pub fn entry_key(chain: u64, cfg: u64) -> u64 {
+    let mut x = chain ^ cfg.rotate_left(32);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    x
+}
+
+/// Deepest depth a prompt of `prompt_len` tokens can match or insert:
+/// the largest block multiple that still leaves at least one suffix
+/// token to run (prefill must produce the first-token logits, so a
+/// fully cached prompt is capped one token short).
+pub fn insert_depth(prompt_len: usize, bt: usize) -> usize {
+    let bt = bt.max(1);
+    if prompt_len <= 1 {
+        return 0;
+    }
+    ((prompt_len - 1) / bt) * bt
+}
+
+/// Pool blocks a sequence stops holding uniquely when it attaches a
+/// prefix at `depth`: the full shared sparse blocks across the whole
+/// model (k and v streams of every (layer, kv-head)).  Ring blocks and
+/// the forked tail stay owned and are charged to the sequence.
+pub fn shared_full_blocks(
+    depth: usize,
+    buffer: usize,
+    block_tokens: usize,
+    n_layers: usize,
+    n_kv_heads: usize,
+) -> usize {
+    let bt = block_tokens.max(1);
+    2 * n_layers * n_kv_heads * (depth.saturating_sub(buffer) / bt)
+}
+
+/// The candidate entry keys of a prompt under one config, shallowest
+/// block first — computed once per request so the router can score
+/// every shard's fingerprint set without rehashing the prompt per
+/// shard ([`affinity_from_keys`]).
+pub fn affinity_keys(tokens: &[u32], bt: usize, cfg: u64) -> Vec<u64> {
+    let bt = bt.max(1);
+    let m = insert_depth(tokens.len(), bt);
+    if m == 0 {
+        return Vec::new();
+    }
+    chain_hashes(&tokens[..m], bt).into_iter().map(|ch| entry_key(ch, cfg)).collect()
+}
+
+/// Deepest key of [`affinity_keys`] present in a shard's published
+/// fingerprint set, as a token depth (`0` — no overlap).
+pub fn affinity_from_keys(keys: &[u64], bt: usize, fps: &[u64]) -> usize {
+    if fps.is_empty() {
+        return 0;
+    }
+    let bt = bt.max(1);
+    for (bi, k) in keys.iter().enumerate().rev() {
+        if fps.contains(k) {
+            return (bi + 1) * bt;
+        }
+    }
+    0
+}
+
+/// Longest prefix of `tokens` whose entry key appears in a shard's
+/// published fingerprint set — the cache-affinity signal MemAware
+/// placement routes on.  A fingerprint hit is only a heuristic (the
+/// shard may have evicted since publishing); placement falls back to
+/// load, never correctness.
+pub fn affinity_depth(tokens: &[u32], bt: usize, cfg: u64, fps: &[u64]) -> usize {
+    affinity_from_keys(&affinity_keys(tokens, bt, cfg), bt, fps)
+}
+
+/// One cached prefix in the coordinator-side tree.
+pub struct PrefixEntry {
+    /// Tree key (chain hash at `depth` mixed with the config hash) —
+    /// also the id the stage-side stores file their payloads under.
+    pub key: u64,
+    /// Cached token count (a multiple of `block_tokens`).
+    pub depth: usize,
+    /// The exact tokens — every match verifies against these, so a
+    /// hash collision degrades to a miss, never to wrong reuse.
+    pub tokens: Vec<u32>,
+    /// Analytic block charge held against the pool budget.
+    pub charge_blocks: usize,
+    /// Logical LRU clock value at last match/insert/refresh.
+    pub last_used: u64,
+    pub hits: u64,
+}
+
+/// The coordinator-side prefix index for one pipeline group.  Flat map,
+/// radix-tree semantics: because each chain hash commits to its whole
+/// prefix, "longest cached prefix" is a walk over the prompt's O(P/bt)
+/// chain values, deepest first.
+pub struct PrefixTree {
+    entries: HashMap<u64, PrefixEntry>,
+    clock: u64,
+    bt: usize,
+}
+
+impl PrefixTree {
+    pub fn new(block_tokens: usize) -> PrefixTree {
+        PrefixTree { entries: HashMap::new(), clock: 0, bt: block_tokens.max(1) }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.bt
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sum of analytic block charges across all entries.
+    pub fn total_charge(&self) -> usize {
+        self.entries.values().map(|e| e.charge_blocks).sum()
+    }
+
+    /// See [`insert_depth`].
+    pub fn insert_depth(&self, prompt_len: usize) -> usize {
+        insert_depth(prompt_len, self.bt)
+    }
+
+    /// Longest cached, token-verified prefix of `tokens` under config
+    /// `cfg`; bumps the winner's LRU clock and hit count.
+    pub fn match_longest(&mut self, tokens: &[u32], cfg: u64) -> Option<(u64, usize)> {
+        let (key, depth) = self.peek_longest(tokens, cfg)?;
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_used = self.clock;
+            e.hits += 1;
+        }
+        Some((key, depth))
+    }
+
+    /// [`PrefixTree::match_longest`] without the LRU side effects —
+    /// admission projections peek without committing.
+    pub fn peek_longest(&self, tokens: &[u32], cfg: u64) -> Option<(u64, usize)> {
+        let m = self.insert_depth(tokens.len());
+        if m == 0 {
+            return None;
+        }
+        let chains = chain_hashes(&tokens[..m], self.bt);
+        for (bi, &ch) in chains.iter().enumerate().rev() {
+            let depth = (bi + 1) * self.bt;
+            let key = entry_key(ch, cfg);
+            if let Some(e) = self.entries.get(&key) {
+                if e.depth == depth && e.tokens == tokens[..depth] {
+                    return Some((key, depth));
+                }
+            }
+        }
+        None
+    }
+
+    /// Insert a prefix under a precomputed `key` (the chain hash at
+    /// `tokens.len()` mixed with the config hash).  Returns `true` when
+    /// a NEW entry was created — the caller then commits the stage-side
+    /// payload.  An existing entry with the same tokens just refreshes
+    /// its clock; a colliding entry with different tokens is left alone
+    /// (the insert degrades to a no-op).
+    pub fn insert(&mut self, key: u64, tokens: &[u32], charge_blocks: usize) -> bool {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            if e.tokens == tokens {
+                e.last_used = self.clock;
+            }
+            return false;
+        }
+        self.entries.insert(
+            key,
+            PrefixEntry {
+                key,
+                depth: tokens.len(),
+                tokens: tokens.to_vec(),
+                charge_blocks,
+                last_used: self.clock,
+                hits: 0,
+            },
+        );
+        true
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Least-recently-used entry key, skipping `excluded` (entries
+    /// currently attached by running sequences — evicting those frees
+    /// nothing until the sequences retire, so the sweeper prefers cold
+    /// ones).
+    pub fn lru_key_excluding(&self, excluded: &[u64]) -> Option<u64> {
+        self.entries
+            .values()
+            .filter(|e| !excluded.contains(&e.key))
+            .min_by_key(|e| (e.last_used, e.key))
+            .map(|e| e.key)
+    }
+
+    pub fn remove(&mut self, key: u64) -> Option<PrefixEntry> {
+        self.entries.remove(&key)
+    }
+
+    /// Drop everything, returning the evicted keys (broadcast to the
+    /// stages so their stores release the pinned blocks).
+    pub fn flush(&mut self) -> Vec<u64> {
+        let keys: Vec<u64> = self.entries.keys().copied().collect();
+        self.entries.clear();
+        keys
+    }
+
+    /// Compact fingerprint set for affinity routing: up to `cap` entry
+    /// keys, most recently used first.
+    pub fn fingerprints(&self, cap: usize) -> Vec<u64> {
+        let mut v: Vec<(u64, u64)> = self.entries.values().map(|e| (e.last_used, e.key)).collect();
+        v.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+        v.truncate(cap);
+        v.into_iter().map(|(_, k)| k).collect()
+    }
+
+    /// Total hits across live entries (STATS rendering).
+    pub fn total_hits(&self) -> u64 {
+        self.entries.values().map(|e| e.hits).sum()
+    }
+}
+
+/// Per-Prefill sidecar of the stage protocol: how to run this prompt
+/// under prefix serving.  `None` at the protocol level means legacy
+/// exact prefill (prefix serving off).
+#[derive(Clone, Debug)]
+pub struct PrefixPrefill {
+    /// Prefix-store entry to attach before the suffix runs (`None` —
+    /// miss: the whole prompt is the suffix).
+    pub attach: Option<u64>,
+    /// Tokens already cached (the attach depth); the carried hidden
+    /// rows cover positions `start_pos..prompt_len`.
+    pub start_pos: usize,
+    /// `(entry_key, depth)` to capture mid-prefill and commit at retire
+    /// (`None` — the tree already holds this prompt's insertable
+    /// prefix).
+    pub insert: Option<(u64, usize)>,
+}
+
+/// A stage's parked capture for one running sequence: committed into
+/// the stage store when the coordinator retires the sequence with an
+/// insert marker, dropped on preemption or cancellation.
+pub struct PendingInsert {
+    pub key: u64,
+    pub depth: usize,
+    /// Ring snapshots captured at exactly `depth` tokens, one `(k, v)`
+    /// pair per cache in the sequence's cache order.
+    pub rings: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// Owned copy of the first `rows` CSR rows of a partially filled block
+/// — the prefix entry's share of a block the donor sequence kept
+/// appending into.  Attaching copies these into a fresh lease, so the
+/// bytes a warm cache ends up with are bit-identical to a cold run's.
+pub struct TailRows {
+    pub vals: Vec<f32>,
+    pub idx: Vec<u16>,
+    /// Padded row boundaries, `rows + 1` entries starting at 0.
+    pub offsets: Vec<u32>,
+    pub nnz: Vec<u32>,
+    /// Eq. 1 bytes of the copied rows.
+    pub bytes: usize,
+}
+
+impl TailRows {
+    pub fn row_count(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+}
+
+/// One (layer, kv-head) stream of a cached prefix: full winnowed blocks
+/// shared zero-copy (each `Arc` clone holds one pool reference), plus
+/// owned copies of the partial sparse tails and the dense ring rows.
+/// Dropping the stream releases its pool references — blocks free only
+/// when the last holder (entry or attached sequence) lets go.
+pub struct EntryStream {
+    pub pool: Arc<BlockPool>,
+    pub full_k: Vec<Arc<BlockBuf>>,
+    pub full_v: Vec<Arc<BlockBuf>>,
+    pub tail_k: Option<TailRows>,
+    pub tail_v: Option<TailRows>,
+    /// Ring rows at the entry's depth, oldest first, flattened.
+    pub ring_k: Vec<f32>,
+    pub ring_v: Vec<f32>,
+}
+
+impl EntryStream {
+    /// Shared (pool-resident) blocks this stream pins.
+    pub fn shared_blocks(&self) -> usize {
+        self.full_k.len() + self.full_v.len()
+    }
+}
+
+impl Drop for EntryStream {
+    fn drop(&mut self) {
+        for a in self.full_k.drain(..) {
+            self.pool.release_shared(a);
+        }
+        for a in self.full_v.drain(..) {
+            self.pool.release_shared(a);
+        }
+    }
+}
+
+/// One stage's share of a prefix entry: the streams for its layer
+/// range, in the stage's cache order (`layer-in-range * n_kv + head`).
+pub struct StageEntry {
+    pub depth: usize,
+    pub streams: Vec<EntryStream>,
+}
+
+/// The per-stage store, keyed by entry key.
+pub type StagePrefixStore = HashMap<u64, StageEntry>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(k: usize, buffer: usize) -> SwanParams {
+        SwanParams::new(k, buffer, StorageMode::F16).with_lanes(1)
+    }
+
+    #[test]
+    fn chain_hashes_commit_to_whole_prefix() {
+        let a = chain_hashes(&[1, 2, 3, 4, 5, 6], 2);
+        assert_eq!(a.len(), 3);
+        let b = chain_hashes(&[1, 2, 3, 4], 2);
+        assert_eq!(&a[..2], &b[..]);
+        // a different early token changes every later chain value
+        let c = chain_hashes(&[9, 2, 3, 4, 5, 6], 2);
+        assert!(a.iter().zip(&c).all(|(x, y)| x != y));
+        // partial blocks contribute nothing
+        assert_eq!(chain_hashes(&[1, 2, 3], 2).len(), 1);
+        assert_eq!(chain_hashes(&[1], 2).len(), 0);
+    }
+
+    #[test]
+    fn cfg_key_separates_compression_configs() {
+        let base = cfg_key(&params(8, 4), 16);
+        assert_ne!(base, cfg_key(&params(9, 4), 16), "k must participate");
+        assert_ne!(base, cfg_key(&params(8, 5), 16), "buffer must participate");
+        assert_ne!(base, cfg_key(&params(8, 4), 8), "block_tokens must participate");
+        let mut p8 = params(8, 4);
+        p8.mode = StorageMode::F8;
+        assert_ne!(base, cfg_key(&p8, 16), "mode must participate");
+        assert_eq!(base, cfg_key(&params(8, 4), 16), "deterministic");
+    }
+
+    #[test]
+    fn insert_depth_leaves_one_suffix_token() {
+        assert_eq!(insert_depth(0, 4), 0);
+        assert_eq!(insert_depth(1, 4), 0);
+        assert_eq!(insert_depth(4, 4), 0); // 4 tokens: depth 4 would leave no suffix
+        assert_eq!(insert_depth(5, 4), 4);
+        assert_eq!(insert_depth(9, 4), 8);
+        assert_eq!(insert_depth(8, 4), 4);
+        assert_eq!(insert_depth(3, 1), 2);
+    }
+
+    #[test]
+    fn tree_matches_longest_and_verifies_tokens() {
+        let cfg = cfg_key(&params(8, 2), 2);
+        let mut t = PrefixTree::new(2);
+        let tokens: Vec<u32> = (0..10).collect();
+        let chains = chain_hashes(&tokens, 2);
+        // insert depth-4 and depth-8 entries of the same chain
+        assert!(t.insert(entry_key(chains[1], cfg), &tokens[..4], 10));
+        assert!(t.insert(entry_key(chains[3], cfg), &tokens[..8], 20));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.total_charge(), 30);
+        // a 9-token prompt caps matching at depth 8
+        assert_eq!(t.match_longest(&tokens[..9], cfg).map(|(_, d)| d), Some(8));
+        // an 8-token prompt caps at depth 6 -> chain has no entry at 6, falls to 4
+        assert_eq!(t.match_longest(&tokens[..8], cfg).map(|(_, d)| d), Some(4));
+        // a diverging prompt with the same length misses
+        let other: Vec<u32> = (100..110).collect();
+        assert_eq!(t.match_longest(&other, cfg), None);
+        // a different config misses even on identical tokens
+        let cfg2 = cfg_key(&params(4, 2), 2);
+        assert_eq!(t.match_longest(&tokens[..9], cfg2), None);
+        // re-insert of the same prefix refreshes, not duplicates
+        assert!(!t.insert(entry_key(chains[3], cfg), &tokens[..8], 20));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn lru_order_and_exclusion() {
+        let cfg = 7;
+        let mut t = PrefixTree::new(1);
+        let ka = entry_key(chain_hashes(&[1], 1)[0], cfg);
+        let kb = entry_key(chain_hashes(&[2], 1)[0], cfg);
+        let kc = entry_key(chain_hashes(&[3], 1)[0], cfg);
+        assert!(t.insert(ka, &[1], 1));
+        assert!(t.insert(kb, &[2], 1));
+        assert!(t.insert(kc, &[3], 1));
+        // a is oldest; touch it via a match and b becomes LRU
+        assert!(t.match_longest(&[1, 99], cfg).is_some());
+        assert_eq!(t.lru_key_excluding(&[]), Some(kb));
+        assert_eq!(t.lru_key_excluding(&[kb]), Some(kc));
+        assert_eq!(t.lru_key_excluding(&[kb, kc]), Some(ka));
+        assert_eq!(t.lru_key_excluding(&[ka, kb, kc]), None);
+        let e = t.remove(kb).unwrap();
+        assert_eq!(e.depth, 1);
+        assert_eq!(t.len(), 2);
+        let mut flushed = t.flush();
+        flushed.sort_unstable();
+        let mut want = vec![ka, kc];
+        want.sort_unstable();
+        assert_eq!(flushed, want);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn fingerprints_prefer_recent_and_drive_affinity() {
+        let cfg = 11;
+        let mut t = PrefixTree::new(2);
+        let tokens: Vec<u32> = (0..6).collect();
+        let chains = chain_hashes(&tokens, 2);
+        let k4 = entry_key(chains[1], cfg);
+        t.insert(entry_key(chains[0], cfg), &tokens[..2], 1);
+        t.insert(k4, &tokens[..4], 1);
+        let fps = t.fingerprints(1);
+        assert_eq!(fps, vec![k4], "cap keeps the most recently used");
+        // affinity: a 6-token prompt matches depth 4 via the fingerprint
+        assert_eq!(affinity_depth(&tokens, 2, cfg, &t.fingerprints(8)), 4);
+        assert_eq!(affinity_depth(&tokens, 2, cfg, &fps), 4);
+        // wrong config or foreign tokens -> no affinity
+        assert_eq!(affinity_depth(&tokens, 2, 12, &fps), 0);
+        assert_eq!(affinity_depth(&[9, 9, 9, 9, 9, 9], 2, cfg, &fps), 0);
+        assert_eq!(affinity_depth(&tokens, 2, cfg, &[]), 0);
+    }
+
+    #[test]
+    fn shared_full_block_rate() {
+        // depth 17, buffer 3 -> 14 sparse rows -> 3 full blocks of 4 per
+        // stream; 2 layers x 2 kv heads x (k+v) = 8 streams
+        assert_eq!(shared_full_blocks(17, 3, 4, 2, 2), 8 * 3);
+        // all-ring depth shares nothing
+        assert_eq!(shared_full_blocks(3, 4, 4, 2, 2), 0);
+    }
+}

@@ -87,6 +87,24 @@ impl Client {
         Ok(())
     }
 
+    /// Toggle cross-request prefix caching fleet-wide (`SET prefix
+    /// on|off`); returns how many members applied the toggle (engine
+    /// shards and dense-baseline groups cannot host a tree and don't
+    /// count).
+    pub fn set_prefix(&mut self, on: bool) -> anyhow::Result<usize> {
+        let v = if on { "on" } else { "off" };
+        writeln!(self.writer, "SET prefix {v}")?;
+        let l = self.line()?;
+        let want = format!("OK prefix={v} applied=");
+        anyhow::ensure!(l.starts_with(&want), "unexpected reply '{l}'");
+        let applied = l[want.len()..]
+            .split('/')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed reply '{l}'"))?;
+        Ok(applied)
+    }
+
     /// Drain shard `id`: placement stops immediately, in-flight work
     /// finishes (or migrates after the server's drain timeout), then the
     /// shard retires (`DRAIN <id>`).

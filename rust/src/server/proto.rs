@@ -49,6 +49,10 @@ pub enum Command {
     /// placeable shards live (scale-up launches supervised members,
     /// scale-down drains the youngest; KV budget rebalances either way).
     SetShards(usize),
+    /// `SET prefix on|off` — fleet-wide cross-request prefix caching
+    /// toggle; `off` flushes every group's tree and releases the
+    /// pinned blocks.
+    SetPrefix(bool),
     /// `DRAIN <id>` — stop placing on shard `id`, let its in-flight
     /// work finish (or migrate after the drain timeout), then retire it.
     Drain(usize),
@@ -290,9 +294,18 @@ pub fn parse_line(line: &str) -> Result<Command, ProtoError> {
                         got: n.to_string(),
                     })
                 }
+                (Some("prefix"), Some(v)) => match v {
+                    "on" | "1" | "true" => Ok(Command::SetPrefix(true)),
+                    "off" | "0" | "false" => Ok(Command::SetPrefix(false)),
+                    _ => Err(ProtoError::BadArgs {
+                        verb: "SET prefix",
+                        expected: "on|off",
+                        got: v.to_string(),
+                    }),
+                },
                 _ => Err(ProtoError::BadArgs {
                     verb: "SET",
-                    expected: "'k_active <n>', 'balance <policy>' or 'shards <n>'",
+                    expected: "'k_active <n>', 'balance <policy>', 'shards <n>' or 'prefix on|off'",
                     got: rest.to_string(),
                 }),
             }
@@ -441,9 +454,20 @@ mod tests {
         assert_eq!(parse_line("drain 0\n").unwrap(), Command::Drain(0));
         assert_eq!(parse_line("DRAIN").unwrap_err().code(), "bad-args");
         assert_eq!(parse_line("DRAIN x").unwrap_err().code(), "bad-args");
-        // the SET usage string names all three subcommands
+        // the SET usage string names every subcommand
         let e = parse_line("SET foo 3").unwrap_err();
         assert!(e.to_string().contains("'shards <n>'"), "{e}");
+        assert!(e.to_string().contains("'prefix on|off'"), "{e}");
+    }
+
+    #[test]
+    fn parses_set_prefix() {
+        assert_eq!(parse_line("SET prefix on").unwrap(), Command::SetPrefix(true));
+        assert_eq!(parse_line("set prefix 1\r\n").unwrap(), Command::SetPrefix(true));
+        assert_eq!(parse_line("SET prefix off").unwrap(), Command::SetPrefix(false));
+        assert_eq!(parse_line("SET prefix false").unwrap(), Command::SetPrefix(false));
+        assert_eq!(parse_line("SET prefix maybe").unwrap_err().code(), "bad-args");
+        assert_eq!(parse_line("SET prefix").unwrap_err().code(), "bad-args");
     }
 
     #[test]

@@ -222,6 +222,20 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>, max_new_cap: usize) {
                 };
                 let _ = writeln!(lock_recover(&writer), "{reply}");
             }
+            Ok(Command::SetPrefix(on)) => {
+                // report how many members actually applied the toggle —
+                // engine shards and dense-baseline groups cannot host a
+                // prefix tree and ack `false`
+                let reply = match router.set_prefix(on) {
+                    Ok(acks) => {
+                        let applied = acks.iter().filter(|(_, ok)| *ok).count();
+                        let v = if on { "on" } else { "off" };
+                        format!("OK prefix={v} applied={applied}/{}", acks.len())
+                    }
+                    Err(e) => format!("ERR unavailable {e}"),
+                };
+                let _ = writeln!(lock_recover(&writer), "{reply}");
+            }
             Ok(Command::Drain(id)) => {
                 let reply = match router.drain(id) {
                     Ok(()) => "OK".to_string(),

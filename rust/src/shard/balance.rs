@@ -64,11 +64,18 @@ impl BalancePolicy for LeastQueued {
     }
 }
 
-/// Place on the shard with the smallest projected KV footprint — the
-/// figure each shard's scheduler derives from `Scheduler::projected_bytes`
-/// over its live set and queue.  Sequence *count* ties break by load,
-/// then id, so an all-idle fleet degrades to round-robin-by-id rather
-/// than piling onto shard 0.
+/// Memory-aware placement, now cache-affinity first:
+///
+/// 1. largest `affinity` (cached-prefix overlap in tokens, filled per
+///    request by the router from the shards' published prefix
+///    fingerprints — landing on the shard that already holds the
+///    prompt's prefix turns its prefill into a block attach);
+/// 2. then most free KV space: *block-granular* where the shard
+///    publishes a block budget (`total_blocks > 0` — fewest used
+///    granules, which with a fleet-uniform budget is "most free
+///    blocks"), projected bytes where it accounts bytes only;
+/// 3. then fewest sequences, then lowest id, so an all-idle fleet
+///    degrades to round-robin-by-id rather than piling onto shard 0.
 #[derive(Debug, Default)]
 pub struct MemAware;
 
@@ -81,7 +88,14 @@ impl BalancePolicy for MemAware {
         shards
             .iter()
             .enumerate()
-            .min_by_key(|(_, s)| (s.projected_bytes, s.load(), s.id))
+            .min_by_key(|(_, s)| {
+                let space = if s.total_blocks > 0 {
+                    s.total_blocks.saturating_sub(s.free_blocks)
+                } else {
+                    s.projected_bytes
+                };
+                (std::cmp::Reverse(s.affinity), space, s.load(), s.id)
+            })
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
@@ -133,6 +147,26 @@ mod tests {
         assert_eq!(p.pick(&[snap(0, 0, 0, 900), snap(1, 9, 9, 100), snap(2, 0, 0, 500)]), 1);
         // byte tie -> fewer sequences wins
         assert_eq!(p.pick(&[snap(0, 2, 2, 100), snap(1, 0, 1, 100)]), 1);
+    }
+
+    #[test]
+    fn mem_aware_prefers_affinity_then_free_blocks() {
+        let mut p = MemAware;
+        let mut a = snap(0, 0, 0, 100);
+        a.total_blocks = 64;
+        a.free_blocks = 10;
+        let mut b = snap(1, 5, 5, 900);
+        b.total_blocks = 64;
+        b.free_blocks = 2;
+        b.affinity = 32;
+        // cached-prefix overlap dominates load and free space
+        assert_eq!(p.pick(&[a, b]), 1);
+        // without affinity, block-granular free space decides
+        b.affinity = 0;
+        assert_eq!(p.pick(&[a, b]), 0);
+        // a byte-only shard (no block budget) still compares by bytes
+        let c = snap(2, 0, 0, 50);
+        assert_eq!(p.pick(&[snap(0, 0, 0, 900), c]), 1);
     }
 
     #[test]

@@ -102,6 +102,16 @@ pub struct ShardSnapshot {
     pub projected_bytes: usize,
     /// The shard's current compression level.
     pub k_active: usize,
+    /// Free / total allocation granules under block-accounted admission;
+    /// both zero when the shard accounts bytes only (then `MemAware`
+    /// falls back to `projected_bytes`).
+    pub free_blocks: usize,
+    pub total_blocks: usize,
+    /// Cached-prefix overlap with the request being placed, in tokens
+    /// (longest token-block chain of the request's prompt that matches
+    /// this shard's published prefix fingerprints).  Filled per request
+    /// by the router before policies run; zero outside placement.
+    pub affinity: usize,
     /// Lifecycle state; the router places only on `Healthy` shards.
     pub state: ShardState,
 }

@@ -56,10 +56,15 @@ use crate::obs::histogram::Histogram;
 use crate::obs::registry::{Gauge, Registry};
 use crate::obs::trace::{TraceKind, TraceRing, TRACE_RING_CAP};
 use crate::pool::{pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache, PoolObs};
+use crate::prefix::{
+    cfg_key, chain_hashes, entry_key, shared_full_blocks, EntryStream, PendingInsert,
+    PrefixPrefill, PrefixTree, StageEntry, StagePrefixStore,
+};
 use crate::shard::shard::{panic_reason, ShardCmd, ShardHandle, ShardStatus};
 use crate::shard::supervisor::{FleetEvent, RecoveredReq, ShardHooks, StageFaults};
 use crate::shard::ShardState;
 use crate::swan::batch::WorkerPool;
+use crate::util::sync::lock_recover;
 use crate::util::Pcg64;
 
 /// Split `n_layers` into `n_stages` contiguous ranges, earliest stages
@@ -91,7 +96,13 @@ pub enum StageCmd {
     /// hidden rows (`[T, d_model]` flat), seed the stage caches, hand the
     /// transformed rows downstream.  The last stage answers the
     /// coordinator with the prompt's final logits.
-    Prefill { seq: u64, h: Vec<f32>, k_active: usize },
+    ///
+    /// `prefix` switches the stage to prefix serving for this sequence:
+    /// the carried rows cover only the prompt *suffix*, a cached prefix
+    /// may be attached from the stage's prefix store first, and the
+    /// suffix runs through the cache-consistent per-token path (see the
+    /// handler) instead of the exact-attention bulk prefill.
+    Prefill { seq: u64, h: Vec<f32>, k_active: usize, prefix: Option<PrefixPrefill> },
     /// One decode iteration for the whole ready set: stage 0 consumes
     /// `tokens` (one sampled token per sequence), later stages consume
     /// `h` (one hidden row per sequence).  The last stage answers the
@@ -103,8 +114,16 @@ pub enum StageCmd {
     /// finished ones and cancellations (`CANCEL <id>` / client
     /// disconnect): the group coordinator marks a cancelled sequence
     /// finished at its next iteration and this hop reclaims its KV on
-    /// every stage.
-    Retire { seqs: Vec<u64> },
+    /// every stage.  Ids listed in `insert` (always a subset of `seqs`)
+    /// commit their parked [`PendingInsert`] into the stage prefix
+    /// store before the cache drops — sharing the retiring sequence's
+    /// full winnowed blocks zero-copy; preemptions send `insert` empty.
+    Retire { seqs: Vec<u64>, insert: Vec<u64> },
+    /// Drop prefix-store entries (LRU shed under pool pressure, or the
+    /// full flush of `SET prefix off`).  Running sequences that attached
+    /// an evicted entry keep their block references — the pool frees a
+    /// block only when its last holder lets go.
+    PrefixEvict { entries: Vec<u64> },
     /// Record the compression level for newly admitted sequences; ack the
     /// applied (d_head-clamped) value.
     SetK { k: usize, ack: mpsc::Sender<usize> },
@@ -201,6 +220,12 @@ fn request_k_for(req: &Request, d_head: usize, k_now: usize) -> usize {
 /// closest to finishing and have the most replay state).
 pub const MAX_PREEMPTIONS: u32 = 3;
 
+/// Cap on the prefix-entry fingerprints a group publishes in its
+/// [`ShardStatus`] for cache-affinity routing: most-recently-used first,
+/// so the router sees the entries most likely to still be resident.
+/// Bounded so the router's per-placement scan stays O(P/bt · cap).
+pub const PREFIX_FP_CAP: usize = 128;
+
 fn policy_kind(cfg: &ServeConfig, k_active: usize) -> PolicyKind {
     if cfg.dense_baseline {
         PolicyKind::Dense
@@ -239,11 +264,14 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
     let first = layers.start == 0;
     let mut pool = WorkerPool::new(cfg.decode_workers);
     let mut seqs: HashMap<u64, SequenceState> = HashMap::new();
+    // prefix serving: committed prefix payloads keyed by entry key, and
+    // per-sequence captures parked between prefill and retire
+    let mut store: StagePrefixStore = HashMap::new();
+    let mut pending: HashMap<u64, PendingInsert> = HashMap::new();
     while let Ok(cmd) = rx.recv() {
         match cmd {
-            StageCmd::Prefill { seq, mut h, k_active } => {
+            StageCmd::Prefill { seq, mut h, k_active, prefix } => {
                 faults.on_prefill(stage);
-                let pf = model.prefill_layers(&mut h, layers.clone(), &mut pool);
                 let mut st = match &block_pool {
                     // paged path: same SWAN policy, storage leased from
                     // the stage pool block by block (bit-identical to
@@ -263,12 +291,79 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                         layers.len(),
                     ),
                 };
-                st.load_prefill(&pf);
+                match &prefix {
+                    // Cache-consistent prefill: attach the cached prefix
+                    // (if any), then run every suffix row through the
+                    // SAME per-token step decode uses, so the winnowed
+                    // state after P tokens is a pure function of the
+                    // tokens — a warm hit (attach L, run P-L) lands on
+                    // bit-identical state and logits to a cold run
+                    // (attach 0, run P) of the same prompt.  The exact
+                    // bulk prefill below computes *exact* attention over
+                    // the prompt instead, which is NOT replayable from a
+                    // block boundary — that's why prefix serving swaps
+                    // the prefill flavor wholesale rather than mixing.
+                    Some(px) => {
+                        if let Some(key) = px.attach {
+                            let entry = match store.get(&key) {
+                                Some(e) => e,
+                                // lint: allow(panic, "stage-protocol invariant: the coordinator only attaches keys it inserted, and evictions broadcast before any admission that could re-reference them; the supervised stage turns a violation into StageFailed -> shard-death + recovery")
+                                None => panic!("stage {stage}: prefix entry missing at attach"),
+                            };
+                            for (c, stream) in st.caches.iter_mut().zip(&entry.streams) {
+                                match c.as_paged() {
+                                    Some(p) => p.attach_prefix(stream, entry.depth),
+                                    // lint: allow(panic, "prefix implies the paged pool (launch_group_with forces pool_on), so every cache here is a PagedSwanCache")
+                                    None => panic!("prefix attach over a non-paged cache"),
+                                }
+                            }
+                            st.pos = entry.depth;
+                        }
+                        let d = model.cfg.d_model;
+                        let n = if d == 0 { 0 } else { h.len() / d };
+                        let mut out: Vec<f32> = Vec::with_capacity(h.len());
+                        for s_i in 0..n {
+                            let row = h[s_i * d..(s_i + 1) * d].to_vec();
+                            let mut rows = model.decode_step_pipeline(
+                                std::slice::from_mut(&mut st),
+                                StageInput::Hidden(vec![row]),
+                                layers.clone(),
+                                false,
+                                &mut pool,
+                            );
+                            // the cache now holds st.pos tokens; at
+                            // exactly the insert depth, snapshot the
+                            // dense rings (later winnowing destroys
+                            // them) — committed into the store only if
+                            // the sequence retires with an insert marker
+                            if let Some((key, depth)) = px.insert {
+                                if st.pos == depth {
+                                    let rings: Vec<(Vec<f32>, Vec<f32>)> = st
+                                        .caches
+                                        .iter_mut()
+                                        .map(|c| match c.as_paged() {
+                                            Some(p) => p.ring_snapshot(),
+                                            // lint: allow(panic, "prefix implies the paged pool (launch_group_with forces pool_on), so every cache here is a PagedSwanCache")
+                                            None => panic!("prefix capture over a non-paged cache"),
+                                        })
+                                        .collect();
+                                    pending.insert(seq, PendingInsert { key, depth, rings });
+                                }
+                            }
+                            out.extend_from_slice(&rows.pop().unwrap_or_default());
+                        }
+                        h = out;
+                    }
+                    None => {
+                        let pf = model.prefill_layers(&mut h, layers.clone(), &mut pool);
+                        st.load_prefill(&pf);
+                    }
+                }
                 seqs.insert(seq, st);
                 let sent = match &next {
                     Downstream::Stage(tx, st_next) => {
                         st_next.queued.fetch_add(1, Ordering::Relaxed);
-                        tx.send(StageCmd::Prefill { seq, h, k_active }).is_ok()
+                        tx.send(StageCmd::Prefill { seq, h, k_active, prefix }).is_ok()
                     }
                     Downstream::Coordinator(tx) => {
                         let logits = model.prefill_logits(&h);
@@ -336,9 +431,37 @@ fn stage_loop(ctx: StageCtx, rx: mpsc::Receiver<StageCmd>) {
                     break;
                 }
             }
-            StageCmd::Retire { seqs: ids } => {
+            StageCmd::Retire { seqs: ids, insert } => {
                 for id in ids {
-                    seqs.remove(&id);
+                    let st = seqs.remove(&id);
+                    let pi = pending.remove(&id);
+                    if !insert.contains(&id) {
+                        continue;
+                    }
+                    // commit the parked capture: share the retiring
+                    // sequence's full winnowed blocks (refcount bump, no
+                    // copy), keep owned copies of the partial tails and
+                    // the captured rings
+                    let (Some(mut st), Some(pi), Some(bp)) = (st, pi, block_pool.as_ref()) else {
+                        continue;
+                    };
+                    let PendingInsert { key, depth, rings } = pi;
+                    let streams: Vec<EntryStream> = st
+                        .caches
+                        .iter_mut()
+                        .zip(rings)
+                        .map(|(c, ring)| match c.as_paged() {
+                            Some(p) => p.share_prefix(depth, ring, bp.clone()),
+                            // lint: allow(panic, "prefix implies the paged pool (launch_group_with forces pool_on), so every cache here is a PagedSwanCache")
+                            None => panic!("prefix commit over a non-paged cache"),
+                        })
+                        .collect();
+                    store.insert(key, StageEntry { depth, streams });
+                }
+            }
+            StageCmd::PrefixEvict { entries } => {
+                for key in entries {
+                    store.remove(&key);
                 }
             }
             StageCmd::SetK { k, ack } => {
@@ -401,6 +524,20 @@ struct GroupSeq {
     /// across preemptions, so the first post-resume token charges the
     /// full user-observed stall.
     last_token: Instant,
+    /// Whether the sequence was admitted under prefix serving (the
+    /// per-token prefill flavor).  A preemption-resume must rebuild via
+    /// the same flavor or the reconstructed cache would diverge.
+    prefix_mode: bool,
+    /// Prefix-tree entry this sequence attached at admission, if any —
+    /// the sweeper never evicts attached entries.
+    prefix_entry: Option<u64>,
+    /// Full pool blocks the sequence shares with its attached entry
+    /// (charged once, to the tree, not per attached sequence).
+    shared_blocks: usize,
+    /// `(entry_key, depth, charge_blocks)` the sequence will insert into
+    /// the prefix tree when it retires (the stage side parked the ring
+    /// capture during prefill).
+    pending_insert: Option<(u64, usize, usize)>,
     finished: bool,
 }
 
@@ -432,6 +569,10 @@ struct Carry {
     preempted_at: Instant,
     /// ITL clock carried through the preemption (see [`GroupSeq`]).
     last_token: Instant,
+    /// Prefill flavor the sequence was admitted under (see
+    /// [`GroupSeq::prefix_mode`]) — resume must reuse it even if the
+    /// prefix toggle flipped in between.
+    prefix_mode: bool,
 }
 
 /// Pipeline-only instruments, registered in the group's shared
@@ -504,6 +645,10 @@ struct Group {
     /// keyed by request id (the request itself waits at the scheduler
     /// front; the sink stays in `sinks`).
     preempted: HashMap<u64, Carry>,
+    /// Cross-request prefix index (`--prefix-cache` / `SET prefix on`;
+    /// `None` when prefix serving is off).  Requires the pool — entries
+    /// pin pool blocks by refcount.
+    prefix: Option<PrefixTree>,
 }
 
 impl Group {
@@ -554,9 +699,21 @@ impl Group {
         seq_blocks(tokens, self.cfg.buffer, self.cfg.block_tokens, mc.n_layers, mc.n_kv_heads)
     }
 
-    /// Block-accounted live load (pool mode's admission unit).
+    /// Block-accounted live load (pool mode's admission unit).  A
+    /// sequence attached to a prefix entry doesn't re-charge the full
+    /// blocks it shares — those are charged once, via the tree
+    /// ([`Group::prefix_charge`]).
     fn live_blocks(&self) -> usize {
-        self.active.iter().map(|s| self.blocks_for_tokens(s.cached_tokens())).sum()
+        self.active
+            .iter()
+            .map(|s| self.blocks_for_tokens(s.cached_tokens()).saturating_sub(s.shared_blocks))
+            .sum()
+    }
+
+    /// Analytic block charge the prefix tree holds against the group
+    /// budget (0 when prefix serving is off).
+    fn prefix_charge(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |t| t.total_charge())
     }
 
     /// Blocks physically leased right now, across every stage pool.
@@ -644,6 +801,23 @@ impl Group {
             }
             self.obs.frag_percent.set(self.frag_percent() as u64);
         }
+        // block-granular placement signal: total 0 = no block accounting
+        // (pool off or unbounded budget), so MemAware falls back to the
+        // byte projection
+        let (total, free) = if self.pool_on() && self.total_blocks != usize::MAX {
+            let used = self.live_blocks() + self.prefix_charge();
+            (self.total_blocks, self.total_blocks.saturating_sub(used))
+        } else {
+            (0, 0)
+        };
+        status.total_blocks.store(total, Ordering::Relaxed);
+        status.free_blocks.store(free, Ordering::Relaxed);
+        // cache-affinity fingerprints (cleared when prefix serving is
+        // off, so the router never routes on stale entries)
+        match &self.prefix {
+            Some(tree) => *lock_recover(&status.prefix_fps) = tree.fingerprints(PREFIX_FP_CAP),
+            None => lock_recover(&status.prefix_fps).clear(),
+        }
     }
 
     /// Broadcast a retune to every stage and gather the acks; returns the
@@ -709,8 +883,15 @@ impl Group {
             let pool_on = self.pool_on();
             // pool mode admits in BLOCK units against the block budget
             // (the scheduler's `mem_budget` was constructed in blocks);
-            // the classic path projects bytes exactly as before
-            let live = if pool_on { self.live_blocks() } else { self.live_bytes() };
+            // the classic path projects bytes exactly as before.  The
+            // prefix tree's analytic charge rides on the live side, so
+            // cached-but-idle prefixes compete with admissions (and lose:
+            // see `shed_prefix_for_admission`).
+            let live = if pool_on {
+                self.live_blocks() + self.prefix_charge()
+            } else {
+                self.live_bytes()
+            };
             let buf = self.projection_buffer();
             // projection locals (the closure must not re-borrow self
             // while admit_next holds the scheduler mutably); each
@@ -722,13 +903,32 @@ impl Group {
             let mode = self.cfg.mode;
             let k_now = self.k_now;
             let (bt, buffer) = (self.cfg.block_tokens, self.cfg.buffer);
+            let tree = self.prefix.as_ref();
             let proj = |req: &Request| {
                 if pool_on {
                     // whole allocation granules for the full lifetime
                     // (prompt + requested output); k does not change the
-                    // block count, only how full each sparse block is
+                    // block count, only how full each sparse block is.
+                    // A prompt whose prefix is cached shares its full
+                    // winnowed blocks instead of re-leasing them — peek
+                    // (no LRU commitment) and project the difference.
                     let tokens = req.prompt.len().max(1) + req.params.max_new;
-                    seq_blocks(tokens, buffer, bt, nl, nkv)
+                    let mut blocks = seq_blocks(tokens, buffer, bt, nl, nkv);
+                    if let Some(t) = tree {
+                        let prompt: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
+                        let params = crate::swan::hybrid_cache::SwanParams::new(
+                            request_k_for(req, dh, k_now),
+                            buffer,
+                            mode,
+                        );
+                        if let Some((_, depth)) =
+                            t.peek_longest(prompt, cfg_key(&params, t.block_tokens()))
+                        {
+                            blocks = blocks
+                                .saturating_sub(shared_full_blocks(depth, buffer, bt, nl, nkv));
+                        }
+                    }
+                    blocks
                 } else {
                     let k = request_k_for(req, dh, k_now);
                     let (sparse_b, dense_b) =
@@ -743,6 +943,12 @@ impl Group {
                 }
             };
             let Some(pending) = self.scheduler.admit_next(self.active.len(), live, proj) else {
+                // the queue head may be blocked on blocks the prefix
+                // tree is hoarding: shed one cold entry and retry —
+                // admissions always win over idle cached prefixes
+                if self.shed_prefix_for_admission() {
+                    continue;
+                }
                 break;
             };
             let queue_time = pending.enqueued.elapsed();
@@ -760,9 +966,73 @@ impl Group {
             req.trace.record(if carry.is_some() { TraceKind::Resume } else { TraceKind::Admit });
             let t0 = Instant::now();
             let tokens: &[u32] = if req.prompt.is_empty() { &[0] } else { &req.prompt };
-            let h = self.model.embed_prompt(tokens);
-            let prefilled: anyhow::Result<Vec<f32>> =
-                match self.stages[0].send(StageCmd::Prefill { seq: rid, h, k_active: k_seq }) {
+            // prefix serving decision: resumes rebuild via the flavor
+            // they were admitted under (full per-token re-prefill, no
+            // attach — the entry may have been evicted since, and the
+            // per-token path reconstructs the identical state from the
+            // tokens alone); fresh requests match the tree and run only
+            // the uncached suffix
+            let prefix_mode = match &carry {
+                Some(c) => c.prefix_mode,
+                None => self.prefix.is_some(),
+            };
+            let mut hit_depth = 0usize;
+            let mut seq_entry: Option<u64> = None;
+            let mut seq_shared = 0usize;
+            let mut pending_insert: Option<(u64, usize, usize)> = None;
+            let prefix_cmd: Option<PrefixPrefill> = if !prefix_mode {
+                None
+            } else if carry.is_some() {
+                Some(PrefixPrefill { attach: None, start_pos: 0, insert: None })
+            } else if let Some(tree) = self.prefix.as_mut() {
+                let params = crate::swan::hybrid_cache::SwanParams::new(
+                    k_seq,
+                    self.cfg.buffer,
+                    self.cfg.mode,
+                );
+                let bt = tree.block_tokens();
+                let cfgk = cfg_key(&params, bt);
+                let mc = &self.model.cfg;
+                if let Some((key, depth)) = tree.match_longest(tokens, cfgk) {
+                    hit_depth = depth;
+                    seq_entry = Some(key);
+                    seq_shared = shared_full_blocks(
+                        depth,
+                        self.cfg.buffer,
+                        bt,
+                        mc.n_layers,
+                        mc.n_kv_heads,
+                    );
+                    self.metrics.prefix_hits.inc();
+                    self.metrics.prefix_tokens_saved.add(depth as u64);
+                    self.metrics.prefix_blocks_shared.add(seq_shared as u64);
+                    req.trace.record(TraceKind::PrefixHit);
+                } else {
+                    self.metrics.prefix_misses.inc();
+                }
+                // insert marker: the deepest full-block prefix that
+                // still leaves one suffix token, when it extends past
+                // what the tree already holds; charged analytically
+                let m = tree.insert_depth(tokens.len());
+                if m > hit_depth {
+                    if let Some(&ch) = chain_hashes(&tokens[..m], bt).last() {
+                        let charge =
+                            seq_blocks(m, self.cfg.buffer, bt, mc.n_layers, mc.n_kv_heads);
+                        pending_insert = Some((entry_key(ch, cfgk), m, charge));
+                    }
+                }
+                Some(PrefixPrefill {
+                    attach: seq_entry,
+                    start_pos: hit_depth,
+                    insert: pending_insert.map(|(k, d, _)| (k, d)),
+                })
+            } else {
+                None
+            };
+            let h = self.model.embed_prompt(&tokens[hit_depth..]);
+            let prefilled: anyhow::Result<Vec<f32>> = match self.stages[0].send(
+                StageCmd::Prefill { seq: rid, h, k_active: k_seq, prefix: prefix_cmd },
+            ) {
                     Err(e) => Err(e),
                     Ok(()) => loop {
                         match self.ev_rx.recv() {
@@ -833,6 +1103,10 @@ impl Group {
                     k_active: k_seq,
                     prompt_len: tokens.len(),
                     last_token: c.last_token,
+                    prefix_mode,
+                    prefix_entry: None,
+                    shared_blocks: 0,
+                    pending_insert: None,
                     finished: false,
                     req,
                 });
@@ -843,7 +1117,8 @@ impl Group {
             stats.prefill_time = t0.elapsed();
             self.metrics.prefill_ns.record(stats.prefill_time.as_nanos() as f64);
             self.metrics.prefill_seconds.record(stats.prefill_time);
-            self.metrics.prefill_tokens.add(tokens.len() as u64);
+            // a prefix hit prefills only the uncached suffix
+            self.metrics.prefill_tokens.add((tokens.len() - hit_depth) as u64);
             // first token samples from the prefill logits on this path
             // too, so TTFT = queue wait + prefill
             stats.ttft_ns = (queue_time + stats.prefill_time).as_nanos() as u64;
@@ -871,6 +1146,10 @@ impl Group {
                 prompt_len: tokens.len(),
                 replay: VecDeque::new(),
                 last_token: Instant::now(),
+                prefix_mode,
+                prefix_entry: seq_entry,
+                shared_blocks: seq_shared,
+                pending_insert,
                 finished: false,
                 req,
             });
@@ -901,14 +1180,17 @@ impl Group {
                 k_active: seq.k_active,
                 preempted_at: Instant::now(),
                 last_token: seq.last_token,
+                prefix_mode: seq.prefix_mode,
             },
         );
         self.scheduler.requeue_front(seq.req);
         // the Retire hop runs AFTER the hand-back: if a stage is already
         // dead this surfaces the error with the sequence safely parked in
-        // the queue + carry map, where a supervised death will extract it
+        // the queue + carry map, where a supervised death will extract it.
+        // `insert` stays empty: a preempted sequence's parked prefix
+        // capture dies with its stage caches (resume does not re-insert)
         for s in &self.stages {
-            s.send(StageCmd::Retire { seqs: vec![id] })?;
+            s.send(StageCmd::Retire { seqs: vec![id], insert: Vec::new() })?;
         }
         Ok(())
     }
@@ -990,6 +1272,10 @@ impl Group {
                 k_active: k,
                 preempted_at: Instant::now(),
                 last_token: Instant::now(),
+                // the prefix toggle is fleet-uniform (--prefix-cache /
+                // broadcast SET prefix), so the receiving group's mode
+                // matches the flavor the dead shard prefilled under
+                prefix_mode: self.prefix.is_some(),
             },
         );
         self.scheduler.requeue_front(req);
@@ -1032,6 +1318,88 @@ impl Group {
         }
     }
 
+    /// Evict the least-recently-used prefix entry not attached by any
+    /// running sequence and broadcast the eviction to the stages (their
+    /// stores drop the pinned blocks).  Returns `false` when there is
+    /// nothing evictable — prefix off, tree empty, or every entry
+    /// attached (evicting those frees nothing until the sequences
+    /// retire, so the sweeper skips them).
+    fn evict_coldest_prefix_entry(&mut self) -> bool {
+        let attached: Vec<u64> = self.active.iter().filter_map(|s| s.prefix_entry).collect();
+        let Some(tree) = self.prefix.as_mut() else {
+            return false;
+        };
+        let Some(key) = tree.lru_key_excluding(&attached) else {
+            return false;
+        };
+        tree.remove(key);
+        self.metrics.prefix_evictions.inc();
+        for s in &self.stages {
+            let _ = s.send(StageCmd::PrefixEvict { entries: vec![key] });
+        }
+        true
+    }
+
+    /// Admission-side prefix shed: when the queue head projects past the
+    /// block budget while the tree still holds cold entries, evict one
+    /// so the retried admission can fit.  Bounded — every call that
+    /// returns `true` shrinks the tree by one entry.
+    fn shed_prefix_for_admission(&mut self) -> bool {
+        if !self.pool_on()
+            || self.total_blocks == usize::MAX
+            || self.active.len() >= self.cfg.max_batch
+        {
+            return false;
+        }
+        if self.prefix.as_ref().map_or(true, |t| t.is_empty()) {
+            return false;
+        }
+        let head_over = match self.scheduler.queued().next() {
+            Some(r) => {
+                let tokens = r.prompt.len().max(1) + r.params.max_new;
+                let proj = self.blocks_for_tokens(tokens);
+                self.live_blocks() + self.prefix_charge() + proj > self.total_blocks
+            }
+            None => false,
+        };
+        head_over && self.evict_coldest_prefix_entry()
+    }
+
+    /// Live prefix toggle (`SET prefix on|off`).  Turning it on requires
+    /// the paged pool (prefix entries pin pool blocks) — a group
+    /// launched without `--pool`/`--prefix-cache` answers `false` and
+    /// stays unchanged.  Turning it off flushes the tree, releases every
+    /// stage-side pinned block, and detaches running sequences from
+    /// their shared-block accounting (physically shared blocks stay
+    /// alive until the last holder retires).
+    fn set_prefix(&mut self, on: bool) -> bool {
+        if on {
+            if !self.pool_on() || self.cfg.dense_baseline {
+                return false;
+            }
+            if self.prefix.is_none() {
+                self.prefix = Some(PrefixTree::new(self.cfg.block_tokens));
+            }
+            true
+        } else {
+            if let Some(mut tree) = self.prefix.take() {
+                let keys = tree.flush();
+                if !keys.is_empty() {
+                    self.metrics.prefix_evictions.add(keys.len() as u64);
+                    for s in &self.stages {
+                        let _ = s.send(StageCmd::PrefixEvict { entries: keys.clone() });
+                    }
+                }
+                for seq in &mut self.active {
+                    seq.shared_blocks = 0;
+                    seq.prefix_entry = None;
+                    seq.pending_insert = None;
+                }
+            }
+            true
+        }
+    }
+
     /// One decode iteration: forward the whole ready set down the chain,
     /// sample from the last stage's logits, retire finished sequences.
     fn decode_iteration(&mut self) -> anyhow::Result<()> {
@@ -1063,20 +1431,28 @@ impl Group {
         // serialize the batch, never wedge it.
         if self.pool_on() && self.total_blocks != usize::MAX {
             loop {
-                let running: Vec<usize> =
-                    (0..self.active.len()).filter(|&i| !self.active[i].finished).collect();
-                if running.len() <= 1 {
-                    break;
-                }
                 let after: usize = self
                     .active
                     .iter()
                     .map(|s| {
                         let grow = usize::from(!s.finished);
                         self.blocks_for_tokens(s.cached_tokens() + grow)
+                            .saturating_sub(s.shared_blocks)
                     })
-                    .sum();
+                    .sum::<usize>()
+                    + self.prefix_charge();
                 if after <= self.total_blocks {
+                    break;
+                }
+                // shed cold prefix entries FIRST: reclaiming a cached but
+                // unattached prefix costs a future warm hit, preempting a
+                // running sequence costs a full replay — strictly worse
+                if self.evict_coldest_prefix_entry() {
+                    continue;
+                }
+                let running: Vec<usize> =
+                    (0..self.active.len()).filter(|&i| !self.active[i].finished).collect();
+                if running.len() <= 1 {
                     break;
                 }
                 // youngest evictable victim: skip sequences that already
@@ -1179,10 +1555,25 @@ impl Group {
         // retire finished sequences (submission order preserved)
         if self.active.iter().any(|s| s.finished) {
             let mut done_ids = Vec::new();
+            let mut insert_ids = Vec::new();
             let mut keep = Vec::with_capacity(self.active.len());
             for mut seq in self.active.drain(..) {
                 if seq.finished {
                     done_ids.push(seq.req.id);
+                    // commit the prefix insert decided at admission: the
+                    // tree entry lands only if it's NEW (a concurrent
+                    // sequence may have inserted the same prefix first —
+                    // `insert` returning false dedups, and the stages
+                    // then discard their parked captures)
+                    if let Some((key, depth, charge)) = seq.pending_insert {
+                        if let Some(tree) = self.prefix.as_mut() {
+                            if depth <= seq.req.prompt.len()
+                                && tree.insert(key, &seq.req.prompt[..depth], charge)
+                            {
+                                insert_ids.push(seq.req.id);
+                            }
+                        }
+                    }
                     if seq.req.cancel.is_cancelled() {
                         // a mid-decode cancel is a cancellation AND a
                         // completion, mirroring the queued-purge path
@@ -1208,7 +1599,10 @@ impl Group {
             }
             self.active = keep;
             for s in &self.stages {
-                let _ = s.send(StageCmd::Retire { seqs: done_ids.clone() });
+                let _ = s.send(StageCmd::Retire {
+                    seqs: done_ids.clone(),
+                    insert: insert_ids.clone(),
+                });
             }
         }
         Ok(())
@@ -1241,6 +1635,21 @@ impl Group {
                 "  pool: blocks leased={leased}/{budget} bt={} frag={frag:.1}% preempted_live={}\n",
                 self.cfg.block_tokens,
                 self.preempted.len(),
+            ));
+        }
+        if let Some(tree) = &self.prefix {
+            let hits = self.metrics.prefix_hits.get();
+            let misses = self.metrics.prefix_misses.get();
+            let rate = if hits + misses > 0 {
+                100.0 * hits as f64 / (hits + misses) as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "  prefix: entries={} charge_blocks={} hits={hits} misses={misses} hit_rate={rate:.1}% tokens_saved={}\n",
+                tree.len(),
+                tree.total_charge(),
+                self.metrics.prefix_tokens_saved.get(),
             ));
         }
         let mut pending = Vec::with_capacity(self.stages.len());
@@ -1345,6 +1754,10 @@ fn group_loop(
                     let applied = g.set_k_active(k);
                     status.k_active.store(applied, Ordering::Relaxed);
                     let _ = ack.send(applied);
+                }
+                ShardCmd::SetPrefix { on, ack } => {
+                    let _ = ack.send(g.set_prefix(on));
+                    g.publish(status);
                 }
                 ShardCmd::Stats { reply } => {
                     let _ = reply.send(g.stats_block());
@@ -1463,8 +1876,9 @@ pub fn launch_group_with(
     // per block row), then give each stage its own pool with a target
     // proportional to its layer count.  Targets are gauges — leases are
     // elastic, and the budget is enforced analytically by the group
-    // coordinator in block units.
-    let pool_on = cfg.pool && !cfg.dense_baseline;
+    // coordinator in block units.  Prefix caching implies the pool:
+    // prefix entries ARE shared pool blocks.
+    let pool_on = (cfg.pool || cfg.prefix) && !cfg.dense_baseline;
     let (stage_pools, total_blocks) = if pool_on {
         let mc = &model.cfg;
         let total =
@@ -1549,6 +1963,11 @@ pub fn launch_group_with(
         stage_pools,
         total_blocks,
         preempted: HashMap::new(),
+        prefix: if pool_on && cfg.prefix {
+            Some(PrefixTree::new(cfg.block_tokens))
+        } else {
+            None
+        },
     };
 
     let status = Arc::new(ShardStatus::default());

@@ -90,6 +90,20 @@ impl Launcher {
     }
 }
 
+/// What the router needs to score a request's prefix cache-affinity
+/// against each shard's published fingerprints: the fleet compression
+/// defaults that parameterize [`crate::prefix::cfg_key`].  Present on
+/// pipeline fleets (the mode that can hold a prefix tree); a request
+/// whose per-request `k` snaps differently inside the group simply
+/// scores zero affinity and placement falls back to load — the
+/// fingerprint check is a heuristic, never a correctness input.
+struct PrefixRoute {
+    block_tokens: usize,
+    buffer: usize,
+    mode: crate::sparse::StorageMode,
+    k_default: usize,
+}
+
 struct RouterInner {
     /// Elastic membership; handles leave when the supervisor retires a
     /// dead/drained shard and join on live scale-up.
@@ -121,20 +135,39 @@ struct RouterInner {
     /// How long a draining shard waits for in-flight work before
     /// migrating it through the recovery path.
     drain_timeout: Duration,
+    /// Affinity-scoring inputs for prefix-cache routing; `None` on
+    /// fleets that can never hold a prefix tree (engine shards,
+    /// pre-built handles), which keeps their placement path unchanged.
+    prefix_route: Option<PrefixRoute>,
 }
 
 impl RouterInner {
     /// Pick a healthy shard for placement, or `None` when the fleet has
     /// no healthy member.  Policies only ever see healthy snapshots, so
     /// they stay lifecycle-oblivious (see `balance`).
-    fn place_healthy(&self) -> Option<Arc<ShardHandle>> {
+    ///
+    /// `aff_keys` carries the request's candidate prefix entry keys
+    /// (precomputed once per request by `submit`); when present, each
+    /// healthy snapshot's `affinity` is filled from the shard's
+    /// published fingerprints before the policy runs, so MemAware can
+    /// land the request where its prompt prefix is already cached.
+    fn place_healthy(&self, aff_keys: Option<&[u64]>) -> Option<Arc<ShardHandle>> {
         let shards = read_recover(&self.shards);
         let healthy: Vec<&Arc<ShardHandle>> =
             shards.iter().filter(|s| s.status.state() == ShardState::Healthy).collect();
         if healthy.is_empty() {
             return None;
         }
-        let snaps: Vec<ShardSnapshot> = healthy.iter().map(|s| s.snapshot()).collect();
+        let mut snaps: Vec<ShardSnapshot> = healthy.iter().map(|s| s.snapshot()).collect();
+        if let (Some(keys), Some(pr)) = (aff_keys, &self.prefix_route) {
+            if !keys.is_empty() {
+                for (snap, h) in snaps.iter_mut().zip(&healthy) {
+                    let fps = lock_recover(&h.status.prefix_fps);
+                    snap.affinity =
+                        crate::prefix::affinity_from_keys(keys, pr.block_tokens, &fps);
+                }
+            }
+        }
         let pick = lock_recover(&self.policy).pick(&snaps);
         // lint: allow(indexing, "clamped to len-1 after the non-empty check above; a rogue policy pick cannot go out of bounds")
         Some(healthy[pick.min(healthy.len() - 1)].clone())
@@ -159,7 +192,10 @@ impl RouterInner {
     fn recover_one(&self, rec: RecoveredReq) {
         let mut rec = rec;
         for _ in 0..SUBMIT_ATTEMPTS {
-            let Some(shard) = self.place_healthy() else { break };
+            // no affinity scoring on recovery: a resumed sequence
+            // rebuilds its cache by full per-token re-prefill (never an
+            // attach), so landing near a cached prefix buys nothing
+            let Some(shard) = self.place_healthy(None) else { break };
             shard.status.queued.fetch_add(1, Ordering::Relaxed);
             match shard.try_send(ShardCmd::Recover(Box::new(rec))) {
                 Ok(()) => return,
@@ -273,7 +309,7 @@ impl Router {
         }
         let launcher =
             Launcher::Engine { artifacts: artifacts_dir.to_path_buf(), cfg: cfg.clone() };
-        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, &cfg))
+        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, &cfg, None))
     }
 
     /// Pipeline-sharded launch: `shards / pipeline` groups of `pipeline`
@@ -345,7 +381,16 @@ impl Router {
             )?));
         }
         let launcher = Launcher::Pipeline { model, cfg: cfg.clone() };
-        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, cfg))
+        // pipeline fleets can hold prefix trees (launched with
+        // `--prefix-cache` or toggled live), so affinity scoring is
+        // always wired; it costs nothing while fingerprint sets are empty
+        let prefix_route = Some(PrefixRoute {
+            block_tokens: cfg.block_tokens,
+            buffer: cfg.buffer,
+            mode: cfg.mode,
+            k_default: cfg.k_active,
+        });
+        Ok(Router::assemble(shards, policy, Some(launcher), fleet_tx, fleet_rx, cfg, prefix_route))
     }
 
     /// Assemble a router from pre-built handles (tests, embedders).
@@ -356,7 +401,7 @@ impl Router {
         assert!(!shards.is_empty(), "router needs at least one shard");
         let (fleet_tx, fleet_rx) = mpsc::channel();
         let shards: Vec<Arc<ShardHandle>> = shards.into_iter().map(Arc::new).collect();
-        Router::assemble(shards, policy, None, fleet_tx, fleet_rx, &ServeConfig::default())
+        Router::assemble(shards, policy, None, fleet_tx, fleet_rx, &ServeConfig::default(), None)
     }
 
     fn assemble(
@@ -366,6 +411,7 @@ impl Router {
         fleet_tx: mpsc::Sender<FleetEvent>,
         fleet_rx: mpsc::Receiver<FleetEvent>,
         cfg: &ServeConfig,
+        prefix_route: Option<PrefixRoute>,
     ) -> Router {
         let server_registry = Arc::new(Registry::new());
         let shard_deaths = server_registry.counter("swan_shard_deaths", &[]);
@@ -381,6 +427,7 @@ impl Router {
             launcher,
             fleet_budget: cfg.mem_budget,
             drain_timeout: Duration::from_millis(cfg.drain_timeout_ms),
+            prefix_route,
         });
         let weak = Arc::downgrade(&inner);
         std::thread::Builder::new()
@@ -439,13 +486,28 @@ impl Router {
         }
         let id = req.id;
         let cancel = req.cancel.clone();
+        // candidate prefix entry keys, hashed once per request — each
+        // placement attempt scores them against every healthy shard's
+        // published fingerprints (cache-affinity routing)
+        let aff_keys: Option<Vec<u64>> = self.inner.prefix_route.as_ref().map(|pr| {
+            let params = crate::swan::hybrid_cache::SwanParams::new(
+                req.params.k_active.unwrap_or(pr.k_default),
+                pr.buffer,
+                pr.mode,
+            );
+            crate::prefix::affinity_keys(
+                &req.prompt,
+                pr.block_tokens,
+                crate::prefix::cfg_key(&params, pr.block_tokens),
+            )
+        });
         let (tx, handle) = GenHandle::channel(id, cancel);
         let mut cmd = ShardCmd::Gen { req, reply: tx };
         // deterministic per-request jitter (no global RNG state)
         let mut jitter = Pcg64::new(id ^ 0x524f_5554_4552);
         let mut attempts = 0;
         while attempts < SUBMIT_ATTEMPTS {
-            let Some(shard) = self.inner.place_healthy() else { break };
+            let Some(shard) = self.inner.place_healthy(aff_keys.as_deref()) else { break };
             attempts += 1;
             // optimistic bump so back-to-back placements see this request
             // before the shard thread next publishes authoritative counts
@@ -496,6 +558,32 @@ impl Router {
             }
         }
         anyhow::ensure!(!pending.is_empty(), "no shard accepted the retune");
+        let mut applied = Vec::with_capacity(pending.len());
+        for (id, rx) in pending {
+            if let Ok(got) = rx.recv() {
+                applied.push((id, got));
+            }
+        }
+        Ok(applied)
+    }
+
+    /// Fleet-wide prefix-caching toggle: broadcast `SET prefix on|off`
+    /// to every shard, then gather the acks.  Returns `(shard id,
+    /// applied)` per responsive shard — engine shards and groups that
+    /// cannot host a tree (dense baseline, pool off) report `false`, so
+    /// the wire reply shows exactly where the toggle took effect.
+    /// Turning the cache off flushes every group's tree and releases
+    /// the pinned blocks.
+    pub fn set_prefix(&self, on: bool) -> anyhow::Result<Vec<(usize, bool)>> {
+        let shards = self.shards();
+        let mut pending = Vec::with_capacity(shards.len());
+        for s in &shards {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            if s.send(ShardCmd::SetPrefix { on, ack: ack_tx }).is_ok() {
+                pending.push((s.id, ack_rx));
+            }
+        }
+        anyhow::ensure!(!pending.is_empty(), "no shard accepted the prefix toggle");
         let mut applied = Vec::with_capacity(pending.len());
         for (id, rx) in pending {
             if let Ok(got) = rx.recv() {

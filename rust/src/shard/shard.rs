@@ -39,6 +39,11 @@ pub enum ShardCmd {
     Cancel { id: u64 },
     /// Retune compression; the applied (bucket-snapped) `k` is acked.
     SetK { k: usize, ack: mpsc::Sender<usize> },
+    /// Toggle cross-request prefix caching (`SET prefix on|off`); the ack
+    /// reports whether this shard applied the change.  Engine shards ack
+    /// `false` — the prefix tree lives in the pipeline-group coordinator
+    /// ([`crate::shard::pipeline`]), which is where shared KV blocks exist.
+    SetPrefix { on: bool, ack: mpsc::Sender<bool> },
     /// Render this shard's stats block.
     Stats { reply: mpsc::Sender<String> },
     /// Dump one request's lifecycle trace as JSONL (`TRACE <id>` wire
@@ -75,6 +80,17 @@ pub struct ShardStatus {
     pub live_bytes: AtomicUsize,
     pub projected_bytes: AtomicUsize,
     pub k_active: AtomicUsize,
+    /// Block-granular budget view (allocation granules free / total)
+    /// when the shard runs block-accounted admission; both zero under
+    /// byte-only accounting, which tells `MemAware` to fall back to
+    /// projected bytes for this shard.
+    pub free_blocks: AtomicUsize,
+    pub total_blocks: AtomicUsize,
+    /// Token-block hash-chain fingerprints of the shard's cached
+    /// prefixes (capped sample, see `pipeline::PREFIX_FP_CAP`); the
+    /// router's affinity placement intersects a request's own chain
+    /// against these without a round trip into the shard.
+    pub prefix_fps: Mutex<Vec<u64>>,
     /// Lifecycle state ([`ShardState`] as its `repr(u8)` value); the
     /// router reads it to filter placement to healthy shards.
     pub state: AtomicU8,
@@ -97,6 +113,9 @@ impl ShardStatus {
             live_bytes: self.live_bytes.load(Ordering::Relaxed),
             projected_bytes: self.projected_bytes.load(Ordering::Relaxed),
             k_active: self.k_active.load(Ordering::Relaxed),
+            free_blocks: self.free_blocks.load(Ordering::Relaxed),
+            total_blocks: self.total_blocks.load(Ordering::Relaxed),
+            affinity: 0,
             state: self.state(),
         }
     }
@@ -107,6 +126,9 @@ impl ShardStatus {
         self.live_bytes.store(engine.live_cache_bytes(), Ordering::Relaxed);
         self.projected_bytes.store(engine.projected_load_bytes(), Ordering::Relaxed);
         self.k_active.store(engine.current_k_active(), Ordering::Relaxed);
+        let (total, free) = engine.block_budget();
+        self.total_blocks.store(total, Ordering::Relaxed);
+        self.free_blocks.store(free, Ordering::Relaxed);
     }
 }
 
@@ -317,6 +339,12 @@ fn shard_loop(
                     let applied = engine.current_k_active();
                     status.k_active.store(applied, Ordering::Relaxed);
                     let _ = ack.send(applied);
+                }
+                ShardCmd::SetPrefix { on: _, ack } => {
+                    // no prefix tree here: shared KV blocks exist only in
+                    // pipeline groups, so an engine shard reports "not
+                    // applied" and the router surfaces the partial toggle
+                    let _ = ack.send(false);
                 }
                 ShardCmd::Stats { reply } => {
                     let _ = reply.send(shard_stats(id, &engine));

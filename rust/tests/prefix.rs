@@ -1,0 +1,440 @@
+//! Cross-request prefix caching (`swan::prefix`), end to end on a
+//! synthetic model (no artifacts).
+//!
+//! The contract under test: winnowed state is a pure function of tokens
+//! x compression config, so a prefix-hit admission — attach the cached
+//! blocks copy-on-write, prefill only the uncached suffix — is
+//! **bit-identical** to a cold admission of the same request under the
+//! same prefix-mode group.  On top of that: COW forks never corrupt
+//! their sharers, refcounts stay exact under insert/hit/evict churn,
+//! memory pressure sheds cold tree entries *before* preempting running
+//! sequences, and the router's affinity placement sends repeat prompts
+//! back to the shard that cached them.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use swan::api::GenParams;
+use swan::config::{ModelConfig, ServeConfig};
+use swan::coordinator::Request;
+use swan::kvcache::CachePolicy;
+use swan::model::transformer::SwanModel;
+use swan::pool::{block_bytes, pool_blocks_for_budget, seq_blocks, BlockPool, PagedSwanCache};
+use swan::prefix::{insert_depth, EntryStream};
+use swan::shard::balance::policy_from_name;
+use swan::shard::pipeline::launch_group;
+use swan::shard::{RoundRobin, Router};
+use swan::sparse::StorageMode;
+use swan::swan::SwanParams;
+use swan::util::Pcg64;
+
+fn test_model() -> Arc<SwanModel> {
+    Arc::new(SwanModel::synthetic(
+        ModelConfig {
+            name: "prefix-test".into(),
+            d_model: 32,
+            n_layers: 4,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 96,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+        },
+        33,
+    ))
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        k_active: 4,
+        buffer: 3,
+        mode: StorageMode::F16,
+        max_batch: 8,
+        ..Default::default()
+    }
+}
+
+/// Launch one prefix-enabled pipeline group behind a router.
+fn launch_prefix_fleet(cfg: &ServeConfig) -> Router {
+    let handle = launch_group(0, test_model(), cfg).unwrap();
+    Router::from_handles(vec![handle], Box::new(RoundRobin::default()))
+}
+
+/// Sum a prefix counter across the fleet.
+fn fleet_counter(router: &Router, pick: impl Fn(&swan::coordinator::Metrics) -> u64) -> u64 {
+    router.shards().iter().map(|s| pick(&s.metrics)).sum()
+}
+
+/// The tentpole acceptance property: a warm (prefix-hit) generation is
+/// bit-identical to the cold (prefix-miss) generation of the same
+/// request, across block sizes and pipeline depths.  Seeds are pinned —
+/// the decode RNG otherwise derives from the request id, and the two
+/// submissions carry different ids on purpose (a repeat request is a
+/// *new* request).
+#[test]
+fn prefix_hit_decode_is_bit_identical_to_cold() {
+    let prompt = "the shared instruction preamble winnows the cache ";
+    for stages in [1usize, 2] {
+        for bt in [1usize, 5, 16] {
+            let cfg = ServeConfig {
+                pipeline: stages,
+                prefix: true,
+                block_tokens: bt,
+                ..serve_cfg()
+            };
+            let router = launch_prefix_fleet(&cfg);
+            let params = GenParams::new(10).seed(7);
+            let cold = router
+                .submit(Request::with_params(1, prompt, params.clone()))
+                .unwrap()
+                .wait()
+                .unwrap();
+            let warm = router
+                .submit(Request::with_params(2, prompt, params))
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(
+                cold.tokens, warm.tokens,
+                "prefix hit diverged from cold run: stages={stages} block_tokens={bt}"
+            );
+            let prompt_len = swan::coordinator::request::encode_text(prompt).len();
+            assert!(prompt_len > 16, "prompt must span > 1 block at every bt");
+            assert_eq!(fleet_counter(&router, |m| m.prefix_hits.get()), 1);
+            assert_eq!(fleet_counter(&router, |m| m.prefix_misses.get()), 1);
+            assert_eq!(
+                fleet_counter(&router, |m| m.prefix_tokens_saved.get()),
+                insert_depth(prompt_len, bt) as u64,
+                "tokens_saved must equal the matched full-block depth: bt={bt}"
+            );
+            let stats = router.stats();
+            assert!(stats.contains("prefix: entries="), "{stats}");
+            assert!(stats.contains("hit_rate=50.0%"), "{stats}");
+        }
+    }
+}
+
+/// The reuse key covers the whole compression config: f8 storage and
+/// per-request `k` overrides hit only entries built under the *same*
+/// config, and a mismatched `k` is a miss (never a wrong reuse), while
+/// matched pairs stay bit-identical — including under temperature
+/// sampling and decode workers.
+#[test]
+fn prefix_hit_is_bit_identical_across_modes_and_per_request_k() {
+    let prompt = "mixed configuration prompts share a winnowed preamble ";
+    let cases: [(StorageMode, GenParams); 3] = [
+        (StorageMode::F16, GenParams::new(10).temperature(0.8).seed(11)),
+        (StorageMode::F8, GenParams::new(10).seed(12)),
+        (StorageMode::F16, GenParams::new(10).k_active(2).seed(13)),
+    ];
+    for (mode, params) in cases {
+        let cfg = ServeConfig {
+            pipeline: 2,
+            decode_workers: 2,
+            prefix: true,
+            block_tokens: 5,
+            mode,
+            ..serve_cfg()
+        };
+        let router = launch_prefix_fleet(&cfg);
+        let cold = router
+            .submit(Request::with_params(1, prompt, params.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let warm = router
+            .submit(Request::with_params(2, prompt, params.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(cold.tokens, warm.tokens, "mode={mode:?} params={params:?}");
+        assert_eq!(fleet_counter(&router, |m| m.prefix_hits.get()), 1, "mode={mode:?}");
+        if params.k_active.is_some() {
+            // same prompt at a different compression level: the entry
+            // key differs, so this must miss (and insert its own entry)
+            let other_k = router
+                .submit(Request::with_params(3, prompt, GenParams::new(10).k_active(6).seed(13)))
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(other_k.tokens.len(), 10);
+            assert_eq!(fleet_counter(&router, |m| m.prefix_hits.get()), 1);
+            assert_eq!(fleet_counter(&router, |m| m.prefix_misses.get()), 2);
+        }
+    }
+}
+
+/// COW fork-before-mutate: two concurrent generations share one cached
+/// prefix and extend it divergently; both streams match what a fresh
+/// (cold) group produces for the same requests, and the shared-block
+/// gauge confirms physical sharing actually happened.
+#[test]
+fn cow_forked_sequences_stay_bit_identical_under_concurrent_sharing() {
+    let common = "the common system preamble attached to every request ";
+    let req_a = || {
+        Request::with_params(2, &format!("{common}alpha branch"), GenParams::new(10).seed(3))
+    };
+    let req_b = || {
+        Request::with_params(3, &format!("{common}beta fork path"), GenParams::new(10).seed(4))
+    };
+    let cfg = ServeConfig {
+        pipeline: 2,
+        decode_workers: 2,
+        prefix: true,
+        block_tokens: 4,
+        ..serve_cfg()
+    };
+    // cold references: each request alone in its own fresh group (the
+    // first admission under prefix mode is the cold path)
+    let want_a = launch_prefix_fleet(&cfg).submit(req_a()).unwrap().wait().unwrap().tokens;
+    let want_b = launch_prefix_fleet(&cfg).submit(req_b()).unwrap().wait().unwrap().tokens;
+
+    // warm fleet: retire the common prefix once, then fork it twice
+    // concurrently
+    let router = launch_prefix_fleet(&cfg);
+    router
+        .submit(Request::with_params(1, common, GenParams::new(4).seed(2)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let ha = router.submit(req_a()).unwrap();
+    let hb = router.submit(req_b()).unwrap();
+    let got_a = ha.wait().unwrap().tokens;
+    let got_b = hb.wait().unwrap().tokens;
+    assert_eq!(got_a, want_a, "fork A diverged while sharing the prefix");
+    assert_eq!(got_b, want_b, "fork B diverged while sharing the prefix");
+    assert!(
+        fleet_counter(&router, |m| m.prefix_hits.get()) >= 2,
+        "both forks must hit the cached prefix"
+    );
+    assert!(
+        fleet_counter(&router, |m| m.prefix_blocks_shared.get()) > 0,
+        "forks long enough to span full blocks must share physical blocks"
+    );
+}
+
+/// Refcount exactness under churn: 500 insert/hit/evict cycles across
+/// interleaved entry lifetimes, with two sharers extending every entry
+/// concurrently (COW forks), leak zero blocks and never trip a pool
+/// invariant.  Periodically the two forks append identical rows and
+/// must read back identical sparse state — a mutation leaking through
+/// a shared block would diverge them.
+#[test]
+fn prefix_store_refcounts_stay_exact_after_churn() {
+    let d_h = 8usize;
+    let pool = Arc::new(BlockPool::new(usize::MAX));
+    let params = SwanParams::new(4, 3, StorageMode::F16);
+    let mut rng = Pcg64::new(11);
+    let mut entries: Vec<EntryStream> = Vec::new();
+    for cycle in 0..500usize {
+        let bt = [1usize, 2, 4][cycle % 3];
+        let depth = 5 + (cycle % 9);
+        let mut donor = PagedSwanCache::new(d_h, params, bt, pool.clone());
+        let mut rings = (Vec::new(), Vec::new());
+        for t in 1..=depth + 3 {
+            let k = rng.normal_vec(d_h);
+            let v = rng.normal_vec(d_h);
+            donor.append(&k, &v);
+            if t == depth {
+                // the pipeline captures the ring when the cache holds
+                // exactly the prefix (later winnowing destroys it)
+                rings = donor.ring_snapshot();
+            }
+        }
+        let entry = donor.share_prefix(depth, rings, pool.clone());
+        let mut sharers: Vec<PagedSwanCache> = (0..2)
+            .map(|_| {
+                let mut c = PagedSwanCache::new(d_h, params, bt, pool.clone());
+                c.attach_prefix(&entry, depth);
+                c
+            })
+            .collect();
+        let ext: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..3).map(|_| (rng.normal_vec(d_h), rng.normal_vec(d_h))).collect();
+        for s in &mut sharers {
+            for (k, v) in &ext {
+                s.append(k, v);
+            }
+        }
+        if cycle % 50 == 0 {
+            let (a, b) = (sharers[0].inner(), sharers[1].inner());
+            assert_eq!(a.sparse_len(), b.sparse_len(), "cycle {cycle}");
+            for r in 0..a.sparse_len() {
+                assert_eq!(a.k_sparse.row(r), b.k_sparse.row(r), "cycle {cycle} row {r}");
+                assert_eq!(a.v_sparse.row(r), b.v_sparse.row(r), "cycle {cycle} row {r}");
+            }
+        }
+        drop(donor);
+        drop(sharers);
+        entries.push(entry);
+        if entries.len() > 4 {
+            // evict the coldest of the interleaved lifetimes
+            entries.remove(0);
+        }
+        pool.check_invariants().unwrap();
+    }
+    entries.clear();
+    assert_eq!(pool.leased(), 0, "churn leaked blocks");
+    pool.check_invariants().unwrap();
+}
+
+/// Under block-budget pressure the coordinator sheds cold tree entries
+/// *before* preempting running sequences: a tight budget whose headroom
+/// is consumed by a retired prefix admits new work by evicting the
+/// entry, never by preemption.
+#[test]
+fn prefix_entries_shed_before_preemption_under_pressure() {
+    let budget_blocks = 800usize;
+    let budget = budget_blocks * block_bytes(1, 8, StorageMode::F16, 4);
+    assert_eq!(pool_blocks_for_budget(budget, 1, 8, StorageMode::F16, 4), budget_blocks);
+    let cfg = ServeConfig {
+        prefix: true,
+        block_tokens: 1,
+        mem_budget: budget,
+        ..serve_cfg()
+    };
+    let router = launch_prefix_fleet(&cfg);
+
+    // retire a long prompt: its full-block prefix stays in the tree,
+    // pinned at the analytic rate — most of the budget
+    let long = "the very long shared preamble that fills ";
+    let p = swan::coordinator::request::encode_text(long).len();
+    let charge = seq_blocks(insert_depth(p, 1), 3, 1, 4, 2);
+    assert!(charge > budget_blocks / 2, "prefix charge too small to pressure the pool");
+    assert!(seq_blocks(p + 1, 3, 1, 4, 2) <= budget_blocks, "warmup itself must fit");
+    router
+        .submit(Request::with_params(1, long, GenParams::new(2).seed(1)))
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    // two fresh decodes need more than the remaining headroom
+    let h2 = router.submit(Request::with_params(2, "ab c", GenParams::new(12).seed(2))).unwrap();
+    let h3 = router.submit(Request::with_params(3, "xy z", GenParams::new(12).seed(3))).unwrap();
+    assert_eq!(h2.wait().unwrap().tokens.len(), 12);
+    assert_eq!(h3.wait().unwrap().tokens.len(), 12);
+
+    assert!(
+        fleet_counter(&router, |m| m.prefix_evictions.get()) >= 1,
+        "pressure must evict the cold tree entry"
+    );
+    assert_eq!(
+        fleet_counter(&router, |m| m.requests_preempted.get()),
+        0,
+        "shedding the tree must spare the running sequences"
+    );
+    assert_eq!(fleet_counter(&router, |m| m.requests_completed.get()), 3);
+}
+
+/// `SET prefix off` flushes the tree: stage pools drain to zero leased
+/// blocks, the STATS tree line disappears, and a re-enabled tree starts
+/// empty (a repeat of a previously cached prompt misses again).
+#[test]
+fn set_prefix_off_flushes_entries_and_drains_blocks() {
+    let cfg = ServeConfig {
+        pipeline: 2,
+        prefix: true,
+        block_tokens: 4,
+        ..serve_cfg()
+    };
+    let router = launch_prefix_fleet(&cfg);
+    let prompt = "a prompt cached once and then flushed away ";
+    router
+        .submit(Request::with_params(1, prompt, GenParams::new(6).seed(5)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(router.stats().contains("prefix: entries=1"));
+
+    let acks = router.set_prefix(false).unwrap();
+    assert_eq!(acks, vec![(0, true)]);
+    let stats = router.stats();
+    assert!(!stats.contains("prefix: entries="), "{stats}");
+    // Retire and PrefixEvict are FIFO-ordered before the stats request
+    // in each stage channel: with the tree flushed and every sequence
+    // retired, both stages deterministically report zero leased blocks
+    assert_eq!(stats.matches(" blocks=0").count(), 2, "{stats}");
+
+    let acks = router.set_prefix(true).unwrap();
+    assert_eq!(acks, vec![(0, true)]);
+    router
+        .submit(Request::with_params(2, prompt, GenParams::new(6).seed(5)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(
+        fleet_counter(&router, |m| m.prefix_hits.get()),
+        0,
+        "a flushed tree must not serve stale entries"
+    );
+    assert_eq!(fleet_counter(&router, |m| m.prefix_misses.get()), 2);
+}
+
+/// Mixed-affinity placement: two prompts warmed on two different shards
+/// (round-robin), then repeats submitted under `mem-aware` — affinity
+/// must route each repeat back to the shard holding its prefix, so both
+/// repeats hit (the no-affinity tie-break would send both to one shard
+/// and one of them would miss).
+#[test]
+fn router_routes_repeats_to_their_cached_shard() {
+    let cfg = ServeConfig {
+        shards: 2,
+        pipeline: 1,
+        balance: "round-robin".into(),
+        prefix: true,
+        block_tokens: 4,
+        ..serve_cfg()
+    };
+    let router = Router::launch_pipeline_from_model(test_model(), &cfg, Vec::new()).unwrap();
+    let p = "alpha team prompt preamble with enough length to cache ";
+    let q = "omega crew prompt preamble with enough length to cache ";
+    let first_p = router
+        .submit(Request::with_params(1, p, GenParams::new(6).seed(5)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let first_q = router
+        .submit(Request::with_params(2, q, GenParams::new(6).seed(6)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    for s in router.shards() {
+        assert_eq!(s.metrics.prefix_misses.get(), 1, "warmups must land on distinct shards");
+    }
+
+    // wait for both groups to publish their fingerprint sets (published
+    // when a group goes idle), then score placement on them
+    for _ in 0..500 {
+        let published = router
+            .shards()
+            .iter()
+            .all(|s| !s.status.prefix_fps.lock().unwrap().is_empty());
+        if published {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    router.set_policy(policy_from_name("mem-aware").unwrap());
+
+    let warm_p = router
+        .submit(Request::with_params(3, p, GenParams::new(6).seed(5)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let warm_q = router
+        .submit(Request::with_params(4, q, GenParams::new(6).seed(6)))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(warm_p.tokens, first_p.tokens);
+    assert_eq!(warm_q.tokens, first_q.tokens);
+    let per_shard: Vec<u64> =
+        router.shards().iter().map(|s| s.metrics.prefix_hits.get()).collect();
+    assert_eq!(
+        per_shard,
+        vec![1, 1],
+        "affinity must route each repeat to the shard caching its prefix"
+    );
+}
